@@ -1,0 +1,100 @@
+//! End-to-end driver: the full three-layer system on real workloads.
+//!
+//! L1 (Pallas tile kernels, AOT-compiled) → L2 (JAX compute graphs,
+//! lowered to HLO text by `make artifacts`) → PJRT execution inside leaf
+//! WORKER EDTs → L3 (this rust coordinator: scheduling, tiling, EDT
+//! expansion, all three runtime backends).
+//!
+//! Runs MATMULT (96³) and a 7-point Jacobi sweep (130³) with PJRT-backed
+//! leaves under CnC / SWARM / OCR, verifies numerics against the native
+//! oracle, and reports throughput per runtime — the paper's headline
+//! metric on this testbed. Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline
+
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use tale3::ral::DepMode;
+use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::runtime::{Jac3dPjrtLeaf, MatmultPjrtLeaf, PjrtRuntime};
+use tale3::workloads::{by_name, Size};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let prt = Arc::new(PjrtRuntime::load(&dir)?);
+    println!("loaded artifacts: {:?}", {
+        let mut n = prt.artifact_names();
+        n.sort();
+        n
+    });
+
+    let pool = Pool::new(2);
+    let modes = [DepMode::CncAsync, DepMode::Swarm, DepMode::Ocr];
+
+    // --- workload 1: MATMULT through matmul_tile_16x16x64 ---
+    {
+        let inst = (by_name("MATMULT").unwrap().build)(Size::Small);
+        let oracle = inst.arrays();
+        tale3::exec::run_seq(&inst.prog, &inst.params, &oracle, &*inst.kernels);
+        let plan = inst.plan()?;
+        println!("\nMATMULT N={}, PJRT leaf kernels (Pallas matmul tile):", inst.params[0]);
+        for mode in modes {
+            let arrays = inst.arrays();
+            let leaf_impl = Arc::new(MatmultPjrtLeaf::new(
+                prt.clone(),
+                arrays.clone(),
+                inst.kernels.clone(),
+            ));
+            let leaf: Arc<dyn LeafExec> = leaf_impl.clone();
+            let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, inst.total_flops)?;
+            let diff = oracle.max_rel_diff(&arrays);
+            assert!(diff < 1e-4, "{mode:?}: rel diff {diff}");
+            println!(
+                "  {:<10} {:>8.3} s  {:>7.3} Gflop/s  {} PJRT tiles + {} native boundary tiles  (max rel Δ {:.1e})",
+                mode.name(),
+                r.seconds,
+                r.gflops,
+                leaf_impl.pjrt_tiles.load(Ordering::Relaxed),
+                leaf_impl.native_tiles.load(Ordering::Relaxed),
+                diff
+            );
+        }
+    }
+
+    // --- workload 2: 7-point Jacobi sweep through jac3d7p_tile ---
+    {
+        let w = by_name("JAC-3D-1").unwrap();
+        let mut inst = (w.build)(Size::Tiny);
+        inst.params = vec![130];
+        inst.shapes = vec![vec![130, 130, 130], vec![130, 130, 130]];
+        inst.total_flops = 128f64.powi(3) * 7.0;
+        let oracle = inst.arrays();
+        tale3::exec::run_seq(&inst.prog, &inst.params, &oracle, &*inst.kernels);
+        let plan = inst.plan()?;
+        println!("\nJAC-3D (7pt) N=130, PJRT leaf kernels (Pallas stencil tile):");
+        for mode in modes {
+            let arrays = inst.arrays();
+            let leaf_impl = Arc::new(Jac3dPjrtLeaf::new(
+                prt.clone(),
+                arrays.clone(),
+                inst.kernels.clone(),
+            ));
+            let leaf: Arc<dyn LeafExec> = leaf_impl.clone();
+            let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, inst.total_flops)?;
+            let diff = oracle.max_rel_diff(&arrays);
+            assert!(diff < 1e-4, "{mode:?}: rel diff {diff}");
+            println!(
+                "  {:<10} {:>8.3} s  {:>7.3} Gflop/s  {} PJRT tiles + {} native boundary tiles  (max rel Δ {:.1e})",
+                mode.name(),
+                r.seconds,
+                r.gflops,
+                leaf_impl.pjrt_tiles.load(Ordering::Relaxed),
+                leaf_impl.native_tiles.load(Ordering::Relaxed),
+                diff
+            );
+        }
+    }
+    println!("\nall layers composed: Pallas kernel → JAX AOT HLO → PJRT → EDT runtimes  ✓");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! The motivating example (Fig 1 / Fig 2): diamond-tiled heat-3d.
+//!
+//! Shows the scheduler accepting the diamond hyperplanes of Fig 1(b),
+//! runs the real runtimes at container scale (1–2 threads) with
+//! verification, and regenerates the Fig 2 OpenMP-vs-CnC scaling table on
+//! the simulated E5-2620 testbed.
+//!
+//!     cargo run --release --example heat3d_diamond
+
+use std::sync::Arc;
+use tale3::analysis::build_gdg;
+use tale3::bench::FIG2_PROCS;
+use tale3::exec::LeafRunner;
+use tale3::ral::DepMode;
+use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::sim::{simulate, simulate_omp, CostModel, Machine};
+use tale3::workloads::{by_name, Size};
+
+fn main() -> anyhow::Result<()> {
+    let inst = (by_name("HEAT-3D-DIAMOND").unwrap().build)(Size::Small);
+
+    // show the schedule actually selected
+    let gdg = build_gdg(&inst.prog);
+    let sched = tale3::schedule::schedule(&inst.prog, &gdg, &inst.map_opts.sched)?;
+    println!("diamond schedule (hyperplane rows over (t,i,j,k)):\n{sched}");
+
+    // real execution, 1 and 2 threads, CnC vs OMP, verified
+    let oracle = inst.arrays();
+    tale3::exec::run_seq(&inst.prog, &inst.params, &oracle, &*inst.kernels);
+    let plan = inst.plan()?;
+    println!("\nreal execution on this container:");
+    for threads in [1usize, 2] {
+        let pool = Pool::new(threads);
+        for kind in [RuntimeKind::Edt(DepMode::CncBlock), RuntimeKind::Omp] {
+            let arrays = inst.arrays();
+            let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+                arrays: arrays.clone(),
+                kernels: inst.kernels.clone(),
+            });
+            let r = rt::run(kind, &plan, &leaf, &pool, inst.total_flops)?;
+            assert_eq!(oracle.max_abs_diff(&arrays), 0.0, "verification failed");
+            println!(
+                "  {:<10} x{threads}: {:>8.4} s  {:>6.3} Gflop/s  (verified)",
+                kind.name(),
+                r.seconds,
+                r.gflops
+            );
+        }
+    }
+
+    // Fig 2 on the simulated testbed
+    let machine = Machine::e5_2620();
+    let costs = CostModel::default();
+    println!("\nFig 2 (seconds, simulated 2x6-core E5-2620; lower is better):");
+    print!("{:<12}", "Version");
+    for p in FIG2_PROCS {
+        print!("{p:>8}");
+    }
+    println!();
+    for (label, pinned) in [("OpenMP", false), ("CnC", false), ("OpenMP-N", true), ("CnC-N", true)] {
+        print!("{label:<12}");
+        for &p in &FIG2_PROCS {
+            let secs = if label.starts_with("OpenMP") {
+                simulate_omp(&plan, p, &machine, &costs, pinned)
+            } else {
+                simulate(&plan, DepMode::CncBlock, p, &machine, &costs, pinned, inst.total_flops).seconds
+            };
+            print!("{secs:>8.3}");
+        }
+        println!();
+    }
+    Ok(())
+}

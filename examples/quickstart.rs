@@ -1,0 +1,59 @@
+//! Quickstart: map a stencil benchmark to EDTs and run it on the CnC-style
+//! runtime, verifying against the sequential oracle.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+use tale3::exec::LeafRunner;
+use tale3::ral::DepMode;
+use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::workloads::{by_name, Size};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A benchmark = a sequential loop-nest specification (ir::Program).
+    //    JAC-2D-5P is the classic 5-point Jacobi; see
+    //    workloads/stencils_jac.rs for how it is declared, or
+    //    examples/custom_program.rs for building your own.
+    let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Small);
+    println!("workload: {} (params {:?})", inst.name, inst.params);
+
+    // 2. The pipeline: dependence analysis → affine scheduling (loop
+    //    types) → tiling → EDT formation. `tree()` runs all of it.
+    let tree = inst.tree()?;
+    println!("\nEDT tree:\n{}", tree.dump());
+
+    // 3. Instantiate an executable plan and run it under a runtime.
+    let plan = inst.plan()?;
+    let arrays = inst.arrays();
+    let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+        arrays: arrays.clone(),
+        kernels: inst.kernels.clone(),
+    });
+    let pool = Pool::new(2);
+    let report = rt::run(
+        RuntimeKind::Edt(DepMode::CncAsync),
+        &plan,
+        &leaf,
+        &pool,
+        inst.total_flops,
+    )?;
+    println!(
+        "cnc-async x{} threads: {:.3} s, {:.3} Gflop/s, {} tasks ({} workers, {} steals, {} failed gets)",
+        report.threads,
+        report.seconds,
+        report.gflops,
+        report.metrics.total_tasks(),
+        report.metrics.workers,
+        report.metrics.steals,
+        report.metrics.failed_gets,
+    );
+
+    // 4. Verify against the sequential oracle — bit-identical.
+    let oracle = inst.arrays();
+    tale3::exec::run_seq(&inst.prog, &inst.params, &oracle, &*inst.kernels);
+    let diff = oracle.max_abs_diff(&arrays);
+    println!("max |Δ| vs sequential oracle: {diff}");
+    assert_eq!(diff, 0.0);
+    println!("OK");
+    Ok(())
+}

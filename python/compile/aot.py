@@ -1,0 +1,126 @@
+"""AOT: lower the L2 functions to HLO *text* artifacts for the rust runtime.
+
+HLO text — not ``lowered.compile()`` or serialized ``HloModuleProto`` — is
+the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage (from python/): ``python -m compile.aot --out ../artifacts``
+Produces one ``<name>.hlo.txt`` per artifact plus ``manifest.json`` with
+input/output shapes, consumed by ``rust/src/runtime``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+# (name, fn, input shapes, output shape) — tile shapes match the rust
+# mapper defaults (16×64 2-D tiles, 16×16×64 3-D tiles, 16×16(×64) matmul)
+def artifact_table():
+    return [
+        (
+            "jac2d5p_tile_16x64",
+            model.jac2d5p_tile,
+            [(18, 66)],
+            (16, 64),
+        ),
+        (
+            "jac2d9p_tile_16x64",
+            model.jac2d9p_tile,
+            [(18, 66)],
+            (16, 64),
+        ),
+        (
+            "jac3d7p_tile_16x16x64",
+            model.jac3d7p_tile,
+            [(18, 18, 66)],
+            (16, 16, 64),
+        ),
+        (
+            "div3d_tile_16x16x64",
+            model.div3d_tile,
+            [(18, 18, 66)] * 3,
+            (16, 16, 64),
+        ),
+        (
+            "gs2d5p_tile_16x64",
+            model.gs2d5p_tile,
+            [(18, 66)],
+            (16, 64),
+        ),
+        (
+            "rtm3d_tile_16x16x64",
+            model.rtm3d_tile,
+            [(20, 20, 68)] * 2,
+            (16, 16, 64),
+        ),
+        (
+            "matmul_tile_16x16x64",
+            model.matmul_tile,
+            [(16, 64), (64, 16), (16, 16)],
+            (16, 16),
+        ),
+        (
+            "jac2d5p_step_130",
+            model.jac2d5p_step,
+            [(130, 130)],
+            (130, 130),
+        ),
+        (
+            "matmul_full_64",
+            model.matmul_full,
+            [(64, 64), (64, 64)],
+            (64, 64),
+        ),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for name, fn, in_shapes, out_shape in artifact_table():
+        text = to_hlo_text(fn, [spec(s) for s in in_shapes])
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [list(s) for s in in_shapes],
+                "output": list(out_shape),
+                "dtype": "f32",
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

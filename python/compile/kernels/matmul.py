@@ -1,0 +1,63 @@
+"""L1: Pallas matmul tile kernel (the MATMULT EDT body).
+
+The EDT granularity chosen by the mapper for MATMULT is a (TI, TJ) C-tile
+accumulating a (TI, TK) × (TK, TJ) product — on a real TPU this maps
+directly onto the MXU systolic array (128×128 bf16); on the CPU PJRT
+plugin it runs under interpret=True. DESIGN.md §Perf carries the MXU
+utilization estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref, o_ref):
+    o_ref[...] = c_ref[...] + jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ti", "tj", "tk"))
+def matmul_tile(a, b, c, *, ti, tj, tk):
+    """C += A·B on one tile: a (ti,tk), b (tk,tj), c (ti,tj)."""
+    assert a.shape == (ti, tk) and b.shape == (tk, tj) and c.shape == (ti, tj)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((ti, tj), jnp.float32),
+        interpret=True,
+    )(a, b, c)
+
+
+def _matmul_grid_kernel(a_ref, b_ref, o_ref):
+    # K-grid accumulation directly into the revisited output block (its
+    # index_map ignores the K grid dim, so the block stays VMEM-resident
+    # across the K loop — the standard Pallas reduction idiom)
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm=32, bn=32, bk=32):
+    """L2 building block: full matmul via a 3-D Pallas grid with the output
+    block as the VMEM accumulator (double-buffered HBM→VMEM streaming on
+    real hardware)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    return pl.pallas_call(
+        _matmul_grid_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

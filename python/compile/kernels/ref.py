@@ -1,0 +1,96 @@
+"""Pure-jnp correctness oracles for the Pallas tile kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest asserts allclose between the
+two; the rust integration test additionally asserts that the AOT-compiled
+HLO executed through PJRT agrees with the rust-native tile kernels.
+"""
+
+import jax.numpy as jnp
+
+
+def jac2d5p_tile(halo):
+    """One 5-point Jacobi step on a (h+2, w+2) halo tile -> (h, w) interior."""
+    c = jnp.float32(0.2)
+    return c * (
+        halo[1:-1, 1:-1]
+        + halo[:-2, 1:-1]
+        + halo[2:, 1:-1]
+        + halo[1:-1, :-2]
+        + halo[1:-1, 2:]
+    )
+
+
+def jac2d9p_tile(halo):
+    """9-point variant."""
+    c = jnp.float32(1.0 / 9.5)
+    acc = jnp.zeros_like(halo[1:-1, 1:-1])
+    for di in (0, 1, 2):
+        for dj in (0, 1, 2):
+            acc = acc + halo[di : di + halo.shape[0] - 2, dj : dj + halo.shape[1] - 2]
+    return c * acc
+
+
+def jac3d7p_tile(halo):
+    """7-point Jacobi on a (d+2, h+2, w+2) halo tile -> (d, h, w)."""
+    c = jnp.float32(1.0 / 7.5)
+    return c * (
+        halo[1:-1, 1:-1, 1:-1]
+        + halo[:-2, 1:-1, 1:-1]
+        + halo[2:, 1:-1, 1:-1]
+        + halo[1:-1, :-2, 1:-1]
+        + halo[1:-1, 2:, 1:-1]
+        + halo[1:-1, 1:-1, :-2]
+        + halo[1:-1, 1:-1, 2:]
+    )
+
+
+def matmul_tile(a, b, c):
+    """C-tile accumulation: c + a @ b."""
+    return c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def div3d_tile(u, v, w):
+    """Central-difference divergence on (d+2,h+2,w+2) halos -> (d,h,w)."""
+    return jnp.float32(0.5) * (
+        (u[2:, 1:-1, 1:-1] - u[:-2, 1:-1, 1:-1])
+        + (v[1:-1, 2:, 1:-1] - v[1:-1, :-2, 1:-1])
+        + (w[1:-1, 1:-1, 2:] - w[1:-1, 1:-1, :-2])
+    )
+
+
+def jac2d5p_step(grid):
+    """Whole-array step (L2 model reference): interior updated, boundary kept."""
+    out = grid
+    interior = jac2d5p_tile(grid)
+    return out.at[1:-1, 1:-1].set(interior)
+
+
+def gs2d5p_tile(halo):
+    """In-place Gauss-Seidel tile oracle: plain Python/numpy loops in the
+    exact sequential order (row-major) — the same order the rust native
+    kernel and the Pallas scan/fori version must match."""
+    import numpy as np
+
+    g = np.array(halo, dtype=np.float32)
+    th, tw = g.shape[0] - 2, g.shape[1] - 2
+    for i in range(1, th + 1):
+        for j in range(1, tw + 1):
+            g[i, j] = np.float32(0.2) * (
+                g[i, j] + g[i - 1, j] + g[i + 1, j] + g[i, j - 1] + g[i, j + 1]
+            )
+    return jnp.asarray(g[1:-1, 1:-1])
+
+
+def rtm3d_tile(p0, p1):
+    """High-order RTM step oracle (halo 2)."""
+    c0, c1, c2 = jnp.float32(-2.5), jnp.float32(1.333), jnp.float32(-0.083)
+    ctr = p1[2:-2, 2:-2, 2:-2]
+    lap = c0 * 3.0 * ctr
+    lap = lap + c1 * (p1[1:-3, 2:-2, 2:-2] + p1[3:-1, 2:-2, 2:-2])
+    lap = lap + c2 * (p1[0:-4, 2:-2, 2:-2] + p1[4:, 2:-2, 2:-2])
+    lap = lap + c1 * (p1[2:-2, 1:-3, 2:-2] + p1[2:-2, 3:-1, 2:-2])
+    lap = lap + c2 * (p1[2:-2, 0:-4, 2:-2] + p1[2:-2, 4:, 2:-2])
+    lap = lap + c1 * (p1[2:-2, 2:-2, 1:-3] + p1[2:-2, 2:-2, 3:-1])
+    lap = lap + c2 * (p1[2:-2, 2:-2, 0:-4] + p1[2:-2, 2:-2, 4:])
+    return 2.0 * ctr - p0[2:-2, 2:-2, 2:-2] + jnp.float32(0.001) * lap

@@ -1,0 +1,196 @@
+"""L1: Pallas stencil tile kernels.
+
+These are the compute hot-spots that leaf WORKER EDTs execute. Each kernel
+processes one tile (the EDT granularity chosen by the mapper) with its halo
+resident in VMEM — the TPU analogue of the paper's per-EDT compiled C
+kernels (DESIGN.md §Hardware-Adaptation):
+
+* BlockSpec tiles the HBM array into VMEM-resident blocks, replacing the
+  threadblock/shared-memory staging a GPU port would use;
+* halos are passed as whole input blocks (tile + 2) rather than separate
+  ghost-cell exchanges, so one `pallas_call` is one EDT body;
+* `interpret=True` everywhere — the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; real-TPU viability is estimated from the VMEM footprint in
+  DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jac2d5p_kernel(h_ref, o_ref):
+    h = h_ref[...]
+    o_ref[...] = jnp.float32(0.2) * (
+        h[1:-1, 1:-1] + h[:-2, 1:-1] + h[2:, 1:-1] + h[1:-1, :-2] + h[1:-1, 2:]
+    )
+
+
+def _jac2d9p_kernel(h_ref, o_ref):
+    h = h_ref[...]
+    acc = jnp.zeros((h.shape[0] - 2, h.shape[1] - 2), h.dtype)
+    for di in (0, 1, 2):
+        for dj in (0, 1, 2):
+            acc = acc + h[di : di + h.shape[0] - 2, dj : dj + h.shape[1] - 2]
+    o_ref[...] = jnp.float32(1.0 / 9.5) * acc
+
+
+def _jac3d7p_kernel(h_ref, o_ref):
+    h = h_ref[...]
+    o_ref[...] = jnp.float32(1.0 / 7.5) * (
+        h[1:-1, 1:-1, 1:-1]
+        + h[:-2, 1:-1, 1:-1]
+        + h[2:, 1:-1, 1:-1]
+        + h[1:-1, :-2, 1:-1]
+        + h[1:-1, 2:, 1:-1]
+        + h[1:-1, 1:-1, :-2]
+        + h[1:-1, 1:-1, 2:]
+    )
+
+
+def _div3d_kernel(u_ref, v_ref, w_ref, o_ref):
+    u, v, w = u_ref[...], v_ref[...], w_ref[...]
+    o_ref[...] = jnp.float32(0.5) * (
+        (u[2:, 1:-1, 1:-1] - u[:-2, 1:-1, 1:-1])
+        + (v[1:-1, 2:, 1:-1] - v[1:-1, :-2, 1:-1])
+        + (w[1:-1, 1:-1, 2:] - w[1:-1, 1:-1, :-2])
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw"))
+def jac2d5p_tile(halo, *, th, tw):
+    """5-point Jacobi tile: (th+2, tw+2) halo -> (th, tw) interior."""
+    return pl.pallas_call(
+        _jac2d5p_kernel,
+        out_shape=jax.ShapeDtypeStruct((th, tw), jnp.float32),
+        interpret=True,
+    )(halo)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw"))
+def jac2d9p_tile(halo, *, th, tw):
+    return pl.pallas_call(
+        _jac2d9p_kernel,
+        out_shape=jax.ShapeDtypeStruct((th, tw), jnp.float32),
+        interpret=True,
+    )(halo)
+
+
+@functools.partial(jax.jit, static_argnames=("td", "th", "tw"))
+def jac3d7p_tile(halo, *, td, th, tw):
+    return pl.pallas_call(
+        _jac3d7p_kernel,
+        out_shape=jax.ShapeDtypeStruct((td, th, tw), jnp.float32),
+        interpret=True,
+    )(halo)
+
+
+@functools.partial(jax.jit, static_argnames=("td", "th", "tw"))
+def div3d_tile(u, v, w, *, td, th, tw):
+    return pl.pallas_call(
+        _div3d_kernel,
+        out_shape=jax.ShapeDtypeStruct((td, th, tw), jnp.float32),
+        interpret=True,
+    )(u, v, w)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw"))
+def jac2d5p_step(grid, *, th, tw):
+    """L2 building block: one whole-array 5-point step.
+
+    The interior (n-2, n-2) is processed as (th, tw) VMEM tiles, each
+    reading its overlapping (th+2, tw+2) halo via `dynamic_slice` and
+    updating its output block — the HBM↔VMEM halo schedule the paper's GPU
+    analogue would express with threadblocks. (BlockSpec's block-index
+    granularity cannot express overlapping input blocks, so the halo
+    gather is explicit; XLA fuses the slices.)
+    """
+    return _jac2d5p_step_slices(grid, th, tw)
+
+
+def _jac2d5p_step_slices(grid, th, tw):
+    n = grid.shape[0]
+    ni, nj = n - 2, n - 2
+    out_interior = jnp.zeros((ni, nj), jnp.float32)
+    for bi in range(ni // th):
+        for bj in range(nj // tw):
+            halo = jax.lax.dynamic_slice(grid, (bi * th, bj * tw), (th + 2, tw + 2))
+            tile = pl.pallas_call(
+                _jac2d5p_kernel,
+                out_shape=jax.ShapeDtypeStruct((th, tw), jnp.float32),
+                interpret=True,
+            )(halo)
+            out_interior = jax.lax.dynamic_update_slice(
+                out_interior, tile, (bi * th, bj * tw)
+            )
+    return grid.at[1:-1, 1:-1].set(out_interior)
+
+
+def _gs2d5p_kernel(h_ref, o_ref):
+    # In-place Gauss-Seidel semantics inside one tile: rows sweep top-down
+    # (fori_loop), each row left-to-right (scan with the freshly updated
+    # west neighbor as carry) — the intra-tile sequential order the rust
+    # leaf executes natively, expressed as a Pallas kernel.
+    h = h_ref[...]
+    th, tw = h.shape[0] - 2, h.shape[1] - 2
+    c = jnp.float32(0.2)
+
+    def row_body(i, grid):
+        def col_step(west, j):
+            val = c * (
+                grid[i, j]
+                + grid[i - 1, j]  # already-updated north
+                + grid[i + 1, j]
+                + west            # already-updated west
+                + grid[i, j + 1]
+            )
+            return val, val
+
+        init_west = grid[i, 0]
+        _, row = jax.lax.scan(col_step, init_west, jnp.arange(1, tw + 1))
+        return jax.lax.dynamic_update_slice(grid, row[None, :], (i, 1))
+
+    out = jax.lax.fori_loop(1, th + 1, row_body, h)
+    o_ref[...] = out[1:-1, 1:-1]
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw"))
+def gs2d5p_tile(halo, *, th, tw):
+    """In-place 5-point Gauss-Seidel tile sweep: (th+2, tw+2) halo (with
+    already-updated north/west ghosts) -> updated (th, tw) interior."""
+    return pl.pallas_call(
+        _gs2d5p_kernel,
+        out_shape=jax.ShapeDtypeStruct((th, tw), jnp.float32),
+        interpret=True,
+    )(halo)
+
+
+def _rtm3d_kernel(p0_ref, p1_ref, o_ref):
+    # 8th-order-in-space reverse-time-migration step (halo 2 per side)
+    p0 = p0_ref[...]
+    p1 = p1_ref[...]
+    c0 = jnp.float32(-2.5)
+    c1 = jnp.float32(1.333)
+    c2 = jnp.float32(-0.083)
+    ctr = p1[2:-2, 2:-2, 2:-2]
+    lap = c0 * 3.0 * ctr
+    for axis in range(3):
+        for off, cc in ((1, c1), (2, c2)):
+            lo = [slice(2, -2)] * 3
+            hi = [slice(2, -2)] * 3
+            lo[axis] = slice(2 - off, (-2 - off) if (-2 - off) != 0 else None)
+            hi[axis] = slice(2 + off, None if (-2 + off) == 0 else (-2 + off))
+            lap = lap + cc * (p1[tuple(lo)] + p1[tuple(hi)])
+    o_ref[...] = 2.0 * ctr - p0[2:-2, 2:-2, 2:-2] + jnp.float32(0.001) * lap
+
+
+@functools.partial(jax.jit, static_argnames=("td", "th", "tw"))
+def rtm3d_tile(p0, p1, *, td, th, tw):
+    """RTM step on a (td+4, th+4, tw+4) halo-2 tile -> (td, th, tw)."""
+    return pl.pallas_call(
+        _rtm3d_kernel,
+        out_shape=jax.ShapeDtypeStruct((td, th, tw), jnp.float32),
+        interpret=True,
+    )(p0, p1)

@@ -1,0 +1,87 @@
+"""L2: compute graphs composed from the L1 Pallas kernels.
+
+These are the whole-EDT-body and whole-step functions that `aot.py` lowers
+to HLO text for the rust runtime. Python exists only on this build path —
+the rust coordinator never imports it.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mmk
+from .kernels import stencil as stk
+
+
+def jac2d5p_tile(halo):
+    """EDT body: one 5-point tile update. halo (TH+2, TW+2) -> (TH, TW)."""
+    th, tw = halo.shape[0] - 2, halo.shape[1] - 2
+    return stk.jac2d5p_tile(halo, th=th, tw=tw)
+
+
+def jac2d9p_tile(halo):
+    th, tw = halo.shape[0] - 2, halo.shape[1] - 2
+    return stk.jac2d9p_tile(halo, th=th, tw=tw)
+
+
+def jac3d7p_tile(halo):
+    td, th, tw = (s - 2 for s in halo.shape)
+    return stk.jac3d7p_tile(halo, td=td, th=th, tw=tw)
+
+
+def div3d_tile(u, v, w):
+    td, th, tw = (s - 2 for s in u.shape)
+    return stk.div3d_tile(u, v, w, td=td, th=th, tw=tw)
+
+
+def gs2d5p_tile(halo):
+    """EDT body: in-place Gauss-Seidel tile sweep (sequential wavefront
+    inside the tile, expressed with fori_loop + scan)."""
+    th, tw = halo.shape[0] - 2, halo.shape[1] - 2
+    return stk.gs2d5p_tile(halo, th=th, tw=tw)
+
+
+def rtm3d_tile(p0, p1):
+    """EDT body: high-order RTM step on a halo-2 tile."""
+    td, th, tw = (s - 4 for s in p0.shape)
+    return stk.rtm3d_tile(p0, p1, td=td, th=th, tw=tw)
+
+
+def matmul_tile(a, b, c):
+    """EDT body: C-tile += A-tile · B-tile."""
+    ti, tk = a.shape
+    tj = b.shape[1]
+    return mmk.matmul_tile(a, b, c, ti=ti, tj=tj, tk=tk)
+
+
+def jac2d5p_step(grid, th=16, tw=16):
+    """Whole-array Jacobi step (the e2e model-level artifact)."""
+    return stk.jac2d5p_step(grid, th=th, tw=tw)
+
+
+def matmul_full(a, b, bm=32, bn=32, bk=32):
+    """Whole matmul through the Pallas K-accumulating grid kernel."""
+    return mmk.matmul(a, b, bm=bm, bn=bn, bk=bk)
+
+
+def time_loop_jac2d(grid, steps, th=16, tw=16):
+    """Multi-step Jacobi sweep via lax.fori_loop (rematerialization-free:
+    a single carried buffer, each step fused by XLA)."""
+
+    def body(_, g):
+        return stk.jac2d5p_step(g, th=th, tw=tw)
+
+    return jax.lax.fori_loop(0, steps, body, grid)
+
+
+__all__ = [
+    "gs2d5p_tile",
+    "rtm3d_tile",
+    "jac2d5p_tile",
+    "jac2d9p_tile",
+    "jac3d7p_tile",
+    "div3d_tile",
+    "matmul_tile",
+    "jac2d5p_step",
+    "matmul_full",
+    "time_loop_jac2d",
+]

@@ -1,0 +1,41 @@
+//! Fig 2: the motivating example — diamond-tiled heat-3d, OpenMP vs CnC,
+//! 1..12 processors, with and without NUMA pinning, on the modeled
+//! 2×6-core E5-2620. The paper reports *seconds* (lower is better); so do
+//! we. Reproduction targets: CnC ≤ OpenMP everywhere (load balancing),
+//! the gap widening with processors, NUMA pinning helping both, and the
+//! OpenMP regression at 12 procs.
+
+use tale3::bench::{instance, Table, FIG2_PROCS};
+use tale3::ral::DepMode;
+use tale3::sim::{simulate, simulate_omp, CostModel, Machine};
+use tale3::workloads::Size;
+
+fn main() {
+    let machine = Machine::e5_2620();
+    let costs = CostModel::default();
+    let inst = instance("HEAT-3D-DIAMOND", Size::Small);
+    let plan = inst.plan().expect("plan");
+    let cols: Vec<String> = FIG2_PROCS.iter().map(|p| format!("{p}p")).collect();
+    let mut table = Table::new(
+        "Fig 2: diamond-tiled heat-3d, OpenMP vs CnC (seconds, simulated E5-2620)",
+        &["Version / Procs"],
+        &cols,
+    );
+    for (label, pinned) in [("OpenMP", false), ("CnC", false), ("OpenMP-N", true), ("CnC-N", true)] {
+        let vals: Vec<f64> = FIG2_PROCS
+            .iter()
+            .map(|&p| {
+                if label.starts_with("OpenMP") {
+                    simulate_omp(&plan, p, &machine, &costs, pinned)
+                } else {
+                    simulate(&plan, DepMode::CncBlock, p, &machine, &costs, pinned, inst.total_flops)
+                        .seconds
+                }
+            })
+            .collect();
+        table.row(vec![label.to_string()], vals);
+    }
+    table.print();
+    println!("\n(Diamond hyperplanes (1,-1,0,0)/(1,1,0,0) verified legal by the scheduler;");
+    println!(" tile sizes 8x16x16x128 per Fig 1. Rows ±N differ by NUMA pinning.)");
+}

@@ -1,0 +1,145 @@
+//! Micro-benchmarks of the *real* runtime implementations on this
+//! container. Two purposes:
+//!
+//! 1. Calibrate the testbed simulator's `CostModel` (EXPERIMENTS.md
+//!    §Calibration) — the printed per-event costs map 1:1 to the model's
+//!    fields.
+//! 2. Reproduce the §4.7.1 claim: templated-expression (interior
+//!    predicate) evaluation overhead is "below 3% in the worst cases".
+
+use std::sync::Arc;
+use std::time::Instant;
+use tale3::bench::instance;
+use tale3::exec::LeafRunner;
+use tale3::expr::Env;
+use tale3::ral::{DepMode, Task, TagKey};
+use tale3::rt::table::TagTable;
+use tale3::rt::{self, LeafExec, NoopLeaf, Pool, RuntimeKind};
+use tale3::workloads::Size;
+
+fn bench_ns(label: &str, iters: u64, mut f: impl FnMut()) -> f64 {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{label:<46} {ns:>10.1} ns/op");
+    ns
+}
+
+fn main() {
+    println!("=== micro_overheads: real runtime costs on this machine ===\n");
+
+    // --- tag table ---
+    let table = TagTable::default();
+    let mut i = 0u64;
+    bench_ns("tag-table put (no waiters)", 200_000, || {
+        i += 1;
+        let released = table.put(TagKey::new(1, &[i as i64, 0]));
+        assert!(released.is_empty());
+    });
+    let done = TagKey::new(1, &[1, 0]);
+    bench_ns("tag-table get (hit)", 500_000, || {
+        assert!(table.is_done(&done));
+    });
+    let miss = TagKey::new(2, &[-1, -1]);
+    bench_ns("tag-table get (miss)", 500_000, || {
+        assert!(!table.is_done(&miss));
+    });
+
+    // --- interior predicate evaluation (§4.7.1) ---
+    let inst = instance("JAC-2D-5P", Size::Small);
+    let plan = inst.plan().unwrap();
+    let mut tags: Vec<Vec<i64>> = Vec::new();
+    plan.for_each_tag(plan.root, &[], &mut |c| {
+        if tags.len() < 64 {
+            tags.push(c.to_vec());
+        }
+    });
+    let node = plan.node(plan.root);
+    let mut k = 0usize;
+    let pred_ns = bench_ns("interior predicate eval (3 chain dims)", 200_000, || {
+        let t = &tags[k % tags.len()];
+        k += 1;
+        let env = Env::new(t, &plan.params);
+        for d in &node.dims {
+            if let Some(p) = &d.interior {
+                std::hint::black_box(p.eval(env));
+            }
+        }
+    });
+
+    // --- whole-task overhead per mode (noop leaves, 1 thread) ---
+    println!();
+    let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+    let pool = Pool::new(1);
+    for mode in [
+        DepMode::CncBlock,
+        DepMode::CncAsync,
+        DepMode::CncDep,
+        DepMode::Swarm,
+        DepMode::Ocr,
+    ] {
+        let mut secs = f64::MAX;
+        let mut tasks = 0u64;
+        for _ in 0..5 {
+            let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, 1.0).unwrap();
+            secs = secs.min(r.seconds);
+            tasks = r.metrics.total_tasks();
+        }
+        println!(
+            "engine {:<10} {:>8} tasks  {:>10.1} ns/task (whole-graph, noop leaves)",
+            mode.name(),
+            tasks,
+            secs * 1e9 / tasks as f64
+        );
+    }
+
+    // --- §4.7.1 claim: predicate overhead vs real task body ---
+    println!();
+    let arrays = inst.arrays();
+    let runner = LeafRunner {
+        arrays: arrays.clone(),
+        kernels: inst.kernels.clone(),
+    };
+    let mut k = 0usize;
+    let body_ns = bench_ns("real leaf body (JAC-2D-5P 16x16x64 tile)", 2_000, || {
+        let t = &tags[k % tags.len()];
+        k += 1;
+        runner.run_leaf(&plan, plan.root, t);
+    });
+    let n_dims = node.dims.len() as f64;
+    println!(
+        "\n§4.7.1 check: predicate eval = {:.1} ns vs task body = {:.0} ns → {:.2}% (paper: <3%)",
+        pred_ns,
+        body_ns,
+        pred_ns / body_ns * 100.0
+    );
+    println!("(per-dim predicate cost ≈ {:.1} ns — CostModel.pred_eval_ns)", pred_ns / n_dims);
+
+    // --- pool dispatch ---
+    println!();
+    let pool2 = Pool::new(1);
+    let t0 = Instant::now();
+    let n_jobs = 50_000u64;
+    pool2.run_until_quiescent(Box::new(move |ctx| {
+        for _ in 0..n_jobs {
+            ctx.spawn(Box::new(|_| {
+                std::hint::black_box(0u64);
+            }));
+        }
+    }));
+    println!(
+        "pool spawn+dispatch (noop job)                 {:>10.1} ns/op",
+        t0.elapsed().as_nanos() as f64 / n_jobs as f64
+    );
+    // keep Task size visible — it is cloned on requeue paths
+    println!(
+        "sizeof(Task) = {} bytes",
+        std::mem::size_of::<Task>()
+    );
+}

@@ -1,0 +1,38 @@
+//! Table 1: CnC performance (Gflop/s) across the three dependence
+//! specification mechanisms — DEP (depends), BLOCK (blocking gets),
+//! ASYNC (unsafe_get/flush) — for every benchmark at 1..32 threads.
+//!
+//! Cells are produced by the testbed simulator (modeled 2×8-core×2-SMT
+//! E5-2690; DESIGN.md §5) over `Small`-preset workloads; the *shape* —
+//! which mechanism wins where, BLOCK's collapse on fine-grained 2-D
+//! benchmarks, requeue traffic under speculation — is the reproduction
+//! target, not absolute Gflop/s.
+
+use tale3::bench::{instance, sim_gflops, Table, THREADS};
+use tale3::ral::DepMode;
+use tale3::sim::{CostModel, Machine};
+use tale3::workloads::{table_benchmarks, Size};
+
+fn main() {
+    let machine = Machine::default();
+    let costs = CostModel::default();
+    let mut table = Table::threads_cols(
+        "Table 1: CnC dependence-specification variants (Gflop/s, simulated testbed)",
+        &["Benchmark", "EDT version"],
+    );
+    for name in table_benchmarks() {
+        let inst = instance(name, Size::Small);
+        for (label, mode) in [
+            ("DEP", DepMode::CncDep),
+            ("BLOCK", DepMode::CncBlock),
+            ("ASYNC", DepMode::CncAsync),
+        ] {
+            let vals: Vec<f64> = THREADS
+                .iter()
+                .map(|&t| sim_gflops(&inst, &inst.map_opts, mode, t, &machine, &costs, true))
+                .collect();
+            table.row(vec![name.to_string(), label.to_string()], vals);
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,66 @@
+//! Table 2: benchmark characteristics — symbolic parameters, data size,
+//! iteration size, number of generated (leaf) EDTs, and the maximum
+//! floating-point work per EDT at the paper tile sizes. Computed from the
+//! mapped plans at the *paper* problem sizes (no execution involved).
+
+use tale3::edt::stats::characterize;
+use tale3::workloads::{registry, Size};
+
+fn main() {
+    println!("\n=== Table 2: benchmark characteristics (paper sizes, our mapping) ===");
+    println!(
+        "| {:<15} | {:<10} | {:>14} | {:>10} | {:>12} |",
+        "Benchmark", "Type", "Iter size", "# EDTs", "# Fp / EDT"
+    );
+    println!("{}", "-".repeat(80));
+    for w in registry() {
+        if w.name == "HEAT-3D-DIAMOND" {
+            continue;
+        }
+        let inst = (w.build)(Size::Paper);
+        let tree = match inst.tree() {
+            Ok(t) => t,
+            Err(e) => {
+                println!("| {:<15} | mapping failed: {e}", w.name);
+                continue;
+            }
+        };
+        let c = characterize(&tree, &inst.params, 8);
+        let iter_size = inst.total_flops
+            / inst
+                .prog
+                .stmts
+                .iter()
+                .map(|s| s.flops_per_point)
+                .fold(0.0, f64::max)
+                .max(1.0);
+        let n_params = inst.prog.params.len();
+        let ty = if n_params > 0 {
+            format!("Param. ({n_params})")
+        } else {
+            "Const.".to_string()
+        };
+        println!(
+            "| {:<15} | {:<10} | {:>14} | {:>10} | {:>12} |",
+            w.name,
+            ty,
+            human(iter_size),
+            human(c.leaf_edts as f64),
+            human(c.max_flops_per_edt),
+        );
+    }
+    println!("\n(# EDTs = leaf WORKER instances; Fp/EDT sampled over the first 8 leaves,");
+    println!(" exact for the homogeneous-tile suite. Paper tile sizes 16/64.)");
+}
+
+fn human(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}

@@ -1,0 +1,36 @@
+//! Table 4: SWARM, OCR and OpenMP performance (Gflop/s) for every
+//! benchmark at 1..32 threads (simulated testbed; see table1 header).
+//! Reproduction targets: OCR ≈ SWARM on 3-D time-tiled benchmarks; SWARM's
+//! hyperthreading collapse at 32 threads; OpenMP's wavefront-barrier
+//! penalty on time-tiled stencils vs its win on reuse-bound kernels
+//! (§5.2 case 3).
+
+use tale3::bench::{instance, sim_gflops, sim_omp_gflops, Table, THREADS};
+use tale3::ral::DepMode;
+use tale3::sim::{CostModel, Machine};
+use tale3::workloads::{table_benchmarks, Size};
+
+fn main() {
+    let machine = Machine::default();
+    let costs = CostModel::default();
+    let mut table = Table::threads_cols(
+        "Table 4: SWARM, OCR and OpenMP (Gflop/s, simulated testbed)",
+        &["Benchmark", "EDT version"],
+    );
+    for name in table_benchmarks() {
+        let inst = instance(name, Size::Small);
+        for (label, mode) in [("OCR", DepMode::Ocr), ("SWARM", DepMode::Swarm)] {
+            let vals: Vec<f64> = THREADS
+                .iter()
+                .map(|&t| sim_gflops(&inst, &inst.map_opts, mode, t, &machine, &costs, true))
+                .collect();
+            table.row(vec![name.to_string(), label.to_string()], vals);
+        }
+        let omp: Vec<f64> = THREADS
+            .iter()
+            .map(|&t| sim_omp_gflops(&inst, &inst.map_opts, t, &machine, &costs, true))
+            .collect();
+        table.row(vec![name.to_string(), "OMP".to_string()], omp);
+    }
+    table.print();
+}

@@ -1,0 +1,75 @@
+//! Table 5: OCR tile-size and granularity exploration for LUD and SOR
+//! (§5.3): the trade-off between EDT granularity, EDT count and
+//! management cost, plus the work-ratio observation ("85% of non-idle
+//! time executing work at granularity 4 vs ~10% at granularity 3 for
+//! LUD 16-16-16 @ 16 threads").
+
+use tale3::bench::{instance, sim_gflops, sim_work_ratio, Table, THREADS};
+use tale3::ral::DepMode;
+use tale3::sim::{CostModel, Machine};
+use tale3::workloads::Size;
+
+fn main() {
+    let machine = Machine::default();
+    let costs = CostModel::default();
+    let mut table = Table::threads_cols(
+        "Table 5: OCR tile-size / granularity exploration (Gflop/s, simulated testbed)",
+        &["Benchmark", "Sizes", "Gran."],
+    );
+    // LUD: granularity = number of loops in the leaf EDT
+    // (3 = point loops only; 4 = innermost tile loop kept in the leaf)
+    let lud_cfgs: [(&str, Vec<i64>, usize); 6] = [
+        ("16-16-16", vec![16, 16, 16], 3),
+        ("16-16-16", vec![16, 16, 16], 4),
+        ("64-64-64", vec![64, 64, 64], 3),
+        ("64-64-64", vec![64, 64, 64], 4),
+        ("10-10-100", vec![10, 10, 100], 3),
+        ("10-10-100", vec![10, 10, 100], 4),
+    ];
+    for (label, ts, gran) in lud_cfgs {
+        let inst = instance("LUD", Size::Small);
+        let mut opts = inst.map_opts.clone();
+        opts.tile_sizes = ts;
+        opts.leaf_extra = gran - 3;
+        let vals: Vec<f64> = THREADS
+            .iter()
+            .map(|&t| sim_gflops(&inst, &opts, DepMode::Ocr, t, &machine, &costs, true))
+            .collect();
+        table.row(
+            vec!["LUD".into(), label.into(), format!("{gran}")],
+            vals,
+        );
+    }
+    let sor_cfgs: [(&str, Vec<i64>); 4] = [
+        ("100-100", vec![100, 100]),
+        ("100-1000", vec![100, 1000]),
+        ("200-200", vec![200, 200]),
+        ("1000-1000", vec![1000, 1000]),
+    ];
+    for (label, ts) in sor_cfgs {
+        let inst = instance("SOR", Size::Small);
+        let mut opts = inst.map_opts.clone();
+        opts.tile_sizes = ts;
+        let vals: Vec<f64> = THREADS
+            .iter()
+            .map(|&t| sim_gflops(&inst, &opts, DepMode::Ocr, t, &machine, &costs, true))
+            .collect();
+        table.row(vec!["SOR".into(), label.into(), "2".into()], vals);
+    }
+    table.print();
+
+    // §5.3 work-ratio observation at 16 threads
+    println!("\n--- §5.3 work ratio (LUD, OCR, 16 threads, simulated) ---");
+    for gran in [3usize, 4] {
+        let inst = instance("LUD", Size::Small);
+        let mut opts = inst.map_opts.clone();
+        opts.tile_sizes = vec![16, 16, 16];
+        opts.leaf_extra = gran - 3;
+        let r = sim_work_ratio(&inst, &opts, DepMode::Ocr, 16);
+        println!(
+            "granularity {gran}: {:.0}% of non-idle time executing work (paper: {} )",
+            r * 100.0,
+            if gran == 4 { ">85%" } else { "~10%" }
+        );
+    }
+}

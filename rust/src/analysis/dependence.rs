@@ -1,0 +1,499 @@
+//! Instance-wise dependence analysis (§4.1, §4.4).
+//!
+//! For every pair of accesses to the same array with at least one write,
+//! we enumerate the carried level hierarchically (dims `< l` equal, dim `l`
+//! strictly forward, plus the loop-independent case ordered by beta) and
+//! test feasibility of the coupled affine system
+//! `{i_S ∈ D_S, i_T ∈ D_T, M_S(i_S) = M_T(i_T), precedence}` with
+//! Fourier–Motzkin. For feasible levels we project per-dimension distance
+//! bounds `δ_m = i_T[m] - i_S[m]` — exact constants for uniform (stencil)
+//! dependences, conservative boxes for coupled (LU/TRISOLV-style) ones.
+//!
+//! The analysis runs at the program's concrete *analysis parameter values*
+//! (DESIGN.md §5): the dependence structure of the evaluation suite is
+//! parameter-independent above trivial sizes, and this sidesteps symbolic
+//! parametric ILP (Feautrier QUASTs) that §4.4 argues is too expensive in
+//! an EDT pipeline anyway.
+
+use super::fm::System;
+use crate::ir::{Program, Statement, StmtId};
+use std::fmt;
+
+/// Inclusive bounds on one component of a dependence distance vector;
+/// `None` = unbounded in that direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DistBound {
+    pub lo: Option<i64>,
+    pub hi: Option<i64>,
+}
+
+impl DistBound {
+    pub fn exact(k: i64) -> Self {
+        DistBound {
+            lo: Some(k),
+            hi: Some(k),
+        }
+    }
+    pub fn star() -> Self {
+        DistBound { lo: None, hi: None }
+    }
+    pub fn as_exact(&self) -> Option<i64> {
+        match (self.lo, self.hi) {
+            (Some(a), Some(b)) if a == b => Some(a),
+            _ => None,
+        }
+    }
+    /// Union (hull) of two bounds.
+    pub fn hull(&self, o: &DistBound) -> DistBound {
+        DistBound {
+            lo: match (self.lo, o.lo) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                _ => None,
+            },
+            hi: match (self.hi, o.hi) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                _ => None,
+            },
+        }
+    }
+    /// Conservative bounds of `c * δ`.
+    pub fn scale(&self, c: i64) -> DistBound {
+        if c == 0 {
+            return DistBound::exact(0);
+        }
+        let (lo, hi) = if c > 0 { (self.lo, self.hi) } else { (self.hi, self.lo) };
+        DistBound {
+            lo: lo.map(|v| v * c),
+            hi: hi.map(|v| v * c),
+        }
+    }
+    /// Conservative bounds of `self + other`.
+    pub fn add(&self, o: &DistBound) -> DistBound {
+        DistBound {
+            lo: match (self.lo, o.lo) {
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            },
+            hi: match (self.hi, o.hi) {
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            },
+        }
+    }
+}
+
+impl fmt::Display for DistBound {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match (self.lo, self.hi) {
+            (Some(a), Some(b)) if a == b => write!(f, "{a}"),
+            (Some(a), Some(b)) => write!(f, "[{a},{b}]"),
+            (Some(a), None) => write!(f, "[{a},∞)"),
+            (None, Some(b)) => write!(f, "(-∞,{b}]"),
+            (None, None) => write!(f, "*"),
+        }
+    }
+}
+
+/// Kind of memory dependence (all three constrain execution order equally
+/// for our purposes; kept for diagnostics and for the §4.6 discussion of
+/// dataflow-only refinements).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepKind {
+    Flow,
+    Anti,
+    Output,
+}
+
+/// One edge of the generalized dependence graph: `dst` depends on `src`
+/// (the paper writes `T → S` for "T depends on S"; here `src = S`,
+/// `dst = T`, and `dist[m]` bounds `i_T[m] - i_S[m]` over the common loops).
+#[derive(Debug, Clone)]
+pub struct DepEdge {
+    pub src: StmtId,
+    pub dst: StmtId,
+    pub kind: DepKind,
+    pub array: usize,
+    /// Carried level: dims `< level` are exactly 0; `level == dist.len()`
+    /// means loop-independent (same iteration of all common loops, ordered
+    /// by textual position).
+    pub level: usize,
+    /// Distance bounds over the common loops of (src, dst).
+    pub dist: Vec<DistBound>,
+}
+
+impl DepEdge {
+    pub fn is_loop_independent(&self) -> bool {
+        self.level == self.dist.len()
+    }
+}
+
+impl fmt::Display for DepEdge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let d: Vec<String> = self.dist.iter().map(|b| b.to_string()).collect();
+        write!(
+            f,
+            "S{} -> S{} {:?} A{} level {} dist ({})",
+            self.src,
+            self.dst,
+            self.kind,
+            self.array,
+            self.level,
+            d.join(",")
+        )
+    }
+}
+
+/// Build the coupled FM system for a (src, dst) access pair.
+/// Variable layout: `x = [i_S (d_s vars), i_T (d_t vars)]`.
+fn build_system(
+    src: &Statement,
+    dst: &Statement,
+    src_acc: &crate::ir::Access,
+    dst_acc: &crate::ir::Access,
+    params: &[i64],
+) -> System {
+    let ds = src.depth();
+    let dt = dst.depth();
+    let n = ds + dt;
+    let mut sys = System::new(n);
+    // domains
+    for c in &src.constraints {
+        let mut coeffs = vec![0i128; n];
+        for (k, v) in c.form.iv_coeffs.iter().enumerate() {
+            coeffs[k] = *v as i128;
+        }
+        let mut cst = c.form.constant as i128;
+        for (p, v) in c.form.param_coeffs.iter().enumerate() {
+            cst += (*v as i128) * (params[p] as i128);
+        }
+        sys.ge0(coeffs, cst);
+    }
+    for c in &dst.constraints {
+        let mut coeffs = vec![0i128; n];
+        for (k, v) in c.form.iv_coeffs.iter().enumerate() {
+            coeffs[ds + k] = *v as i128;
+        }
+        let mut cst = c.form.constant as i128;
+        for (p, v) in c.form.param_coeffs.iter().enumerate() {
+            cst += (*v as i128) * (params[p] as i128);
+        }
+        sys.ge0(coeffs, cst);
+    }
+    // subscript equality, row by row
+    for (a, b) in src_acc.idx.iter().zip(&dst_acc.idx) {
+        let mut coeffs = vec![0i128; n];
+        for (k, v) in a.iv_coeffs.iter().enumerate() {
+            coeffs[k] = *v as i128;
+        }
+        for (k, v) in b.iv_coeffs.iter().enumerate() {
+            coeffs[ds + k] -= *v as i128;
+        }
+        let mut cst = (a.constant - b.constant) as i128;
+        for p in 0..params.len() {
+            let pa = a.param_coeffs.get(p).copied().unwrap_or(0);
+            let pb = b.param_coeffs.get(p).copied().unwrap_or(0);
+            cst += ((pa - pb) as i128) * (params[p] as i128);
+        }
+        sys.eq0(coeffs, cst);
+    }
+    sys
+}
+
+/// Test one carried level and, if feasible, compute the distance box.
+fn test_level(
+    base: &System,
+    ds: usize,
+    common: usize,
+    level: usize,
+) -> Option<Vec<DistBound>> {
+    let n = base.n_vars;
+    let mut sys = base.clone();
+    // dims < level: equal
+    for m in 0..level.min(common) {
+        let mut coeffs = vec![0i128; n];
+        coeffs[m] = -1;
+        coeffs[ds + m] = 1;
+        sys.eq0(coeffs, 0);
+    }
+    // dim `level`: strictly forward (δ >= 1)
+    if level < common {
+        let mut coeffs = vec![0i128; n];
+        coeffs[level] = -1;
+        coeffs[ds + level] = 1;
+        sys.ge0(coeffs, -1);
+    }
+    match sys.feasible() {
+        Some(false) => return None,
+        Some(true) => {}
+        None => {
+            // blowup: conservative star edge
+            let mut dist = vec![DistBound::star(); common];
+            for (m, d) in dist.iter_mut().enumerate().take(level.min(common)) {
+                *d = DistBound::exact(0);
+                let _ = m;
+            }
+            if level < common {
+                dist[level] = DistBound {
+                    lo: Some(1),
+                    hi: None,
+                };
+            }
+            return Some(dist);
+        }
+    }
+    let mut dist = Vec::with_capacity(common);
+    for m in 0..common {
+        if m < level {
+            dist.push(DistBound::exact(0));
+            continue;
+        }
+        let mut obj = vec![0i128; n];
+        obj[m] = -1;
+        obj[ds + m] = 1;
+        match sys.project_bounds(&obj) {
+            Ok(Some((lo, hi))) => dist.push(DistBound { lo, hi }),
+            Ok(None) => return None, // infeasible after all
+            Err(()) => dist.push(DistBound::star()),
+        }
+    }
+    Some(dist)
+}
+
+/// Compute all dependence edges of a program.
+pub fn analyze(prog: &Program) -> Vec<DepEdge> {
+    let params = prog.analysis_param_values();
+    let mut edges = Vec::new();
+    for src in &prog.stmts {
+        for dst in &prog.stmts {
+            let common = src.common_loops(dst);
+            // access pairs with at least one write, same array
+            let pairs: Vec<(&crate::ir::Access, &crate::ir::Access, DepKind)> = {
+                let mut v = Vec::new();
+                for w in &src.writes {
+                    for r in &dst.reads {
+                        if w.array == r.array {
+                            v.push((w, r, DepKind::Flow));
+                        }
+                    }
+                    for w2 in &dst.writes {
+                        if w.array == w2.array {
+                            v.push((w, w2, DepKind::Output));
+                        }
+                    }
+                }
+                for r in &src.reads {
+                    for w in &dst.writes {
+                        if r.array == w.array {
+                            v.push((r, w, DepKind::Anti));
+                        }
+                    }
+                }
+                v
+            };
+            for (sa, da, kind) in pairs {
+                let base = build_system(src, dst, sa, da, &params);
+                // carried levels 0..common
+                for level in 0..common {
+                    if let Some(dist) = test_level(&base, src.depth(), common, level) {
+                        edges.push(DepEdge {
+                            src: src.id,
+                            dst: dst.id,
+                            kind,
+                            array: sa.array,
+                            level,
+                            dist,
+                        });
+                    }
+                }
+                // loop-independent: all common dims equal, src textually first
+                // (or same statement with src == dst excluded: a statement
+                // instance does not depend on itself)
+                if src.id != dst.id && src.textually_before(dst) {
+                    if let Some(dist) = test_level(&base, src.depth(), common, common) {
+                        edges.push(DepEdge {
+                            src: src.id,
+                            dst: dst.id,
+                            kind,
+                            array: sa.array,
+                            level: common,
+                            dist,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    dedup(edges)
+}
+
+/// Merge edges with identical (src, dst, level, kind) by hulling their
+/// boxes — "dependences may be redundant" (§4.4 point 1); the runtime never
+/// sees these, but the scheduler iterates over them. Kinds are kept
+/// separate so exact flow distances are not widened by output/anti hulls.
+fn dedup(edges: Vec<DepEdge>) -> Vec<DepEdge> {
+    let mut out: Vec<DepEdge> = Vec::new();
+    for e in edges {
+        if let Some(ex) = out.iter_mut().find(|x| {
+            x.src == e.src && x.dst == e.dst && x.level == e.level && x.kind == e.kind
+        }) {
+            for (a, b) in ex.dist.iter_mut().zip(&e.dist) {
+                *a = a.hull(b);
+            }
+        } else {
+            out.push(e);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::{Affine, Expr};
+    use crate::ir::{Access, ProgramBuilder, StmtSpec};
+
+    /// jacobi-1d with two arrays (ping-pong): S1 reads A writes B,
+    /// S2 reads B writes A (next line), fused under (t, i).
+    fn jacobi1d() -> Program {
+        let mut pb = ProgramBuilder::new("jac1d");
+        let t = pb.param("T", 8);
+        let n = pb.param("N", 32);
+        let a = pb.array("A", 1);
+        let b = pb.array("B", 1);
+        let sub = |iv: usize, c: i64| Affine::var_plus(2, 2, iv, c);
+        pb.stmt(
+            StmtSpec::new("S1")
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(t), -1))
+                .dim(Expr::constant(1), Expr::sub(&Expr::param(n), &Expr::constant(2)))
+                .write(Access::new(b, vec![sub(1, 0)]))
+                .read(Access::new(a, vec![sub(1, -1)]))
+                .read(Access::new(a, vec![sub(1, 0)]))
+                .read(Access::new(a, vec![sub(1, 1)]))
+                .beta(vec![0, 0, 0]),
+        );
+        pb.stmt(
+            StmtSpec::new("S2")
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(t), -1))
+                .dim(Expr::constant(1), Expr::sub(&Expr::param(n), &Expr::constant(2)))
+                .write(Access::new(a, vec![sub(1, 0)]))
+                .read(Access::new(b, vec![sub(1, -1)]))
+                .read(Access::new(b, vec![sub(1, 0)]))
+                .read(Access::new(b, vec![sub(1, 1)]))
+                .beta(vec![0, 0, 1]),
+        );
+        pb.build()
+    }
+
+    #[test]
+    fn jacobi_flow_distances() {
+        let prog = jacobi1d();
+        let edges = analyze(&prog);
+        // S1 -> S2 loop-independent / same-t flow via B with δi ∈ {-1,0,1}
+        let li: Vec<&DepEdge> = edges
+            .iter()
+            .filter(|e| e.src == 0 && e.dst == 1 && e.kind == DepKind::Flow || e.src == 0 && e.dst == 1)
+            .collect();
+        assert!(!li.is_empty());
+        // S2 -> S1 carried by t with δt = 1 (A written by S2 read by S1 next t)
+        let carried: Vec<&DepEdge> = edges
+            .iter()
+            .filter(|e| e.src == 1 && e.dst == 0 && e.level == 0)
+            .collect();
+        assert!(!carried.is_empty(), "missing t-carried S2->S1 edge: {edges:?}");
+        for e in &carried {
+            // memory-based (no last-write pruning): δt >= 1, and the flow
+            // kind keeps the stencil radius on i
+            assert_eq!(e.dist[0].lo, Some(1), "t distance must start at 1: {e}");
+            assert!(e.dist[1].lo.unwrap() >= -1 && e.dist[1].hi.unwrap() <= 1, "{e}");
+        }
+    }
+
+    #[test]
+    fn no_self_loop_independent() {
+        let prog = jacobi1d();
+        let edges = analyze(&prog);
+        assert!(edges
+            .iter()
+            .all(|e| !(e.src == e.dst && e.is_loop_independent())));
+    }
+
+    /// matmult: C[i][j] += A[i][k] * B[k][j] — only a k-carried self dep.
+    #[test]
+    fn matmult_k_reduction() {
+        let mut pb = ProgramBuilder::new("mm");
+        let n = pb.param("N", 16);
+        pb.array("A", 2);
+        pb.array("B", 2);
+        let c = pb.array("C", 2);
+        let nm1 = Expr::offset(&Expr::param(n), -1);
+        let s = StmtSpec::new("S")
+            .dim(Expr::constant(0), nm1.clone())
+            .dim(Expr::constant(0), nm1.clone())
+            .dim(Expr::constant(0), nm1.clone())
+            .write(Access::new(c, vec![Affine::var(3, 1, 0), Affine::var(3, 1, 1)]))
+            .read(Access::new(c, vec![Affine::var(3, 1, 0), Affine::var(3, 1, 1)]));
+        pb.stmt(s);
+        let prog = pb.build();
+        let edges = analyze(&prog);
+        // all edges: carried at level 2 (k) with δ=(0,0,[1..])
+        assert!(!edges.is_empty());
+        for e in &edges {
+            assert_eq!(e.level, 2, "{e}");
+            assert_eq!(e.dist[0].as_exact(), Some(0));
+            assert_eq!(e.dist[1].as_exact(), Some(0));
+            assert_eq!(e.dist[2].lo, Some(1));
+        }
+    }
+
+    /// LU-style coupled dependence: S(k,i,j) writes A[i][j], reads A[k][j].
+    /// The k-carried distance box must discover δi >= 1 via coupling
+    /// (i_T = ... , i' = k coupling described in §4.4 / DESIGN.md).
+    #[test]
+    fn lu_coupled_direction() {
+        let mut pb = ProgramBuilder::new("lu");
+        let n = pb.param("N", 16);
+        let a = pb.array("A", 2);
+        let nm1 = Expr::offset(&Expr::param(n), -1);
+        // k in [0, N-1], i in [k+1, N-1], j in [k+1, N-1]
+        let s = StmtSpec::new("S")
+            .dim(Expr::constant(0), nm1.clone())
+            .dim(Expr::offset(&Expr::iv(0), 1), nm1.clone())
+            .dim(Expr::offset(&Expr::iv(0), 1), nm1.clone())
+            .write(Access::new(a, vec![Affine::var(3, 1, 1), Affine::var(3, 1, 2)]))
+            .read(Access::new(a, vec![Affine::var(3, 1, 0), Affine::var(3, 1, 2)]));
+        pb.stmt(s);
+        let prog = pb.build();
+        let edges = analyze(&prog);
+        // flow edge write A[i][j] -> read A[k'][j'] with k' = i: carried at k
+        let flow: Vec<&DepEdge> = edges
+            .iter()
+            .filter(|e| e.kind == DepKind::Flow && e.level == 0)
+            .collect();
+        assert!(!flow.is_empty(), "{edges:?}");
+        for e in &flow {
+            assert!(e.dist[0].lo.unwrap() >= 1, "δk >= 1: {e}");
+            assert!(
+                e.dist[1].lo.unwrap() >= 1,
+                "coupling must give δi >= 1: {e}"
+            );
+            assert_eq!(e.dist[2].as_exact(), Some(0), "δj = 0: {e}");
+        }
+    }
+
+    #[test]
+    fn dist_bound_algebra() {
+        let a = DistBound { lo: Some(1), hi: None };
+        let b = DistBound::exact(-1);
+        assert_eq!(a.scale(2).lo, Some(2));
+        assert_eq!(a.scale(-1).hi, Some(-1));
+        assert_eq!(a.scale(-1).lo, None);
+        let s = a.add(&b);
+        assert_eq!(s.lo, Some(0));
+        assert_eq!(s.hi, None);
+        let h = a.hull(&b);
+        assert_eq!(h.lo, Some(-1));
+        assert_eq!(h.hi, None);
+        assert_eq!(DistBound::exact(3).as_exact(), Some(3));
+        assert_eq!(a.as_exact(), None);
+    }
+}

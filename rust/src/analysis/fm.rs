@@ -1,0 +1,302 @@
+//! Rational Fourier–Motzkin elimination over small integer systems.
+//!
+//! Used by the dependence test (`analysis::dependence`) for feasibility and
+//! for projecting dependence-distance bounds. Systems here are tiny (≤ ~10
+//! variables, ≤ ~60 constraints), so FM's worst-case blowup is irrelevant;
+//! we normalize rows by their gcd and deduplicate to keep growth in check,
+//! and bail out conservatively if a pathological input explodes.
+//!
+//! The paper's §4.3/§4.4 discussion — exact projection is "often
+//! prohibitively expensive" on *tiled, multi-level* programs — is precisely
+//! why FM is confined to the *untransformed* statement-level analysis here,
+//! and runtime dependences are resolved by loop-type predicates instead.
+
+/// One inequality `sum(coeffs[i] * x_i) + constant >= 0`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Row {
+    pub coeffs: Vec<i128>,
+    pub constant: i128,
+}
+
+impl Row {
+    pub fn new(coeffs: Vec<i128>, constant: i128) -> Self {
+        Row { coeffs, constant }
+    }
+
+    fn gcd_normalize(&mut self) {
+        let mut g: i128 = self.coeffs.iter().map(|c| c.abs()).fold(0, gcd);
+        g = gcd(g, self.constant.abs());
+        if g > 1 {
+            for c in &mut self.coeffs {
+                *c /= g;
+            }
+            self.constant /= g;
+        }
+    }
+
+    fn is_trivial(&self) -> bool {
+        self.coeffs.iter().all(|&c| c == 0)
+    }
+}
+
+fn gcd(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Safety valve: dependence systems stay far below this; a blowup means the
+/// input is outside the intended domain, and callers treat `None` as
+/// "unknown ⇒ conservative".
+const MAX_ROWS: usize = 4096;
+
+/// A system of inequalities over `n_vars` variables.
+#[derive(Debug, Clone, Default)]
+pub struct System {
+    pub rows: Vec<Row>,
+    pub n_vars: usize,
+}
+
+impl System {
+    pub fn new(n_vars: usize) -> Self {
+        System {
+            rows: Vec::new(),
+            n_vars,
+        }
+    }
+
+    /// Add `sum(coeffs · x) + constant >= 0`.
+    pub fn ge0(&mut self, coeffs: Vec<i128>, constant: i128) {
+        debug_assert_eq!(coeffs.len(), self.n_vars);
+        let mut r = Row::new(coeffs, constant);
+        r.gcd_normalize();
+        self.rows.push(r);
+    }
+
+    /// Add equality as two inequalities.
+    pub fn eq0(&mut self, coeffs: Vec<i128>, constant: i128) {
+        let neg: Vec<i128> = coeffs.iter().map(|c| -c).collect();
+        self.ge0(coeffs, constant);
+        self.ge0(neg, -constant);
+    }
+
+    /// Eliminate variable `v` in place. Returns `false` on row blowup
+    /// (caller must treat the system as unknown).
+    pub fn eliminate(&mut self, v: usize) -> bool {
+        let mut lowers = Vec::new(); // coeff > 0: gives lower bounds on x_v
+        let mut uppers = Vec::new(); // coeff < 0: gives upper bounds
+        let mut rest = Vec::new();
+        for r in self.rows.drain(..) {
+            match r.coeffs[v].signum() {
+                1 => lowers.push(r),
+                -1 => uppers.push(r),
+                _ => rest.push(r),
+            }
+        }
+        if lowers.len() * uppers.len() + rest.len() > MAX_ROWS {
+            return false;
+        }
+        for lo in &lowers {
+            for up in &uppers {
+                let a = lo.coeffs[v]; // > 0
+                let b = -up.coeffs[v]; // > 0
+                let mut coeffs = vec![0i128; self.n_vars];
+                for i in 0..self.n_vars {
+                    coeffs[i] = b * lo.coeffs[i] + a * up.coeffs[i];
+                }
+                let constant = b * lo.constant + a * up.constant;
+                debug_assert_eq!(coeffs[v], 0);
+                let mut row = Row::new(coeffs, constant);
+                row.gcd_normalize();
+                if row.is_trivial() {
+                    if row.constant < 0 {
+                        // 0 >= positive: infeasible; keep as witness
+                        rest.push(row);
+                    }
+                    // 0 >= -k trivially true: drop
+                } else if !rest.contains(&row) {
+                    rest.push(row);
+                }
+            }
+        }
+        self.rows = rest;
+        true
+    }
+
+    /// Check rational feasibility by eliminating every variable.
+    /// `Some(true)` = feasible, `Some(false)` = infeasible, `None` = blowup.
+    pub fn feasible(&self) -> Option<bool> {
+        let mut s = self.clone();
+        for v in 0..s.n_vars {
+            if !s.eliminate(v) {
+                return None;
+            }
+            // early exit: constant contradiction
+            if s.rows.iter().any(|r| r.is_trivial() && r.constant < 0) {
+                return Some(false);
+            }
+        }
+        Some(!s.rows.iter().any(|r| r.is_trivial() && r.constant < 0))
+    }
+
+    /// Project the system onto the linear form `obj·x` and return integer
+    /// bounds `(lo, hi)` of its value over the (rational relaxation of the)
+    /// solution set; `None` in a slot means unbounded. Returns `Err(())` on
+    /// blowup, `Ok(None)` if the system is infeasible.
+    #[allow(clippy::type_complexity)]
+    pub fn project_bounds(
+        &self,
+        obj: &[i128],
+    ) -> Result<Option<(Option<i64>, Option<i64>)>, ()> {
+        // Introduce z = obj·x as a fresh variable, eliminate all x.
+        let n = self.n_vars;
+        let mut s = System::new(n + 1);
+        for r in &self.rows {
+            let mut c = r.coeffs.clone();
+            c.push(0);
+            s.rows.push(Row::new(c, r.constant));
+        }
+        // z - obj·x = 0
+        let mut c: Vec<i128> = obj.iter().map(|v| -v).collect();
+        c.push(1);
+        s.eq0(c, 0);
+        for v in 0..n {
+            if !s.eliminate(v) {
+                return Err(());
+            }
+            if s.rows.iter().any(|r| r.is_trivial() && r.constant < 0) {
+                return Ok(None);
+            }
+        }
+        // Remaining rows involve only z: a*z + k >= 0.
+        let mut lo: Option<i64> = None;
+        let mut hi: Option<i64> = None;
+        for r in &s.rows {
+            let a = r.coeffs[n];
+            let k = r.constant;
+            match a.signum() {
+                1 => {
+                    // z >= ceil(-k / a)
+                    let bound = div_ceil_i128(-k, a);
+                    lo = Some(lo.map_or(bound, |x: i64| x.max(bound)));
+                }
+                -1 => {
+                    // z <= floor(k / -a)
+                    let bound = div_floor_i128(k, -a);
+                    hi = Some(hi.map_or(bound, |x: i64| x.min(bound)));
+                }
+                _ => {
+                    if k < 0 {
+                        return Ok(None); // infeasible
+                    }
+                }
+            }
+        }
+        if let (Some(l), Some(h)) = (lo, hi) {
+            if l > h {
+                return Ok(None);
+            }
+        }
+        Ok(Some((lo, hi)))
+    }
+}
+
+fn div_floor_i128(a: i128, b: i128) -> i64 {
+    debug_assert!(b > 0);
+    a.div_euclid(b) as i64
+}
+
+fn div_ceil_i128(a: i128, b: i128) -> i64 {
+    debug_assert!(b > 0);
+    (-((-a).div_euclid(b))) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasibility_simple_box() {
+        // 0 <= x <= 5, 0 <= y <= 5, x + y >= 8 : feasible
+        let mut s = System::new(2);
+        s.ge0(vec![1, 0], 0);
+        s.ge0(vec![-1, 0], 5);
+        s.ge0(vec![0, 1], 0);
+        s.ge0(vec![0, -1], 5);
+        s.ge0(vec![1, 1], -8);
+        assert_eq!(s.feasible(), Some(true));
+        // x + y >= 11: infeasible
+        let mut s2 = System::new(2);
+        s2.ge0(vec![1, 0], 0);
+        s2.ge0(vec![-1, 0], 5);
+        s2.ge0(vec![0, 1], 0);
+        s2.ge0(vec![0, -1], 5);
+        s2.ge0(vec![1, 1], -11);
+        assert_eq!(s2.feasible(), Some(false));
+    }
+
+    #[test]
+    fn coupled_equalities() {
+        // x = y, x <= 3, y >= 5 : infeasible
+        let mut s = System::new(2);
+        s.eq0(vec![1, -1], 0);
+        s.ge0(vec![-1, 0], 3);
+        s.ge0(vec![0, 1], -5);
+        assert_eq!(s.feasible(), Some(false));
+    }
+
+    #[test]
+    fn project_simple() {
+        // 1 <= x <= 4, 2 <= y <= 7 : bounds of y - x = [-2, 6]
+        let mut s = System::new(2);
+        s.ge0(vec![1, 0], -1);
+        s.ge0(vec![-1, 0], 4);
+        s.ge0(vec![0, 1], -2);
+        s.ge0(vec![0, -1], 7);
+        let b = s.project_bounds(&[-1, 1]).unwrap().unwrap();
+        assert_eq!(b, (Some(-2), Some(6)));
+    }
+
+    #[test]
+    fn project_coupled() {
+        // LU-style coupling: 0 <= k < i <= 9, delta = i - k in [1, 9]
+        let mut s = System::new(2);
+        s.ge0(vec![1, 0], 0); // k >= 0
+        s.ge0(vec![-1, 1], -1); // i - k >= 1
+        s.ge0(vec![0, -1], 9); // i <= 9
+        let b = s.project_bounds(&[-1, 1]).unwrap().unwrap();
+        assert_eq!(b, (Some(1), Some(9)));
+    }
+
+    #[test]
+    fn project_unbounded() {
+        // x >= 0 only: x in [0, +inf)
+        let mut s = System::new(1);
+        s.ge0(vec![1], 0);
+        let b = s.project_bounds(&[1]).unwrap().unwrap();
+        assert_eq!(b, (Some(0), None));
+    }
+
+    #[test]
+    fn project_infeasible() {
+        let mut s = System::new(1);
+        s.ge0(vec![1], 0);
+        s.ge0(vec![-1], -1); // x <= -1
+        assert_eq!(s.project_bounds(&[1]).unwrap(), None);
+        assert_eq!(s.feasible(), Some(false));
+    }
+
+    #[test]
+    fn rational_vs_integer_gap_is_conservative() {
+        // 2x = 1 has a rational solution but no integer one; FM reports
+        // feasible — conservative over-approximation, which is the safe
+        // direction for dependence testing.
+        let mut s = System::new(1);
+        s.eq0(vec![2], -1);
+        assert_eq!(s.feasible(), Some(true));
+    }
+}

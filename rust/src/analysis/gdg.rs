@@ -1,0 +1,188 @@
+//! The generalized dependence graph (GDG, §4.1): "the multigraph of
+//! statement nodes and dependence edges", plus Tarjan SCC used by the
+//! scheduler's edge-cutting step (Fig 3, steps 3–5).
+
+use super::dependence::DepEdge;
+use crate::ir::StmtId;
+
+#[derive(Debug, Clone)]
+pub struct Gdg {
+    pub n_stmts: usize,
+    pub edges: Vec<DepEdge>,
+}
+
+impl Gdg {
+    pub fn new(n_stmts: usize, edges: Vec<DepEdge>) -> Self {
+        Gdg { n_stmts, edges }
+    }
+
+    /// Strongly connected components over a subset of edges (indices into
+    /// `self.edges`), returned in reverse topological order of the
+    /// condensation (Tarjan's property), then reversed so callers get
+    /// topological (sources first) order.
+    pub fn sccs(&self, edge_idx: &[usize]) -> Vec<Vec<StmtId>> {
+        let mut adj = vec![Vec::new(); self.n_stmts];
+        for &ei in edge_idx {
+            let e = &self.edges[ei];
+            adj[e.src].push(e.dst);
+        }
+        let mut state = TarjanState {
+            adj: &adj,
+            index: vec![usize::MAX; self.n_stmts],
+            low: vec![0; self.n_stmts],
+            on_stack: vec![false; self.n_stmts],
+            stack: Vec::new(),
+            next: 0,
+            out: Vec::new(),
+        };
+        for v in 0..self.n_stmts {
+            if state.index[v] == usize::MAX {
+                state.strongconnect(v);
+            }
+        }
+        let mut out = state.out;
+        out.reverse();
+        out
+    }
+
+    /// Indices of edges whose endpoints are in different SCCs of the given
+    /// edge subset — the candidates for Fig 3's "cut dependences between
+    /// SCCs" step.
+    pub fn inter_scc_edges(&self, edge_idx: &[usize]) -> Vec<usize> {
+        let sccs = self.sccs(edge_idx);
+        let mut comp = vec![usize::MAX; self.n_stmts];
+        for (ci, c) in sccs.iter().enumerate() {
+            for &v in c {
+                comp[v] = ci;
+            }
+        }
+        edge_idx
+            .iter()
+            .copied()
+            .filter(|&ei| comp[self.edges[ei].src] != comp[self.edges[ei].dst])
+            .collect()
+    }
+}
+
+struct TarjanState<'a> {
+    adj: &'a [Vec<StmtId>],
+    index: Vec<usize>,
+    low: Vec<usize>,
+    on_stack: Vec<bool>,
+    stack: Vec<StmtId>,
+    next: usize,
+    out: Vec<Vec<StmtId>>,
+}
+
+impl TarjanState<'_> {
+    fn strongconnect(&mut self, v: StmtId) {
+        // iterative Tarjan to avoid recursion limits on big graphs
+        let mut call_stack: Vec<(StmtId, usize)> = vec![(v, 0)];
+        while let Some(&mut (u, ref mut ci)) = call_stack.last_mut() {
+            if *ci == 0 {
+                self.index[u] = self.next;
+                self.low[u] = self.next;
+                self.next += 1;
+                self.stack.push(u);
+                self.on_stack[u] = true;
+            }
+            if *ci < self.adj[u].len() {
+                let w = self.adj[u][*ci];
+                *ci += 1;
+                if self.index[w] == usize::MAX {
+                    call_stack.push((w, 0));
+                } else if self.on_stack[w] {
+                    self.low[u] = self.low[u].min(self.index[w]);
+                }
+            } else {
+                if self.low[u] == self.index[u] {
+                    let mut comp = Vec::new();
+                    loop {
+                        let w = self.stack.pop().unwrap();
+                        self.on_stack[w] = false;
+                        comp.push(w);
+                        if w == u {
+                            break;
+                        }
+                    }
+                    comp.sort_unstable();
+                    self.out.push(comp);
+                }
+                call_stack.pop();
+                if let Some(&mut (parent, _)) = call_stack.last_mut() {
+                    self.low[parent] = self.low[parent].min(self.low[u]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::dependence::{DepEdge, DepKind, DistBound};
+
+    fn edge(src: usize, dst: usize) -> DepEdge {
+        DepEdge {
+            src,
+            dst,
+            kind: DepKind::Flow,
+            array: 0,
+            level: 0,
+            dist: vec![DistBound::exact(1)],
+        }
+    }
+
+    #[test]
+    fn scc_cycle_and_chain() {
+        // 0 <-> 1 cycle, 1 -> 2, 2 -> 3
+        let edges = vec![edge(0, 1), edge(1, 0), edge(1, 2), edge(2, 3)];
+        let g = Gdg::new(4, edges);
+        let all: Vec<usize> = (0..g.edges.len()).collect();
+        let sccs = g.sccs(&all);
+        assert_eq!(sccs.len(), 3);
+        // topological: {0,1} before {2} before {3}
+        assert_eq!(sccs[0], vec![0, 1]);
+        assert_eq!(sccs[1], vec![2]);
+        assert_eq!(sccs[2], vec![3]);
+        let cut = g.inter_scc_edges(&all);
+        // edges 1->2 and 2->3 are inter-SCC
+        assert_eq!(cut, vec![2, 3]);
+    }
+
+    #[test]
+    fn scc_isolated_nodes() {
+        let g = Gdg::new(3, vec![]);
+        let sccs = g.sccs(&[]);
+        assert_eq!(sccs.len(), 3);
+        for c in sccs {
+            assert_eq!(c.len(), 1);
+        }
+    }
+
+    #[test]
+    fn scc_self_loop() {
+        let g = Gdg::new(2, vec![edge(0, 0), edge(0, 1)]);
+        let all: Vec<usize> = (0..2).collect();
+        let sccs = g.sccs(&all);
+        assert_eq!(sccs.len(), 2);
+        // self-loop edge is intra-SCC, 0->1 is inter
+        let cut = g.inter_scc_edges(&all);
+        assert_eq!(cut, vec![1]);
+    }
+
+    #[test]
+    fn scc_big_cycle_iterative_safe() {
+        // ring of 10_000 nodes — exercises the iterative Tarjan
+        let n = 10_000;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            edges.push(edge(i, (i + 1) % n));
+        }
+        let g = Gdg::new(n, edges);
+        let all: Vec<usize> = (0..n).collect();
+        let sccs = g.sccs(&all);
+        assert_eq!(sccs.len(), 1);
+        assert_eq!(sccs[0].len(), n);
+    }
+}

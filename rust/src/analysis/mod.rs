@@ -1,0 +1,16 @@
+//! Dependence analysis: FM core, instance-wise dependence testing, GDG.
+
+pub mod dependence;
+pub mod fm;
+pub mod gdg;
+
+pub use dependence::{analyze, DepEdge, DepKind, DistBound};
+pub use gdg::Gdg;
+
+use crate::ir::Program;
+
+/// Convenience: analyze a program and build its GDG.
+pub fn build_gdg(prog: &Program) -> Gdg {
+    let edges = analyze(prog);
+    Gdg::new(prog.stmts.len(), edges)
+}

@@ -1,0 +1,175 @@
+//! Benchmark harness support: paper-style table formatting and the
+//! shared simulate-one-cell helpers used by `rust/benches/*`.
+//!
+//! All scaling cells (threads > 2) come from the testbed simulator
+//! (DESIGN.md §5); `cargo bench` regenerates every table and figure of the
+//! paper's evaluation section in the paper's own row format.
+
+use crate::edt::MapOptions;
+use crate::ral::DepMode;
+use crate::sim::{simulate, simulate_omp, CostModel, Machine};
+use crate::workloads::{by_name, Instance, Size};
+
+/// The paper's thread sweep (Tables 1/3/4/5).
+pub const THREADS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// The Fig 2 processor sweep.
+pub const FIG2_PROCS: [usize; 7] = [1, 2, 3, 4, 6, 8, 12];
+
+/// Render a table with a two-column key prefix and one column per thread
+/// count, matching the paper's layout.
+pub struct Table {
+    pub title: String,
+    pub key_headers: Vec<String>,
+    pub col_headers: Vec<String>,
+    pub rows: Vec<(Vec<String>, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, key_headers: &[&str], col_headers: &[String]) -> Self {
+        Table {
+            title: title.to_string(),
+            key_headers: key_headers.iter().map(|s| s.to_string()).collect(),
+            col_headers: col_headers.to_vec(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn threads_cols(title: &str, key_headers: &[&str]) -> Self {
+        let cols: Vec<String> = THREADS.iter().map(|t| format!("{t} th.")).collect();
+        Self::new(title, key_headers, &cols)
+    }
+
+    pub fn row(&mut self, keys: Vec<String>, vals: Vec<f64>) {
+        self.rows.push((keys, vals));
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let mut widths: Vec<usize> = self.key_headers.iter().map(|h| h.len()).collect();
+        for (keys, _) in &self.rows {
+            for (w, k) in widths.iter_mut().zip(keys) {
+                *w = (*w).max(k.len());
+            }
+        }
+        let mut header = String::new();
+        for (h, w) in self.key_headers.iter().zip(&widths) {
+            header.push_str(&format!("| {h:<w$} "));
+        }
+        for c in &self.col_headers {
+            header.push_str(&format!("| {c:>7} "));
+        }
+        header.push('|');
+        println!("{header}");
+        println!("{}", "-".repeat(header.len()));
+        for (keys, vals) in &self.rows {
+            let mut line = String::new();
+            for (k, w) in keys.iter().zip(&widths) {
+                line.push_str(&format!("| {k:<w$} "));
+            }
+            for &v in vals {
+                line.push_str(&format!("| {:>7} ", fmt_val(v)));
+            }
+            line.push('|');
+            println!("{line}");
+        }
+    }
+}
+
+/// 4-significant-digit cell formatting (sub-second sim times stay legible).
+pub fn fmt_val(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else if v.abs() >= 0.001 {
+        format!("{v:.4}")
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+/// Build an instance at benchmark size.
+pub fn instance(name: &str, size: Size) -> Instance {
+    (by_name(name).unwrap_or_else(|| panic!("unknown workload {name}")).build)(size)
+}
+
+/// Simulated Gflop/s for one (workload, mode, threads) cell.
+pub fn sim_gflops(
+    inst: &Instance,
+    opts: &MapOptions,
+    mode: DepMode,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+) -> f64 {
+    let plan = inst.plan_with(opts).expect("plan");
+    simulate(&plan, mode, threads, machine, costs, numa_pinned, inst.total_flops).gflops
+}
+
+/// Simulated Gflop/s for the OpenMP comparator.
+pub fn sim_omp_gflops(
+    inst: &Instance,
+    opts: &MapOptions,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+) -> f64 {
+    let plan = inst.plan_with(opts).expect("plan");
+    let secs = simulate_omp(&plan, threads, machine, costs, numa_pinned);
+    inst.total_flops / secs / 1e9
+}
+
+/// Simulated §5.3 work ratio.
+pub fn sim_work_ratio(
+    inst: &Instance,
+    opts: &MapOptions,
+    mode: DepMode,
+    threads: usize,
+) -> f64 {
+    let plan = inst.plan_with(opts).expect("plan");
+    simulate(
+        &plan,
+        mode,
+        threads,
+        &Machine::default(),
+        &CostModel::default(),
+        true,
+        inst.total_flops,
+    )
+    .work_ratio
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::threads_cols("t", &["Benchmark", "Version"]);
+        t.row(
+            vec!["X".into(), "DEP".into()],
+            THREADS.iter().map(|&x| x as f64).collect(),
+        );
+        t.print();
+    }
+
+    #[test]
+    fn sim_cell_runs() {
+        let inst = instance("JAC-2D-5P", Size::Tiny);
+        let g = sim_gflops(
+            &inst,
+            &inst.map_opts,
+            DepMode::CncDep,
+            4,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+        );
+        assert!(g > 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Code generation support: symbolic FM loop-bound generation (§4.7.2).
+
+pub mod symfm;
+
+pub use symfm::{SymSystem, VarBounds};

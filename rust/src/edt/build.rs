@@ -1,0 +1,714 @@
+//! The mapper: program + GDG → `EdtTree` (Fig 5 + §4.6 + tiling).
+
+use super::{EdtBody, EdtNode, EdtTree, LeafNest, LeafStmt, SyncKind, TagDim};
+use crate::analysis::Gdg;
+use crate::codegen::symfm::{SymSystem, VarBounds};
+use crate::expr::{Expr, Pred, Value};
+use crate::ir::{Program, StmtId};
+use crate::schedule::{schedule_dists, LoopType, SchedOptions, Schedule, SubEdge};
+use anyhow::{bail, Result};
+use std::sync::Arc as Rc;
+
+/// Mapping knobs (experiment variables of Tables 3 and 5).
+#[derive(Debug, Clone)]
+pub struct MapOptions {
+    pub sched: SchedOptions,
+    /// Tile size per schedule dim of each nest; shorter vectors repeat the
+    /// last entry; empty = paper default (innermost 64, others 16).
+    pub tile_sizes: Vec<Value>,
+    /// Number of innermost tile loops kept *inside* the leaf EDT — the
+    /// Table 5 "granularity" knob (granularity = leaf loop count).
+    pub leaf_extra: usize,
+    /// Tag-dim split across hierarchy levels (Table 3 two-level EDTs):
+    /// e.g. `[2]` puts the first 2 tag dims in an outer level and the rest
+    /// in a nested level. Empty = single level.
+    pub level_split: Vec<usize>,
+    /// Enable the §4.6 GCD chain-stride refinement (Fig 9 left). On by
+    /// default; the ablation bench turns it off for comparison.
+    pub gcd_chains: bool,
+}
+
+impl Default for MapOptions {
+    fn default() -> Self {
+        MapOptions {
+            sched: SchedOptions::default(),
+            tile_sizes: Vec::new(),
+            leaf_extra: 0,
+            level_split: Vec::new(),
+            gcd_chains: true,
+        }
+    }
+}
+
+impl MapOptions {
+    /// Paper defaults: "tile sizes … fixed to 64 for the innermost loops
+    /// and 16 for non-innermost loops" (§5).
+    fn tile_size(&self, k: usize, d_sub: usize) -> Value {
+        if self.tile_sizes.is_empty() {
+            if k + 1 == d_sub {
+                64
+            } else {
+                16
+            }
+        } else if k < self.tile_sizes.len() {
+            self.tile_sizes[k]
+        } else {
+            *self.tile_sizes.last().unwrap()
+        }
+    }
+}
+
+struct Ctx<'a> {
+    prog: &'a Program,
+    gdg: &'a Gdg,
+    opts: &'a MapOptions,
+    next_id: usize,
+}
+
+impl Ctx<'_> {
+    fn id(&mut self) -> usize {
+        let i = self.next_id;
+        self.next_id += 1;
+        i
+    }
+}
+
+/// Map a program to its EDT tree.
+pub fn map_program(prog: &Program, gdg: &Gdg, opts: &MapOptions) -> Result<EdtTree> {
+    if prog.stmts.is_empty() {
+        bail!("empty program");
+    }
+    let mut ctx = Ctx {
+        prog,
+        gdg,
+        opts,
+        next_id: 0,
+    };
+    let mut ids: Vec<StmtId> = prog.stmts.iter().map(|s| s.id).collect();
+    ids.sort_by(|&a, &b| prog.stmts[a].beta.cmp(&prog.stmts[b].beta));
+    let root = build_group(&mut ctx, &ids, 0)?;
+    Ok(EdtTree {
+        name: prog.name.clone(),
+        n_nodes: ctx.next_id,
+        root,
+        n_params: prog.params.len(),
+    })
+}
+
+/// True when the statements form a single perfect nest to full depth.
+fn fused_fully(prog: &Program, stmts: &[StmtId]) -> bool {
+    if stmts.len() == 1 {
+        return true;
+    }
+    let d0 = prog.stmts[stmts[0]].depth();
+    stmts.iter().all(|&s| prog.stmts[s].depth() == d0)
+        && stmts.iter().zip(stmts.iter().skip(1)).all(|(&a, &b)| {
+            prog.stmts[a].common_loops(&prog.stmts[b]) == d0
+        })
+}
+
+/// Minimum pairwise common-loop count within a group.
+fn min_common(prog: &Program, stmts: &[StmtId]) -> usize {
+    let mut c = usize::MAX;
+    for (i, &a) in stmts.iter().enumerate() {
+        for &b in &stmts[i + 1..] {
+            c = c.min(prog.stmts[a].common_loops(&prog.stmts[b]));
+        }
+    }
+    c
+}
+
+fn build_group(ctx: &mut Ctx<'_>, stmts: &[StmtId], depth_from: usize) -> Result<EdtNode> {
+    if fused_fully(ctx.prog, stmts) {
+        return build_nest(ctx, stmts, depth_from);
+    }
+    let c = min_common(ctx.prog, stmts);
+    debug_assert!(c >= depth_from, "group shares fewer loops than its nesting depth");
+    // partition at level c by beta[c]
+    let mut groups: Vec<(usize, Vec<StmtId>)> = Vec::new();
+    for &s in stmts {
+        let key = ctx.prog.stmts[s].beta[c];
+        if let Some(g) = groups.iter_mut().find(|(k, _)| *k == key) {
+            g.1.push(s);
+        } else {
+            groups.push((key, vec![s]));
+        }
+    }
+    groups.sort_by_key(|(k, _)| *k);
+    debug_assert!(groups.len() > 1, "partition at maximal common prefix must split");
+
+    let children: Vec<EdtNode> = groups
+        .iter()
+        .map(|(_, g)| build_group(ctx, g, c))
+        .collect::<Result<_>>()?;
+    let inner_body = EdtBody::Siblings(children);
+
+    // wrap the sibling block in one hierarchy level per shared loop
+    // [depth_from, c), innermost first
+    let mut body = inner_body;
+    for dim in (depth_from..c).rev() {
+        let node = common_dim_node(ctx, stmts, dim, body)?;
+        body = EdtBody::Nested(Box::new(node));
+    }
+    match body {
+        EdtBody::Nested(n) => Ok(*n),
+        other => {
+            // no shared loops above the sibling split: synthetic wrapper node
+            Ok(EdtNode {
+                id: ctx.id(),
+                name: format!("{}_sibs@{}", ctx.prog.name, depth_from),
+                iv_base: depth_from,
+                dims: Vec::new(),
+                body: other,
+            })
+        }
+    }
+}
+
+/// A hierarchy level for one shared (imperfectly nested) loop: a single
+/// untiled tag dim; `Chain` when some dependence is carried at this loop
+/// (the §4.6 sequential-loop treatment — the chain plus the async-finish
+/// completion semantics is the hierarchical fan-in/fan-out).
+fn common_dim_node(
+    ctx: &mut Ctx<'_>,
+    stmts: &[StmtId],
+    dim: usize,
+    body: EdtBody,
+) -> Result<EdtNode> {
+    let prog = ctx.prog;
+    // hull bounds across statements (original bound expressions already
+    // reference env positions 0..dim)
+    let lbs: Vec<Rc<Expr>> = stmts
+        .iter()
+        .map(|&s| prog.stmts[s].domain.dims[dim].lb.clone())
+        .collect();
+    let ubs: Vec<Rc<Expr>> = stmts
+        .iter()
+        .map(|&s| prog.stmts[s].domain.dims[dim].ub.clone())
+        .collect();
+    let lb = Expr::min_all(&lbs);
+    let ub = Expr::max_all(&ubs);
+    let carried = ctx.gdg.edges.iter().any(|e| {
+        stmts.contains(&e.src)
+            && stmts.contains(&e.dst)
+            && !e.is_loop_independent()
+            && e.level == dim
+    });
+    let (sync, interior, ty_name) = if carried {
+        let v = Expr::offset(&Expr::iv(dim), -1);
+        let pred = Pred::within(&v, &lb, &ub);
+        (SyncKind::Chain, Some(pred), "seq")
+    } else {
+        (SyncKind::None, None, "doall")
+    };
+    Ok(EdtNode {
+        id: ctx.id(),
+        name: format!("{}_shared_d{}", prog.name, dim),
+        iv_base: dim,
+        dims: vec![TagDim {
+            lb,
+            ub,
+            sync,
+            step: 1,
+            interior,
+            ty_name,
+        }],
+        body,
+    })
+}
+
+/// Sentinel for "no constraint produced a bound" — post-checked so silent
+/// garbage bounds can never escape the mapper.
+const SENTINEL: Value = 999_999_999;
+
+/// Build the tiled EDT level(s) + leaf for a fully fused nest.
+fn build_nest(ctx: &mut Ctx<'_>, stmts: &[StmtId], depth_from: usize) -> Result<EdtNode> {
+    let prog = ctx.prog;
+    let opts = ctx.opts;
+    let d_total = prog.stmts[stmts[0]].depth();
+    let d_sub = d_total - depth_from;
+    if d_sub == 0 {
+        bail!("statement nest with no loops below depth {depth_from}");
+    }
+
+    // --- alive edges, sliced to the sub-dims ---
+    let subs: Vec<SubEdge> = ctx
+        .gdg
+        .edges
+        .iter()
+        .filter(|e| {
+            stmts.contains(&e.src)
+                && stmts.contains(&e.dst)
+                && !e.is_loop_independent()
+                && e.level >= depth_from
+        })
+        .map(|e| SubEdge {
+            level: e.level - depth_from,
+            dist: e.dist[depth_from..].to_vec(),
+        })
+        .collect();
+
+    // --- schedule the sub-nest (Fig 3) ---
+    let sched: Schedule = schedule_dists(d_sub, &subs, &opts.sched);
+
+    // --- tile sizes; non-innermost permutable bands at point granularity
+    //     (multi-band soundness rule, DESIGN.md §2/§8) ---
+    let last_perm_band = sched
+        .bands
+        .iter()
+        .enumerate()
+        .rev()
+        .find(|(_, (s, l))| {
+            (*s..*s + *l).any(|k| matches!(sched.types[k], LoopType::Permutable { .. }))
+        })
+        .map(|(bi, _)| bi);
+    let mut ts = vec![1i64; d_sub];
+    for (bi, (s, l)) in sched.bands.iter().enumerate() {
+        for k in *s..*s + *l {
+            let in_earlier_perm_band = matches!(sched.types[k], LoopType::Permutable { .. })
+                && Some(bi) != last_perm_band;
+            ts[k] = if in_earlier_perm_band {
+                1
+            } else {
+                opts.tile_size(k, d_sub)
+            };
+        }
+    }
+
+    // --- variable layout:
+    //   [0, depth_from)                       ancestor coordinates
+    //   [depth_from, depth_from + d_sub)      tile vars (schedule order)
+    //   [depth_from + d_sub, ... + 2*d_sub)   original sub-dims
+    let n_vars = depth_from + 2 * d_sub;
+    let tile_var = |k: usize| depth_from + k;
+    let sub_var = |j: usize| depth_from + d_sub + j;
+    let orig_pos = |k: usize| {
+        if k < depth_from {
+            k
+        } else {
+            sub_var(k - depth_from)
+        }
+    };
+
+    // --- per-statement FM systems + bounds ---
+    let n_params = prog.params.len();
+    let mut stmt_bounds: Vec<Vec<VarBounds>> = Vec::with_capacity(stmts.len());
+    for &sid in stmts {
+        let st = &prog.stmts[sid];
+        let mut sys = SymSystem::new(n_vars, n_params);
+        for c in &st.constraints {
+            let mut coeffs = vec![0i64; n_vars];
+            for (k, &v) in c.form.iv_coeffs.iter().enumerate() {
+                coeffs[orig_pos(k)] = v;
+            }
+            sys.ge0(coeffs, c.form.param_coeffs.clone(), c.form.constant);
+        }
+        for k in 0..d_sub {
+            let h = &sched.hyperplanes[k];
+            // h·i_sub - ts*u_k >= 0
+            let mut c1 = vec![0i64; n_vars];
+            for (j, &hv) in h.iter().enumerate() {
+                c1[sub_var(j)] = hv;
+            }
+            c1[tile_var(k)] = -ts[k];
+            sys.ge0(c1.clone(), vec![0; n_params], 0);
+            // ts*u_k + ts - 1 - h·i_sub >= 0
+            let c2: Vec<i64> = c1.iter().map(|&v| -v).collect();
+            sys.ge0(c2, vec![0; n_params], ts[k] - 1);
+        }
+        let fallback = vec![(SENTINEL, SENTINEL); n_vars];
+        let bounds = sys.generate_bounds(&fallback);
+        // post-check: no sentinel escaped into the vars we use
+        for b in bounds.iter().skip(depth_from) {
+            for e in [&b.lb, &b.ub] {
+                if let Expr::Const(c) = &**e {
+                    if *c == SENTINEL {
+                        bail!(
+                            "under-constrained nest in '{}' (stmt {}): missing bound",
+                            prog.name,
+                            st.name
+                        );
+                    }
+                }
+            }
+        }
+        stmt_bounds.push(bounds);
+    }
+
+    // --- hull bounds per variable (min of lbs / max of ubs) ---
+    let hull = |v: usize| -> VarBounds {
+        let lbs: Vec<Rc<Expr>> = stmt_bounds.iter().map(|b| b[v].lb.clone()).collect();
+        let ubs: Vec<Rc<Expr>> = stmt_bounds.iter().map(|b| b[v].ub.clone()).collect();
+        VarBounds {
+            lb: Expr::min_all(&lbs),
+            ub: Expr::max_all(&ubs),
+        }
+    };
+
+    // --- split tile vars into tag dims and leaf-resident tile loops ---
+    let leaf_extra = opts.leaf_extra.min(d_sub);
+    let n_tags = d_sub - leaf_extra;
+
+    // --- leaf ---
+    let leaf_vars: Vec<usize> = (n_tags..d_sub)
+        .map(tile_var)
+        .chain((0..d_sub).map(sub_var))
+        .collect();
+    let inter_stmt_edge = stmts.len() > 1 && !subs.is_empty();
+    let leaf = LeafNest {
+        loops: leaf_vars.iter().map(|&v| hull(v)).collect(),
+        stmts: stmts
+            .iter()
+            .enumerate()
+            .map(|(si, &sid)| {
+                let st = &prog.stmts[sid];
+                LeafStmt {
+                    stmt: sid,
+                    bounds: leaf_vars
+                        .iter()
+                        .map(|&v| stmt_bounds[si][v].clone())
+                        .collect(),
+                    orig_pos: (0..d_total).map(orig_pos).collect(),
+                    kernel: st.kernel,
+                    flops_per_point: st.flops_per_point,
+                    bytes_per_point: st.bytes_per_point,
+                }
+            })
+            .collect(),
+        interleave: inter_stmt_edge,
+        n_leaf_vars: leaf_vars.len(),
+    };
+
+    // --- tag dims with sync + interior predicates (Fig 8) ---
+    // §4.6 flexible-semantics refinement (Fig 9 left): when every alive
+    // dependence has an exact, constant transformed distance along a chain
+    // dim and the tile size is 1 (point-granularity chains), the chain
+    // stride is the GCD of those distances — g independent chains run
+    // concurrently instead of one. With tiles > 1 the distances collapse
+    // to tile distance ≤ 1 and the conservative stride stays 1.
+    let chain_step = |k: usize| -> i64 {
+        if !opts.gcd_chains || ts[k] != 1 {
+            return 1;
+        }
+        let mut g: i64 = 0;
+        for e in &subs {
+            let d = crate::schedule::dot_bounds(&sched.hyperplanes[k], &e.dist);
+            match d.as_exact() {
+                Some(0) => {}
+                Some(v) if v > 0 => {
+                    let (mut a, mut b) = (g, v);
+                    while b != 0 {
+                        let t = a % b;
+                        a = b;
+                        b = t;
+                    }
+                    g = a;
+                }
+                _ => return 1, // non-constant distance: conservative
+            }
+        }
+        g.max(1)
+    };
+    let tag_dims: Vec<TagDim> = (0..n_tags)
+        .map(|k| {
+            let b = hull(tile_var(k));
+            let (sync, ty_name) = match sched.types[k] {
+                LoopType::Parallel => (SyncKind::None, "doall"),
+                LoopType::Permutable { .. } => (SyncKind::Chain, "perm"),
+                LoopType::Sequential => (SyncKind::Chain, "seq"),
+            };
+            let step = if sync == SyncKind::Chain { chain_step(k) } else { 1 };
+            TagDim {
+                lb: b.lb,
+                ub: b.ub,
+                sync,
+                step,
+                interior: None, // filled per level below
+                ty_name,
+            }
+        })
+        .collect();
+
+    // --- level structure (Table 3 split) ---
+    let mut splits: Vec<usize> = Vec::new();
+    let mut used = 0usize;
+    for &s in &opts.level_split {
+        if used + s < n_tags {
+            splits.push(s);
+            used += s;
+        }
+    }
+    splits.push(n_tags - used);
+
+    // build innermost level first
+    let mut level_ranges: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    for s in &splits {
+        level_ranges.push((start, start + s));
+        start += s;
+    }
+
+    let mut body = EdtBody::Leaf(leaf);
+    for (li, &(ls, le)) in level_ranges.iter().enumerate().rev() {
+        let iv_base = depth_from + ls;
+        let mut dims: Vec<TagDim> = tag_dims[ls..le].to_vec();
+        // interior predicates over this level's dims only (the antecedent
+        // of an outer-level chain is a whole sibling subtree)
+        for m in 0..dims.len() {
+            if dims[m].sync != SyncKind::Chain {
+                continue;
+            }
+            let p_m = iv_base + m;
+            let shifted = Expr::offset(&Expr::iv(p_m), -dims[m].step);
+            let mut conj: Vec<Pred> = Vec::new();
+            for (j, dj) in dims.iter().enumerate().skip(m) {
+                let (lb, ub) = if j == m {
+                    (dj.lb.clone(), dj.ub.clone())
+                } else {
+                    (
+                        dj.lb.subst_iv(p_m, &shifted),
+                        dj.ub.subst_iv(p_m, &shifted),
+                    )
+                };
+                let val = if j == m {
+                    shifted.clone()
+                } else {
+                    Expr::iv(iv_base + j)
+                };
+                conj.push(Pred::within(&val, &lb, &ub));
+            }
+            dims[m].interior = Some(Pred::And(conj));
+        }
+        let node = EdtNode {
+            id: ctx.id(),
+            name: format!("{}_nest@{}_L{}", prog.name, depth_from, li),
+            iv_base,
+            dims,
+            body,
+        };
+        body = EdtBody::Nested(Box::new(node));
+    }
+    match body {
+        EdtBody::Nested(n) => Ok(*n),
+        _ => unreachable!("at least one level is always built"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::build_gdg;
+    use crate::expr::Affine;
+    use crate::ir::{Access, ProgramBuilder, StmtSpec};
+
+    /// Time-expanded 1-D Jacobi: A[t+1][i] = f(A[t][i-1..i+1]).
+    fn jac1d(t_val: i64, n_val: i64) -> Program {
+        let mut pb = ProgramBuilder::new("jac1d");
+        let t = pb.param("T", t_val);
+        let n = pb.param("N", n_val);
+        let a = pb.array("A", 2);
+        let s = |iv: usize, c: i64| Affine::var_plus(2, 2, iv, c);
+        let mut w = Affine::var_plus(2, 2, 0, 1); // A[t+1][..]
+        w.iv_coeffs[0] = 1;
+        pb.stmt(
+            StmtSpec::new("S")
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(t), -1))
+                .dim(Expr::constant(1), Expr::sub(&Expr::param(n), &Expr::constant(2)))
+                .write(Access::new(a, vec![w, s(1, 0)]))
+                .read(Access::new(a, vec![s(0, 0), s(1, -1)]))
+                .read(Access::new(a, vec![s(0, 0), s(1, 0)]))
+                .read(Access::new(a, vec![s(0, 0), s(1, 1)]))
+                .flops(3.0)
+                .bytes(16.0),
+        );
+        pb.build()
+    }
+
+    #[test]
+    fn jacobi_maps_to_skewed_chain_tags() {
+        let prog = jac1d(8, 32);
+        let gdg = build_gdg(&prog);
+        assert!(!gdg.edges.is_empty());
+        let opts = MapOptions {
+            tile_sizes: vec![4, 8],
+            ..Default::default()
+        };
+        let tree = map_program(&prog, &gdg, &opts).unwrap();
+        // single level, two tag dims, both chain-synced (skewed band)
+        let root = &tree.root;
+        assert_eq!(root.dims.len(), 2);
+        assert!(root.dims.iter().all(|d| d.sync == SyncKind::Chain));
+        assert!(root.dims.iter().all(|d| d.interior.is_some()));
+        assert!(matches!(root.body, EdtBody::Leaf(_)));
+    }
+
+    /// Leaf enumeration must cover the original iteration space exactly
+    /// once across all tags.
+    #[test]
+    fn tags_partition_iteration_space() {
+        let prog = jac1d(6, 20);
+        let gdg = build_gdg(&prog);
+        let opts = MapOptions {
+            tile_sizes: vec![4, 8],
+            ..Default::default()
+        };
+        let tree = map_program(&prog, &gdg, &opts).unwrap();
+        let params = vec![6, 20];
+        let root = &tree.root;
+        let EdtBody::Leaf(leaf) = &root.body else {
+            panic!("expected leaf")
+        };
+        let mut seen: Vec<Vec<i64>> = Vec::new();
+        root.for_each_tag(&[], &params, &mut |coords| {
+            // enumerate leaf vars under this tag
+            let mut cur = coords.to_vec();
+            let base = root.iv_end();
+            cur.resize(base + leaf.n_leaf_vars, 0);
+            fn rec(
+                leaf: &LeafNest,
+                base: usize,
+                v: usize,
+                cur: &mut Vec<i64>,
+                params: &[i64],
+                seen: &mut Vec<Vec<i64>>,
+            ) {
+                if v == leaf.n_leaf_vars {
+                    // orig coords are the last 2 vars
+                    let st = &leaf.stmts[0];
+                    let pt: Vec<i64> = st.orig_pos.iter().map(|&p| cur[p]).collect();
+                    seen.push(pt);
+                    return;
+                }
+                let env = crate::expr::Env::new(&cur[..base + v], params);
+                let lo = leaf.loops[v].lb.eval(env);
+                let hi = leaf.loops[v].ub.eval(env);
+                for x in lo..=hi {
+                    cur[base + v] = x;
+                    rec(leaf, base, v + 1, cur, params, seen);
+                }
+            }
+            rec(leaf, base, 0, &mut cur, &params, &mut seen);
+        });
+        // compare against the domain
+        let mut expect: Vec<Vec<i64>> = Vec::new();
+        prog.stmts[0]
+            .domain
+            .for_each_point(&params, &mut |p| expect.push(p.to_vec()));
+        seen.sort();
+        let before_dedup = seen.len();
+        seen.dedup();
+        assert_eq!(before_dedup, seen.len(), "duplicate iterations across tiles");
+        expect.sort();
+        assert_eq!(seen, expect, "tiles must partition the iteration space");
+    }
+
+    #[test]
+    fn interior_predicate_matches_bruteforce() {
+        let prog = jac1d(6, 20);
+        let gdg = build_gdg(&prog);
+        let opts = MapOptions {
+            tile_sizes: vec![4, 8],
+            ..Default::default()
+        };
+        let tree = map_program(&prog, &gdg, &opts).unwrap();
+        let params = vec![6, 20];
+        let root = &tree.root;
+        // collect the spawned tag set
+        let mut tags: Vec<Vec<i64>> = Vec::new();
+        root.for_each_tag(&[], &params, &mut |c| tags.push(c.to_vec()));
+        // for every tag and chain dim: antecedent() ⇔ (tag - e_d) ∈ spawned set
+        for t in &tags {
+            for d in 0..root.dims.len() {
+                let mut ant = t.clone();
+                ant[root.iv_base + d] -= 1;
+                let exists = tags.contains(&ant);
+                let says = root.antecedent(t, d, &params).is_some();
+                assert_eq!(
+                    exists, says,
+                    "interior predicate mismatch at tag {t:?} dim {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_extra_moves_tile_loop_into_leaf() {
+        let prog = jac1d(8, 32);
+        let gdg = build_gdg(&prog);
+        let opts = MapOptions {
+            tile_sizes: vec![4, 8],
+            leaf_extra: 1,
+            ..Default::default()
+        };
+        let tree = map_program(&prog, &gdg, &opts).unwrap();
+        assert_eq!(tree.root.dims.len(), 1);
+        let EdtBody::Leaf(leaf) = &tree.root.body else {
+            panic!()
+        };
+        assert_eq!(leaf.n_leaf_vars, 3); // inner tile var + 2 orig dims
+    }
+
+    #[test]
+    fn level_split_produces_nested_levels() {
+        let prog = jac1d(8, 32);
+        let gdg = build_gdg(&prog);
+        let opts = MapOptions {
+            tile_sizes: vec![4, 8],
+            level_split: vec![1],
+            ..Default::default()
+        };
+        let tree = map_program(&prog, &gdg, &opts).unwrap();
+        assert_eq!(tree.root.dims.len(), 1);
+        let EdtBody::Nested(inner) = &tree.root.body else {
+            panic!("expected nested level")
+        };
+        assert_eq!(inner.dims.len(), 1);
+        assert!(matches!(inner.body, EdtBody::Leaf(_)));
+        assert_eq!(inner.iv_base, 1);
+    }
+
+    /// Imperfect nest: t loop containing two sibling i-loops (compute then
+    /// copy) — the JAC-*-COPY / FDTD shape.
+    #[test]
+    fn sibling_phases_under_shared_t() {
+        let mut pb = ProgramBuilder::new("copy2");
+        let t = pb.param("T", 4);
+        let n = pb.param("N", 16);
+        let a = pb.array("A", 1);
+        let b = pb.array("B", 1);
+        let s = |iv: usize, c: i64| Affine::var_plus(2, 2, iv, c);
+        pb.stmt(
+            StmtSpec::new("compute")
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(t), -1))
+                .dim(Expr::constant(1), Expr::sub(&Expr::param(n), &Expr::constant(2)))
+                .write(Access::new(b, vec![s(1, 0)]))
+                .read(Access::new(a, vec![s(1, -1)]))
+                .read(Access::new(a, vec![s(1, 1)]))
+                .beta(vec![0, 0, 0])
+                .flops(2.0),
+        );
+        pb.stmt(
+            StmtSpec::new("copy")
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(t), -1))
+                .dim(Expr::constant(1), Expr::sub(&Expr::param(n), &Expr::constant(2)))
+                .write(Access::new(a, vec![s(1, 0)]))
+                .read(Access::new(b, vec![s(1, 0)]))
+                .beta(vec![0, 1, 0])
+                .flops(0.0),
+        );
+        let prog = pb.build();
+        let gdg = build_gdg(&prog);
+        let tree = map_program(&prog, &gdg, &MapOptions::default()).unwrap();
+        // root: shared t chain; body: siblings [compute-nest, copy-nest]
+        assert_eq!(tree.root.dims.len(), 1);
+        assert_eq!(tree.root.dims[0].sync, SyncKind::Chain);
+        let EdtBody::Siblings(sibs) = &tree.root.body else {
+            panic!("expected siblings, got {:?}", tree.dump())
+        };
+        assert_eq!(sibs.len(), 2);
+        for s in sibs {
+            assert_eq!(s.iv_base, 1);
+            assert!(matches!(s.body, EdtBody::Leaf(_)));
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! EDT formation and the mapped-program representation (§4.5, §4.6).
+//!
+//! `build::map_program` turns an analyzed program into an `EdtTree`: a
+//! hierarchy of compile-time EDTs ("one compile-time EDT per marked
+//! non-root node", Fig 5), each carrying
+//!
+//! - its *tag dimensions* (the `[start, stop]` coordinate window of §4.5)
+//!   with runtime-evaluable bound expressions,
+//! - per-dimension *synchronization kind* derived from loop types (§4.6):
+//!   `None` for parallel loops, `Chain` (conservative distance-1
+//!   point-to-point, Fig 8) for permutable/sequential loops,
+//! - the Fig 8 *interior predicates* deciding at runtime whether the
+//!   antecedent task along a dimension exists,
+//! - and either nested child EDTs (hierarchical async-finish, §4.8),
+//!   sibling groups (imperfectly nested phases, serialized by finish
+//!   barriers), or leaf work (intra-tile loop nest in original
+//!   coordinates, FM-generated bounds).
+//!
+//! The runtimes (`crate::rt`) interpret this tree: each node instance
+//! expands into STARTUP / WORKER / SHUTDOWN EDTs per Fig 6.
+
+pub mod build;
+pub mod stats;
+
+pub use build::{map_program, MapOptions};
+
+use crate::codegen::symfm::VarBounds;
+use crate::expr::{Env, Expr, Pred, Value};
+use crate::ir::StmtId;
+use std::sync::Arc as Rc;
+
+/// How a tag dimension synchronizes with its neighbors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncKind {
+    /// Parallel loop: no runtime dependence (§4.6).
+    None,
+    /// Permutable/sequential loop: wait for tag `u - e_k` when the interior
+    /// predicate holds (conservative point-to-point of distance 1).
+    Chain,
+}
+
+/// One tag dimension of an EDT node.
+#[derive(Debug, Clone)]
+pub struct TagDim {
+    /// Bounds over `Iv` = [ancestor coordinates…, this node's earlier dims…].
+    pub lb: Rc<Expr>,
+    pub ub: Rc<Expr>,
+    pub sync: SyncKind,
+    /// Chain stride: the §4.6 "GCD of constant dependence distances"
+    /// refinement (Fig 9 left). A step of g means the antecedent is
+    /// `u − g`, splitting the dimension into g independent chains.
+    pub step: Value,
+    /// For `Chain`: predicate over the *full* coordinate vector (ancestors +
+    /// this node's dims) that the antecedent along this dim exists —
+    /// the Figure 8 `interior_k` computation.
+    pub interior: Option<Pred>,
+    /// Original loop-type string for diagnostics ("doall", "perm(b0)", "seq").
+    pub ty_name: &'static str,
+}
+
+/// Leaf work: the intra-tile loop nest, in original iteration coordinates.
+#[derive(Debug, Clone)]
+pub struct LeafNest {
+    /// Hull bounds for the leaf variables (inner tile vars then original
+    /// sub-dims); `Iv` indices are absolute env positions.
+    pub loops: Vec<VarBounds>,
+    /// Statements in textual (beta) order.
+    pub stmts: Vec<LeafStmt>,
+    /// True when >1 statement shares carried dependences at leaf level and
+    /// the innermost loop must interleave statements point by point.
+    pub interleave: bool,
+    /// Number of leaf variables (env positions `iv_base + n_dims ..`).
+    pub n_leaf_vars: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LeafStmt {
+    pub stmt: StmtId,
+    /// This statement's own per-leaf-var bounds (guards / row spans).
+    pub bounds: Vec<VarBounds>,
+    /// Map original dim index -> absolute env position.
+    pub orig_pos: Vec<usize>,
+    pub kernel: usize,
+    pub flops_per_point: f64,
+    /// Modeled memory traffic per point (roofline input for `sim`).
+    pub bytes_per_point: f64,
+}
+
+/// Body of an EDT node.
+#[derive(Debug, Clone)]
+pub enum EdtBody {
+    /// Sibling groups executed in textual order with an async-finish
+    /// barrier between consecutive groups (imperfect-nest handling, §4.5).
+    Siblings(Vec<EdtNode>),
+    /// A single nested hierarchy level (multi-level EDTs, Table 3).
+    Nested(Box<EdtNode>),
+    /// Leaf work.
+    Leaf(LeafNest),
+}
+
+/// A compile-time EDT.
+#[derive(Debug, Clone)]
+pub struct EdtNode {
+    pub id: usize,
+    pub name: String,
+    /// Number of coordinates inherited from ancestors ("coordinates
+    /// `[0, start)` are received from the parent EDT", §4.5).
+    pub iv_base: usize,
+    pub dims: Vec<TagDim>,
+    pub body: EdtBody,
+}
+
+/// A mapped program: the tree of compile-time EDTs.
+#[derive(Debug, Clone)]
+pub struct EdtTree {
+    pub name: String,
+    pub root: EdtNode,
+    pub n_nodes: usize,
+    pub n_params: usize,
+}
+
+impl EdtNode {
+    /// Total coordinates after this node's dims.
+    pub fn iv_end(&self) -> usize {
+        self.iv_base + self.dims.len()
+    }
+
+    /// Evaluate this node's tag-space bounds given ancestor coordinates.
+    /// Returns per-dim `(lb, ub)` where later dims' bounds are closures of
+    /// earlier ones — callers enumerate nested-loop style via
+    /// `for_each_tag`.
+    pub fn dim_bounds(&self, coords: &[Value], dim: usize, params: &[Value]) -> (Value, Value) {
+        debug_assert!(coords.len() >= self.iv_base + dim);
+        let env = Env::new(&coords[..self.iv_base + dim], params);
+        (self.dims[dim].lb.eval(env), self.dims[dim].ub.eval(env))
+    }
+
+    /// Enumerate all tag tuples of this node under the given ancestor
+    /// prefix, invoking `f` with the full coordinate vector
+    /// (prefix + this node's dims).
+    pub fn for_each_tag(&self, prefix: &[Value], params: &[Value], f: &mut dyn FnMut(&[Value])) {
+        debug_assert_eq!(prefix.len(), self.iv_base);
+        let mut coords = prefix.to_vec();
+        coords.resize(self.iv_base + self.dims.len(), 0);
+        self.rec_tags(0, &mut coords, params, f);
+    }
+
+    fn rec_tags(
+        &self,
+        d: usize,
+        coords: &mut Vec<Value>,
+        params: &[Value],
+        f: &mut dyn FnMut(&[Value]),
+    ) {
+        if d == self.dims.len() {
+            f(coords);
+            return;
+        }
+        let (lo, hi) = self.dim_bounds(coords, d, params);
+        for v in lo..=hi {
+            coords[self.iv_base + d] = v;
+            self.rec_tags(d + 1, coords, params, f);
+        }
+    }
+
+    /// Count tag tuples under a prefix.
+    pub fn count_tags(&self, prefix: &[Value], params: &[Value]) -> u64 {
+        let mut n = 0;
+        self.for_each_tag(prefix, params, &mut |_| n += 1);
+        n
+    }
+
+    /// The antecedent coordinates along chain dim `d` for a concrete tag,
+    /// or `None` when the interior predicate says there is none (boundary
+    /// task).
+    pub fn antecedent(
+        &self,
+        coords: &[Value],
+        d: usize,
+        params: &[Value],
+    ) -> Option<Vec<Value>> {
+        let dim = &self.dims[d];
+        if dim.sync != SyncKind::Chain {
+            return None;
+        }
+        let pred = dim.interior.as_ref()?;
+        let env = Env::new(coords, params);
+        if pred.eval(env) {
+            let mut a = coords[..self.iv_end()].to_vec();
+            a[self.iv_base + d] -= dim.step;
+            Some(a)
+        } else {
+            None
+        }
+    }
+
+    /// All antecedents of a tag (one per chain dim whose interior predicate
+    /// holds).
+    pub fn antecedents(&self, coords: &[Value], params: &[Value]) -> Vec<(usize, Vec<Value>)> {
+        (0..self.dims.len())
+            .filter_map(|d| self.antecedent(coords, d, params).map(|a| (d, a)))
+            .collect()
+    }
+
+    /// Successor tags along chain dims: tags that may be waiting on this
+    /// one (used by prescriber/depends-mode runtimes to know whom to poke).
+    pub fn successors(&self, coords: &[Value], params: &[Value]) -> Vec<Vec<Value>> {
+        let mut out = Vec::new();
+        for d in 0..self.dims.len() {
+            if self.dims[d].sync != SyncKind::Chain {
+                continue;
+            }
+            let mut s = coords[..self.iv_end()].to_vec();
+            s[self.iv_base + d] += self.dims[d].step;
+            // successor exists iff *its* interior predicate points back at us
+            if let Some(p) = &self.dims[d].interior {
+                let env = Env::new(&s, params);
+                // also successor must be within the spawned tag space
+                if self.tag_in_space(&s, params) && p.eval(env) {
+                    out.push(s);
+                }
+            }
+        }
+        out
+    }
+
+    /// Whether a full coordinate vector lies in this node's spawned tag
+    /// space (bounds checked dim by dim, consistent with `for_each_tag`).
+    pub fn tag_in_space(&self, coords: &[Value], params: &[Value]) -> bool {
+        for d in 0..self.dims.len() {
+            let (lo, hi) = self.dim_bounds(coords, d, params);
+            let v = coords[self.iv_base + d];
+            if v < lo || v > hi {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl EdtTree {
+    /// Visit every node (pre-order).
+    pub fn visit(&self, f: &mut dyn FnMut(&EdtNode)) {
+        fn rec(n: &EdtNode, f: &mut dyn FnMut(&EdtNode)) {
+            f(n);
+            match &n.body {
+                EdtBody::Siblings(cs) => cs.iter().for_each(|c| rec(c, f)),
+                EdtBody::Nested(c) => rec(c, f),
+                EdtBody::Leaf(_) => {}
+            }
+        }
+        rec(&self.root, f);
+    }
+
+    /// Human-readable dump (`tale3 explain`).
+    pub fn dump(&self) -> String {
+        let mut s = format!("EdtTree '{}' ({} nodes)\n", self.name, self.n_nodes);
+        fn rec(n: &EdtNode, ind: usize, s: &mut String) {
+            let pad = "  ".repeat(ind);
+            s.push_str(&format!(
+                "{pad}EDT {} '{}' iv_base={} dims={}\n",
+                n.id,
+                n.name,
+                n.iv_base,
+                n.dims.len()
+            ));
+            for (k, d) in n.dims.iter().enumerate() {
+                s.push_str(&format!(
+                    "{pad}  u{} [{}]: {} <= u <= {}  sync={:?}\n",
+                    n.iv_base + k,
+                    d.ty_name,
+                    d.lb,
+                    d.ub,
+                    d.sync
+                ));
+                if let Some(p) = &d.interior {
+                    s.push_str(&format!("{pad}    interior: {p}\n"));
+                }
+            }
+            match &n.body {
+                EdtBody::Siblings(cs) => {
+                    s.push_str(&format!("{pad}  siblings x{}:\n", cs.len()));
+                    cs.iter().for_each(|c| rec(c, ind + 2, s));
+                }
+                EdtBody::Nested(c) => {
+                    s.push_str(&format!("{pad}  nested:\n"));
+                    rec(c, ind + 2, s);
+                }
+                EdtBody::Leaf(l) => {
+                    s.push_str(&format!(
+                        "{pad}  leaf: {} vars, {} stmts, interleave={}\n",
+                        l.n_leaf_vars,
+                        l.stmts.len(),
+                        l.interleave
+                    ));
+                    for (k, b) in l.loops.iter().enumerate() {
+                        s.push_str(&format!(
+                            "{pad}    x{}: {} .. {}\n",
+                            k, b.lb, b.ub
+                        ));
+                    }
+                }
+            }
+        }
+        rec(&self.root, 0, &mut s);
+        s
+    }
+}

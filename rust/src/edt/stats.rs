@@ -1,0 +1,131 @@
+//! Static characterization of a mapped program (Table 2): EDT counts,
+//! floating-point work per EDT, iteration sizes.
+
+use super::{EdtBody, EdtNode, EdtTree};
+use crate::expr::{Env, Value};
+
+#[derive(Debug, Clone, Default)]
+pub struct Characteristics {
+    /// Number of leaf WORKER EDT instances.
+    pub leaf_edts: u64,
+    /// Total compile-time EDT nodes in the tree.
+    pub tree_nodes: usize,
+    /// Maximum floating-point operations in a single leaf EDT.
+    pub max_flops_per_edt: f64,
+    /// Total floating-point operations.
+    pub total_flops: f64,
+    /// Total runtime EDT instances (STARTUP/WORKER/SHUTDOWN triples are
+    /// counted by the runtimes themselves; this counts WORKER instances at
+    /// every hierarchy level).
+    pub worker_instances: u64,
+}
+
+/// Walk the tree at concrete parameter values and collect characteristics.
+/// `flop_sample_cap` bounds how many leaves get exact flop counting
+/// (max/EDT is then a sampled maximum — exact for the homogeneous-tile
+/// workloads of the suite).
+pub fn characterize(tree: &EdtTree, params: &[Value], flop_sample_cap: u64) -> Characteristics {
+    let mut c = Characteristics {
+        tree_nodes: tree.n_nodes,
+        ..Default::default()
+    };
+    rec(&tree.root, &[], params, &mut c, flop_sample_cap);
+    c
+}
+
+fn rec(node: &EdtNode, prefix: &[Value], params: &[Value], c: &mut Characteristics, cap: u64) {
+    node.for_each_tag(prefix, params, &mut |coords| {
+        c.worker_instances += 1;
+        match &node.body {
+            EdtBody::Leaf(leaf) => {
+                c.leaf_edts += 1;
+                if c.leaf_edts <= cap || cap == 0 {
+                    let mut flops = 0.0;
+                    let base = node.iv_end();
+                    let mut cur = coords.to_vec();
+                    cur.resize(base + leaf.n_leaf_vars, 0);
+                    count_leaf(leaf, base, 0, &mut cur, params, &mut flops);
+                    c.total_flops += flops;
+                    if flops > c.max_flops_per_edt {
+                        c.max_flops_per_edt = flops;
+                    }
+                }
+            }
+            EdtBody::Nested(inner) => rec(inner, coords, params, c, cap),
+            EdtBody::Siblings(sibs) => {
+                for s in sibs {
+                    rec(s, coords, params, c, cap);
+                }
+            }
+        }
+    });
+}
+
+fn count_leaf(
+    leaf: &super::LeafNest,
+    base: usize,
+    v: usize,
+    cur: &mut Vec<Value>,
+    params: &[Value],
+    flops: &mut f64,
+) {
+    if v == leaf.n_leaf_vars {
+        for st in &leaf.stmts {
+            // point within this statement's own bounds?
+            let inside = (0..leaf.n_leaf_vars).all(|w| {
+                let env = Env::new(&cur[..base + w], params);
+                let x = cur[base + w];
+                x >= st.bounds[w].lb.eval(env) && x <= st.bounds[w].ub.eval(env)
+            });
+            if inside {
+                *flops += st.flops_per_point;
+            }
+        }
+        return;
+    }
+    let env = Env::new(&cur[..base + v], params);
+    let lo = leaf.loops[v].lb.eval(env);
+    let hi = leaf.loops[v].ub.eval(env);
+    for x in lo..=hi {
+        cur[base + v] = x;
+        count_leaf(leaf, base, v + 1, cur, params, flops);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::build_gdg;
+    use crate::edt::{map_program, MapOptions};
+    use crate::expr::{Affine, Expr};
+    use crate::ir::{Access, ProgramBuilder, StmtSpec};
+
+    #[test]
+    fn counts_match_iteration_space() {
+        // doall 2-D init: N*N points, tiles 4x4 -> 16 leaf EDTs for N=16
+        let mut pb = ProgramBuilder::new("init2d");
+        let n = pb.param("N", 16);
+        let a = pb.array("A", 2);
+        pb.stmt(
+            StmtSpec::new("S")
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(n), -1))
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(n), -1))
+                .write(Access::new(
+                    a,
+                    vec![Affine::var(2, 1, 0), Affine::var(2, 1, 1)],
+                ))
+                .flops(1.0),
+        );
+        let prog = pb.build();
+        let gdg = build_gdg(&prog);
+        let opts = MapOptions {
+            tile_sizes: vec![4, 4],
+            ..Default::default()
+        };
+        let tree = map_program(&prog, &gdg, &opts).unwrap();
+        let c = characterize(&tree, &[16], 0);
+        assert_eq!(c.leaf_edts, 16);
+        assert_eq!(c.total_flops, 256.0);
+        assert_eq!(c.max_flops_per_edt, 16.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Shared array storage for kernel execution.
+//!
+//! Arrays are dense row-major `f32` buffers shared across worker threads.
+//! Tasks write disjoint regions by construction — the EDT dependence
+//! machinery serializes conflicting accesses (that is the property the
+//! whole system exists to guarantee, and what `rust/tests` verify against
+//! the sequential oracle) — so the storage exposes unsynchronized raw
+//! access through an `UnsafeCell` wrapper with a documented safety
+//! contract, like every parallel runtime's data plane.
+
+use std::cell::UnsafeCell;
+
+/// One dense array.
+pub struct ArrayBuf {
+    data: UnsafeCell<Box<[f32]>>,
+    pub shape: Vec<usize>,
+    pub strides: Vec<usize>,
+}
+
+// SAFETY: concurrent accesses to the same element are prevented by the EDT
+// dependence structure (validated by the oracle-comparison tests); distinct
+// elements may be written concurrently, which is sound for non-overlapping
+// &mut-free raw pointer writes.
+unsafe impl Sync for ArrayBuf {}
+unsafe impl Send for ArrayBuf {}
+
+impl ArrayBuf {
+    pub fn new(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        let mut strides = vec![1usize; shape.len()];
+        for d in (0..shape.len().saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * shape[d + 1];
+        }
+        ArrayBuf {
+            data: UnsafeCell::new(vec![0.0; n].into_boxed_slice()),
+            shape: shape.to_vec(),
+            strides,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat offset of a multi-index (debug-checked bounds).
+    #[inline]
+    pub fn offset(&self, idx: &[i64]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0usize;
+        for (d, &i) in idx.iter().enumerate() {
+            debug_assert!(
+                i >= 0 && (i as usize) < self.shape[d],
+                "index {i} out of bounds for dim {d} (extent {})",
+                self.shape[d]
+            );
+            off += (i as usize) * self.strides[d];
+        }
+        off
+    }
+
+    /// Raw base pointer (hot kernels index directly with strides).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub fn slice_mut(&self) -> &mut [f32] {
+        // SAFETY: see type-level contract.
+        unsafe { &mut *self.data.get() }
+    }
+
+    #[inline]
+    pub fn get(&self, idx: &[i64]) -> f32 {
+        self.slice_mut()[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&self, idx: &[i64], v: f32) {
+        let off = self.offset(idx);
+        self.slice_mut()[off] = v;
+    }
+
+    pub fn fill_with(&self, mut f: impl FnMut(usize) -> f32) {
+        let s = self.slice_mut();
+        for (i, x) in s.iter_mut().enumerate() {
+            *x = f(i);
+        }
+    }
+}
+
+/// All arrays of one program instance.
+pub struct ArrayStore {
+    pub arrays: Vec<ArrayBuf>,
+}
+
+impl ArrayStore {
+    pub fn new(shapes: &[Vec<usize>]) -> Self {
+        ArrayStore {
+            arrays: shapes.iter().map(|s| ArrayBuf::new(s)).collect(),
+        }
+    }
+
+    pub fn a(&self, id: usize) -> &ArrayBuf {
+        &self.arrays[id]
+    }
+
+    /// Deterministic pseudo-random initialization (same seeding across
+    /// oracle and parallel runs).
+    pub fn init_deterministic(&self, seed: u64) {
+        for (ai, arr) in self.arrays.iter().enumerate() {
+            let mut x = (seed.wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15))
+                ^ (ai as u64 + 1).wrapping_mul(0xD1B54A32D192ED03);
+            if x == 0 {
+                x = 1;
+            }
+            arr.fill_with(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                ((x >> 40) as f32) / (1u64 << 24) as f32
+            });
+        }
+    }
+
+    /// Max |a - b| over all arrays (verification).
+    pub fn max_abs_diff(&self, other: &ArrayStore) -> f32 {
+        let mut m = 0f32;
+        for (a, b) in self.arrays.iter().zip(&other.arrays) {
+            let (sa, sb) = (a.slice_mut(), b.slice_mut());
+            assert_eq!(sa.len(), sb.len());
+            for (x, y) in sa.iter().zip(sb.iter()) {
+                m = m.max((x - y).abs());
+            }
+        }
+        m
+    }
+
+    /// Max relative error with absolute floor (stencil sums grow with T).
+    pub fn max_rel_diff(&self, other: &ArrayStore) -> f32 {
+        let mut m = 0f32;
+        for (a, b) in self.arrays.iter().zip(&other.arrays) {
+            let (sa, sb) = (a.slice_mut(), b.slice_mut());
+            for (x, y) in sa.iter().zip(sb.iter()) {
+                let denom = x.abs().max(y.abs()).max(1.0);
+                m = m.max((x - y).abs() / denom);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let a = ArrayBuf::new(&[3, 4, 5]);
+        assert_eq!(a.strides, vec![20, 5, 1]);
+        assert_eq!(a.offset(&[1, 2, 3]), 20 + 10 + 3);
+        assert_eq!(a.len(), 60);
+    }
+
+    #[test]
+    fn get_set_round_trip() {
+        let a = ArrayBuf::new(&[4, 4]);
+        a.set(&[2, 3], 7.5);
+        assert_eq!(a.get(&[2, 3]), 7.5);
+        assert_eq!(a.get(&[3, 2]), 0.0);
+    }
+
+    #[test]
+    fn deterministic_init_reproducible() {
+        let s1 = ArrayStore::new(&[vec![8, 8], vec![16]]);
+        let s2 = ArrayStore::new(&[vec![8, 8], vec![16]]);
+        s1.init_deterministic(42);
+        s2.init_deterministic(42);
+        assert_eq!(s1.max_abs_diff(&s2), 0.0);
+        let s3 = ArrayStore::new(&[vec![8, 8], vec![16]]);
+        s3.init_deterministic(43);
+        assert!(s1.max_abs_diff(&s3) > 0.0);
+    }
+}

@@ -1,0 +1,277 @@
+//! Leaf EDT execution: interpret the FM-generated intra-tile loop nest and
+//! dispatch rows (or points) to the workload's kernels.
+//!
+//! Loop bounds are evaluated through the *compiled* postfix form
+//! (`CompiledLeaf`, built once per plan) when available — bound evaluation
+//! sits on the innermost path and dominated the profile in tree form
+//! (EXPERIMENTS.md §Perf, L3 iteration 1).
+
+use super::arrays::ArrayStore;
+use super::plan::{ArenaBody, CompiledLeaf, Plan};
+use crate::edt::LeafNest;
+use crate::expr::{Env, Value};
+use crate::rt::engine::LeafExec;
+use std::sync::Arc;
+
+/// Row-granular kernel dispatch: a workload implements this once per
+/// statement kind. `orig` holds the full original coordinates of the
+/// statement with the *innermost* dimension set to `lo`; the kernel runs
+/// the dense span `lo..=hi` of that innermost dimension.
+pub trait KernelSet: Send + Sync {
+    fn row(&self, kernel: usize, arrays: &ArrayStore, orig: &[Value], lo: Value, hi: Value);
+}
+
+/// A fully generic kernel: evaluates a statement as
+/// `write[0] ← f(reads…)` per point using the IR's affine accesses.
+/// Always correct, used as the oracle executor for arbitrary programs and
+/// as the fallback where no native kernel is registered.
+pub struct GenericKernel {
+    pub stmts: Vec<GenericStmt>,
+}
+
+#[derive(Clone)]
+pub struct GenericStmt {
+    pub writes: Vec<(usize, Vec<crate::expr::Affine>)>,
+    pub reads: Vec<(usize, Vec<crate::expr::Affine>)>,
+    pub op: GenericOp,
+}
+
+/// The reduction applied to the read values.
+#[derive(Clone, Copy, Debug)]
+pub enum GenericOp {
+    /// write = mean(reads) * scale + 0.1 (stencil-ish, keeps values bounded)
+    ScaledMean { scale: f32 },
+    /// write += product of reads (matmul-ish)
+    MulAdd,
+    /// write = sum(reads)
+    Sum,
+}
+
+impl GenericKernel {
+    pub fn from_program(prog: &crate::ir::Program, op: GenericOp) -> Self {
+        GenericKernel {
+            stmts: prog
+                .stmts
+                .iter()
+                .map(|s| GenericStmt {
+                    writes: s.writes.iter().map(|a| (a.array, a.idx.clone())).collect(),
+                    reads: s.reads.iter().map(|a| (a.array, a.idx.clone())).collect(),
+                    op,
+                })
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn point(&self, kernel: usize, arrays: &ArrayStore, orig: &[Value], params: &[Value]) {
+        let st = &self.stmts[kernel];
+        let env = Env::new(orig, params);
+        let mut acc: f64 = match st.op {
+            GenericOp::MulAdd => 1.0,
+            _ => 0.0,
+        };
+        for (arr, idx) in &st.reads {
+            let pos: Vec<Value> = idx.iter().map(|a| a.eval(env)).collect();
+            let v = arrays.a(*arr).get(&pos) as f64;
+            match st.op {
+                GenericOp::MulAdd => acc *= v,
+                _ => acc += v,
+            }
+        }
+        for (arr, idx) in &st.writes {
+            let pos: Vec<Value> = idx.iter().map(|a| a.eval(env)).collect();
+            let out = match st.op {
+                GenericOp::ScaledMean { scale } => {
+                    let n = st.reads.len().max(1) as f64;
+                    (acc / n * scale as f64 + 0.1) as f32
+                }
+                GenericOp::MulAdd => arrays.a(*arr).get(&pos) + acc as f32,
+                GenericOp::Sum => acc as f32,
+            };
+            arrays.a(*arr).set(&pos, out);
+        }
+    }
+}
+
+/// Adapter: a `GenericKernel` + params as a row-dispatch `KernelSet`.
+pub struct GenericRows {
+    pub kernel: GenericKernel,
+    pub params: Vec<Value>,
+}
+
+impl KernelSet for GenericRows {
+    fn row(&self, kernel: usize, arrays: &ArrayStore, orig: &[Value], lo: Value, hi: Value) {
+        let mut pt = orig.to_vec();
+        let last = pt.len() - 1;
+        for x in lo..=hi {
+            pt[last] = x;
+            self.kernel.point(kernel, arrays, &pt, &self.params);
+        }
+    }
+}
+
+/// The leaf executor used by the real runtimes: walks the leaf loop nest
+/// for a tag and dispatches rows to a `KernelSet`.
+pub struct LeafRunner {
+    pub arrays: Arc<ArrayStore>,
+    pub kernels: Arc<dyn KernelSet>,
+}
+
+impl LeafExec for LeafRunner {
+    fn run_leaf(&self, plan: &Plan, node_id: u32, coords: &[i64]) {
+        let node = plan.node(node_id);
+        let ArenaBody::Leaf(leaf) = &node.body else {
+            unreachable!("run_leaf on non-leaf node");
+        };
+        run_leaf_nest(
+            leaf,
+            node.compiled.as_ref(),
+            node.iv_base + node.dims.len(),
+            coords,
+            &plan.params,
+            &self.arrays,
+            &*self.kernels,
+        );
+    }
+}
+
+/// Per-execution scratch (bounds-eval stack + coordinate buffer).
+struct Scratch {
+    stack: Vec<Value>,
+    cur: Vec<Value>,
+    orig: Vec<Value>,
+}
+
+/// Execute one leaf instance. `base` = number of tag coordinates.
+pub fn run_leaf_nest(
+    leaf: &LeafNest,
+    compiled: Option<&CompiledLeaf>,
+    base: usize,
+    coords: &[Value],
+    params: &[Value],
+    arrays: &ArrayStore,
+    kernels: &dyn KernelSet,
+) {
+    let mut cur = coords[..base].to_vec();
+    cur.resize(base + leaf.n_leaf_vars, 0);
+    let mut scratch = Scratch {
+        stack: Vec::with_capacity(16),
+        cur,
+        orig: Vec::with_capacity(8),
+    };
+    if leaf.stmts.len() == 1 {
+        single_stmt(leaf, compiled, 0, base, 0, &mut scratch, params, arrays, kernels);
+    } else if !leaf.interleave {
+        for (si, _) in leaf.stmts.iter().enumerate() {
+            single_stmt(leaf, compiled, si, base, 0, &mut scratch, params, arrays, kernels);
+        }
+    } else {
+        interleaved(leaf, compiled, base, 0, &mut scratch, params, arrays, kernels);
+    }
+}
+
+#[inline]
+fn stmt_bounds(
+    leaf: &LeafNest,
+    compiled: Option<&CompiledLeaf>,
+    si: usize,
+    v: usize,
+    env: Env<'_>,
+    stack: &mut Vec<Value>,
+) -> (Value, Value) {
+    match compiled {
+        Some(c) => {
+            let (lb, ub) = &c.stmts[si][v];
+            (lb.eval_with(env, stack), ub.eval_with(env, stack))
+        }
+        None => {
+            let b = &leaf.stmts[si].bounds[v];
+            (b.lb.eval(env), b.ub.eval(env))
+        }
+    }
+}
+
+#[inline]
+fn hull_bounds(
+    leaf: &LeafNest,
+    compiled: Option<&CompiledLeaf>,
+    v: usize,
+    env: Env<'_>,
+    stack: &mut Vec<Value>,
+) -> (Value, Value) {
+    match compiled {
+        Some(c) => {
+            let (lb, ub) = &c.hull[v];
+            (lb.eval_with(env, stack), ub.eval_with(env, stack))
+        }
+        None => (leaf.loops[v].lb.eval(env), leaf.loops[v].ub.eval(env)),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn single_stmt(
+    leaf: &LeafNest,
+    compiled: Option<&CompiledLeaf>,
+    si: usize,
+    base: usize,
+    v: usize,
+    s: &mut Scratch,
+    params: &[Value],
+    arrays: &ArrayStore,
+    kernels: &dyn KernelSet,
+) {
+    let st = &leaf.stmts[si];
+    let env = Env::new(&s.cur[..base + v], params);
+    let (lo, hi) = stmt_bounds(leaf, compiled, si, v, env, &mut s.stack);
+    if lo > hi {
+        return;
+    }
+    if v + 1 == leaf.n_leaf_vars {
+        s.cur[base + v] = lo;
+        s.orig.clear();
+        s.orig.extend(st.orig_pos.iter().map(|&p| s.cur[p]));
+        kernels.row(st.kernel, arrays, &s.orig, lo, hi);
+        return;
+    }
+    for x in lo..=hi {
+        s.cur[base + v] = x;
+        single_stmt(leaf, compiled, si, base, v + 1, s, params, arrays, kernels);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn interleaved(
+    leaf: &LeafNest,
+    compiled: Option<&CompiledLeaf>,
+    base: usize,
+    v: usize,
+    s: &mut Scratch,
+    params: &[Value],
+    arrays: &ArrayStore,
+    kernels: &dyn KernelSet,
+) {
+    if v == leaf.n_leaf_vars {
+        for (si, st) in leaf.stmts.iter().enumerate() {
+            let inside = (0..leaf.n_leaf_vars).all(|w| {
+                let env = Env::new(&s.cur[..base + w], params);
+                let x = s.cur[base + w];
+                // borrow juggling: evaluate both bounds before comparing
+                let (lo, hi) = stmt_bounds(leaf, compiled, si, w, env, &mut s.stack);
+                x >= lo && x <= hi
+            });
+            if inside {
+                s.orig.clear();
+                s.orig.extend(st.orig_pos.iter().map(|&p| s.cur[p]));
+                let last = s.cur[base + leaf.n_leaf_vars - 1];
+                kernels.row(st.kernel, arrays, &s.orig, last, last);
+            }
+        }
+        return;
+    }
+    let env = Env::new(&s.cur[..base + v], params);
+    let (lo, hi) = hull_bounds(leaf, compiled, v, env, &mut s.stack);
+    for x in lo..=hi {
+        s.cur[base + v] = x;
+        interleaved(leaf, compiled, base, v + 1, s, params, arrays, kernels);
+    }
+}

@@ -1,0 +1,11 @@
+//! Execution layer: plans, array storage, leaf running, sequential oracle.
+
+pub mod arrays;
+pub mod leafrun;
+pub mod plan;
+pub mod seq;
+
+pub use arrays::{ArrayBuf, ArrayStore};
+pub use leafrun::{GenericKernel, GenericOp, GenericRows, KernelSet, LeafRunner};
+pub use plan::Plan;
+pub use seq::run_seq;

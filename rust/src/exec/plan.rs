@@ -1,0 +1,235 @@
+//! Arena form of the EDT tree, for runtime consumption.
+//!
+//! The mapper produces an owned tree (`EdtTree`); the runtimes index nodes
+//! by id from many threads, so we flatten the tree into a `Vec` (node id =
+//! index) with child links by id. The arena plus the concrete parameter
+//! values form an executable plan.
+
+use crate::edt::{EdtBody, EdtNode, EdtTree, LeafNest, TagDim};
+use crate::expr::{CExpr, Value};
+
+#[derive(Debug, Clone)]
+pub enum ArenaBody {
+    Siblings(Vec<u32>),
+    Nested(u32),
+    Leaf(LeafNest),
+}
+
+/// Compiled (postfix) forms of a leaf's bound expressions — the hot-path
+/// representation (EXPERIMENTS.md §Perf, L3 iteration 1).
+#[derive(Debug, Clone, Default)]
+pub struct CompiledLeaf {
+    /// Hull loop bounds per leaf var.
+    pub hull: Vec<(CExpr, CExpr)>,
+    /// Per-statement own bounds per leaf var.
+    pub stmts: Vec<Vec<(CExpr, CExpr)>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArenaNode {
+    pub id: u32,
+    pub name: String,
+    pub iv_base: usize,
+    pub dims: Vec<TagDim>,
+    pub body: ArenaBody,
+    /// Present iff `body` is `Leaf`.
+    pub compiled: Option<CompiledLeaf>,
+}
+
+/// An executable plan: flattened EDT tree + concrete parameters.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub name: String,
+    pub nodes: Vec<ArenaNode>,
+    pub root: u32,
+    pub params: Vec<Value>,
+}
+
+impl Plan {
+    pub fn from_tree(tree: &EdtTree, params: Vec<Value>) -> Self {
+        let mut nodes: Vec<Option<ArenaNode>> = Vec::new();
+        let root = flatten(&tree.root, &mut nodes);
+        let nodes: Vec<ArenaNode> = nodes.into_iter().map(|n| n.unwrap()).collect();
+        Plan {
+            name: tree.name.clone(),
+            nodes,
+            root,
+            params,
+        }
+    }
+
+    pub fn node(&self, id: u32) -> &ArenaNode {
+        &self.nodes[id as usize]
+    }
+
+    /// Reconstruct an `EdtNode` view for tag enumeration helpers: the arena
+    /// nodes keep the same dims/iv_base, so the `EdtNode` methods
+    /// (`for_each_tag`, `antecedents`, …) are re-exposed here.
+    pub fn for_each_tag(
+        &self,
+        id: u32,
+        prefix: &[Value],
+        f: &mut dyn FnMut(&[Value]),
+    ) {
+        let n = self.node(id);
+        let mut coords = prefix.to_vec();
+        coords.resize(n.iv_base + n.dims.len(), 0);
+        rec_tags(n, 0, &mut coords, &self.params, f);
+    }
+
+    pub fn count_tags(&self, id: u32, prefix: &[Value]) -> u64 {
+        let mut c = 0;
+        self.for_each_tag(id, prefix, &mut |_| c += 1);
+        c
+    }
+
+    /// Chain antecedents of a tag (Fig 8 evaluation).
+    pub fn antecedents(&self, id: u32, coords: &[Value]) -> Vec<Vec<Value>> {
+        let n = self.node(id);
+        let mut out = Vec::new();
+        for d in 0..n.dims.len() {
+            if n.dims[d].sync != crate::edt::SyncKind::Chain {
+                continue;
+            }
+            if let Some(p) = &n.dims[d].interior {
+                let env = crate::expr::Env::new(coords, &self.params);
+                if p.eval(env) {
+                    let mut a = coords[..n.iv_base + n.dims.len()].to_vec();
+                    a[n.iv_base + d] -= n.dims[d].step;
+                    out.push(a);
+                }
+            }
+        }
+        out
+    }
+
+    /// Successor tags along chain dims (prescriber/depends bookkeeping).
+    pub fn successors(&self, id: u32, coords: &[Value]) -> Vec<Vec<Value>> {
+        let n = self.node(id);
+        let mut out = Vec::new();
+        for d in 0..n.dims.len() {
+            if n.dims[d].sync != crate::edt::SyncKind::Chain {
+                continue;
+            }
+            let mut s = coords[..n.iv_base + n.dims.len()].to_vec();
+            s[n.iv_base + d] += n.dims[d].step;
+            let in_space = (0..n.dims.len()).all(|k| {
+                let env = crate::expr::Env::new(&s[..n.iv_base + k], &self.params);
+                let v = s[n.iv_base + k];
+                v >= n.dims[k].lb.eval(env) && v <= n.dims[k].ub.eval(env)
+            });
+            if !in_space {
+                continue;
+            }
+            if let Some(p) = &n.dims[d].interior {
+                let env = crate::expr::Env::new(&s, &self.params);
+                if p.eval(env) {
+                    out.push(s);
+                }
+            }
+        }
+        out
+    }
+}
+
+fn rec_tags(
+    n: &ArenaNode,
+    d: usize,
+    coords: &mut Vec<Value>,
+    params: &[Value],
+    f: &mut dyn FnMut(&[Value]),
+) {
+    if d == n.dims.len() {
+        f(coords);
+        return;
+    }
+    let env = crate::expr::Env::new(&coords[..n.iv_base + d], params);
+    let lo = n.dims[d].lb.eval(env);
+    let hi = n.dims[d].ub.eval(env);
+    for v in lo..=hi {
+        coords[n.iv_base + d] = v;
+        rec_tags(n, d + 1, coords, params, f);
+    }
+}
+
+fn flatten(node: &EdtNode, out: &mut Vec<Option<ArenaNode>>) -> u32 {
+    let id = node.id as u32;
+    if out.len() <= node.id {
+        out.resize(node.id + 1, None);
+    }
+    let mut compiled = None;
+    let body = match &node.body {
+        EdtBody::Siblings(cs) => ArenaBody::Siblings(cs.iter().map(|c| flatten(c, out)).collect()),
+        EdtBody::Nested(c) => ArenaBody::Nested(flatten(c, out)),
+        EdtBody::Leaf(l) => {
+            compiled = Some(CompiledLeaf {
+                hull: l
+                    .loops
+                    .iter()
+                    .map(|b| (CExpr::compile(&b.lb), CExpr::compile(&b.ub)))
+                    .collect(),
+                stmts: l
+                    .stmts
+                    .iter()
+                    .map(|st| {
+                        st.bounds
+                            .iter()
+                            .map(|b| (CExpr::compile(&b.lb), CExpr::compile(&b.ub)))
+                            .collect()
+                    })
+                    .collect(),
+            });
+            ArenaBody::Leaf(l.clone())
+        }
+    };
+    out[node.id] = Some(ArenaNode {
+        id,
+        name: node.name.clone(),
+        iv_base: node.iv_base,
+        dims: node.dims.clone(),
+        body,
+        compiled,
+    });
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::build_gdg;
+    use crate::edt::{map_program, MapOptions};
+    use crate::expr::{Affine, Expr};
+    use crate::ir::{Access, ProgramBuilder, StmtSpec};
+
+    fn tiny_prog() -> crate::ir::Program {
+        let mut pb = ProgramBuilder::new("tiny");
+        let n = pb.param("N", 8);
+        let a = pb.array("A", 1);
+        pb.stmt(
+            StmtSpec::new("S")
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(n), -1))
+                .write(Access::new(a, vec![Affine::var(1, 1, 0)]))
+                .flops(1.0),
+        );
+        pb.build()
+    }
+
+    #[test]
+    fn arena_round_trip() {
+        let prog = tiny_prog();
+        let gdg = build_gdg(&prog);
+        let tree = map_program(&prog, &gdg, &MapOptions {
+            tile_sizes: vec![4],
+            ..Default::default()
+        })
+        .unwrap();
+        let plan = Plan::from_tree(&tree, vec![8]);
+        assert_eq!(plan.nodes.len(), tree.n_nodes);
+        assert_eq!(plan.count_tags(plan.root, &[]), 2); // 8 points / tile 4
+        // doall: no antecedents
+        plan.for_each_tag(plan.root, &[], &mut |c| {
+            assert!(plan.antecedents(plan.root, c).is_empty());
+            assert!(plan.successors(plan.root, c).is_empty());
+        });
+    }
+}

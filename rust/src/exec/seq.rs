@@ -1,0 +1,208 @@
+//! Sequential oracle: executes the *original* program in its original
+//! (beta-interleaved lexicographic) order. This is the semantics every
+//! runtime execution is verified against.
+
+use super::arrays::ArrayStore;
+use super::leafrun::KernelSet;
+use crate::expr::{Env, Value};
+use crate::ir::{Program, StmtId};
+
+/// Run the program sequentially in original order.
+pub fn run_seq(prog: &Program, params: &[Value], arrays: &ArrayStore, kernels: &dyn KernelSet) {
+    let mut ids: Vec<StmtId> = prog.stmts.iter().map(|s| s.id).collect();
+    ids.sort_by(|&a, &b| prog.stmts[a].beta.cmp(&prog.stmts[b].beta));
+    let mut cur: Vec<Value> = Vec::new();
+    rec(prog, &ids, 0, &mut cur, params, arrays, kernels);
+}
+
+fn rec(
+    prog: &Program,
+    group: &[StmtId],
+    depth: usize,
+    cur: &mut Vec<Value>,
+    params: &[Value],
+    arrays: &ArrayStore,
+    kernels: &dyn KernelSet,
+) {
+    // partition by beta[depth] preserving order
+    let mut i = 0;
+    while i < group.len() {
+        let key = prog.stmts[group[i]].beta[depth];
+        let mut j = i;
+        while j < group.len() && prog.stmts[group[j]].beta[depth] == key {
+            j += 1;
+        }
+        let sub = &group[i..j];
+        let d0 = prog.stmts[sub[0]].depth();
+        if d0 == depth {
+            // fully bound statement: single point at `cur`
+            debug_assert_eq!(sub.len(), 1);
+            let st = &prog.stmts[sub[0]];
+            let last = *cur.last().expect("0-dim statements unsupported");
+            kernels.row(st.kernel, arrays, cur, last, last);
+        } else if depth + 1 == min_depth(prog, sub) && sub.len() == 1 {
+            // innermost loop of a single statement: dense row
+            let st = &prog.stmts[sub[0]];
+            let env = Env::new(cur, params);
+            let lo = st.domain.dims[depth].lb.eval(env);
+            let hi = st.domain.dims[depth].ub.eval(env);
+            if lo <= hi {
+                cur.push(lo);
+                let orig = cur.clone();
+                cur.pop();
+                kernels.row(st.kernel, arrays, &orig, lo, hi);
+            }
+        } else {
+            // shared loop: hull bounds, per-statement membership filter
+            let env = Env::new(cur, params);
+            let mut lo = i64::MAX;
+            let mut hi = i64::MIN;
+            for &s in sub {
+                let st = &prog.stmts[s];
+                lo = lo.min(st.domain.dims[depth].lb.eval(env));
+                hi = hi.max(st.domain.dims[depth].ub.eval(env));
+            }
+            for v in lo..=hi {
+                cur.push(v);
+                let envv = Env::new(&cur[..depth], params);
+                let inside: Vec<StmtId> = sub
+                    .iter()
+                    .copied()
+                    .filter(|&s| {
+                        let st = &prog.stmts[s];
+                        v >= st.domain.dims[depth].lb.eval(envv)
+                            && v <= st.domain.dims[depth].ub.eval(envv)
+                    })
+                    .collect();
+                if !inside.is_empty() {
+                    rec(prog, &inside, depth + 1, cur, params, arrays, kernels);
+                }
+                cur.pop();
+            }
+        }
+        i = j;
+    }
+}
+
+fn min_depth(prog: &Program, group: &[StmtId]) -> usize {
+    group.iter().map(|&s| prog.stmts[s].depth()).min().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::leafrun::{GenericKernel, GenericOp, GenericRows};
+    use crate::expr::{Affine, Expr};
+    use crate::ir::{Access, ProgramBuilder, StmtSpec};
+    use std::sync::Mutex;
+
+    /// A kernel that logs (stmt, point) in execution order.
+    struct OrderLog {
+        log: Mutex<Vec<(usize, Vec<i64>)>>,
+    }
+    impl KernelSet for OrderLog {
+        fn row(&self, kernel: usize, _a: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+            let mut l = self.log.lock().unwrap();
+            let mut p = orig.to_vec();
+            let last = p.len() - 1;
+            for x in lo..=hi {
+                p[last] = x;
+                l.push((kernel, p.clone()));
+            }
+        }
+    }
+
+    #[test]
+    fn interleaves_fused_statements() {
+        // S0 and S1 fused under (i): order must be S0(0),S1(0),S0(1),S1(1)…
+        let mut pb = ProgramBuilder::new("fused");
+        let a = pb.array("A", 1);
+        for k in 0..2usize {
+            pb.stmt(
+                StmtSpec::new(&format!("S{k}"))
+                    .dim_range(0, 2)
+                    .write(Access::new(a, vec![Affine::var(1, 0, 0)]))
+                    .beta(vec![0, k])
+                    .kernel(k),
+            );
+        }
+        let prog = pb.build();
+        let arrays = ArrayStore::new(&[vec![3]]);
+        let log = OrderLog {
+            log: Mutex::new(Vec::new()),
+        };
+        run_seq(&prog, &[], &arrays, &log);
+        let l = log.log.lock().unwrap();
+        let expect: Vec<(usize, Vec<i64>)> = (0..3)
+            .flat_map(|i| vec![(0usize, vec![i]), (1usize, vec![i])])
+            .collect();
+        assert_eq!(*l, expect);
+    }
+
+    #[test]
+    fn sibling_loops_run_in_beta_order() {
+        // for t { for i S0; for i S1 }  — S0 all i, then S1 all i, per t
+        let mut pb = ProgramBuilder::new("sibs");
+        let a = pb.array("A", 1);
+        pb.stmt(
+            StmtSpec::new("S0")
+                .dim_range(0, 1)
+                .dim_range(0, 1)
+                .write(Access::new(a, vec![Affine::var(2, 0, 1)]))
+                .beta(vec![0, 0, 0])
+                .kernel(0),
+        );
+        pb.stmt(
+            StmtSpec::new("S1")
+                .dim_range(0, 1)
+                .dim_range(0, 1)
+                .write(Access::new(a, vec![Affine::var(2, 0, 1)]))
+                .beta(vec![0, 1, 0])
+                .kernel(1),
+        );
+        let prog = pb.build();
+        let arrays = ArrayStore::new(&[vec![2]]);
+        let log = OrderLog {
+            log: Mutex::new(Vec::new()),
+        };
+        run_seq(&prog, &[], &arrays, &log);
+        let l = log.log.lock().unwrap();
+        let expect = vec![
+            (0, vec![0, 0]),
+            (0, vec![0, 1]),
+            (1, vec![0, 0]),
+            (1, vec![0, 1]),
+            (0, vec![1, 0]),
+            (0, vec![1, 1]),
+            (1, vec![1, 0]),
+            (1, vec![1, 1]),
+        ];
+        assert_eq!(*l, expect);
+    }
+
+    #[test]
+    fn generic_kernel_stencil_smoke() {
+        // A[i] = mean(A[i-1], A[i+1]) over i in 1..N-1 — just exercise the
+        // generic kernel plumbing end to end
+        let mut pb = ProgramBuilder::new("sm");
+        let n = pb.param("N", 8);
+        let a = pb.array("A", 1);
+        pb.stmt(
+            StmtSpec::new("S")
+                .dim(Expr::constant(1), Expr::sub(&Expr::param(n), &Expr::constant(2)))
+                .write(Access::new(a, vec![Affine::var(1, 1, 0)]))
+                .read(Access::new(a, vec![Affine::var_plus(1, 1, 0, -1)]))
+                .read(Access::new(a, vec![Affine::var_plus(1, 1, 0, 1)])),
+        );
+        let prog = pb.build();
+        let arrays = ArrayStore::new(&[vec![8]]);
+        arrays.init_deterministic(1);
+        let before = arrays.a(0).get(&[3]);
+        let rows = GenericRows {
+            kernel: GenericKernel::from_program(&prog, GenericOp::ScaledMean { scale: 0.5 }),
+            params: vec![8],
+        };
+        run_seq(&prog, &[8], &arrays, &rows);
+        assert_ne!(arrays.a(0).get(&[3]), before);
+    }
+}

@@ -1,0 +1,240 @@
+//! Purely affine (linear + constant) forms.
+//!
+//! Array subscripts and affine schedules are represented in closed form as
+//! coefficient vectors over induction variables and parameters; the
+//! dependence analysis (`crate::analysis`) operates on these directly,
+//! while loop bounds and runtime predicates use the general `Expr` tree.
+
+use super::{Env, Expr, Value};
+use std::fmt;
+use std::sync::Arc as Rc;
+
+/// `sum(iv_coeffs[i] * iv_i) + sum(param_coeffs[p] * P_p) + constant`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Affine {
+    pub iv_coeffs: Vec<Value>,
+    pub param_coeffs: Vec<Value>,
+    pub constant: Value,
+}
+
+impl Affine {
+    pub fn zero(n_ivs: usize, n_params: usize) -> Self {
+        Affine {
+            iv_coeffs: vec![0; n_ivs],
+            param_coeffs: vec![0; n_params],
+            constant: 0,
+        }
+    }
+
+    pub fn constant(n_ivs: usize, n_params: usize, c: Value) -> Self {
+        let mut a = Self::zero(n_ivs, n_params);
+        a.constant = c;
+        a
+    }
+
+    /// The single induction variable `iv`, e.g. subscript `A[i]`.
+    pub fn var(n_ivs: usize, n_params: usize, iv: usize) -> Self {
+        let mut a = Self::zero(n_ivs, n_params);
+        a.iv_coeffs[iv] = 1;
+        a
+    }
+
+    /// `iv + c`, the common stencil subscript form `A[i + c]`.
+    pub fn var_plus(n_ivs: usize, n_params: usize, iv: usize, c: Value) -> Self {
+        let mut a = Self::var(n_ivs, n_params, iv);
+        a.constant = c;
+        a
+    }
+
+    pub fn n_ivs(&self) -> usize {
+        self.iv_coeffs.len()
+    }
+
+    pub fn eval(&self, env: Env<'_>) -> Value {
+        let mut v = self.constant;
+        for (c, iv) in self.iv_coeffs.iter().zip(env.ivs) {
+            v += c * iv;
+        }
+        for (c, p) in self.param_coeffs.iter().zip(env.params) {
+            v += c * p;
+        }
+        v
+    }
+
+    /// Difference `self - other`; both must have the same shape.
+    pub fn sub(&self, other: &Affine) -> Affine {
+        assert_eq!(self.iv_coeffs.len(), other.iv_coeffs.len());
+        assert_eq!(self.param_coeffs.len(), other.param_coeffs.len());
+        Affine {
+            iv_coeffs: self
+                .iv_coeffs
+                .iter()
+                .zip(&other.iv_coeffs)
+                .map(|(a, b)| a - b)
+                .collect(),
+            param_coeffs: self
+                .param_coeffs
+                .iter()
+                .zip(&other.param_coeffs)
+                .map(|(a, b)| a - b)
+                .collect(),
+            constant: self.constant - other.constant,
+        }
+    }
+
+    /// True when the two subscripts differ only in the constant term —
+    /// the *uniform dependence* case (constant distance), which covers
+    /// every stencil access in the evaluation suite.
+    pub fn uniform_with(&self, other: &Affine) -> bool {
+        self.iv_coeffs == other.iv_coeffs && self.param_coeffs == other.param_coeffs
+    }
+
+    /// Lower to an `Expr` tree (for embedding in bound expressions).
+    pub fn to_expr(&self) -> Rc<Expr> {
+        let mut acc = Expr::constant(self.constant);
+        for (i, c) in self.iv_coeffs.iter().enumerate() {
+            if *c != 0 {
+                acc = Expr::add(&acc, &Expr::mul(*c, &Expr::iv(i)));
+            }
+        }
+        for (p, c) in self.param_coeffs.iter().enumerate() {
+            if *c != 0 {
+                acc = Expr::add(&acc, &Expr::mul(*c, &Expr::param(p)));
+            }
+        }
+        acc
+    }
+
+    /// Apply a unimodular-ish transformation: returns the affine form in new
+    /// iteration coordinates, given `new_iv[k] = sum(m[k][i] * old_iv[i])`.
+    /// `m_inv` maps old coordinates from new: `old = m_inv * new` must hold
+    /// (integer matrix); used when re-expressing accesses after scheduling.
+    pub fn compose_iv_map(&self, m_inv: &[Vec<Value>]) -> Affine {
+        // old_iv[i] = sum_k m_inv[i][k] * new_iv[k]
+        let n_new = if m_inv.is_empty() { 0 } else { m_inv[0].len() };
+        let mut iv_coeffs = vec![0; n_new];
+        for (i, c) in self.iv_coeffs.iter().enumerate() {
+            if *c != 0 {
+                for k in 0..n_new {
+                    iv_coeffs[k] += c * m_inv[i][k];
+                }
+            }
+        }
+        Affine {
+            iv_coeffs,
+            param_coeffs: self.param_coeffs.clone(),
+            constant: self.constant,
+        }
+    }
+}
+
+impl fmt::Display for Affine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts = Vec::new();
+        for (i, c) in self.iv_coeffs.iter().enumerate() {
+            match c {
+                0 => {}
+                1 => parts.push(format!("t{i}")),
+                -1 => parts.push(format!("-t{i}")),
+                c => parts.push(format!("{c}*t{i}")),
+            }
+        }
+        for (p, c) in self.param_coeffs.iter().enumerate() {
+            match c {
+                0 => {}
+                1 => parts.push(format!("P{p}")),
+                -1 => parts.push(format!("-P{p}")),
+                c => parts.push(format!("{c}*P{p}")),
+            }
+        }
+        if self.constant != 0 || parts.is_empty() {
+            parts.push(format!("{}", self.constant));
+        }
+        write!(f, "{}", parts.join("+").replace("+-", "-"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_and_sub() {
+        let a = Affine {
+            iv_coeffs: vec![1, 0],
+            param_coeffs: vec![2],
+            constant: -1,
+        };
+        let b = Affine {
+            iv_coeffs: vec![1, -1],
+            param_coeffs: vec![0],
+            constant: 3,
+        };
+        let env = Env::new(&[4, 5], &[10]);
+        assert_eq!(a.eval(env), 4 + 20 - 1);
+        assert_eq!(b.eval(env), 4 - 5 + 3);
+        let d = a.sub(&b);
+        assert_eq!(d.eval(env), a.eval(env) - b.eval(env));
+    }
+
+    #[test]
+    fn uniformity() {
+        let a = Affine::var_plus(3, 0, 1, -1); // A[j-1]
+        let b = Affine::var(3, 0, 1); // A[j]
+        assert!(a.uniform_with(&b));
+        let c = Affine::var(3, 0, 2);
+        assert!(!a.uniform_with(&c));
+    }
+
+    #[test]
+    fn to_expr_matches() {
+        let a = Affine {
+            iv_coeffs: vec![3, -2],
+            param_coeffs: vec![1],
+            constant: 7,
+        };
+        let e = a.to_expr();
+        for i in [-3i64, 0, 5] {
+            for j in [-1i64, 2] {
+                for p in [0i64, 9] {
+                    let ivs = [i, j];
+                    let ps = [p];
+                    let env = Env::new(&ivs, &ps);
+                    assert_eq!(a.eval(env), e.eval(env));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compose_identity() {
+        let a = Affine {
+            iv_coeffs: vec![2, 5],
+            param_coeffs: vec![],
+            constant: 1,
+        };
+        let id = vec![vec![1, 0], vec![0, 1]];
+        assert_eq!(a.compose_iv_map(&id), a);
+    }
+
+    #[test]
+    fn compose_skew() {
+        // new coords (u,v) = (i, i+j) => old: i = u, j = v - u
+        // m_inv rows are old ivs expressed in new ivs
+        let m_inv = vec![vec![1, 0], vec![-1, 1]];
+        let a = Affine::var(2, 0, 1); // subscript j
+        let t = a.compose_iv_map(&m_inv);
+        // j = -u + v
+        assert_eq!(t.iv_coeffs, vec![-1, 1]);
+    }
+
+    #[test]
+    fn display_readable() {
+        let a = Affine {
+            iv_coeffs: vec![1, -1],
+            param_coeffs: vec![2],
+            constant: -3,
+        };
+        assert_eq!(format!("{a}"), "t0-t1+2*P0-3");
+    }
+}

@@ -1,0 +1,223 @@
+//! Compiled expression evaluation — the hot-path form of the templated
+//! expressions.
+//!
+//! `Expr` trees are `Arc`-linked and evaluated by recursive dispatch;
+//! bound expressions sit on the innermost-loop path of every leaf EDT
+//! (evaluated once per loop level per tile row), which made tree-walk
+//! overhead the top profile entry of the whole stack (EXPERIMENTS.md
+//! §Perf, L3 iteration 1). `CExpr` flattens a tree once at plan-build time
+//! into a postfix op vector evaluated over a small stack: no pointer
+//! chasing, no recursion, cache-linear.
+
+use super::{ceil_div, floor_div, Env, Expr, Value};
+
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    Const(Value),
+    Iv(u16),
+    Param(u16),
+    MulC(Value),
+    Add,
+    Sub,
+    Min,
+    Max,
+    CeilDiv(Value),
+    FloorDiv(Value),
+    ShiftL(u32),
+    ShiftR(u32),
+}
+
+/// A compiled expression (postfix program).
+#[derive(Debug, Clone, Default)]
+pub struct CExpr {
+    ops: Vec<Op>,
+    max_stack: usize,
+}
+
+impl CExpr {
+    pub fn compile(e: &Expr) -> CExpr {
+        let mut ops = Vec::new();
+        flatten(e, &mut ops);
+        // compute stack high-water mark
+        let mut depth = 0usize;
+        let mut max = 0usize;
+        for op in &ops {
+            match op {
+                Op::Const(_) | Op::Iv(_) | Op::Param(_) => depth += 1,
+                Op::Add | Op::Sub | Op::Min | Op::Max => depth -= 1,
+                _ => {}
+            }
+            max = max.max(depth);
+        }
+        CExpr { ops, max_stack: max }
+    }
+
+    /// Evaluate with a stack buffer supplied by the caller (reused across
+    /// evaluations to avoid allocation).
+    #[inline]
+    pub fn eval_with(&self, env: Env<'_>, stack: &mut Vec<Value>) -> Value {
+        stack.clear();
+        for op in &self.ops {
+            match *op {
+                Op::Const(c) => stack.push(c),
+                Op::Iv(i) => stack.push(env.ivs[i as usize]),
+                Op::Param(p) => stack.push(env.params[p as usize]),
+                Op::MulC(c) => {
+                    let t = stack.last_mut().unwrap();
+                    *t *= c;
+                }
+                Op::Add => {
+                    let b = stack.pop().unwrap();
+                    *stack.last_mut().unwrap() += b;
+                }
+                Op::Sub => {
+                    let b = stack.pop().unwrap();
+                    *stack.last_mut().unwrap() -= b;
+                }
+                Op::Min => {
+                    let b = stack.pop().unwrap();
+                    let t = stack.last_mut().unwrap();
+                    if b < *t {
+                        *t = b;
+                    }
+                }
+                Op::Max => {
+                    let b = stack.pop().unwrap();
+                    let t = stack.last_mut().unwrap();
+                    if b > *t {
+                        *t = b;
+                    }
+                }
+                Op::CeilDiv(c) => {
+                    let t = stack.last_mut().unwrap();
+                    *t = ceil_div(*t, c);
+                }
+                Op::FloorDiv(c) => {
+                    let t = stack.last_mut().unwrap();
+                    *t = floor_div(*t, c);
+                }
+                Op::ShiftL(k) => {
+                    let t = stack.last_mut().unwrap();
+                    *t <<= k;
+                }
+                Op::ShiftR(k) => {
+                    let t = stack.last_mut().unwrap();
+                    *t >>= k;
+                }
+            }
+        }
+        debug_assert_eq!(stack.len(), 1);
+        stack[0]
+    }
+
+    pub fn eval(&self, env: Env<'_>) -> Value {
+        let mut stack = Vec::with_capacity(self.max_stack);
+        self.eval_with(env, &mut stack)
+    }
+
+    pub fn max_stack(&self) -> usize {
+        self.max_stack
+    }
+}
+
+fn flatten(e: &Expr, out: &mut Vec<Op>) {
+    match e {
+        Expr::Const(c) => out.push(Op::Const(*c)),
+        Expr::Iv(i) => out.push(Op::Iv(*i as u16)),
+        Expr::Param(p) => out.push(Op::Param(*p as u16)),
+        Expr::Mul(c, a) => {
+            flatten(a, out);
+            out.push(Op::MulC(*c));
+        }
+        Expr::Add(a, b) => {
+            flatten(a, out);
+            flatten(b, out);
+            out.push(Op::Add);
+        }
+        Expr::Sub(a, b) => {
+            flatten(a, out);
+            flatten(b, out);
+            out.push(Op::Sub);
+        }
+        Expr::Min(a, b) => {
+            flatten(a, out);
+            flatten(b, out);
+            out.push(Op::Min);
+        }
+        Expr::Max(a, b) => {
+            flatten(a, out);
+            flatten(b, out);
+            out.push(Op::Max);
+        }
+        Expr::CeilDiv(a, c) => {
+            flatten(a, out);
+            out.push(Op::CeilDiv(*c));
+        }
+        Expr::FloorDiv(a, c) => {
+            flatten(a, out);
+            out.push(Op::FloorDiv(*c));
+        }
+        Expr::ShiftL(a, k) => {
+            flatten(a, out);
+            out.push(Op::ShiftL(*k));
+        }
+        Expr::ShiftR(a, k) => {
+            flatten(a, out);
+            out.push(Op::ShiftR(*k));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agree(e: &std::sync::Arc<Expr>, ivs: &[Value], params: &[Value]) {
+        let env = Env::new(ivs, params);
+        let c = CExpr::compile(e);
+        assert_eq!(c.eval(env), e.eval(env), "{e}");
+    }
+
+    #[test]
+    fn compiled_matches_tree_eval() {
+        let exprs = vec![
+            Expr::min(
+                &Expr::floor_div(&Expr::sub(&Expr::param(0), &Expr::constant(2)), 16),
+                &Expr::ceil_div(&Expr::add(&Expr::mul(8, &Expr::iv(0)), &Expr::constant(7)), 16),
+            ),
+            Expr::max_all(&[
+                Expr::constant(0),
+                Expr::sub(&Expr::mul(3, &Expr::iv(1)), &Expr::iv(0)),
+                Expr::add(&Expr::param(1), &Expr::constant(-4)),
+            ]),
+            Expr::mul(-2, &Expr::max(&Expr::iv(0), &Expr::iv(1))),
+        ];
+        for e in &exprs {
+            for i in [-7i64, 0, 3, 19] {
+                for j in [-2i64, 5] {
+                    agree(e, &[i, j], &[100, 13]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stack_reuse() {
+        let e = Expr::add(&Expr::iv(0), &Expr::mul(2, &Expr::iv(1)));
+        let c = CExpr::compile(&e);
+        let mut stack = Vec::new();
+        for i in 0..10 {
+            let ivs = [i, i + 1];
+            assert_eq!(c.eval_with(Env::new(&ivs, &[]), &mut stack), i + 2 * (i + 1));
+        }
+    }
+
+    #[test]
+    fn shifts_compiled() {
+        use std::sync::Arc;
+        let e: Arc<Expr> = Arc::new(Expr::ShiftL(Expr::iv(0), 3));
+        agree(&e, &[5], &[]);
+        let e: Arc<Expr> = Arc::new(Expr::ShiftR(Expr::constant(-16), 2));
+        agree(&e, &[], &[]);
+    }
+}

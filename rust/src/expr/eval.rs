@@ -1,0 +1,121 @@
+//! Expression evaluation — the runtime hot path of dependence resolution.
+//!
+//! Every WORKER EDT evaluates a handful of these expressions per antecedent
+//! dimension (Figure 8). The recursive walk below is the straightforward
+//! implementation; `crate::edt::deps` additionally caches iv-free bound
+//! values per STARTUP so typical predicates evaluate in a few dozen ns
+//! (measured in `micro_overheads`).
+
+use super::{ceil_div, floor_div, Env, Expr, Value};
+
+impl Expr {
+    /// Evaluate against a concrete environment.
+    pub fn eval(&self, env: Env<'_>) -> Value {
+        match self {
+            Expr::Const(c) => *c,
+            Expr::Iv(i) => env.ivs[*i],
+            Expr::Param(p) => env.params[*p],
+            Expr::Mul(c, e) => c * e.eval(env),
+            Expr::Add(a, b) => a.eval(env) + b.eval(env),
+            Expr::Sub(a, b) => a.eval(env) - b.eval(env),
+            Expr::Min(a, b) => a.eval(env).min(b.eval(env)),
+            Expr::Max(a, b) => a.eval(env).max(b.eval(env)),
+            Expr::CeilDiv(e, c) => ceil_div(e.eval(env), *c),
+            Expr::FloorDiv(e, c) => floor_div(e.eval(env), *c),
+            Expr::ShiftL(e, k) => e.eval(env) << k,
+            Expr::ShiftR(e, k) => e.eval(env) >> k,
+        }
+    }
+
+    /// Interval evaluation: given per-iv value ranges `[lo, hi]` (inclusive)
+    /// and concrete parameters, return a conservative `[lo, hi]` range for
+    /// the expression. Used for static EDT counting (Table 2) and for
+    /// bounding-box computations on tag spaces (the paper's "computations of
+    /// the minimum and maximum given a tuple range").
+    pub fn eval_range(&self, iv_ranges: &[(Value, Value)], params: &[Value]) -> (Value, Value) {
+        match self {
+            Expr::Const(c) => (*c, *c),
+            Expr::Iv(i) => iv_ranges[*i],
+            Expr::Param(p) => (params[*p], params[*p]),
+            Expr::Mul(c, e) => {
+                let (lo, hi) = e.eval_range(iv_ranges, params);
+                if *c >= 0 {
+                    (c * lo, c * hi)
+                } else {
+                    (c * hi, c * lo)
+                }
+            }
+            Expr::Add(a, b) => {
+                let (alo, ahi) = a.eval_range(iv_ranges, params);
+                let (blo, bhi) = b.eval_range(iv_ranges, params);
+                (alo + blo, ahi + bhi)
+            }
+            Expr::Sub(a, b) => {
+                let (alo, ahi) = a.eval_range(iv_ranges, params);
+                let (blo, bhi) = b.eval_range(iv_ranges, params);
+                (alo - bhi, ahi - blo)
+            }
+            Expr::Min(a, b) => {
+                let (alo, ahi) = a.eval_range(iv_ranges, params);
+                let (blo, bhi) = b.eval_range(iv_ranges, params);
+                (alo.min(blo), ahi.min(bhi))
+            }
+            Expr::Max(a, b) => {
+                let (alo, ahi) = a.eval_range(iv_ranges, params);
+                let (blo, bhi) = b.eval_range(iv_ranges, params);
+                (alo.max(blo), ahi.max(bhi))
+            }
+            Expr::CeilDiv(e, c) => {
+                let (lo, hi) = e.eval_range(iv_ranges, params);
+                (ceil_div(lo, *c), ceil_div(hi, *c))
+            }
+            Expr::FloorDiv(e, c) => {
+                let (lo, hi) = e.eval_range(iv_ranges, params);
+                (floor_div(lo, *c), floor_div(hi, *c))
+            }
+            Expr::ShiftL(e, k) => {
+                let (lo, hi) = e.eval_range(iv_ranges, params);
+                (lo << k, hi << k)
+            }
+            Expr::ShiftR(e, k) => {
+                let (lo, hi) = e.eval_range(iv_ranges, params);
+                (lo >> k, hi >> k)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Expr;
+
+    #[test]
+    fn range_linear() {
+        // 2*t0 - t1
+        let e = Expr::sub(&Expr::mul(2, &Expr::iv(0)), &Expr::iv(1));
+        let (lo, hi) = e.eval_range(&[(0, 10), (3, 5)], &[]);
+        assert_eq!((lo, hi), (-5, 17));
+    }
+
+    #[test]
+    fn range_min_div() {
+        let e = Expr::min(&Expr::floor_div(&Expr::iv(0), 4), &Expr::param(0));
+        let (lo, hi) = e.eval_range(&[(-9, 9)], &[1]);
+        assert_eq!((lo, hi), (-3, 1));
+    }
+
+    #[test]
+    fn range_contains_all_samples() {
+        let e = Expr::max(
+            &Expr::ceil_div(&Expr::sub(&Expr::mul(3, &Expr::iv(0)), &Expr::iv(1)), 5),
+            &Expr::constant(-2),
+        );
+        let (lo, hi) = e.eval_range(&[(-4, 4), (-3, 3)], &[]);
+        for i in -4..=4 {
+            for j in -3..=3 {
+                let v = e.eval(super::super::Env::new(&[i, j], &[]));
+                assert!(v >= lo && v <= hi, "{v} not in [{lo},{hi}]");
+            }
+        }
+    }
+}

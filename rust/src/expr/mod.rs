@@ -1,0 +1,369 @@
+//! The runtime range/predicate expression IR.
+//!
+//! This is the Rust incarnation of the paper's C++ "templated expressions"
+//! (§4.7.1, Figure 10 range grammar): quasi-affine expressions over task-tag
+//! induction variables and symbolic program parameters, supporting
+//! `MIN`/`MAX`/`CEIL`/`FLOOR`/`SHIFTL`/`SHIFTR` on top of linear terms.
+//!
+//! Expressions are built once at mapping time (compile time in the paper)
+//! and evaluated many times at runtime against concrete tag tuples — they
+//! are the mechanism by which inter-EDT dependences are resolved without
+//! any polyhedral machinery on the hot path. The paper reports < 3%
+//! worst-case overhead for this evaluation; `benches/micro_overheads.rs`
+//! reproduces that measurement for this implementation.
+
+mod affine;
+mod compiled;
+mod eval;
+mod simplify;
+
+pub use affine::Affine;
+pub use compiled::CExpr;
+
+use std::fmt;
+use std::sync::Arc as Rc;
+
+/// Scalar value type for all expression evaluation (loop counters, tags,
+/// parameters). The paper uses C `int`; we use `i64` to avoid overflow in
+/// large iteration spaces (256^4 exceeds `i32`).
+pub type Value = i64;
+
+/// Evaluation environment: concrete induction-variable values (outer-to-inner
+/// tag coordinates) and program parameter values.
+#[derive(Debug, Clone, Copy)]
+pub struct Env<'a> {
+    pub ivs: &'a [Value],
+    pub params: &'a [Value],
+}
+
+impl<'a> Env<'a> {
+    pub fn new(ivs: &'a [Value], params: &'a [Value]) -> Self {
+        Env { ivs, params }
+    }
+}
+
+/// A quasi-affine expression tree (Figure 10 grammar).
+///
+/// `Rc` sharing keeps cloned bound expressions cheap: an EDT's dependence
+/// predicate references each loop-bound expression several times (once per
+/// antecedent dimension), mirroring the paper's `static constexpr`
+/// expression objects.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Expr {
+    /// Integer literal.
+    Const(Value),
+    /// Induction variable (loop counter / tag coordinate) by position,
+    /// outermost = 0.
+    Iv(usize),
+    /// Symbolic program parameter by position.
+    Param(usize),
+    /// Scalar multiple `c * e`.
+    Mul(Value, Rc<Expr>),
+    Add(Rc<Expr>, Rc<Expr>),
+    Sub(Rc<Expr>, Rc<Expr>),
+    Min(Rc<Expr>, Rc<Expr>),
+    Max(Rc<Expr>, Rc<Expr>),
+    /// `ceil(e / c)` with `c > 0` (grammar `CEIL`).
+    CeilDiv(Rc<Expr>, Value),
+    /// `floor(e / c)` with `c > 0` (grammar `FLOOR`).
+    FloorDiv(Rc<Expr>, Value),
+    /// `e << k` (grammar `SHIFTL`).
+    ShiftL(Rc<Expr>, u32),
+    /// `e >> k` arithmetic shift (grammar `SHIFTR`).
+    ShiftR(Rc<Expr>, u32),
+}
+
+/// Floor division with positive divisor (matches C `FLOORD`).
+#[inline]
+pub fn floor_div(a: Value, b: Value) -> Value {
+    debug_assert!(b > 0);
+    a.div_euclid(b)
+}
+
+/// Ceiling division with positive divisor (matches C `CEILD`).
+#[inline]
+pub fn ceil_div(a: Value, b: Value) -> Value {
+    debug_assert!(b > 0);
+    -((-a).div_euclid(b))
+}
+
+impl Expr {
+    pub fn constant(c: Value) -> Rc<Expr> {
+        Rc::new(Expr::Const(c))
+    }
+    pub fn iv(i: usize) -> Rc<Expr> {
+        Rc::new(Expr::Iv(i))
+    }
+    pub fn param(p: usize) -> Rc<Expr> {
+        Rc::new(Expr::Param(p))
+    }
+    pub fn add(a: &Rc<Expr>, b: &Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Add(a.clone(), b.clone())).simplified()
+    }
+    pub fn sub(a: &Rc<Expr>, b: &Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Sub(a.clone(), b.clone())).simplified()
+    }
+    pub fn mul(c: Value, e: &Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Mul(c, e.clone())).simplified()
+    }
+    pub fn min(a: &Rc<Expr>, b: &Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Min(a.clone(), b.clone())).simplified()
+    }
+    pub fn max(a: &Rc<Expr>, b: &Rc<Expr>) -> Rc<Expr> {
+        Rc::new(Expr::Max(a.clone(), b.clone())).simplified()
+    }
+    pub fn ceil_div(e: &Rc<Expr>, c: Value) -> Rc<Expr> {
+        Rc::new(Expr::CeilDiv(e.clone(), c)).simplified()
+    }
+    pub fn floor_div(e: &Rc<Expr>, c: Value) -> Rc<Expr> {
+        Rc::new(Expr::FloorDiv(e.clone(), c)).simplified()
+    }
+    /// `min` over a non-empty list.
+    pub fn min_all(es: &[Rc<Expr>]) -> Rc<Expr> {
+        let mut it = es.iter();
+        let first = it.next().expect("min_all of empty list").clone();
+        it.fold(first, |acc, e| Expr::min(&acc, e))
+    }
+    /// `max` over a non-empty list.
+    pub fn max_all(es: &[Rc<Expr>]) -> Rc<Expr> {
+        let mut it = es.iter();
+        let first = it.next().expect("max_all of empty list").clone();
+        it.fold(first, |acc, e| Expr::max(&acc, e))
+    }
+    /// Add an integer constant.
+    pub fn offset(e: &Rc<Expr>, c: Value) -> Rc<Expr> {
+        if c == 0 {
+            e.clone()
+        } else {
+            Expr::add(e, &Expr::constant(c))
+        }
+    }
+
+    /// Substitute induction variable `iv` with expression `with`
+    /// (used to plug `i-1` into bound expressions when forming interior
+    /// predicates, Figure 8).
+    pub fn subst_iv(self: &Rc<Expr>, iv: usize, with: &Rc<Expr>) -> Rc<Expr> {
+        match &**self {
+            Expr::Const(_) | Expr::Param(_) => self.clone(),
+            Expr::Iv(i) => {
+                if *i == iv {
+                    with.clone()
+                } else {
+                    self.clone()
+                }
+            }
+            Expr::Mul(c, e) => Rc::new(Expr::Mul(*c, e.subst_iv(iv, with))).simplified(),
+            Expr::Add(a, b) => {
+                Rc::new(Expr::Add(a.subst_iv(iv, with), b.subst_iv(iv, with))).simplified()
+            }
+            Expr::Sub(a, b) => {
+                Rc::new(Expr::Sub(a.subst_iv(iv, with), b.subst_iv(iv, with))).simplified()
+            }
+            Expr::Min(a, b) => {
+                Rc::new(Expr::Min(a.subst_iv(iv, with), b.subst_iv(iv, with))).simplified()
+            }
+            Expr::Max(a, b) => {
+                Rc::new(Expr::Max(a.subst_iv(iv, with), b.subst_iv(iv, with))).simplified()
+            }
+            Expr::CeilDiv(e, c) => Rc::new(Expr::CeilDiv(e.subst_iv(iv, with), *c)).simplified(),
+            Expr::FloorDiv(e, c) => Rc::new(Expr::FloorDiv(e.subst_iv(iv, with), *c)).simplified(),
+            Expr::ShiftL(e, k) => Rc::new(Expr::ShiftL(e.subst_iv(iv, with), *k)).simplified(),
+            Expr::ShiftR(e, k) => Rc::new(Expr::ShiftR(e.subst_iv(iv, with), *k)).simplified(),
+        }
+    }
+
+    /// Highest induction-variable index referenced, if any.
+    pub fn max_iv(&self) -> Option<usize> {
+        match self {
+            Expr::Const(_) | Expr::Param(_) => None,
+            Expr::Iv(i) => Some(*i),
+            Expr::Mul(_, e)
+            | Expr::CeilDiv(e, _)
+            | Expr::FloorDiv(e, _)
+            | Expr::ShiftL(e, _)
+            | Expr::ShiftR(e, _) => e.max_iv(),
+            Expr::Add(a, b) | Expr::Sub(a, b) | Expr::Min(a, b) | Expr::Max(a, b) => {
+                match (a.max_iv(), b.max_iv()) {
+                    (Some(x), Some(y)) => Some(x.max(y)),
+                    (x, None) => x,
+                    (None, y) => y,
+                }
+            }
+        }
+    }
+
+    /// True if the expression references no induction variable (bounds that
+    /// depend only on parameters can be hoisted out of the per-task path).
+    pub fn is_iv_free(&self) -> bool {
+        self.max_iv().is_none()
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Const(c) => write!(f, "{c}"),
+            Expr::Iv(i) => write!(f, "t{i}"),
+            Expr::Param(p) => write!(f, "P{p}"),
+            Expr::Mul(c, e) => write!(f, "{c}*({e})"),
+            Expr::Add(a, b) => write!(f, "({a}+{b})"),
+            Expr::Sub(a, b) => write!(f, "({a}-{b})"),
+            Expr::Min(a, b) => write!(f, "MIN({a},{b})"),
+            Expr::Max(a, b) => write!(f, "MAX({a},{b})"),
+            Expr::CeilDiv(e, c) => write!(f, "CEIL({e},{c})"),
+            Expr::FloorDiv(e, c) => write!(f, "FLOOR({e},{c})"),
+            Expr::ShiftL(e, k) => write!(f, "SHIFTL({e},{k})"),
+            Expr::ShiftR(e, k) => write!(f, "SHIFTR({e},{k})"),
+        }
+    }
+}
+
+/// A comparison predicate over expressions (grammar `comp-expr`), used for
+/// the Figure 8 `interior_k` Boolean computations.
+#[derive(Debug, Clone)]
+pub enum Pred {
+    /// `a <= b`
+    Le(Rc<Expr>, Rc<Expr>),
+    /// `a >= b`
+    Ge(Rc<Expr>, Rc<Expr>),
+    /// `a == b`
+    Eq(Rc<Expr>, Rc<Expr>),
+    /// Conjunction.
+    And(Vec<Pred>),
+    /// Disjunction.
+    Or(Vec<Pred>),
+    /// Constant truth.
+    Bool(bool),
+}
+
+impl Pred {
+    pub fn eval(&self, env: Env<'_>) -> bool {
+        match self {
+            Pred::Le(a, b) => a.eval(env) <= b.eval(env),
+            Pred::Ge(a, b) => a.eval(env) >= b.eval(env),
+            Pred::Eq(a, b) => a.eval(env) == b.eval(env),
+            Pred::And(ps) => ps.iter().all(|p| p.eval(env)),
+            Pred::Or(ps) => ps.iter().any(|p| p.eval(env)),
+            Pred::Bool(b) => *b,
+        }
+    }
+
+    /// `lb <= e <= ub`.
+    pub fn within(e: &Rc<Expr>, lb: &Rc<Expr>, ub: &Rc<Expr>) -> Pred {
+        Pred::And(vec![Pred::Ge(e.clone(), lb.clone()), Pred::Le(e.clone(), ub.clone())])
+    }
+}
+
+impl fmt::Display for Pred {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Pred::Le(a, b) => write!(f, "{a} <= {b}"),
+            Pred::Ge(a, b) => write!(f, "{a} >= {b}"),
+            Pred::Eq(a, b) => write!(f, "{a} == {b}"),
+            Pred::And(ps) => {
+                let s: Vec<String> = ps.iter().map(|p| format!("({p})")).collect();
+                write!(f, "{}", s.join(" && "))
+            }
+            Pred::Or(ps) => {
+                let s: Vec<String> = ps.iter().map(|p| format!("({p})")).collect();
+                write!(f, "{}", s.join(" || "))
+            }
+            Pred::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env<'a>(ivs: &'a [Value], params: &'a [Value]) -> Env<'a> {
+        Env::new(ivs, params)
+    }
+
+    #[test]
+    fn floor_ceil_div_match_math() {
+        assert_eq!(floor_div(7, 2), 3);
+        assert_eq!(floor_div(-7, 2), -4);
+        assert_eq!(ceil_div(7, 2), 4);
+        assert_eq!(ceil_div(-7, 2), -3);
+        assert_eq!(floor_div(-8, 4), -2);
+        assert_eq!(ceil_div(-8, 4), -2);
+        assert_eq!(floor_div(0, 3), 0);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+
+    #[test]
+    fn eval_linear() {
+        // 2*t0 + t1 - 3 + P0
+        let e = Expr::add(
+            &Expr::sub(
+                &Expr::add(&Expr::mul(2, &Expr::iv(0)), &Expr::iv(1)),
+                &Expr::constant(3),
+            ),
+            &Expr::param(0),
+        );
+        assert_eq!(e.eval(env(&[5, 7], &[11])), 2 * 5 + 7 - 3 + 11);
+    }
+
+    #[test]
+    fn eval_min_max_divs() {
+        // MIN(FLOOR(P0-2, 16), CEIL(8*t0+7, 16))
+        let a = Expr::floor_div(&Expr::sub(&Expr::param(0), &Expr::constant(2)), 16);
+        let b = Expr::ceil_div(
+            &Expr::add(&Expr::mul(8, &Expr::iv(0)), &Expr::constant(7)),
+            16,
+        );
+        let e = Expr::min(&a, &b);
+        let v = e.eval(env(&[3], &[100]));
+        assert_eq!(v, std::cmp::min(floor_div(98, 16), ceil_div(31, 16)));
+    }
+
+    #[test]
+    fn subst_iv_plugs_antecedent() {
+        // bound = 8*t0 + t1; plug t0 <- t0 - 1 -> 8*t0 - 8 + t1
+        let bound = Expr::add(&Expr::mul(8, &Expr::iv(0)), &Expr::iv(1));
+        let sub = bound.subst_iv(0, &Expr::offset(&Expr::iv(0), -1));
+        assert_eq!(sub.eval(env(&[4, 2], &[])), 8 * 3 + 2);
+        // untouched iv
+        assert_eq!(bound.eval(env(&[4, 2], &[])), 8 * 4 + 2);
+    }
+
+    #[test]
+    fn pred_within() {
+        let p = Pred::within(&Expr::iv(0), &Expr::constant(0), &Expr::param(0));
+        assert!(p.eval(env(&[5], &[10])));
+        assert!(p.eval(env(&[0], &[10])));
+        assert!(p.eval(env(&[10], &[10])));
+        assert!(!p.eval(env(&[11], &[10])));
+        assert!(!p.eval(env(&[-1], &[10])));
+    }
+
+    #[test]
+    fn max_iv_and_iv_free() {
+        let e = Expr::add(&Expr::iv(2), &Expr::param(1));
+        assert_eq!(e.max_iv(), Some(2));
+        assert!(!e.is_iv_free());
+        let e2 = Expr::add(&Expr::param(0), &Expr::constant(4));
+        assert!(e2.is_iv_free());
+    }
+
+    #[test]
+    fn display_round_readable() {
+        let e = Expr::min(
+            &Expr::floor_div(&Expr::sub(&Expr::param(0), &Expr::constant(2)), 16),
+            &Expr::iv(0),
+        );
+        let s = format!("{e}");
+        assert!(s.contains("MIN"));
+        assert!(s.contains("FLOOR"));
+    }
+
+    #[test]
+    fn shifts() {
+        let e = Rc::new(Expr::ShiftL(Expr::iv(0), 3));
+        assert_eq!(e.eval(env(&[5], &[])), 40);
+        let e = Rc::new(Expr::ShiftR(Expr::constant(40), 3));
+        assert_eq!(e.eval(env(&[], &[])), 5);
+    }
+}

@@ -1,0 +1,164 @@
+//! Constant folding and algebraic simplification.
+//!
+//! Mapping-time only (never on the task path); keeps generated bound
+//! expressions small so runtime evaluation stays cheap and `Display`
+//! output stays legible in `tale3 explain` dumps.
+
+use super::{ceil_div, floor_div, Expr, Value};
+use std::sync::Arc as Rc;
+
+impl Expr {
+    /// Return a simplified equivalent expression. Idempotent.
+    pub fn simplified(self: Rc<Expr>) -> Rc<Expr> {
+        match &*self {
+            Expr::Const(_) | Expr::Iv(_) | Expr::Param(_) => self,
+            Expr::Mul(c, e) => match (*c, &**e) {
+                (0, _) => Expr::constant(0),
+                (1, _) => e.clone(),
+                (c1, Expr::Const(k)) => Expr::constant(c1 * k),
+                (c1, Expr::Mul(c2, inner)) => {
+                    Rc::new(Expr::Mul(c1 * c2, inner.clone())).simplified()
+                }
+                _ => self,
+            },
+            Expr::Add(a, b) => match (&**a, &**b) {
+                (Expr::Const(x), Expr::Const(y)) => Expr::constant(x + y),
+                (Expr::Const(0), _) => b.clone(),
+                (_, Expr::Const(0)) => a.clone(),
+                // (e + c1) + c2 -> e + (c1+c2)
+                (Expr::Add(e, c1), Expr::Const(c2)) => {
+                    if let Expr::Const(c1v) = &**c1 {
+                        Rc::new(Expr::Add(e.clone(), Expr::constant(c1v + c2))).simplified()
+                    } else {
+                        self
+                    }
+                }
+                _ => self,
+            },
+            Expr::Sub(a, b) => match (&**a, &**b) {
+                (Expr::Const(x), Expr::Const(y)) => Expr::constant(x - y),
+                (_, Expr::Const(0)) => a.clone(),
+                (_, Expr::Const(c)) => {
+                    Rc::new(Expr::Add(a.clone(), Expr::constant(-c))).simplified()
+                }
+                _ => self,
+            },
+            Expr::Min(a, b) => match (&**a, &**b) {
+                (Expr::Const(x), Expr::Const(y)) => Expr::constant((*x).min(*y)),
+                _ if a == b => a.clone(),
+                _ => self,
+            },
+            Expr::Max(a, b) => match (&**a, &**b) {
+                (Expr::Const(x), Expr::Const(y)) => Expr::constant((*x).max(*y)),
+                _ if a == b => a.clone(),
+                _ => self,
+            },
+            Expr::CeilDiv(e, c) => match &**e {
+                Expr::Const(k) => Expr::constant(ceil_div(*k, *c)),
+                _ if *c == 1 => e.clone(),
+                _ => self,
+            },
+            Expr::FloorDiv(e, c) => match &**e {
+                Expr::Const(k) => Expr::constant(floor_div(*k, *c)),
+                _ if *c == 1 => e.clone(),
+                _ => self,
+            },
+            Expr::ShiftL(e, k) => match &**e {
+                Expr::Const(v) => Expr::constant(v << k),
+                _ if *k == 0 => e.clone(),
+                _ => self,
+            },
+            Expr::ShiftR(e, k) => match &**e {
+                Expr::Const(v) => Expr::constant(v >> k),
+                _ if *k == 0 => e.clone(),
+                _ => self,
+            },
+        }
+    }
+}
+
+/// Normalize a `Value` constant expression if possible.
+#[allow(dead_code)]
+pub fn as_const(e: &Expr) -> Option<Value> {
+    match e {
+        Expr::Const(c) => Some(*c),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Env, Expr};
+    use super::as_const;
+
+    #[test]
+    fn folds_constants() {
+        let e = Expr::add(&Expr::constant(3), &Expr::constant(4));
+        assert_eq!(as_const(&e), Some(7));
+        let e = Expr::mul(5, &Expr::constant(-2));
+        assert_eq!(as_const(&e), Some(-10));
+        let e = Expr::min(&Expr::constant(3), &Expr::constant(9));
+        assert_eq!(as_const(&e), Some(3));
+    }
+
+    #[test]
+    fn identity_elimination() {
+        let iv = Expr::iv(0);
+        assert_eq!(Expr::add(&iv, &Expr::constant(0)), iv);
+        assert_eq!(Expr::mul(1, &iv), iv);
+        assert_eq!(Expr::floor_div(&iv, 1), iv);
+        assert_eq!(as_const(&Expr::mul(0, &iv)), Some(0));
+    }
+
+    #[test]
+    fn nested_add_const_merge() {
+        // (t0 + 2) + 3 -> t0 + 5
+        let e = Expr::add(&Expr::add(&Expr::iv(0), &Expr::constant(2)), &Expr::constant(3));
+        assert_eq!(e.eval(Env::new(&[10], &[])), 15);
+        // the tree should have collapsed to a single Add
+        match &*e {
+            Expr::Add(a, b) => {
+                assert!(matches!(&**a, Expr::Iv(0)));
+                assert_eq!(as_const(b), Some(5));
+            }
+            other => panic!("not collapsed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sub_const_becomes_add_neg() {
+        let e = Expr::sub(&Expr::iv(0), &Expr::constant(4));
+        assert_eq!(e.eval(Env::new(&[10], &[])), 6);
+    }
+
+    #[test]
+    fn simplify_is_semantics_preserving() {
+        // randomized-ish structural check over a fixed set of envs
+        let exprs = vec![
+            Expr::max(
+                &Expr::ceil_div(&Expr::sub(&Expr::mul(8, &Expr::iv(0)), &Expr::param(0)), 16),
+                &Expr::floor_div(&Expr::add(&Expr::iv(1), &Expr::constant(7)), 4),
+            ),
+            Expr::min(
+                &Expr::add(&Expr::mul(-3, &Expr::iv(1)), &Expr::constant(2)),
+                &Expr::sub(&Expr::param(0), &Expr::iv(0)),
+            ),
+        ];
+        for e in exprs {
+            for i in [-5i64, 0, 3, 17] {
+                for j in [-2i64, 1, 9] {
+                    for p in [0i64, 13] {
+                        let ivs = [i, j];
+                        let ps = [p];
+                        let env = Env::new(&ivs, &ps);
+                        // simplified() is applied during construction; re-apply
+                        // must not change the value
+                        let v1 = e.eval(env);
+                        let v2 = e.clone().simplified().eval(env);
+                        assert_eq!(v1, v2);
+                    }
+                }
+            }
+        }
+    }
+}

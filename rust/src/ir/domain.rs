@@ -1,0 +1,172 @@
+//! Iteration domains: ordered multi-dimensional sets of iterations (§4.1).
+//!
+//! Bounds are general `Expr` trees (min/max/floordiv of affine forms), so
+//! tiled and skewed domains — "multiple min/max expressions as well as ceil
+//! and floor divisions" (§4.3) — are first-class. Each dimension's bounds
+//! may reference outer induction variables (triangular loops).
+
+use crate::expr::{Env, Expr, Value};
+use std::sync::Arc as Rc;
+
+/// Inclusive bounds for one loop dimension: `lb <= iv <= ub`.
+#[derive(Debug, Clone)]
+pub struct DimBound {
+    pub lb: Rc<Expr>,
+    pub ub: Rc<Expr>,
+}
+
+impl DimBound {
+    pub fn new(lb: Rc<Expr>, ub: Rc<Expr>) -> Self {
+        DimBound { lb, ub }
+    }
+
+    /// Constant bounds `[lo, hi]`.
+    pub fn range(lo: Value, hi: Value) -> Self {
+        DimBound::new(Expr::constant(lo), Expr::constant(hi))
+    }
+}
+
+/// A multi-dimensional iteration domain.
+#[derive(Debug, Clone, Default)]
+pub struct Domain {
+    pub dims: Vec<DimBound>,
+}
+
+impl Domain {
+    pub fn new(dims: Vec<DimBound>) -> Self {
+        Domain { dims }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Enumerate all points in lexicographic order, calling `f` with the
+    /// full index vector. This is the sequential-oracle iteration order.
+    pub fn for_each_point(&self, params: &[Value], f: &mut dyn FnMut(&[Value])) {
+        let mut idx = vec![0i64; self.dims.len()];
+        self.rec(0, params, &mut idx, f);
+    }
+
+    fn rec(&self, d: usize, params: &[Value], idx: &mut Vec<Value>, f: &mut dyn FnMut(&[Value])) {
+        if d == self.dims.len() {
+            f(idx);
+            return;
+        }
+        let env = Env::new(&idx[..d], params);
+        let lb = self.dims[d].lb.eval(env);
+        let ub = self.dims[d].ub.eval(env);
+        for v in lb..=ub {
+            idx[d] = v;
+            self.rec(d + 1, params, idx, f);
+        }
+        idx.truncate(self.dims.len());
+    }
+
+    /// Count points (exact, by enumeration of the outer dims with interval
+    /// short-circuiting would be faster; enumeration is fine at the sizes
+    /// used for static characterization).
+    pub fn count_points(&self, params: &[Value]) -> u64 {
+        let mut n = 0u64;
+        self.for_each_point(params, &mut |_| n += 1);
+        n
+    }
+
+    /// Conservative bounding box per dimension, via interval evaluation of
+    /// the bound expressions with outer-dim ranges propagated inward.
+    /// Returns `None` for an (detectably) empty box.
+    pub fn bounding_box(&self, params: &[Value]) -> Option<Vec<(Value, Value)>> {
+        let mut ranges: Vec<(Value, Value)> = Vec::with_capacity(self.dims.len());
+        for d in 0..self.dims.len() {
+            let lb = self.dims[d].lb.eval_range(&ranges, params).0;
+            let ub = self.dims[d].ub.eval_range(&ranges, params).1;
+            if lb > ub {
+                return None;
+            }
+            ranges.push((lb, ub));
+        }
+        Some(ranges)
+    }
+
+    /// Membership test for a concrete point.
+    pub fn contains(&self, point: &[Value], params: &[Value]) -> bool {
+        debug_assert_eq!(point.len(), self.dims.len());
+        for d in 0..self.dims.len() {
+            let env = Env::new(&point[..d], params);
+            let lb = self.dims[d].lb.eval(env);
+            let ub = self.dims[d].ub.eval(env);
+            if point[d] < lb || point[d] > ub {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_enumeration() {
+        let d = Domain::new(vec![DimBound::range(0, 2), DimBound::range(1, 3)]);
+        let mut pts = Vec::new();
+        d.for_each_point(&[], &mut |p| pts.push(p.to_vec()));
+        assert_eq!(pts.len(), 9);
+        assert_eq!(pts[0], vec![0, 1]);
+        assert_eq!(pts[8], vec![2, 3]);
+        // lexicographic order
+        for w in pts.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(d.count_points(&[]), 9);
+    }
+
+    #[test]
+    fn triangular_domain() {
+        // i in [0,4], j in [i, 4]
+        let d = Domain::new(vec![
+            DimBound::range(0, 4),
+            DimBound::new(Expr::iv(0), Expr::constant(4)),
+        ]);
+        assert_eq!(d.count_points(&[]), 5 + 4 + 3 + 2 + 1);
+        assert!(d.contains(&[2, 3], &[]));
+        assert!(!d.contains(&[3, 2], &[]));
+    }
+
+    #[test]
+    fn parametric_bounds() {
+        // i in [1, N-2]
+        let d = Domain::new(vec![DimBound::new(
+            Expr::constant(1),
+            Expr::sub(&Expr::param(0), &Expr::constant(2)),
+        )]);
+        assert_eq!(d.count_points(&[10]), 8);
+        assert_eq!(d.count_points(&[3]), 1);
+        assert_eq!(d.count_points(&[2]), 0);
+    }
+
+    #[test]
+    fn bbox_covers_points() {
+        let d = Domain::new(vec![
+            DimBound::range(0, 4),
+            DimBound::new(
+                Expr::max(&Expr::constant(0), &Expr::sub(&Expr::iv(0), &Expr::constant(2))),
+                Expr::min(&Expr::constant(4), &Expr::add(&Expr::iv(0), &Expr::constant(1))),
+            ),
+        ]);
+        let bb = d.bounding_box(&[]).unwrap();
+        d.for_each_point(&[], &mut |p| {
+            for (x, (lo, hi)) in p.iter().zip(&bb) {
+                assert!(x >= lo && x <= hi);
+            }
+        });
+    }
+
+    #[test]
+    fn empty_domain() {
+        let d = Domain::new(vec![DimBound::range(5, 2)]);
+        assert_eq!(d.count_points(&[]), 0);
+        assert!(d.bounding_box(&[]).is_none());
+    }
+}

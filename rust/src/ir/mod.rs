@@ -1,0 +1,166 @@
+//! Loop-nest intermediate representation.
+//!
+//! The paper's input is "an analyzable sequential C specification" (§4);
+//! parsing C is not part of the contribution, so `tale3` starts at the same
+//! semantic point with a typed IR: statements with iteration domains, affine
+//! array accesses, and beta-vector textual positions (§4.5). The GDG
+//! (generalized dependence graph, §4.1) is computed from this by
+//! `crate::analysis`.
+
+mod domain;
+mod program;
+
+pub use domain::{DimBound, Domain};
+pub use program::{Program, ProgramBuilder, StmtSpec};
+
+use crate::expr::{Affine, Value};
+
+/// Array identifier (index into `Program::arrays`).
+pub type ArrayId = usize;
+/// Statement identifier (index into `Program::stmts`).
+pub type StmtId = usize;
+/// Parameter identifier (index into `Program::params`).
+pub type ParamId = usize;
+
+/// A declared array: name + rank. Concrete extents are supplied at
+/// execution time (`exec::ArrayStore`); the analysis works symbolically and
+/// with the program's analysis-time parameter values.
+#[derive(Debug, Clone)]
+pub struct ArrayDecl {
+    pub name: String,
+    pub rank: usize,
+}
+
+/// One affine array reference: `array[idx_0][idx_1]...` where each subscript
+/// is an `Affine` form over the owning statement's induction variables and
+/// the program parameters.
+#[derive(Debug, Clone)]
+pub struct Access {
+    pub array: ArrayId,
+    pub idx: Vec<Affine>,
+}
+
+impl Access {
+    pub fn new(array: ArrayId, idx: Vec<Affine>) -> Self {
+        Access { array, idx }
+    }
+}
+
+/// An affine inequality `sum(iv_coeffs·i) + sum(param_coeffs·P) + constant >= 0`
+/// over a statement's induction variables; the conservative affine
+/// over-approximation of the iteration domain used by dependence analysis.
+#[derive(Debug, Clone)]
+pub struct AffineConstraint {
+    pub form: Affine,
+}
+
+/// A statement: the unit of analysis and transformation (§4.1). "A statement
+/// S can be simple or arbitrarily complex … as long as it can be
+/// approximated conservatively."
+#[derive(Debug, Clone)]
+pub struct Statement {
+    pub id: StmtId,
+    pub name: String,
+    /// Iteration domain: per-depth bounds, possibly referencing outer ivs.
+    pub domain: Domain,
+    /// Affine over-approximation of the domain (derived from bounds; rows of
+    /// min/max bounds are split, non-affine bounds are dropped —
+    /// "stubbing / blackboxing", §3).
+    pub constraints: Vec<AffineConstraint>,
+    pub writes: Vec<Access>,
+    pub reads: Vec<Access>,
+    /// Beta vector: textual position among siblings at each nesting level,
+    /// length `depth + 1` (§4.5).
+    pub beta: Vec<usize>,
+    /// Floating-point operations per executed iteration (for Gflop/s
+    /// accounting, Table 2 "# Fp / EDT").
+    pub flops_per_point: f64,
+    /// Bytes moved per executed iteration (roofline model input for the
+    /// testbed simulator).
+    pub bytes_per_point: f64,
+    /// Dispatch key into the workload's native/PJRT tile-kernel table.
+    pub kernel: usize,
+}
+
+impl Statement {
+    pub fn depth(&self) -> usize {
+        self.domain.dims.len()
+    }
+
+    /// Number of common loops with `other`: the length of the shared beta
+    /// prefix, capped by both depths. Statements nested under `d` common
+    /// loops have identical first `d` beta components (§4.5).
+    pub fn common_loops(&self, other: &Statement) -> usize {
+        let max = self.depth().min(other.depth());
+        let mut d = 0;
+        while d < max && self.beta[d] == other.beta[d] {
+            d += 1;
+        }
+        d
+    }
+
+    /// Textual precedence at the first differing beta component: true if
+    /// `self` occurs before `other` when all common loop counters are equal.
+    pub fn textually_before(&self, other: &Statement) -> bool {
+        let d = self.common_loops(other);
+        if d < self.beta.len() && d < other.beta.len() {
+            self.beta[d] < other.beta[d]
+        } else {
+            self.beta.len() < other.beta.len()
+        }
+    }
+}
+
+/// A symbolic program parameter with the concrete value used during
+/// dependence analysis (the dependence *structure* of the evaluation suite
+/// is size-independent above trivial sizes; see DESIGN.md §5).
+#[derive(Debug, Clone)]
+pub struct ParamDecl {
+    pub name: String,
+    pub analysis_value: Value,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::Expr;
+
+    fn dummy_stmt(id: StmtId, depth: usize, beta: Vec<usize>) -> Statement {
+        let dims = (0..depth)
+            .map(|_| DimBound::new(Expr::constant(0), Expr::constant(9)))
+            .collect();
+        Statement {
+            id,
+            name: format!("S{id}"),
+            domain: Domain { dims },
+            constraints: vec![],
+            writes: vec![],
+            reads: vec![],
+            beta,
+            flops_per_point: 1.0,
+            bytes_per_point: 8.0,
+            kernel: 0,
+        }
+    }
+
+    #[test]
+    fn common_loops_from_beta() {
+        // S0 at beta (0,0,0,0) depth 3; S1 at beta (0,0,0,1) depth 3:
+        // fused under all 3 loops
+        let s0 = dummy_stmt(0, 3, vec![0, 0, 0, 0]);
+        let s1 = dummy_stmt(1, 3, vec![0, 0, 0, 1]);
+        assert_eq!(s0.common_loops(&s1), 3);
+        assert!(s0.textually_before(&s1));
+        assert!(!s1.textually_before(&s0));
+
+        // S2 distributed at outer level: beta (1, ...)
+        let s2 = dummy_stmt(2, 2, vec![1, 0, 0]);
+        assert_eq!(s0.common_loops(&s2), 0);
+        assert!(s0.textually_before(&s2));
+
+        // imperfect nest: S3 at beta (0,1,0) depth 2 shares only loop 0
+        let s3 = dummy_stmt(3, 2, vec![0, 1, 0]);
+        assert_eq!(s0.common_loops(&s3), 1);
+        assert!(s0.textually_before(&s3));
+    }
+}

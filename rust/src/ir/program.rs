@@ -1,0 +1,362 @@
+//! Programs and the builder API ("the sequential specification").
+
+use super::{
+    Access, AffineConstraint, ArrayDecl, ArrayId, DimBound, Domain, ParamDecl, ParamId, Statement,
+    StmtId,
+};
+use crate::expr::{Affine, Expr, Value};
+use std::sync::Arc as Rc;
+
+/// A whole analyzable program: parameters, arrays, statements.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub name: String,
+    pub params: Vec<ParamDecl>,
+    pub arrays: Vec<ArrayDecl>,
+    pub stmts: Vec<Statement>,
+}
+
+impl Program {
+    pub fn max_depth(&self) -> usize {
+        self.stmts.iter().map(|s| s.depth()).max().unwrap_or(0)
+    }
+
+    pub fn analysis_param_values(&self) -> Vec<Value> {
+        self.params.iter().map(|p| p.analysis_value).collect()
+    }
+
+    /// Total dynamic iteration count at the analysis parameter values.
+    pub fn iteration_size(&self, params: &[Value]) -> u64 {
+        self.stmts.iter().map(|s| s.domain.count_points(params)).sum()
+    }
+
+    /// Total floating-point operations at the given parameter values.
+    pub fn total_flops(&self, params: &[Value]) -> f64 {
+        self.stmts
+            .iter()
+            .map(|s| s.domain.count_points(params) as f64 * s.flops_per_point)
+            .sum()
+    }
+}
+
+/// Specification for one statement, consumed by `ProgramBuilder::stmt`.
+pub struct StmtSpec {
+    pub name: String,
+    pub bounds: Vec<DimBound>,
+    pub writes: Vec<Access>,
+    pub reads: Vec<Access>,
+    /// Beta vector (length `depth + 1`). If empty, the builder assigns
+    /// `[0, 0, …, k]` where `k` is the statement's index — i.e. all
+    /// statements fused under a common perfect nest in declaration order.
+    pub beta: Vec<usize>,
+    pub flops_per_point: f64,
+    pub bytes_per_point: f64,
+    pub kernel: usize,
+}
+
+impl StmtSpec {
+    pub fn new(name: &str) -> Self {
+        StmtSpec {
+            name: name.to_string(),
+            bounds: Vec::new(),
+            writes: Vec::new(),
+            reads: Vec::new(),
+            beta: Vec::new(),
+            flops_per_point: 0.0,
+            bytes_per_point: 0.0,
+            kernel: 0,
+        }
+    }
+    pub fn dim(mut self, lb: Rc<Expr>, ub: Rc<Expr>) -> Self {
+        self.bounds.push(DimBound::new(lb, ub));
+        self
+    }
+    pub fn dim_range(mut self, lo: Value, hi: Value) -> Self {
+        self.bounds.push(DimBound::range(lo, hi));
+        self
+    }
+    pub fn write(mut self, a: Access) -> Self {
+        self.writes.push(a);
+        self
+    }
+    pub fn read(mut self, a: Access) -> Self {
+        self.reads.push(a);
+        self
+    }
+    pub fn beta(mut self, beta: Vec<usize>) -> Self {
+        self.beta = beta;
+        self
+    }
+    pub fn flops(mut self, f: f64) -> Self {
+        self.flops_per_point = f;
+        self
+    }
+    pub fn bytes(mut self, b: f64) -> Self {
+        self.bytes_per_point = b;
+        self
+    }
+    pub fn kernel(mut self, k: usize) -> Self {
+        self.kernel = k;
+        self
+    }
+}
+
+/// Fluent builder for `Program`.
+pub struct ProgramBuilder {
+    prog: Program,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: &str) -> Self {
+        ProgramBuilder {
+            prog: Program {
+                name: name.to_string(),
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn param(&mut self, name: &str, analysis_value: Value) -> ParamId {
+        self.prog.params.push(ParamDecl {
+            name: name.to_string(),
+            analysis_value,
+        });
+        self.prog.params.len() - 1
+    }
+
+    pub fn array(&mut self, name: &str, rank: usize) -> ArrayId {
+        self.prog.arrays.push(ArrayDecl {
+            name: name.to_string(),
+            rank,
+        });
+        self.prog.arrays.len() - 1
+    }
+
+    pub fn stmt(&mut self, spec: StmtSpec) -> StmtId {
+        let id = self.prog.stmts.len();
+        let depth = spec.bounds.len();
+        let beta = if spec.beta.is_empty() {
+            let mut b = vec![0; depth];
+            b.push(id);
+            b
+        } else {
+            assert_eq!(spec.beta.len(), depth + 1, "beta must have depth+1 entries");
+            spec.beta
+        };
+        let n_params = self.prog.params.len();
+        let constraints = extract_constraints(&spec.bounds, depth, n_params);
+        self.prog.stmts.push(Statement {
+            id,
+            name: spec.name,
+            domain: Domain::new(spec.bounds),
+            constraints,
+            writes: spec.writes,
+            reads: spec.reads,
+            beta,
+            flops_per_point: spec.flops_per_point,
+            bytes_per_point: spec.bytes_per_point,
+            kernel: spec.kernel,
+        });
+        id
+    }
+
+    pub fn build(self) -> Program {
+        self.prog
+    }
+
+    /// Convenience: affine subscript `iv + c` sized for this program.
+    pub fn sub_iv(&self, n_ivs: usize, iv: usize, c: Value) -> Affine {
+        Affine::var_plus(n_ivs, self.prog.params.len(), iv, c)
+    }
+}
+
+/// Derive the affine over-approximation of a domain from its bound
+/// expressions. `lb <= iv` rows with `max(a, b)` lower bounds split into
+/// two constraints; `min` upper bounds likewise. Non-affine bound parts
+/// (floor/ceil/shift) are dropped — a conservative abstraction, exactly the
+/// paper's blackboxing posture (§3).
+fn extract_constraints(bounds: &[DimBound], n_ivs: usize, n_params: usize) -> Vec<AffineConstraint> {
+    let mut out = Vec::new();
+    for (d, b) in bounds.iter().enumerate() {
+        // iv_d - lb >= 0 for every affine leaf of a Max-tree lower bound
+        for leaf in max_leaves(&b.lb) {
+            if let Some(aff) = to_affine(&leaf, n_ivs, n_params) {
+                let mut form = Affine::var(n_ivs, n_params, d);
+                form = form.sub(&aff);
+                out.push(AffineConstraint { form });
+            }
+        }
+        // ub - iv_d >= 0 for every affine leaf of a Min-tree upper bound
+        for leaf in min_leaves(&b.ub) {
+            if let Some(aff) = to_affine(&leaf, n_ivs, n_params) {
+                let form = aff.sub(&Affine::var(n_ivs, n_params, d));
+                out.push(AffineConstraint { form });
+            }
+        }
+    }
+    out
+}
+
+fn max_leaves(e: &Rc<Expr>) -> Vec<Rc<Expr>> {
+    match &**e {
+        Expr::Max(a, b) => {
+            let mut v = max_leaves(a);
+            v.extend(max_leaves(b));
+            v
+        }
+        _ => vec![e.clone()],
+    }
+}
+
+fn min_leaves(e: &Rc<Expr>) -> Vec<Rc<Expr>> {
+    match &**e {
+        Expr::Min(a, b) => {
+            let mut v = min_leaves(a);
+            v.extend(min_leaves(b));
+            v
+        }
+        _ => vec![e.clone()],
+    }
+}
+
+/// Convert a purely linear `Expr` to an `Affine`; `None` if non-affine.
+pub fn to_affine(e: &Expr, n_ivs: usize, n_params: usize) -> Option<Affine> {
+    match e {
+        Expr::Const(c) => Some(Affine::constant(n_ivs, n_params, *c)),
+        Expr::Iv(i) => {
+            if *i < n_ivs {
+                Some(Affine::var(n_ivs, n_params, *i))
+            } else {
+                None
+            }
+        }
+        Expr::Param(p) => {
+            let mut a = Affine::zero(n_ivs, n_params);
+            a.param_coeffs[*p] = 1;
+            Some(a)
+        }
+        Expr::Mul(c, inner) => {
+            let a = to_affine(inner, n_ivs, n_params)?;
+            Some(Affine {
+                iv_coeffs: a.iv_coeffs.iter().map(|x| c * x).collect(),
+                param_coeffs: a.param_coeffs.iter().map(|x| c * x).collect(),
+                constant: c * a.constant,
+            })
+        }
+        Expr::Add(a, b) => {
+            let x = to_affine(a, n_ivs, n_params)?;
+            let y = to_affine(b, n_ivs, n_params)?;
+            Some(Affine {
+                iv_coeffs: x.iv_coeffs.iter().zip(&y.iv_coeffs).map(|(p, q)| p + q).collect(),
+                param_coeffs: x
+                    .param_coeffs
+                    .iter()
+                    .zip(&y.param_coeffs)
+                    .map(|(p, q)| p + q)
+                    .collect(),
+                constant: x.constant + y.constant,
+            })
+        }
+        Expr::Sub(a, b) => {
+            let x = to_affine(a, n_ivs, n_params)?;
+            let y = to_affine(b, n_ivs, n_params)?;
+            Some(x.sub(&y))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_assigns_default_beta() {
+        let mut pb = ProgramBuilder::new("p");
+        let n = pb.param("N", 16);
+        let a = pb.array("A", 1);
+        let s = StmtSpec::new("S0")
+            .dim(Expr::constant(0), Expr::sub(&Expr::param(n), &Expr::constant(1)))
+            .write(Access::new(a, vec![Affine::var(1, 1, 0)]))
+            .flops(1.0);
+        let id = pb.stmt(s);
+        let prog = pb.build();
+        assert_eq!(id, 0);
+        assert_eq!(prog.stmts[0].beta, vec![0, 0]);
+        assert_eq!(prog.iteration_size(&[16]), 16);
+    }
+
+    #[test]
+    fn constraint_extraction_simple() {
+        // 1 <= i <= N-2  ->  i - 1 >= 0 ; N - 2 - i >= 0
+        let mut pb = ProgramBuilder::new("p");
+        let n = pb.param("N", 16);
+        pb.array("A", 1);
+        let s = StmtSpec::new("S0").dim(
+            Expr::constant(1),
+            Expr::sub(&Expr::param(n), &Expr::constant(2)),
+        );
+        pb.stmt(s);
+        let prog = pb.build();
+        let cs = &prog.stmts[0].constraints;
+        assert_eq!(cs.len(), 2);
+        // check both constraints hold at i = 1 and i = 14 for N = 16
+        for c in cs {
+            for i in [1i64, 14] {
+                assert!(c.form.eval(crate::expr::Env::new(&[i], &[16])) >= 0);
+            }
+        }
+        // violated outside
+        let violated = cs
+            .iter()
+            .any(|c| c.form.eval(crate::expr::Env::new(&[15], &[16])) < 0);
+        assert!(violated);
+    }
+
+    #[test]
+    fn constraint_extraction_splits_min_max() {
+        // max(0, i0-2) <= i1 <= min(9, i0+2): 4 constraints over 2 ivs
+        let mut pb = ProgramBuilder::new("p");
+        pb.array("A", 1);
+        let s = StmtSpec::new("S0").dim_range(0, 9).dim(
+            Expr::max(&Expr::constant(0), &Expr::sub(&Expr::iv(0), &Expr::constant(2))),
+            Expr::min(&Expr::constant(9), &Expr::add(&Expr::iv(0), &Expr::constant(2))),
+        );
+        pb.stmt(s);
+        let prog = pb.build();
+        // dim0 gives 2, dim1 gives 4
+        assert_eq!(prog.stmts[0].constraints.len(), 6);
+    }
+
+    #[test]
+    fn non_affine_bounds_dropped() {
+        let mut pb = ProgramBuilder::new("p");
+        pb.array("A", 1);
+        let s = StmtSpec::new("S0").dim(
+            Expr::floor_div(&Expr::param(0), 4), // non-affine lb: dropped
+            Expr::constant(10),
+        );
+        // no params declared -> Param(0) would be OOB; declare one
+        let mut pb2 = ProgramBuilder::new("p2");
+        let _n = pb2.param("N", 16);
+        pb2.array("A", 1);
+        let id = pb2.stmt(StmtSpec::new("S0").dim(
+            Expr::floor_div(&Expr::param(0), 4),
+            Expr::constant(10),
+        ));
+        let prog = pb2.build();
+        // only the ub constraint survives
+        assert_eq!(prog.stmts[id].constraints.len(), 1);
+        drop(s);
+    }
+
+    #[test]
+    fn to_affine_rejects_div() {
+        let e = Expr::floor_div(&Expr::iv(0), 2);
+        assert!(to_affine(&e, 1, 0).is_none());
+        let e = Expr::add(&Expr::mul(3, &Expr::iv(0)), &Expr::param(0));
+        let a = to_affine(&e, 2, 1).unwrap();
+        assert_eq!(a.iv_coeffs, vec![3, 0]);
+        assert_eq!(a.param_coeffs, vec![1]);
+    }
+}

@@ -1,0 +1,38 @@
+//! # tale3 — *A Tale of Three Runtimes*, reproduced
+//!
+//! Automatic generation of event-driven-task (EDT) programs from sequential
+//! loop-nest specifications, targeting three EDT runtimes (CnC-, SWARM- and
+//! OCR-style) through a runtime-agnostic layer, after Vasilache et al.,
+//! *A Tale of Three Runtimes* (CS.DC 2014).
+//!
+//! Pipeline (§4 of the paper):
+//!
+//! ```text
+//! ir::Program ──analysis──▶ GDG ──schedule──▶ bands/loop types
+//!          ──edt::map_program──▶ EdtTree (tags, chains, interior preds)
+//!          ──rt::{cnc,swarm,ocr,ompsim}──▶ execution (real threads)
+//!          ──sim──▶ deterministic multicore simulation (scaling tables)
+//! ```
+//!
+//! Leaf EDTs execute tile kernels either natively (`exec::kernels`) or via
+//! AOT-compiled JAX/Pallas HLO artifacts through PJRT (`runtime`).
+
+pub mod analysis;
+pub mod bench;
+pub mod codegen;
+pub mod edt;
+pub mod exec;
+pub mod expr;
+pub mod ir;
+pub mod ral;
+pub mod rt;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod workloads;
+
+pub use edt::{map_program, EdtTree, MapOptions};
+pub use exec::Plan;
+pub use ir::{Program, ProgramBuilder};
+pub use ral::DepMode;
+pub use rt::{Pool, RuntimeKind};

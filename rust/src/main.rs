@@ -1,0 +1,232 @@
+//! `tale3` — command-line launcher for the EDT pipeline.
+//!
+//! Subcommands:
+//!   list                              list benchmark workloads
+//!   explain <wl> [--size S]           dump deps, schedule and EDT tree
+//!   run <wl> [opts]                   execute on the real runtimes
+//!   sim <wl> [opts]                   simulate on the modeled testbed
+//!   table <1|2|3|4|5|fig2>            pointers to the bench targets
+//!
+//! Common options: --size tiny|small|paper, --runtime cnc-block|cnc-async|
+//! cnc-dep|swarm|ocr|omp|all, --threads N, --tiles a,b,c, --levels k,
+//! --gran N, --no-verify.
+//! (Argument parsing is hand-rolled: clap is not in the offline crate set.)
+
+use std::sync::Arc;
+use tale3::analysis::build_gdg;
+use tale3::edt::stats::characterize;
+use tale3::exec::LeafRunner;
+use tale3::ral::DepMode;
+use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::sim::{simulate, simulate_omp, CostModel, Machine};
+use tale3::workloads::{by_name, registry, Size};
+
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    it.next()
+                } else {
+                    None
+                };
+                flags.push((name.to_string(), val));
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+    fn size(&self) -> Size {
+        match self.flag("size").unwrap_or("small") {
+            "tiny" => Size::Tiny,
+            "paper" => Size::Paper,
+            _ => Size::Small,
+        }
+    }
+    fn threads(&self) -> usize {
+        self.flag("threads").and_then(|s| s.parse().ok()).unwrap_or(2)
+    }
+    fn runtimes(&self) -> Vec<RuntimeKind> {
+        match self.flag("runtime").unwrap_or("all") {
+            "cnc-block" => vec![RuntimeKind::Edt(DepMode::CncBlock)],
+            "cnc-async" => vec![RuntimeKind::Edt(DepMode::CncAsync)],
+            "cnc-dep" => vec![RuntimeKind::Edt(DepMode::CncDep)],
+            "swarm" => vec![RuntimeKind::Edt(DepMode::Swarm)],
+            "ocr" => vec![RuntimeKind::Edt(DepMode::Ocr)],
+            "omp" => vec![RuntimeKind::Omp],
+            _ => RuntimeKind::all().to_vec(),
+        }
+    }
+    fn map_opts(&self, base: &tale3::MapOptions) -> tale3::MapOptions {
+        let mut opts = base.clone();
+        if let Some(t) = self.flag("tiles") {
+            opts.tile_sizes = t.split(',').filter_map(|x| x.parse().ok()).collect();
+        }
+        if let Some(l) = self.flag("levels") {
+            opts.level_split = l.split(',').filter_map(|x| x.parse().ok()).collect();
+        }
+        if let Some(g) = self.flag("gran") {
+            opts.leaf_extra = g.parse().unwrap_or(0);
+        }
+        opts
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "list" => {
+            println!("{:<16} (sizes: tiny | small | paper)", "workload");
+            for w in registry() {
+                let inst = (w.build)(Size::Small);
+                println!(
+                    "{:<16} depth {}  stmts {}  small iter {:.2e}",
+                    w.name,
+                    inst.prog.max_depth(),
+                    inst.prog.stmts.len(),
+                    inst.total_flops
+                        / inst.prog.stmts.iter().map(|s| s.flops_per_point).fold(0.0, f64::max).max(1.0)
+                );
+            }
+        }
+        "explain" => {
+            let name = args.positional.get(1).ok_or_else(|| anyhow::anyhow!("explain <workload>"))?;
+            let inst = (by_name(name).ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?.build)(args.size());
+            let gdg = build_gdg(&inst.prog);
+            println!("== dependences ({}) ==", gdg.edges.len());
+            for e in &gdg.edges {
+                println!("  {e}");
+            }
+            let sched = tale3::schedule::schedule(&inst.prog, &gdg, &inst.map_opts.sched);
+            match sched {
+                Ok(s) => println!("\n== schedule ==\n{s}"),
+                Err(e) => println!("\n== schedule == (hierarchical mapping: {e})"),
+            }
+            let opts = args.map_opts(&inst.map_opts);
+            let tree = inst.tree_with(&opts)?;
+            println!("\n== EDT tree ==\n{}", tree.dump());
+            let c = characterize(&tree, &inst.params, 8);
+            println!(
+                "== characteristics ==\nleaf EDTs {}  worker instances {}  max Fp/EDT {:.0}",
+                c.leaf_edts, c.worker_instances, c.max_flops_per_edt
+            );
+        }
+        "run" => {
+            let name = args.positional.get(1).ok_or_else(|| anyhow::anyhow!("run <workload>"))?;
+            let inst = (by_name(name).ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?.build)(args.size());
+            let opts = args.map_opts(&inst.map_opts);
+            let plan = inst.plan_with(&opts)?;
+            let verify = !args.has("no-verify");
+            let oracle = if verify {
+                let o = inst.arrays();
+                tale3::exec::run_seq(&inst.prog, &inst.params, &o, &*inst.kernels);
+                Some(o)
+            } else {
+                None
+            };
+            let pool = Pool::new(args.threads());
+            println!(
+                "{:<10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>9} {:>7}",
+                "runtime", "seconds", "Gflop/s", "tasks", "steals", "f.gets", "workratio", "verify"
+            );
+            for kind in args.runtimes() {
+                let arrays = inst.arrays();
+                let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+                    arrays: arrays.clone(),
+                    kernels: inst.kernels.clone(),
+                });
+                let r = rt::run(kind, &plan, &leaf, &pool, inst.total_flops)?;
+                let ver = match &oracle {
+                    Some(o) => {
+                        if o.max_abs_diff(&arrays) == 0.0 {
+                            "ok"
+                        } else {
+                            "FAIL"
+                        }
+                    }
+                    None => "-",
+                };
+                println!(
+                    "{:<10} {:>9.4} {:>9.3} {:>8} {:>8} {:>8} {:>8.1}% {:>7}",
+                    r.runtime,
+                    r.seconds,
+                    r.gflops,
+                    r.metrics.total_tasks(),
+                    r.metrics.steals,
+                    r.metrics.failed_gets,
+                    r.metrics.work_ratio() * 100.0,
+                    ver
+                );
+            }
+        }
+        "sim" => {
+            let name = args.positional.get(1).ok_or_else(|| anyhow::anyhow!("sim <workload>"))?;
+            let inst = (by_name(name).ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?.build)(args.size());
+            let opts = args.map_opts(&inst.map_opts);
+            let plan = inst.plan_with(&opts)?;
+            let machine = Machine::default();
+            let costs = CostModel::default();
+            let threads: Vec<usize> = args
+                .flag("threads")
+                .map(|t| t.split(',').filter_map(|x| x.parse().ok()).collect())
+                .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]);
+            println!("simulated testbed: 2-socket x 8-core x 2-SMT (Gflop/s)");
+            print!("{:<10}", "runtime");
+            for t in &threads {
+                print!("{t:>8}");
+            }
+            println!();
+            for kind in args.runtimes() {
+                print!("{:<10}", kind.name());
+                for &t in &threads {
+                    let g = match kind {
+                        RuntimeKind::Edt(m) => {
+                            simulate(&plan, m, t, &machine, &costs, true, inst.total_flops).gflops
+                        }
+                        RuntimeKind::Omp => {
+                            inst.total_flops / simulate_omp(&plan, t, &machine, &costs, true) / 1e9
+                        }
+                    };
+                    print!("{g:>8.2}");
+                }
+                println!();
+            }
+        }
+        "table" => {
+            println!("tables and figures are regenerated by the bench targets:");
+            println!("  cargo bench --bench fig2_heat3d");
+            println!("  cargo bench --bench table1_cnc_modes");
+            println!("  cargo bench --bench table2_characteristics");
+            println!("  cargo bench --bench table3_hierarchy");
+            println!("  cargo bench --bench table4_runtimes");
+            println!("  cargo bench --bench table5_granularity");
+            println!("  cargo bench --bench micro_overheads   (CostModel calibration)");
+        }
+        _ => {
+            println!("tale3 — A Tale of Three Runtimes (reproduction)");
+            println!("usage: tale3 <list|explain|run|sim|table> [workload] [--size tiny|small|paper]");
+            println!("       [--runtime cnc-block|cnc-async|cnc-dep|swarm|ocr|omp|all]");
+            println!("       [--threads N[,N..]] [--tiles a,b,c] [--levels k] [--gran n] [--no-verify]");
+        }
+    }
+    Ok(())
+}

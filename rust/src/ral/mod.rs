@@ -1,0 +1,298 @@
+//! The Runtime-Agnostic Layer (RAL, §4.7).
+//!
+//! "Our solution generates calls into a runtime-agnostic C++ layer, which we
+//! have retargeted to Intel's CnC, ETI's SWARM, and the Open Community
+//! Runtime." Here the RAL is a set of Rust types shared by every runtime
+//! backend (`crate::rt`) and by the testbed simulator (`crate::sim`):
+//!
+//! - [`TagKey`] — the `(id, tag tuple)` pair that uniquely identifies an
+//!   EDT instance (§1, §4.5): the paper's templated `TaskTag`.
+//! - [`Task`] — the three runtime EDT roles generated per compile-time EDT
+//!   (Fig 6): STARTUP / WORKER / SHUTDOWN, plus the PRESCRIBER step the
+//!   paper adds for OCR (§4.7.3).
+//! - [`FinishScope`] / [`Continuation`] — hierarchical async-finish
+//!   counting dependences (§4.8): SWARM's `swarm_Dep_t`, OCR's finish-EDT,
+//!   and CnC's `atomic<int>` + signal-item emulation all implement this
+//!   shape.
+//! - [`DepMode`] — the dependence-specification variants of §5.1 and the
+//!   per-runtime mechanisms of §4.7.3.
+//! - [`Metrics`] — counters for the §5.3 overhead discussion (failed gets,
+//!   steals, work ratio).
+
+use std::sync::atomic::{AtomicIsize, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Unique runtime identity of an EDT instance: compile-time EDT id + tag
+/// coordinates (the tuple-space key).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TagKey {
+    pub node: u32,
+    pub coords: Box<[i64]>,
+}
+
+impl TagKey {
+    pub fn new(node: usize, coords: &[i64]) -> Self {
+        TagKey {
+            node: node as u32,
+            coords: coords.into(),
+        }
+    }
+}
+
+/// Which runtime + dependence-specification mechanism to use. The CnC
+/// variants are the §5.1 experiment; SWARM/OCR follow §4.7.3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepMode {
+    /// CnC with blocking gets: a WORKER executes speculatively, its first
+    /// failing get rolls the step back and requeues it on that single item
+    /// ("in the worst-case scenario, each step with N dependences could do
+    /// N−1 failing gets and be requeued as many times").
+    CncBlock,
+    /// CnC `unsafe_get`/`flush` ("more asynchrony"): all gets checked
+    /// non-blocking, the step parks once on every missing item.
+    CncAsync,
+    /// CnC `depends` mechanism: dependences pre-specified at task-creation
+    /// time; the scheduler only dispatches ready steps.
+    CncDep,
+    /// SWARM: fully non-blocking tagTable gets with explicit requeue,
+    /// native counting-dependence objects for async-finish.
+    Swarm,
+    /// OCR: explicit event graph; a PRESCRIBER EDT per WORKER performs the
+    /// tag→event mapping (the race-condition fix of §4.7.3); native
+    /// finish-EDT.
+    Ocr,
+}
+
+impl DepMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DepMode::CncBlock => "cnc-block",
+            DepMode::CncAsync => "cnc-async",
+            DepMode::CncDep => "cnc-dep",
+            DepMode::Swarm => "swarm",
+            DepMode::Ocr => "ocr",
+        }
+    }
+    /// CnC finish emulation: the last worker puts a signal item into the
+    /// tag table and SHUTDOWN gets it (§4.8); SWARM/OCR signal natively.
+    pub fn finish_via_tag_table(&self) -> bool {
+        matches!(self, DepMode::CncBlock | DepMode::CncAsync | DepMode::CncDep)
+    }
+}
+
+/// What happens when a finish scope drains or a worker completes.
+#[derive(Debug, Clone)]
+pub enum Continuation {
+    /// Nothing (root sentinel is signalled separately).
+    Done,
+    /// Mark `key` done in the tag table (waking waiters) and then decrement
+    /// the surrounding finish scope — the completion of a WORKER whose
+    /// subtree has fully executed.
+    WorkerDone {
+        key: TagKey,
+        scope: Arc<FinishScope>,
+    },
+    /// Start sibling group `next` of node `node` under `coords`; when the
+    /// last sibling finishes, continue with `after`.
+    NextSibling {
+        node: u32,
+        coords: Box<[i64]>,
+        next: u32,
+        after: Box<Continuation>,
+    },
+    /// Decrement an enclosing finish scope (non-leaf WORKER relegating
+    /// completion to its SHUTDOWN, §4.8).
+    Notify(Arc<FinishScope>),
+}
+
+/// A counting dependence (§4.8): initialized to the number of spawned
+/// WORKERs; the SHUTDOWN fires when it reaches zero.
+#[derive(Debug)]
+pub struct FinishScope {
+    pub remaining: AtomicIsize,
+    /// Continuation executed by the SHUTDOWN EDT.
+    pub on_zero: Mutex<Option<Continuation>>,
+    /// CnC emulation: the signal item's tag-table key (None for
+    /// SWARM/OCR native signalling).
+    pub signal_key: Option<TagKey>,
+}
+
+impl FinishScope {
+    pub fn new(count: isize, on_zero: Continuation, signal_key: Option<TagKey>) -> Arc<Self> {
+        Arc::new(FinishScope {
+            remaining: AtomicIsize::new(count),
+            on_zero: Mutex::new(Some(on_zero)),
+            signal_key,
+        })
+    }
+
+    /// Decrement; returns true when this call drained the scope (the caller
+    /// is "the dynamically last worker" and must fire the SHUTDOWN).
+    pub fn decrement(&self) -> bool {
+        self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    pub fn take_continuation(&self) -> Option<Continuation> {
+        self.on_zero.lock().unwrap().take()
+    }
+}
+
+/// The runtime EDT roles (Fig 6) plus OCR's prescriber.
+#[derive(Debug, Clone)]
+pub enum Task {
+    /// Spawn WORKERs of `node` under the ancestor coordinates `prefix`,
+    /// set up the counting dependence, chain the SHUTDOWN.
+    Startup {
+        node: u32,
+        prefix: Box<[i64]>,
+        /// What the SHUTDOWN of this scope does once all workers finished.
+        on_finish: Box<Continuation>,
+    },
+    /// Execute one EDT instance (waits on its chain antecedents according
+    /// to the `DepMode`).
+    Worker {
+        node: u32,
+        coords: Box<[i64]>,
+        scope: Arc<FinishScope>,
+    },
+    /// OCR-style prescriber: resolve `worker`'s antecedent tags to events
+    /// and hand the worker to the scheduler once they are all satisfied.
+    Prescriber {
+        node: u32,
+        coords: Box<[i64]>,
+        scope: Arc<FinishScope>,
+    },
+    /// Synchronization point for a finish scope (Fig 6 step 3).
+    Shutdown { scope: Arc<FinishScope> },
+}
+
+impl Task {
+    pub fn role_name(&self) -> &'static str {
+        match self {
+            Task::Startup { .. } => "startup",
+            Task::Worker { .. } => "worker",
+            Task::Prescriber { .. } => "prescriber",
+            Task::Shutdown { .. } => "shutdown",
+        }
+    }
+}
+
+/// Runtime counters (§5.3: "more than 85% of the non-idle time is spent
+/// executing work … stealing and queue management taking up to 80%").
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub startups: AtomicU64,
+    pub workers: AtomicU64,
+    pub prescribers: AtomicU64,
+    pub shutdowns: AtomicU64,
+    pub puts: AtomicU64,
+    pub gets: AtomicU64,
+    pub failed_gets: AtomicU64,
+    pub requeues: AtomicU64,
+    pub steals: AtomicU64,
+    pub failed_steals: AtomicU64,
+    pub parks: AtomicU64,
+    /// Nanoseconds spent executing leaf work vs. total non-idle time.
+    pub work_ns: AtomicU64,
+    pub busy_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            startups: self.startups.load(Ordering::Relaxed),
+            workers: self.workers.load(Ordering::Relaxed),
+            prescribers: self.prescribers.load(Ordering::Relaxed),
+            shutdowns: self.shutdowns.load(Ordering::Relaxed),
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            failed_gets: self.failed_gets.load(Ordering::Relaxed),
+            requeues: self.requeues.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            failed_steals: self.failed_steals.load(Ordering::Relaxed),
+            parks: self.parks.load(Ordering::Relaxed),
+            work_ns: self.work_ns.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of [`Metrics`] for reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub startups: u64,
+    pub workers: u64,
+    pub prescribers: u64,
+    pub shutdowns: u64,
+    pub puts: u64,
+    pub gets: u64,
+    pub failed_gets: u64,
+    pub requeues: u64,
+    pub steals: u64,
+    pub failed_steals: u64,
+    pub parks: u64,
+    pub work_ns: u64,
+    pub busy_ns: u64,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of non-idle time spent in leaf work (§5.3 work ratio).
+    pub fn work_ratio(&self) -> f64 {
+        if self.busy_ns == 0 {
+            0.0
+        } else {
+            self.work_ns as f64 / self.busy_ns as f64
+        }
+    }
+    pub fn total_tasks(&self) -> u64 {
+        self.startups + self.workers + self.prescribers + self.shutdowns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_key_equality_and_hash() {
+        use std::collections::HashMap;
+        let a = TagKey::new(3, &[1, 2]);
+        let b = TagKey::new(3, &[1, 2]);
+        let c = TagKey::new(3, &[1, 3]);
+        let d = TagKey::new(4, &[1, 2]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        let mut m = HashMap::new();
+        m.insert(a.clone(), 1);
+        assert_eq!(m.get(&b), Some(&1));
+        assert_eq!(m.get(&c), None);
+    }
+
+    #[test]
+    fn finish_scope_drains_once() {
+        let s = FinishScope::new(3, Continuation::Done, None);
+        assert!(!s.decrement());
+        assert!(!s.decrement());
+        assert!(s.decrement());
+        assert!(s.take_continuation().is_some());
+        assert!(s.take_continuation().is_none());
+    }
+
+    #[test]
+    fn metrics_work_ratio() {
+        let m = Metrics::default();
+        m.work_ns.store(850, Ordering::Relaxed);
+        m.busy_ns.store(1000, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!((s.work_ratio() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depmode_names() {
+        assert_eq!(DepMode::CncBlock.name(), "cnc-block");
+        assert!(DepMode::CncDep.finish_via_tag_table());
+        assert!(!DepMode::Swarm.finish_via_tag_table());
+        assert!(!DepMode::Ocr.finish_via_tag_table());
+    }
+}

@@ -1,0 +1,553 @@
+//! The RAL execution engine (Fig 6): STARTUP / WORKER / SHUTDOWN
+//! expansion over the EDT tree, parameterized by [`DepMode`].
+//!
+//! One engine implements all five runtime variants because the paper's
+//! three runtimes share the EDT skeleton and differ in their dependence
+//! *mechanism* (§4.7.3) — exactly the axis `DepMode` captures:
+//!
+//! | mode       | dispatch                    | wait mechanism                         |
+//! |------------|-----------------------------|----------------------------------------|
+//! | CncBlock   | speculative                 | first failing get → rollback + requeue |
+//! | CncAsync   | speculative                 | check all, park once on missing        |
+//! | CncDep     | prescribed at creation      | countdown, no speculative dispatch     |
+//! | Swarm      | speculative                 | non-blocking gets + explicit requeue   |
+//! | Ocr        | prescribed via PRESCRIBER   | event countdown (extra EDT per worker) |
+//!
+//! Hierarchical async-finish (§4.8): every STARTUP allocates a
+//! [`FinishScope`] counting dependence. SWARM/OCR fire the SHUTDOWN
+//! natively from the last decrement; the CnC modes emulate it — the last
+//! WORKER puts a *signal item* into the tag table and the SHUTDOWN is a
+//! step blocked on that item.
+
+use super::pool::{Job, Pool, WorkerCtx};
+use super::table::TagTable;
+use crate::exec::plan::{ArenaBody, Plan};
+use crate::ral::{Continuation, DepMode, FinishScope, Metrics, Task, TagKey};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// High bit marks finish-signal keys so they never collide with
+/// worker-completion keys of the same node.
+const FINISH_BIT: u32 = 1 << 31;
+
+/// Executes leaf work. Implemented by `exec::driver` (native / PJRT
+/// kernels), by test recorders, and by no-ops for overhead benches.
+pub trait LeafExec: Send + Sync {
+    fn run_leaf(&self, plan: &Plan, node_id: u32, coords: &[i64]);
+}
+
+/// A leaf executor that does nothing (runtime-overhead measurements).
+pub struct NoopLeaf;
+impl LeafExec for NoopLeaf {
+    fn run_leaf(&self, _: &Plan, _: u32, _: &[i64]) {}
+}
+
+pub struct Engine {
+    pub plan: Arc<Plan>,
+    pub mode: DepMode,
+    pub table: TagTable,
+    pub leaf: Arc<dyn LeafExec>,
+    completed: AtomicBool,
+}
+
+impl Engine {
+    pub fn new(plan: Arc<Plan>, mode: DepMode, leaf: Arc<dyn LeafExec>) -> Arc<Engine> {
+        Arc::new(Engine {
+            plan,
+            mode,
+            table: TagTable::default(),
+            leaf,
+            completed: AtomicBool::new(false),
+        })
+    }
+
+    /// Run the whole plan on `pool`; returns the wall-clock seconds of the
+    /// execution region (startup of the pool itself excluded — pools are
+    /// created once and reused across runs, like the runtimes' own thread
+    /// pools).
+    pub fn run(self: &Arc<Engine>, pool: &Pool) -> Result<f64> {
+        let eng = self.clone();
+        let root = Task::Startup {
+            node: self.plan.root,
+            prefix: Box::new([]),
+            on_finish: Box::new(Continuation::Done),
+        };
+        let t0 = std::time::Instant::now();
+        pool.run_until_quiescent(Box::new(move |ctx| eng.exec(ctx, root)));
+        let dt = t0.elapsed().as_secs_f64();
+        if !self.completed.load(Ordering::Acquire) {
+            bail!(
+                "runtime deadlock: pool quiescent but plan '{}' incomplete ({} keys with parked waiters)",
+                self.plan.name,
+                self.table.waiting_keys()
+            );
+        }
+        Ok(dt)
+    }
+
+    fn job(self: &Arc<Self>, task: Task) -> Job {
+        let eng = self.clone();
+        Box::new(move |ctx| eng.exec(ctx, task))
+    }
+
+    fn spawn(self: &Arc<Self>, ctx: &WorkerCtx<'_>, task: Task) {
+        ctx.spawn(self.job(task));
+    }
+
+    /// Worker-completion tag key.
+    fn done_key(node: u32, coords: &[i64]) -> TagKey {
+        TagKey {
+            node,
+            coords: coords.into(),
+        }
+    }
+
+    fn finish_key(node: u32, prefix: &[i64]) -> TagKey {
+        TagKey {
+            node: node | FINISH_BIT,
+            coords: prefix.into(),
+        }
+    }
+
+    pub fn exec(self: &Arc<Self>, ctx: &WorkerCtx<'_>, task: Task) {
+        let m = ctx.metrics();
+        match task {
+            Task::Startup {
+                node,
+                prefix,
+                on_finish,
+            } => {
+                m.startups.fetch_add(1, Ordering::Relaxed);
+                self.startup(ctx, node, &prefix, *on_finish);
+            }
+            Task::Worker {
+                node,
+                coords,
+                scope,
+            } => {
+                m.workers.fetch_add(1, Ordering::Relaxed);
+                self.worker(ctx, node, coords, scope, m);
+            }
+            Task::Prescriber {
+                node,
+                coords,
+                scope,
+            } => {
+                m.prescribers.fetch_add(1, Ordering::Relaxed);
+                // resolve antecedents to events and park the worker on them
+                let keys: Vec<TagKey> = self
+                    .plan
+                    .antecedents(node, &coords)
+                    .iter()
+                    .map(|a| Self::done_key(node, a))
+                    .collect();
+                m.gets.fetch_add(keys.len() as u64, Ordering::Relaxed);
+                let w = Task::Worker {
+                    node,
+                    coords,
+                    scope,
+                };
+                if let Some(ready) = self.table.register(w, &keys) {
+                    self.spawn(ctx, ready);
+                }
+            }
+            Task::Shutdown { scope } => {
+                m.shutdowns.fetch_add(1, Ordering::Relaxed);
+                if let Some(cont) = scope.take_continuation() {
+                    self.continue_with(ctx, cont);
+                }
+            }
+        }
+    }
+
+    /// STARTUP (Fig 6 step 1): enumerate the tag space, set up the counting
+    /// dependence, chain the SHUTDOWN, spawn the WORKERs.
+    fn startup(self: &Arc<Self>, ctx: &WorkerCtx<'_>, node: u32, prefix: &[i64], on_finish: Continuation) {
+        let mut tags: Vec<Box<[i64]>> = Vec::new();
+        self.plan.for_each_tag(node, prefix, &mut |c| tags.push(c.into()));
+        let n = tags.len();
+        let signal_key = if self.mode.finish_via_tag_table() {
+            Some(Self::finish_key(node, prefix))
+        } else {
+            None
+        };
+        let scope = FinishScope::new(n as isize, on_finish, signal_key.clone());
+
+        if let Some(sig) = &signal_key {
+            // CnC: SHUTDOWN is a step blocked on the signal item
+            let sd = Task::Shutdown {
+                scope: scope.clone(),
+            };
+            if let Some(ready) = self.table.register(sd, std::slice::from_ref(sig)) {
+                // only possible if the signal was already put (re-run) —
+                // cannot happen within one run
+                self.spawn(ctx, ready);
+            }
+        }
+        if n == 0 {
+            self.fire_shutdown(ctx, &scope);
+            return;
+        }
+        for coords in tags {
+            let w = Task::Worker {
+                node,
+                coords: coords.clone(),
+                scope: scope.clone(),
+            };
+            match self.mode {
+                DepMode::CncBlock | DepMode::CncAsync | DepMode::Swarm => {
+                    // speculative dispatch; the worker itself performs gets
+                    self.spawn(ctx, w);
+                }
+                DepMode::CncDep => {
+                    // depends-mode: pre-specify dependences at creation time
+                    let keys: Vec<TagKey> = self
+                        .plan
+                        .antecedents(node, &coords)
+                        .iter()
+                        .map(|a| Self::done_key(node, a))
+                        .collect();
+                    if let Some(ready) = self.table.register(w, &keys) {
+                        self.spawn(ctx, ready);
+                    }
+                }
+                DepMode::Ocr => {
+                    // the prescriber EDT performs the tag→event mapping
+                    self.spawn(
+                        ctx,
+                        Task::Prescriber {
+                            node,
+                            coords,
+                            scope: scope.clone(),
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    /// WORKER (Fig 6 step 2).
+    fn worker(
+        self: &Arc<Self>,
+        ctx: &WorkerCtx<'_>,
+        node: u32,
+        coords: Box<[i64]>,
+        scope: Arc<FinishScope>,
+        m: &Metrics,
+    ) {
+        match self.mode {
+            DepMode::CncBlock => {
+                // blocking gets: first miss rolls the step back and parks it
+                // on that single item; on wake the step restarts and re-does
+                // its gets ("on a step suspension, the gets are rolled back")
+                let ants = self.plan.antecedents(node, &coords);
+                for a in &ants {
+                    let key = Self::done_key(node, a);
+                    m.gets.fetch_add(1, Ordering::Relaxed);
+                    if !self.table.is_done(&key) {
+                        m.failed_gets.fetch_add(1, Ordering::Relaxed);
+                        m.requeues.fetch_add(1, Ordering::Relaxed);
+                        let w = Task::Worker {
+                            node,
+                            coords,
+                            scope,
+                        };
+                        if let Some(ready) = self.table.register(w, std::slice::from_ref(&key)) {
+                            self.spawn(ctx, ready); // raced: done meanwhile
+                        }
+                        return;
+                    }
+                }
+            }
+            DepMode::CncAsync | DepMode::Swarm => {
+                // non-blocking gets: collect all missing items, park once
+                let ants = self.plan.antecedents(node, &coords);
+                let mut missing: Vec<TagKey> = Vec::new();
+                for a in &ants {
+                    let key = Self::done_key(node, a);
+                    m.gets.fetch_add(1, Ordering::Relaxed);
+                    if !self.table.is_done(&key) {
+                        m.failed_gets.fetch_add(1, Ordering::Relaxed);
+                        missing.push(key);
+                    }
+                }
+                if !missing.is_empty() {
+                    m.requeues.fetch_add(1, Ordering::Relaxed);
+                    let w = Task::Worker {
+                        node,
+                        coords,
+                        scope,
+                    };
+                    if let Some(ready) = self.table.register(w, &missing) {
+                        self.spawn(ctx, ready);
+                    }
+                    return;
+                }
+            }
+            DepMode::CncDep | DepMode::Ocr => {
+                // dependences were pre-satisfied before dispatch
+            }
+        }
+        self.run_body(ctx, node, coords, scope);
+    }
+
+    fn run_body(
+        self: &Arc<Self>,
+        ctx: &WorkerCtx<'_>,
+        node: u32,
+        coords: Box<[i64]>,
+        scope: Arc<FinishScope>,
+    ) {
+        let key = Self::done_key(node, &coords);
+        match &self.plan.node(node).body {
+            ArenaBody::Leaf(_) => {
+                let t0 = std::time::Instant::now();
+                self.leaf.run_leaf(&self.plan, node, &coords);
+                ctx.metrics()
+                    .work_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                self.continue_with(ctx, Continuation::WorkerDone { key, scope });
+            }
+            ArenaBody::Nested(child) => {
+                let child = *child;
+                self.spawn(
+                    ctx,
+                    Task::Startup {
+                        node: child,
+                        prefix: coords,
+                        on_finish: Box::new(Continuation::WorkerDone { key, scope }),
+                    },
+                );
+            }
+            ArenaBody::Siblings(children) => {
+                let first = children[0];
+                self.spawn(
+                    ctx,
+                    Task::Startup {
+                        node: first,
+                        prefix: coords.clone(),
+                        on_finish: Box::new(Continuation::NextSibling {
+                            node,
+                            coords,
+                            next: 1,
+                            after: Box::new(Continuation::WorkerDone { key, scope }),
+                        }),
+                    },
+                );
+            }
+        }
+    }
+
+    fn continue_with(self: &Arc<Self>, ctx: &WorkerCtx<'_>, cont: Continuation) {
+        match cont {
+            Continuation::Done => {
+                self.completed.store(true, Ordering::Release);
+            }
+            Continuation::WorkerDone { key, scope } => {
+                self.put(ctx, key);
+                if scope.decrement() {
+                    self.fire_shutdown(ctx, &scope);
+                }
+            }
+            Continuation::NextSibling {
+                node,
+                coords,
+                next,
+                after,
+            } => {
+                let ArenaBody::Siblings(children) = &self.plan.node(node).body else {
+                    unreachable!("NextSibling on non-sibling node");
+                };
+                if (next as usize) < children.len() {
+                    let child = children[next as usize];
+                    self.spawn(
+                        ctx,
+                        Task::Startup {
+                            node: child,
+                            prefix: coords.clone(),
+                            on_finish: Box::new(Continuation::NextSibling {
+                                node,
+                                coords,
+                                next: next + 1,
+                                after,
+                            }),
+                        },
+                    );
+                } else {
+                    self.continue_with(ctx, *after);
+                }
+            }
+            Continuation::Notify(scope) => {
+                if scope.decrement() {
+                    self.fire_shutdown(ctx, &scope);
+                }
+            }
+        }
+    }
+
+    fn put(self: &Arc<Self>, ctx: &WorkerCtx<'_>, key: TagKey) {
+        ctx.metrics().puts.fetch_add(1, Ordering::Relaxed);
+        for ready in self.table.put(key) {
+            self.spawn(ctx, ready);
+        }
+    }
+
+    /// Fire the SHUTDOWN of a drained scope. CnC modes signal through the
+    /// tag table (the registered SHUTDOWN step gets the item); SWARM/OCR
+    /// spawn the SHUTDOWN EDT directly (native counting dep / finish-EDT).
+    fn fire_shutdown(self: &Arc<Self>, ctx: &WorkerCtx<'_>, scope: &Arc<FinishScope>) {
+        if let Some(sig) = &scope.signal_key {
+            self.put(ctx, sig.clone());
+        } else {
+            self.spawn(
+                ctx,
+                Task::Shutdown {
+                    scope: scope.clone(),
+                },
+            );
+        }
+    }
+}
+
+/// Shared fixtures for runtime tests (also used by `ompsim` tests).
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::*;
+    use crate::analysis::build_gdg;
+    use crate::edt::{map_program, MapOptions};
+    use crate::expr::{Affine, Expr};
+    use crate::ir::{Access, ProgramBuilder, StmtSpec};
+    use std::sync::Mutex;
+
+    /// Records the completion order of leaf EDTs.
+    #[derive(Default)]
+    pub struct RecorderLeaf {
+        pub log: Mutex<Vec<(u32, Vec<i64>)>>,
+    }
+    impl LeafExec for RecorderLeaf {
+        fn run_leaf(&self, _plan: &Plan, node: u32, coords: &[i64]) {
+            self.log.lock().unwrap().push((node, coords.to_vec()));
+        }
+    }
+
+    pub fn jac1d_plan(t: i64, n: i64, ts: (i64, i64)) -> Arc<Plan> {
+        let mut pb = ProgramBuilder::new("jac1d");
+        let tp = pb.param("T", t);
+        let np = pb.param("N", n);
+        let a = pb.array("A", 2);
+        let s = |iv: usize, c: i64| Affine::var_plus(2, 2, iv, c);
+        pb.stmt(
+            StmtSpec::new("S")
+                .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+                .dim(Expr::constant(1), Expr::sub(&Expr::param(np), &Expr::constant(2)))
+                .write(Access::new(a, vec![s(0, 1), s(1, 0)]))
+                .read(Access::new(a, vec![s(0, 0), s(1, -1)]))
+                .read(Access::new(a, vec![s(0, 0), s(1, 0)]))
+                .read(Access::new(a, vec![s(0, 0), s(1, 1)]))
+                .flops(3.0),
+        );
+        let prog = pb.build();
+        let gdg = build_gdg(&prog);
+        let tree = map_program(
+            &prog,
+            &gdg,
+            &MapOptions {
+                tile_sizes: vec![ts.0, ts.1],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        Arc::new(Plan::from_tree(&tree, vec![t, n]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::{jac1d_plan, RecorderLeaf as Recorder};
+    use super::*;
+    use std::sync::Mutex;
+
+    fn check_all_modes(plan: &Arc<Plan>, threads: usize) {
+        // expected leaf set from direct enumeration
+        let mut expected: Vec<(u32, Vec<i64>)> = Vec::new();
+        plan.for_each_tag(plan.root, &[], &mut |c| {
+            expected.push((plan.root, c.to_vec()));
+        });
+        expected.sort();
+        for mode in [
+            DepMode::CncBlock,
+            DepMode::CncAsync,
+            DepMode::CncDep,
+            DepMode::Swarm,
+            DepMode::Ocr,
+        ] {
+            let rec = Arc::new(Recorder {
+                log: Mutex::new(Vec::new()),
+            });
+            let eng = Engine::new(plan.clone(), mode, rec.clone());
+            let pool = Pool::new(threads);
+            eng.run(&pool).unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+            let mut log = rec.log.lock().unwrap().clone();
+            // 1. every leaf exactly once
+            let mut sorted = log.clone();
+            sorted.sort();
+            assert_eq!(sorted, expected, "{mode:?}: leaf set mismatch");
+            // 2. chain dependences respected in completion order
+            let pos: std::collections::HashMap<_, _> = log
+                .drain(..)
+                .enumerate()
+                .map(|(i, k)| (k, i))
+                .collect();
+            for (node, coords) in pos.keys() {
+                for ant in plan.antecedents(*node, coords) {
+                    let a = (*node, ant);
+                    assert!(
+                        pos[&a] < pos[&(*node, coords.clone())],
+                        "{mode:?}: dependence violated: {a:?} after {coords:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_modes_respect_chains_single_thread() {
+        let plan = jac1d_plan(8, 32, (4, 8));
+        check_all_modes(&plan, 1);
+    }
+
+    #[test]
+    fn all_modes_respect_chains_two_threads() {
+        let plan = jac1d_plan(8, 32, (4, 8));
+        check_all_modes(&plan, 2);
+    }
+
+    #[test]
+    fn all_modes_respect_chains_four_threads() {
+        let plan = jac1d_plan(6, 48, (2, 8));
+        check_all_modes(&plan, 4);
+    }
+
+    #[test]
+    fn metrics_reflect_mode_differences() {
+        let plan = jac1d_plan(8, 32, (4, 8));
+        let n_leaves = plan.count_tags(plan.root, &[]);
+        // DEP mode never fails a get
+        let eng = Engine::new(plan.clone(), DepMode::CncDep, Arc::new(NoopLeaf));
+        let pool = Pool::new(2);
+        eng.run(&pool).unwrap();
+        let m = pool.metrics().snapshot();
+        assert_eq!(m.failed_gets, 0);
+        assert_eq!(m.workers, n_leaves);
+        assert_eq!(m.prescribers, 0);
+
+        // OCR spawns one prescriber per worker
+        let eng = Engine::new(plan.clone(), DepMode::Ocr, Arc::new(NoopLeaf));
+        let pool = Pool::new(2);
+        eng.run(&pool).unwrap();
+        let m = pool.metrics().snapshot();
+        assert_eq!(m.prescribers, n_leaves);
+        assert_eq!(m.workers, n_leaves);
+    }
+}

@@ -1,0 +1,120 @@
+//! Runtime backends: the RAL engine instantiated as CnC / SWARM / OCR
+//! (§4.7.3), the OpenMP fork-join comparator (§5), and the shared
+//! work-stealing pool.
+
+pub mod engine;
+pub mod ompsim;
+pub mod pool;
+pub mod table;
+
+pub use engine::{Engine, LeafExec, NoopLeaf};
+pub use pool::{Pool, WorkerCtx};
+
+use crate::exec::plan::Plan;
+use crate::ral::{DepMode, MetricsSnapshot};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Which execution strategy to run a plan with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// EDT execution with the given dependence mechanism.
+    Edt(DepMode),
+    /// Bulk-synchronous fork-join (the paper's OpenMP rows).
+    Omp,
+}
+
+impl RuntimeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuntimeKind::Edt(m) => m.name(),
+            RuntimeKind::Omp => "omp",
+        }
+    }
+    pub fn all() -> [RuntimeKind; 6] {
+        [
+            RuntimeKind::Edt(DepMode::CncBlock),
+            RuntimeKind::Edt(DepMode::CncAsync),
+            RuntimeKind::Edt(DepMode::CncDep),
+            RuntimeKind::Edt(DepMode::Swarm),
+            RuntimeKind::Edt(DepMode::Ocr),
+            RuntimeKind::Omp,
+        ]
+    }
+}
+
+/// Outcome of one run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub runtime: &'static str,
+    pub threads: usize,
+    pub seconds: f64,
+    pub gflops: f64,
+    pub metrics: MetricsSnapshot,
+}
+
+fn delta(a: MetricsSnapshot, b: MetricsSnapshot) -> MetricsSnapshot {
+    MetricsSnapshot {
+        startups: b.startups - a.startups,
+        workers: b.workers - a.workers,
+        prescribers: b.prescribers - a.prescribers,
+        shutdowns: b.shutdowns - a.shutdowns,
+        puts: b.puts - a.puts,
+        gets: b.gets - a.gets,
+        failed_gets: b.failed_gets - a.failed_gets,
+        requeues: b.requeues - a.requeues,
+        steals: b.steals - a.steals,
+        failed_steals: b.failed_steals - a.failed_steals,
+        parks: b.parks - a.parks,
+        work_ns: b.work_ns - a.work_ns,
+        busy_ns: b.busy_ns - a.busy_ns,
+    }
+}
+
+/// Run a plan under a runtime on an existing pool. `total_flops` is used
+/// for the Gflop/s figure (paper metric).
+pub fn run(
+    kind: RuntimeKind,
+    plan: &Arc<Plan>,
+    leaf: &Arc<dyn LeafExec>,
+    pool: &Pool,
+    total_flops: f64,
+) -> Result<RunReport> {
+    let before = pool.metrics().snapshot();
+    let seconds = match kind {
+        RuntimeKind::Edt(mode) => {
+            let engine = Engine::new(plan.clone(), mode, leaf.clone());
+            engine.run(pool)?
+        }
+        RuntimeKind::Omp => ompsim::run_omp(plan, leaf, pool),
+    };
+    let after = pool.metrics().snapshot();
+    Ok(RunReport {
+        runtime: kind.name(),
+        threads: pool.n_workers,
+        seconds,
+        gflops: total_flops / seconds / 1e9,
+        metrics: delta(before, after),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_all_kinds_smoke() {
+        let plan = engine::tests_support::jac1d_plan(4, 24, (2, 8));
+        let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+        let pool = Pool::new(2);
+        for kind in RuntimeKind::all() {
+            let r = run(kind, &plan, &leaf, &pool, 1e6).unwrap();
+            assert!(r.seconds > 0.0, "{kind:?}");
+            if let RuntimeKind::Edt(_) = kind {
+                assert!(r.metrics.workers > 0, "{kind:?}: {:?}", r.metrics);
+                assert!(r.metrics.startups >= 1);
+                assert!(r.metrics.shutdowns >= 1);
+            }
+        }
+    }
+}

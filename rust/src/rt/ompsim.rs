@@ -1,0 +1,191 @@
+//! The "OpenMP" comparator: bulk-synchronous fork-join execution of the
+//! same mapped program (§5, Tables 1/4, Fig 2).
+//!
+//! Chain-synchronized tag dimensions are executed as *wavefronts*
+//! (`wave = Σ chain coordinates`, the time-skewed `doall` of Fig 1(a));
+//! tags inside a wave are statically chunked across threads with a barrier
+//! after every wave — exactly the bulk-synchronous behaviour whose
+//! load-balancing weaknesses the EDT runtimes are measured against.
+//! Only the outermost parallel level forks (OpenMP default: nested
+//! parallelism off); nested nodes execute sequentially inside their chunk.
+
+use super::engine::LeafExec;
+use super::pool::Pool;
+use crate::exec::plan::{ArenaBody, Plan};
+use crate::edt::SyncKind;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Latch {
+    remaining: AtomicUsize,
+    m: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Arc<Self> {
+        Arc::new(Latch {
+            remaining: AtomicUsize::new(n),
+            m: Mutex::new(()),
+            cv: Condvar::new(),
+        })
+    }
+    fn done(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.m.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+    fn wait(&self) {
+        let mut g = self.m.lock().unwrap();
+        while self.remaining.load(Ordering::Acquire) > 0 {
+            let (g2, _) = self
+                .cv
+                .wait_timeout(g, std::time::Duration::from_millis(1))
+                .unwrap();
+            g = g2;
+        }
+    }
+}
+
+/// Run the plan fork-join style; returns elapsed seconds.
+pub fn run_omp(plan: &Arc<Plan>, leaf: &Arc<dyn LeafExec>, pool: &Pool) -> f64 {
+    let t0 = std::time::Instant::now();
+    exec_node(plan, leaf, pool, plan.root, &[], true);
+    t0.elapsed().as_secs_f64()
+}
+
+fn exec_node(
+    plan: &Arc<Plan>,
+    leaf: &Arc<dyn LeafExec>,
+    pool: &Pool,
+    node_id: u32,
+    prefix: &[i64],
+    allow_parallel: bool,
+) {
+    let node = plan.node(node_id);
+    let mut tags: Vec<Box<[i64]>> = Vec::new();
+    plan.for_each_tag(node_id, prefix, &mut |c| tags.push(c.into()));
+    if tags.is_empty() {
+        return;
+    }
+    let chain_dims: Vec<usize> = (0..node.dims.len())
+        .filter(|&d| node.dims[d].sync == SyncKind::Chain)
+        .collect();
+
+    // group tags into waves by the sum of chain coordinates; `for_each_tag`
+    // emits lexicographic order, preserved inside each wave
+    let mut waves: Vec<(i64, Vec<Box<[i64]>>)> = Vec::new();
+    for t in tags {
+        let w: i64 = chain_dims
+            .iter()
+            .map(|&d| t[node.iv_base + d].div_euclid(node.dims[d].step.max(1)))
+            .sum();
+        match waves.binary_search_by_key(&w, |(k, _)| *k) {
+            Ok(i) => waves[i].1.push(t),
+            Err(i) => waves.insert(i, (w, vec![t])),
+        }
+    }
+
+    for (_w, wave) in waves {
+        if allow_parallel && wave.len() > 1 {
+            // static chunking + barrier (OpenMP `schedule(static)`)
+            let n_chunks = pool.n_workers.min(wave.len());
+            let latch = Latch::new(n_chunks);
+            let chunk_size = wave.len().div_ceil(n_chunks);
+            let wave = Arc::new(wave);
+            for c in 0..n_chunks {
+                let (plan, leaf, wave, latch) =
+                    (plan.clone(), leaf.clone(), wave.clone(), latch.clone());
+                pool.inject(Box::new(move |_ctx| {
+                    let lo = c * chunk_size;
+                    let hi = ((c + 1) * chunk_size).min(wave.len());
+                    for t in &wave[lo..hi] {
+                        exec_tag_body_seq(&plan, &leaf, node_id, t);
+                    }
+                    latch.done();
+                }));
+            }
+            latch.wait();
+        } else {
+            for t in &wave {
+                exec_tag_body(plan, leaf, pool, node_id, t, allow_parallel);
+            }
+        }
+    }
+}
+
+/// Execute a tag's body; may still fork deeper if this level had no
+/// parallelism to spend.
+fn exec_tag_body(
+    plan: &Arc<Plan>,
+    leaf: &Arc<dyn LeafExec>,
+    pool: &Pool,
+    node_id: u32,
+    coords: &[i64],
+    allow_parallel: bool,
+) {
+    match &plan.node(node_id).body {
+        ArenaBody::Leaf(_) => leaf.run_leaf(plan, node_id, coords),
+        ArenaBody::Nested(c) => exec_node(plan, leaf, pool, *c, coords, allow_parallel),
+        ArenaBody::Siblings(cs) => {
+            for c in cs {
+                exec_node(plan, leaf, pool, *c, coords, allow_parallel);
+            }
+        }
+    }
+}
+
+/// Fully sequential subtree execution (inside a parallel chunk).
+fn exec_tag_body_seq(plan: &Arc<Plan>, leaf: &Arc<dyn LeafExec>, node_id: u32, coords: &[i64]) {
+    match &plan.node(node_id).body {
+        ArenaBody::Leaf(_) => leaf.run_leaf(plan, node_id, coords),
+        ArenaBody::Nested(c) => {
+            let mut tags: Vec<Box<[i64]>> = Vec::new();
+            plan.for_each_tag(*c, coords, &mut |t| tags.push(t.into()));
+            for t in tags {
+                exec_tag_body_seq(plan, leaf, *c, &t);
+            }
+        }
+        ArenaBody::Siblings(cs) => {
+            for c in cs {
+                let mut tags: Vec<Box<[i64]>> = Vec::new();
+                plan.for_each_tag(*c, coords, &mut |t| tags.push(t.into()));
+                for t in tags {
+                    exec_tag_body_seq(plan, leaf, *c, &t);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::engine::tests_support::RecorderLeaf;
+
+    #[test]
+    fn omp_respects_wavefront_order() {
+        let plan = crate::rt::engine::tests_support::jac1d_plan(6, 32, (2, 8));
+        let rec = Arc::new(RecorderLeaf::default());
+        let leaf: Arc<dyn LeafExec> = rec.clone();
+        let pool = Pool::new(2);
+        run_omp(&plan, &leaf, &pool);
+        let log = rec.log.lock().unwrap().clone();
+        // exactly once per tag
+        let mut expected: Vec<(u32, Vec<i64>)> = Vec::new();
+        plan.for_each_tag(plan.root, &[], &mut |c| expected.push((plan.root, c.to_vec())));
+        let mut sorted = log.clone();
+        sorted.sort();
+        expected.sort();
+        assert_eq!(sorted, expected);
+        // chain deps respected
+        let pos: std::collections::HashMap<_, _> =
+            log.into_iter().enumerate().map(|(i, k)| (k, i)).collect();
+        for (node, coords) in pos.keys() {
+            for ant in plan.antecedents(*node, coords) {
+                assert!(pos[&(*node, ant.clone())] < pos[&(*node, coords.clone())]);
+            }
+        }
+    }
+}

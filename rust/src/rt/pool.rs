@@ -1,0 +1,328 @@
+//! Work-stealing thread pool.
+//!
+//! All three runtime backends and the OpenMP comparator share this pool
+//! (the paper's CnC/SWARM/OCR all sit on work-stealing schedulers, §3).
+//! crossbeam-deque is not in the vendored crate set, so the deques are
+//! mutex-guarded `VecDeque`s — own-queue pops take the lock uncontended in
+//! the common case; contention appears only under active stealing, which
+//! is itself the overhead the paper measures (§5.3). Push/pop are
+//! LIFO-local / FIFO-steal like TBB and Cilk.
+
+use crate::ral::Metrics;
+use crossbeam_utils::CachePadded;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A unit of pool work. Boxed closures keep the pool generic across the
+/// engine's task roles and the OpenMP comparator's parallel-for chunks.
+pub type Job = Box<dyn FnOnce(&WorkerCtx<'_>) + Send>;
+
+/// Passed to every job: identifies the worker and lets jobs spawn more work.
+pub struct WorkerCtx<'a> {
+    shared: &'a Shared,
+    pub worker: usize,
+}
+
+impl WorkerCtx<'_> {
+    /// Push onto this worker's own deque (LIFO hot side).
+    pub fn spawn(&self, job: Job) {
+        self.shared.push_local(self.worker, job);
+    }
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+}
+
+struct Deque {
+    q: Mutex<VecDeque<Job>>,
+}
+
+#[doc(hidden)]
+pub struct Shared {
+    deques: Vec<CachePadded<Deque>>,
+    injector: Mutex<VecDeque<Job>>,
+    /// Outstanding jobs (pushed - completed); quiescent at zero.
+    pending: AtomicUsize,
+    sleepers: Mutex<usize>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    metrics: Metrics,
+    /// xorshift seeds per worker for victim selection
+    seeds: Vec<CachePadded<AtomicU64>>,
+    n_workers: usize,
+}
+
+impl Shared {
+    fn push_local(&self, worker: usize, job: Job) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        self.deques[worker].q.lock().unwrap().push_back(job);
+        self.notify_one();
+    }
+
+    fn inject(&self, job: Job) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        self.injector.lock().unwrap().push_back(job);
+        self.notify_one();
+    }
+
+    fn notify_one(&self) {
+        let sleepers = self.sleepers.lock().unwrap();
+        if *sleepers > 0 {
+            self.wake.notify_one();
+        }
+    }
+
+    fn notify_all(&self) {
+        let _g = self.sleepers.lock().unwrap();
+        self.wake.notify_all();
+    }
+
+    fn next_victim(&self, worker: usize) -> usize {
+        let s = &self.seeds[worker];
+        let mut x = s.load(Ordering::Relaxed);
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        s.store(x, Ordering::Relaxed);
+        (x as usize) % self.n_workers
+    }
+
+    fn find_job(&self, worker: usize) -> Option<Job> {
+        // own deque: LIFO
+        if let Some(j) = self.deques[worker].q.lock().unwrap().pop_back() {
+            return Some(j);
+        }
+        // injector: FIFO
+        if let Some(j) = self.injector.lock().unwrap().pop_front() {
+            return Some(j);
+        }
+        // steal: FIFO from a random victim, then sweep
+        let start = self.next_victim(worker);
+        for k in 0..self.n_workers {
+            let v = (start + k) % self.n_workers;
+            if v == worker {
+                continue;
+            }
+            if let Some(j) = self.deques[v].q.lock().unwrap().pop_front() {
+                self.metrics.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(j);
+            }
+        }
+        self.metrics.failed_steals.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    fn worker_loop(&self, worker: usize) {
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if let Some(job) = self.find_job(worker) {
+                let t0 = std::time::Instant::now();
+                let ctx = WorkerCtx {
+                    shared: self,
+                    worker,
+                };
+                job(&ctx);
+                self.metrics
+                    .busy_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let left = self.pending.fetch_sub(1, Ordering::AcqRel) - 1;
+                if left == 0 {
+                    self.notify_all(); // possible quiescence
+                }
+            } else {
+                // park with timeout (cheap liveness safety net)
+                let mut sleepers = self.sleepers.lock().unwrap();
+                if self.pending.load(Ordering::Acquire) > 0 {
+                    drop(sleepers);
+                    std::thread::yield_now();
+                    continue;
+                }
+                self.metrics.parks.fetch_add(1, Ordering::Relaxed);
+                *sleepers += 1;
+                let (s, _t) = self
+                    .wake
+                    .wait_timeout(sleepers, std::time::Duration::from_millis(2))
+                    .unwrap();
+                sleepers = s;
+                *sleepers -= 1;
+                drop(sleepers);
+            }
+        }
+    }
+}
+
+/// The pool: `n_workers` OS threads over per-worker deques.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub n_workers: usize,
+}
+
+impl Pool {
+    pub fn new(n_workers: usize) -> Pool {
+        let n = n_workers.max(1);
+        let shared = Arc::new(Shared {
+            deques: (0..n)
+                .map(|_| {
+                    CachePadded::new(Deque {
+                        q: Mutex::new(VecDeque::new()),
+                    })
+                })
+                .collect(),
+            injector: Mutex::new(VecDeque::new()),
+            pending: AtomicUsize::new(0),
+            sleepers: Mutex::new(0),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            metrics: Metrics::default(),
+            seeds: (0..n)
+                .map(|i| CachePadded::new(AtomicU64::new(0x9E3779B9 + i as u64 * 0x61C88647 + 1)))
+                .collect(),
+            n_workers: n,
+        });
+        let handles = (0..n)
+            .map(|w| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("tale3-w{w}"))
+                    .spawn(move || sh.worker_loop(w))
+                    .unwrap()
+            })
+            .collect();
+        Pool {
+            shared,
+            handles,
+            n_workers: n,
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    /// Push from outside any worker (seeding).
+    pub fn inject(&self, job: Job) {
+        self.shared.inject(job);
+    }
+
+    /// Seed a job and block until the pool is quiescent (no pending jobs).
+    pub fn run_until_quiescent(&self, job: Job) {
+        self.shared.inject(job);
+        // the caller thread does not execute jobs; it spins gently on the
+        // pending counter (runs are milliseconds to seconds long)
+        let mut spins = 0u32;
+        loop {
+            if self.shared.pending.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = Pool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = counter.clone();
+        pool.run_until_quiescent(Box::new(move |ctx| {
+            for _ in 0..100 {
+                let c2 = c.clone();
+                ctx.spawn(Box::new(move |_| {
+                    c2.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+        }));
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn nested_spawns_complete() {
+        let pool = Pool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = counter.clone();
+        pool.run_until_quiescent(Box::new(move |ctx| {
+            fn fib(ctx: &WorkerCtx<'_>, n: u64, c: Arc<AtomicU64>) {
+                c.fetch_add(1, Ordering::Relaxed);
+                if n < 2 {
+                    return;
+                }
+                let c1 = c.clone();
+                ctx.spawn(Box::new(move |ctx| fib(ctx, n - 1, c1)));
+                let c2 = c;
+                ctx.spawn(Box::new(move |ctx| fib(ctx, n - 2, c2)));
+            }
+            fib(ctx, 10, c);
+        }));
+        // node count of the naive fib(10) call tree = 177
+        assert_eq!(counter.load(Ordering::Relaxed), 177);
+    }
+
+    #[test]
+    fn reusable_across_runs() {
+        let pool = Pool::new(2);
+        for round in 1..=3u64 {
+            let counter = Arc::new(AtomicU64::new(0));
+            let c = counter.clone();
+            pool.run_until_quiescent(Box::new(move |ctx| {
+                for _ in 0..10 * round {
+                    let c2 = c.clone();
+                    ctx.spawn(Box::new(move |_| {
+                        c2.fetch_add(1, Ordering::Relaxed);
+                    }));
+                }
+            }));
+            assert_eq!(counter.load(Ordering::Relaxed), 10 * round);
+        }
+    }
+
+    #[test]
+    fn steals_happen_under_imbalance() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = counter.clone();
+        pool.run_until_quiescent(Box::new(move |ctx| {
+            // all work lands on one deque; others must steal
+            for _ in 0..200 {
+                let c2 = c.clone();
+                ctx.spawn(Box::new(move |_| {
+                    c2.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_micros(30));
+                }));
+            }
+        }));
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+        let m = pool.metrics().snapshot();
+        assert!(m.steals > 0, "expected steals, got {m:?}");
+    }
+
+    #[test]
+    fn drop_joins_threads() {
+        let pool = Pool::new(2);
+        pool.run_until_quiescent(Box::new(|_| {}));
+        drop(pool); // must not hang
+    }
+}

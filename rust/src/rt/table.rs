@@ -1,0 +1,234 @@
+//! The concurrent tag table.
+//!
+//! CnC and SWARM implement tuple-space synchronization over concurrent
+//! hash tables (`tbb::concurrent_hashmap` in Intel CnC, the SWARM
+//! tagTable); our OCR targeting also routes its prescriber through one
+//! ("Puts and gets are performed in a tbb::concurrent_hash_map following
+//! the CnC philosophy", §4.7.3). This module is the common substrate:
+//! a sharded `HashMap<TagKey, Entry>` with
+//!
+//! - `is_done` — a *get* ("get-centric approach in which an EDT queries its
+//!   predecessors whether they have finished executing", §4.6 — gets are
+//!   cheaper than puts under contention, which is why the design minimizes
+//!   puts),
+//! - `put` — publish completion and collect the waiters it releases,
+//! - `register` — two-phase countdown registration of a task on a set of
+//!   keys (the wake-once mechanism used by the ASYNC/DEP/prescriber
+//!   modes; BLOCK registers on a single key at a time).
+
+use crate::ral::{Task, TagKey};
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicIsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A parked task waiting for `remaining` keys to be put.
+#[derive(Debug)]
+pub struct Pending {
+    remaining: AtomicIsize,
+    task: Mutex<Option<Task>>,
+}
+
+impl Pending {
+    pub fn new(task: Task, n_keys: usize) -> Arc<Self> {
+        Arc::new(Pending {
+            // +1 registration guard: the task cannot fire while keys are
+            // still being registered
+            remaining: AtomicIsize::new(n_keys as isize + 1),
+            task: Mutex::new(Some(task)),
+        })
+    }
+
+    /// Decrement; when this was the last count, return the task to run.
+    fn release(&self) -> Option<Task> {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.task.lock().unwrap().take()
+        } else {
+            None
+        }
+    }
+}
+
+enum Entry {
+    Done,
+    Waiting(Vec<Arc<Pending>>),
+}
+
+/// Sharded concurrent map. 64 shards keeps lock contention negligible at
+/// the thread counts of interest.
+pub struct TagTable {
+    shards: Vec<Mutex<HashMap<TagKey, Entry>>>,
+    mask: usize,
+}
+
+impl Default for TagTable {
+    fn default() -> Self {
+        Self::new(64)
+    }
+}
+
+impl TagTable {
+    pub fn new(n_shards: usize) -> Self {
+        let n = n_shards.next_power_of_two();
+        TagTable {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            mask: n - 1,
+        }
+    }
+
+    fn shard(&self, key: &TagKey) -> &Mutex<HashMap<TagKey, Entry>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & self.mask]
+    }
+
+    /// Non-destructive get: has this tag been put?
+    pub fn is_done(&self, key: &TagKey) -> bool {
+        matches!(
+            self.shard(key).lock().unwrap().get(key),
+            Some(Entry::Done)
+        )
+    }
+
+    /// Publish `key` and return every task released by it. Idempotent.
+    #[must_use = "released tasks must be spawned"]
+    pub fn put(&self, key: TagKey) -> Vec<Task> {
+        let waiters = {
+            let mut m = self.shard(&key).lock().unwrap();
+            match m.insert(key, Entry::Done) {
+                Some(Entry::Waiting(w)) => w,
+                _ => Vec::new(),
+            }
+        };
+        waiters.iter().filter_map(|p| p.release()).collect()
+    }
+
+    /// Register `pending` on one key; returns a released task if the key
+    /// was already done and this was the final count.
+    #[must_use = "released tasks must be spawned"]
+    pub fn register_one(&self, pending: &Arc<Pending>, key: &TagKey) -> Option<Task> {
+        let already_done = {
+            let mut m = self.shard(key).lock().unwrap();
+            match m.get_mut(key) {
+                Some(Entry::Done) => true,
+                Some(Entry::Waiting(w)) => {
+                    w.push(pending.clone());
+                    false
+                }
+                None => {
+                    m.insert(key.clone(), Entry::Waiting(vec![pending.clone()]));
+                    false
+                }
+            }
+        };
+        if already_done {
+            pending.release()
+        } else {
+            None
+        }
+    }
+
+    /// Two-phase registration of `task` on `keys`; returns the task if it
+    /// is already ready (all keys done). Caller spawns any returned task.
+    #[must_use = "released tasks must be spawned"]
+    pub fn register(&self, task: Task, keys: &[TagKey]) -> Option<Task> {
+        let pending = Pending::new(task, keys.len());
+        let mut fired = None;
+        for k in keys {
+            if let Some(t) = self.register_one(&pending, k) {
+                debug_assert!(fired.is_none());
+                fired = Some(t);
+            }
+        }
+        // drop the registration guard
+        if let Some(t) = pending.release() {
+            debug_assert!(fired.is_none());
+            fired = Some(t);
+        }
+        fired
+    }
+
+    /// Number of keys currently holding parked waiters (deadlock probe for
+    /// tests).
+    pub fn waiting_keys(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .values()
+                    .filter(|e| matches!(e, Entry::Waiting(w) if !w.is_empty()))
+                    .count()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ral::{Continuation, FinishScope};
+
+    fn dummy_task() -> Task {
+        Task::Shutdown {
+            scope: FinishScope::new(0, Continuation::Done, None),
+        }
+    }
+
+    #[test]
+    fn put_then_register_fires_immediately() {
+        let t = TagTable::default();
+        let k = TagKey::new(1, &[0]);
+        assert!(t.put(k.clone()).is_empty());
+        assert!(t.is_done(&k));
+        let fired = t.register(dummy_task(), &[k]);
+        assert!(fired.is_some());
+    }
+
+    #[test]
+    fn register_then_put_releases_once() {
+        let t = TagTable::default();
+        let k1 = TagKey::new(1, &[0]);
+        let k2 = TagKey::new(1, &[1]);
+        assert!(t.register(dummy_task(), &[k1.clone(), k2.clone()]).is_none());
+        assert!(t.put(k1).is_empty()); // still waiting on k2
+        let released = t.put(k2);
+        assert_eq!(released.len(), 1);
+    }
+
+    #[test]
+    fn mixed_done_and_pending() {
+        let t = TagTable::default();
+        let k1 = TagKey::new(2, &[5]);
+        let k2 = TagKey::new(2, &[6]);
+        let _ = t.put(k1.clone());
+        assert!(t.register(dummy_task(), &[k1, k2.clone()]).is_none());
+        assert_eq!(t.put(k2).len(), 1);
+    }
+
+    #[test]
+    fn empty_key_set_fires_immediately() {
+        let t = TagTable::default();
+        assert!(t.register(dummy_task(), &[]).is_some());
+    }
+
+    #[test]
+    fn multiple_waiters_on_one_key() {
+        let t = TagTable::default();
+        let k = TagKey::new(3, &[1, 2]);
+        assert!(t.register(dummy_task(), &[k.clone()]).is_none());
+        assert!(t.register(dummy_task(), &[k.clone()]).is_none());
+        assert_eq!(t.waiting_keys(), 1);
+        assert_eq!(t.put(k).len(), 2);
+        assert_eq!(t.waiting_keys(), 0);
+    }
+
+    #[test]
+    fn put_is_idempotent() {
+        let t = TagTable::default();
+        let k = TagKey::new(4, &[7]);
+        let _ = t.put(k.clone());
+        assert!(t.put(k.clone()).is_empty());
+        assert!(t.is_done(&k));
+    }
+}

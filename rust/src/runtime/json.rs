@@ -1,0 +1,160 @@
+//! Minimal JSON parsing for `artifacts/manifest.json` (serde_json is not in
+//! the vendored crate set; the manifest grammar is a fixed array of flat
+//! objects with string/array-of-int fields, which this handles exactly).
+
+use super::ArtifactInfo;
+use anyhow::{bail, Result};
+
+struct P<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn ws(&mut self) {
+        while self.i < self.s.len() && (self.s[self.i] as char).is_whitespace() {
+            self.i += 1;
+        }
+    }
+    fn peek(&mut self) -> u8 {
+        self.ws();
+        if self.i < self.s.len() {
+            self.s[self.i]
+        } else {
+            0
+        }
+    }
+    fn expect(&mut self, c: u8) -> Result<()> {
+        self.ws();
+        if self.i < self.s.len() && self.s[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected '{}' at byte {} (found {:?})",
+                c as char,
+                self.i,
+                self.s.get(self.i).map(|&b| b as char)
+            )
+        }
+    }
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while self.i < self.s.len() && self.s[self.i] != b'"' {
+            if self.s[self.i] == b'\\' {
+                self.i += 1;
+            }
+            self.i += 1;
+        }
+        let out = String::from_utf8_lossy(&self.s[start..self.i]).into_owned();
+        self.expect(b'"')?;
+        Ok(out)
+    }
+    fn number(&mut self) -> Result<usize> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        if start == self.i {
+            bail!("expected number at byte {start}");
+        }
+        Ok(std::str::from_utf8(&self.s[start..self.i])?.parse()?)
+    }
+    fn int_array(&mut self) -> Result<Vec<usize>> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        if self.peek() == b']' {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            out.push(self.number()?);
+            if self.peek() == b',' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        self.expect(b']')?;
+        Ok(out)
+    }
+    fn int_array_array(&mut self) -> Result<Vec<Vec<usize>>> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        if self.peek() == b']' {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            out.push(self.int_array()?);
+            if self.peek() == b',' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        self.expect(b']')?;
+        Ok(out)
+    }
+}
+
+/// Parse the artifact manifest.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactInfo>> {
+    let mut p = P {
+        s: text.as_bytes(),
+        i: 0,
+    };
+    p.expect(b'[')?;
+    let mut out = Vec::new();
+    if p.peek() == b']' {
+        return Ok(out);
+    }
+    loop {
+        p.expect(b'{')?;
+        let mut name = String::new();
+        let mut file = String::new();
+        let mut inputs = Vec::new();
+        let mut output = Vec::new();
+        loop {
+            let key = p.string()?;
+            p.expect(b':')?;
+            match key.as_str() {
+                "name" => name = p.string()?,
+                "file" => file = p.string()?,
+                "inputs" => inputs = p.int_array_array()?,
+                "output" => output = p.int_array()?,
+                "dtype" => {
+                    let d = p.string()?;
+                    if d != "f32" {
+                        bail!("unsupported dtype {d}");
+                    }
+                }
+                other => bail!("unknown manifest key '{other}'"),
+            }
+            if p.peek() == b',' {
+                p.i += 1;
+            } else {
+                break;
+            }
+        }
+        p.expect(b'}')?;
+        if name.is_empty() || file.is_empty() {
+            bail!("manifest entry missing name/file");
+        }
+        out.push(ArtifactInfo {
+            name,
+            file,
+            inputs,
+            output,
+        });
+        if p.peek() == b',' {
+            p.i += 1;
+        } else {
+            break;
+        }
+    }
+    p.expect(b']')?;
+    Ok(out)
+}

@@ -1,0 +1,160 @@
+//! PJRT runtime bridge: load the AOT-compiled JAX/Pallas HLO artifacts and
+//! execute them from leaf WORKER EDTs.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once; after that the rust
+//! binary is self-contained — Python is never on the task path. Artifacts
+//! are HLO *text* (see aot.py for why), parsed by
+//! `HloModuleProto::from_text_file`, compiled once per process on the PJRT
+//! CPU client, and shared by all workers (executions serialized per
+//! executable with a mutex; one compiled executable per model variant).
+
+mod json;
+mod pjrt_leaf;
+
+pub use pjrt_leaf::{Jac3dPjrtLeaf, MatmultPjrtLeaf};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// One artifact's metadata (from manifest.json).
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+}
+
+struct Inner {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The PJRT client + all compiled artifacts.
+///
+/// The `xla` crate's wrappers hold `Rc` internals and raw pointers, so they
+/// are not `Send`/`Sync`. The PJRT C API itself is thread-safe, but the
+/// `Rc` reference counts are not — therefore *every* PJRT operation
+/// (including buffer creation inside `execute`) is serialized behind the
+/// single `inner` mutex, which makes the unsafe `Send + Sync` below sound:
+/// no `Rc` clone/drop ever races. Leaf workers consequently serialize on
+/// PJRT dispatch; DESIGN.md §Perf quantifies the cost.
+pub struct PjrtRuntime {
+    inner: Mutex<Inner>,
+    infos: HashMap<String, ArtifactInfo>,
+}
+
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Load every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let info_list = json::parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        let mut infos = HashMap::new();
+        for info in info_list {
+            let path = dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", info.name))?;
+            exes.insert(info.name.clone(), exe);
+            infos.insert(info.name.clone(), info);
+        }
+        Ok(PjrtRuntime {
+            inner: Mutex::new(Inner { client, exes }),
+            infos,
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.infos.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.infos.get(name)
+    }
+
+    /// Execute an artifact on f32 buffers (row-major, shapes per manifest).
+    /// Outputs are unwrapped from the AOT 1-tuple.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let info = self
+            .infos
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if inputs.len() != info.inputs.len() {
+            anyhow::bail!(
+                "artifact '{name}' takes {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (buf, shape) in inputs.iter().zip(&info.inputs) {
+            let n: usize = shape.iter().product();
+            if buf.len() != n {
+                anyhow::bail!("artifact '{name}': input size {} != {}", buf.len(), n);
+            }
+        }
+        // single global PJRT lock: see the type-level safety contract
+        let inner = self.inner.lock().unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&info.inputs) {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = &inner.exes[name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute '{name}': {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::json;
+
+    #[test]
+    fn manifest_parser_round_trip() {
+        let text = r#"[
+ {
+  "name": "a_b",
+  "file": "a_b.hlo.txt",
+  "inputs": [[18, 66]],
+  "output": [16, 64],
+  "dtype": "f32"
+ },
+ {
+  "name": "mm",
+  "file": "mm.hlo.txt",
+  "inputs": [[16, 64], [64, 16], [16, 16]],
+  "output": [16, 16],
+  "dtype": "f32"
+ }
+]"#;
+        let infos = json::parse_manifest(text).unwrap();
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].name, "a_b");
+        assert_eq!(infos[0].inputs, vec![vec![18, 66]]);
+        assert_eq!(infos[1].inputs.len(), 3);
+        assert_eq!(infos[1].output, vec![16, 16]);
+    }
+}

@@ -1,0 +1,209 @@
+//! PJRT-backed leaf executors: leaf WORKER EDT bodies that run the
+//! AOT-compiled Pallas tile kernels instead of the native rust kernels.
+//!
+//! Full interior tiles go through PJRT (fixed artifact shapes); clamped
+//! boundary tiles fall back to the native kernel — the same
+//! full-tile-specialization the paper's CLooG backend performs when it
+//! separates full from partial tiles.
+
+use super::PjrtRuntime;
+use crate::exec::arrays::ArrayStore;
+use crate::exec::leafrun::{run_leaf_nest, KernelSet};
+use crate::exec::plan::{ArenaBody, Plan};
+use crate::expr::Env;
+use crate::rt::engine::LeafExec;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Resolve the leaf-variable spans of a (single-statement) leaf at a tag.
+fn leaf_spans(plan: &Plan, node_id: u32, coords: &[i64]) -> Option<Vec<(i64, i64)>> {
+    let node = plan.node(node_id);
+    let ArenaBody::Leaf(leaf) = &node.body else {
+        return None;
+    };
+    if leaf.stmts.len() != 1 {
+        return None;
+    }
+    let st = &leaf.stmts[0];
+    let base = node.iv_base + node.dims.len();
+    let mut cur = coords[..base].to_vec();
+    let mut spans = Vec::with_capacity(leaf.n_leaf_vars);
+    for v in 0..leaf.n_leaf_vars {
+        let env = Env::new(&cur, &plan.params);
+        let lo = st.bounds[v].lb.eval(env);
+        let hi = st.bounds[v].ub.eval(env);
+        if lo > hi {
+            return Some(vec![]); // empty tile
+        }
+        spans.push((lo, hi));
+        cur.push(lo); // rectangular tiles: bounds don't depend on inner vars
+    }
+    Some(spans)
+}
+
+/// MATMULT leaf through the `matmul_tile_16x16x64` artifact.
+pub struct MatmultPjrtLeaf {
+    pub rt: Arc<PjrtRuntime>,
+    pub arrays: Arc<ArrayStore>,
+    pub native: Arc<dyn KernelSet>,
+    pub pjrt_tiles: AtomicU64,
+    pub native_tiles: AtomicU64,
+}
+
+impl MatmultPjrtLeaf {
+    pub fn new(rt: Arc<PjrtRuntime>, arrays: Arc<ArrayStore>, native: Arc<dyn KernelSet>) -> Self {
+        MatmultPjrtLeaf {
+            rt,
+            arrays,
+            native,
+            pjrt_tiles: AtomicU64::new(0),
+            native_tiles: AtomicU64::new(0),
+        }
+    }
+}
+
+const TI: i64 = 16;
+const TJ: i64 = 16;
+const TK: i64 = 64;
+
+impl LeafExec for MatmultPjrtLeaf {
+    fn run_leaf(&self, plan: &Plan, node_id: u32, coords: &[i64]) {
+        let spans = leaf_spans(plan, node_id, coords);
+        if let Some(spans) = &spans {
+            if spans.is_empty() {
+                return; // empty tile
+            }
+            let full = spans.len() == 3
+                && spans[0].1 - spans[0].0 + 1 == TI
+                && spans[1].1 - spans[1].0 + 1 == TJ
+                && spans[2].1 - spans[2].0 + 1 == TK;
+            if full {
+                let (i0, j0, k0) = (spans[0].0, spans[1].0, spans[2].0);
+                let (a, b, c) = (self.arrays.a(0), self.arrays.a(1), self.arrays.a(2));
+                let n = a.strides[0];
+                let (sa, sb, sc) = (a.slice_mut(), b.slice_mut(), c.slice_mut());
+                // gather tiles row-major
+                let mut ta = vec![0f32; (TI * TK) as usize];
+                let mut tb = vec![0f32; (TK * TJ) as usize];
+                let mut tc = vec![0f32; (TI * TJ) as usize];
+                for i in 0..TI as usize {
+                    let src = (i0 as usize + i) * n + k0 as usize;
+                    ta[i * TK as usize..(i + 1) * TK as usize]
+                        .copy_from_slice(&sa[src..src + TK as usize]);
+                }
+                for k in 0..TK as usize {
+                    let src = (k0 as usize + k) * n + j0 as usize;
+                    tb[k * TJ as usize..(k + 1) * TJ as usize]
+                        .copy_from_slice(&sb[src..src + TJ as usize]);
+                }
+                for i in 0..TI as usize {
+                    let src = (i0 as usize + i) * n + j0 as usize;
+                    tc[i * TJ as usize..(i + 1) * TJ as usize]
+                        .copy_from_slice(&sc[src..src + TJ as usize]);
+                }
+                let out = self
+                    .rt
+                    .execute_f32("matmul_tile_16x16x64", &[&ta, &tb, &tc])
+                    .expect("pjrt matmul tile");
+                for i in 0..TI as usize {
+                    let dst = (i0 as usize + i) * n + j0 as usize;
+                    sc[dst..dst + TJ as usize]
+                        .copy_from_slice(&out[i * TJ as usize..(i + 1) * TJ as usize]);
+                }
+                self.pjrt_tiles.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        // boundary / irregular: native path
+        self.native_tiles.fetch_add(1, Ordering::Relaxed);
+        let node = plan.node(node_id);
+        let ArenaBody::Leaf(leaf) = &node.body else { return };
+        run_leaf_nest(
+            leaf,
+            node.compiled.as_ref(),
+            node.iv_base + node.dims.len(),
+            coords,
+            &plan.params,
+            &self.arrays,
+            &*self.native,
+        );
+    }
+}
+
+/// JAC-3D-1 (7-point single sweep) leaf through `jac3d7p_tile_16x16x64`.
+pub struct Jac3dPjrtLeaf {
+    pub rt: Arc<PjrtRuntime>,
+    pub arrays: Arc<ArrayStore>,
+    pub native: Arc<dyn KernelSet>,
+    pub pjrt_tiles: AtomicU64,
+    pub native_tiles: AtomicU64,
+}
+
+impl Jac3dPjrtLeaf {
+    pub fn new(rt: Arc<PjrtRuntime>, arrays: Arc<ArrayStore>, native: Arc<dyn KernelSet>) -> Self {
+        Jac3dPjrtLeaf {
+            rt,
+            arrays,
+            native,
+            pjrt_tiles: AtomicU64::new(0),
+            native_tiles: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LeafExec for Jac3dPjrtLeaf {
+    fn run_leaf(&self, plan: &Plan, node_id: u32, coords: &[i64]) {
+        let spans = leaf_spans(plan, node_id, coords);
+        if let Some(spans) = &spans {
+            if spans.is_empty() {
+                return;
+            }
+            let full = spans.len() == 3
+                && spans[0].1 - spans[0].0 + 1 == 16
+                && spans[1].1 - spans[1].0 + 1 == 16
+                && spans[2].1 - spans[2].0 + 1 == 64;
+            if full {
+                let (i0, j0, k0) = (spans[0].0 as usize, spans[1].0 as usize, spans[2].0 as usize);
+                let a = self.arrays.a(0);
+                let b = self.arrays.a(1);
+                let (st0, st1) = (a.strides[0], a.strides[1]);
+                let (sa, sb) = (a.slice_mut(), b.slice_mut());
+                // gather the (18, 18, 66) halo
+                let (hd, hh, hw) = (18usize, 18usize, 66usize);
+                let mut halo = vec![0f32; hd * hh * hw];
+                for di in 0..hd {
+                    for dj in 0..hh {
+                        let src = (i0 - 1 + di) * st0 + (j0 - 1 + dj) * st1 + (k0 - 1);
+                        let dst = (di * hh + dj) * hw;
+                        halo[dst..dst + hw].copy_from_slice(&sa[src..src + hw]);
+                    }
+                }
+                let out = self
+                    .rt
+                    .execute_f32("jac3d7p_tile_16x16x64", &[&halo])
+                    .expect("pjrt jac3d tile");
+                for di in 0..16usize {
+                    for dj in 0..16usize {
+                        let dst = (i0 + di) * st0 + (j0 + dj) * st1 + k0;
+                        let src = (di * 16 + dj) * 64;
+                        sb[dst..dst + 64].copy_from_slice(&out[src..src + 64]);
+                    }
+                }
+                self.pjrt_tiles.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        self.native_tiles.fetch_add(1, Ordering::Relaxed);
+        let node = plan.node(node_id);
+        let ArenaBody::Leaf(leaf) = &node.body else { return };
+        run_leaf_nest(
+            leaf,
+            node.compiled.as_ref(),
+            node.iv_base + node.dims.len(),
+            coords,
+            &plan.params,
+            &self.arrays,
+            &*self.native,
+        );
+    }
+}

@@ -1,0 +1,699 @@
+//! Discrete-event simulation of the EDT runtimes on the modeled testbed.
+//!
+//! Mirrors `rt::engine` operation for operation — STARTUP tag enumeration,
+//! speculative dispatch vs. prescription, blocking-get rollback, tag-table
+//! waits, finish scopes, sibling barriers, work stealing — but advances a
+//! virtual clock from the `CostModel` instead of executing kernels.
+//! Deterministic by construction.
+
+use super::cost::{CostModel, Machine};
+use super::leaf_cost;
+use crate::exec::plan::{ArenaBody, Plan};
+use crate::ral::{DepMode, TagKey};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+const FINISH_BIT: u32 = 1 << 31;
+
+#[derive(Debug, Clone)]
+enum Cont {
+    Done,
+    WorkerDone { key: TagKey, scope: usize },
+    NextSibling { node: u32, coords: Box<[i64]>, next: u32, after: Box<Cont> },
+    /* kept for parity with the real engine */
+    #[allow(dead_code)]
+    Notify(usize),
+}
+
+#[derive(Debug, Clone)]
+enum STask {
+    Startup { node: u32, prefix: Box<[i64]>, on_finish: Box<Cont> },
+    Worker { node: u32, coords: Box<[i64]>, scope: usize },
+    Prescriber { node: u32, coords: Box<[i64]>, scope: usize },
+    Shutdown { scope: usize },
+}
+
+struct Scope {
+    remaining: i64,
+    cont: Option<Cont>,
+    signal: Option<TagKey>,
+}
+
+enum Entry {
+    /// Done at virtual time (for the causality self-check).
+    Done(u64),
+    Waiting(Vec<usize>), // pending ids
+}
+
+enum FindResult {
+    Task(STask, f64),
+    WaitUntil(u64),
+    Idle,
+}
+
+struct Pending {
+    remaining: i64,
+    task: Option<STask>,
+    /// Latest done-time among satisfied keys: the release availability.
+    avail: u64,
+}
+
+/// Simulation result.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub seconds: f64,
+    pub gflops: f64,
+    pub tasks: u64,
+    pub steals: u64,
+    pub failed_gets: u64,
+    /// Virtual work time / virtual busy time (§5.3 work ratio).
+    pub work_ratio: f64,
+}
+
+struct Des<'a> {
+    plan: &'a Plan,
+    mode: DepMode,
+    threads: usize,
+    machine: &'a Machine,
+    costs: &'a CostModel,
+    numa_pinned: bool,
+
+    table: HashMap<TagKey, Entry>,
+    pendings: Vec<Pending>,
+    scopes: Vec<Scope>,
+
+    /// (available-at, task): a task spawned during execution becomes
+    /// visible only when its spawner completes — stealing must not
+    /// time-travel (causality check below guards this invariant).
+    deques: Vec<VecDeque<(u64, STask)>>,
+    heap: BinaryHeap<Reverse<(u64, u64, usize)>>, // (time_ns, seq, worker)
+    free_at: Vec<u64>,
+    idle: Vec<bool>,
+    seq: u64,
+    rng: u64,
+
+    /// End times of currently-executing leaf tasks (bandwidth sharing is
+    /// by *active* compute, not by thread count — idle threads don't eat
+    /// bandwidth).
+    active_leaf_ends: BinaryHeap<Reverse<u64>>,
+    end_time: u64,
+    completed: bool,
+    tasks: u64,
+    steals: u64,
+    failed_gets: u64,
+    work_ns: f64,
+    busy_ns: f64,
+}
+
+impl<'a> Des<'a> {
+    fn ns(&mut self, x: f64) -> u64 {
+        x.max(0.0) as u64
+    }
+
+    fn wake_idle(&mut self, at: u64, n: usize) {
+        let mut woken = 0;
+        for w in 0..self.threads {
+            if woken >= n {
+                break;
+            }
+            if self.idle[w] {
+                self.idle[w] = false;
+                self.free_at[w] = self.free_at[w].max(at);
+                self.seq += 1;
+                self.heap.push(Reverse((self.free_at[w], self.seq, w)));
+                woken += 1;
+            }
+        }
+    }
+
+    fn rand(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x
+    }
+
+    /// Find work available at time `now`. Returns the task + acquisition
+    /// cost, or the earliest future availability, or None (truly idle).
+    fn find_task(&mut self, w: usize, now: u64) -> FindResult {
+        let mut earliest: Option<u64> = None;
+        if let Some(&(avail, _)) = self.deques[w].back() {
+            if avail <= now {
+                let (_, t) = self.deques[w].pop_back().unwrap();
+                return FindResult::Task(t, 0.0);
+            }
+            earliest = Some(avail);
+        }
+        let start = (self.rand() as usize) % self.threads;
+        for k in 0..self.threads {
+            let v = (start + k) % self.threads;
+            if v == w {
+                continue;
+            }
+            if let Some(&(avail, _)) = self.deques[v].front() {
+                if avail <= now {
+                    let (_, t) = self.deques[v].pop_front().unwrap();
+                    self.steals += 1;
+                    return FindResult::Task(t, self.costs.steal_ns);
+                }
+                earliest = Some(earliest.map_or(avail, |e| e.min(avail)));
+            }
+        }
+        match earliest {
+            Some(t) => FindResult::WaitUntil(t),
+            None => FindResult::Idle,
+        }
+    }
+
+    /// A get at virtual time `now` only observes puts stamped ≤ now.
+    fn is_done(&self, key: &TagKey, now: u64) -> bool {
+        matches!(self.table.get(key), Some(Entry::Done(t)) if *t <= now)
+    }
+
+    fn done_time(&self, key: &TagKey) -> Option<u64> {
+        match self.table.get(key) {
+            Some(Entry::Done(t)) => Some(*t),
+            _ => None,
+        }
+    }
+
+    /// put: mark done at time `at`, return released tasks with their
+    /// availability (the max done-time across each pending's keys — an
+    /// earlier-processed put may carry a later virtual stamp).
+    fn put(&mut self, key: TagKey, at: u64) -> Vec<(u64, STask)> {
+        let waiters = match self.table.insert(key, Entry::Done(at)) {
+            Some(Entry::Waiting(w)) => w,
+            _ => Vec::new(),
+        };
+        let mut out = Vec::new();
+        for pid in waiters {
+            let p = &mut self.pendings[pid];
+            p.remaining -= 1;
+            p.avail = p.avail.max(at);
+            if p.remaining == 0 {
+                if let Some(t) = p.task.take() {
+                    out.push((p.avail, t));
+                }
+            }
+        }
+        out
+    }
+
+    /// Two-phase registration at virtual time `now`. When the task fires
+    /// immediately, the returned availability is the latest done-time of
+    /// its keys (it may lie in the caller's future — a put stamped ahead
+    /// of `now` by an earlier-dispatched but longer-running producer).
+    fn register(&mut self, task: STask, keys: &[TagKey], now: u64) -> Option<(STask, u64)> {
+        let pid = self.pendings.len();
+        self.pendings.push(Pending {
+            remaining: keys.len() as i64 + 1,
+            task: Some(task),
+            avail: now,
+        });
+        for k in keys {
+            match self.table.get_mut(k) {
+                Some(Entry::Done(dt)) => {
+                    let dt = *dt;
+                    let p = &mut self.pendings[pid];
+                    p.remaining -= 1;
+                    p.avail = p.avail.max(dt);
+                }
+                Some(Entry::Waiting(w)) => w.push(pid),
+                None => {
+                    self.table.insert(k.clone(), Entry::Waiting(vec![pid]));
+                }
+            }
+        }
+        let p = &mut self.pendings[pid];
+        p.remaining -= 1;
+        if p.remaining == 0 {
+            let avail = p.avail;
+            p.task.take().map(|t| (t, avail))
+        } else {
+            None
+        }
+    }
+
+    fn done_key(node: u32, coords: &[i64]) -> TagKey {
+        TagKey { node, coords: coords.into() }
+    }
+    fn finish_key(node: u32, prefix: &[i64]) -> TagKey {
+        TagKey { node: node | FINISH_BIT, coords: prefix.into() }
+    }
+
+    /// Execute one task on worker `w` starting at time `t0`; returns its
+    /// virtual duration in ns. Spawned tasks land on `w`'s deque,
+    /// available when the task completes.
+    fn exec(&mut self, w: usize, t0: u64, task: STask) -> f64 {
+        self.tasks += 1;
+        let c = self.costs;
+        let mut dur = c.dispatch_ns;
+        let mut spawned: Vec<(u64, STask)> = Vec::new();
+        match task {
+            STask::Startup { node, prefix, on_finish } => {
+                let mut tags: Vec<Box<[i64]>> = Vec::new();
+                self.plan.for_each_tag(node, &prefix, &mut |t| tags.push(t.into()));
+                let n = tags.len();
+                dur += c.startup_base_ns + c.per_tag_ns * n as f64;
+                let signal = if self.mode.finish_via_tag_table() {
+                    Some(Self::finish_key(node, &prefix))
+                } else {
+                    None
+                };
+                let sid = self.scopes.len();
+                self.scopes.push(Scope {
+                    remaining: n as i64,
+                    cont: Some(*on_finish),
+                    signal: signal.clone(),
+                });
+                if let Some(sig) = &signal {
+                    dur += c.get_miss_ns; // SHUTDOWN step parks on the item
+                    if let Some((t, avail)) =
+                        self.register(STask::Shutdown { scope: sid }, std::slice::from_ref(sig), t0)
+                    {
+                        spawned.push((avail, t));
+                    }
+                }
+                if n == 0 {
+                    let at = t0 + self.ns(dur);
+                    let extra = self.fire_shutdown(sid, at, &mut spawned);
+                    dur += extra;
+                } else {
+                    for coords in tags {
+                        dur += c.spawn_ns;
+                        match self.mode {
+                            DepMode::CncBlock | DepMode::CncAsync | DepMode::Swarm => {
+                                spawned.push((0, STask::Worker { node, coords, scope: sid }));
+                            }
+                            DepMode::CncDep => {
+                                let ants = self.plan.antecedents(node, &coords);
+                                dur += c.pred_eval_ns * self.plan.node(node).dims.len() as f64
+                                    + c.prescribe_dep_ns * ants.len() as f64;
+                                let keys: Vec<TagKey> =
+                                    ants.iter().map(|a| Self::done_key(node, a)).collect();
+                                if let Some((t, avail)) = self.register(
+                                    STask::Worker { node, coords, scope: sid },
+                                    &keys,
+                                    t0,
+                                ) {
+                                    spawned.push((avail, t));
+                                }
+                            }
+                            DepMode::Ocr => {
+                                spawned.push((0, STask::Prescriber { node, coords, scope: sid }));
+                            }
+                        }
+                    }
+                }
+            }
+            STask::Prescriber { node, coords, scope } => {
+                let ants = self.plan.antecedents(node, &coords);
+                dur += c.pred_eval_ns * self.plan.node(node).dims.len() as f64
+                    + c.prescribe_dep_ns * ants.len() as f64
+                    + c.ocr_deque_ns;
+                let keys: Vec<TagKey> = ants.iter().map(|a| Self::done_key(node, a)).collect();
+                if let Some((t, avail)) =
+                    self.register(STask::Worker { node, coords, scope }, &keys, t0)
+                {
+                    dur += c.spawn_ns;
+                    spawned.push((avail, t));
+                }
+            }
+            STask::Worker { node, coords, scope } => {
+                if self.mode == DepMode::Ocr {
+                    dur += c.ocr_deque_ns;
+                }
+                let mut blocked = false;
+                match self.mode {
+                    DepMode::CncBlock => {
+                        let ants = self.plan.antecedents(node, &coords);
+                        dur += c.pred_eval_ns * self.plan.node(node).dims.len() as f64;
+                        for a in &ants {
+                            let key = Self::done_key(node, a);
+                            if self.is_done(&key, t0) {
+                                dur += c.get_hit_ns;
+                            } else {
+                                dur += c.get_miss_ns;
+                                self.failed_gets += 1;
+                                let t = STask::Worker { node, coords: coords.clone(), scope };
+                                if let Some((rt, avail)) =
+                                    self.register(t, std::slice::from_ref(&key), t0)
+                                {
+                                    spawned.push((avail, rt));
+                                }
+                                blocked = true;
+                                break;
+                            }
+                        }
+                    }
+                    DepMode::CncAsync | DepMode::Swarm => {
+                        let ants = self.plan.antecedents(node, &coords);
+                        dur += c.pred_eval_ns * self.plan.node(node).dims.len() as f64;
+                        let mut missing = Vec::new();
+                        for a in &ants {
+                            let key = Self::done_key(node, a);
+                            if self.is_done(&key, t0) {
+                                dur += c.get_hit_ns;
+                            } else {
+                                dur += c.get_miss_ns;
+                                self.failed_gets += 1;
+                                missing.push(key);
+                            }
+                        }
+                        if !missing.is_empty() {
+                            let t = STask::Worker { node, coords: coords.clone(), scope };
+                            if let Some((rt, avail)) = self.register(t, &missing, t0) {
+                                spawned.push((avail, rt));
+                            }
+                            blocked = true;
+                        }
+                    }
+                    DepMode::CncDep | DepMode::Ocr => {}
+                }
+                if !blocked {
+                    // causality self-check: every antecedent must have
+                    // completed (in virtual time) before this dispatch
+                    for a in self.plan.antecedents(node, &coords) {
+                        let k = Self::done_key(node, &a);
+                        match self.done_time(&k) {
+                            Some(dt) => assert!(
+                                dt <= t0,
+                                "DES causality violated ({:?}): {:?} done at {} but {:?} dispatched at {}",
+                                self.mode, a, dt, coords, t0
+                            ),
+                            None => panic!(
+                                "DES causality violated: {:?} dispatched before antecedent {:?}",
+                                coords, a
+                            ),
+                        }
+                    }
+                    let key = Self::done_key(node, &coords);
+                    match &self.plan.node(node).body {
+                        ArenaBody::Leaf(_) => {
+                            let (_pts, flops, bytes) = leaf_cost(self.plan, node, &coords);
+                            let rate = self.machine.worker_flops(self.threads)
+                                * c.mode_rate_factor(Some(self.mode), self.threads, self.machine);
+                            // bandwidth shared by concurrently-active leaves
+                            while let Some(&Reverse(e)) = self.active_leaf_ends.peek() {
+                                if e <= t0 {
+                                    self.active_leaf_ends.pop();
+                                } else {
+                                    break;
+                                }
+                            }
+                            let active = (self.active_leaf_ends.len() + 1).min(self.threads);
+                            let bw = self.machine.worker_bw(active, self.numa_pinned);
+                            let work = ((flops / rate).max(bytes / bw)) * 1e9;
+                            let leaf_end = t0 + (dur + work).max(0.0) as u64;
+                            self.active_leaf_ends.push(Reverse(leaf_end));
+                            self.work_ns += work;
+                            dur += work;
+                            let at = t0 + self.ns(dur);
+                            let extra = self.complete_worker(key, scope, at, &mut spawned);
+                            dur += extra;
+                        }
+                        ArenaBody::Nested(child) => {
+                            dur += c.spawn_ns;
+                            spawned.push((
+                                0,
+                                STask::Startup {
+                                    node: *child,
+                                    prefix: coords,
+                                    on_finish: Box::new(Cont::WorkerDone { key, scope }),
+                                },
+                            ));
+                        }
+                        ArenaBody::Siblings(children) => {
+                            dur += c.spawn_ns;
+                            let first = children[0];
+                            spawned.push((
+                                0,
+                                STask::Startup {
+                                    node: first,
+                                    prefix: coords.clone(),
+                                    on_finish: Box::new(Cont::NextSibling {
+                                        node,
+                                        coords,
+                                        next: 1,
+                                        after: Box::new(Cont::WorkerDone { key, scope }),
+                                    }),
+                                },
+                            ));
+                        }
+                    }
+                }
+            }
+            STask::Shutdown { scope } => {
+                dur += c.shutdown_ns;
+                if let Some(cont) = self.scopes[scope].cont.take() {
+                    let at = t0 + self.ns(dur);
+                    let extra = self.run_cont(at, cont, &mut spawned);
+                    dur += extra;
+                }
+            }
+        }
+        self.busy_ns += dur;
+        let end = t0 + self.ns(dur);
+        let n = spawned.len();
+        let mut latest = end;
+        for (avail, t) in spawned {
+            let at = end.max(avail);
+            latest = latest.max(at);
+            self.deques[w].push_back((at, t));
+        }
+        if n > 0 {
+            self.wake_idle(latest, n);
+        }
+        dur
+    }
+
+    fn complete_worker(
+        &mut self,
+        key: TagKey,
+        scope: usize,
+        at: u64,
+        spawned: &mut Vec<(u64, STask)>,
+    ) -> f64 {
+        let mut dur = self.costs.put_ns;
+        for (avail, r) in self.put(key, at) {
+            dur += self.costs.spawn_ns;
+            spawned.push((avail, r));
+        }
+        self.scopes[scope].remaining -= 1;
+        if self.scopes[scope].remaining == 0 {
+            dur += self.fire_shutdown(scope, at, spawned);
+        }
+        dur
+    }
+
+    fn fire_shutdown(
+        &mut self,
+        scope: usize,
+        at: u64,
+        spawned: &mut Vec<(u64, STask)>,
+    ) -> f64 {
+        let mut dur = 0.0;
+        if let Some(sig) = self.scopes[scope].signal.clone() {
+            dur += self.costs.put_ns;
+            for (avail, r) in self.put(sig, at) {
+                dur += self.costs.spawn_ns;
+                spawned.push((avail, r));
+            }
+        } else {
+            dur += self.costs.spawn_ns;
+            spawned.push((0, STask::Shutdown { scope }));
+        }
+        dur
+    }
+
+    fn run_cont(&mut self, t0: u64, cont: Cont, spawned: &mut Vec<(u64, STask)>) -> f64 {
+        match cont {
+            Cont::Done => {
+                self.completed = true;
+                self.end_time = self.end_time.max(t0);
+                0.0
+            }
+            Cont::WorkerDone { key, scope } => self.complete_worker(key, scope, t0, spawned),
+            Cont::NextSibling { node, coords, next, after } => {
+                let ArenaBody::Siblings(children) = &self.plan.node(node).body else {
+                    unreachable!()
+                };
+                if (next as usize) < children.len() {
+                    let child = children[next as usize];
+                    spawned.push((
+                        0,
+                        STask::Startup {
+                            node: child,
+                            prefix: coords.clone(),
+                            on_finish: Box::new(Cont::NextSibling { node, coords, next: next + 1, after }),
+                        },
+                    ));
+                    self.costs.spawn_ns
+                } else {
+                    self.run_cont(t0, *after, spawned)
+                }
+            }
+            Cont::Notify(scope) => {
+                self.scopes[scope].remaining -= 1;
+                if self.scopes[scope].remaining == 0 {
+                    self.fire_shutdown(scope, t0, spawned)
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Simulate the plan under a dependence mode with `threads` virtual
+/// workers. Returns the virtual-time report.
+pub fn simulate(
+    plan: &Plan,
+    mode: DepMode,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+    total_flops: f64,
+) -> SimReport {
+    let mut d = Des {
+        plan,
+        mode,
+        threads,
+        machine,
+        costs,
+        numa_pinned,
+        table: HashMap::new(),
+        pendings: Vec::new(),
+        scopes: Vec::new(),
+        active_leaf_ends: BinaryHeap::new(),
+        deques: (0..threads).map(|_| VecDeque::new()).collect(),
+        heap: BinaryHeap::new(),
+        free_at: vec![0; threads],
+        idle: vec![false; threads],
+        seq: 0,
+        rng: 0x243F6A8885A308D3,
+        end_time: 0,
+        completed: false,
+        tasks: 0,
+        steals: 0,
+        failed_gets: 0,
+        work_ns: 0.0,
+        busy_ns: 0.0,
+    };
+    d.deques[0].push_back((
+        0,
+        STask::Startup {
+            node: plan.root,
+            prefix: Box::new([]),
+            on_finish: Box::new(Cont::Done),
+        },
+    ));
+    d.heap.push(Reverse((0, 0, 0)));
+    for w in 1..threads {
+        d.idle[w] = true;
+    }
+    let mut makespan = 0u64;
+    while let Some(Reverse((t, _s, w))) = d.heap.pop() {
+        match d.find_task(w, t) {
+            FindResult::Task(task, steal_cost) => {
+                let dur = steal_cost + d.exec(w, t + steal_cost as u64, task);
+                d.free_at[w] = t + d.ns(steal_cost + dur).max(1);
+                makespan = makespan.max(d.free_at[w]);
+                d.seq += 1;
+                d.heap.push(Reverse((d.free_at[w], d.seq, w)));
+            }
+            FindResult::WaitUntil(at) => {
+                d.free_at[w] = at.max(t + 1);
+                d.seq += 1;
+                d.heap.push(Reverse((d.free_at[w], d.seq, w)));
+            }
+            FindResult::Idle => {
+                d.idle[w] = true;
+            }
+        }
+    }
+    assert!(
+        d.completed,
+        "simulation deadlock in '{}' under {:?}",
+        plan.name, mode
+    );
+    let seconds = makespan as f64 / 1e9;
+    SimReport {
+        seconds,
+        gflops: total_flops / seconds / 1e9,
+        tasks: d.tasks,
+        steals: d.steals,
+        failed_gets: d.failed_gets,
+        work_ratio: if d.busy_ns > 0.0 { d.work_ns / d.busy_ns } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{by_name, Size};
+
+    fn sim(name: &str, mode: DepMode, threads: usize) -> SimReport {
+        sim_sized(name, mode, threads, Size::Tiny)
+    }
+
+    fn sim_sized(name: &str, mode: DepMode, threads: usize, size: Size) -> SimReport {
+        let inst = (by_name(name).unwrap().build)(size);
+        let plan = inst.plan().unwrap();
+        simulate(
+            &plan,
+            mode,
+            threads,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+            inst.total_flops,
+        )
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = sim("JAC-2D-5P", DepMode::CncDep, 8);
+        let b = sim("JAC-2D-5P", DepMode::CncDep, 8);
+        assert_eq!(a.seconds, b.seconds);
+        assert_eq!(a.tasks, b.tasks);
+    }
+
+    #[test]
+    fn parallel_speedup_on_doall() {
+        let t1 = sim_sized("JAC-3D-1", DepMode::Ocr, 1, Size::Small).seconds;
+        let t8 = sim_sized("JAC-3D-1", DepMode::Ocr, 8, Size::Small).seconds;
+        assert!(t8 < t1 * 0.7, "expected speedup: t1={t1} t8={t8}");
+    }
+
+    #[test]
+    fn block_mode_has_failed_gets_dep_mode_none() {
+        let b = sim_sized("JAC-2D-5P", DepMode::CncBlock, 4, Size::Small);
+        let d = sim_sized("JAC-2D-5P", DepMode::CncDep, 4, Size::Small);
+        assert_eq!(d.failed_gets, 0);
+        assert!(b.failed_gets > 0);
+    }
+
+    #[test]
+    fn all_modes_complete_on_all_workloads() {
+        for w in crate::workloads::registry() {
+            let inst = (w.build)(Size::Tiny);
+            let plan = inst.plan().unwrap();
+            for mode in [DepMode::CncBlock, DepMode::CncAsync, DepMode::CncDep, DepMode::Swarm, DepMode::Ocr] {
+                let r = simulate(
+                    &plan,
+                    mode,
+                    4,
+                    &Machine::default(),
+                    &CostModel::default(),
+                    true,
+                    inst.total_flops,
+                );
+                assert!(r.seconds > 0.0, "{} {:?}", w.name, mode);
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Deterministic multicore testbed simulator — the hardware substitution
+//! (DESIGN.md §5).
+//!
+//! This container has a single physical core, so the paper's 1–32-thread
+//! scaling tables (Tables 1, 3, 4, 5; Fig 2) cannot be measured in
+//! wall-clock time. Instead, the same runtime semantics — the identical
+//! STARTUP/WORKER/SHUTDOWN expansion, tag-table speculation/rollback,
+//! prescription, chains, finish scopes and work stealing of `rt::engine` —
+//! are executed by a discrete-event simulator over `P` virtual workers
+//! with a cost model:
+//!
+//! * leaf work: roofline `max(flops / core_rate, bytes / bw_share)` with
+//!   per-socket bandwidth pools shared by concurrently *computing* workers,
+//!   SMT throughput sharing above the physical core count, and a NUMA
+//!   remote-miss factor (the Fig 2 ±`libnuma` rows);
+//! * runtime events: per-mechanism constants (put, hit/miss get, rollback
+//!   requeue, prescription per dependence, spawn, steal, park) calibrated
+//!   against this repo's *real* runtime implementations via
+//!   `benches/micro_overheads.rs` — see EXPERIMENTS.md §Calibration.
+//!
+//! Everything is deterministic: same plan + config ⇒ same virtual time.
+
+pub mod cost;
+pub mod des;
+pub mod omp;
+
+pub use cost::{CostModel, Machine};
+pub use des::{simulate, SimReport};
+pub use omp::simulate_omp;
+
+use crate::exec::plan::{ArenaBody, Plan};
+use crate::expr::Env;
+
+/// Estimate (points, flops, bytes) of one leaf instance.
+///
+/// Exact enumeration would dominate simulation time for paper-size plans,
+/// so spans are estimated per dimension with earlier variables at their
+/// midpoint — exact for rectangular interiors (the overwhelming majority
+/// of tiles), approximate on skewed boundaries.
+pub fn leaf_cost(plan: &Plan, node_id: u32, coords: &[i64]) -> (f64, f64, f64) {
+    let node = plan.node(node_id);
+    let ArenaBody::Leaf(leaf) = &node.body else {
+        return (0.0, 0.0, 0.0);
+    };
+    let base = node.iv_base + node.dims.len();
+    let mut flops = 0.0;
+    let mut bytes = 0.0;
+    let mut points_total = 0.0;
+    for st in &leaf.stmts {
+        let mut cur = coords[..base].to_vec();
+        cur.resize(base + leaf.n_leaf_vars, 0);
+        let mut pts = 1.0f64;
+        for v in 0..leaf.n_leaf_vars {
+            let env = Env::new(&cur[..base + v], &plan.params);
+            let lo = st.bounds[v].lb.eval(env);
+            let hi = st.bounds[v].ub.eval(env);
+            if hi < lo {
+                pts = 0.0;
+                break;
+            }
+            pts *= (hi - lo + 1) as f64;
+            cur[base + v] = (lo + hi) / 2;
+        }
+        points_total += pts;
+        flops += pts * st.flops_per_point;
+        bytes += pts * st.bytes_per_point;
+    }
+    (points_total, flops, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{by_name, Size};
+
+    #[test]
+    fn leaf_cost_interior_tile_exact() {
+        let inst = (by_name("MATMULT").unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        // sum of leaf costs over all tags == total program points (MATMULT
+        // tiles are rectangular: midpoint estimate is exact)
+        let mut total_pts = 0.0;
+        let mut total_flops = 0.0;
+        plan.for_each_tag(plan.root, &[], &mut |c| {
+            let (p, f, _b) = leaf_cost(&plan, plan.root, c);
+            total_pts += p;
+            total_flops += f;
+        });
+        let n = inst.params[0] as f64;
+        assert_eq!(total_pts, n * n * n);
+        assert_eq!(total_flops, inst.total_flops);
+    }
+}

@@ -1,0 +1,148 @@
+//! Closed-form simulation of the OpenMP comparator: sequential waves of
+//! statically chunked parallel work with a barrier per wave (mirrors
+//! `rt::ompsim` on the modeled machine).
+
+use super::cost::{CostModel, Machine};
+use super::leaf_cost;
+use crate::edt::SyncKind;
+use crate::exec::plan::{ArenaBody, Plan};
+
+/// Virtual seconds for a fork-join execution of the plan.
+pub fn simulate_omp(
+    plan: &Plan,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+) -> f64 {
+    node_time(plan, plan.root, &[], threads, machine, costs, numa_pinned, true) / 1e9
+}
+
+#[allow(clippy::too_many_arguments)]
+fn node_time(
+    plan: &Plan,
+    node_id: u32,
+    prefix: &[i64],
+    threads: usize,
+    m: &Machine,
+    c: &CostModel,
+    numa: bool,
+    allow_parallel: bool,
+) -> f64 {
+    let node = plan.node(node_id);
+    let mut tags: Vec<Box<[i64]>> = Vec::new();
+    plan.for_each_tag(node_id, prefix, &mut |t| tags.push(t.into()));
+    if tags.is_empty() {
+        return 0.0;
+    }
+    let chain_dims: Vec<usize> = (0..node.dims.len())
+        .filter(|&d| node.dims[d].sync == SyncKind::Chain)
+        .collect();
+    // waves by chain-coordinate sum
+    let mut waves: Vec<(i64, Vec<Box<[i64]>>)> = Vec::new();
+    for t in tags {
+        let w: i64 = chain_dims
+            .iter()
+            .map(|&d| t[node.iv_base + d].div_euclid(node.dims[d].step.max(1)))
+            .sum();
+        match waves.binary_search_by_key(&w, |(k, _)| *k) {
+            Ok(i) => waves[i].1.push(t),
+            Err(i) => waves.insert(i, (w, vec![t])),
+        }
+    }
+    let mut total = 0.0;
+    for (_w, wave) in waves {
+        if allow_parallel && wave.len() > 1 {
+            // static chunks; every thread active in the wave (bandwidth
+            // shared by all of them)
+            let n_chunks = threads.min(wave.len());
+            let chunk = wave.len().div_ceil(n_chunks);
+            let active = threads.min(wave.len());
+            let mut worst = 0.0f64;
+            for ch in wave.chunks(chunk) {
+                let mut t_ch = 0.0;
+                for tag in ch {
+                    t_ch += tag_time(plan, node_id, tag, active, threads, m, c, numa, false);
+                }
+                worst = worst.max(t_ch);
+            }
+            total += worst + c.omp_barrier_ns * (threads as f64).log2().max(1.0);
+        } else {
+            for tag in &wave {
+                total += tag_time(plan, node_id, tag, 1, threads, m, c, numa, allow_parallel);
+            }
+        }
+    }
+    total
+}
+
+#[allow(clippy::too_many_arguments)]
+fn tag_time(
+    plan: &Plan,
+    node_id: u32,
+    coords: &[i64],
+    active: usize,
+    threads: usize,
+    m: &Machine,
+    c: &CostModel,
+    numa: bool,
+    allow_parallel: bool,
+) -> f64 {
+    match &plan.node(node_id).body {
+        ArenaBody::Leaf(_) => {
+            let (_p, flops, bytes) = leaf_cost(plan, node_id, coords);
+            let rate = m.worker_flops(threads.min(m.max_threads().max(threads)));
+            let bw = m.worker_bw(active, numa);
+            (flops / rate).max(bytes / bw) * 1e9
+        }
+        ArenaBody::Nested(child) => {
+            node_time(plan, *child, coords, threads, m, c, numa, allow_parallel)
+        }
+        ArenaBody::Siblings(cs) => cs
+            .iter()
+            .map(|ch| node_time(plan, *ch, coords, threads, m, c, numa, allow_parallel))
+            .sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{by_name, Size};
+
+    #[test]
+    fn omp_scales_on_doall_but_not_past_bandwidth() {
+        let inst = (by_name("JAC-3D-1").unwrap().build)(Size::Small);
+        let plan = inst.plan().unwrap();
+        let m = Machine::default();
+        let c = CostModel::default();
+        let t1 = simulate_omp(&plan, 1, &m, &c, true);
+        let t8 = simulate_omp(&plan, 8, &m, &c, true);
+        assert!(t8 < t1, "t1={t1} t8={t8}");
+    }
+
+    #[test]
+    fn omp_wavefront_pays_barriers_on_chained_stencil() {
+        // time-tiled stencil: EDT (simulated) should beat OMP wavefront at
+        // higher thread counts — the paper's core claim (§5.2 case 4)
+        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Small);
+        let plan = inst.plan().unwrap();
+        let m = Machine::default();
+        let c = CostModel::default();
+        let omp16 = simulate_omp(&plan, 16, &m, &c, true);
+        let edt16 = super::super::simulate(
+            &plan,
+            crate::ral::DepMode::CncDep,
+            16,
+            &m,
+            &c,
+            true,
+            inst.total_flops,
+        )
+        .seconds;
+        assert!(
+            edt16 < omp16,
+            "EDT should beat OMP wavefront at 16 threads: edt={edt16} omp={omp16}"
+        );
+    }
+}

@@ -1,0 +1,442 @@
+//! Dense linear algebra: MATMULT, P-MATMULT, LUD, STRSM, TRISOLV.
+//! These exercise coupled (non-uniform) dependences, degenerate-dimension
+//! statement padding for imperfect nests, multi-band schedules, and the
+//! Table 5 granularity knobs.
+
+use super::{Instance, Size};
+use crate::edt::MapOptions;
+use crate::exec::{ArrayStore, KernelSet};
+use crate::expr::{Affine, Expr};
+use crate::ir::{Access, ProgramBuilder, StmtSpec};
+use std::sync::Arc;
+
+/// MATMULT: `C[i][j] += A[i][k] * B[k][j]` — doall (i, j), chained k.
+pub fn matmult(size: Size) -> Instance {
+    let n: i64 = match size {
+        Size::Paper => 1024,
+        Size::Small => 128,
+        Size::Tiny => 16,
+    };
+    let mut pb = ProgramBuilder::new("MATMULT");
+    let np = pb.param("N", n);
+    let a = pb.array("A", 2);
+    let b = pb.array("B", 2);
+    let c = pb.array("C", 2);
+    let v = |iv: usize| Affine::var(3, 1, iv);
+    let ub = Expr::offset(&Expr::param(np), -1);
+    pb.stmt(
+        StmtSpec::new("S")
+            .dim(Expr::constant(0), ub.clone())
+            .dim(Expr::constant(0), ub.clone())
+            .dim(Expr::constant(0), ub.clone())
+            .write(Access::new(c, vec![v(0), v(1)]))
+            .read(Access::new(c, vec![v(0), v(1)]))
+            .read(Access::new(a, vec![v(0), v(2)]))
+            .read(Access::new(b, vec![v(2), v(1)]))
+            .flops(2.0)
+            .bytes(8.0),
+    );
+    let prog = pb.build();
+    let sh = vec![n as usize, n as usize];
+    Instance {
+        name: "MATMULT",
+        prog,
+        params: vec![n],
+        shapes: vec![sh.clone(), sh.clone(), sh],
+        kernels: Arc::new(MatmultKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: (n as f64).powi(3) * 2.0,
+        bytes_per_point: 8.0,
+    }
+}
+
+struct MatmultKern;
+
+impl KernelSet for MatmultKern {
+    fn row(&self, _kid: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let (a, b, c) = (arrays.a(0), arrays.a(1), arrays.a(2));
+        let (sa, sb, sc) = (a.slice_mut(), b.slice_mut(), c.slice_mut());
+        let n = a.strides[0];
+        let (i, j) = (orig[0] as usize, orig[1] as usize);
+        let mut acc = sc[i * n + j];
+        let ra = i * n;
+        for k in lo as usize..=hi as usize {
+            acc += sa[ra + k] * sb[k * n + j];
+        }
+        sc[i * n + j] = acc;
+    }
+}
+
+/// P-MATMULT: prefix ("pyramid") matmult — `for m: C += A·B` over growing
+/// m×m×m products (iteration size `Σ m³`, Table 2). Exercises the
+/// multi-band schedule path (m-band before the k-band).
+pub fn pmatmult(size: Size) -> Instance {
+    let m: i64 = match size {
+        Size::Paper => 256,
+        Size::Small => 32,
+        Size::Tiny => 8,
+    };
+    let mut pb = ProgramBuilder::new("P-MATMULT");
+    let mp = pb.param("M", m);
+    let a = pb.array("A", 2);
+    let b = pb.array("B", 2);
+    let c = pb.array("C", 2);
+    let v = |iv: usize| Affine::var(4, 1, iv);
+    // m in [1, M]; i, j, k in [0, m-1]
+    let m_ub = Expr::param(mp);
+    let inner_ub = Expr::offset(&Expr::iv(0), -1);
+    pb.stmt(
+        StmtSpec::new("S")
+            .dim(Expr::constant(1), m_ub)
+            .dim(Expr::constant(0), inner_ub.clone())
+            .dim(Expr::constant(0), inner_ub.clone())
+            .dim(Expr::constant(0), inner_ub.clone())
+            .write(Access::new(c, vec![v(1), v(2)]))
+            .read(Access::new(c, vec![v(1), v(2)]))
+            .read(Access::new(a, vec![v(1), v(3)]))
+            .read(Access::new(b, vec![v(3), v(2)]))
+            .flops(2.0)
+            .bytes(8.0),
+    );
+    let prog = pb.build();
+    let sh = vec![m as usize, m as usize];
+    // sum of m^3 for m in 1..=M
+    let fm = m as f64;
+    let total = (fm * (fm + 1.0) / 2.0).powi(2) * 2.0;
+    Instance {
+        name: "P-MATMULT",
+        prog,
+        params: vec![m],
+        shapes: vec![sh.clone(), sh.clone(), sh],
+        kernels: Arc::new(PmatmultKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: total,
+        bytes_per_point: 8.0,
+    }
+}
+
+struct PmatmultKern;
+
+impl KernelSet for PmatmultKern {
+    fn row(&self, _kid: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let (a, b, c) = (arrays.a(0), arrays.a(1), arrays.a(2));
+        let (sa, sb, sc) = (a.slice_mut(), b.slice_mut(), c.slice_mut());
+        let n = a.strides[0];
+        let (i, j) = (orig[1] as usize, orig[2] as usize);
+        let mut acc = sc[i * n + j];
+        for k in lo as usize..=hi as usize {
+            acc += sa[i * n + k] * sb[k * n + j];
+        }
+        sc[i * n + j] = acc;
+    }
+}
+
+/// LUD: in-place LU decomposition (Doolittle):
+/// `S1(k, i>k): A[i][k] /= A[k][k]` (padded to depth 3 with `j == k`),
+/// `S2(k, i>k, j>k): A[i][j] -= A[i][k]·A[k][j]`.
+pub fn lud(size: Size) -> Instance {
+    let n: i64 = match size {
+        Size::Paper => 1000,
+        Size::Small => 192,
+        Size::Tiny => 24,
+    };
+    let mut pb = ProgramBuilder::new("LUD");
+    let np = pb.param("N", n);
+    let a = pb.array("A", 2);
+    let v = |iv: usize| Affine::var(3, 1, iv);
+    let ub = Expr::offset(&Expr::param(np), -1);
+    let kp1 = Expr::offset(&Expr::iv(0), 1);
+    // S1: (k, i in [k+1, N-1], j == k)
+    pb.stmt(
+        StmtSpec::new("S1")
+            .dim(Expr::constant(0), ub.clone())
+            .dim(kp1.clone(), ub.clone())
+            .dim(Expr::iv(0), Expr::iv(0))
+            .write(Access::new(a, vec![v(1), v(0)]))
+            .read(Access::new(a, vec![v(1), v(0)]))
+            .read(Access::new(a, vec![v(0), v(0)]))
+            .beta(vec![0, 0, 0, 0])
+            .flops(1.0)
+            .bytes(8.0)
+            .kernel(0),
+    );
+    // S2: (k, i in [k+1, N-1], j in [k+1, N-1])
+    pb.stmt(
+        StmtSpec::new("S2")
+            .dim(Expr::constant(0), ub.clone())
+            .dim(kp1.clone(), ub.clone())
+            .dim(kp1.clone(), ub.clone())
+            .write(Access::new(a, vec![v(1), v(2)]))
+            .read(Access::new(a, vec![v(1), v(2)]))
+            .read(Access::new(a, vec![v(1), v(0)]))
+            .read(Access::new(a, vec![v(0), v(2)]))
+            .beta(vec![0, 0, 0, 1])
+            .flops(2.0)
+            .bytes(8.0)
+            .kernel(1),
+    );
+    let prog = pb.build();
+    let fm = (n - 1) as f64;
+    // sum over k of [(N-1-k) + 2 (N-1-k)^2]
+    let total = fm * (fm + 1.0) / 2.0 + 2.0 * fm * (fm + 1.0) * (2.0 * fm + 1.0) / 6.0;
+    Instance {
+        name: "LUD",
+        prog,
+        params: vec![n],
+        shapes: vec![vec![n as usize, n as usize]],
+        kernels: Arc::new(LudKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 16],
+            ..Default::default()
+        },
+        total_flops: total,
+        bytes_per_point: 8.0,
+    }
+}
+
+struct LudKern;
+
+impl KernelSet for LudKern {
+    fn row(&self, kid: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let a = arrays.a(0);
+        let s = a.slice_mut();
+        let n = a.strides[0];
+        let (k, i) = (orig[0] as usize, orig[1] as usize);
+        match kid {
+            0 => {
+                // A[i][k] /= A[k][k] (j is the degenerate dim: lo == hi == k)
+                debug_assert_eq!(lo, hi);
+                s[i * n + k] /= s[k * n + k];
+            }
+            _ => {
+                let aik = s[i * n + k];
+                let rk = k * n;
+                let ri = i * n;
+                for j in lo as usize..=hi as usize {
+                    s[ri + j] -= aik * s[rk + j];
+                }
+            }
+        }
+    }
+}
+
+/// STRSM: in-place triangular solve with many right-hand sides:
+/// `S1(i, j, k<i): B[i][j] -= A[i][k]·B[k][j]`,
+/// `S2(i, j, k==i): B[i][j] /= A[i][i]`.
+pub fn strsm(size: Size) -> Instance {
+    let n: i64 = match size {
+        Size::Paper => 1500,
+        Size::Small => 160,
+        Size::Tiny => 20,
+    };
+    let mut pb = ProgramBuilder::new("STRSM");
+    let np = pb.param("N", n);
+    let a = pb.array("A", 2);
+    let b = pb.array("B", 2);
+    let v = |iv: usize| Affine::var(3, 1, iv);
+    let ub = Expr::offset(&Expr::param(np), -1);
+    let im1 = Expr::offset(&Expr::iv(0), -1);
+    pb.stmt(
+        StmtSpec::new("S1")
+            .dim(Expr::constant(0), ub.clone())
+            .dim(Expr::constant(0), ub.clone())
+            .dim(Expr::constant(0), im1)
+            .write(Access::new(b, vec![v(0), v(1)]))
+            .read(Access::new(b, vec![v(0), v(1)]))
+            .read(Access::new(a, vec![v(0), v(2)]))
+            .read(Access::new(b, vec![v(2), v(1)]))
+            .beta(vec![0, 0, 0, 0])
+            .flops(2.0)
+            .bytes(8.0)
+            .kernel(0),
+    );
+    pb.stmt(
+        StmtSpec::new("S2")
+            .dim(Expr::constant(0), ub.clone())
+            .dim(Expr::constant(0), ub.clone())
+            .dim(Expr::iv(0), Expr::iv(0))
+            .write(Access::new(b, vec![v(0), v(1)]))
+            .read(Access::new(b, vec![v(0), v(1)]))
+            .read(Access::new(a, vec![v(0), v(0)]))
+            .beta(vec![0, 0, 0, 1])
+            .flops(1.0)
+            .bytes(8.0)
+            .kernel(1),
+    );
+    let prog = pb.build();
+    let fnn = n as f64;
+    let total = fnn * fnn * (fnn - 1.0) / 2.0 * 2.0 + fnn * fnn;
+    Instance {
+        name: "STRSM",
+        prog,
+        params: vec![n],
+        shapes: vec![vec![n as usize, n as usize], vec![n as usize, n as usize]],
+        kernels: Arc::new(StrsmKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: total,
+        bytes_per_point: 8.0,
+    }
+}
+
+struct StrsmKern;
+
+impl KernelSet for StrsmKern {
+    fn row(&self, kid: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let (a, b) = (arrays.a(0), arrays.a(1));
+        let (sa, sb) = (a.slice_mut(), b.slice_mut());
+        let n = a.strides[0];
+        let (i, j) = (orig[0] as usize, orig[1] as usize);
+        match kid {
+            0 => {
+                let mut acc = sb[i * n + j];
+                for k in lo as usize..=hi as usize {
+                    acc -= sa[i * n + k] * sb[k * n + j];
+                }
+                sb[i * n + j] = acc;
+            }
+            _ => {
+                debug_assert_eq!(lo, hi);
+                sb[i * n + j] /= sa[i * n + i];
+            }
+        }
+    }
+}
+
+/// TRISOLV: forward substitution, single right-hand side:
+/// `S1(i, j<i): x[i] -= L[i][j]·x[j]`, `S2(i, j==i): x[i] /= L[i][i]`.
+pub fn trisolv(size: Size) -> Instance {
+    let n: i64 = match size {
+        Size::Paper => 1000,
+        Size::Small => 512,
+        Size::Tiny => 64,
+    };
+    let mut pb = ProgramBuilder::new("TRISOLV");
+    let np = pb.param("N", n);
+    let l = pb.array("L", 2);
+    let x = pb.array("x", 1);
+    let v = |iv: usize| Affine::var(2, 1, iv);
+    let ub = Expr::offset(&Expr::param(np), -1);
+    let im1 = Expr::offset(&Expr::iv(0), -1);
+    pb.stmt(
+        StmtSpec::new("S1")
+            .dim(Expr::constant(0), ub.clone())
+            .dim(Expr::constant(0), im1)
+            .write(Access::new(x, vec![v(0)]))
+            .read(Access::new(x, vec![v(0)]))
+            .read(Access::new(l, vec![v(0), v(1)]))
+            .read(Access::new(x, vec![v(1)]))
+            .beta(vec![0, 0, 0])
+            .flops(2.0)
+            .bytes(8.0)
+            .kernel(0),
+    );
+    pb.stmt(
+        StmtSpec::new("S2")
+            .dim(Expr::constant(0), ub.clone())
+            .dim(Expr::iv(0), Expr::iv(0))
+            .write(Access::new(x, vec![v(0)]))
+            .read(Access::new(x, vec![v(0)]))
+            .read(Access::new(l, vec![v(0), v(0)]))
+            .beta(vec![0, 0, 1])
+            .flops(1.0)
+            .bytes(12.0)
+            .kernel(1),
+    );
+    let prog = pb.build();
+    let fnn = n as f64;
+    Instance {
+        name: "TRISOLV",
+        prog,
+        params: vec![n],
+        shapes: vec![vec![n as usize, n as usize], vec![n as usize]],
+        kernels: Arc::new(TrisolvKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 64],
+            ..Default::default()
+        },
+        total_flops: fnn * (fnn - 1.0) / 2.0 * 2.0 + fnn,
+        bytes_per_point: 10.0,
+    }
+}
+
+struct TrisolvKern;
+
+impl KernelSet for TrisolvKern {
+    fn row(&self, kid: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let (l, x) = (arrays.a(0), arrays.a(1));
+        let (sl, sx) = (l.slice_mut(), x.slice_mut());
+        let n = l.strides[0];
+        let i = orig[0] as usize;
+        match kid {
+            0 => {
+                let mut acc = sx[i];
+                for j in lo as usize..=hi as usize {
+                    acc -= sl[i * n + j] * sx[j];
+                }
+                sx[i] = acc;
+            }
+            _ => {
+                debug_assert_eq!(lo, hi);
+                sx[i] /= sl[i * n + i] + 2.0; // +2: keep well-conditioned
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edt::SyncKind;
+
+    #[test]
+    fn matmult_types() {
+        let i = matmult(Size::Tiny);
+        let tree = i.tree().unwrap();
+        let syncs: Vec<SyncKind> = tree.root.dims.iter().map(|d| d.sync).collect();
+        // two doall dims + one chained reduction dim
+        assert_eq!(
+            syncs.iter().filter(|s| **s == SyncKind::Chain).count(),
+            1,
+            "{:?}",
+            syncs
+        );
+        assert_eq!(tree.root.dims.len(), 3);
+    }
+
+    #[test]
+    fn lud_fused_two_statements() {
+        let i = lud(Size::Tiny);
+        let tree = i.tree().unwrap();
+        // fused nest: leaf carries both statements, interleaved
+        let crate::edt::EdtBody::Leaf(leaf) = &tree.root.body else {
+            panic!("lud should map to a single fused level: {}", tree.dump());
+        };
+        assert_eq!(leaf.stmts.len(), 2);
+        assert!(leaf.interleave);
+    }
+
+    #[test]
+    fn pmatmult_multiband() {
+        // the m-band precedes the k-band: the m chain must be at point
+        // granularity (ts = 1) per the multi-band soundness rule
+        let i = pmatmult(Size::Tiny);
+        let tree = i.tree().unwrap();
+        assert!(tree.root.dims.len() >= 3);
+    }
+
+    #[test]
+    fn trisolv_depth_two() {
+        let i = trisolv(Size::Tiny);
+        assert_eq!(i.prog.max_depth(), 2);
+        let _ = i.tree().unwrap();
+    }
+}

@@ -1,0 +1,179 @@
+//! The evaluation suite: every benchmark of Table 2, plus the diamond-tiled
+//! heat-3d of the motivating example (Fig 1/Fig 2).
+//!
+//! Each workload builds (a) the sequential loop-nest specification
+//! (`ir::Program`), (b) concrete array shapes, (c) a native tile-kernel set
+//! (tight loops on raw slices — the equivalent of the per-EDT C files the
+//! paper's CLooG backend emits and gcc compiles), and (d) mapping options
+//! (tile sizes, preferred hyperplanes for diamond tiling).
+//!
+//! Jacobi-family stencils are expressed *time-expanded* (`A[t][i][j]`,
+//! single statement) rather than ping-pong with `t % 2` guards (Fig 1 uses
+//! parity guards; our IR has no modulo constraints — same dependence
+//! structure, documented in DESIGN.md §5). Gauss-Seidel/SOR are in-place.
+//! Paper sizes are kept for characterization; `Small`/`Tiny` presets scale
+//! the iteration space for this container (DESIGN.md §7).
+
+mod linalg;
+mod phased;
+mod stencils_gs;
+mod stencils_jac;
+mod sweeps;
+
+use crate::analysis::build_gdg;
+use crate::edt::{map_program, EdtTree, MapOptions};
+use crate::exec::{ArrayStore, KernelSet, Plan};
+use crate::ir::Program;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Problem-size preset (DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Size {
+    /// Integration-test scale (~10⁴ points).
+    Tiny,
+    /// Benchmark scale on this container (~10⁵–10⁶ points).
+    Small,
+    /// The paper's sizes (characterization / simulation only).
+    Paper,
+}
+
+/// A fully built benchmark instance.
+pub struct Instance {
+    pub name: &'static str,
+    pub prog: Program,
+    /// Concrete parameter values for this size.
+    pub params: Vec<i64>,
+    /// Array shapes at these parameters.
+    pub shapes: Vec<Vec<usize>>,
+    /// Native kernels (row-granular).
+    pub kernels: Arc<dyn KernelSet>,
+    /// Mapping defaults for this workload (tile sizes, schedule prefs).
+    pub map_opts: MapOptions,
+    /// Closed-form total floating-point operations (avoids enumerating
+    /// paper-size iteration spaces).
+    pub total_flops: f64,
+    /// Modeled bytes moved per iteration point (roofline input for `sim`).
+    pub bytes_per_point: f64,
+}
+
+impl Instance {
+    pub fn tree(&self) -> Result<EdtTree> {
+        let gdg = build_gdg(&self.prog);
+        map_program(&self.prog, &gdg, &self.map_opts)
+    }
+
+    pub fn tree_with(&self, opts: &MapOptions) -> Result<EdtTree> {
+        let gdg = build_gdg(&self.prog);
+        map_program(&self.prog, &gdg, opts)
+    }
+
+    pub fn plan(&self) -> Result<Arc<Plan>> {
+        Ok(Arc::new(Plan::from_tree(&self.tree()?, self.params.clone())))
+    }
+
+    pub fn plan_with(&self, opts: &MapOptions) -> Result<Arc<Plan>> {
+        Ok(Arc::new(Plan::from_tree(
+            &self.tree_with(opts)?,
+            self.params.clone(),
+        )))
+    }
+
+    pub fn arrays(&self) -> Arc<ArrayStore> {
+        let st = ArrayStore::new(&self.shapes);
+        st.init_deterministic(0xDEADBEEF);
+        Arc::new(st)
+    }
+}
+
+/// A named workload builder.
+pub struct Workload {
+    pub name: &'static str,
+    pub build: fn(Size) -> Instance,
+}
+
+/// The Table 2 benchmark list (paper order) plus the Fig 1/2 heat-3d.
+pub fn registry() -> Vec<Workload> {
+    vec![
+        Workload { name: "DIV-3D-1", build: sweeps::div3d1 },
+        Workload { name: "FDTD-2D", build: phased::fdtd2d },
+        Workload { name: "GS-2D-5P", build: stencils_gs::gs2d5p },
+        Workload { name: "GS-2D-9P", build: stencils_gs::gs2d9p },
+        Workload { name: "GS-3D-27P", build: stencils_gs::gs3d27p },
+        Workload { name: "GS-3D-7P", build: stencils_gs::gs3d7p },
+        Workload { name: "JAC-2D-COPY", build: phased::jac2dcopy },
+        Workload { name: "JAC-2D-5P", build: stencils_jac::jac2d5p },
+        Workload { name: "JAC-2D-9P", build: stencils_jac::jac2d9p },
+        Workload { name: "JAC-3D-27P", build: stencils_jac::jac3d27p },
+        Workload { name: "JAC-3D-1", build: sweeps::jac3d1 },
+        Workload { name: "JAC-3D-7P", build: stencils_jac::jac3d7p },
+        Workload { name: "LUD", build: linalg::lud },
+        Workload { name: "MATMULT", build: linalg::matmult },
+        Workload { name: "P-MATMULT", build: linalg::pmatmult },
+        Workload { name: "POISSON", build: stencils_jac::poisson },
+        Workload { name: "RTM-3D", build: sweeps::rtm3d },
+        Workload { name: "SOR", build: stencils_gs::sor },
+        Workload { name: "STRSM", build: linalg::strsm },
+        Workload { name: "TRISOLV", build: linalg::trisolv },
+        Workload { name: "HEAT-3D-DIAMOND", build: stencils_jac::heat3d_diamond },
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Workload> {
+    registry().into_iter().find(|w| w.name.eq_ignore_ascii_case(name))
+}
+
+/// The Table 1/3/4 benchmark subset (excludes the Fig 2 heat-3d).
+pub fn table_benchmarks() -> Vec<&'static str> {
+    registry()
+        .iter()
+        .map(|w| w.name)
+        .filter(|n| *n != "HEAT-3D-DIAMOND")
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_complete() {
+        let names: Vec<&str> = registry().iter().map(|w| w.name).collect();
+        assert_eq!(names.len(), 21);
+        assert_eq!(table_benchmarks().len(), 20);
+        assert!(names.contains(&"JAC-3D-7P"));
+        assert!(by_name("matmult").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_workloads_build_and_map_tiny() {
+        for w in registry() {
+            let inst = (w.build)(Size::Tiny);
+            let tree = inst
+                .tree()
+                .unwrap_or_else(|e| panic!("{}: map failed: {e}", w.name));
+            assert!(tree.n_nodes >= 1, "{}", w.name);
+            let plan = inst.plan().unwrap();
+            assert!(plan.nodes.len() >= 1, "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn small_flops_match_enumeration() {
+        // closed-form totals must agree with domain enumeration at small
+        // sizes (the paper preset relies on the closed forms)
+        for w in registry() {
+            let inst = (w.build)(Size::Tiny);
+            let enumerated = inst.prog.total_flops(&inst.params);
+            let rel = (inst.total_flops - enumerated).abs() / enumerated.max(1.0);
+            assert!(
+                rel < 1e-9,
+                "{}: closed-form {} vs enumerated {}",
+                w.name,
+                inst.total_flops,
+                enumerated
+            );
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Imperfectly nested multi-phase benchmarks: JAC-2D-COPY (compute + copy
+//! sibling loops under the time loop) and FDTD-2D (three field-update
+//! phases). These exercise the sibling-group / hierarchical async-finish
+//! path of the mapper (§4.5 "N has siblings", §4.8).
+
+use super::{Instance, Size};
+use crate::edt::MapOptions;
+use crate::exec::{ArrayStore, KernelSet};
+use crate::expr::{Affine, Expr};
+use crate::ir::{Access, ProgramBuilder, StmtSpec};
+use std::sync::Arc;
+
+fn pick(size: Size, paper: (i64, i64), small: (i64, i64), tiny: (i64, i64)) -> (i64, i64) {
+    match size {
+        Size::Paper => paper,
+        Size::Small => small,
+        Size::Tiny => tiny,
+    }
+}
+
+/// JAC-2D-COPY: `for t { for (i,j): B = stencil(A); for (i,j): A = B }`.
+pub fn jac2dcopy(size: Size) -> Instance {
+    let (t, n) = pick(size, (1000, 1000), (16, 256), (3, 24));
+    let mut pb = ProgramBuilder::new("JAC-2D-COPY");
+    let tp = pb.param("T", t);
+    let np = pb.param("N", n);
+    let a = pb.array("A", 2);
+    let b = pb.array("B", 2);
+    let s = |iv: usize, c: i64| Affine::var_plus(3, 2, iv, c);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    pb.stmt(
+        StmtSpec::new("compute")
+            .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+            .dim(Expr::constant(1), ub.clone())
+            .dim(Expr::constant(1), ub.clone())
+            .write(Access::new(b, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(a, vec![s(1, -1), s(2, 0)]))
+            .read(Access::new(a, vec![s(1, 1), s(2, 0)]))
+            .read(Access::new(a, vec![s(1, 0), s(2, -1)]))
+            .read(Access::new(a, vec![s(1, 0), s(2, 1)]))
+            .beta(vec![0, 0, 0, 0])
+            .flops(4.0)
+            .bytes(8.0)
+            .kernel(0),
+    );
+    pb.stmt(
+        StmtSpec::new("copy")
+            .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+            .dim(Expr::constant(1), ub.clone())
+            .dim(Expr::constant(1), ub.clone())
+            .write(Access::new(a, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(b, vec![s(1, 0), s(2, 0)]))
+            .beta(vec![0, 1, 0, 0])
+            .flops(0.0)
+            .bytes(8.0)
+            .kernel(1),
+    );
+    let prog = pb.build();
+    Instance {
+        name: "JAC-2D-COPY",
+        prog,
+        params: vec![t, n],
+        shapes: vec![vec![n as usize, n as usize], vec![n as usize, n as usize]],
+        kernels: Arc::new(JacCopyKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 64],
+            ..Default::default()
+        },
+        total_flops: t as f64 * ((n - 2) as f64).powi(2) * 4.0,
+        bytes_per_point: 8.0,
+    }
+}
+
+struct JacCopyKern;
+
+impl KernelSet for JacCopyKern {
+    fn row(&self, kid: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let (a, b) = (arrays.a(0), arrays.a(1));
+        let (sa, sb) = (a.slice_mut(), b.slice_mut());
+        let st = a.strides[0];
+        let i = orig[1] as usize;
+        let r = i * st;
+        match kid {
+            0 => {
+                for j in lo as usize..=hi as usize {
+                    sb[r + j] =
+                        0.25 * (sa[r + j - 1] + sa[r + j + 1] + sa[r - st + j] + sa[r + st + j]);
+                }
+            }
+            _ => {
+                sa[r + lo as usize..=r + hi as usize]
+                    .copy_from_slice(&sb[r + lo as usize..=r + hi as usize]);
+            }
+        }
+    }
+}
+
+/// FDTD-2D: three sibling field updates per time step (ey, ex, hz).
+pub fn fdtd2d(size: Size) -> Instance {
+    let (t, n) = pick(size, (500, 1000), (16, 256), (3, 20));
+    let mut pb = ProgramBuilder::new("FDTD-2D");
+    let tp = pb.param("T", t);
+    let np = pb.param("N", n);
+    let ey = pb.array("ey", 2);
+    let ex = pb.array("ex", 2);
+    let hz = pb.array("hz", 2);
+    let s = |iv: usize, c: i64| Affine::var_plus(3, 2, iv, c);
+    let nm1 = Expr::offset(&Expr::param(np), -1);
+    let nm2 = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    let t_ub = Expr::offset(&Expr::param(tp), -1);
+    // ey[i][j] -= 0.5*(hz[i][j] - hz[i-1][j]),  i in [1,N-1], j in [0,N-1]
+    pb.stmt(
+        StmtSpec::new("ey")
+            .dim(Expr::constant(0), t_ub.clone())
+            .dim(Expr::constant(1), nm1.clone())
+            .dim(Expr::constant(0), nm1.clone())
+            .write(Access::new(ey, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(ey, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(hz, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(hz, vec![s(1, -1), s(2, 0)]))
+            .beta(vec![0, 0, 0, 0])
+            .flops(2.0)
+            .bytes(12.0)
+            .kernel(0),
+    );
+    // ex[i][j] -= 0.5*(hz[i][j] - hz[i][j-1]), i in [0,N-1], j in [1,N-1]
+    pb.stmt(
+        StmtSpec::new("ex")
+            .dim(Expr::constant(0), t_ub.clone())
+            .dim(Expr::constant(0), nm1.clone())
+            .dim(Expr::constant(1), nm1.clone())
+            .write(Access::new(ex, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(ex, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(hz, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(hz, vec![s(1, 0), s(2, -1)]))
+            .beta(vec![0, 1, 0, 0])
+            .flops(2.0)
+            .bytes(12.0)
+            .kernel(1),
+    );
+    // hz[i][j] -= 0.7*(ex[i][j+1]-ex[i][j]+ey[i+1][j]-ey[i][j]), i,j in [0,N-2]
+    pb.stmt(
+        StmtSpec::new("hz")
+            .dim(Expr::constant(0), t_ub.clone())
+            .dim(Expr::constant(0), nm2.clone())
+            .dim(Expr::constant(0), nm2.clone())
+            .write(Access::new(hz, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(hz, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(ex, vec![s(1, 0), s(2, 1)]))
+            .read(Access::new(ex, vec![s(1, 0), s(2, 0)]))
+            .read(Access::new(ey, vec![s(1, 1), s(2, 0)]))
+            .read(Access::new(ey, vec![s(1, 0), s(2, 0)]))
+            .beta(vec![0, 2, 0, 0])
+            .flops(4.0)
+            .bytes(16.0)
+            .kernel(2),
+    );
+    let prog = pb.build();
+    let fnn = n as f64;
+    let total = t as f64 * (2.0 * (fnn - 1.0) * fnn * 2.0 + (fnn - 1.0) * (fnn - 1.0) * 4.0);
+    let sh = vec![n as usize, n as usize];
+    Instance {
+        name: "FDTD-2D",
+        prog,
+        params: vec![t, n],
+        shapes: vec![sh.clone(), sh.clone(), sh],
+        kernels: Arc::new(FdtdKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 64],
+            ..Default::default()
+        },
+        total_flops: total,
+        bytes_per_point: 13.0,
+    }
+}
+
+struct FdtdKern;
+
+impl KernelSet for FdtdKern {
+    fn row(&self, kid: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let (ey, ex, hz) = (arrays.a(0), arrays.a(1), arrays.a(2));
+        let (sey, sex, shz) = (ey.slice_mut(), ex.slice_mut(), hz.slice_mut());
+        let st = ey.strides[0];
+        let i = orig[1] as usize;
+        let r = i * st;
+        match kid {
+            0 => {
+                for j in lo as usize..=hi as usize {
+                    sey[r + j] -= 0.5 * (shz[r + j] - shz[r - st + j]);
+                }
+            }
+            1 => {
+                for j in lo as usize..=hi as usize {
+                    sex[r + j] -= 0.5 * (shz[r + j] - shz[r + j - 1]);
+                }
+            }
+            _ => {
+                for j in lo as usize..=hi as usize {
+                    shz[r + j] -=
+                        0.7 * (sex[r + j + 1] - sex[r + j] + sey[r + st + j] - sey[r + j]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edt::{EdtBody, SyncKind};
+
+    #[test]
+    fn jac2dcopy_is_t_chain_over_two_phases() {
+        let i = jac2dcopy(Size::Tiny);
+        let tree = i.tree().unwrap();
+        assert_eq!(tree.root.dims.len(), 1);
+        assert_eq!(tree.root.dims[0].sync, SyncKind::Chain);
+        let EdtBody::Siblings(sibs) = &tree.root.body else {
+            panic!("expected sibling phases: {}", tree.dump());
+        };
+        assert_eq!(sibs.len(), 2);
+    }
+
+    #[test]
+    fn fdtd_three_phases() {
+        let i = fdtd2d(Size::Tiny);
+        let tree = i.tree().unwrap();
+        let EdtBody::Siblings(sibs) = &tree.root.body else {
+            panic!("expected sibling phases: {}", tree.dump());
+        };
+        assert_eq!(sibs.len(), 3);
+        // each phase is a doall 2-D tile space
+        for s in sibs {
+            assert!(s.dims.iter().all(|d| d.sync == SyncKind::None), "{}", tree.dump());
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! In-place (Gauss-Seidel-family) stencils: GS-2D-5P, GS-2D-9P, GS-3D-7P,
+//! GS-3D-27P, SOR. These carry loop dependences in every direction of the
+//! sweep, exercising the scheduler's skewing path (2-D/3-D time tiling) and
+//! the identity permutable band (SOR).
+
+use super::{Instance, Size};
+use crate::edt::MapOptions;
+use crate::exec::{ArrayStore, KernelSet};
+use crate::expr::{Affine, Expr};
+use crate::ir::{Access, ProgramBuilder, StmtSpec};
+use std::sync::Arc;
+
+fn pick(size: Size, paper: (i64, i64), small: (i64, i64), tiny: (i64, i64)) -> (i64, i64) {
+    match size {
+        Size::Paper => paper,
+        Size::Small => small,
+        Size::Tiny => tiny,
+    }
+}
+
+fn gs2d_prog(name: &str, t: i64, n: i64, flops: f64, nine: bool) -> crate::ir::Program {
+    let mut pb = ProgramBuilder::new(name);
+    let tp = pb.param("T", t);
+    let np = pb.param("N", n);
+    let a = pb.array("A", 2);
+    let s = |iv: usize, c: i64| Affine::var_plus(3, 2, iv, c);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    let mut spec = StmtSpec::new("S")
+        .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+        .dim(Expr::constant(1), ub.clone())
+        .dim(Expr::constant(1), ub.clone())
+        .write(Access::new(a, vec![s(1, 0), s(2, 0)]))
+        .flops(flops)
+        .bytes(8.0);
+    let offs: Vec<(i64, i64)> = if nine {
+        vec![(0, 0), (-1, 0), (1, 0), (0, -1), (0, 1), (-1, -1), (-1, 1), (1, -1), (1, 1)]
+    } else {
+        vec![(0, 0), (-1, 0), (1, 0), (0, -1), (0, 1)]
+    };
+    for (di, dj) in offs {
+        spec = spec.read(Access::new(a, vec![s(1, di), s(2, dj)]));
+    }
+    pb.stmt(spec);
+    pb.build()
+}
+
+struct Gs2dKern {
+    nine: bool,
+    coef: f32,
+}
+
+impl KernelSet for Gs2dKern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let a = arrays.a(0);
+        let s = a.slice_mut();
+        let st0 = a.strides[0];
+        let i = orig[1] as usize;
+        let r = i * st0;
+        let c = self.coef;
+        if self.nine {
+            for j in lo as usize..=hi as usize {
+                s[r + j] = c
+                    * (s[r + j]
+                        + s[r + j - 1]
+                        + s[r + j + 1]
+                        + s[r - st0 + j]
+                        + s[r + st0 + j]
+                        + s[r - st0 + j - 1]
+                        + s[r - st0 + j + 1]
+                        + s[r + st0 + j - 1]
+                        + s[r + st0 + j + 1]);
+            }
+        } else {
+            for j in lo as usize..=hi as usize {
+                s[r + j] =
+                    c * (s[r + j] + s[r + j - 1] + s[r + j + 1] + s[r - st0 + j] + s[r + st0 + j]);
+            }
+        }
+    }
+}
+
+fn gs2d(name: &'static str, size: Size, nine: bool) -> Instance {
+    let (t, n) = pick(size, (256, 1024), (32, 256), (4, 20));
+    let flops = if nine { 9.0 } else { 5.0 };
+    Instance {
+        name,
+        prog: gs2d_prog(name, t, n, flops, nine),
+        params: vec![t, n],
+        shapes: vec![vec![n as usize, n as usize]],
+        kernels: Arc::new(Gs2dKern {
+            nine,
+            coef: if nine { 1.0 / 9.5 } else { 0.2 },
+        }),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: t as f64 * ((n - 2) as f64).powi(2) * flops,
+        bytes_per_point: 8.0,
+    }
+}
+
+pub fn gs2d5p(size: Size) -> Instance {
+    gs2d("GS-2D-5P", size, false)
+}
+
+pub fn gs2d9p(size: Size) -> Instance {
+    gs2d("GS-2D-9P", size, true)
+}
+
+fn gs3d_prog(name: &str, t: i64, n: i64, flops: f64, full27: bool) -> crate::ir::Program {
+    let mut pb = ProgramBuilder::new(name);
+    let tp = pb.param("T", t);
+    let np = pb.param("N", n);
+    let a = pb.array("A", 3);
+    let s = |iv: usize, c: i64| Affine::var_plus(4, 2, iv, c);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    let mut spec = StmtSpec::new("S")
+        .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+        .dim(Expr::constant(1), ub.clone())
+        .dim(Expr::constant(1), ub.clone())
+        .dim(Expr::constant(1), ub.clone())
+        .write(Access::new(a, vec![s(1, 0), s(2, 0), s(3, 0)]))
+        .flops(flops)
+        .bytes(8.0);
+    if full27 {
+        for di in -1..=1 {
+            for dj in -1..=1 {
+                for dk in -1..=1 {
+                    spec = spec.read(Access::new(a, vec![s(1, di), s(2, dj), s(3, dk)]));
+                }
+            }
+        }
+    } else {
+        for (di, dj, dk) in [
+            (0, 0, 0),
+            (-1, 0, 0),
+            (1, 0, 0),
+            (0, -1, 0),
+            (0, 1, 0),
+            (0, 0, -1),
+            (0, 0, 1),
+        ] {
+            spec = spec.read(Access::new(a, vec![s(1, di), s(2, dj), s(3, dk)]));
+        }
+    }
+    pb.stmt(spec);
+    pb.build()
+}
+
+struct Gs3dKern {
+    full27: bool,
+    coef: f32,
+}
+
+impl KernelSet for Gs3dKern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let a = arrays.a(0);
+        let s = a.slice_mut();
+        let (st0, st1) = (a.strides[0], a.strides[1]);
+        let (i, j) = (orig[1] as usize, orig[2] as usize);
+        let r = i * st0 + j * st1;
+        let c = self.coef;
+        if self.full27 {
+            for k in lo as usize..=hi as usize {
+                let mut acc = 0f32;
+                for di in [r - st0, r, r + st0] {
+                    for dj in [di - st1, di, di + st1] {
+                        acc += s[dj + k - 1] + s[dj + k] + s[dj + k + 1];
+                    }
+                }
+                s[r + k] = c * acc;
+            }
+        } else {
+            for k in lo as usize..=hi as usize {
+                s[r + k] = c
+                    * (s[r + k]
+                        + s[r + k - 1]
+                        + s[r + k + 1]
+                        + s[r - st1 + k]
+                        + s[r + st1 + k]
+                        + s[r - st0 + k]
+                        + s[r + st0 + k]);
+            }
+        }
+    }
+}
+
+fn gs3d(name: &'static str, size: Size, full27: bool) -> Instance {
+    let (t, n) = pick(size, (256, 256), (8, 64), (2, 12));
+    let flops = if full27 { 26.0 } else { 7.0 };
+    Instance {
+        name,
+        prog: gs3d_prog(name, t, n, flops, full27),
+        params: vec![t, n],
+        shapes: vec![vec![n as usize, n as usize, n as usize]],
+        kernels: Arc::new(Gs3dKern {
+            full27,
+            coef: if full27 { 1.0 / 27.5 } else { 1.0 / 7.5 },
+        }),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: t as f64 * ((n - 2) as f64).powi(3) * flops,
+        bytes_per_point: 8.0,
+    }
+}
+
+pub fn gs3d7p(size: Size) -> Instance {
+    gs3d("GS-3D-7P", size, false)
+}
+
+pub fn gs3d27p(size: Size) -> Instance {
+    gs3d("GS-3D-27P", size, true)
+}
+
+/// SOR: one in-place over-relaxation sweep over a large 2-D grid — the
+/// paper's "tiny tasks" stress test (§5.2 case 2, Table 5).
+pub fn sor(size: Size) -> Instance {
+    let n = match size {
+        Size::Paper => 10_000,
+        Size::Small => 512,
+        Size::Tiny => 48,
+    };
+    let mut pb = ProgramBuilder::new("SOR");
+    let np = pb.param("N", n);
+    let a = pb.array("A", 2);
+    let s = |iv: usize, c: i64| Affine::var_plus(2, 1, iv, c);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    pb.stmt(
+        StmtSpec::new("S")
+            .dim(Expr::constant(1), ub.clone())
+            .dim(Expr::constant(1), ub.clone())
+            .write(Access::new(a, vec![s(0, 0), s(1, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 0)]))
+            .read(Access::new(a, vec![s(0, -1), s(1, 0)]))
+            .read(Access::new(a, vec![s(0, 1), s(1, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, -1)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 1)]))
+            .flops(5.0)
+            .bytes(8.0),
+    );
+    let prog = pb.build();
+    Instance {
+        name: "SOR",
+        prog,
+        params: vec![n],
+        shapes: vec![vec![n as usize, n as usize]],
+        kernels: Arc::new(SorKern { omega: 0.9 }),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 64],
+            ..Default::default()
+        },
+        total_flops: ((n - 2) as f64).powi(2) * 5.0,
+        bytes_per_point: 8.0,
+    }
+}
+
+struct SorKern {
+    omega: f32,
+}
+
+impl KernelSet for SorKern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let a = arrays.a(0);
+        let s = a.slice_mut();
+        let st0 = a.strides[0];
+        let i = orig[0] as usize;
+        let r = i * st0;
+        let w4 = self.omega * 0.25;
+        let om = 1.0 - self.omega;
+        for j in lo as usize..=hi as usize {
+            s[r + j] =
+                om * s[r + j] + w4 * (s[r + j - 1] + s[r + j + 1] + s[r - st0 + j] + s[r + st0 + j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edt::SyncKind;
+
+    #[test]
+    fn gs2d_skews_into_chain_band() {
+        let i = gs2d5p(Size::Tiny);
+        let tree = i.tree().unwrap();
+        assert_eq!(tree.root.dims.len(), 3);
+        assert!(tree.root.dims.iter().all(|d| d.sync == SyncKind::Chain));
+    }
+
+    #[test]
+    fn sor_identity_band_no_skew() {
+        let i = sor(Size::Tiny);
+        let gdg = crate::analysis::build_gdg(&i.prog);
+        let sched = crate::schedule::schedule(&i.prog, &gdg, &i.map_opts.sched).unwrap();
+        assert!(sched.is_identity(), "{sched}");
+        // both dims carry deps -> chains
+        let tree = i.tree().unwrap();
+        assert!(tree.root.dims.iter().all(|d| d.sync == SyncKind::Chain));
+    }
+
+    #[test]
+    fn gs3d_maps_with_four_dims() {
+        let i = gs3d7p(Size::Tiny);
+        let tree = i.tree().unwrap();
+        assert_eq!(tree.root.dims.len(), 4);
+    }
+}

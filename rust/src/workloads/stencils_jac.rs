@@ -1,0 +1,363 @@
+//! Jacobi-family explicit stencils (time-expanded single-statement form):
+//! JAC-2D-5P, JAC-2D-9P, JAC-3D-7P, JAC-3D-27P, POISSON, and the
+//! diamond-tiled HEAT-3D of Fig 1/Fig 2.
+
+use super::{Instance, Size};
+use crate::edt::MapOptions;
+use crate::exec::{ArrayStore, KernelSet};
+use crate::expr::{Affine, Expr};
+use crate::ir::{Access, ProgramBuilder, StmtSpec};
+use crate::schedule::SchedOptions;
+use std::sync::Arc;
+
+fn pick(size: Size, paper: (i64, i64), small: (i64, i64), tiny: (i64, i64)) -> (i64, i64) {
+    match size {
+        Size::Paper => paper,
+        Size::Small => small,
+        Size::Tiny => tiny,
+    }
+}
+
+/// Build a time-expanded 2-D Jacobi program:
+/// `A[t+1][i][j] = c * Σ stencil(A[t])`, t∈[0,T), i,j∈[1,N-2].
+fn jac2d_prog(name: &str, t: i64, n: i64, flops: f64, nine: bool) -> crate::ir::Program {
+    let mut pb = ProgramBuilder::new(name);
+    let tp = pb.param("T", t);
+    let np = pb.param("N", n);
+    let a = pb.array("A", 3);
+    let s = |iv: usize, c: i64| Affine::var_plus(3, 2, iv, c);
+    let mut spec = StmtSpec::new("S")
+        .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+        .dim(Expr::constant(1), Expr::sub(&Expr::param(np), &Expr::constant(2)))
+        .dim(Expr::constant(1), Expr::sub(&Expr::param(np), &Expr::constant(2)))
+        .write(Access::new(a, vec![s(0, 1), s(1, 0), s(2, 0)]))
+        .flops(flops)
+        .bytes(12.0);
+    let offs: Vec<(i64, i64)> = if nine {
+        vec![(0, 0), (-1, 0), (1, 0), (0, -1), (0, 1), (-1, -1), (-1, 1), (1, -1), (1, 1)]
+    } else {
+        vec![(0, 0), (-1, 0), (1, 0), (0, -1), (0, 1)]
+    };
+    for (di, dj) in offs {
+        spec = spec.read(Access::new(a, vec![s(0, 0), s(1, di), s(2, dj)]));
+    }
+    pb.stmt(spec);
+    pb.build()
+}
+
+struct Jac2dKern {
+    nine: bool,
+    coef: f32,
+}
+
+impl KernelSet for Jac2dKern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let a = arrays.a(0);
+        let s = a.slice_mut();
+        let (st0, st1) = (a.strides[0], a.strides[1]);
+        let (t, i) = (orig[0] as usize, orig[1] as usize);
+        let w = (t + 1) * st0 + i * st1;
+        let r = t * st0 + i * st1;
+        let c = self.coef;
+        if self.nine {
+            for j in lo as usize..=hi as usize {
+                s[w + j] = c
+                    * (s[r + j]
+                        + s[r + j - 1]
+                        + s[r + j + 1]
+                        + s[r - st1 + j]
+                        + s[r + st1 + j]
+                        + s[r - st1 + j - 1]
+                        + s[r - st1 + j + 1]
+                        + s[r + st1 + j - 1]
+                        + s[r + st1 + j + 1]);
+            }
+        } else {
+            for j in lo as usize..=hi as usize {
+                s[w + j] =
+                    c * (s[r + j] + s[r + j - 1] + s[r + j + 1] + s[r - st1 + j] + s[r + st1 + j]);
+            }
+        }
+    }
+}
+
+fn jac2d(name: &'static str, size: Size, nine: bool) -> Instance {
+    let (t, n) = pick(size, (256, 1024), (32, 256), (4, 20));
+    let flops = if nine { 9.0 } else { 5.0 };
+    let prog = jac2d_prog(name, t, n, flops, nine);
+    Instance {
+        name,
+        prog,
+        params: vec![t, n],
+        shapes: vec![vec![(t + 1) as usize, n as usize, n as usize]],
+        kernels: Arc::new(Jac2dKern {
+            nine,
+            coef: if nine { 1.0 / 9.5 } else { 0.2 },
+        }),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: t as f64 * ((n - 2) as f64).powi(2) * flops,
+        bytes_per_point: 12.0,
+    }
+}
+
+pub fn jac2d5p(size: Size) -> Instance {
+    jac2d("JAC-2D-5P", size, false)
+}
+
+pub fn jac2d9p(size: Size) -> Instance {
+    jac2d("JAC-2D-9P", size, true)
+}
+
+/// Time-expanded 3-D Jacobi.
+fn jac3d_prog(name: &str, t: i64, n: i64, flops: f64, full27: bool) -> crate::ir::Program {
+    let mut pb = ProgramBuilder::new(name);
+    let tp = pb.param("T", t);
+    let np = pb.param("N", n);
+    let a = pb.array("A", 4);
+    let s = |iv: usize, c: i64| Affine::var_plus(4, 2, iv, c);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    let mut spec = StmtSpec::new("S")
+        .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+        .dim(Expr::constant(1), ub.clone())
+        .dim(Expr::constant(1), ub.clone())
+        .dim(Expr::constant(1), ub.clone())
+        .write(Access::new(a, vec![s(0, 1), s(1, 0), s(2, 0), s(3, 0)]))
+        .flops(flops)
+        .bytes(16.0);
+    if full27 {
+        for di in -1..=1 {
+            for dj in -1..=1 {
+                for dk in -1..=1 {
+                    spec = spec.read(Access::new(a, vec![s(0, 0), s(1, di), s(2, dj), s(3, dk)]));
+                }
+            }
+        }
+    } else {
+        for (di, dj, dk) in [
+            (0, 0, 0),
+            (-1, 0, 0),
+            (1, 0, 0),
+            (0, -1, 0),
+            (0, 1, 0),
+            (0, 0, -1),
+            (0, 0, 1),
+        ] {
+            spec = spec.read(Access::new(a, vec![s(0, 0), s(1, di), s(2, dj), s(3, dk)]));
+        }
+    }
+    pb.stmt(spec);
+    pb.build()
+}
+
+struct Jac3dKern {
+    full27: bool,
+    coef: f32,
+}
+
+impl KernelSet for Jac3dKern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let a = arrays.a(0);
+        let s = a.slice_mut();
+        let (st0, st1, st2) = (a.strides[0], a.strides[1], a.strides[2]);
+        let (t, i, j) = (orig[0] as usize, orig[1] as usize, orig[2] as usize);
+        let w = (t + 1) * st0 + i * st1 + j * st2;
+        let r = t * st0 + i * st1 + j * st2;
+        let c = self.coef;
+        if self.full27 {
+            for k in lo as usize..=hi as usize {
+                let mut acc = 0f32;
+                for di in [r - st1, r, r + st1] {
+                    for dj in [di - st2, di, di + st2] {
+                        acc += s[dj + k - 1] + s[dj + k] + s[dj + k + 1];
+                    }
+                }
+                s[w + k] = c * acc;
+            }
+        } else {
+            for k in lo as usize..=hi as usize {
+                s[w + k] = c
+                    * (s[r + k]
+                        + s[r + k - 1]
+                        + s[r + k + 1]
+                        + s[r - st2 + k]
+                        + s[r + st2 + k]
+                        + s[r - st1 + k]
+                        + s[r + st1 + k]);
+            }
+        }
+    }
+}
+
+fn jac3d(name: &'static str, size: Size, full27: bool, diamond: bool) -> Instance {
+    let (t, n) = if diamond {
+        pick(size, (32, 256), (12, 64), (2, 12))
+    } else {
+        pick(size, (256, 256), (8, 64), (2, 12))
+    };
+    let flops = if full27 { 26.0 } else { 7.0 };
+    let prog = jac3d_prog(name, t, n, flops, full27);
+    let sched = if diamond {
+        // the Fig 1(b) diamond hyperplanes: (t−i, t+i) over the first space
+        // dim, plain skew on the others
+        SchedOptions {
+            prefer: vec![
+                vec![1, -1, 0, 0],
+                vec![1, 1, 0, 0],
+                vec![1, 0, 1, 0],
+                vec![1, 0, 0, 1],
+            ],
+            ..Default::default()
+        }
+    } else {
+        SchedOptions::default()
+    };
+    let tile_sizes = if diamond {
+        vec![8, 16, 16, 128] // the 8x16x16x128 of Fig 1
+    } else {
+        vec![16, 16, 16, 64]
+    };
+    Instance {
+        name,
+        prog,
+        params: vec![t, n],
+        shapes: vec![vec![(t + 1) as usize, n as usize, n as usize, n as usize]],
+        kernels: Arc::new(Jac3dKern {
+            full27,
+            coef: if full27 { 1.0 / 27.5 } else { 1.0 / 7.5 },
+        }),
+        map_opts: MapOptions {
+            tile_sizes,
+            sched,
+            ..Default::default()
+        },
+        total_flops: t as f64 * ((n - 2) as f64).powi(3) * flops,
+        bytes_per_point: 16.0,
+    }
+}
+
+pub fn jac3d7p(size: Size) -> Instance {
+    jac3d("JAC-3D-7P", size, false, false)
+}
+
+pub fn jac3d27p(size: Size) -> Instance {
+    jac3d("JAC-3D-27P", size, true, false)
+}
+
+/// The motivating example (Fig 1/Fig 2): explicit heat-3d with diamond
+/// tiling selected through scheduler preferences.
+pub fn heat3d_diamond(size: Size) -> Instance {
+    let mut inst = jac3d("HEAT-3D-DIAMOND", size, false, true);
+    inst.name = "HEAT-3D-DIAMOND";
+    inst
+}
+
+/// POISSON: 2-D relaxation with a source term (time-expanded).
+pub fn poisson(size: Size) -> Instance {
+    let (t, n) = pick(size, (32, 1024), (24, 256), (3, 20));
+    let mut pb = ProgramBuilder::new("POISSON");
+    let tp = pb.param("T", t);
+    let np = pb.param("N", n);
+    let a = pb.array("A", 3);
+    let f = pb.array("F", 2);
+    let s = |iv: usize, c: i64| Affine::var_plus(3, 2, iv, c);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    pb.stmt(
+        StmtSpec::new("S")
+            .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+            .dim(Expr::constant(1), ub.clone())
+            .dim(Expr::constant(1), ub.clone())
+            .write(Access::new(a, vec![s(0, 1), s(1, 0), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, -1), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 1), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 0), s(2, -1)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 0), s(2, 1)]))
+            .read(Access::new(f, vec![s(1, 0), s(2, 0)]))
+            .flops(6.0)
+            .bytes(16.0),
+    );
+    let prog = pb.build();
+    Instance {
+        name: "POISSON",
+        prog,
+        params: vec![t, n],
+        shapes: vec![
+            vec![(t + 1) as usize, n as usize, n as usize],
+            vec![n as usize, n as usize],
+        ],
+        kernels: Arc::new(PoissonKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: t as f64 * ((n - 2) as f64).powi(2) * 6.0,
+        bytes_per_point: 16.0,
+    }
+}
+
+struct PoissonKern;
+
+impl KernelSet for PoissonKern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let a = arrays.a(0);
+        let f = arrays.a(1);
+        let s = a.slice_mut();
+        let ff = f.slice_mut();
+        let (st0, st1) = (a.strides[0], a.strides[1]);
+        let fst = f.strides[0];
+        let (t, i) = (orig[0] as usize, orig[1] as usize);
+        let w = (t + 1) * st0 + i * st1;
+        let r = t * st0 + i * st1;
+        let fr = i * fst;
+        for j in lo as usize..=hi as usize {
+            s[w + j] = 0.25
+                * (s[r + j - 1] + s[r + j + 1] + s[r - st1 + j] + s[r + st1 + j]
+                    - 0.01 * ff[fr + j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Size;
+
+    #[test]
+    fn jacobi_programs_have_expected_shape() {
+        let i = jac2d5p(Size::Tiny);
+        assert_eq!(i.prog.stmts.len(), 1);
+        assert_eq!(i.prog.stmts[0].reads.len(), 5);
+        let i = jac2d9p(Size::Tiny);
+        assert_eq!(i.prog.stmts[0].reads.len(), 9);
+        let i = jac3d7p(Size::Tiny);
+        assert_eq!(i.prog.stmts[0].reads.len(), 7);
+        let i = jac3d27p(Size::Tiny);
+        assert_eq!(i.prog.stmts[0].reads.len(), 27);
+    }
+
+    #[test]
+    fn jac2d_maps_to_skewed_permutable_band() {
+        let i = jac2d5p(Size::Tiny);
+        let tree = i.tree().unwrap();
+        // single level, 3 chain dims
+        assert_eq!(tree.root.dims.len(), 3);
+        assert!(tree
+            .root
+            .dims
+            .iter()
+            .all(|d| d.sync == crate::edt::SyncKind::Chain));
+    }
+
+    #[test]
+    fn heat3d_diamond_uses_diamond_hyperplanes() {
+        let i = heat3d_diamond(Size::Tiny);
+        let gdg = crate::analysis::build_gdg(&i.prog);
+        let sched =
+            crate::schedule::schedule(&i.prog, &gdg, &i.map_opts.sched).unwrap();
+        assert_eq!(sched.hyperplanes[0], vec![1, -1, 0, 0]);
+        assert_eq!(sched.hyperplanes[1], vec![1, 1, 0, 0]);
+        crate::schedule::validate(&sched, &gdg).unwrap();
+    }
+}

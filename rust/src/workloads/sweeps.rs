@@ -1,0 +1,228 @@
+//! Embarrassingly parallel single-sweep kernels (§5.2 case 1): DIV-3D-1,
+//! JAC-3D-1, RTM-3D — runtime-latency stress tests with no runtime
+//! dependences.
+
+use super::{Instance, Size};
+use crate::edt::MapOptions;
+use crate::exec::{ArrayStore, KernelSet};
+use crate::expr::{Affine, Expr};
+use crate::ir::{Access, ProgramBuilder, StmtSpec};
+use std::sync::Arc;
+
+fn pick_n(size: Size) -> i64 {
+    match size {
+        Size::Paper => 256,
+        Size::Small => 130,
+        Size::Tiny => 14,
+    }
+}
+
+/// DIV-3D-1: central-difference divergence of a 3-D vector field.
+pub fn div3d1(size: Size) -> Instance {
+    let n = pick_n(size);
+    let mut pb = ProgramBuilder::new("DIV-3D-1");
+    let np = pb.param("N", n);
+    let u = pb.array("U", 3);
+    let v = pb.array("V", 3);
+    let w = pb.array("W", 3);
+    let d = pb.array("D", 3);
+    let s = |iv: usize, c: i64| Affine::var_plus(3, 1, iv, c);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    pb.stmt(
+        StmtSpec::new("S")
+            .dim(Expr::constant(1), ub.clone())
+            .dim(Expr::constant(1), ub.clone())
+            .dim(Expr::constant(1), ub.clone())
+            .write(Access::new(d, vec![s(0, 0), s(1, 0), s(2, 0)]))
+            .read(Access::new(u, vec![s(0, -1), s(1, 0), s(2, 0)]))
+            .read(Access::new(u, vec![s(0, 1), s(1, 0), s(2, 0)]))
+            .read(Access::new(v, vec![s(0, 0), s(1, -1), s(2, 0)]))
+            .read(Access::new(v, vec![s(0, 0), s(1, 1), s(2, 0)]))
+            .read(Access::new(w, vec![s(0, 0), s(1, 0), s(2, -1)]))
+            .read(Access::new(w, vec![s(0, 0), s(1, 0), s(2, 1)]))
+            .flops(8.0)
+            .bytes(28.0),
+    );
+    let prog = pb.build();
+    let sh = vec![n as usize, n as usize, n as usize];
+    Instance {
+        name: "DIV-3D-1",
+        prog,
+        params: vec![n],
+        shapes: vec![sh.clone(), sh.clone(), sh.clone(), sh],
+        kernels: Arc::new(Div3dKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: ((n - 2) as f64).powi(3) * 8.0,
+        bytes_per_point: 28.0,
+    }
+}
+
+struct Div3dKern;
+
+impl KernelSet for Div3dKern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let (u, v, w, d) = (arrays.a(0), arrays.a(1), arrays.a(2), arrays.a(3));
+        let (su, sv, sw, sd) = (u.slice_mut(), v.slice_mut(), w.slice_mut(), d.slice_mut());
+        let (st0, st1) = (u.strides[0], u.strides[1]);
+        let (i, j) = (orig[0] as usize, orig[1] as usize);
+        let r = i * st0 + j * st1;
+        for k in lo as usize..=hi as usize {
+            sd[r + k] = 0.5
+                * ((su[r + st0 + k] - su[r - st0 + k])
+                    + (sv[r + st1 + k] - sv[r - st1 + k])
+                    + (sw[r + k + 1] - sw[r + k - 1]));
+        }
+    }
+}
+
+/// JAC-3D-1: a single 7-point Jacobi sweep (doall 3-D).
+pub fn jac3d1(size: Size) -> Instance {
+    let n = pick_n(size);
+    let mut pb = ProgramBuilder::new("JAC-3D-1");
+    let np = pb.param("N", n);
+    let a = pb.array("A", 3);
+    let b = pb.array("B", 3);
+    let s = |iv: usize, c: i64| Affine::var_plus(3, 1, iv, c);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(2));
+    pb.stmt(
+        StmtSpec::new("S")
+            .dim(Expr::constant(1), ub.clone())
+            .dim(Expr::constant(1), ub.clone())
+            .dim(Expr::constant(1), ub.clone())
+            .write(Access::new(b, vec![s(0, 0), s(1, 0), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 0), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, -1), s(1, 0), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, 1), s(1, 0), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, -1), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 1), s(2, 0)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 0), s(2, -1)]))
+            .read(Access::new(a, vec![s(0, 0), s(1, 0), s(2, 1)]))
+            .flops(7.0)
+            .bytes(8.0),
+    );
+    let prog = pb.build();
+    let sh = vec![n as usize, n as usize, n as usize];
+    Instance {
+        name: "JAC-3D-1",
+        prog,
+        params: vec![n],
+        shapes: vec![sh.clone(), sh],
+        kernels: Arc::new(Jac3d1Kern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: ((n - 2) as f64).powi(3) * 7.0,
+        bytes_per_point: 8.0,
+    }
+}
+
+struct Jac3d1Kern;
+
+impl KernelSet for Jac3d1Kern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let a = arrays.a(0);
+        let b = arrays.a(1);
+        let (sa, sb) = (a.slice_mut(), b.slice_mut());
+        let (st0, st1) = (a.strides[0], a.strides[1]);
+        let (i, j) = (orig[0] as usize, orig[1] as usize);
+        let r = i * st0 + j * st1;
+        for k in lo as usize..=hi as usize {
+            sb[r + k] = (1.0 / 7.5)
+                * (sa[r + k]
+                    + sa[r + k - 1]
+                    + sa[r + k + 1]
+                    + sa[r - st1 + k]
+                    + sa[r + st1 + k]
+                    + sa[r - st0 + k]
+                    + sa[r + st0 + k]);
+        }
+    }
+}
+
+/// RTM-3D: one high-order (8th-order space) reverse-time-migration step.
+pub fn rtm3d(size: Size) -> Instance {
+    let n = pick_n(size);
+    let mut pb = ProgramBuilder::new("RTM-3D");
+    let np = pb.param("N", n);
+    let p0 = pb.array("P0", 3);
+    let p1 = pb.array("P1", 3);
+    let p2 = pb.array("P2", 3);
+    let s = |iv: usize, c: i64| Affine::var_plus(3, 1, iv, c);
+    let lb = Expr::constant(2);
+    let ub = Expr::sub(&Expr::param(np), &Expr::constant(3));
+    let mut spec = StmtSpec::new("S")
+        .dim(lb.clone(), ub.clone())
+        .dim(lb.clone(), ub.clone())
+        .dim(lb.clone(), ub.clone())
+        .write(Access::new(p2, vec![s(0, 0), s(1, 0), s(2, 0)]))
+        .read(Access::new(p0, vec![s(0, 0), s(1, 0), s(2, 0)]))
+        .flops(31.0)
+        .bytes(20.0);
+    for dim in 0..3usize {
+        for off in [-2i64, -1, 1, 2] {
+            let mut idx = vec![s(0, 0), s(1, 0), s(2, 0)];
+            idx[dim] = s(dim, off);
+            spec = spec.read(Access::new(p1, idx));
+        }
+    }
+    spec = spec.read(Access::new(p1, vec![s(0, 0), s(1, 0), s(2, 0)]));
+    pb.stmt(spec);
+    let prog = pb.build();
+    let sh = vec![n as usize, n as usize, n as usize];
+    Instance {
+        name: "RTM-3D",
+        prog,
+        params: vec![n],
+        shapes: vec![sh.clone(), sh.clone(), sh],
+        kernels: Arc::new(Rtm3dKern),
+        map_opts: MapOptions {
+            tile_sizes: vec![16, 16, 64],
+            ..Default::default()
+        },
+        total_flops: ((n - 4) as f64).powi(3) * 31.0,
+        bytes_per_point: 20.0,
+    }
+}
+
+struct Rtm3dKern;
+
+impl KernelSet for Rtm3dKern {
+    fn row(&self, _k: usize, arrays: &ArrayStore, orig: &[i64], lo: i64, hi: i64) {
+        let (p0, p1, p2) = (arrays.a(0), arrays.a(1), arrays.a(2));
+        let (s0, s1, s2) = (p0.slice_mut(), p1.slice_mut(), p2.slice_mut());
+        let (st0, st1) = (p1.strides[0], p1.strides[1]);
+        let (i, j) = (orig[0] as usize, orig[1] as usize);
+        let r = i * st0 + j * st1;
+        const C0: f32 = -2.5;
+        const C1: f32 = 1.333;
+        const C2: f32 = -0.083;
+        for k in lo as usize..=hi as usize {
+            let lap = C0 * 3.0 * s1[r + k]
+                + C1 * (s1[r + k - 1] + s1[r + k + 1] + s1[r - st1 + k] + s1[r + st1 + k] + s1[r - st0 + k] + s1[r + st0 + k])
+                + C2 * (s1[r + k - 2] + s1[r + k + 2] + s1[r - 2 * st1 + k] + s1[r + 2 * st1 + k] + s1[r - 2 * st0 + k] + s1[r + 2 * st0 + k]);
+            s2[r + k] = 2.0 * s1[r + k] - s0[r + k] + 0.001 * lap;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edt::SyncKind;
+
+    #[test]
+    fn sweeps_are_fully_parallel() {
+        for inst in [div3d1(Size::Tiny), jac3d1(Size::Tiny), rtm3d(Size::Tiny)] {
+            let tree = inst.tree().unwrap();
+            assert!(
+                tree.root.dims.iter().all(|d| d.sync == SyncKind::None),
+                "{}: expected doall tags",
+                inst.name
+            );
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Mapping-pipeline correctness across the whole evaluation suite:
+//! schedules validate, tiles partition iteration spaces, interior
+//! predicates match brute force, characteristics line up with closed
+//! forms, and the simulator agrees with the real engine on task counts.
+
+use tale3::analysis::build_gdg;
+use tale3::edt::stats::characterize;
+use tale3::exec::Plan;
+use tale3::ral::DepMode;
+use tale3::schedule::{schedule, validate, LoopType};
+use tale3::sim::{simulate, CostModel, Machine};
+use tale3::workloads::{registry, Size};
+
+/// Every fused-nest workload's schedule validates; none falls back to the
+/// identity-with-sequential path (the suite is fully band-schedulable).
+#[test]
+fn schedules_validate_no_fallback() {
+    for w in registry() {
+        let inst = (w.build)(Size::Tiny);
+        let gdg = build_gdg(&inst.prog);
+        // phased workloads are scheduled per sibling group by the mapper;
+        // the whole-program scheduler only applies to fused nests
+        let fused = inst
+            .prog
+            .stmts
+            .iter()
+            .all(|s| s.depth() == inst.prog.max_depth())
+            && inst.prog.stmts.windows(2).all(|p| {
+                p[0].common_loops(&p[1]) == inst.prog.max_depth()
+            });
+        if !fused {
+            continue;
+        }
+        let s = schedule(&inst.prog, &gdg, &inst.map_opts.sched)
+            .unwrap_or_else(|e| panic!("{}: {e}", w.name));
+        assert!(!s.fallback_identity, "{} fell back: {s}", w.name);
+        validate(&s, &gdg).unwrap_or_else(|e| panic!("{}: {e}", w.name));
+        // every dim typed
+        assert_eq!(s.types.len(), inst.prog.max_depth());
+    }
+}
+
+/// Time-tiled stencils get full permutable bands (the paper's key
+/// enabler); sweeps get doall types.
+#[test]
+fn loop_types_match_structure() {
+    let checks: [(&str, usize); 4] = [
+        ("JAC-2D-5P", 3),
+        ("GS-3D-7P", 4),
+        ("JAC-3D-27P", 4),
+        ("SOR", 2),
+    ];
+    for (name, d) in checks {
+        let inst = (tale3::workloads::by_name(name).unwrap().build)(Size::Tiny);
+        let gdg = build_gdg(&inst.prog);
+        let s = schedule(&inst.prog, &gdg, &inst.map_opts.sched).unwrap();
+        let n_perm = s
+            .types
+            .iter()
+            .filter(|t| matches!(t, LoopType::Permutable { .. }))
+            .count();
+        assert_eq!(n_perm, d, "{name}: {s}");
+    }
+    for name in ["DIV-3D-1", "JAC-3D-1", "RTM-3D"] {
+        let inst = (tale3::workloads::by_name(name).unwrap().build)(Size::Tiny);
+        let gdg = build_gdg(&inst.prog);
+        let s = schedule(&inst.prog, &gdg, &inst.map_opts.sched).unwrap();
+        assert!(
+            s.types.iter().all(|t| *t == LoopType::Parallel),
+            "{name}: {s}"
+        );
+    }
+}
+
+/// Characteristics agree with the closed-form totals on every workload
+/// (flops conservation through the whole mapping pipeline).
+#[test]
+fn characteristics_conserve_flops() {
+    for w in registry() {
+        let inst = (w.build)(Size::Tiny);
+        let tree = inst.tree().unwrap();
+        let c = characterize(&tree, &inst.params, 0); // cap 0 = count all
+        let rel = (c.total_flops - inst.total_flops).abs() / inst.total_flops.max(1.0);
+        assert!(
+            rel < 1e-9,
+            "{}: mapped {} vs closed form {}",
+            w.name,
+            c.total_flops,
+            inst.total_flops
+        );
+        assert!(c.leaf_edts > 0, "{}", w.name);
+        assert!(c.worker_instances >= c.leaf_edts, "{}", w.name);
+    }
+}
+
+/// Table-2 scale check at paper sizes for the two exactly-checkable
+/// benchmarks (rectangular tilings): EDT counts match arithmetic.
+#[test]
+fn paper_size_edt_counts_exact() {
+    let inst = (tale3::workloads::by_name("MATMULT").unwrap().build)(Size::Paper);
+    let tree = inst.tree().unwrap();
+    let c = characterize(&tree, &inst.params, 1);
+    // 1024³ with (16,16,64) tiles = 64·64·16 = 65536 (paper: 64 K)
+    assert_eq!(c.leaf_edts, 65536);
+    let inst = (tale3::workloads::by_name("JAC-3D-1").unwrap().build)(Size::Paper);
+    let tree = inst.tree().unwrap();
+    let c = characterize(&tree, &inst.params, 1);
+    // interior 254³ with (16,16,64) tiles = 16·16·4 = 1024 (paper: 1 K)
+    assert_eq!(c.leaf_edts, 1024);
+}
+
+/// The simulator executes exactly the same number of tasks as the real
+/// engine for prescription-based modes (speculative modes differ only by
+/// requeue re-dispatches).
+#[test]
+fn sim_task_counts_match_engine() {
+    use std::sync::Arc;
+    use tale3::rt::{self, LeafExec, NoopLeaf, Pool, RuntimeKind};
+    for name in ["JAC-2D-5P", "MATMULT", "FDTD-2D"] {
+        let inst = (tale3::workloads::by_name(name).unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+        let pool = Pool::new(2);
+        let real = rt::run(
+            RuntimeKind::Edt(DepMode::CncDep),
+            &plan,
+            &leaf,
+            &pool,
+            inst.total_flops,
+        )
+        .unwrap();
+        let sim = simulate(
+            &plan,
+            DepMode::CncDep,
+            2,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+            inst.total_flops,
+        );
+        assert_eq!(
+            sim.tasks,
+            real.metrics.total_tasks(),
+            "{name}: sim {} vs real {:?}",
+            sim.tasks,
+            real.metrics
+        );
+    }
+}
+
+/// Plans survive arena round-trips and re-instantiation at different
+/// parameter values (runtime-parametric mapping, §4.3).
+#[test]
+fn plan_reusable_across_param_values() {
+    let inst = (tale3::workloads::by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+    let tree = inst.tree().unwrap();
+    // same tree, two different (T, N) instantiations
+    let p1 = Plan::from_tree(&tree, vec![4, 20]);
+    let p2 = Plan::from_tree(&tree, vec![16, 96]);
+    let c1 = p1.count_tags(p1.root, &[]);
+    let c2 = p2.count_tags(p2.root, &[]);
+    assert!(c2 > c1, "larger instance must have more tiles ({c1} vs {c2})");
+}
+
+/// Degenerate sizes: a domain smaller than one tile still maps and counts.
+#[test]
+fn single_tile_degenerate() {
+    let w = tale3::workloads::by_name("MATMULT").unwrap();
+    let mut inst = (w.build)(Size::Tiny);
+    inst.params = vec![4]; // 4x4x4 matmult, tiles (16,16,64)
+    let plan = inst.plan().unwrap();
+    assert_eq!(plan.count_tags(plan.root, &[]), 1);
+}

@@ -1,0 +1,124 @@
+//! Three-layer composition: leaf EDTs executing AOT-compiled JAX/Pallas
+//! HLO through PJRT agree with the native rust kernels. Requires
+//! `make artifacts` (skips with a message when artifacts are absent —
+//! `make test` always builds them first).
+
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use tale3::ral::DepMode;
+use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::runtime::{Jac3dPjrtLeaf, MatmultPjrtLeaf, PjrtRuntime};
+use tale3::workloads::{by_name, Size};
+
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(PjrtRuntime::load(&dir).expect("load artifacts")))
+}
+
+#[test]
+fn artifacts_load_and_list() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.artifact_names();
+    assert!(names.contains(&"matmul_tile_16x16x64"), "{names:?}");
+    assert!(names.contains(&"jac3d7p_tile_16x16x64"), "{names:?}");
+}
+
+#[test]
+fn matmul_tile_artifact_numerics() {
+    let Some(rt) = runtime() else { return };
+    // C + A·B on known values
+    let mut a = vec![0f32; 16 * 64];
+    let mut b = vec![0f32; 64 * 16];
+    let c = vec![1f32; 16 * 16];
+    for i in 0..16 {
+        a[i * 64 + i] = 2.0; // 2·I (left 16x16 block)
+    }
+    for i in 0..16 {
+        b[i * 16 + i] = 3.0;
+    }
+    let out = rt.execute_f32("matmul_tile_16x16x64", &[&a, &b, &c]).unwrap();
+    for i in 0..16 {
+        for j in 0..16 {
+            let want = if i == j { 1.0 + 6.0 } else { 1.0 };
+            assert_eq!(out[i * 16 + j], want, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn matmult_e2e_pjrt_vs_native() {
+    let Some(prt) = runtime() else { return };
+    let w = by_name("MATMULT").unwrap();
+    let inst = (w.build)(Size::Small); // N = 96: full and partial tiles
+    let plan = inst.plan().unwrap();
+    // native oracle
+    let native_arrays = inst.arrays();
+    tale3::exec::run_seq(&inst.prog, &inst.params, &native_arrays, &*inst.kernels);
+    // PJRT-backed EDT execution
+    let arrays = inst.arrays();
+    let leaf_impl = Arc::new(MatmultPjrtLeaf::new(
+        prt.clone(),
+        arrays.clone(),
+        inst.kernels.clone(),
+    ));
+    let pool = Pool::new(2);
+    let leaf: Arc<dyn LeafExec> = leaf_impl.clone();
+    rt::run(
+        RuntimeKind::Edt(DepMode::Ocr),
+        &plan,
+        &leaf,
+        &pool,
+        inst.total_flops,
+    )
+    .expect("pjrt run");
+    assert!(
+        leaf_impl.pjrt_tiles.load(Ordering::Relaxed) > 0,
+        "no full tiles went through PJRT"
+    );
+    let diff = native_arrays.max_rel_diff(&arrays);
+    assert!(diff < 1e-4, "PJRT vs native matmult: rel diff {diff}");
+}
+
+#[test]
+fn jac3d_e2e_pjrt_vs_native() {
+    let Some(prt) = runtime() else { return };
+    let w = by_name("JAC-3D-1").unwrap();
+    let mut inst = (w.build)(Size::Tiny);
+    // N = 130: interior [1,128]; tile lattice at multiples of the tile
+    // sizes gives 7×7×1 full (16,16,64)-tiles plus clamped boundary tiles
+    inst.params = vec![130];
+    inst.shapes = vec![vec![130, 130, 130], vec![130, 130, 130]];
+    inst.total_flops = 128f64.powi(3) * 7.0;
+    let plan = inst.plan().unwrap();
+    let native_arrays = inst.arrays();
+    tale3::exec::run_seq(&inst.prog, &inst.params, &native_arrays, &*inst.kernels);
+    let arrays = inst.arrays();
+    let leaf_impl = Arc::new(Jac3dPjrtLeaf::new(
+        prt.clone(),
+        arrays.clone(),
+        inst.kernels.clone(),
+    ));
+    let pool = Pool::new(2);
+    let leaf: Arc<dyn LeafExec> = leaf_impl.clone();
+    rt::run(
+        RuntimeKind::Edt(DepMode::Swarm),
+        &plan,
+        &leaf,
+        &pool,
+        inst.total_flops,
+    )
+    .expect("pjrt run");
+    assert_eq!(
+        leaf_impl.pjrt_tiles.load(Ordering::Relaxed),
+        49,
+        "7×7×1 full tiles must go through PJRT"
+    );
+    assert!(leaf_impl.native_tiles.load(Ordering::Relaxed) > 0);
+    let diff = native_arrays.max_rel_diff(&arrays);
+    assert!(diff < 1e-4, "PJRT vs native jac3d: rel diff {diff}");
+}

@@ -1,0 +1,410 @@
+//! Randomized property tests (proptest is not in the offline crate set;
+//! properties are driven by a seeded xorshift generator with fixed
+//! iteration budgets — fully deterministic in CI).
+//!
+//! Invariants covered:
+//!  1. scheduler legality: for random dependence boxes, every chosen
+//!     hyperplane satisfies `h·δ ≥ 0` on the edges live when it was chosen
+//!     (checked through `schedule::validate`);
+//!  2. tiles partition the iteration space exactly (no loss, no overlap)
+//!     for random stencil programs × random tile sizes;
+//!  3. interior predicates agree with brute-force tag-set membership
+//!     (Fig 8 correctness);
+//!  4. runtime executions are exactly-once and dependence-ordered for
+//!     random plans under every dependence mode;
+//!  5. interval arithmetic (`DistBound`) is a sound over-approximation.
+
+use std::sync::{Arc, Mutex};
+use tale3::analysis::{build_gdg, DistBound};
+use tale3::edt::{map_program, MapOptions};
+use tale3::exec::plan::ArenaBody;
+use tale3::exec::Plan;
+use tale3::expr::{Affine, Expr};
+use tale3::ir::{Access, Program, ProgramBuilder, StmtSpec};
+use tale3::ral::DepMode;
+use tale3::rt::{Engine, LeafExec, Pool};
+use tale3::schedule::{schedule_dists, validate, SchedOptions, SubEdge};
+
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + (self.next() % ((hi - lo + 1) as u64)) as i64
+    }
+}
+
+/// Property 1: scheduler output always validates against its input GDG.
+#[test]
+fn prop_scheduler_legality_random_boxes() {
+    let mut rng = Rng(0x1234_5678_9abc_def1);
+    for case in 0..300 {
+        let d = rng.range(1, 4) as usize;
+        let n_edges = rng.range(0, 6) as usize;
+        let mut edges = Vec::new();
+        for _ in 0..n_edges {
+            // lexicographically positive boxes (real dependences)
+            let level = rng.range(0, d as i64 - 1) as usize;
+            let mut dist = Vec::new();
+            for m in 0..d {
+                if m < level {
+                    dist.push(DistBound::exact(0));
+                } else if m == level {
+                    let lo = rng.range(1, 2);
+                    let hi = if rng.next() % 4 == 0 { None } else { Some(rng.range(lo, lo + 3)) };
+                    dist.push(DistBound { lo: Some(lo), hi });
+                } else {
+                    match rng.next() % 4 {
+                        0 => dist.push(DistBound::exact(rng.range(-2, 2))),
+                        1 => dist.push(DistBound {
+                            lo: Some(rng.range(-2, 0)),
+                            hi: Some(rng.range(0, 2)),
+                        }),
+                        2 => dist.push(DistBound { lo: Some(rng.range(-2, 0)), hi: None }),
+                        _ => dist.push(DistBound::star()),
+                    }
+                }
+            }
+            edges.push(SubEdge { level, dist });
+        }
+        let sched = schedule_dists(d, &edges, &SchedOptions::default());
+        assert_eq!(sched.depth(), d, "case {case}");
+        // validate() consumes a Gdg; build an equivalent one
+        let gdg = tale3::analysis::Gdg::new(
+            1,
+            edges
+                .iter()
+                .map(|e| tale3::analysis::DepEdge {
+                    src: 0,
+                    dst: 0,
+                    kind: tale3::analysis::DepKind::Flow,
+                    array: 0,
+                    level: e.level,
+                    dist: e.dist.clone(),
+                })
+                .collect(),
+        );
+        validate(&sched, &gdg).unwrap_or_else(|err| panic!("case {case}: {err}\n{sched}"));
+    }
+}
+
+/// Random time-expanded stencil program (1-D or 2-D space).
+fn random_stencil(rng: &mut Rng) -> (Program, Vec<i64>) {
+    let space = rng.range(1, 2) as usize;
+    let t = rng.range(2, 5);
+    let n = rng.range(8, 20);
+    let depth = 1 + space;
+    let mut pb = ProgramBuilder::new("rand");
+    let tp = pb.param("T", t);
+    let np = pb.param("N", n);
+    let a = pb.array("A", depth);
+    let sub = |iv: usize, c: i64| Affine::var_plus(depth, 2, iv, c);
+    let mut w = vec![sub(0, 1)];
+    for d in 1..depth {
+        w.push(sub(d, 0));
+    }
+    let mut spec = StmtSpec::new("S")
+        .dim(Expr::constant(0), Expr::offset(&Expr::param(tp), -1))
+        .flops(1.0);
+    for _ in 1..depth {
+        spec = spec.dim(
+            Expr::constant(1),
+            Expr::sub(&Expr::param(np), &Expr::constant(2)),
+        );
+    }
+    spec = spec.write(Access::new(a, w));
+    let n_reads = rng.range(1, 4);
+    for _ in 0..n_reads {
+        let mut r = vec![sub(0, 0)];
+        for d in 1..depth {
+            r.push(sub(d, rng.range(-1, 1)));
+        }
+        spec = spec.read(Access::new(a, r));
+    }
+    pb.stmt(spec);
+    (pb.build(), vec![t, n])
+}
+
+/// Properties 2+3 on random programs × random tile sizes.
+#[test]
+fn prop_tiles_partition_and_interior_matches() {
+    let mut rng = Rng(0xfeed_beef_cafe_0001);
+    for case in 0..40 {
+        let (prog, params) = random_stencil(&mut rng);
+        let d = prog.max_depth();
+        let gdg = build_gdg(&prog);
+        let tile_sizes: Vec<i64> = (0..d).map(|_| rng.range(2, 7)).collect();
+        let opts = MapOptions {
+            tile_sizes,
+            ..Default::default()
+        };
+        let tree = map_program(&prog, &gdg, &opts)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let plan = Plan::from_tree(&tree, params.clone());
+        // must be a single leaf level for this program shape
+        assert!(matches!(plan.node(plan.root).body, ArenaBody::Leaf(_)));
+
+        // 2: partition
+        let ArenaBody::Leaf(leaf) = &plan.node(plan.root).body else {
+            unreachable!()
+        };
+        let base = plan.node(plan.root).iv_base + plan.node(plan.root).dims.len();
+        let mut seen: Vec<Vec<i64>> = Vec::new();
+        let mut tags: Vec<Vec<i64>> = Vec::new();
+        plan.for_each_tag(plan.root, &[], &mut |c| tags.push(c.to_vec()));
+        for tag in &tags {
+            let mut cur = tag.clone();
+            cur.resize(base + leaf.n_leaf_vars, 0);
+            enumerate_leaf(leaf, base, 0, &mut cur, &params, &mut seen);
+        }
+        seen.sort();
+        let n_before = seen.len();
+        seen.dedup();
+        assert_eq!(n_before, seen.len(), "case {case}: overlapping tiles");
+        let mut expect: Vec<Vec<i64>> = Vec::new();
+        prog.stmts[0]
+            .domain
+            .for_each_point(&params, &mut |p| expect.push(p.to_vec()));
+        expect.sort();
+        assert_eq!(seen, expect, "case {case}: lost/extra iterations");
+
+        // 3: interior predicate ⇔ membership (chain dims only — parallel
+        // dims carry no dependence and no predicate by construction)
+        for tag in &tags {
+            for dim in 0..plan.node(plan.root).dims.len() {
+                if plan.node(plan.root).dims[dim].sync != tale3::edt::SyncKind::Chain {
+                    continue;
+                }
+                let mut ant = tag.clone();
+                ant[plan.node(plan.root).iv_base + dim] -= 1;
+                let exists = tags.contains(&ant);
+                let says = plan
+                    .antecedents(plan.root, tag)
+                    .iter()
+                    .any(|a| *a == ant);
+                assert_eq!(exists, says, "case {case} tag {tag:?} dim {dim}");
+            }
+        }
+    }
+}
+
+fn enumerate_leaf(
+    leaf: &tale3::edt::LeafNest,
+    base: usize,
+    v: usize,
+    cur: &mut Vec<i64>,
+    params: &[i64],
+    out: &mut Vec<Vec<i64>>,
+) {
+    if v == leaf.n_leaf_vars {
+        let st = &leaf.stmts[0];
+        out.push(st.orig_pos.iter().map(|&p| cur[p]).collect());
+        return;
+    }
+    let env = tale3::expr::Env::new(&cur[..base + v], params);
+    let lo = leaf.loops[v].lb.eval(env);
+    let hi = leaf.loops[v].ub.eval(env);
+    for x in lo..=hi {
+        cur[base + v] = x;
+        enumerate_leaf(leaf, base, v + 1, cur, params, out);
+    }
+}
+
+struct Recorder {
+    log: Mutex<Vec<(u32, Vec<i64>)>>,
+}
+impl LeafExec for Recorder {
+    fn run_leaf(&self, _plan: &Plan, node: u32, coords: &[i64]) {
+        self.log.lock().unwrap().push((node, coords.to_vec()));
+    }
+}
+
+/// Property 4: exactly-once + dependence order for every mode on random
+/// plans and thread counts.
+#[test]
+fn prop_runtime_topological_execution() {
+    let mut rng = Rng(0x0dd0_c0de_1357_9bdf);
+    let pool2 = Pool::new(2);
+    let pool3 = Pool::new(3);
+    for case in 0..25 {
+        let (prog, params) = random_stencil(&mut rng);
+        let gdg = build_gdg(&prog);
+        let d = prog.max_depth();
+        let opts = MapOptions {
+            tile_sizes: (0..d).map(|_| rng.range(2, 6)).collect(),
+            ..Default::default()
+        };
+        let tree = map_program(&prog, &gdg, &opts).unwrap();
+        let plan = Arc::new(Plan::from_tree(&tree, params.clone()));
+        let mode = match rng.next() % 5 {
+            0 => DepMode::CncBlock,
+            1 => DepMode::CncAsync,
+            2 => DepMode::CncDep,
+            3 => DepMode::Swarm,
+            _ => DepMode::Ocr,
+        };
+        let pool = if rng.next() % 2 == 0 { &pool2 } else { &pool3 };
+        let rec = Arc::new(Recorder {
+            log: Mutex::new(Vec::new()),
+        });
+        let eng = Engine::new(plan.clone(), mode, rec.clone());
+        eng.run(pool).unwrap_or_else(|e| panic!("case {case} {mode:?}: {e}"));
+        let log = rec.log.lock().unwrap().clone();
+        let mut expected: Vec<(u32, Vec<i64>)> = Vec::new();
+        plan.for_each_tag(plan.root, &[], &mut |c| {
+            expected.push((plan.root, c.to_vec()));
+        });
+        let mut sorted = log.clone();
+        sorted.sort();
+        expected.sort();
+        assert_eq!(sorted, expected, "case {case} {mode:?}: exactly-once violated");
+        let pos: std::collections::HashMap<_, _> =
+            log.into_iter().enumerate().map(|(i, k)| (k, i)).collect();
+        for ((node, coords), &p) in &pos {
+            for ant in plan.antecedents(*node, coords) {
+                assert!(
+                    pos[&(*node, ant.clone())] < p,
+                    "case {case} {mode:?}: dependence violated at {coords:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Property 5: DistBound interval arithmetic is sound w.r.t. samples.
+#[test]
+fn prop_distbound_soundness() {
+    let mut rng = Rng(0xaaaa_bbbb_cccc_dddd);
+    for _ in 0..500 {
+        let mk = |rng: &mut Rng| {
+            let lo = rng.range(-5, 5);
+            let hi = rng.range(lo, lo + 6);
+            (DistBound { lo: Some(lo), hi: Some(hi) }, (lo, hi))
+        };
+        let (a, (alo, ahi)) = mk(&mut rng);
+        let (b, (blo, bhi)) = mk(&mut rng);
+        let c = rng.range(-3, 3);
+        // sample concrete values and check membership in result intervals
+        for _ in 0..8 {
+            let x = rng.range(alo, ahi);
+            let y = rng.range(blo, bhi);
+            let s = a.add(&b);
+            assert!(s.lo.unwrap() <= x + y && x + y <= s.hi.unwrap());
+            let m = a.scale(c);
+            assert!(m.lo.unwrap_or(i64::MIN) <= c * x && c * x <= m.hi.unwrap_or(i64::MAX));
+            let h = a.hull(&b);
+            assert!(h.lo.unwrap() <= x && x <= h.hi.unwrap());
+            assert!(h.lo.unwrap() <= y && y <= h.hi.unwrap());
+        }
+    }
+}
+
+/// Property 6: the compiled postfix evaluator agrees with the tree walk on
+/// randomly generated expressions (the hot-path form must be semantics-
+/// preserving — EXPERIMENTS.md §Perf L3 iteration 1).
+#[test]
+fn prop_compiled_expr_matches_tree() {
+    use std::sync::Arc as Rc;
+    use tale3::expr::{CExpr, Env};
+    let mut rng = Rng(0x5ca1_ab1e_0000_0007);
+    fn gen(rng: &mut Rng, depth: usize) -> Rc<tale3::expr::Expr> {
+        use tale3::expr::Expr;
+        if depth == 0 {
+            return match rng.next() % 3 {
+                0 => Expr::constant(rng.range(-9, 9)),
+                1 => Expr::iv(rng.range(0, 2) as usize),
+                _ => Expr::param(rng.range(0, 1) as usize),
+            };
+        }
+        let a = gen(rng, depth - 1);
+        let b = gen(rng, depth - 1);
+        let op = rng.next() % 7;
+        match op {
+            0 => Expr::add(&a, &b),
+            1 => Expr::sub(&a, &b),
+            2 => Expr::min(&a, &b),
+            3 => Expr::max(&a, &b),
+            4 => {
+                let c = rng.range(-3, 3);
+                Expr::mul(c, &a)
+            }
+            5 => {
+                let c = rng.range(1, 8);
+                Expr::ceil_div(&a, c)
+            }
+            _ => {
+                let c = rng.range(1, 8);
+                Expr::floor_div(&a, c)
+            }
+        }
+    }
+    for _case in 0..200 {
+        let depth = rng.range(1, 4) as usize;
+        let e = gen(&mut rng, depth);
+        let c = CExpr::compile(&e);
+        for _ in 0..5 {
+            let ivs = [rng.range(-20, 20), rng.range(-20, 20), rng.range(-20, 20)];
+            let ps = [rng.range(-20, 20), rng.range(-20, 20)];
+            let env = Env::new(&ivs, &ps);
+            assert_eq!(c.eval(env), e.eval(env), "{e}");
+        }
+    }
+}
+
+/// Property 7: GCD chain strides preserve execution correctness — the
+/// Fig 9 program runs bit-identically under stride-2 chains.
+#[test]
+fn prop_gcd_stride_execution_correct() {
+    use tale3::exec::{ArrayStore, GenericKernel, GenericOp, GenericRows, LeafRunner};
+    let mut pb = ProgramBuilder::new("fig9");
+    let tp = pb.param("T", 12);
+    let np = pb.param("N", 40);
+    let a = pb.array("A", 2);
+    let sub = |iv: usize, c: i64| Affine::var_plus(2, 2, iv, c);
+    pb.stmt(
+        StmtSpec::new("S")
+            .dim(Expr::constant(1), Expr::offset(&Expr::param(tp), -1))
+            .dim(Expr::constant(1), Expr::sub(&Expr::param(np), &Expr::constant(2)))
+            .write(Access::new(a, vec![sub(0, 1), sub(1, 0)]))
+            .read(Access::new(a, vec![sub(0, -1), sub(1, 0)]))
+            .flops(1.0),
+    );
+    let prog = pb.build();
+    let gdg = build_gdg(&prog);
+    let opts = MapOptions {
+        tile_sizes: vec![1, 8],
+        ..Default::default()
+    };
+    let tree = map_program(&prog, &gdg, &opts).unwrap();
+    let params = vec![12i64, 40];
+    let plan = Arc::new(Plan::from_tree(&tree, params.clone()));
+    // the stride must actually be 2 here, or the test tests nothing
+    assert_eq!(plan.node(plan.root).dims[0].step, 2);
+    let shapes = vec![vec![13usize, 40]];
+    let kernels = Arc::new(GenericRows {
+        kernel: GenericKernel::from_program(&prog, GenericOp::Sum),
+        params: params.clone(),
+    });
+    let oracle = Arc::new(ArrayStore::new(&shapes));
+    oracle.init_deterministic(5);
+    tale3::exec::run_seq(&prog, &params, &oracle, &*kernels);
+    for mode in [DepMode::CncAsync, DepMode::Ocr] {
+        let arrays = Arc::new(ArrayStore::new(&shapes));
+        arrays.init_deterministic(5);
+        let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+            arrays: arrays.clone(),
+            kernels: kernels.clone(),
+        });
+        let eng = Engine::new(plan.clone(), mode, leaf);
+        let pool = Pool::new(3);
+        eng.run(&pool).unwrap();
+        assert_eq!(oracle.max_abs_diff(&arrays), 0.0, "{mode:?}");
+    }
+}

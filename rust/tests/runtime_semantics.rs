@@ -1,0 +1,255 @@
+//! Behavioral semantics of the runtime backends: the observable
+//! differences §4.7.3/§5.1 describe must actually be observable in the
+//! implementation's metrics and event ordering.
+
+use std::sync::{Arc, Mutex};
+use tale3::exec::Plan;
+use tale3::ral::DepMode;
+use tale3::rt::{self, Engine, LeafExec, NoopLeaf, Pool, RuntimeKind};
+use tale3::workloads::{by_name, Size};
+
+fn plan_for(name: &str) -> (Arc<Plan>, f64) {
+    let inst = (by_name(name).unwrap().build)(Size::Tiny);
+    (inst.plan().unwrap(), inst.total_flops)
+}
+
+/// DEP pre-specifies dependences: no speculative dispatch, zero failed
+/// gets. BLOCK speculates: with >1 thread on a chained workload it must
+/// observe failed gets and requeues.
+#[test]
+fn dep_never_fails_gets_block_does() {
+    let (plan, flops) = plan_for("GS-2D-5P");
+    let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+    let pool = Pool::new(1);
+    let dep = rt::run(RuntimeKind::Edt(DepMode::CncDep), &plan, &leaf, &pool, flops).unwrap();
+    assert_eq!(dep.metrics.failed_gets, 0);
+    assert_eq!(dep.metrics.requeues, 0);
+    // single-threaded BLOCK with LIFO own-deque execution pops the last
+    // spawned (deepest) tile first — failures guaranteed on a chained
+    // tag space
+    let blk = rt::run(RuntimeKind::Edt(DepMode::CncBlock), &plan, &leaf, &pool, flops).unwrap();
+    assert!(blk.metrics.failed_gets > 0, "{:?}", blk.metrics);
+    assert!(blk.metrics.requeues > 0);
+}
+
+/// BLOCK rolls back on the *first* failing get and re-executes: its
+/// failed-get count is at least ASYNC's (which checks all deps once and
+/// parks once).
+#[test]
+fn block_rollback_costs_at_least_async() {
+    let (plan, flops) = plan_for("GS-2D-5P");
+    let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+    let pool = Pool::new(1);
+    let blk = rt::run(RuntimeKind::Edt(DepMode::CncBlock), &plan, &leaf, &pool, flops).unwrap();
+    let asn = rt::run(RuntimeKind::Edt(DepMode::CncAsync), &plan, &leaf, &pool, flops).unwrap();
+    assert!(
+        blk.metrics.requeues >= asn.metrics.requeues,
+        "block {:?} vs async {:?}",
+        blk.metrics.requeues,
+        asn.metrics.requeues
+    );
+    // a BLOCK worker dispatch happens once per requeue plus once per task
+    assert_eq!(
+        blk.metrics.workers,
+        asn.metrics.workers + (blk.metrics.requeues - asn.metrics.requeues)
+    );
+}
+
+/// OCR spawns one PRESCRIBER per WORKER (§4.7.3: "each WORKER EDT is
+/// dependent on a PRESCRIBER EDT which increases the total number of
+/// EDTs"); no other backend does.
+#[test]
+fn ocr_prescriber_per_worker() {
+    let (plan, flops) = plan_for("JAC-2D-5P");
+    let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+    let pool = Pool::new(2);
+    let ocr = rt::run(RuntimeKind::Edt(DepMode::Ocr), &plan, &leaf, &pool, flops).unwrap();
+    assert_eq!(ocr.metrics.prescribers, ocr.metrics.workers);
+    for mode in [DepMode::CncBlock, DepMode::CncAsync, DepMode::CncDep, DepMode::Swarm] {
+        let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, flops).unwrap();
+        assert_eq!(r.metrics.prescribers, 0, "{mode:?}");
+    }
+}
+
+/// Every STARTUP gets exactly one SHUTDOWN (Fig 6), across all backends
+/// and a hierarchical (two-level + sibling) plan.
+#[test]
+fn startup_shutdown_pairing() {
+    for name in ["JAC-2D-COPY", "FDTD-2D", "JAC-3D-7P"] {
+        let inst = (by_name(name).unwrap().build)(Size::Tiny);
+        let mut opts = inst.map_opts.clone();
+        if name == "JAC-3D-7P" {
+            opts.level_split = vec![2];
+        }
+        let plan = inst.plan_with(&opts).unwrap();
+        let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+        let pool = Pool::new(2);
+        for mode in [DepMode::CncBlock, DepMode::CncDep, DepMode::Swarm, DepMode::Ocr] {
+            let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, 1.0).unwrap();
+            assert_eq!(
+                r.metrics.startups, r.metrics.shutdowns,
+                "{name} {mode:?}: {:?}",
+                r.metrics
+            );
+            assert!(r.metrics.startups >= 1);
+        }
+    }
+}
+
+struct Recorder {
+    log: Mutex<Vec<(u32, Vec<i64>)>>,
+}
+impl LeafExec for Recorder {
+    fn run_leaf(&self, _plan: &Plan, node: u32, coords: &[i64]) {
+        self.log.lock().unwrap().push((node, coords.to_vec()));
+    }
+}
+
+/// Sibling groups are serialized by async-finish barriers: for each shared
+/// t iteration, every leaf of phase k completes before any leaf of phase
+/// k+1 starts (§4.5/§4.8).
+#[test]
+fn sibling_phase_barrier_order() {
+    let inst = (by_name("JAC-2D-COPY").unwrap().build)(Size::Tiny);
+    let plan = inst.plan().unwrap();
+    // identify the sibling children of the root (t-chain node)
+    let tale3::exec::plan::ArenaBody::Siblings(children) = &plan.node(plan.root).body else {
+        panic!("expected siblings under the t chain");
+    };
+    let (phase1, phase2) = (children[0], children[1]);
+    for mode in [DepMode::CncAsync, DepMode::Ocr] {
+        let rec = Arc::new(Recorder {
+            log: Mutex::new(Vec::new()),
+        });
+        let eng = Engine::new(plan.clone(), mode, rec.clone());
+        let pool = Pool::new(3);
+        eng.run(&pool).unwrap();
+        let log = rec.log.lock().unwrap().clone();
+        // per t value: max position of phase1 < min position of phase2
+        use std::collections::HashMap;
+        let mut p1_max: HashMap<i64, usize> = HashMap::new();
+        let mut p2_min: HashMap<i64, usize> = HashMap::new();
+        for (i, (node, coords)) in log.iter().enumerate() {
+            let t = coords[0];
+            if *node == phase1 {
+                p1_max.entry(t).and_modify(|m| *m = (*m).max(i)).or_insert(i);
+            } else if *node == phase2 {
+                p2_min.entry(t).and_modify(|m| *m = (*m).min(i)).or_insert(i);
+            }
+        }
+        for (t, &m1) in &p1_max {
+            let m2 = p2_min.get(t).copied().unwrap_or(usize::MAX);
+            assert!(
+                m1 < m2,
+                "{mode:?}: t={t}: compute phase not fully before copy phase"
+            );
+        }
+        // and the t-chain serializes iterations entirely
+        for (t, &m2) in &p2_min {
+            if let Some(&m1_next) = p1_max.get(&(t + 1)) {
+                // some phase-1 leaf of t+1 executes after phase-2 of t began
+                // is fine; but no phase-1 leaf of t+1 may run before ALL of
+                // t's phase-2 finished — check via max of phase2(t)
+                let p2_max_t = log
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (n, c))| *n == phase2 && c[0] == *t)
+                    .map(|(i, _)| i)
+                    .max()
+                    .unwrap();
+                let p1_min_next = log
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (n, c))| *n == phase1 && c[0] == t + 1)
+                    .map(|(i, _)| i)
+                    .min()
+                    .unwrap();
+                assert!(
+                    p2_max_t < p1_min_next,
+                    "{mode:?}: t-chain violated between t={t} and t+1 ({m2} {m1_next})"
+                );
+            }
+        }
+    }
+}
+
+/// CnC emulated finish goes through the tag table (signal item): CnC modes
+/// perform more puts than SWARM (native counting dep) on the same plan.
+#[test]
+fn cnc_finish_emulation_costs_extra_puts() {
+    let (plan, flops) = plan_for("JAC-3D-7P");
+    let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+    let pool = Pool::new(2);
+    let cnc = rt::run(RuntimeKind::Edt(DepMode::CncAsync), &plan, &leaf, &pool, flops).unwrap();
+    let swarm = rt::run(RuntimeKind::Edt(DepMode::Swarm), &plan, &leaf, &pool, flops).unwrap();
+    assert!(
+        cnc.metrics.puts > swarm.metrics.puts,
+        "cnc {} vs swarm {}",
+        cnc.metrics.puts,
+        swarm.metrics.puts
+    );
+}
+
+/// The §5.3 instrumentation: work ratio is measurable and sane on a real
+/// kernel run.
+#[test]
+fn work_ratio_measured() {
+    let inst = (by_name("MATMULT").unwrap().build)(Size::Tiny);
+    let plan = inst.plan().unwrap();
+    let arrays = inst.arrays();
+    let leaf: Arc<dyn LeafExec> = Arc::new(tale3::exec::LeafRunner {
+        arrays,
+        kernels: inst.kernels.clone(),
+    });
+    let pool = Pool::new(1);
+    let r = rt::run(RuntimeKind::Edt(DepMode::Ocr), &plan, &leaf, &pool, inst.total_flops).unwrap();
+    let ratio = r.metrics.work_ratio();
+    assert!(ratio > 0.0 && ratio <= 1.0, "work ratio {ratio}");
+}
+
+/// Deadlock detection: a plan whose chain predicate points at a tag that is
+/// never spawned must make the engine return an error, not hang. We build
+/// it by hand-corrupting a valid plan's interior predicate to always-true,
+/// so boundary tasks wait on nonexistent antecedents.
+#[test]
+fn engine_reports_deadlock_instead_of_hanging() {
+    use tale3::expr::Pred;
+    let inst = (by_name("SOR").unwrap().build)(Size::Tiny);
+    let plan = inst.plan().unwrap();
+    let mut broken = (*plan).clone();
+    {
+        let root = broken.root as usize;
+        let node = &mut broken.nodes[root];
+        for d in &mut node.dims {
+            if d.sync == tale3::edt::SyncKind::Chain {
+                d.interior = Some(Pred::Bool(true)); // boundary tasks now "wait"
+            }
+        }
+    }
+    let broken = Arc::new(broken);
+    let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+    let pool = Pool::new(2);
+    let eng = Engine::new(broken, DepMode::CncDep, leaf);
+    let err = eng.run(&pool).expect_err("must detect the deadlock");
+    let msg = format!("{err}");
+    assert!(msg.contains("deadlock"), "unexpected error: {msg}");
+}
+
+/// A plan over an empty domain (zero tags) still completes cleanly:
+/// STARTUP with zero workers fires its SHUTDOWN immediately.
+#[test]
+fn empty_tag_space_completes() {
+    let w = by_name("MATMULT").unwrap();
+    let mut inst = (w.build)(Size::Tiny);
+    inst.params = vec![0]; // N = 0: no iterations at all
+    let plan = inst.plan().unwrap();
+    assert_eq!(plan.count_tags(plan.root, &[]), 0);
+    let leaf: Arc<dyn LeafExec> = Arc::new(NoopLeaf);
+    let pool = Pool::new(2);
+    for mode in [DepMode::CncBlock, DepMode::CncDep, DepMode::Swarm, DepMode::Ocr] {
+        let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, 0.0)
+            .unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+        assert_eq!(r.metrics.workers, 0, "{mode:?}");
+        assert_eq!(r.metrics.startups, r.metrics.shutdowns);
+    }
+}

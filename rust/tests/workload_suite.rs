@@ -1,0 +1,171 @@
+//! Integration: every benchmark of the evaluation suite executes correctly
+//! under every runtime backend (all CnC dependence modes, SWARM, OCR, the
+//! OpenMP comparator) and produces bit-identical arrays to the sequential
+//! oracle. This is the system's core correctness statement: the EDT
+//! dependence machinery (loop types → chains + interior predicates +
+//! hierarchical async-finish) preserves the original program semantics.
+//!
+//! Bit-identity (not tolerance) holds because every array element is
+//! computed by the same instruction sequence in the same relative order —
+//! the parallel schedule only reorders independent work.
+
+use std::sync::Arc;
+use tale3::exec::{ArrayStore, LeafRunner};
+use tale3::ral::DepMode;
+use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::workloads::{registry, Size};
+
+fn oracle_arrays(inst: &tale3::workloads::Instance) -> Arc<ArrayStore> {
+    let arrays = inst.arrays();
+    tale3::exec::run_seq(&inst.prog, &inst.params, &arrays, &*inst.kernels);
+    arrays
+}
+
+fn run_one(
+    inst: &tale3::workloads::Instance,
+    kind: RuntimeKind,
+    pool: &Pool,
+) -> Arc<ArrayStore> {
+    let plan = inst.plan().expect("plan");
+    let arrays = inst.arrays();
+    let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+        arrays: arrays.clone(),
+        kernels: inst.kernels.clone(),
+    });
+    rt::run(kind, &plan, &leaf, pool, inst.total_flops)
+        .unwrap_or_else(|e| panic!("{} under {}: {e}", inst.name, kind.name()));
+    arrays
+}
+
+fn check_workload(name: &str, threads: usize) {
+    let w = tale3::workloads::by_name(name).unwrap_or_else(|| panic!("unknown {name}"));
+    let inst = (w.build)(Size::Tiny);
+    let oracle = oracle_arrays(&inst);
+    let pool = Pool::new(threads);
+    for kind in RuntimeKind::all() {
+        let got = run_one(&inst, kind, &pool);
+        let diff = oracle.max_abs_diff(&got);
+        assert_eq!(
+            diff,
+            0.0,
+            "{name} under {} ({threads} threads): max |Δ| = {diff}",
+            kind.name()
+        );
+    }
+}
+
+macro_rules! suite {
+    ($($test:ident => $name:expr),+ $(,)?) => {
+        $(
+            #[test]
+            fn $test() {
+                check_workload($name, 1);
+                check_workload($name, 3);
+            }
+        )+
+    };
+}
+
+suite! {
+    div_3d_1 => "DIV-3D-1",
+    fdtd_2d => "FDTD-2D",
+    gs_2d_5p => "GS-2D-5P",
+    gs_2d_9p => "GS-2D-9P",
+    gs_3d_27p => "GS-3D-27P",
+    gs_3d_7p => "GS-3D-7P",
+    jac_2d_copy => "JAC-2D-COPY",
+    jac_2d_5p => "JAC-2D-5P",
+    jac_2d_9p => "JAC-2D-9P",
+    jac_3d_27p => "JAC-3D-27P",
+    jac_3d_1 => "JAC-3D-1",
+    jac_3d_7p => "JAC-3D-7P",
+    lud => "LUD",
+    matmult => "MATMULT",
+    p_matmult => "P-MATMULT",
+    poisson => "POISSON",
+    rtm_3d => "RTM-3D",
+    sor => "SOR",
+    strsm => "STRSM",
+    trisolv => "TRISOLV",
+    heat_3d_diamond => "HEAT-3D-DIAMOND",
+}
+
+/// The Table 3 configuration (two-level hierarchy) must also be correct.
+#[test]
+fn two_level_hierarchy_correct() {
+    for name in ["JAC-3D-7P", "GS-3D-7P"] {
+        let w = tale3::workloads::by_name(name).unwrap();
+        let inst = (w.build)(Size::Tiny);
+        let oracle = oracle_arrays(&inst);
+        let mut opts = inst.map_opts.clone();
+        opts.level_split = vec![2];
+        let plan = inst.plan_with(&opts).unwrap();
+        let pool = Pool::new(3);
+        for mode in [DepMode::CncDep, DepMode::Ocr, DepMode::Swarm] {
+            let arrays = inst.arrays();
+            let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+                arrays: arrays.clone(),
+                kernels: inst.kernels.clone(),
+            });
+            rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, inst.total_flops)
+                .unwrap_or_else(|e| panic!("{name} 2-level {}: {e}", mode.name()));
+            assert_eq!(oracle.max_abs_diff(&arrays), 0.0, "{name} 2-level {mode:?}");
+        }
+    }
+}
+
+/// The Table 5 granularity knob (extra tile loop inside the leaf).
+#[test]
+fn leaf_granularity_correct() {
+    for name in ["LUD", "SOR", "MATMULT"] {
+        let w = tale3::workloads::by_name(name).unwrap();
+        let inst = (w.build)(Size::Tiny);
+        let oracle = oracle_arrays(&inst);
+        let mut opts = inst.map_opts.clone();
+        opts.leaf_extra = 1;
+        let plan = inst.plan_with(&opts).unwrap();
+        let pool = Pool::new(2);
+        let arrays = inst.arrays();
+        let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+            arrays: arrays.clone(),
+            kernels: inst.kernels.clone(),
+        });
+        rt::run(
+            RuntimeKind::Edt(DepMode::Ocr),
+            &plan,
+            &leaf,
+            &pool,
+            inst.total_flops,
+        )
+        .unwrap_or_else(|e| panic!("{name} gran: {e}"));
+        assert_eq!(oracle.max_abs_diff(&arrays), 0.0, "{name} leaf_extra=1");
+    }
+}
+
+/// Different tile sizes (Table 5 exploration) stay correct.
+#[test]
+fn tile_size_sweep_correct() {
+    let w = tale3::workloads::by_name("JAC-2D-5P").unwrap();
+    let inst = (w.build)(Size::Tiny);
+    let oracle = oracle_arrays(&inst);
+    let pool = Pool::new(2);
+    for ts in [vec![2, 2, 8], vec![1, 4, 4], vec![8, 8, 8], vec![3, 5, 7]] {
+        let mut opts = inst.map_opts.clone();
+        opts.tile_sizes = ts.clone();
+        let plan = inst.plan_with(&opts).unwrap();
+        let arrays = inst.arrays();
+        let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+            arrays: arrays.clone(),
+            kernels: inst.kernels.clone(),
+        });
+        rt::run(
+            RuntimeKind::Edt(DepMode::Swarm),
+            &plan,
+            &leaf,
+            &pool,
+            inst.total_flops,
+        )
+        .unwrap_or_else(|e| panic!("tiles {ts:?}: {e}"));
+        assert_eq!(oracle.max_abs_diff(&arrays), 0.0, "tiles {ts:?}");
+    }
+}
