@@ -1,0 +1,132 @@
+//! Data-plane comparison: shared buffer vs item-collection tuple space.
+//!
+//! Part 1 (real execution on this container): every runtime kind (five
+//! dependence modes + the OpenMP comparator) over both data planes, on
+//! stencil and linalg workloads. Each line shows the §5.3 work ratio and
+//! the space put/get/free counters with live/peak datablock bytes.
+//!
+//! Part 2 (headline): for the ≥8-timestep Jacobi stencils, the peak live
+//! bytes under get-count reclamation must sit strictly below the shared
+//! plane's full time-expanded array footprint — the memory-boundedness
+//! property CnC's declared get-counts exist to provide.
+//!
+//! Part 3 (simulated testbed): the 1..32-thread sweep with the DES
+//! per-put/get/copy data-plane costs, shared vs space.
+
+use tale3::bench::{fmt_bytes, instance, run_metrics_line, sim_report_plane, Table, THREADS};
+use tale3::ral::DepMode;
+use tale3::rt::{self, Pool, RuntimeKind};
+use tale3::sim::{CostModel, Machine};
+use tale3::space::DataPlane;
+use tale3::workloads::Size;
+
+fn main() {
+    let pool = Pool::new(2);
+    let names = ["JAC-2D-5P", "JAC-3D-7P", "MATMULT", "LUD"];
+
+    for name in names {
+        let inst = instance(name, Size::Small);
+        let shared_bytes = inst.shared_footprint_bytes();
+        println!(
+            "\n=== {} (shared-plane array footprint {}) ===",
+            name,
+            fmt_bytes(shared_bytes)
+        );
+        let plan = inst.plan().expect("plan");
+        for plane in [DataPlane::Shared, DataPlane::Space] {
+            for kind in RuntimeKind::all() {
+                let arrays = inst.arrays();
+                let r = rt::run_with_plane(
+                    kind,
+                    plane,
+                    &plan,
+                    &inst.prog,
+                    &arrays,
+                    &inst.kernels,
+                    &pool,
+                    inst.total_flops,
+                )
+                .expect("run");
+                println!("{}", run_metrics_line(&r));
+            }
+        }
+    }
+
+    println!("\n=== get-count reclamation bound (Jacobi, T >= 8 timesteps) ===");
+    for name in ["JAC-2D-5P", "JAC-3D-7P"] {
+        let inst = instance(name, Size::Small);
+        assert!(
+            inst.params[0] >= 8,
+            "{name}: reclamation demo needs >= 8 timesteps"
+        );
+        let shared_bytes = inst.shared_footprint_bytes();
+        let plan = inst.plan().expect("plan");
+        let arrays = inst.arrays();
+        let r = rt::run_with_plane(
+            RuntimeKind::Edt(DepMode::CncDep),
+            DataPlane::Space,
+            &plan,
+            &inst.prog,
+            &arrays,
+            &inst.kernels,
+            &pool,
+            inst.total_flops,
+        )
+        .expect("run");
+        let peak = r.metrics.space_peak_bytes;
+        println!(
+            "{name:<12} peak live {:>10}  vs shared {:>10}  ({:.1}% — {})",
+            fmt_bytes(peak),
+            fmt_bytes(shared_bytes),
+            peak as f64 / shared_bytes as f64 * 100.0,
+            if peak < shared_bytes { "bounded" } else { "NOT BOUNDED" }
+        );
+        assert!(
+            peak < shared_bytes,
+            "{name}: get-count reclamation failed to bound live memory \
+             (peak {peak} >= shared {shared_bytes})"
+        );
+        assert_eq!(r.metrics.space_live_bytes, 0, "{name}: datablocks leaked");
+    }
+
+    let machine = Machine::default();
+    let costs = CostModel::default();
+    let mut table = Table::threads_cols(
+        "Simulated data-plane overhead (Gflop/s; space peak MiB in last row)",
+        &["Benchmark", "Plane"],
+    );
+    for name in ["JAC-2D-5P", "MATMULT"] {
+        let inst = instance(name, Size::Small);
+        for plane in [DataPlane::Shared, DataPlane::Space] {
+            let reports: Vec<_> = THREADS
+                .iter()
+                .map(|&t| {
+                    sim_report_plane(
+                        &inst,
+                        &inst.map_opts,
+                        DepMode::CncDep,
+                        plane,
+                        t,
+                        &machine,
+                        &costs,
+                        true,
+                    )
+                })
+                .collect();
+            table.row(
+                vec![name.into(), plane.name().into()],
+                reports.iter().map(|r| r.gflops).collect(),
+            );
+            if plane == DataPlane::Space {
+                table.row(
+                    vec![name.into(), "peak MiB".into()],
+                    reports
+                        .iter()
+                        .map(|r| r.space_peak_bytes as f64 / (1024.0 * 1024.0))
+                        .collect(),
+                );
+            }
+        }
+    }
+    table.print();
+}

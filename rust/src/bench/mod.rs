@@ -7,7 +7,9 @@
 
 use crate::edt::MapOptions;
 use crate::ral::DepMode;
-use crate::sim::{simulate, simulate_omp, CostModel, Machine};
+use crate::rt::RunReport;
+use crate::sim::{simulate, simulate_omp, simulate_with_plane, CostModel, Machine, SimReport};
+use crate::space::DataPlane;
 use crate::workloads::{by_name, Instance, Size};
 
 /// The paper's thread sweep (Tables 1/3/4/5).
@@ -76,6 +78,38 @@ impl Table {
     }
 }
 
+/// Human-readable byte counts for data-plane columns.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 10 * 1024 * 1024 {
+        format!("{:.1}MiB", b as f64 / (1024.0 * 1024.0))
+    } else if b >= 10 * 1024 {
+        format!("{:.1}KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// One formatted line per real-execution run: the §5.3 work ratio next to
+/// the data-plane counters (puts/gets/frees and live/peak bytes — all
+/// zero under the shared plane), so the tuple-space metrics are visible
+/// in every benchmark run's output.
+pub fn run_metrics_line(r: &RunReport) -> String {
+    format!(
+        "{:<10} {:<7} {:>9.4}s {:>8.3} Gf/s  work {:>5.1}%  \
+         space p/g/f {:>5}/{:>5}/{:>5}  live {:>9}  peak {:>9}",
+        r.runtime,
+        r.plane,
+        r.seconds,
+        r.gflops,
+        r.metrics.work_ratio() * 100.0,
+        r.metrics.space_puts,
+        r.metrics.space_gets,
+        r.metrics.space_frees,
+        fmt_bytes(r.metrics.space_live_bytes),
+        fmt_bytes(r.metrics.space_peak_bytes),
+    )
+}
+
 /// 4-significant-digit cell formatting (sub-second sim times stay legible).
 pub fn fmt_val(v: f64) -> String {
     if v == 0.0 {
@@ -124,6 +158,33 @@ pub fn sim_omp_gflops(
     inst.total_flops / secs / 1e9
 }
 
+/// Full simulated report for one (workload, mode, plane, threads) cell —
+/// exposes the data-plane counters (space puts/gets/frees, peak live
+/// bytes) next to the classic Gflop/s number.
+#[allow(clippy::too_many_arguments)]
+pub fn sim_report_plane(
+    inst: &Instance,
+    opts: &MapOptions,
+    mode: DepMode,
+    plane: DataPlane,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+) -> SimReport {
+    let plan = inst.plan_with(opts).expect("plan");
+    simulate_with_plane(
+        &plan,
+        mode,
+        plane,
+        threads,
+        machine,
+        costs,
+        numa_pinned,
+        inst.total_flops,
+    )
+}
+
 /// Simulated §5.3 work ratio.
 pub fn sim_work_ratio(
     inst: &Instance,
@@ -156,6 +217,30 @@ mod tests {
             THREADS.iter().map(|&x| x as f64).collect(),
         );
         t.print();
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(5), "5B");
+        assert!(fmt_bytes(20 * 1024).ends_with("KiB"));
+        assert!(fmt_bytes(20 * 1024 * 1024).ends_with("MiB"));
+    }
+
+    #[test]
+    fn sim_space_cell_has_dataplane_traffic() {
+        let inst = instance("JAC-2D-5P", Size::Tiny);
+        let r = sim_report_plane(
+            &inst,
+            &inst.map_opts,
+            DepMode::CncDep,
+            DataPlane::Space,
+            4,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+        );
+        assert!(r.space_puts > 0);
+        assert_eq!(r.space_puts, r.space_frees);
     }
 
     #[test]

@@ -103,6 +103,15 @@ impl Plan {
         out
     }
 
+    /// The statically known consumer count of a tag's output datablock:
+    /// the number of successor tags along chain dimensions. This is the
+    /// CnC *get-count* the `space` data plane publishes items with — known
+    /// at put time from the same §4.5 tag-space bounds and Fig 8 interior
+    /// predicates the control plane uses, no runtime discovery needed.
+    pub fn consumer_count(&self, id: u32, coords: &[Value]) -> usize {
+        self.successors(id, coords).len()
+    }
+
     /// Successor tags along chain dims (prescriber/depends bookkeeping).
     pub fn successors(&self, id: u32, coords: &[Value]) -> Vec<Vec<Value>> {
         let n = self.node(id);

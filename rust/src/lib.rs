@@ -29,6 +29,7 @@ pub mod rt;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;
+pub mod space;
 pub mod workloads;
 
 pub use edt::{map_program, EdtTree, MapOptions};
@@ -36,3 +37,4 @@ pub use exec::Plan;
 pub use ir::{Program, ProgramBuilder};
 pub use ral::DepMode;
 pub use rt::{Pool, RuntimeKind};
+pub use space::DataPlane;

@@ -12,13 +12,13 @@
 //! --gran N, --no-verify.
 //! (Argument parsing is hand-rolled: clap is not in the offline crate set.)
 
-use std::sync::Arc;
 use tale3::analysis::build_gdg;
+use tale3::bench::fmt_bytes;
 use tale3::edt::stats::characterize;
-use tale3::exec::LeafRunner;
 use tale3::ral::DepMode;
-use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
-use tale3::sim::{simulate, simulate_omp, CostModel, Machine};
+use tale3::rt::{self, Pool, RuntimeKind};
+use tale3::sim::{simulate_omp, simulate_with_plane, CostModel, Machine};
+use tale3::space::DataPlane;
 use tale3::workloads::{by_name, registry, Size};
 
 struct Args {
@@ -63,6 +63,12 @@ impl Args {
     }
     fn threads(&self) -> usize {
         self.flag("threads").and_then(|s| s.parse().ok()).unwrap_or(2)
+    }
+    fn plane(&self) -> DataPlane {
+        match self.flag("plane").unwrap_or("shared") {
+            "space" => DataPlane::Space,
+            _ => DataPlane::Shared,
+        }
     }
     fn runtimes(&self) -> Vec<RuntimeKind> {
         match self.flag("runtime").unwrap_or("all") {
@@ -144,17 +150,24 @@ fn main() -> anyhow::Result<()> {
                 None
             };
             let pool = Pool::new(args.threads());
+            let plane = args.plane();
             println!(
-                "{:<10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>9} {:>7}",
-                "runtime", "seconds", "Gflop/s", "tasks", "steals", "f.gets", "workratio", "verify"
+                "{:<10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>9} {:>8} {:>8} {:>9} {:>7}",
+                "runtime", "seconds", "Gflop/s", "tasks", "steals", "f.gets", "workratio",
+                "s.puts", "s.gets", "s.peak", "verify"
             );
             for kind in args.runtimes() {
                 let arrays = inst.arrays();
-                let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
-                    arrays: arrays.clone(),
-                    kernels: inst.kernels.clone(),
-                });
-                let r = rt::run(kind, &plan, &leaf, &pool, inst.total_flops)?;
+                let r = rt::run_with_plane(
+                    kind,
+                    plane,
+                    &plan,
+                    &inst.prog,
+                    &arrays,
+                    &inst.kernels,
+                    &pool,
+                    inst.total_flops,
+                )?;
                 let ver = match &oracle {
                     Some(o) => {
                         if o.max_abs_diff(&arrays) == 0.0 {
@@ -166,7 +179,7 @@ fn main() -> anyhow::Result<()> {
                     None => "-",
                 };
                 println!(
-                    "{:<10} {:>9.4} {:>9.3} {:>8} {:>8} {:>8} {:>8.1}% {:>7}",
+                    "{:<10} {:>9.4} {:>9.3} {:>8} {:>8} {:>8} {:>8.1}% {:>8} {:>8} {:>9} {:>7}",
                     r.runtime,
                     r.seconds,
                     r.gflops,
@@ -174,6 +187,9 @@ fn main() -> anyhow::Result<()> {
                     r.metrics.steals,
                     r.metrics.failed_gets,
                     r.metrics.work_ratio() * 100.0,
+                    r.metrics.space_puts,
+                    r.metrics.space_gets,
+                    fmt_bytes(r.metrics.space_peak_bytes),
                     ver
                 );
             }
@@ -189,7 +205,14 @@ fn main() -> anyhow::Result<()> {
                 .flag("threads")
                 .map(|t| t.split(',').filter_map(|x| x.parse().ok()).collect())
                 .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]);
-            println!("simulated testbed: 2-socket x 8-core x 2-SMT (Gflop/s)");
+            let plane = args.plane();
+            println!(
+                "simulated testbed: 2-socket x 8-core x 2-SMT (Gflop/s, {} data plane on EDT rows)",
+                plane.name()
+            );
+            if plane == DataPlane::Space && args.runtimes().contains(&RuntimeKind::Omp) {
+                println!("note: the omp comparator has no tuple-space port; its row is always the shared plane");
+            }
             print!("{:<10}", "runtime");
             for t in &threads {
                 print!("{t:>8}");
@@ -200,7 +223,17 @@ fn main() -> anyhow::Result<()> {
                 for &t in &threads {
                     let g = match kind {
                         RuntimeKind::Edt(m) => {
-                            simulate(&plan, m, t, &machine, &costs, true, inst.total_flops).gflops
+                            simulate_with_plane(
+                                &plan,
+                                m,
+                                plane,
+                                t,
+                                &machine,
+                                &costs,
+                                true,
+                                inst.total_flops,
+                            )
+                            .gflops
                         }
                         RuntimeKind::Omp => {
                             inst.total_flops / simulate_omp(&plan, t, &machine, &costs, true) / 1e9
@@ -220,12 +253,14 @@ fn main() -> anyhow::Result<()> {
             println!("  cargo bench --bench table4_runtimes");
             println!("  cargo bench --bench table5_granularity");
             println!("  cargo bench --bench micro_overheads   (CostModel calibration)");
+            println!("  cargo bench --bench space_dataplane   (shared vs tuple-space data plane)");
         }
         _ => {
             println!("tale3 — A Tale of Three Runtimes (reproduction)");
             println!("usage: tale3 <list|explain|run|sim|table> [workload] [--size tiny|small|paper]");
             println!("       [--runtime cnc-block|cnc-async|cnc-dep|swarm|ocr|omp|all]");
             println!("       [--threads N[,N..]] [--tiles a,b,c] [--levels k] [--gran n] [--no-verify]");
+            println!("       [--plane shared|space]   (data plane: shared buffer vs tuple space)");
         }
     }
     Ok(())

@@ -195,6 +195,14 @@ pub struct Metrics {
     /// Nanoseconds spent executing leaf work vs. total non-idle time.
     pub work_ns: AtomicU64,
     pub busy_ns: AtomicU64,
+    /// Data-plane counters (item-collection tuple space, `crate::space`):
+    /// puts/gets/frees of datablocks, plus live/peak payload bytes. Zero
+    /// under the shared data plane.
+    pub space_puts: AtomicU64,
+    pub space_gets: AtomicU64,
+    pub space_frees: AtomicU64,
+    pub space_live_bytes: AtomicU64,
+    pub space_peak_bytes: AtomicU64,
 }
 
 impl Metrics {
@@ -213,6 +221,11 @@ impl Metrics {
             parks: self.parks.load(Ordering::Relaxed),
             work_ns: self.work_ns.load(Ordering::Relaxed),
             busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            space_puts: self.space_puts.load(Ordering::Relaxed),
+            space_gets: self.space_gets.load(Ordering::Relaxed),
+            space_frees: self.space_frees.load(Ordering::Relaxed),
+            space_live_bytes: self.space_live_bytes.load(Ordering::Relaxed),
+            space_peak_bytes: self.space_peak_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -233,6 +246,11 @@ pub struct MetricsSnapshot {
     pub parks: u64,
     pub work_ns: u64,
     pub busy_ns: u64,
+    pub space_puts: u64,
+    pub space_gets: u64,
+    pub space_frees: u64,
+    pub space_live_bytes: u64,
+    pub space_peak_bytes: u64,
 }
 
 impl MetricsSnapshot {

@@ -23,6 +23,7 @@ use super::pool::{Job, Pool, WorkerCtx};
 use super::table::TagTable;
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::ral::{Continuation, DepMode, FinishScope, Metrics, Task, TagKey};
+use crate::space::DataPlane;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -48,16 +49,30 @@ pub struct Engine {
     pub mode: DepMode,
     pub table: TagTable,
     pub leaf: Arc<dyn LeafExec>,
+    /// Which data plane the leaf executor moves array data through. The
+    /// engine's control flow is identical for both planes (the data plane
+    /// is encapsulated in `leaf`); recorded for reports and diagnostics.
+    pub plane: DataPlane,
     completed: AtomicBool,
 }
 
 impl Engine {
     pub fn new(plan: Arc<Plan>, mode: DepMode, leaf: Arc<dyn LeafExec>) -> Arc<Engine> {
+        Self::new_with_plane(plan, mode, leaf, DataPlane::Shared)
+    }
+
+    pub fn new_with_plane(
+        plan: Arc<Plan>,
+        mode: DepMode,
+        leaf: Arc<dyn LeafExec>,
+        plane: DataPlane,
+    ) -> Arc<Engine> {
         Arc::new(Engine {
             plan,
             mode,
             table: TagTable::default(),
             leaf,
+            plane,
             completed: AtomicBool::new(false),
         })
     }
@@ -78,8 +93,9 @@ impl Engine {
         let dt = t0.elapsed().as_secs_f64();
         if !self.completed.load(Ordering::Acquire) {
             bail!(
-                "runtime deadlock: pool quiescent but plan '{}' incomplete ({} keys with parked waiters)",
+                "runtime deadlock: pool quiescent but plan '{}' ({} plane) incomplete ({} keys with parked waiters)",
                 self.plan.name,
+                self.plane.name(),
                 self.table.waiting_keys()
             );
         }

@@ -7,11 +7,15 @@ pub mod ompsim;
 pub mod pool;
 pub mod table;
 
+pub use crate::space::DataPlane;
 pub use engine::{Engine, LeafExec, NoopLeaf};
 pub use pool::{Pool, WorkerCtx};
 
 use crate::exec::plan::Plan;
+use crate::exec::{ArrayStore, KernelSet, LeafRunner};
+use crate::ir::Program;
 use crate::ral::{DepMode, MetricsSnapshot};
+use crate::space::{ItemSpace, SpaceLeafRunner};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -47,28 +51,82 @@ impl RuntimeKind {
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub runtime: &'static str,
+    /// Data plane the run executed over ("shared" | "space").
+    pub plane: &'static str,
     pub threads: usize,
     pub seconds: f64,
     pub gflops: f64,
     pub metrics: MetricsSnapshot,
 }
 
+/// Per-run counter delta. Saturating: pool metrics are cumulative across
+/// runs, but a counter reset (fresh pool swapped in between snapshots, or
+/// a gauge that legitimately shrinks) must degrade to zero, not panic a
+/// report.
 fn delta(a: MetricsSnapshot, b: MetricsSnapshot) -> MetricsSnapshot {
     MetricsSnapshot {
-        startups: b.startups - a.startups,
-        workers: b.workers - a.workers,
-        prescribers: b.prescribers - a.prescribers,
-        shutdowns: b.shutdowns - a.shutdowns,
-        puts: b.puts - a.puts,
-        gets: b.gets - a.gets,
-        failed_gets: b.failed_gets - a.failed_gets,
-        requeues: b.requeues - a.requeues,
-        steals: b.steals - a.steals,
-        failed_steals: b.failed_steals - a.failed_steals,
-        parks: b.parks - a.parks,
-        work_ns: b.work_ns - a.work_ns,
-        busy_ns: b.busy_ns - a.busy_ns,
+        startups: b.startups.saturating_sub(a.startups),
+        workers: b.workers.saturating_sub(a.workers),
+        prescribers: b.prescribers.saturating_sub(a.prescribers),
+        shutdowns: b.shutdowns.saturating_sub(a.shutdowns),
+        puts: b.puts.saturating_sub(a.puts),
+        gets: b.gets.saturating_sub(a.gets),
+        failed_gets: b.failed_gets.saturating_sub(a.failed_gets),
+        requeues: b.requeues.saturating_sub(a.requeues),
+        steals: b.steals.saturating_sub(a.steals),
+        failed_steals: b.failed_steals.saturating_sub(a.failed_steals),
+        parks: b.parks.saturating_sub(a.parks),
+        work_ns: b.work_ns.saturating_sub(a.work_ns),
+        busy_ns: b.busy_ns.saturating_sub(a.busy_ns),
+        space_puts: b.space_puts.saturating_sub(a.space_puts),
+        space_gets: b.space_gets.saturating_sub(a.space_gets),
+        space_frees: b.space_frees.saturating_sub(a.space_frees),
+        space_live_bytes: b.space_live_bytes.saturating_sub(a.space_live_bytes),
+        space_peak_bytes: b.space_peak_bytes.saturating_sub(a.space_peak_bytes),
     }
+}
+
+/// The shared measurement protocol of both data planes: snapshot pool
+/// metrics around the execution, fold the run's space counters in (if the
+/// leaf executor has a space), report the delta. One body so the two
+/// planes can never diverge in how they measure.
+fn run_measured(
+    kind: RuntimeKind,
+    plan: &Arc<Plan>,
+    leaf: &Arc<dyn LeafExec>,
+    pool: &Pool,
+    total_flops: f64,
+    plane: DataPlane,
+    space: Option<&ItemSpace>,
+) -> Result<RunReport> {
+    let before = pool.metrics().snapshot();
+    let seconds = match kind {
+        RuntimeKind::Edt(mode) => {
+            let engine = Engine::new_with_plane(plan.clone(), mode, leaf.clone(), plane);
+            engine.run(pool)?
+        }
+        RuntimeKind::Omp => ompsim::run_omp(plan, leaf, pool),
+    };
+    if let Some(sp) = space {
+        sp.merge_into(pool.metrics());
+    }
+    let after = pool.metrics().snapshot();
+    let mut metrics = delta(before, after);
+    if let Some(sp) = space {
+        // live/peak are gauges of *this* run's space, not pool-lifetime
+        // counters — report them absolute
+        let s = sp.stats.snapshot();
+        metrics.space_live_bytes = s.live_bytes;
+        metrics.space_peak_bytes = s.peak_bytes;
+    }
+    Ok(RunReport {
+        runtime: kind.name(),
+        plane: plane.name(),
+        threads: pool.n_workers,
+        seconds,
+        gflops: total_flops / seconds / 1e9,
+        metrics,
+    })
 }
 
 /// Run a plan under a runtime on an existing pool. `total_flops` is used
@@ -80,22 +138,40 @@ pub fn run(
     pool: &Pool,
     total_flops: f64,
 ) -> Result<RunReport> {
-    let before = pool.metrics().snapshot();
-    let seconds = match kind {
-        RuntimeKind::Edt(mode) => {
-            let engine = Engine::new(plan.clone(), mode, leaf.clone());
-            engine.run(pool)?
+    run_measured(kind, plan, leaf, pool, total_flops, DataPlane::Shared, None)
+}
+
+/// Run a plan under a runtime over the chosen data plane. `Shared` is the
+/// seed path (one global buffer, `exec::LeafRunner`); `Space` routes every
+/// inter-EDT tile through a fresh item-collection tuple space
+/// (`space::SpaceLeafRunner`) with get-count reclamation, and folds the
+/// space's put/get/free and live/peak-byte counters into the report.
+#[allow(clippy::too_many_arguments)]
+pub fn run_with_plane(
+    kind: RuntimeKind,
+    plane: DataPlane,
+    plan: &Arc<Plan>,
+    prog: &Program,
+    arrays: &Arc<ArrayStore>,
+    kernels: &Arc<dyn KernelSet>,
+    pool: &Pool,
+    total_flops: f64,
+) -> Result<RunReport> {
+    match plane {
+        DataPlane::Shared => {
+            let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
+                arrays: arrays.clone(),
+                kernels: kernels.clone(),
+            });
+            run_measured(kind, plan, &leaf, pool, total_flops, plane, None)
         }
-        RuntimeKind::Omp => ompsim::run_omp(plan, leaf, pool),
-    };
-    let after = pool.metrics().snapshot();
-    Ok(RunReport {
-        runtime: kind.name(),
-        threads: pool.n_workers,
-        seconds,
-        gflops: total_flops / seconds / 1e9,
-        metrics: delta(before, after),
-    })
+        DataPlane::Space => {
+            let runner = SpaceLeafRunner::new(prog, arrays.clone(), kernels.clone());
+            let space = runner.space.clone();
+            let leaf: Arc<dyn LeafExec> = Arc::new(runner);
+            run_measured(kind, plan, &leaf, pool, total_flops, plane, Some(&space))
+        }
+    }
 }
 
 #[cfg(test)]

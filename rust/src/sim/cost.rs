@@ -132,6 +132,14 @@ pub struct CostModel {
     pub swarm_smt_factor: f64,
     /// OpenMP per-wave barrier cost.
     pub omp_barrier_ns: f64,
+    /// Data-plane (item-collection tuple space) costs, charged per leaf
+    /// under `DataPlane::Space`: publishing a datablock (hash insert +
+    /// get-count bookkeeping), one consuming get, and the per-byte
+    /// copy-out of the produced tile (the serialization a distributed
+    /// shard would put on the wire; in-memory it is a memcpy).
+    pub space_put_ns: f64,
+    pub space_get_ns: f64,
+    pub space_copy_ns_per_byte: f64,
 }
 
 impl Default for CostModel {
@@ -152,6 +160,9 @@ impl Default for CostModel {
             ocr_deque_ns: 160.0,
             swarm_smt_factor: 0.22,
             omp_barrier_ns: 4000.0,
+            space_put_ns: 320.0,
+            space_get_ns: 60.0,
+            space_copy_ns_per_byte: 0.1,
         }
     }
 }

@@ -10,6 +10,7 @@ use super::cost::{CostModel, Machine};
 use super::leaf_cost;
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::ral::{DepMode, TagKey};
+use crate::space::DataPlane;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
@@ -68,11 +69,19 @@ pub struct SimReport {
     pub failed_gets: u64,
     /// Virtual work time / virtual busy time (§5.3 work ratio).
     pub work_ratio: f64,
+    /// Data-plane traffic (zero under `DataPlane::Shared`).
+    pub space_puts: u64,
+    pub space_gets: u64,
+    pub space_frees: u64,
+    /// High-water mark of live datablock bytes under get-count
+    /// reclamation — the memory a space-backed runtime actually needs.
+    pub space_peak_bytes: u64,
 }
 
 struct Des<'a> {
     plan: &'a Plan,
     mode: DepMode,
+    plane: DataPlane,
     threads: usize,
     machine: &'a Machine,
     costs: &'a CostModel,
@@ -81,6 +90,14 @@ struct Des<'a> {
     table: HashMap<TagKey, Entry>,
     pendings: Vec<Pending>,
     scopes: Vec<Scope>,
+    /// Space data plane: live datablocks (bytes, remaining get-count),
+    /// keyed like the producer's completion tag but in a separate map.
+    space_items: HashMap<TagKey, (u64, i64)>,
+    space_live: u64,
+    space_peak: u64,
+    space_puts: u64,
+    space_gets: u64,
+    space_frees: u64,
 
     /// (available-at, task): a task spawned during execution becomes
     /// visible only when its spawner completes — stealing must not
@@ -375,8 +392,9 @@ impl<'a> Des<'a> {
                 if !blocked {
                     // causality self-check: every antecedent must have
                     // completed (in virtual time) before this dispatch
-                    for a in self.plan.antecedents(node, &coords) {
-                        let k = Self::done_key(node, &a);
+                    let ants = self.plan.antecedents(node, &coords);
+                    for a in &ants {
+                        let k = Self::done_key(node, a);
                         match self.done_time(&k) {
                             Some(dt) => assert!(
                                 dt <= t0,
@@ -392,7 +410,10 @@ impl<'a> Des<'a> {
                     let key = Self::done_key(node, &coords);
                     match &self.plan.node(node).body {
                         ArenaBody::Leaf(_) => {
-                            let (_pts, flops, bytes) = leaf_cost(self.plan, node, &coords);
+                            let (pts, flops, bytes) = leaf_cost(self.plan, node, &coords);
+                            if self.plane == DataPlane::Space {
+                                dur += self.space_leaf(node, &coords, &ants, pts);
+                            }
                             let rate = self.machine.worker_flops(self.threads)
                                 * c.mode_rate_factor(Some(self.mode), self.threads, self.machine);
                             // bandwidth shared by concurrently-active leaves
@@ -545,10 +566,57 @@ impl<'a> Des<'a> {
             }
         }
     }
+
+    /// Data-plane charges for one leaf under `DataPlane::Space`: a get per
+    /// chain antecedent (the last get reclaims the producer's datablock),
+    /// then a put of this leaf's tile — modeled as one f32 write per
+    /// iteration point — including its copy-out. Leaves are processed in
+    /// nondecreasing virtual start time, so tracking the live set in
+    /// processing order gives a faithful high-water mark.
+    fn space_leaf(&mut self, node: u32, coords: &[i64], ants: &[Vec<i64>], pts: f64) -> f64 {
+        let c = self.costs;
+        let mut dur = 0.0;
+        for a in ants {
+            let k = Self::done_key(node, a);
+            dur += c.space_get_ns;
+            self.space_gets += 1;
+            match self.space_items.get_mut(&k) {
+                Some((bytes, remaining)) => {
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        let b = *bytes;
+                        self.space_items.remove(&k);
+                        self.space_live -= b;
+                        self.space_frees += 1;
+                    }
+                }
+                // mirror the real ItemSpace::get panic: an absent item
+                // means consumer_count and the antecedent set disagree
+                None => panic!(
+                    "DES space get of absent datablock {k:?} — \
+                     consumer_count / antecedent mismatch"
+                ),
+            }
+        }
+        let tile_bytes = (pts * 4.0) as u64;
+        dur += c.space_put_ns + tile_bytes as f64 * c.space_copy_ns_per_byte;
+        self.space_puts += 1;
+        self.space_live += tile_bytes;
+        self.space_peak = self.space_peak.max(self.space_live);
+        let consumers = self.plan.consumer_count(node, coords);
+        if consumers == 0 {
+            self.space_live -= tile_bytes;
+            self.space_frees += 1;
+        } else {
+            self.space_items
+                .insert(Self::done_key(node, coords), (tile_bytes, consumers as i64));
+        }
+        dur
+    }
 }
 
 /// Simulate the plan under a dependence mode with `threads` virtual
-/// workers. Returns the virtual-time report.
+/// workers over the shared data plane. Returns the virtual-time report.
 pub fn simulate(
     plan: &Plan,
     mode: DepMode,
@@ -558,9 +626,36 @@ pub fn simulate(
     numa_pinned: bool,
     total_flops: f64,
 ) -> SimReport {
+    simulate_with_plane(
+        plan,
+        mode,
+        DataPlane::Shared,
+        threads,
+        machine,
+        costs,
+        numa_pinned,
+        total_flops,
+    )
+}
+
+/// Simulate under an explicit data plane: `Space` additionally charges
+/// per-put/get/copy costs and tracks get-count reclamation of datablock
+/// bytes in virtual time.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_with_plane(
+    plan: &Plan,
+    mode: DepMode,
+    plane: DataPlane,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+    total_flops: f64,
+) -> SimReport {
     let mut d = Des {
         plan,
         mode,
+        plane,
         threads,
         machine,
         costs,
@@ -568,6 +663,12 @@ pub fn simulate(
         table: HashMap::new(),
         pendings: Vec::new(),
         scopes: Vec::new(),
+        space_items: HashMap::new(),
+        space_live: 0,
+        space_peak: 0,
+        space_puts: 0,
+        space_gets: 0,
+        space_frees: 0,
         active_leaf_ends: BinaryHeap::new(),
         deques: (0..threads).map(|_| VecDeque::new()).collect(),
         heap: BinaryHeap::new(),
@@ -628,6 +729,10 @@ pub fn simulate(
         steals: d.steals,
         failed_gets: d.failed_gets,
         work_ratio: if d.busy_ns > 0.0 { d.work_ns / d.busy_ns } else { 0.0 },
+        space_puts: d.space_puts,
+        space_gets: d.space_gets,
+        space_frees: d.space_frees,
+        space_peak_bytes: d.space_peak,
     }
 }
 
@@ -675,6 +780,44 @@ mod tests {
         let d = sim_sized("JAC-2D-5P", DepMode::CncDep, 4, Size::Small);
         assert_eq!(d.failed_gets, 0);
         assert!(b.failed_gets > 0);
+    }
+
+    #[test]
+    fn space_plane_reclaims_datablocks_in_virtual_time() {
+        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Small);
+        let plan = inst.plan().unwrap();
+        let shared = simulate(
+            &plan,
+            DepMode::CncDep,
+            4,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+            inst.total_flops,
+        );
+        assert_eq!(shared.space_puts, 0, "shared plane has no space traffic");
+        let spaced = simulate_with_plane(
+            &plan,
+            DepMode::CncDep,
+            DataPlane::Space,
+            4,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+            inst.total_flops,
+        );
+        assert!(spaced.space_puts > 0);
+        assert_eq!(spaced.space_puts, spaced.space_frees, "datablocks leaked");
+        let shared_bytes = inst.shared_footprint_bytes();
+        assert!(
+            spaced.space_peak_bytes > 0 && spaced.space_peak_bytes < shared_bytes,
+            "get-count reclamation must bound live bytes below the shared \
+             footprint: peak {} vs shared {}",
+            spaced.space_peak_bytes,
+            shared_bytes
+        );
+        // the data plane costs time; scheduling is deterministic
+        assert!(spaced.seconds >= shared.seconds * 0.999);
     }
 
     #[test]

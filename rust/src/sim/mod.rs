@@ -25,7 +25,7 @@ pub mod des;
 pub mod omp;
 
 pub use cost::{CostModel, Machine};
-pub use des::{simulate, SimReport};
+pub use des::{simulate, simulate_with_plane, SimReport};
 pub use omp::simulate_omp;
 
 use crate::exec::plan::{ArenaBody, Plan};

@@ -1,0 +1,179 @@
+//! The item-collection tuple space: the **data plane** of the three
+//! runtimes.
+//!
+//! The paper's programs are "event-driven, tuple-space based" (§1): EDTs
+//! exchange *data* — not just completion events — through tuple-space
+//! collections. Intel CnC calls them *item collections*, OCR calls the
+//! payloads *datablocks*, SWARM routes them through its tagTable. The
+//! control plane (`rt::table::TagTable`) answers "has my predecessor
+//! finished?"; this module is the complementary plane that answers "where
+//! are my predecessor's *bytes*?".
+//!
+//! Paper mapping:
+//!
+//! - **§4.5 tag tuples** — items are keyed by [`ItemKey`]: a collection id
+//!   (the compile-time EDT that produces the item) plus the producer's tag
+//!   tuple. This is the same `(id, tag)` templated-key shape as the
+//!   control-plane [`crate::ral::TagKey`], but in a separate namespace: one
+//!   table synchronizes, the other stores.
+//! - **§4.7.3 puts/gets** — [`ItemSpace::put`] publishes a datablock,
+//!   [`ItemSpace::get`] / [`ItemSpace::try_get`] consume it. Like the
+//!   paper's CnC/SWARM backends, the store is a sharded concurrent hash
+//!   map; gets are cheap lookups, puts pay insertion plus the copy-out of
+//!   the produced tile (the "serialization" a distributed shard would put
+//!   on the wire).
+//! - **CnC get-count reclamation** — every item is published with its
+//!   *statically known* consumer count ([`crate::exec::plan::Plan::
+//!   consumer_count`]: the number of successor tags along chain
+//!   dimensions, the same static knowledge the paper's generated code has
+//!   from Fig 8 interior predicates). Each `get` decrements the count; the
+//!   last get frees the datablock. Live memory is therefore bounded by the
+//!   active dependence frontier instead of the whole time-expanded array —
+//!   the property that makes streaming/tiled workloads run in bounded
+//!   space, and the reason CnC requires declared get-counts at all.
+//! - **§5.3 overheads** — every put/get/free and every byte moved is
+//!   counted ([`SpaceStats`], mirrored into [`crate::ral::Metrics`]), so
+//!   the data-plane share of runtime overhead is measurable next to the
+//!   control-plane failed-gets/steals the paper reports. The DES simulator
+//!   (`sim::des`) charges per-put/get/copy costs from the same model.
+//!
+//! [`DataPlane`] selects between the two data planes end to end:
+//! `Shared` is the seed behaviour (all data flows through one
+//! `exec::arrays::ArrayStore` buffer), `Space` routes every inter-EDT
+//! tile through the item space via [`SpaceLeafRunner`]. Both planes run
+//! under every [`crate::ral::DepMode`] and the OpenMP comparator, and both
+//! must produce bit-identical results to the sequential oracle
+//! (`tests/space_dataplane.rs`).
+
+pub mod store;
+pub mod tiles;
+
+pub use store::{ItemSpace, SpaceSnapshot, SpaceStats};
+pub use tiles::{KernelWrites, SpaceLeafRunner};
+
+/// Which data plane leaf EDTs exchange array data through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DataPlane {
+    /// One shared dense buffer per array (`exec::arrays::ArrayStore`);
+    /// the dependence structure alone serializes conflicting accesses.
+    #[default]
+    Shared,
+    /// Item-collection tuple space: producers publish their write
+    /// footprint as datablock tiles with a get-count, consumers get (and
+    /// the last get frees) them. The shared store remains the
+    /// materialization target — in shared memory the get is zero-copy,
+    /// exactly like CnC item handles — but every inter-EDT byte is
+    /// published, counted and reclaimed through the space.
+    Space,
+}
+
+impl DataPlane {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataPlane::Shared => "shared",
+            DataPlane::Space => "space",
+        }
+    }
+}
+
+/// Tuple-space key of one item: `(collection, tag)` per §4.5. The
+/// collection id is the producing compile-time EDT's node id — one item
+/// collection per EDT, the standard CnC idiom ("each step collection has
+/// a corresponding item collection it puts into").
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ItemKey {
+    pub coll: u32,
+    pub tag: Box<[i64]>,
+}
+
+impl ItemKey {
+    pub fn new(coll: u32, tag: &[i64]) -> Self {
+        ItemKey {
+            coll,
+            tag: tag.into(),
+        }
+    }
+}
+
+/// One dense rectangular region of one array, in array coordinates.
+/// `data` is the row-major copy of the region (`lo..=hi` per dimension).
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub array: usize,
+    pub lo: Box<[i64]>,
+    pub hi: Box<[i64]>,
+    pub data: Box<[f32]>,
+}
+
+impl Region {
+    /// Number of points in the region box.
+    pub fn points(&self) -> usize {
+        self.lo
+            .iter()
+            .zip(self.hi.iter())
+            .map(|(&l, &h)| (h - l + 1).max(0) as usize)
+            .product()
+    }
+}
+
+/// A datablock: the payload of one item — the producing EDT instance's
+/// write footprint, as a set of dense regions (one per dispatched kernel
+/// row × write access, so the footprint is exact for axis-aligned writes).
+#[derive(Debug, Clone, Default)]
+pub struct DataBlock {
+    pub regions: Vec<Region>,
+    bytes: usize,
+}
+
+impl DataBlock {
+    pub fn new(regions: Vec<Region>) -> Self {
+        let bytes = regions
+            .iter()
+            .map(|r| r.data.len() * std::mem::size_of::<f32>())
+            .sum();
+        DataBlock { regions, bytes }
+    }
+
+    /// Payload size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_key_identity() {
+        use std::collections::HashMap;
+        let a = ItemKey::new(2, &[1, 5]);
+        let b = ItemKey::new(2, &[1, 5]);
+        let c = ItemKey::new(3, &[1, 5]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut m = HashMap::new();
+        m.insert(a, 7);
+        assert_eq!(m.get(&b), Some(&7));
+    }
+
+    #[test]
+    fn datablock_bytes() {
+        let r = Region {
+            array: 0,
+            lo: vec![0, 0].into(),
+            hi: vec![1, 3].into(),
+            data: vec![0.0; 8].into(),
+        };
+        assert_eq!(r.points(), 8);
+        let b = DataBlock::new(vec![r]);
+        assert_eq!(b.bytes(), 32);
+    }
+
+    #[test]
+    fn plane_names() {
+        assert_eq!(DataPlane::Shared.name(), "shared");
+        assert_eq!(DataPlane::Space.name(), "space");
+        assert_eq!(DataPlane::default(), DataPlane::Shared);
+    }
+}

@@ -1,0 +1,293 @@
+//! The sharded concurrent item store with get-count reclamation.
+//!
+//! Same sharding shape as the control-plane `rt::table::TagTable` (the
+//! paper's backends put both planes in one `tbb::concurrent_hash_map`;
+//! keeping them separate here lets each plane be measured — and later
+//! sharded across simulated nodes — independently). An item lives from
+//! its `put` until its declared number of `get`s has happened; the last
+//! get removes it and returns its bytes to the live-memory budget.
+
+use super::{DataBlock, ItemKey};
+use crate::ral::Metrics;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One published item: the payload plus its remaining get-count.
+struct Slot {
+    block: Arc<DataBlock>,
+    remaining: usize,
+}
+
+/// Data-plane counters (§5.3): operation counts plus byte-level live/peak
+/// accounting. `live_bytes` is the instantaneous footprint of items that
+/// have been put but not yet fully consumed; `peak_bytes` is its
+/// high-water mark — the number a get-count-reclaiming runtime actually
+/// needs in RAM, versus the shared plane's full-array footprint.
+#[derive(Debug, Default)]
+pub struct SpaceStats {
+    pub puts: AtomicU64,
+    pub gets: AtomicU64,
+    pub frees: AtomicU64,
+    pub put_bytes: AtomicU64,
+    pub get_bytes: AtomicU64,
+    pub live_bytes: AtomicU64,
+    pub peak_bytes: AtomicU64,
+    pub live_items: AtomicU64,
+}
+
+impl SpaceStats {
+    fn add_live(&self, bytes: u64) {
+        let now = self.live_bytes.fetch_add(bytes, Ordering::AcqRel) + bytes;
+        self.peak_bytes.fetch_max(now, Ordering::AcqRel);
+    }
+
+    fn sub_live(&self, bytes: u64) {
+        self.live_bytes.fetch_sub(bytes, Ordering::AcqRel);
+        self.frees.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> SpaceSnapshot {
+        SpaceSnapshot {
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            frees: self.frees.load(Ordering::Relaxed),
+            put_bytes: self.put_bytes.load(Ordering::Relaxed),
+            get_bytes: self.get_bytes.load(Ordering::Relaxed),
+            live_bytes: self.live_bytes.load(Ordering::Relaxed),
+            peak_bytes: self.peak_bytes.load(Ordering::Relaxed),
+            live_items: self.live_items.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of [`SpaceStats`] for reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpaceSnapshot {
+    pub puts: u64,
+    pub gets: u64,
+    pub frees: u64,
+    pub put_bytes: u64,
+    pub get_bytes: u64,
+    pub live_bytes: u64,
+    pub peak_bytes: u64,
+    pub live_items: u64,
+}
+
+/// The concurrent item-collection store.
+pub struct ItemSpace {
+    shards: Vec<Mutex<HashMap<ItemKey, Slot>>>,
+    mask: usize,
+    pub stats: SpaceStats,
+}
+
+impl Default for ItemSpace {
+    fn default() -> Self {
+        Self::new(64)
+    }
+}
+
+impl ItemSpace {
+    pub fn new(n_shards: usize) -> Self {
+        let n = n_shards.next_power_of_two();
+        ItemSpace {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            mask: n - 1,
+            stats: SpaceStats::default(),
+        }
+    }
+
+    fn shard(&self, key: &ItemKey) -> &Mutex<HashMap<ItemKey, Slot>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & self.mask]
+    }
+
+    /// Publish an item with its statically known consumer count (the CnC
+    /// get-count). Items are single-assignment: a second put of the same
+    /// key is a program error. A `get_count` of zero means the item has no
+    /// consumers (boundary tile); it is accounted and reclaimed
+    /// immediately — the transient still registers in `peak_bytes`, like
+    /// the real runtime's allocation would.
+    pub fn put(&self, key: ItemKey, block: DataBlock, get_count: usize) {
+        let bytes = block.bytes() as u64;
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.stats.put_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.stats.add_live(bytes);
+        if get_count == 0 {
+            self.stats.sub_live(bytes);
+            return;
+        }
+        self.stats.live_items.fetch_add(1, Ordering::Relaxed);
+        let prev = self.shard(&key).lock().unwrap().insert(
+            key,
+            Slot {
+                block: Arc::new(block),
+                remaining: get_count,
+            },
+        );
+        assert!(
+            prev.is_none(),
+            "tuple-space double put: items are single-assignment"
+        );
+    }
+
+    /// Consuming get: decrement the item's get-count and return its
+    /// payload; the last get frees the item. Returns `None` when the key
+    /// is absent (never put, or already fully consumed).
+    pub fn try_get(&self, key: &ItemKey) -> Option<Arc<DataBlock>> {
+        let (block, freed) = {
+            let mut m = self.shard(key).lock().unwrap();
+            let slot = m.get_mut(key)?;
+            let block = slot.block.clone();
+            slot.remaining -= 1;
+            if slot.remaining == 0 {
+                m.remove(key);
+                (block, true)
+            } else {
+                (block, false)
+            }
+        };
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .get_bytes
+            .fetch_add(block.bytes() as u64, Ordering::Relaxed);
+        if freed {
+            self.stats.sub_live(block.bytes() as u64);
+            self.stats.live_items.fetch_sub(1, Ordering::Relaxed);
+        }
+        Some(block)
+    }
+
+    /// Consuming get that must succeed: in these runtimes the control
+    /// plane orders every consumer after its producer's put, so an absent
+    /// item means a put is missing or the get-count reclaimed it too
+    /// early — both bugs worth an immediate loud stop.
+    pub fn get(&self, key: &ItemKey) -> Arc<DataBlock> {
+        self.try_get(key).unwrap_or_else(|| {
+            panic!(
+                "tuple-space get of absent item {key:?}: missing put or premature \
+                 get-count reclamation"
+            )
+        })
+    }
+
+    /// Items currently live (diagnostics; 0 after a complete run).
+    pub fn live_items(&self) -> u64 {
+        self.stats.live_items.load(Ordering::Relaxed)
+    }
+
+    /// Fold this space's counters into the runtime metrics so data-plane
+    /// traffic shows up next to the control-plane §5.3 counters. Gauges
+    /// (live/peak) are stored absolute, counters are added.
+    pub fn merge_into(&self, m: &Metrics) {
+        let s = self.stats.snapshot();
+        m.space_puts.fetch_add(s.puts, Ordering::Relaxed);
+        m.space_gets.fetch_add(s.gets, Ordering::Relaxed);
+        m.space_frees.fetch_add(s.frees, Ordering::Relaxed);
+        m.space_live_bytes.store(s.live_bytes, Ordering::Relaxed);
+        m.space_peak_bytes.store(s.peak_bytes, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Region;
+
+    fn block(n: usize) -> DataBlock {
+        DataBlock::new(vec![Region {
+            array: 0,
+            lo: vec![0].into(),
+            hi: vec![n as i64 - 1].into(),
+            data: vec![1.0; n].into(),
+        }])
+    }
+
+    #[test]
+    fn last_get_frees() {
+        let s = ItemSpace::default();
+        let k = ItemKey::new(0, &[3]);
+        s.put(k.clone(), block(4), 2);
+        assert_eq!(s.live_items(), 1);
+        assert_eq!(s.stats.snapshot().live_bytes, 16);
+        assert!(s.try_get(&k).is_some());
+        assert_eq!(s.live_items(), 1, "one consumer left");
+        assert!(s.try_get(&k).is_some());
+        assert_eq!(s.live_items(), 0, "last get reclaims");
+        assert!(s.try_get(&k).is_none(), "item is gone after last get");
+        let snap = s.stats.snapshot();
+        assert_eq!(snap.puts, 1);
+        assert_eq!(snap.gets, 2);
+        assert_eq!(snap.frees, 1);
+        assert_eq!(snap.live_bytes, 0);
+        assert_eq!(snap.peak_bytes, 16);
+    }
+
+    #[test]
+    fn zero_count_is_transient() {
+        let s = ItemSpace::default();
+        s.put(ItemKey::new(1, &[0]), block(8), 0);
+        let snap = s.stats.snapshot();
+        assert_eq!(snap.puts, 1);
+        assert_eq!(snap.frees, 1);
+        assert_eq!(snap.live_bytes, 0);
+        assert_eq!(snap.peak_bytes, 32, "transient counted at peak");
+        assert_eq!(s.live_items(), 0);
+    }
+
+    #[test]
+    fn peak_tracks_concurrent_live_set() {
+        let s = ItemSpace::default();
+        s.put(ItemKey::new(0, &[0]), block(4), 1);
+        s.put(ItemKey::new(0, &[1]), block(4), 1);
+        assert_eq!(s.stats.snapshot().peak_bytes, 32);
+        let _ = s.get(&ItemKey::new(0, &[0]));
+        s.put(ItemKey::new(0, &[2]), block(4), 1);
+        // live never exceeded 2 items after the first free
+        assert_eq!(s.stats.snapshot().peak_bytes, 32);
+        assert_eq!(s.stats.snapshot().live_bytes, 32);
+    }
+
+    #[test]
+    fn try_get_miss_returns_none() {
+        let s = ItemSpace::default();
+        assert!(s.try_get(&ItemKey::new(9, &[1, 2])).is_none());
+        assert_eq!(s.stats.snapshot().gets, 0, "misses are not counted gets");
+    }
+
+    #[test]
+    #[should_panic(expected = "single-assignment")]
+    fn double_put_panics() {
+        let s = ItemSpace::default();
+        s.put(ItemKey::new(0, &[0]), block(1), 1);
+        s.put(ItemKey::new(0, &[0]), block(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "absent item")]
+    fn get_after_reclamation_panics() {
+        let s = ItemSpace::default();
+        let k = ItemKey::new(0, &[0]);
+        s.put(k.clone(), block(1), 1);
+        let _ = s.get(&k);
+        let _ = s.get(&k);
+    }
+
+    #[test]
+    fn merge_into_metrics() {
+        let s = ItemSpace::default();
+        let k = ItemKey::new(0, &[0]);
+        s.put(k.clone(), block(2), 1);
+        let _ = s.get(&k);
+        let m = Metrics::default();
+        s.merge_into(&m);
+        let snap = m.snapshot();
+        assert_eq!(snap.space_puts, 1);
+        assert_eq!(snap.space_gets, 1);
+        assert_eq!(snap.space_frees, 1);
+        assert_eq!(snap.space_live_bytes, 0);
+        assert_eq!(snap.space_peak_bytes, 8);
+    }
+}

@@ -84,6 +84,16 @@ impl Instance {
         st.init_deterministic(0xDEADBEEF);
         Arc::new(st)
     }
+
+    /// Total bytes of the shared data plane's dense `f32` arrays — the
+    /// footprint the tuple space's get-count reclamation is measured
+    /// against.
+    pub fn shared_footprint_bytes(&self) -> u64 {
+        self.shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>() as u64 * std::mem::size_of::<f32>() as u64)
+            .sum()
+    }
 }
 
 /// A named workload builder.

@@ -1,0 +1,179 @@
+//! Integration: the item-collection tuple-space data plane
+//! (`DataPlane::Space`) is semantically transparent — every benchmark of
+//! the evaluation suite, under every runtime backend (all CnC dependence
+//! modes, SWARM, OCR, the OpenMP comparator), produces bit-identical
+//! arrays to the sequential oracle when all inter-EDT tiles are routed
+//! through the space with get-count reclamation. On top of the shared
+//! suite's correctness statement this also checks the space's lifecycle
+//! invariants: every published datablock is freed by its last consumer
+//! (puts == frees, zero live bytes after the run), and for a multi-
+//! timestep Jacobi stencil the peak live bytes stay strictly below the
+//! shared plane's full time-expanded array footprint.
+
+use std::sync::Arc;
+use tale3::exec::ArrayStore;
+use tale3::ral::DepMode;
+use tale3::rt::{self, Pool, RuntimeKind};
+use tale3::space::DataPlane;
+use tale3::workloads::{by_name, Instance, Size};
+
+fn oracle_arrays(inst: &Instance) -> Arc<ArrayStore> {
+    let arrays = inst.arrays();
+    tale3::exec::run_seq(&inst.prog, &inst.params, &arrays, &*inst.kernels);
+    arrays
+}
+
+fn check_space_plane(name: &str, threads: usize) {
+    let w = by_name(name).unwrap_or_else(|| panic!("unknown {name}"));
+    let inst = (w.build)(Size::Tiny);
+    let oracle = oracle_arrays(&inst);
+    let plan = inst.plan().expect("plan");
+    let pool = Pool::new(threads);
+    for kind in RuntimeKind::all() {
+        let arrays = inst.arrays();
+        let r = rt::run_with_plane(
+            kind,
+            DataPlane::Space,
+            &plan,
+            &inst.prog,
+            &arrays,
+            &inst.kernels,
+            &pool,
+            inst.total_flops,
+        )
+        .unwrap_or_else(|e| panic!("{name} under {} (space): {e}", kind.name()));
+        let diff = oracle.max_abs_diff(&arrays);
+        assert_eq!(
+            diff,
+            0.0,
+            "{name} under {} over the space plane ({threads} threads): max |Δ| = {diff}",
+            kind.name()
+        );
+        assert!(
+            r.metrics.space_puts > 0,
+            "{name} under {}: no datablocks flowed through the space",
+            kind.name()
+        );
+        assert_eq!(
+            r.metrics.space_puts, r.metrics.space_frees,
+            "{name} under {}: get-count reclamation leaked datablocks",
+            kind.name()
+        );
+        assert_eq!(
+            r.metrics.space_live_bytes,
+            0,
+            "{name} under {}: live bytes after a complete run",
+            kind.name()
+        );
+    }
+}
+
+macro_rules! suite {
+    ($($test:ident => $name:expr),+ $(,)?) => {
+        $(
+            #[test]
+            fn $test() {
+                check_space_plane($name, 3);
+            }
+        )+
+    };
+}
+
+suite! {
+    div_3d_1 => "DIV-3D-1",
+    fdtd_2d => "FDTD-2D",
+    gs_2d_5p => "GS-2D-5P",
+    gs_2d_9p => "GS-2D-9P",
+    gs_3d_27p => "GS-3D-27P",
+    gs_3d_7p => "GS-3D-7P",
+    jac_2d_copy => "JAC-2D-COPY",
+    jac_2d_5p => "JAC-2D-5P",
+    jac_2d_9p => "JAC-2D-9P",
+    jac_3d_27p => "JAC-3D-27P",
+    jac_3d_1 => "JAC-3D-1",
+    jac_3d_7p => "JAC-3D-7P",
+    lud => "LUD",
+    matmult => "MATMULT",
+    p_matmult => "P-MATMULT",
+    poisson => "POISSON",
+    rtm_3d => "RTM-3D",
+    sor => "SOR",
+    strsm => "STRSM",
+    trisolv => "TRISOLV",
+    heat_3d_diamond => "HEAT-3D-DIAMOND",
+}
+
+/// Single-threaded execution must be just as transparent (and exercises
+/// the strictly-sequential consume-then-publish order).
+#[test]
+fn stencil_and_linalg_single_thread() {
+    for name in ["JAC-2D-5P", "GS-2D-5P", "MATMULT", "LUD"] {
+        check_space_plane(name, 1);
+    }
+}
+
+/// Get-count reclamation bounds live memory: on a multi-timestep Jacobi
+/// stencil (T = 32 at `Small`, tiled into 16 time steps of tiles), the
+/// peak live datablock bytes must sit strictly below the shared plane's
+/// full time-expanded footprint, and the space must drain completely.
+#[test]
+fn get_count_reclamation_bounds_live_memory() {
+    let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Small);
+    assert!(inst.params[0] >= 8, "needs >= 8 timesteps");
+    let mut opts = inst.map_opts.clone();
+    opts.tile_sizes = vec![2, 32, 64];
+    let plan = inst.plan_with(&opts).expect("plan");
+    let arrays = inst.arrays();
+    let shared_bytes = inst.shared_footprint_bytes();
+    let pool = Pool::new(2);
+    let r = rt::run_with_plane(
+        RuntimeKind::Edt(DepMode::CncDep),
+        DataPlane::Space,
+        &plan,
+        &inst.prog,
+        &arrays,
+        &inst.kernels,
+        &pool,
+        inst.total_flops,
+    )
+    .expect("run");
+    assert!(r.metrics.space_peak_bytes > 0);
+    assert!(
+        r.metrics.space_peak_bytes < shared_bytes,
+        "peak live {} must stay below the shared footprint {}",
+        r.metrics.space_peak_bytes,
+        shared_bytes
+    );
+    assert_eq!(r.metrics.space_live_bytes, 0, "space must drain");
+    assert_eq!(r.metrics.space_puts, r.metrics.space_frees);
+}
+
+/// The two planes agree bit-for-bit with each other on a hierarchical
+/// (two-level) mapping as well.
+#[test]
+fn two_level_hierarchy_space_plane() {
+    for name in ["JAC-3D-7P", "GS-3D-7P"] {
+        let w = by_name(name).unwrap();
+        let inst = (w.build)(Size::Tiny);
+        let oracle = oracle_arrays(&inst);
+        let mut opts = inst.map_opts.clone();
+        opts.level_split = vec![2];
+        let plan = inst.plan_with(&opts).unwrap();
+        let pool = Pool::new(3);
+        for mode in [DepMode::CncDep, DepMode::Ocr, DepMode::Swarm] {
+            let arrays = inst.arrays();
+            rt::run_with_plane(
+                RuntimeKind::Edt(mode),
+                DataPlane::Space,
+                &plan,
+                &inst.prog,
+                &arrays,
+                &inst.kernels,
+                &pool,
+                inst.total_flops,
+            )
+            .unwrap_or_else(|e| panic!("{name} 2-level space {}: {e}", mode.name()));
+            assert_eq!(oracle.max_abs_diff(&arrays), 0.0, "{name} 2-level {mode:?}");
+        }
+    }
+}
