@@ -12,12 +12,16 @@
 //!
 //! Part 3 (simulated testbed): the 1..32-thread sweep with the DES
 //! per-put/get/copy data-plane costs, shared vs space.
+//!
+//! Part 4 (sharded space): the item space partitioned over 4 simulated
+//! nodes under each placement policy — remote-get share and per-node
+//! peak bytes, versus the single-node baseline.
 
 use tale3::bench::{fmt_bytes, instance, run_metrics_line, sim_report_plane, Table, THREADS};
 use tale3::ral::DepMode;
 use tale3::rt::{self, Pool, RuntimeKind};
-use tale3::sim::{CostModel, Machine};
-use tale3::space::DataPlane;
+use tale3::sim::{simulate_sharded, CostModel, Machine};
+use tale3::space::{DataPlane, Placement, Topology};
 use tale3::workloads::Size;
 
 fn main() {
@@ -129,4 +133,50 @@ fn main() {
         }
     }
     table.print();
+
+    println!("\n=== sharded item space (4 nodes, CNC-DEP @ 8 threads) ===");
+    for name in ["JAC-2D-5P", "JAC-3D-7P"] {
+        let inst = instance(name, Size::Small);
+        let plan = inst.plan().expect("plan");
+        let single = simulate_sharded(
+            &plan,
+            DepMode::CncDep,
+            DataPlane::Space,
+            &Topology::single(),
+            8,
+            &machine,
+            &costs,
+            true,
+            inst.total_flops,
+        );
+        println!(
+            "{name:<12} single node: sim {:.4}s  peak {}",
+            single.seconds,
+            fmt_bytes(single.space_peak_bytes)
+        );
+        for p in Placement::all() {
+            let topo = Topology::for_plan(&plan, 4, p);
+            let r = simulate_sharded(
+                &plan,
+                DepMode::CncDep,
+                DataPlane::Space,
+                &topo,
+                8,
+                &machine,
+                &costs,
+                true,
+                inst.total_flops,
+            );
+            let peaks: Vec<String> = r.node_peak_bytes.iter().map(|&b| fmt_bytes(b)).collect();
+            println!(
+                "{name:<12} {:<7} sim {:.4}s  remote {:>5.1}% of gets ({})  \
+                 node peaks [{}]",
+                p.name(),
+                r.seconds,
+                r.space_remote_gets as f64 / r.space_gets.max(1) as f64 * 100.0,
+                fmt_bytes(r.space_remote_bytes),
+                peaks.join(", ")
+            );
+        }
+    }
 }

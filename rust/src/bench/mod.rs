@@ -3,7 +3,11 @@
 //!
 //! All scaling cells (threads > 2) come from the testbed simulator
 //! (DESIGN.md §5); `cargo bench` regenerates every table and figure of the
-//! paper's evaluation section in the paper's own row format.
+//! paper's evaluation section in the paper's own row format. The [`report`]
+//! submodule renders the same simulated numbers as a deterministic JSON
+//! document (`tale3 bench-report`) for the CI perf-trajectory artifact.
+
+pub mod report;
 
 use crate::edt::MapOptions;
 use crate::ral::DepMode;

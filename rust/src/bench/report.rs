@@ -1,0 +1,182 @@
+//! Machine-readable perf report: one JSON document per bench run, so the
+//! perf trajectory is diffable across PRs (CI uploads it as the
+//! `bench-report` artifact on every pull request).
+//!
+//! **Determinism contract:** the report contains *virtual time only* —
+//! every number comes from the deterministic testbed simulator, and no
+//! wall-clock timestamp, hostname, path, or other host-dependent field is
+//! ever emitted. Two runs of the same binary produce byte-identical JSON
+//! (`tests/placement.rs` asserts this), so CI artifacts diff cleanly
+//! run-to-run and PR-to-PR.
+//!
+//! Per workload the report carries the single-node space-plane baseline
+//! and the sharded topology next to each other: sim time, §5.3 work
+//! ratio, task/steal counts, space put/get/free traffic with its
+//! local/remote split, global peak datablock bytes, and the per-node
+//! peaks — the numbers the distributed scaling story is told in.
+
+use crate::ral::DepMode;
+use crate::sim::{simulate_sharded, CostModel, Machine, SimReport};
+use crate::space::{DataPlane, Placement, Topology};
+use crate::workloads::{registry, Size};
+
+/// What the report measures. `quick` shrinks every workload to `Tiny`
+/// (the CI smoke configuration); the full report runs at `Small`.
+#[derive(Debug, Clone)]
+pub struct ReportConfig {
+    pub quick: bool,
+    pub nodes: usize,
+    pub placement: Placement,
+    pub threads: usize,
+    pub mode: DepMode,
+}
+
+impl Default for ReportConfig {
+    fn default() -> Self {
+        ReportConfig {
+            quick: false,
+            nodes: 4,
+            placement: Placement::Hash,
+            threads: 8,
+            mode: DepMode::CncDep,
+        }
+    }
+}
+
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn jlist(vals: &[u64]) -> String {
+    let items: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// One simulated cell as a JSON object (virtual-time fields only).
+fn cell(r: &SimReport) -> String {
+    format!(
+        "{{\"sim_seconds\":{},\"gflops\":{},\"work_ratio\":{},\"tasks\":{},\
+         \"steals\":{},\"failed_gets\":{},\"space_puts\":{},\"space_gets\":{},\
+         \"space_frees\":{},\"local_gets\":{},\"remote_gets\":{},\
+         \"remote_bytes\":{},\"peak_bytes\":{},\"node_peak_bytes\":{}}}",
+        r.seconds,
+        r.gflops,
+        r.work_ratio,
+        r.tasks,
+        r.steals,
+        r.failed_gets,
+        r.space_puts,
+        r.space_gets,
+        r.space_frees,
+        r.space_local_gets,
+        r.space_remote_gets,
+        r.space_remote_bytes,
+        r.space_peak_bytes,
+        jlist(&r.node_peak_bytes),
+    )
+}
+
+/// Render the full perf report. Workloads appear in registry order; key
+/// order is fixed; floats print their shortest round-trip form — the
+/// output is a pure function of (binary, config).
+pub fn perf_report_json(cfg: &ReportConfig) -> String {
+    let size = if cfg.quick { Size::Tiny } else { Size::Small };
+    let machine = Machine::default();
+    let costs = CostModel::default();
+    let mut workloads = Vec::new();
+    for w in registry() {
+        let inst = (w.build)(size);
+        let plan = inst.plan().expect("plan");
+        let single_topo = Topology::single();
+        let single = simulate_sharded(
+            &plan,
+            cfg.mode,
+            DataPlane::Space,
+            &single_topo,
+            cfg.threads,
+            &machine,
+            &costs,
+            true,
+            inst.total_flops,
+        );
+        let topo = Topology::for_plan(&plan, cfg.nodes, cfg.placement);
+        let sharded = simulate_sharded(
+            &plan,
+            cfg.mode,
+            DataPlane::Space,
+            &topo,
+            cfg.threads,
+            &machine,
+            &costs,
+            true,
+            inst.total_flops,
+        );
+        workloads.push(format!(
+            "{{\"name\":{},\"single\":{},\"sharded\":{}}}",
+            jstr(w.name),
+            cell(&single),
+            cell(&sharded),
+        ));
+    }
+    format!(
+        "{{\"schema\":\"tale3-bench-report/v1\",\"quick\":{},\"size\":{},\
+         \"mode\":{},\"plane\":\"space\",\"threads\":{},\"nodes\":{},\
+         \"placement\":{},\"workloads\":[{}]}}\n",
+        cfg.quick,
+        jstr(if cfg.quick { "tiny" } else { "small" }),
+        jstr(cfg.mode.name()),
+        cfg.threads,
+        cfg.nodes,
+        jstr(cfg.placement.name()),
+        workloads.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_string_escaping() {
+        assert_eq!(jstr("plain"), "\"plain\"");
+        assert_eq!(jstr("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(jstr("x\ny"), "\"x\\u000ay\"");
+        assert_eq!(jlist(&[1, 2, 3]), "[1,2,3]");
+        assert_eq!(jlist(&[]), "[]");
+    }
+
+    #[test]
+    fn report_cell_is_valid_shape() {
+        let r = SimReport {
+            seconds: 0.5,
+            gflops: 2.0,
+            tasks: 10,
+            steals: 1,
+            failed_gets: 0,
+            work_ratio: 0.9,
+            space_puts: 4,
+            space_gets: 3,
+            space_frees: 4,
+            space_peak_bytes: 128,
+            space_local_gets: 2,
+            space_remote_gets: 1,
+            space_remote_bytes: 64,
+            node_peak_bytes: vec![64, 64],
+        };
+        let c = cell(&r);
+        assert!(c.starts_with('{') && c.ends_with('}'));
+        assert!(c.contains("\"remote_bytes\":64"));
+        assert!(c.contains("\"node_peak_bytes\":[64,64]"));
+    }
+}

@@ -37,4 +37,4 @@ pub use exec::Plan;
 pub use ir::{Program, ProgramBuilder};
 pub use ral::DepMode;
 pub use rt::{Pool, RuntimeKind};
-pub use space::DataPlane;
+pub use space::{DataPlane, Placement, Topology};

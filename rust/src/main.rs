@@ -1,24 +1,27 @@
 //! `tale3` — command-line launcher for the EDT pipeline.
 //!
 //! Subcommands:
-//!   list                              list benchmark workloads
-//!   explain <wl> [--size S]           dump deps, schedule and EDT tree
-//!   run <wl> [opts]                   execute on the real runtimes
-//!   sim <wl> [opts]                   simulate on the modeled testbed
-//!   table <1|2|3|4|5|fig2>            pointers to the bench targets
+//!   `list`                              list benchmark workloads
+//!   `explain <wl> [--size S]`           dump deps, schedule and EDT tree
+//!   `run <wl> [opts]`                   execute on the real runtimes
+//!   `sim <wl> [opts]`                   simulate on the modeled testbed
+//!   `bench-report [opts]`               deterministic perf JSON (CI artifact)
+//!   `table <1|2|3|4|5|fig2>`            pointers to the bench targets
 //!
-//! Common options: --size tiny|small|paper, --runtime cnc-block|cnc-async|
-//! cnc-dep|swarm|ocr|omp|all, --threads N, --tiles a,b,c, --levels k,
-//! --gran N, --no-verify.
+//! Common options: `--size tiny|small|paper`, `--runtime cnc-block|cnc-async|
+//! cnc-dep|swarm|ocr|omp|all`, `--threads N`, `--tiles a,b,c`, `--levels k`,
+//! `--gran N`, `--no-verify`, `--plane shared|space`, `--nodes N`,
+//! `--placement block|cyclic|hash`.
 //! (Argument parsing is hand-rolled: clap is not in the offline crate set.)
 
 use tale3::analysis::build_gdg;
 use tale3::bench::fmt_bytes;
+use tale3::bench::report::{perf_report_json, ReportConfig};
 use tale3::edt::stats::characterize;
 use tale3::ral::DepMode;
 use tale3::rt::{self, Pool, RuntimeKind};
-use tale3::sim::{simulate_omp, simulate_with_plane, CostModel, Machine};
-use tale3::space::DataPlane;
+use tale3::sim::{simulate_omp, simulate_sharded, CostModel, Machine};
+use tale3::space::{DataPlane, Placement, Topology};
 use tale3::workloads::{by_name, registry, Size};
 
 struct Args {
@@ -69,6 +72,17 @@ impl Args {
             "space" => DataPlane::Space,
             _ => DataPlane::Shared,
         }
+    }
+    fn nodes(&self, default: usize) -> usize {
+        self.flag("nodes")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+            .max(1)
+    }
+    fn placement(&self) -> Placement {
+        self.flag("placement")
+            .and_then(Placement::parse)
+            .unwrap_or_default()
     }
     fn runtimes(&self) -> Vec<RuntimeKind> {
         match self.flag("runtime").unwrap_or("all") {
@@ -151,16 +165,18 @@ fn main() -> anyhow::Result<()> {
             };
             let pool = Pool::new(args.threads());
             let plane = args.plane();
+            let topo = Topology::for_plan(&plan, args.nodes(1), args.placement());
             println!(
-                "{:<10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>9} {:>8} {:>8} {:>9} {:>7}",
+                "{:<10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>9} {:>8} {:>8} {:>8} {:>9} {:>7}",
                 "runtime", "seconds", "Gflop/s", "tasks", "steals", "f.gets", "workratio",
-                "s.puts", "s.gets", "s.peak", "verify"
+                "s.puts", "s.gets", "s.rget", "s.peak", "verify"
             );
             for kind in args.runtimes() {
                 let arrays = inst.arrays();
-                let r = rt::run_with_plane(
+                let r = rt::run_with_plane_on(
                     kind,
                     plane,
+                    &topo,
                     &plan,
                     &inst.prog,
                     &arrays,
@@ -179,7 +195,7 @@ fn main() -> anyhow::Result<()> {
                     None => "-",
                 };
                 println!(
-                    "{:<10} {:>9.4} {:>9.3} {:>8} {:>8} {:>8} {:>8.1}% {:>8} {:>8} {:>9} {:>7}",
+                    "{:<10} {:>9.4} {:>9.3} {:>8} {:>8} {:>8} {:>8.1}% {:>8} {:>8} {:>8} {:>9} {:>7}",
                     r.runtime,
                     r.seconds,
                     r.gflops,
@@ -189,9 +205,20 @@ fn main() -> anyhow::Result<()> {
                     r.metrics.work_ratio() * 100.0,
                     r.metrics.space_puts,
                     r.metrics.space_gets,
+                    r.metrics.space_remote_gets,
                     fmt_bytes(r.metrics.space_peak_bytes),
                     ver
                 );
+                if plane == DataPlane::Space && !topo.is_single() {
+                    let peaks: Vec<String> =
+                        r.node_peak_bytes.iter().map(|&b| fmt_bytes(b)).collect();
+                    println!(
+                        "  └ {} nodes ({}): node peaks [{}]",
+                        topo.nodes(),
+                        topo.placement().name(),
+                        peaks.join(", ")
+                    );
+                }
             }
         }
         "sim" => {
@@ -206,10 +233,18 @@ fn main() -> anyhow::Result<()> {
                 .map(|t| t.split(',').filter_map(|x| x.parse().ok()).collect())
                 .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]);
             let plane = args.plane();
+            let topo = Topology::for_plan(&plan, args.nodes(1), args.placement());
             println!(
                 "simulated testbed: 2-socket x 8-core x 2-SMT (Gflop/s, {} data plane on EDT rows)",
                 plane.name()
             );
+            if !topo.is_single() {
+                println!(
+                    "sharded item space: {} nodes, {} placement",
+                    topo.nodes(),
+                    topo.placement().name()
+                );
+            }
             if plane == DataPlane::Space && args.runtimes().contains(&RuntimeKind::Omp) {
                 println!("note: the omp comparator has no tuple-space port; its row is always the shared plane");
             }
@@ -220,20 +255,24 @@ fn main() -> anyhow::Result<()> {
             println!();
             for kind in args.runtimes() {
                 print!("{:<10}", kind.name());
+                let mut last = None;
                 for &t in &threads {
                     let g = match kind {
                         RuntimeKind::Edt(m) => {
-                            simulate_with_plane(
+                            let r = simulate_sharded(
                                 &plan,
                                 m,
                                 plane,
+                                &topo,
                                 t,
                                 &machine,
                                 &costs,
                                 true,
                                 inst.total_flops,
-                            )
-                            .gflops
+                            );
+                            let g = r.gflops;
+                            last = Some(r);
+                            g
                         }
                         RuntimeKind::Omp => {
                             inst.total_flops / simulate_omp(&plan, t, &machine, &costs, true) / 1e9
@@ -242,6 +281,41 @@ fn main() -> anyhow::Result<()> {
                     print!("{g:>8.2}");
                 }
                 println!();
+                if plane == DataPlane::Space && !topo.is_single() {
+                    if let Some(r) = last {
+                        let peaks: Vec<String> =
+                            r.node_peak_bytes.iter().map(|&b| fmt_bytes(b)).collect();
+                        println!(
+                            "  └ @{} th.: gets {} local / {} remote, remote {}, node peaks [{}]",
+                            threads.last().unwrap_or(&0),
+                            r.space_local_gets,
+                            r.space_remote_gets,
+                            fmt_bytes(r.space_remote_bytes),
+                            peaks.join(", ")
+                        );
+                    }
+                }
+            }
+        }
+        "bench-report" => {
+            let cfg = ReportConfig {
+                quick: args.has("quick"),
+                nodes: args.nodes(4),
+                placement: args.placement(),
+                // single-cell report: take the first entry of an N[,N..] list
+                threads: args
+                    .flag("threads")
+                    .and_then(|s| s.split(',').next()?.trim().parse().ok())
+                    .unwrap_or(8),
+                ..Default::default()
+            };
+            let json = perf_report_json(&cfg);
+            match args.flag("out") {
+                Some(path) => {
+                    std::fs::write(path, &json)?;
+                    eprintln!("wrote {path}");
+                }
+                None => print!("{json}"),
             }
         }
         "table" => {
@@ -257,10 +331,14 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             println!("tale3 — A Tale of Three Runtimes (reproduction)");
-            println!("usage: tale3 <list|explain|run|sim|table> [workload] [--size tiny|small|paper]");
+            println!("usage: tale3 <list|explain|run|sim|bench-report|table> [workload]");
+            println!("       [--size tiny|small|paper]");
             println!("       [--runtime cnc-block|cnc-async|cnc-dep|swarm|ocr|omp|all]");
             println!("       [--threads N[,N..]] [--tiles a,b,c] [--levels k] [--gran n] [--no-verify]");
             println!("       [--plane shared|space]   (data plane: shared buffer vs tuple space)");
+            println!("       [--nodes N] [--placement block|cyclic|hash]   (sharded item space)");
+            println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P]");
+            println!("                    (deterministic perf JSON: virtual time only)");
         }
     }
     Ok(())

@@ -203,6 +203,11 @@ pub struct Metrics {
     pub space_frees: AtomicU64,
     pub space_live_bytes: AtomicU64,
     pub space_peak_bytes: AtomicU64,
+    /// Sharded-space traffic: gets served by a node other than the
+    /// consumer's, and the datablock bytes they moved over links. Zero on
+    /// a single-node topology (and under the shared plane).
+    pub space_remote_gets: AtomicU64,
+    pub space_remote_bytes: AtomicU64,
 }
 
 impl Metrics {
@@ -226,6 +231,8 @@ impl Metrics {
             space_frees: self.space_frees.load(Ordering::Relaxed),
             space_live_bytes: self.space_live_bytes.load(Ordering::Relaxed),
             space_peak_bytes: self.space_peak_bytes.load(Ordering::Relaxed),
+            space_remote_gets: self.space_remote_gets.load(Ordering::Relaxed),
+            space_remote_bytes: self.space_remote_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -251,6 +258,8 @@ pub struct MetricsSnapshot {
     pub space_frees: u64,
     pub space_live_bytes: u64,
     pub space_peak_bytes: u64,
+    pub space_remote_gets: u64,
+    pub space_remote_bytes: u64,
 }
 
 impl MetricsSnapshot {

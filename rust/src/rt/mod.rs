@@ -15,7 +15,7 @@ use crate::exec::plan::Plan;
 use crate::exec::{ArrayStore, KernelSet, LeafRunner};
 use crate::ir::Program;
 use crate::ral::{DepMode, MetricsSnapshot};
-use crate::space::{ItemSpace, SpaceLeafRunner};
+use crate::space::{ItemSpace, SpaceLeafRunner, Topology};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -57,6 +57,9 @@ pub struct RunReport {
     pub seconds: f64,
     pub gflops: f64,
     pub metrics: MetricsSnapshot,
+    /// Per-node high-water marks of live datablock bytes under a sharded
+    /// space (empty under the shared plane; one entry on a single node).
+    pub node_peak_bytes: Vec<u64>,
 }
 
 /// Per-run counter delta. Saturating: pool metrics are cumulative across
@@ -83,6 +86,8 @@ fn delta(a: MetricsSnapshot, b: MetricsSnapshot) -> MetricsSnapshot {
         space_frees: b.space_frees.saturating_sub(a.space_frees),
         space_live_bytes: b.space_live_bytes.saturating_sub(a.space_live_bytes),
         space_peak_bytes: b.space_peak_bytes.saturating_sub(a.space_peak_bytes),
+        space_remote_gets: b.space_remote_gets.saturating_sub(a.space_remote_gets),
+        space_remote_bytes: b.space_remote_bytes.saturating_sub(a.space_remote_bytes),
     }
 }
 
@@ -126,6 +131,7 @@ fn run_measured(
         seconds,
         gflops: total_flops / seconds / 1e9,
         metrics,
+        node_peak_bytes: space.map(|s| s.node_peaks()).unwrap_or_default(),
     })
 }
 
@@ -157,6 +163,38 @@ pub fn run_with_plane(
     pool: &Pool,
     total_flops: f64,
 ) -> Result<RunReport> {
+    run_with_plane_on(
+        kind,
+        plane,
+        &Topology::single(),
+        plan,
+        prog,
+        arrays,
+        kernels,
+        pool,
+        total_flops,
+    )
+}
+
+/// [`run_with_plane`] over an item space sharded across the topology's
+/// nodes: leaf EDTs and their datablocks are placed by tag
+/// (owner-computes), and gets of items owned by another node are counted
+/// as remote traffic (`Metrics::{space_remote_gets, space_remote_bytes}`)
+/// with per-node live/peak bytes in `RunReport::node_peak_bytes`. The
+/// topology only affects the `Space` plane's accounting — results remain
+/// bit-identical to the sequential oracle under every placement.
+#[allow(clippy::too_many_arguments)]
+pub fn run_with_plane_on(
+    kind: RuntimeKind,
+    plane: DataPlane,
+    topo: &Topology,
+    plan: &Arc<Plan>,
+    prog: &Program,
+    arrays: &Arc<ArrayStore>,
+    kernels: &Arc<dyn KernelSet>,
+    pool: &Pool,
+    total_flops: f64,
+) -> Result<RunReport> {
     match plane {
         DataPlane::Shared => {
             let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
@@ -166,7 +204,8 @@ pub fn run_with_plane(
             run_measured(kind, plan, &leaf, pool, total_flops, plane, None)
         }
         DataPlane::Space => {
-            let runner = SpaceLeafRunner::new(prog, arrays.clone(), kernels.clone());
+            let runner = SpaceLeafRunner::new(prog, arrays.clone(), kernels.clone())
+                .with_topology(topo.clone());
             let space = runner.space.clone();
             let leaf: Arc<dyn LeafExec> = Arc::new(runner);
             run_measured(kind, plan, &leaf, pool, total_flops, plane, Some(&space))

@@ -140,6 +140,15 @@ pub struct CostModel {
     pub space_put_ns: f64,
     pub space_get_ns: f64,
     pub space_copy_ns_per_byte: f64,
+    /// Inter-node link costs for the sharded item space: a remote get
+    /// pays one link round-trip latency plus per-byte wire time on top of
+    /// the serialization (`space_copy_ns_per_byte`) a distributed shard
+    /// charges to marshal the datablock. Defaults model a commodity
+    /// cluster interconnect (~1.5 µs latency, ~4 GB/s per-flow bandwidth).
+    /// Local gets never pay these, so a single-node topology reproduces
+    /// the unsharded plane exactly.
+    pub link_latency_ns: f64,
+    pub link_bw_ns_per_byte: f64,
 }
 
 impl Default for CostModel {
@@ -163,11 +172,21 @@ impl Default for CostModel {
             space_put_ns: 320.0,
             space_get_ns: 60.0,
             space_copy_ns_per_byte: 0.1,
+            link_latency_ns: 1500.0,
+            link_bw_ns_per_byte: 0.25,
         }
     }
 }
 
 impl CostModel {
+    /// Virtual time of moving one remote datablock of `bytes` bytes over
+    /// a link: serialize at the owner, traverse the wire, land at the
+    /// consumer.
+    pub fn remote_transfer_ns(&self, bytes: u64) -> f64 {
+        self.link_latency_ns
+            + bytes as f64 * (self.space_copy_ns_per_byte + self.link_bw_ns_per_byte)
+    }
+
     /// Mode-dependent compute-rate multiplier (SWARM SMT collapse).
     pub fn mode_rate_factor(&self, mode: Option<DepMode>, threads: usize, m: &Machine) -> f64 {
         match mode {
@@ -201,6 +220,17 @@ mod tests {
         assert!(seventeen > sixteen / 2.0);
         // unpinned is worse
         assert!(m.worker_bw(8, false) < m.worker_bw(8, true));
+    }
+
+    #[test]
+    fn remote_transfer_charges_latency_plus_per_byte() {
+        let c = CostModel::default();
+        let empty = c.remote_transfer_ns(0);
+        assert_eq!(empty, c.link_latency_ns);
+        let kb = c.remote_transfer_ns(1024);
+        assert!(kb > empty);
+        let per_byte = 1024.0 * (c.space_copy_ns_per_byte + c.link_bw_ns_per_byte);
+        assert!((kb - empty - per_byte).abs() < 1e-9);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use super::cost::{CostModel, Machine};
 use super::leaf_cost;
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::ral::{DepMode, TagKey};
+use crate::space::placement::Topology;
 use crate::space::DataPlane;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -76,12 +77,22 @@ pub struct SimReport {
     /// High-water mark of live datablock bytes under get-count
     /// reclamation — the memory a space-backed runtime actually needs.
     pub space_peak_bytes: u64,
+    /// Local/remote split of the space gets under a sharded topology
+    /// (`local + remote == space_gets`; remote is zero on one node), and
+    /// the payload bytes the remote gets moved over links.
+    pub space_local_gets: u64,
+    pub space_remote_gets: u64,
+    pub space_remote_bytes: u64,
+    /// Per-node high-water marks of live datablock bytes (one entry per
+    /// topology node; `[space_peak_bytes]` on a single node).
+    pub node_peak_bytes: Vec<u64>,
 }
 
 struct Des<'a> {
     plan: &'a Plan,
     mode: DepMode,
     plane: DataPlane,
+    topo: &'a Topology,
     threads: usize,
     machine: &'a Machine,
     costs: &'a CostModel,
@@ -90,14 +101,21 @@ struct Des<'a> {
     table: HashMap<TagKey, Entry>,
     pendings: Vec<Pending>,
     scopes: Vec<Scope>,
-    /// Space data plane: live datablocks (bytes, remaining get-count),
-    /// keyed like the producer's completion tag but in a separate map.
-    space_items: HashMap<TagKey, (u64, i64)>,
+    /// Space data plane: live datablocks (bytes, remaining get-count,
+    /// owner node), keyed like the producer's completion tag but in a
+    /// separate map.
+    space_items: HashMap<TagKey, (u64, i64, usize)>,
     space_live: u64,
     space_peak: u64,
     space_puts: u64,
     space_gets: u64,
     space_frees: u64,
+    space_local_gets: u64,
+    space_remote_gets: u64,
+    space_remote_bytes: u64,
+    /// Per-node live bytes and their high-water marks (len == topo nodes).
+    node_live: Vec<u64>,
+    node_peak: Vec<u64>,
 
     /// (available-at, task): a task spawned during execution becomes
     /// visible only when its spawner completes — stealing must not
@@ -573,20 +591,37 @@ impl<'a> Des<'a> {
     /// iteration point — including its copy-out. Leaves are processed in
     /// nondecreasing virtual start time, so tracking the live set in
     /// processing order gives a faithful high-water mark.
+    ///
+    /// Under a multi-node topology the leaf runs on the node its tag maps
+    /// to (owner-computes: its put is always local), and each get is
+    /// classified against the antecedent item's owner — a remote get
+    /// additionally pays serialization plus the link hop
+    /// (`CostModel::remote_transfer_ns`), and its bytes count as
+    /// cross-node traffic. Items are accounted against their owner's
+    /// per-node live/peak bytes.
     fn space_leaf(&mut self, node: u32, coords: &[i64], ants: &[Vec<i64>], pts: f64) -> f64 {
         let c = self.costs;
+        let here = self.topo.node_of(coords);
         let mut dur = 0.0;
         for a in ants {
             let k = Self::done_key(node, a);
             dur += c.space_get_ns;
             self.space_gets += 1;
             match self.space_items.get_mut(&k) {
-                Some((bytes, remaining)) => {
+                Some((bytes, remaining, owner)) => {
+                    let (b, o) = (*bytes, *owner);
+                    if o == here {
+                        self.space_local_gets += 1;
+                    } else {
+                        self.space_remote_gets += 1;
+                        self.space_remote_bytes += b;
+                        dur += c.remote_transfer_ns(b);
+                    }
                     *remaining -= 1;
                     if *remaining == 0 {
-                        let b = *bytes;
                         self.space_items.remove(&k);
                         self.space_live -= b;
+                        self.node_live[o] -= b;
                         self.space_frees += 1;
                     }
                 }
@@ -603,13 +638,18 @@ impl<'a> Des<'a> {
         self.space_puts += 1;
         self.space_live += tile_bytes;
         self.space_peak = self.space_peak.max(self.space_live);
+        self.node_live[here] += tile_bytes;
+        self.node_peak[here] = self.node_peak[here].max(self.node_live[here]);
         let consumers = self.plan.consumer_count(node, coords);
         if consumers == 0 {
             self.space_live -= tile_bytes;
+            self.node_live[here] -= tile_bytes;
             self.space_frees += 1;
         } else {
-            self.space_items
-                .insert(Self::done_key(node, coords), (tile_bytes, consumers as i64));
+            self.space_items.insert(
+                Self::done_key(node, coords),
+                (tile_bytes, consumers as i64, here),
+            );
         }
         dur
     }
@@ -640,7 +680,7 @@ pub fn simulate(
 
 /// Simulate under an explicit data plane: `Space` additionally charges
 /// per-put/get/copy costs and tracks get-count reclamation of datablock
-/// bytes in virtual time.
+/// bytes in virtual time. Single-node topology (the PR 1 space plane).
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_with_plane(
     plan: &Plan,
@@ -652,10 +692,43 @@ pub fn simulate_with_plane(
     numa_pinned: bool,
     total_flops: f64,
 ) -> SimReport {
+    let topo = Topology::single();
+    simulate_sharded(
+        plan,
+        mode,
+        plane,
+        &topo,
+        threads,
+        machine,
+        costs,
+        numa_pinned,
+        total_flops,
+    )
+}
+
+/// Simulate under a data plane sharded across the topology's simulated
+/// nodes: every leaf EDT and every datablock is placed by
+/// `topo.node_of(tag)` (owner-computes), remote gets are charged
+/// serialization + link time, and live/peak datablock bytes are tracked
+/// per node. With `Topology::single()` this is byte-for-byte
+/// [`simulate_with_plane`] — sharding is a pure refinement.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_sharded(
+    plan: &Plan,
+    mode: DepMode,
+    plane: DataPlane,
+    topo: &Topology,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+    total_flops: f64,
+) -> SimReport {
     let mut d = Des {
         plan,
         mode,
         plane,
+        topo,
         threads,
         machine,
         costs,
@@ -669,6 +742,11 @@ pub fn simulate_with_plane(
         space_puts: 0,
         space_gets: 0,
         space_frees: 0,
+        space_local_gets: 0,
+        space_remote_gets: 0,
+        space_remote_bytes: 0,
+        node_live: vec![0; topo.nodes()],
+        node_peak: vec![0; topo.nodes()],
         active_leaf_ends: BinaryHeap::new(),
         deques: (0..threads).map(|_| VecDeque::new()).collect(),
         heap: BinaryHeap::new(),
@@ -733,6 +811,10 @@ pub fn simulate_with_plane(
         space_gets: d.space_gets,
         space_frees: d.space_frees,
         space_peak_bytes: d.space_peak,
+        space_local_gets: d.space_local_gets,
+        space_remote_gets: d.space_remote_gets,
+        space_remote_bytes: d.space_remote_bytes,
+        node_peak_bytes: d.node_peak,
     }
 }
 
@@ -818,6 +900,48 @@ mod tests {
         );
         // the data plane costs time; scheduling is deterministic
         assert!(spaced.seconds >= shared.seconds * 0.999);
+    }
+
+    #[test]
+    fn sharded_space_splits_gets_and_charges_link_time() {
+        use crate::space::placement::{Placement, Topology};
+        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Small);
+        let plan = inst.plan().unwrap();
+        let single = simulate_with_plane(
+            &plan,
+            DepMode::CncDep,
+            DataPlane::Space,
+            4,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+            inst.total_flops,
+        );
+        assert_eq!(single.space_remote_gets, 0);
+        assert_eq!(single.space_local_gets, single.space_gets);
+        assert_eq!(single.node_peak_bytes, vec![single.space_peak_bytes]);
+        let topo = Topology::for_plan(&plan, 4, Placement::Cyclic);
+        let sharded = simulate_sharded(
+            &plan,
+            DepMode::CncDep,
+            DataPlane::Space,
+            &topo,
+            4,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+            inst.total_flops,
+        );
+        assert_eq!(
+            sharded.space_local_gets + sharded.space_remote_gets,
+            sharded.space_gets
+        );
+        assert!(sharded.space_remote_gets > 0, "cyclic chains must hop");
+        assert!(sharded.space_remote_bytes > 0);
+        assert_eq!(sharded.node_peak_bytes.len(), 4);
+        assert_eq!(sharded.space_puts, sharded.space_frees, "leak");
+        // remote transfers cost virtual time the single-node run never pays
+        assert!(sharded.seconds > single.seconds);
     }
 
     #[test]

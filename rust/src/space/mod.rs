@@ -23,10 +23,11 @@
 //!   the produced tile (the "serialization" a distributed shard would put
 //!   on the wire).
 //! - **CnC get-count reclamation** — every item is published with its
-//!   *statically known* consumer count ([`crate::exec::plan::Plan::
-//!   consumer_count`]: the number of successor tags along chain
-//!   dimensions, the same static knowledge the paper's generated code has
-//!   from Fig 8 interior predicates). Each `get` decrements the count; the
+//!   *statically known* consumer count
+//!   ([`crate::exec::plan::Plan::consumer_count`]: the number of successor
+//!   tags along chain dimensions, the same static knowledge the paper's
+//!   generated code has from Fig 8 interior predicates). Each `get`
+//!   decrements the count; the
 //!   last get frees the datablock. Live memory is therefore bounded by the
 //!   active dependence frontier instead of the whole time-expanded array —
 //!   the property that makes streaming/tiled workloads run in bounded
@@ -44,10 +45,22 @@
 //! under every [`crate::ral::DepMode`] and the OpenMP comparator, and both
 //! must produce bit-identical results to the sequential oracle
 //! (`tests/space_dataplane.rs`).
+//!
+//! The space can additionally be **sharded across `N` simulated nodes**
+//! ([`placement`]): a [`Topology`] maps every item key — and the leaf EDT
+//! that puts it — to a node (owner-computes), so each get is classified
+//! local or remote. Remote gets pay serialization plus a link hop in the
+//! DES (`sim::des`), and both the real [`ItemSpace`] and the simulator
+//! track per-node live/peak bytes and remote-traffic counters — the
+//! distributed-memory scaling story the OCR/CnC-distrib lineage points
+//! at. `Topology::single()` is the degenerate one-node case and is
+//! byte-for-byte identical to the unsharded space.
 
+pub mod placement;
 pub mod store;
 pub mod tiles;
 
+pub use placement::{Placement, Topology};
 pub use store::{ItemSpace, SpaceSnapshot, SpaceStats};
 pub use tiles::{KernelWrites, SpaceLeafRunner};
 

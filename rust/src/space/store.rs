@@ -7,6 +7,7 @@
 //! its `put` until its declared number of `get`s has happened; the last
 //! get removes it and returns its bytes to the live-memory budget.
 
+use super::placement::Topology;
 use super::{DataBlock, ItemKey};
 use crate::ral::Metrics;
 use std::collections::HashMap;
@@ -14,10 +15,12 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// One published item: the payload plus its remaining get-count.
+/// One published item: the payload plus its remaining get-count and the
+/// node that owns it (where the producing EDT ran — owner-computes).
 struct Slot {
     block: Arc<DataBlock>,
     remaining: usize,
+    owner: usize,
 }
 
 /// Data-plane counters (§5.3): operation counts plus byte-level live/peak
@@ -35,6 +38,11 @@ pub struct SpaceStats {
     pub live_bytes: AtomicU64,
     pub peak_bytes: AtomicU64,
     pub live_items: AtomicU64,
+    /// Gets whose consumer node differed from the item's owner node, and
+    /// the payload bytes those gets moved over a link. Zero on a
+    /// single-node topology.
+    pub remote_gets: AtomicU64,
+    pub remote_bytes: AtomicU64,
 }
 
 impl SpaceStats {
@@ -58,6 +66,8 @@ impl SpaceStats {
             live_bytes: self.live_bytes.load(Ordering::Relaxed),
             peak_bytes: self.peak_bytes.load(Ordering::Relaxed),
             live_items: self.live_items.load(Ordering::Relaxed),
+            remote_gets: self.remote_gets.load(Ordering::Relaxed),
+            remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -73,12 +83,20 @@ pub struct SpaceSnapshot {
     pub live_bytes: u64,
     pub peak_bytes: u64,
     pub live_items: u64,
+    pub remote_gets: u64,
+    pub remote_bytes: u64,
 }
 
-/// The concurrent item-collection store.
+/// The concurrent item-collection store, optionally sharded across the
+/// nodes of a [`Topology`]. Items are owned by the node their producer's
+/// tag maps to; per-node live/peak bytes are tracked so the memory each
+/// simulated node actually needs is measurable.
 pub struct ItemSpace {
     shards: Vec<Mutex<HashMap<ItemKey, Slot>>>,
     mask: usize,
+    topo: Topology,
+    node_live: Vec<AtomicU64>,
+    node_peak: Vec<AtomicU64>,
     pub stats: SpaceStats,
 }
 
@@ -90,12 +108,42 @@ impl Default for ItemSpace {
 
 impl ItemSpace {
     pub fn new(n_shards: usize) -> Self {
+        Self::with_topology(n_shards, Topology::single())
+    }
+
+    /// A store sharded across the topology's nodes. With
+    /// `Topology::single()` this is exactly the unsharded store.
+    pub fn with_topology(n_shards: usize, topo: Topology) -> Self {
         let n = n_shards.next_power_of_two();
         ItemSpace {
             shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
             mask: n - 1,
+            node_live: (0..topo.nodes()).map(|_| AtomicU64::new(0)).collect(),
+            node_peak: (0..topo.nodes()).map(|_| AtomicU64::new(0)).collect(),
+            topo,
             stats: SpaceStats::default(),
         }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Per-node high-water marks of live datablock bytes.
+    pub fn node_peaks(&self) -> Vec<u64> {
+        self.node_peak
+            .iter()
+            .map(|p| p.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    fn add_node_live(&self, node: usize, bytes: u64) {
+        let now = self.node_live[node].fetch_add(bytes, Ordering::AcqRel) + bytes;
+        self.node_peak[node].fetch_max(now, Ordering::AcqRel);
+    }
+
+    fn sub_node_live(&self, node: usize, bytes: u64) {
+        self.node_live[node].fetch_sub(bytes, Ordering::AcqRel);
     }
 
     fn shard(&self, key: &ItemKey) -> &Mutex<HashMap<ItemKey, Slot>> {
@@ -112,11 +160,14 @@ impl ItemSpace {
     /// the real runtime's allocation would.
     pub fn put(&self, key: ItemKey, block: DataBlock, get_count: usize) {
         let bytes = block.bytes() as u64;
+        let owner = self.topo.node_of(&key.tag);
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         self.stats.put_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.stats.add_live(bytes);
+        self.add_node_live(owner, bytes);
         if get_count == 0 {
             self.stats.sub_live(bytes);
+            self.sub_node_live(owner, bytes);
             return;
         }
         self.stats.live_items.fetch_add(1, Ordering::Relaxed);
@@ -125,6 +176,7 @@ impl ItemSpace {
             Slot {
                 block: Arc::new(block),
                 remaining: get_count,
+                owner,
             },
         );
         assert!(
@@ -135,29 +187,47 @@ impl ItemSpace {
 
     /// Consuming get: decrement the item's get-count and return its
     /// payload; the last get frees the item. Returns `None` when the key
-    /// is absent (never put, or already fully consumed).
-    pub fn try_get(&self, key: &ItemKey) -> Option<Arc<DataBlock>> {
-        let (block, freed) = {
+    /// is absent (never put, or already fully consumed). `from` is the
+    /// consumer's node, for local/remote classification; `None` counts
+    /// the get as local (the single-address-space view).
+    fn try_get_inner(&self, key: &ItemKey, from: Option<usize>) -> Option<Arc<DataBlock>> {
+        let (block, freed, owner) = {
             let mut m = self.shard(key).lock().unwrap();
             let slot = m.get_mut(key)?;
             let block = slot.block.clone();
+            let owner = slot.owner;
             slot.remaining -= 1;
             if slot.remaining == 0 {
                 m.remove(key);
-                (block, true)
+                (block, true, owner)
             } else {
-                (block, false)
+                (block, false, owner)
             }
         };
+        let bytes = block.bytes() as u64;
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
-        self.stats
-            .get_bytes
-            .fetch_add(block.bytes() as u64, Ordering::Relaxed);
+        self.stats.get_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if from.is_some_and(|f| f != owner) {
+            self.stats.remote_gets.fetch_add(1, Ordering::Relaxed);
+            self.stats.remote_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
         if freed {
-            self.stats.sub_live(block.bytes() as u64);
+            self.stats.sub_live(bytes);
+            self.sub_node_live(owner, bytes);
             self.stats.live_items.fetch_sub(1, Ordering::Relaxed);
         }
         Some(block)
+    }
+
+    pub fn try_get(&self, key: &ItemKey) -> Option<Arc<DataBlock>> {
+        self.try_get_inner(key, None)
+    }
+
+    /// Consuming get from a known consumer node: a get whose consumer is
+    /// not the item's owner is counted as remote traffic (the DES charges
+    /// it serialization + link time from the same classification).
+    pub fn try_get_from(&self, key: &ItemKey, from: usize) -> Option<Arc<DataBlock>> {
+        self.try_get_inner(key, Some(from))
     }
 
     /// Consuming get that must succeed: in these runtimes the control
@@ -166,6 +236,16 @@ impl ItemSpace {
     /// early — both bugs worth an immediate loud stop.
     pub fn get(&self, key: &ItemKey) -> Arc<DataBlock> {
         self.try_get(key).unwrap_or_else(|| {
+            panic!(
+                "tuple-space get of absent item {key:?}: missing put or premature \
+                 get-count reclamation"
+            )
+        })
+    }
+
+    /// [`ItemSpace::get`] with local/remote classification.
+    pub fn get_from(&self, key: &ItemKey, from: usize) -> Arc<DataBlock> {
+        self.try_get_from(key, from).unwrap_or_else(|| {
             panic!(
                 "tuple-space get of absent item {key:?}: missing put or premature \
                  get-count reclamation"
@@ -186,6 +266,8 @@ impl ItemSpace {
         m.space_puts.fetch_add(s.puts, Ordering::Relaxed);
         m.space_gets.fetch_add(s.gets, Ordering::Relaxed);
         m.space_frees.fetch_add(s.frees, Ordering::Relaxed);
+        m.space_remote_gets.fetch_add(s.remote_gets, Ordering::Relaxed);
+        m.space_remote_bytes.fetch_add(s.remote_bytes, Ordering::Relaxed);
         m.space_live_bytes.store(s.live_bytes, Ordering::Relaxed);
         m.space_peak_bytes.store(s.peak_bytes, Ordering::Relaxed);
     }
@@ -273,6 +355,41 @@ mod tests {
         s.put(k.clone(), block(1), 1);
         let _ = s.get(&k);
         let _ = s.get(&k);
+    }
+
+    #[test]
+    fn sharded_store_classifies_remote_gets_and_tracks_node_peaks() {
+        use crate::space::placement::Placement;
+        let topo = Topology::new(2, Placement::Cyclic, 0, 8);
+        let s = ItemSpace::with_topology(8, topo);
+        // tag [0] owned by node 0, tag [1] by node 1
+        s.put(ItemKey::new(0, &[0]), block(4), 1);
+        s.put(ItemKey::new(0, &[1]), block(4), 1);
+        assert_eq!(s.node_peaks(), vec![16, 16]);
+        // node 1 consumes node 0's item: remote
+        assert!(s.try_get_from(&ItemKey::new(0, &[0]), 1).is_some());
+        // node 1 consumes its own item: local
+        assert!(s.try_get_from(&ItemKey::new(0, &[1]), 1).is_some());
+        let snap = s.stats.snapshot();
+        assert_eq!(snap.gets, 2);
+        assert_eq!(snap.remote_gets, 1);
+        assert_eq!(snap.remote_bytes, 16);
+        assert_eq!(snap.live_bytes, 0);
+        assert_eq!(s.node_peaks(), vec![16, 16], "peaks persist after frees");
+        let m = Metrics::default();
+        s.merge_into(&m);
+        assert_eq!(m.snapshot().space_remote_gets, 1);
+        assert_eq!(m.snapshot().space_remote_bytes, 16);
+    }
+
+    #[test]
+    fn single_topology_never_remote() {
+        let s = ItemSpace::default();
+        let k = ItemKey::new(0, &[5]);
+        s.put(k.clone(), block(2), 1);
+        assert!(s.try_get_from(&k, 0).is_some());
+        assert_eq!(s.stats.snapshot().remote_gets, 0);
+        assert_eq!(s.node_peaks(), vec![8]);
     }
 
     #[test]

@@ -202,6 +202,14 @@ impl SpaceLeafRunner {
         self
     }
 
+    /// Shard the backing item space across the topology's nodes: each
+    /// leaf EDT executes on (and puts to) the node its tag maps to, and
+    /// gets of items owned elsewhere are counted as remote traffic.
+    pub fn with_topology(mut self, topo: crate::space::placement::Topology) -> Self {
+        self.space = Arc::new(ItemSpace::with_topology(64, topo));
+        self
+    }
+
     fn verify_block(&self, key: &ItemKey, block: &DataBlock) {
         for r in &block.regions {
             let a = self.arrays.a(r.array);
@@ -227,10 +235,13 @@ impl SpaceLeafRunner {
 impl LeafExec for SpaceLeafRunner {
     fn run_leaf(&self, plan: &Plan, node_id: u32, coords: &[i64]) {
         // 1. consume input tiles: one get per chain antecedent; the last
-        //    consumer's get frees the producer's datablock
+        //    consumer's get frees the producer's datablock. This EDT runs
+        //    on the node its tag maps to (owner-computes), so gets of
+        //    items owned elsewhere count as remote traffic.
+        let here = self.space.topology().node_of(coords);
         for ant in plan.antecedents(node_id, coords) {
             let key = ItemKey::new(node_id, &ant);
-            let block = self.space.get(&key);
+            let block = self.space.get_from(&key, here);
             if self.verify {
                 self.verify_block(&key, &block);
             }

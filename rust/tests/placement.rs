@@ -1,0 +1,245 @@
+//! Sharded item space: placement determinism, oracle transparency under
+//! every policy, single-node parity (sharding is a pure refinement), and
+//! the distributed-memory accounting story (remote traffic, per-node
+//! peaks, hash-beats-block on frontier concentration).
+
+use std::sync::Arc;
+use tale3::exec::ArrayStore;
+use tale3::ral::DepMode;
+use tale3::rt::{self, Pool, RuntimeKind};
+use tale3::sim::{simulate_sharded, simulate_with_plane, CostModel, Machine, SimReport};
+use tale3::space::{DataPlane, Placement, Topology};
+use tale3::workloads::{by_name, registry, Instance, Size};
+
+fn oracle_arrays(inst: &Instance) -> Arc<ArrayStore> {
+    let arrays = inst.arrays();
+    tale3::exec::run_seq(&inst.prog, &inst.params, &arrays, &*inst.kernels);
+    arrays
+}
+
+/// Placement is a pure function of `(key, nodes)`: two topologies built
+/// from the same plan map every tag identically across policies, and two
+/// sharded simulations — which exercise `node_of` on every *leaf* tag the
+/// runtime actually dispatches, including nested prefixes — produce the
+/// same shard-dependent counters (same plan ⇒ same shard map).
+#[test]
+fn shard_map_is_deterministic_across_builds() {
+    let inst = (by_name("JAC-3D-7P").unwrap().build)(Size::Tiny);
+    let plan = inst.plan().unwrap();
+    for p in Placement::all() {
+        let a = Topology::for_plan(&plan, 4, p);
+        let b = Topology::for_plan(&plan, 4, p);
+        assert_eq!(a, b, "{p:?}");
+        let mut count = 0u64;
+        plan.for_each_tag(plan.root, &[], &mut |c| {
+            let n = a.node_of(c);
+            assert!(n < 4, "{p:?}: node {n} out of range for tag {c:?}");
+            assert_eq!(n, b.node_of(c), "{p:?}: same plan must shard the same");
+            count += 1;
+        });
+        assert!(count > 0);
+        let r1 = sim_sharded(&inst, &plan, &a);
+        let r2 = sim_sharded(&inst, &plan, &b);
+        assert_eq!(r1.space_local_gets, r2.space_local_gets, "{p:?}");
+        assert_eq!(r1.space_remote_gets, r2.space_remote_gets, "{p:?}");
+        assert_eq!(r1.space_remote_bytes, r2.space_remote_bytes, "{p:?}");
+        assert_eq!(r1.node_peak_bytes, r2.node_peak_bytes, "{p:?}");
+        assert_eq!(r1.seconds.to_bits(), r2.seconds.to_bits(), "{p:?}");
+    }
+}
+
+/// All 21 workloads stay bit-identical to the sequential oracle under a
+/// 4-node sharded space for every placement policy, with `puts == frees`
+/// and zero live bytes on drain — placement changes accounting, never
+/// results.
+#[test]
+fn all_workloads_oracle_identical_under_four_nodes() {
+    let pool = Pool::new(3);
+    for w in registry() {
+        let inst = (w.build)(Size::Tiny);
+        let oracle = oracle_arrays(&inst);
+        let plan = inst.plan().expect("plan");
+        for p in Placement::all() {
+            let topo = Topology::for_plan(&plan, 4, p);
+            let arrays = inst.arrays();
+            let r = rt::run_with_plane_on(
+                RuntimeKind::Edt(DepMode::CncDep),
+                DataPlane::Space,
+                &topo,
+                &plan,
+                &inst.prog,
+                &arrays,
+                &inst.kernels,
+                &pool,
+                inst.total_flops,
+            )
+            .unwrap_or_else(|e| panic!("{} under {p:?}: {e}", w.name));
+            assert_eq!(
+                oracle.max_abs_diff(&arrays),
+                0.0,
+                "{} diverged from oracle under {p:?}",
+                w.name
+            );
+            assert!(r.metrics.space_puts > 0, "{} {p:?}", w.name);
+            assert_eq!(
+                r.metrics.space_puts, r.metrics.space_frees,
+                "{} {p:?}: datablocks leaked",
+                w.name
+            );
+            assert_eq!(r.metrics.space_live_bytes, 0, "{} {p:?}", w.name);
+            assert_eq!(r.node_peak_bytes.len(), 4, "{} {p:?}", w.name);
+        }
+    }
+}
+
+fn sim_sharded(inst: &Instance, plan: &tale3::Plan, topo: &Topology) -> SimReport {
+    simulate_sharded(
+        plan,
+        DepMode::CncDep,
+        DataPlane::Space,
+        topo,
+        8,
+        &Machine::default(),
+        &CostModel::default(),
+        true,
+        inst.total_flops,
+    )
+}
+
+/// `--nodes 1` is a pure refinement: the sharded simulator reports
+/// byte-for-byte the same sim time and metrics as the PR 1 space plane,
+/// under every placement policy (one node leaves no placement choice).
+#[test]
+fn single_node_sharding_is_byte_identical_to_space_plane() {
+    for name in ["JAC-2D-5P", "MATMULT"] {
+        let inst = (by_name(name).unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let base = simulate_with_plane(
+            &plan,
+            DepMode::CncDep,
+            DataPlane::Space,
+            8,
+            &Machine::default(),
+            &CostModel::default(),
+            true,
+            inst.total_flops,
+        );
+        for p in Placement::all() {
+            let topo = Topology::for_plan(&plan, 1, p);
+            let r = sim_sharded(&inst, &plan, &topo);
+            assert_eq!(r.seconds.to_bits(), base.seconds.to_bits(), "{name} {p:?}");
+            assert_eq!(r.tasks, base.tasks, "{name} {p:?}");
+            assert_eq!(r.steals, base.steals, "{name} {p:?}");
+            assert_eq!(r.space_puts, base.space_puts, "{name} {p:?}");
+            assert_eq!(r.space_gets, base.space_gets, "{name} {p:?}");
+            assert_eq!(r.space_frees, base.space_frees, "{name} {p:?}");
+            assert_eq!(r.space_peak_bytes, base.space_peak_bytes, "{name} {p:?}");
+            assert_eq!(r.space_remote_gets, 0, "{name} {p:?}");
+            assert_eq!(r.node_peak_bytes, vec![r.space_peak_bytes], "{name} {p:?}");
+        }
+    }
+}
+
+/// The distributed scaling story on a ≥8-timestep Jacobi at 4 nodes:
+/// every placement produces remote gets; frontier-spreading placements
+/// (cyclic, hash) keep every node's peak below the single-node peak; and
+/// hash placement — the finest scatter — yields a lower max-node peak
+/// than block placement, which concentrates the active frontier.
+#[test]
+fn jacobi_sharding_remote_traffic_and_node_peaks() {
+    let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Small);
+    assert!(inst.params[0] >= 8, "needs >= 8 timesteps");
+    let mut opts = inst.map_opts.clone();
+    opts.tile_sizes = vec![2, 32, 64]; // 16 time tiles: room for block seams
+    let plan = inst.plan_with(&opts).expect("plan");
+    let single_peak = {
+        let topo = Topology::for_plan(&plan, 1, Placement::Block);
+        sim_sharded(&inst, &plan, &topo).space_peak_bytes
+    };
+    assert!(single_peak > 0);
+    let mut max_peak = std::collections::HashMap::new();
+    for p in Placement::all() {
+        let topo = Topology::for_plan(&plan, 4, p);
+        let r = sim_sharded(&inst, &plan, &topo);
+        assert!(r.space_remote_gets > 0, "{p:?}: no cross-node traffic");
+        assert!(r.space_remote_bytes > 0, "{p:?}");
+        assert_eq!(
+            r.space_local_gets + r.space_remote_gets,
+            r.space_gets,
+            "{p:?}: local/remote split must partition the gets"
+        );
+        assert_eq!(r.space_puts, r.space_frees, "{p:?}: leak");
+        assert_eq!(r.node_peak_bytes.len(), 4, "{p:?}");
+        max_peak.insert(p.name(), *r.node_peak_bytes.iter().max().unwrap());
+    }
+    for p in [Placement::Cyclic, Placement::Hash] {
+        assert!(
+            max_peak[p.name()] < single_peak,
+            "{p:?}: per-node peak {} must sit below the single-node peak {}",
+            max_peak[p.name()],
+            single_peak
+        );
+    }
+    assert!(
+        max_peak["hash"] < max_peak["block"],
+        "hash placement must spread the frontier: hash max-node peak {} \
+         vs block {}",
+        max_peak["hash"],
+        max_peak["block"]
+    );
+}
+
+/// Real-runtime sharding mirrors the DES classification: remote gets are
+/// counted in `Metrics` and per-node peaks are reported.
+#[test]
+fn real_runtime_counts_remote_gets() {
+    let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+    let oracle = oracle_arrays(&inst);
+    let plan = inst.plan().expect("plan");
+    let pool = Pool::new(2);
+    let topo = Topology::for_plan(&plan, 4, Placement::Cyclic);
+    let arrays = inst.arrays();
+    let r = rt::run_with_plane_on(
+        RuntimeKind::Edt(DepMode::CncDep),
+        DataPlane::Space,
+        &topo,
+        &plan,
+        &inst.prog,
+        &arrays,
+        &inst.kernels,
+        &pool,
+        inst.total_flops,
+    )
+    .expect("run");
+    assert_eq!(oracle.max_abs_diff(&arrays), 0.0);
+    assert!(r.metrics.space_remote_gets > 0);
+    assert!(r.metrics.space_remote_bytes > 0);
+    assert!(r.metrics.space_remote_gets <= r.metrics.space_gets);
+    assert_eq!(r.node_peak_bytes.len(), 4);
+    assert!(r.node_peak_bytes.iter().any(|&b| b > 0));
+}
+
+/// The bench JSON report is deterministic — two renders are
+/// byte-identical — and contains virtual-time fields only (no wall-clock
+/// timestamps, hostnames, or paths).
+#[test]
+fn bench_report_json_is_deterministic_and_virtual_only() {
+    use tale3::bench::report::{perf_report_json, ReportConfig};
+    let cfg = ReportConfig {
+        quick: true,
+        ..Default::default()
+    };
+    let a = perf_report_json(&cfg);
+    let b = perf_report_json(&cfg);
+    assert_eq!(a, b, "two consecutive quick runs must produce identical JSON");
+    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v1\""));
+    assert!(a.contains("\"JAC-2D-5P\""));
+    assert!(a.contains("\"remote_gets\""));
+    assert!(a.contains("\"node_peak_bytes\""));
+    for host_dependent in ["wall", "timestamp", "hostname", "date", "epoch", "/root", "/home"] {
+        assert!(
+            !a.contains(host_dependent),
+            "report must not contain host-dependent field `{host_dependent}`"
+        );
+    }
+}
