@@ -1,4 +1,7 @@
 //! Data-plane comparison: shared buffer vs item-collection tuple space.
+//! Every launch goes through `rt::launch(ExecConfig)` — this bench is
+//! also the smoke test that the one launch surface covers the whole
+//! {runtime, plane, topology, steal} matrix.
 //!
 //! Part 1 (real execution on this container): every runtime kind (five
 //! dependence modes + the OpenMP comparator) over both data planes, on
@@ -14,18 +17,25 @@
 //! per-put/get/copy data-plane costs, shared vs space.
 //!
 //! Part 4 (sharded space): the item space partitioned over 4 simulated
-//! nodes under each placement policy — remote-get share and per-node
-//! peak bytes, versus the single-node baseline.
+//! nodes under each placement policy — remote-get share, per-node peak
+//! bytes, and the work-stealing comparison (`StealPolicy::Never` vs
+//! `RemoteReady`) versus the single-node baseline.
 
 use tale3::bench::{fmt_bytes, instance, run_metrics_line, sim_report_plane, Table, THREADS};
 use tale3::ral::DepMode;
-use tale3::rt::{self, Pool, RuntimeKind};
-use tale3::sim::{simulate_sharded, CostModel, Machine};
-use tale3::space::{DataPlane, Placement, Topology};
-use tale3::workloads::Size;
+use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
+use tale3::sim::SimReport;
+use tale3::space::{DataPlane, Placement};
+use tale3::workloads::{Instance, Size};
+
+fn sim_launch(inst: &Instance, plan: &std::sync::Arc<tale3::Plan>, cfg: &ExecConfig) -> SimReport {
+    rt::launch(plan, &LeafSpec::cost_only(inst.total_flops), cfg)
+        .expect("DES launch")
+        .sim
+        .expect("sim report")
+}
 
 fn main() {
-    let pool = Pool::new(2);
     let names = ["JAC-2D-5P", "JAC-3D-7P", "MATMULT", "LUD"];
 
     for name in names {
@@ -39,18 +49,10 @@ fn main() {
         let plan = inst.plan().expect("plan");
         for plane in [DataPlane::Shared, DataPlane::Space] {
             for kind in RuntimeKind::all() {
+                let cfg = ExecConfig::new().runtime(kind).plane(plane).threads(2);
                 let arrays = inst.arrays();
-                let r = rt::run_with_plane(
-                    kind,
-                    plane,
-                    &plan,
-                    &inst.prog,
-                    &arrays,
-                    &inst.kernels,
-                    &pool,
-                    inst.total_flops,
-                )
-                .expect("run");
+                let leaf = inst.leaf_spec(&arrays);
+                let r = rt::launch(&plan, &leaf, &cfg).expect("run");
                 println!("{}", run_metrics_line(&r));
             }
         }
@@ -66,17 +68,12 @@ fn main() {
         let shared_bytes = inst.shared_footprint_bytes();
         let plan = inst.plan().expect("plan");
         let arrays = inst.arrays();
-        let r = rt::run_with_plane(
-            RuntimeKind::Edt(DepMode::CncDep),
-            DataPlane::Space,
-            &plan,
-            &inst.prog,
-            &arrays,
-            &inst.kernels,
-            &pool,
-            inst.total_flops,
-        )
-        .expect("run");
+        let cfg = ExecConfig::new()
+            .runtime(RuntimeKind::Edt(DepMode::CncDep))
+            .plane(DataPlane::Space)
+            .threads(2);
+        let leaf = inst.leaf_spec(&arrays);
+        let r = rt::launch(&plan, &leaf, &cfg).expect("run");
         let peak = r.metrics.space_peak_bytes;
         println!(
             "{name:<12} peak live {:>10}  vs shared {:>10}  ({:.1}% — {})",
@@ -93,8 +90,8 @@ fn main() {
         assert_eq!(r.metrics.space_live_bytes, 0, "{name}: datablocks leaked");
     }
 
-    let machine = Machine::default();
-    let costs = CostModel::default();
+    let machine = tale3::sim::Machine::default();
+    let costs = tale3::sim::CostModel::default();
     let mut table = Table::threads_cols(
         "Simulated data-plane overhead (Gflop/s; space peak MiB in last row)",
         &["Benchmark", "Plane"],
@@ -135,48 +132,39 @@ fn main() {
     table.print();
 
     println!("\n=== sharded item space (4 nodes, CNC-DEP @ 8 threads) ===");
-    for name in ["JAC-2D-5P", "JAC-3D-7P"] {
+    for name in ["JAC-2D-5P", "JAC-3D-7P", "LUD"] {
         let inst = instance(name, Size::Small);
         let plan = inst.plan().expect("plan");
-        let single = simulate_sharded(
-            &plan,
-            DepMode::CncDep,
-            DataPlane::Space,
-            &Topology::single(),
-            8,
-            &machine,
-            &costs,
-            true,
-            inst.total_flops,
-        );
+        let base = ExecConfig::new()
+            .backend(BackendKind::Des)
+            .runtime(RuntimeKind::Edt(DepMode::CncDep))
+            .plane(DataPlane::Space)
+            .threads(8);
+        let single = sim_launch(&inst, &plan, &base.clone().nodes(1));
         println!(
             "{name:<12} single node: sim {:.4}s  peak {}",
             single.seconds,
             fmt_bytes(single.space_peak_bytes)
         );
         for p in Placement::all() {
-            let topo = Topology::for_plan(&plan, 4, p);
-            let r = simulate_sharded(
-                &plan,
-                DepMode::CncDep,
-                DataPlane::Space,
-                &topo,
-                8,
-                &machine,
-                &costs,
-                true,
-                inst.total_flops,
-            );
-            let peaks: Vec<String> = r.node_peak_bytes.iter().map(|&b| fmt_bytes(b)).collect();
-            println!(
-                "{name:<12} {:<7} sim {:.4}s  remote {:>5.1}% of gets ({})  \
-                 node peaks [{}]",
-                p.name(),
-                r.seconds,
-                r.space_remote_gets as f64 / r.space_gets.max(1) as f64 * 100.0,
-                fmt_bytes(r.space_remote_bytes),
-                peaks.join(", ")
-            );
+            for steal in StealPolicy::all() {
+                let cfg = base.clone().nodes(4).placement(p).steal(steal);
+                let r = sim_launch(&inst, &plan, &cfg);
+                let peaks: Vec<String> =
+                    r.node_peak_bytes.iter().map(|&b| fmt_bytes(b)).collect();
+                println!(
+                    "{name:<12} {:<7} steal={:<12} sim {:.4}s  remote {:>5.1}% of gets ({})  \
+                     stolen {:>4} EDTs ({})  node peaks [{}]",
+                    p.name(),
+                    steal.name(),
+                    r.seconds,
+                    r.space_remote_gets as f64 / r.space_gets.max(1) as f64 * 100.0,
+                    fmt_bytes(r.space_remote_bytes),
+                    r.stolen_edts,
+                    fmt_bytes(r.steal_bytes),
+                    peaks.join(", ")
+                );
+            }
         }
     }
 }

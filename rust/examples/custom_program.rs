@@ -13,11 +13,11 @@
 use std::sync::Arc;
 use tale3::analysis::build_gdg;
 use tale3::edt::{map_program, MapOptions};
-use tale3::exec::{ArrayStore, GenericKernel, GenericOp, GenericRows, LeafRunner, Plan};
+use tale3::exec::{ArrayStore, GenericKernel, GenericOp, GenericRows, KernelSet, Plan};
 use tale3::expr::{Affine, Expr};
 use tale3::ir::{Access, ProgramBuilder, StmtSpec};
 use tale3::ral::DepMode;
-use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::rt::{self, ExecConfig, LeafSpec, RuntimeKind};
 
 fn main() -> anyhow::Result<()> {
     let (t_val, n_val) = (16i64, 256i64);
@@ -62,16 +62,13 @@ fn main() -> anyhow::Result<()> {
     let shapes = vec![vec![(t_val + 1) as usize, n_val as usize]];
     let arrays = Arc::new(ArrayStore::new(&shapes));
     arrays.init_deterministic(7);
-    let kernels = Arc::new(GenericRows {
+    let kernels: Arc<dyn KernelSet> = Arc::new(GenericRows {
         kernel: GenericKernel::from_program(&prog, GenericOp::ScaledMean { scale: 1.0 }),
         params: params.clone(),
     });
-    let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
-        arrays: arrays.clone(),
-        kernels: kernels.clone(),
-    });
-    let pool = Pool::new(2);
-    let report = rt::run(RuntimeKind::Edt(DepMode::Ocr), &plan, &leaf, &pool, 0.0)?;
+    let cfg = ExecConfig::new().runtime(RuntimeKind::Edt(DepMode::Ocr)).threads(2);
+    let leaf = LeafSpec::kernels(&prog, arrays.clone(), kernels.clone(), 0.0);
+    let report = rt::launch(&plan, &leaf, &cfg)?;
     println!(
         "executed {} worker EDTs + {} prescribers in {:.4}s",
         report.metrics.workers, report.metrics.prescribers, report.seconds

@@ -16,7 +16,7 @@ use std::path::Path;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use tale3::ral::DepMode;
-use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::rt::{self, ExecConfig, LeafExec, LeafSpec, RuntimeKind};
 use tale3::runtime::{Jac3dPjrtLeaf, MatmultPjrtLeaf, PjrtRuntime};
 use tale3::workloads::{by_name, Size};
 
@@ -29,7 +29,6 @@ fn main() -> anyhow::Result<()> {
         n
     });
 
-    let pool = Pool::new(2);
     let modes = [DepMode::CncAsync, DepMode::Swarm, DepMode::Ocr];
 
     // --- workload 1: MATMULT through matmul_tile_16x16x64 ---
@@ -47,7 +46,8 @@ fn main() -> anyhow::Result<()> {
                 inst.kernels.clone(),
             ));
             let leaf: Arc<dyn LeafExec> = leaf_impl.clone();
-            let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, inst.total_flops)?;
+            let cfg = ExecConfig::new().runtime(RuntimeKind::Edt(mode)).threads(2);
+            let r = rt::launch(&plan, &LeafSpec::exec(leaf, inst.total_flops), &cfg)?;
             let diff = oracle.max_rel_diff(&arrays);
             assert!(diff < 1e-4, "{mode:?}: rel diff {diff}");
             println!(
@@ -81,7 +81,8 @@ fn main() -> anyhow::Result<()> {
                 inst.kernels.clone(),
             ));
             let leaf: Arc<dyn LeafExec> = leaf_impl.clone();
-            let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, inst.total_flops)?;
+            let cfg = ExecConfig::new().runtime(RuntimeKind::Edt(mode)).threads(2);
+            let r = rt::launch(&plan, &LeafSpec::exec(leaf, inst.total_flops), &cfg)?;
             let diff = oracle.max_rel_diff(&arrays);
             assert!(diff < 1e-4, "{mode:?}: rel diff {diff}");
             println!(

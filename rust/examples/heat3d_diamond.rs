@@ -7,13 +7,11 @@
 //!
 //!     cargo run --release --example heat3d_diamond
 
-use std::sync::Arc;
 use tale3::analysis::build_gdg;
 use tale3::bench::FIG2_PROCS;
-use tale3::exec::LeafRunner;
 use tale3::ral::DepMode;
-use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
-use tale3::sim::{simulate, simulate_omp, CostModel, Machine};
+use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind};
+use tale3::sim::Machine;
 use tale3::workloads::{by_name, Size};
 
 fn main() -> anyhow::Result<()> {
@@ -30,14 +28,10 @@ fn main() -> anyhow::Result<()> {
     let plan = inst.plan()?;
     println!("\nreal execution on this container:");
     for threads in [1usize, 2] {
-        let pool = Pool::new(threads);
         for kind in [RuntimeKind::Edt(DepMode::CncBlock), RuntimeKind::Omp] {
+            let cfg = ExecConfig::new().runtime(kind).threads(threads);
             let arrays = inst.arrays();
-            let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
-                arrays: arrays.clone(),
-                kernels: inst.kernels.clone(),
-            });
-            let r = rt::run(kind, &plan, &leaf, &pool, inst.total_flops)?;
+            let r = rt::launch(&plan, &inst.leaf_spec(&arrays), &cfg)?;
             assert_eq!(oracle.max_abs_diff(&arrays), 0.0, "verification failed");
             println!(
                 "  {:<10} x{threads}: {:>8.4} s  {:>6.3} Gflop/s  (verified)",
@@ -48,9 +42,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // Fig 2 on the simulated testbed
-    let machine = Machine::e5_2620();
-    let costs = CostModel::default();
+    // Fig 2 on the simulated testbed: same launch surface, DES backend,
+    // with the Fig 2 machine substituted into the config
     println!("\nFig 2 (seconds, simulated 2x6-core E5-2620; lower is better):");
     print!("{:<12}", "Version");
     for p in FIG2_PROCS {
@@ -59,13 +52,20 @@ fn main() -> anyhow::Result<()> {
     println!();
     for (label, pinned) in [("OpenMP", false), ("CnC", false), ("OpenMP-N", true), ("CnC-N", true)] {
         print!("{label:<12}");
+        let kind = if label.starts_with("OpenMP") {
+            RuntimeKind::Omp
+        } else {
+            RuntimeKind::Edt(DepMode::CncBlock)
+        };
         for &p in &FIG2_PROCS {
-            let secs = if label.starts_with("OpenMP") {
-                simulate_omp(&plan, p, &machine, &costs, pinned)
-            } else {
-                simulate(&plan, DepMode::CncBlock, p, &machine, &costs, pinned, inst.total_flops).seconds
-            };
-            print!("{secs:>8.3}");
+            let cfg = ExecConfig::new()
+                .backend(BackendKind::Des)
+                .runtime(kind)
+                .threads(p)
+                .machine(Machine::e5_2620())
+                .numa_pinned(pinned);
+            let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg)?;
+            print!("{:>8.3}", r.seconds);
         }
         println!();
     }

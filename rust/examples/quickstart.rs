@@ -3,10 +3,8 @@
 //!
 //!     cargo run --release --example quickstart
 
-use std::sync::Arc;
-use tale3::exec::LeafRunner;
 use tale3::ral::DepMode;
-use tale3::rt::{self, LeafExec, Pool, RuntimeKind};
+use tale3::rt::{self, ExecConfig, RuntimeKind};
 use tale3::workloads::{by_name, Size};
 
 fn main() -> anyhow::Result<()> {
@@ -22,21 +20,15 @@ fn main() -> anyhow::Result<()> {
     let tree = inst.tree()?;
     println!("\nEDT tree:\n{}", tree.dump());
 
-    // 3. Instantiate an executable plan and run it under a runtime.
+    // 3. Instantiate an executable plan and launch it. `ExecConfig` is
+    //    the whole "how": runtime kind, data plane, threads, topology —
+    //    retargeting to another runtime is editing one field.
     let plan = inst.plan()?;
     let arrays = inst.arrays();
-    let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
-        arrays: arrays.clone(),
-        kernels: inst.kernels.clone(),
-    });
-    let pool = Pool::new(2);
-    let report = rt::run(
-        RuntimeKind::Edt(DepMode::CncAsync),
-        &plan,
-        &leaf,
-        &pool,
-        inst.total_flops,
-    )?;
+    let cfg = ExecConfig::new()
+        .runtime(RuntimeKind::Edt(DepMode::CncAsync))
+        .threads(2);
+    let report = rt::launch(&plan, &inst.leaf_spec(&arrays), &cfg)?;
     println!(
         "cnc-async x{} threads: {:.3} s, {:.3} Gflop/s, {} tasks ({} workers, {} steals, {} failed gets)",
         report.threads,

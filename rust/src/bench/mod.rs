@@ -11,9 +11,9 @@ pub mod report;
 
 use crate::edt::MapOptions;
 use crate::ral::DepMode;
-use crate::rt::RunReport;
-use crate::sim::{simulate, simulate_omp, simulate_with_plane, CostModel, Machine, SimReport};
-use crate::space::DataPlane;
+use crate::rt::{RunReport, StealPolicy};
+use crate::sim::{simulate, simulate_omp, CostModel, Machine, SimReport};
+use crate::space::{DataPlane, Topology};
 use crate::workloads::{by_name, Instance, Size};
 
 /// The paper's thread sweep (Tables 1/3/4/5).
@@ -177,15 +177,17 @@ pub fn sim_report_plane(
     numa_pinned: bool,
 ) -> SimReport {
     let plan = inst.plan_with(opts).expect("plan");
-    simulate_with_plane(
+    crate::sim::des::des_exec(
         &plan,
         mode,
         plane,
+        &Topology::single(),
         threads,
         machine,
         costs,
         numa_pinned,
         inst.total_flops,
+        StealPolicy::Never,
     )
 }
 

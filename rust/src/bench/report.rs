@@ -9,19 +9,25 @@
 //! (`tests/placement.rs` asserts this), so CI artifacts diff cleanly
 //! run-to-run and PR-to-PR.
 //!
-//! Per workload the report carries the single-node space-plane baseline
-//! and the sharded topology next to each other: sim time, §5.3 work
-//! ratio, task/steal counts, space put/get/free traffic with its
-//! local/remote split, global peak datablock bytes, and the per-node
-//! peaks — the numbers the distributed scaling story is told in.
+//! **Schema `tale3-bench-report/v2`:** the document opens with a `config`
+//! object — the fully-resolved [`ExecConfig`] echo every cell ran under —
+//! and each workload carries three cells side by side: the single-node
+//! space-plane baseline (`single`), the sharded topology under strict
+//! owner-computes (`sharded`), and the same topology with inter-node EDT
+//! migration (`sharded_steal`), whose `stolen_edts`/`steal_bytes`
+//! counters quantify the work-stealing win. CI's golden-file job asserts
+//! the v2 key set is stable across runs.
 
 use crate::ral::DepMode;
-use crate::sim::{simulate_sharded, CostModel, Machine, SimReport};
-use crate::space::{DataPlane, Placement, Topology};
+use crate::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
+use crate::sim::SimReport;
+use crate::space::{DataPlane, Placement};
 use crate::workloads::{registry, Size};
 
 /// What the report measures. `quick` shrinks every workload to `Tiny`
 /// (the CI smoke configuration); the full report runs at `Small`.
+/// `steal` is the policy of the `sharded_steal` cell (`sharded` is
+/// always strict owner-computes, the baseline it is read against).
 #[derive(Debug, Clone)]
 pub struct ReportConfig {
     pub quick: bool,
@@ -29,6 +35,7 @@ pub struct ReportConfig {
     pub placement: Placement,
     pub threads: usize,
     pub mode: DepMode,
+    pub steal: StealPolicy,
 }
 
 impl Default for ReportConfig {
@@ -39,7 +46,22 @@ impl Default for ReportConfig {
             placement: Placement::Hash,
             threads: 8,
             mode: DepMode::CncDep,
+            steal: StealPolicy::RemoteReady,
         }
+    }
+}
+
+impl ReportConfig {
+    /// The launch descriptor of one report cell.
+    fn exec_config(&self, nodes: usize, steal: StealPolicy) -> ExecConfig {
+        ExecConfig::new()
+            .backend(BackendKind::Des)
+            .runtime(RuntimeKind::Edt(self.mode))
+            .plane(DataPlane::Space)
+            .nodes(nodes)
+            .placement(self.placement)
+            .threads(self.threads)
+            .steal(steal)
     }
 }
 
@@ -69,7 +91,8 @@ fn cell(r: &SimReport) -> String {
         "{{\"sim_seconds\":{},\"gflops\":{},\"work_ratio\":{},\"tasks\":{},\
          \"steals\":{},\"failed_gets\":{},\"space_puts\":{},\"space_gets\":{},\
          \"space_frees\":{},\"local_gets\":{},\"remote_gets\":{},\
-         \"remote_bytes\":{},\"peak_bytes\":{},\"node_peak_bytes\":{}}}",
+         \"remote_bytes\":{},\"peak_bytes\":{},\"node_peak_bytes\":{},\
+         \"stolen_edts\":{},\"steal_bytes\":{}}}",
         r.seconds,
         r.gflops,
         r.work_ratio,
@@ -84,6 +107,30 @@ fn cell(r: &SimReport) -> String {
         r.space_remote_bytes,
         r.space_peak_bytes,
         jlist(&r.node_peak_bytes),
+        r.stolen_edts,
+        r.steal_bytes,
+    )
+}
+
+/// The resolved-config echo object (the reproducibility header) —
+/// derived from the same `ExecConfig` the sharded cells launch with, so
+/// the header can never drift from what actually ran.
+fn config_obj(cfg: &ReportConfig) -> String {
+    let ec = cfg.exec_config(cfg.nodes, cfg.steal);
+    format!(
+        "{{\"backend\":{},\"runtime\":{},\"plane\":{},\"size\":{},\
+         \"quick\":{},\"threads\":{},\"nodes\":{},\"placement\":{},\
+         \"steal\":{},\"numa_pinned\":{}}}",
+        jstr(ec.backend.name()),
+        jstr(ec.runtime.name()),
+        jstr(ec.plane.name()),
+        jstr(if cfg.quick { "tiny" } else { "small" }),
+        cfg.quick,
+        ec.threads,
+        ec.nodes,
+        jstr(ec.placement.name()),
+        jstr(ec.steal.name()),
+        ec.numa_pinned,
     )
 }
 
@@ -92,53 +139,37 @@ fn cell(r: &SimReport) -> String {
 /// output is a pure function of (binary, config).
 pub fn perf_report_json(cfg: &ReportConfig) -> String {
     let size = if cfg.quick { Size::Tiny } else { Size::Small };
-    let machine = Machine::default();
-    let costs = CostModel::default();
     let mut workloads = Vec::new();
     for w in registry() {
         let inst = (w.build)(size);
         let plan = inst.plan().expect("plan");
-        let single_topo = Topology::single();
-        let single = simulate_sharded(
-            &plan,
-            cfg.mode,
-            DataPlane::Space,
-            &single_topo,
-            cfg.threads,
-            &machine,
-            &costs,
-            true,
-            inst.total_flops,
-        );
-        let topo = Topology::for_plan(&plan, cfg.nodes, cfg.placement);
-        let sharded = simulate_sharded(
-            &plan,
-            cfg.mode,
-            DataPlane::Space,
-            &topo,
-            cfg.threads,
-            &machine,
-            &costs,
-            true,
-            inst.total_flops,
-        );
+        let leaf = LeafSpec::cost_only(inst.total_flops);
+        let sim_cell = |ec: &ExecConfig| -> SimReport {
+            rt::launch(&plan, &leaf, ec)
+                .expect("DES launch")
+                .sim
+                .expect("DES backend carries a SimReport")
+        };
+        let single = sim_cell(&cfg.exec_config(1, StealPolicy::Never));
+        let sharded = sim_cell(&cfg.exec_config(cfg.nodes, StealPolicy::Never));
+        // --steal never makes the steal cell identical to the baseline:
+        // reuse it instead of sweeping all workloads a third time
+        let stolen = if cfg.steal == StealPolicy::Never {
+            sharded.clone()
+        } else {
+            sim_cell(&cfg.exec_config(cfg.nodes, cfg.steal))
+        };
         workloads.push(format!(
-            "{{\"name\":{},\"single\":{},\"sharded\":{}}}",
+            "{{\"name\":{},\"single\":{},\"sharded\":{},\"sharded_steal\":{}}}",
             jstr(w.name),
             cell(&single),
             cell(&sharded),
+            cell(&stolen),
         ));
     }
     format!(
-        "{{\"schema\":\"tale3-bench-report/v1\",\"quick\":{},\"size\":{},\
-         \"mode\":{},\"plane\":\"space\",\"threads\":{},\"nodes\":{},\
-         \"placement\":{},\"workloads\":[{}]}}\n",
-        cfg.quick,
-        jstr(if cfg.quick { "tiny" } else { "small" }),
-        jstr(cfg.mode.name()),
-        cfg.threads,
-        cfg.nodes,
-        jstr(cfg.placement.name()),
+        "{{\"schema\":\"tale3-bench-report/v2\",\"config\":{},\"workloads\":[{}]}}\n",
+        config_obj(cfg),
         workloads.join(",")
     )
 }
@@ -173,10 +204,28 @@ mod tests {
             space_remote_gets: 1,
             space_remote_bytes: 64,
             node_peak_bytes: vec![64, 64],
+            stolen_edts: 2,
+            steal_bytes: 96,
         };
         let c = cell(&r);
         assert!(c.starts_with('{') && c.ends_with('}'));
         assert!(c.contains("\"remote_bytes\":64"));
         assert!(c.contains("\"node_peak_bytes\":[64,64]"));
+        assert!(c.contains("\"stolen_edts\":2"));
+        assert!(c.contains("\"steal_bytes\":96"));
+    }
+
+    #[test]
+    fn config_echo_names_the_resolved_launch() {
+        let cfg = ReportConfig {
+            quick: true,
+            ..Default::default()
+        };
+        let o = config_obj(&cfg);
+        assert!(o.contains("\"backend\":\"des\""));
+        assert!(o.contains("\"runtime\":\"cnc-dep\""));
+        assert!(o.contains("\"size\":\"tiny\""));
+        assert!(o.contains("\"steal\":\"remote-ready\""));
+        assert!(o.contains("\"nodes\":4"));
     }
 }

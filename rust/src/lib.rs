@@ -36,5 +36,5 @@ pub use edt::{map_program, EdtTree, MapOptions};
 pub use exec::Plan;
 pub use ir::{Program, ProgramBuilder};
 pub use ral::DepMode;
-pub use rt::{Pool, RuntimeKind};
+pub use rt::{launch, Backend, BackendKind, ExecConfig, LeafSpec, Pool, RuntimeKind, StealPolicy};
 pub use space::{DataPlane, Placement, Topology};

@@ -8,10 +8,14 @@
 //!   `bench-report [opts]`               deterministic perf JSON (CI artifact)
 //!   `table <1|2|3|4|5|fig2>`            pointers to the bench targets
 //!
+//! `run` and `sim` build one `rt::ExecConfig` from the flags and go
+//! through `rt::launch` — the same launch surface the library exposes;
+//! the subcommand only picks the backend (threads vs DES).
+//!
 //! Common options: `--size tiny|small|paper`, `--runtime cnc-block|cnc-async|
 //! cnc-dep|swarm|ocr|omp|all`, `--threads N`, `--tiles a,b,c`, `--levels k`,
 //! `--gran N`, `--no-verify`, `--plane shared|space`, `--nodes N`,
-//! `--placement block|cyclic|hash`.
+//! `--placement block|cyclic|hash`, `--steal never|remote-ready`.
 //! (Argument parsing is hand-rolled: clap is not in the offline crate set.)
 
 use tale3::analysis::build_gdg;
@@ -19,9 +23,9 @@ use tale3::bench::fmt_bytes;
 use tale3::bench::report::{perf_report_json, ReportConfig};
 use tale3::edt::stats::characterize;
 use tale3::ral::DepMode;
-use tale3::rt::{self, Pool, RuntimeKind};
-use tale3::sim::{simulate_omp, simulate_sharded, CostModel, Machine};
-use tale3::space::{DataPlane, Placement, Topology};
+use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
+use tale3::sim::SimReport;
+use tale3::space::{DataPlane, Placement};
 use tale3::workloads::{by_name, registry, Size};
 
 struct Args {
@@ -64,15 +68,6 @@ impl Args {
             _ => Size::Small,
         }
     }
-    fn threads(&self) -> usize {
-        self.flag("threads").and_then(|s| s.parse().ok()).unwrap_or(2)
-    }
-    fn plane(&self) -> DataPlane {
-        match self.flag("plane").unwrap_or("shared") {
-            "space" => DataPlane::Space,
-            _ => DataPlane::Shared,
-        }
-    }
     fn nodes(&self, default: usize) -> usize {
         self.flag("nodes")
             .and_then(|s| s.parse().ok())
@@ -83,6 +78,16 @@ impl Args {
         self.flag("placement")
             .and_then(Placement::parse)
             .unwrap_or_default()
+    }
+    /// One launch descriptor from the config-shaped flags (`--plane`,
+    /// `--nodes`, `--placement`, `--steal`, `--threads`, `--runtime`);
+    /// non-config flags are left for the subcommand's own parsing.
+    fn exec_config(&self, backend: BackendKind) -> ExecConfig {
+        let mut cfg = ExecConfig::new().backend(backend);
+        for (name, val) in &self.flags {
+            cfg.apply_cli_flag(name, val.as_deref());
+        }
+        cfg
     }
     fn runtimes(&self) -> Vec<RuntimeKind> {
         match self.flag("runtime").unwrap_or("all") {
@@ -163,27 +168,26 @@ fn main() -> anyhow::Result<()> {
             } else {
                 None
             };
-            let pool = Pool::new(args.threads());
-            let plane = args.plane();
-            let topo = Topology::for_plan(&plan, args.nodes(1), args.placement());
+            let base = args.exec_config(BackendKind::Threads);
+            let topo = base.resolved_topology(&plan);
+            // pin the resolved topology so per-runtime launches don't
+            // re-derive the placement from the plan
+            let base = base.topology(topo.clone());
+            let echo = base.echo_for(&topo);
+            println!(
+                "config: backend={} plane={} threads={} nodes={} placement={} steal={}",
+                echo.backend, echo.plane, echo.threads, echo.nodes, echo.placement, echo.steal
+            );
             println!(
                 "{:<10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>9} {:>8} {:>8} {:>8} {:>9} {:>7}",
                 "runtime", "seconds", "Gflop/s", "tasks", "steals", "f.gets", "workratio",
                 "s.puts", "s.gets", "s.rget", "s.peak", "verify"
             );
             for kind in args.runtimes() {
+                let cfg = base.clone().runtime(kind);
                 let arrays = inst.arrays();
-                let r = rt::run_with_plane_on(
-                    kind,
-                    plane,
-                    &topo,
-                    &plan,
-                    &inst.prog,
-                    &arrays,
-                    &inst.kernels,
-                    &pool,
-                    inst.total_flops,
-                )?;
+                let leaf = inst.leaf_spec(&arrays);
+                let r = rt::launch(&plan, &leaf, &cfg)?;
                 let ver = match &oracle {
                     Some(o) => {
                         if o.max_abs_diff(&arrays) == 0.0 {
@@ -209,7 +213,7 @@ fn main() -> anyhow::Result<()> {
                     fmt_bytes(r.metrics.space_peak_bytes),
                     ver
                 );
-                if plane == DataPlane::Space && !topo.is_single() {
+                if base.plane == DataPlane::Space && !topo.is_single() {
                     let peaks: Vec<String> =
                         r.node_peak_bytes.iter().map(|&b| fmt_bytes(b)).collect();
                     println!(
@@ -226,26 +230,33 @@ fn main() -> anyhow::Result<()> {
             let inst = (by_name(name).ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?.build)(args.size());
             let opts = args.map_opts(&inst.map_opts);
             let plan = inst.plan_with(&opts)?;
-            let machine = Machine::default();
-            let costs = CostModel::default();
             let threads: Vec<usize> = args
                 .flag("threads")
                 .map(|t| t.split(',').filter_map(|x| x.parse().ok()).collect())
                 .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]);
-            let plane = args.plane();
-            let topo = Topology::for_plan(&plan, args.nodes(1), args.placement());
+            let base = args.exec_config(BackendKind::Des);
+            let topo = base.resolved_topology(&plan);
+            // pin the resolved topology: one placement derivation, not
+            // one per (runtime × thread-count) cell
+            let base = base.topology(topo.clone());
             println!(
                 "simulated testbed: 2-socket x 8-core x 2-SMT (Gflop/s, {} data plane on EDT rows)",
-                plane.name()
+                base.plane.name()
             );
             if !topo.is_single() {
                 println!(
-                    "sharded item space: {} nodes, {} placement",
+                    "sharded item space: {} nodes, {} placement, steal {}",
                     topo.nodes(),
-                    topo.placement().name()
+                    topo.placement().name(),
+                    base.steal.name()
+                );
+                println!(
+                    "note: cells with threads < {} nodes run the flat scheduler \
+                     (no node pinning, no stealing)",
+                    topo.nodes()
                 );
             }
-            if plane == DataPlane::Space && args.runtimes().contains(&RuntimeKind::Omp) {
+            if base.plane == DataPlane::Space && args.runtimes().contains(&RuntimeKind::Omp) {
                 println!("note: the omp comparator has no tuple-space port; its row is always the shared plane");
             }
             print!("{:<10}", "runtime");
@@ -255,42 +266,28 @@ fn main() -> anyhow::Result<()> {
             println!();
             for kind in args.runtimes() {
                 print!("{:<10}", kind.name());
-                let mut last = None;
+                let mut last: Option<SimReport> = None;
                 for &t in &threads {
-                    let g = match kind {
-                        RuntimeKind::Edt(m) => {
-                            let r = simulate_sharded(
-                                &plan,
-                                m,
-                                plane,
-                                &topo,
-                                t,
-                                &machine,
-                                &costs,
-                                true,
-                                inst.total_flops,
-                            );
-                            let g = r.gflops;
-                            last = Some(r);
-                            g
-                        }
-                        RuntimeKind::Omp => {
-                            inst.total_flops / simulate_omp(&plan, t, &machine, &costs, true) / 1e9
-                        }
-                    };
-                    print!("{g:>8.2}");
+                    let cfg = base.clone().runtime(kind).threads(t);
+                    let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg)?;
+                    print!("{:>8.2}", r.gflops);
+                    if let Some(s) = r.sim {
+                        last = Some(s);
+                    }
                 }
                 println!();
-                if plane == DataPlane::Space && !topo.is_single() {
+                if base.plane == DataPlane::Space && !topo.is_single() {
                     if let Some(r) = last {
                         let peaks: Vec<String> =
                             r.node_peak_bytes.iter().map(|&b| fmt_bytes(b)).collect();
                         println!(
-                            "  └ @{} th.: gets {} local / {} remote, remote {}, node peaks [{}]",
+                            "  └ @{} th.: gets {} local / {} remote, remote {}, stolen EDTs {} ({}), node peaks [{}]",
                             threads.last().unwrap_or(&0),
                             r.space_local_gets,
                             r.space_remote_gets,
                             fmt_bytes(r.space_remote_bytes),
+                            r.stolen_edts,
+                            fmt_bytes(r.steal_bytes),
                             peaks.join(", ")
                         );
                     }
@@ -307,6 +304,10 @@ fn main() -> anyhow::Result<()> {
                     .flag("threads")
                     .and_then(|s| s.split(',').next()?.trim().parse().ok())
                     .unwrap_or(8),
+                steal: args
+                    .flag("steal")
+                    .and_then(StealPolicy::parse)
+                    .unwrap_or(StealPolicy::RemoteReady),
                 ..Default::default()
             };
             let json = perf_report_json(&cfg);
@@ -337,8 +338,14 @@ fn main() -> anyhow::Result<()> {
             println!("       [--threads N[,N..]] [--tiles a,b,c] [--levels k] [--gran n] [--no-verify]");
             println!("       [--plane shared|space]   (data plane: shared buffer vs tuple space)");
             println!("       [--nodes N] [--placement block|cyclic|hash]   (sharded item space)");
-            println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P]");
-            println!("                    (deterministic perf JSON: virtual time only)");
+            println!("       [--steal never|remote-ready]   (DES: may idle nodes claim remote-ready");
+            println!("                    leaf EDTs, paying the input-datablock transfers?)");
+            println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P] [--steal S]");
+            println!("                    (deterministic perf JSON: virtual time only, schema v2)");
+            println!();
+            println!("run and sim share one launch surface: every flag combination is an");
+            println!("rt::ExecConfig handed to rt::launch; the subcommand picks the backend");
+            println!("(threads = real execution, sim = deterministic testbed DES).");
         }
     }
     Ok(())

@@ -1,0 +1,427 @@
+//! The single launch surface: one declarative [`ExecConfig`] consumed by
+//! every backend through the [`Backend`] trait.
+//!
+//! The paper's EDT programs call into a *runtime-agnostic* layer that is
+//! retargeted to CnC, SWARM and OCR (§4.7.3). The execution API mirrors
+//! that shape: a caller describes *what* to run ([`crate::exec::Plan`] +
+//! [`LeafSpec`]) and *how* to run it (`ExecConfig`), and [`crate::rt::launch`]
+//! hands the pair to one of three interchangeable backends — the real
+//! [`crate::rt::Engine`], the fork-join comparator (`rt::ompsim`), or the
+//! deterministic testbed simulator (`sim::des`). Retargeting an EDT
+//! program is flipping a field, never calling a different function.
+//!
+//! [`StealPolicy`] is the config knob for inter-node work stealing: under
+//! a sharded topology the DES pins every leaf EDT to the node its tag
+//! maps to (owner-computes), and `RemoteReady` lets an idle node claim a
+//! remote-ready leaf, paying the input-datablock transfers
+//! ([`CostModel::remote_transfer_ns`]).
+
+use super::engine::LeafExec;
+use super::{RunReport, RuntimeKind};
+use crate::exec::plan::Plan;
+use crate::exec::{ArrayStore, KernelSet};
+use crate::ir::Program;
+use crate::ral::DepMode;
+use crate::sim::{CostModel, Machine};
+use crate::space::{DataPlane, Placement, Topology};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Whether an idle node may claim leaf EDTs pinned to another node.
+///
+/// Only the DES backend models per-node schedulers, and only on the
+/// space data plane (the real `Engine` runs one shared-memory pool, and
+/// the shared plane has no distribution to pin against); there the
+/// policy decides what a node with no local work does under a
+/// multi-node [`Topology`]:
+///
+/// - [`StealPolicy::Never`] — strict owner-computes: a leaf EDT only ever
+///   runs on the node its tag maps to. Imbalanced placements leave nodes
+///   idle while others queue.
+/// - [`StealPolicy::RemoteReady`] — an idle node (no local work, ready or
+///   pending) claims a *ready* leaf EDT from another node, paying
+///   [`CostModel::remote_transfer_ns`] for each input datablock it must
+///   fetch; the claimed leaf's output datablock then lives on the thief.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StealPolicy {
+    #[default]
+    Never,
+    RemoteReady,
+}
+
+impl StealPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StealPolicy::Never => "never",
+            StealPolicy::RemoteReady => "remote-ready",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StealPolicy> {
+        match s {
+            "never" => Some(StealPolicy::Never),
+            "remote-ready" => Some(StealPolicy::RemoteReady),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [StealPolicy; 2] {
+        [StealPolicy::Never, StealPolicy::RemoteReady]
+    }
+}
+
+/// Which backend executes the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Real execution on OS threads (`rt::Engine` for EDT runtimes,
+    /// `rt::ompsim` for the OpenMP comparator). Wall-clock seconds.
+    #[default]
+    Threads,
+    /// Deterministic discrete-event simulation on the modeled testbed
+    /// (`sim::des` / `sim::omp`). Virtual seconds; [`RunReport::sim`]
+    /// carries the full [`crate::sim::SimReport`].
+    Des,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Threads => "threads",
+            BackendKind::Des => "des",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "threads" => Some(BackendKind::Threads),
+            "des" | "sim" => Some(BackendKind::Des),
+            _ => None,
+        }
+    }
+}
+
+/// The declarative launch descriptor: everything that used to be a
+/// positional argument of some `run_*`/`simulate_*` variant, as one
+/// builder-style value consumed by every backend.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    pub backend: BackendKind,
+    pub runtime: RuntimeKind,
+    pub plane: DataPlane,
+    /// Explicit topology; `None` derives one from `nodes` + `placement`
+    /// against the launched plan ([`Topology::for_plan`]).
+    pub topology: Option<Topology>,
+    pub nodes: usize,
+    pub placement: Placement,
+    pub threads: usize,
+    pub steal: StealPolicy,
+    pub cost: CostModel,
+    pub machine: Machine,
+    pub numa_pinned: bool,
+}
+
+impl Default for ExecConfig {
+    /// Matches the implicit defaults of the pre-`ExecConfig` entry points
+    /// and the CLI: the depends-mode CnC runtime on the shared plane,
+    /// 2 threads, a single node, hash placement, no inter-node stealing,
+    /// default cost model and testbed machine, NUMA-pinned.
+    fn default() -> Self {
+        ExecConfig {
+            backend: BackendKind::Threads,
+            runtime: RuntimeKind::Edt(DepMode::CncDep),
+            plane: DataPlane::Shared,
+            topology: None,
+            nodes: 1,
+            placement: Placement::default(),
+            threads: 2,
+            steal: StealPolicy::default(),
+            cost: CostModel::default(),
+            machine: Machine::default(),
+            numa_pinned: true,
+        }
+    }
+}
+
+impl ExecConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn backend(mut self, b: BackendKind) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn runtime(mut self, r: RuntimeKind) -> Self {
+        self.runtime = r;
+        self
+    }
+
+    pub fn plane(mut self, p: DataPlane) -> Self {
+        self.plane = p;
+        self
+    }
+
+    pub fn topology(mut self, t: Topology) -> Self {
+        self.topology = Some(t);
+        self
+    }
+
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nodes = n.max(1);
+        self
+    }
+
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.placement = p;
+        self
+    }
+
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+
+    pub fn steal(mut self, s: StealPolicy) -> Self {
+        self.steal = s;
+        self
+    }
+
+    pub fn cost(mut self, c: CostModel) -> Self {
+        self.cost = c;
+        self
+    }
+
+    pub fn machine(mut self, m: Machine) -> Self {
+        self.machine = m;
+        self
+    }
+
+    pub fn numa_pinned(mut self, p: bool) -> Self {
+        self.numa_pinned = p;
+        self
+    }
+
+    /// The topology this config actually runs over: the explicit one if
+    /// set, otherwise derived from `nodes` + `placement` for the plan.
+    pub fn resolved_topology(&self, plan: &Plan) -> Topology {
+        match &self.topology {
+            Some(t) => t.clone(),
+            None if self.nodes <= 1 => Topology::single(),
+            None => Topology::for_plan(plan, self.nodes, self.placement),
+        }
+    }
+
+    /// The fully-resolved config summary echoed into [`RunReport`] and
+    /// the bench JSON, so every measurement names the exact
+    /// {backend, runtime, plane, topology, steal} it came from.
+    pub fn echo_for(&self, topo: &Topology) -> ConfigEcho {
+        ConfigEcho {
+            backend: self.backend.name(),
+            runtime: self.runtime.name(),
+            plane: self.plane.name(),
+            threads: self.threads,
+            nodes: topo.nodes(),
+            placement: topo.placement().name(),
+            steal: self.steal.name(),
+            numa_pinned: self.numa_pinned,
+        }
+    }
+
+    /// Recognize one CLI flag (`--name value`) as a config knob and apply
+    /// it. Returns `true` when the flag was consumed; unknown flags (and
+    /// non-config flags like `--size` or `--no-verify`) return `false`
+    /// so the caller's own parsing keeps working. Multi-valued flags
+    /// (`--threads 1,2,4`, `--runtime all`) apply their first / no value
+    /// here — the CLI loops over the rest itself.
+    pub fn apply_cli_flag(&mut self, name: &str, value: Option<&str>) -> bool {
+        match name {
+            "plane" => {
+                if let Some(v) = value {
+                    self.plane = if v == "space" {
+                        DataPlane::Space
+                    } else {
+                        DataPlane::Shared
+                    };
+                }
+                true
+            }
+            "nodes" => {
+                if let Some(n) = value.and_then(|v| v.parse().ok()) {
+                    self.nodes = std::cmp::max(n, 1);
+                }
+                true
+            }
+            "placement" => {
+                if let Some(p) = value.and_then(Placement::parse) {
+                    self.placement = p;
+                }
+                true
+            }
+            "steal" => {
+                if let Some(s) = value.and_then(StealPolicy::parse) {
+                    self.steal = s;
+                }
+                true
+            }
+            "threads" => {
+                let first = value.and_then(|v| v.split(',').next()?.trim().parse().ok());
+                if let Some(t) = first {
+                    self.threads = std::cmp::max(t, 1);
+                }
+                true
+            }
+            "runtime" => {
+                self.runtime = match value {
+                    Some("cnc-block") => RuntimeKind::Edt(DepMode::CncBlock),
+                    Some("cnc-async") => RuntimeKind::Edt(DepMode::CncAsync),
+                    Some("cnc-dep") => RuntimeKind::Edt(DepMode::CncDep),
+                    Some("swarm") => RuntimeKind::Edt(DepMode::Swarm),
+                    Some("ocr") => RuntimeKind::Edt(DepMode::Ocr),
+                    Some("omp") => RuntimeKind::Omp,
+                    _ => self.runtime, // "all" and absent: caller loops
+                };
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Plain-data echo of a resolved [`ExecConfig`], carried in every
+/// [`RunReport`] (and serialized into the bench JSON) for
+/// reproducibility. It records the launch *descriptor*: knobs a backend
+/// does not model (e.g. `steal` on the threads backend, which never
+/// migrates EDTs) are echoed as requested, not silently rewritten.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConfigEcho {
+    pub backend: &'static str,
+    pub runtime: &'static str,
+    pub plane: &'static str,
+    pub threads: usize,
+    pub nodes: usize,
+    pub placement: &'static str,
+    pub steal: &'static str,
+    pub numa_pinned: bool,
+}
+
+/// What a leaf EDT runs when a backend executes it, plus the workload's
+/// total flop count (the denominator of the paper's Gflop/s metric).
+pub struct LeafSpec<'a> {
+    pub total_flops: f64,
+    pub body: LeafBody<'a>,
+}
+
+/// The three leaf shapes the backends accept.
+pub enum LeafBody<'a> {
+    /// A caller-provided executor (kernel drivers, recorders, no-ops).
+    /// Shared plane only: an opaque executor carries no write footprint
+    /// for the space to publish.
+    Exec(Arc<dyn LeafExec>),
+    /// The program's kernels over its arrays — the standard workload
+    /// shape; supports both data planes.
+    Kernels {
+        prog: &'a Program,
+        arrays: Arc<ArrayStore>,
+        kernels: Arc<dyn KernelSet>,
+    },
+    /// No executable body: cost-model-only backends (the DES). The
+    /// threads backend rejects it.
+    CostOnly,
+}
+
+impl<'a> LeafSpec<'a> {
+    pub fn exec(leaf: Arc<dyn LeafExec>, total_flops: f64) -> Self {
+        LeafSpec {
+            total_flops,
+            body: LeafBody::Exec(leaf),
+        }
+    }
+
+    pub fn kernels(
+        prog: &'a Program,
+        arrays: Arc<ArrayStore>,
+        kernels: Arc<dyn KernelSet>,
+        total_flops: f64,
+    ) -> Self {
+        LeafSpec {
+            total_flops,
+            body: LeafBody::Kernels {
+                prog,
+                arrays,
+                kernels,
+            },
+        }
+    }
+
+    /// A leaf with no executable body, for simulation-only launches.
+    pub fn cost_only(total_flops: f64) -> Self {
+        LeafSpec {
+            total_flops,
+            body: LeafBody::CostOnly,
+        }
+    }
+}
+
+/// One execution backend: consumes a plan + leaf spec under an
+/// [`ExecConfig`] and returns the uniform [`RunReport`]. Implemented by
+/// the real engine (`rt::engine::EngineBackend`), the fork-join
+/// comparator (`rt::ompsim::OmpBackend`) and the testbed simulator
+/// (`sim::des::DesBackend`) — the Rust rendering of the paper's
+/// runtime-agnostic layer seam (§4.7.3).
+pub trait Backend: Sync {
+    fn name(&self) -> &'static str;
+    fn execute(&self, plan: &Arc<Plan>, leaf: &LeafSpec<'_>, cfg: &ExecConfig) -> Result<RunReport>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steal_policy_names_round_trip() {
+        for s in StealPolicy::all() {
+            assert_eq!(StealPolicy::parse(s.name()), Some(s));
+        }
+        assert_eq!(StealPolicy::parse("sometimes"), None);
+        assert_eq!(StealPolicy::default(), StealPolicy::Never);
+    }
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("threads"), Some(BackendKind::Threads));
+        assert_eq!(BackendKind::parse("des"), Some(BackendKind::Des));
+        assert_eq!(BackendKind::parse("sim"), Some(BackendKind::Des));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn builder_round_trip() {
+        let cfg = ExecConfig::new()
+            .backend(BackendKind::Des)
+            .runtime(RuntimeKind::Omp)
+            .plane(DataPlane::Space)
+            .nodes(4)
+            .placement(Placement::Block)
+            .threads(8)
+            .steal(StealPolicy::RemoteReady)
+            .numa_pinned(false);
+        assert_eq!(cfg.backend, BackendKind::Des);
+        assert_eq!(cfg.runtime, RuntimeKind::Omp);
+        assert_eq!(cfg.plane, DataPlane::Space);
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.placement, Placement::Block);
+        assert_eq!(cfg.threads, 8);
+        assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+        assert!(!cfg.numa_pinned);
+    }
+
+    #[test]
+    fn unknown_flags_are_not_consumed() {
+        let mut cfg = ExecConfig::default();
+        assert!(!cfg.apply_cli_flag("size", Some("tiny")));
+        assert!(!cfg.apply_cli_flag("no-verify", None));
+        assert!(cfg.apply_cli_flag("steal", Some("remote-ready")));
+        assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+    }
+}

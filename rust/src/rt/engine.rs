@@ -58,10 +58,20 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(plan: Arc<Plan>, mode: DepMode, leaf: Arc<dyn LeafExec>) -> Arc<Engine> {
-        Self::new_with_plane(plan, mode, leaf, DataPlane::Shared)
+        Self::build(plan, mode, leaf, DataPlane::Shared)
     }
 
+    #[deprecated(note = "use rt::launch(plan, leaf, &ExecConfig) — the one launch surface")]
     pub fn new_with_plane(
+        plan: Arc<Plan>,
+        mode: DepMode,
+        leaf: Arc<dyn LeafExec>,
+        plane: DataPlane,
+    ) -> Arc<Engine> {
+        Self::build(plan, mode, leaf, plane)
+    }
+
+    pub(crate) fn build(
         plan: Arc<Plan>,
         mode: DepMode,
         leaf: Arc<dyn LeafExec>,
@@ -423,6 +433,33 @@ impl Engine {
                 },
             );
         }
+    }
+}
+
+/// The real-execution backend for EDT runtimes: each `execute` builds a
+/// fresh pool of `cfg.threads` OS workers, instantiates the [`Engine`]
+/// for the configured dependence mode and data plane, and measures one
+/// run. One of the three retargets of the paper's runtime-agnostic layer
+/// (§4.7.3) behind [`crate::rt::launch`].
+pub struct EngineBackend;
+
+impl crate::rt::Backend for EngineBackend {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn execute(
+        &self,
+        plan: &Arc<Plan>,
+        leaf: &crate::rt::LeafSpec<'_>,
+        cfg: &crate::rt::ExecConfig,
+    ) -> Result<crate::rt::RunReport> {
+        anyhow::ensure!(
+            matches!(cfg.runtime, crate::rt::RuntimeKind::Edt(_)),
+            "EngineBackend runs EDT runtimes; cfg.runtime = omp resolves to OmpBackend"
+        );
+        let pool = super::Pool::new(cfg.threads);
+        super::execute_on_pool(plan, leaf, cfg, &pool)
     }
 }
 

@@ -1,20 +1,46 @@
-//! Runtime backends: the RAL engine instantiated as CnC / SWARM / OCR
-//! (§4.7.3), the OpenMP fork-join comparator (§5), and the shared
-//! work-stealing pool.
+//! Runtime backends behind one launch surface — the Rust rendering of
+//! the paper's runtime-agnostic layer (§4.7.3).
+//!
+//! The paper generates EDT programs against a C++ layer "retargeted to
+//! Intel's CnC, ETI's SWARM, and the Open Community Runtime": the program
+//! never names a runtime, the layer does. This module is that seam:
+//!
+//! - [`ExecConfig`] is the declarative launch descriptor — runtime kind
+//!   (§4.7.3 / §5.1 dependence mechanisms plus the OpenMP comparator),
+//!   data plane (§4.5 item collections vs one shared buffer), topology +
+//!   placement (the distributed-memory sharding), thread count, cost
+//!   model, and the [`StealPolicy`] knob for inter-node EDT migration.
+//! - [`Backend`] is the retarget point: [`engine::EngineBackend`] (real
+//!   EDT execution, Fig 6), [`ompsim::OmpBackend`] (the paper's OpenMP
+//!   rows) and [`crate::sim::des::DesBackend`] (the deterministic testbed
+//!   simulator) all consume the same `(plan, leaf, config)` triple and
+//!   produce the same [`RunReport`].
+//! - [`launch`] picks the backend from the config — retargeting a
+//!   program to another runtime, plane, topology or steal policy is a
+//!   field edit, never a different function call.
+//!
+//! The pre-`ExecConfig` entry points (`run_with_plane`,
+//! `run_with_plane_on`, and `sim::{simulate_with_plane,
+//! simulate_sharded}`) survive one release as deprecated shims over
+//! [`launch`].
 
+pub mod config;
 pub mod engine;
 pub mod ompsim;
 pub mod pool;
 pub mod table;
 
 pub use crate::space::DataPlane;
-pub use engine::{Engine, LeafExec, NoopLeaf};
+pub use config::{Backend, BackendKind, ConfigEcho, ExecConfig, LeafBody, LeafSpec, StealPolicy};
+pub use engine::{Engine, EngineBackend, LeafExec, NoopLeaf};
+pub use ompsim::OmpBackend;
 pub use pool::{Pool, WorkerCtx};
 
 use crate::exec::plan::Plan;
 use crate::exec::{ArrayStore, KernelSet, LeafRunner};
 use crate::ir::Program;
 use crate::ral::{DepMode, MetricsSnapshot};
+use crate::sim::SimReport;
 use crate::space::{ItemSpace, SpaceLeafRunner, Topology};
 use anyhow::Result;
 use std::sync::Arc;
@@ -47,25 +73,36 @@ impl RuntimeKind {
     }
 }
 
-/// Outcome of one run.
+/// Outcome of one run, uniform across backends.
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub runtime: &'static str,
     /// Data plane the run executed over ("shared" | "space").
     pub plane: &'static str,
     pub threads: usize,
+    /// Wall-clock seconds under [`BackendKind::Threads`], virtual seconds
+    /// under [`BackendKind::Des`].
     pub seconds: f64,
     pub gflops: f64,
     pub metrics: MetricsSnapshot,
     /// Per-node high-water marks of live datablock bytes under a sharded
     /// space (empty under the shared plane; one entry on a single node).
     pub node_peak_bytes: Vec<u64>,
+    /// The fully-resolved config this run executed under.
+    pub config: ConfigEcho,
+    /// The full simulator report when the DES backend produced this run
+    /// (`None` for real execution and the closed-form OpenMP model).
+    pub sim: Option<SimReport>,
 }
 
-/// Per-run counter delta. Saturating: pool metrics are cumulative across
-/// runs, but a counter reset (fresh pool swapped in between snapshots, or
-/// a gauge that legitimately shrinks) must degrade to zero, not panic a
-/// report.
+/// Per-run counter delta. Counters are cumulative across runs on a
+/// shared pool, so they subtract (saturating: a fresh pool swapped in
+/// between snapshots must degrade to zero, not panic a report). Gauges —
+/// `space_live_bytes` / `space_peak_bytes` — report the after-snapshot
+/// value: subtracting a gauge that legitimately shrank would silently
+/// zero it. (`run_measured` then re-derives the gauges per run — this
+/// run's space snapshot, or zero when the run had no space — so a
+/// reused pool's stale gauges never leak into a report.)
 fn delta(a: MetricsSnapshot, b: MetricsSnapshot) -> MetricsSnapshot {
     MetricsSnapshot {
         startups: b.startups.saturating_sub(a.startups),
@@ -84,8 +121,8 @@ fn delta(a: MetricsSnapshot, b: MetricsSnapshot) -> MetricsSnapshot {
         space_puts: b.space_puts.saturating_sub(a.space_puts),
         space_gets: b.space_gets.saturating_sub(a.space_gets),
         space_frees: b.space_frees.saturating_sub(a.space_frees),
-        space_live_bytes: b.space_live_bytes.saturating_sub(a.space_live_bytes),
-        space_peak_bytes: b.space_peak_bytes.saturating_sub(a.space_peak_bytes),
+        space_live_bytes: b.space_live_bytes,
+        space_peak_bytes: b.space_peak_bytes,
         space_remote_gets: b.space_remote_gets.saturating_sub(a.space_remote_gets),
         space_remote_bytes: b.space_remote_bytes.saturating_sub(a.space_remote_bytes),
     }
@@ -95,6 +132,7 @@ fn delta(a: MetricsSnapshot, b: MetricsSnapshot) -> MetricsSnapshot {
 /// metrics around the execution, fold the run's space counters in (if the
 /// leaf executor has a space), report the delta. One body so the two
 /// planes can never diverge in how they measure.
+#[allow(clippy::too_many_arguments)]
 fn run_measured(
     kind: RuntimeKind,
     plan: &Arc<Plan>,
@@ -103,11 +141,12 @@ fn run_measured(
     total_flops: f64,
     plane: DataPlane,
     space: Option<&ItemSpace>,
+    echo: ConfigEcho,
 ) -> Result<RunReport> {
     let before = pool.metrics().snapshot();
     let seconds = match kind {
         RuntimeKind::Edt(mode) => {
-            let engine = Engine::new_with_plane(plan.clone(), mode, leaf.clone(), plane);
+            let engine = Engine::build(plan.clone(), mode, leaf.clone(), plane);
             engine.run(pool)?
         }
         RuntimeKind::Omp => ompsim::run_omp(plan, leaf, pool),
@@ -117,12 +156,20 @@ fn run_measured(
     }
     let after = pool.metrics().snapshot();
     let mut metrics = delta(before, after);
-    if let Some(sp) = space {
-        // live/peak are gauges of *this* run's space, not pool-lifetime
-        // counters — report them absolute
-        let s = sp.stats.snapshot();
-        metrics.space_live_bytes = s.live_bytes;
-        metrics.space_peak_bytes = s.peak_bytes;
+    match space {
+        Some(sp) => {
+            // live/peak are gauges of *this* run's space, not pool-lifetime
+            // counters — report them absolute
+            let s = sp.stats.snapshot();
+            metrics.space_live_bytes = s.live_bytes;
+            metrics.space_peak_bytes = s.peak_bytes;
+        }
+        None => {
+            // no space in this run: a reused pool may still hold the
+            // previous space run's gauges — they are not this run's
+            metrics.space_live_bytes = 0;
+            metrics.space_peak_bytes = 0;
+        }
     }
     Ok(RunReport {
         runtime: kind.name(),
@@ -132,11 +179,97 @@ fn run_measured(
         gflops: total_flops / seconds / 1e9,
         metrics,
         node_peak_bytes: space.map(|s| s.node_peaks()).unwrap_or_default(),
+        config: echo,
+        sim: None,
     })
 }
 
-/// Run a plan under a runtime on an existing pool. `total_flops` is used
-/// for the Gflop/s figure (paper metric).
+/// The threads-backend body shared by [`EngineBackend`], [`OmpBackend`]
+/// and the pool-reusing entry points: resolve the topology, build the
+/// plane's leaf executor from the [`LeafSpec`], measure one run.
+pub(crate) fn execute_on_pool(
+    plan: &Arc<Plan>,
+    leaf: &LeafSpec<'_>,
+    cfg: &ExecConfig,
+    pool: &Pool,
+) -> Result<RunReport> {
+    let topo = cfg.resolved_topology(plan);
+    let mut echo = cfg.echo_for(&topo);
+    echo.threads = pool.n_workers;
+    match cfg.plane {
+        DataPlane::Shared => {
+            let exec: Arc<dyn LeafExec> = match &leaf.body {
+                LeafBody::Exec(e) => e.clone(),
+                LeafBody::Kernels {
+                    arrays, kernels, ..
+                } => Arc::new(LeafRunner {
+                    arrays: arrays.clone(),
+                    kernels: kernels.clone(),
+                }),
+                LeafBody::CostOnly => anyhow::bail!(
+                    "the threads backend needs an executable leaf \
+                     (LeafSpec::exec or LeafSpec::kernels), not LeafSpec::cost_only"
+                ),
+            };
+            run_measured(
+                cfg.runtime,
+                plan,
+                &exec,
+                pool,
+                leaf.total_flops,
+                cfg.plane,
+                None,
+                echo,
+            )
+        }
+        DataPlane::Space => {
+            let LeafBody::Kernels {
+                prog,
+                arrays,
+                kernels,
+            } = &leaf.body
+            else {
+                anyhow::bail!(
+                    "the space data plane needs LeafSpec::kernels — an opaque \
+                     executor carries no write footprint to publish as datablocks"
+                );
+            };
+            let runner = SpaceLeafRunner::new(*prog, arrays.clone(), kernels.clone())
+                .with_topology(topo.clone());
+            let space = runner.space.clone();
+            let exec: Arc<dyn LeafExec> = Arc::new(runner);
+            run_measured(
+                cfg.runtime,
+                plan,
+                &exec,
+                pool,
+                leaf.total_flops,
+                cfg.plane,
+                Some(&space),
+                echo,
+            )
+        }
+    }
+}
+
+/// The backend a config resolves to.
+pub fn backend_for(cfg: &ExecConfig) -> &'static dyn Backend {
+    match (cfg.backend, cfg.runtime) {
+        (BackendKind::Threads, RuntimeKind::Edt(_)) => &EngineBackend,
+        (BackendKind::Threads, RuntimeKind::Omp) => &OmpBackend,
+        (BackendKind::Des, _) => &crate::sim::des::DesBackend,
+    }
+}
+
+/// **The** launch surface: execute `plan` with `leaf` under `cfg` on the
+/// backend the config names. Every other entry point is a shim over this.
+pub fn launch(plan: &Arc<Plan>, leaf: &LeafSpec<'_>, cfg: &ExecConfig) -> Result<RunReport> {
+    backend_for(cfg).execute(plan, leaf, cfg)
+}
+
+/// Run a plan under a runtime on an existing pool (shared plane, single
+/// node). The low-level pool-reusing entry for overhead benches and
+/// recorder tests; workload launches should use [`launch`].
 pub fn run(
     kind: RuntimeKind,
     plan: &Arc<Plan>,
@@ -144,14 +277,12 @@ pub fn run(
     pool: &Pool,
     total_flops: f64,
 ) -> Result<RunReport> {
-    run_measured(kind, plan, leaf, pool, total_flops, DataPlane::Shared, None)
+    let cfg = ExecConfig::new().runtime(kind).threads(pool.n_workers);
+    execute_on_pool(plan, &LeafSpec::exec(leaf.clone(), total_flops), &cfg, pool)
 }
 
-/// Run a plan under a runtime over the chosen data plane. `Shared` is the
-/// seed path (one global buffer, `exec::LeafRunner`); `Space` routes every
-/// inter-EDT tile through a fresh item-collection tuple space
-/// (`space::SpaceLeafRunner`) with get-count reclamation, and folds the
-/// space's put/get/free and live/peak-byte counters into the report.
+/// Run a plan under a runtime over the chosen data plane.
+#[deprecated(note = "use rt::launch(plan, leaf, &ExecConfig) — the one launch surface")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_with_plane(
     kind: RuntimeKind,
@@ -163,26 +294,20 @@ pub fn run_with_plane(
     pool: &Pool,
     total_flops: f64,
 ) -> Result<RunReport> {
-    run_with_plane_on(
-        kind,
-        plane,
-        &Topology::single(),
+    let cfg = ExecConfig::new()
+        .runtime(kind)
+        .plane(plane)
+        .threads(pool.n_workers);
+    execute_on_pool(
         plan,
-        prog,
-        arrays,
-        kernels,
+        &LeafSpec::kernels(prog, arrays.clone(), kernels.clone(), total_flops),
+        &cfg,
         pool,
-        total_flops,
     )
 }
 
-/// [`run_with_plane`] over an item space sharded across the topology's
-/// nodes: leaf EDTs and their datablocks are placed by tag
-/// (owner-computes), and gets of items owned by another node are counted
-/// as remote traffic (`Metrics::{space_remote_gets, space_remote_bytes}`)
-/// with per-node live/peak bytes in `RunReport::node_peak_bytes`. The
-/// topology only affects the `Space` plane's accounting — results remain
-/// bit-identical to the sequential oracle under every placement.
+/// Run over an item space sharded across an explicit topology.
+#[deprecated(note = "use rt::launch(plan, leaf, &ExecConfig) — the one launch surface")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_with_plane_on(
     kind: RuntimeKind,
@@ -195,22 +320,17 @@ pub fn run_with_plane_on(
     pool: &Pool,
     total_flops: f64,
 ) -> Result<RunReport> {
-    match plane {
-        DataPlane::Shared => {
-            let leaf: Arc<dyn LeafExec> = Arc::new(LeafRunner {
-                arrays: arrays.clone(),
-                kernels: kernels.clone(),
-            });
-            run_measured(kind, plan, &leaf, pool, total_flops, plane, None)
-        }
-        DataPlane::Space => {
-            let runner = SpaceLeafRunner::new(prog, arrays.clone(), kernels.clone())
-                .with_topology(topo.clone());
-            let space = runner.space.clone();
-            let leaf: Arc<dyn LeafExec> = Arc::new(runner);
-            run_measured(kind, plan, &leaf, pool, total_flops, plane, Some(&space))
-        }
-    }
+    let cfg = ExecConfig::new()
+        .runtime(kind)
+        .plane(plane)
+        .topology(topo.clone())
+        .threads(pool.n_workers);
+    execute_on_pool(
+        plan,
+        &LeafSpec::kernels(prog, arrays.clone(), kernels.clone(), total_flops),
+        &cfg,
+        pool,
+    )
 }
 
 #[cfg(test)]
@@ -225,11 +345,44 @@ mod tests {
         for kind in RuntimeKind::all() {
             let r = run(kind, &plan, &leaf, &pool, 1e6).unwrap();
             assert!(r.seconds > 0.0, "{kind:?}");
+            assert_eq!(r.config.backend, "threads");
+            assert_eq!(r.config.runtime, kind.name());
+            assert!(r.sim.is_none());
             if let RuntimeKind::Edt(_) = kind {
                 assert!(r.metrics.workers > 0, "{kind:?}: {:?}", r.metrics);
                 assert!(r.metrics.startups >= 1);
                 assert!(r.metrics.shutdowns >= 1);
             }
         }
+    }
+
+    #[test]
+    fn launch_dispatches_by_backend_and_runtime() {
+        let cfg = ExecConfig::new();
+        assert_eq!(backend_for(&cfg).name(), "engine");
+        assert_eq!(backend_for(&cfg.clone().runtime(RuntimeKind::Omp)).name(), "omp");
+        assert_eq!(backend_for(&cfg.backend(BackendKind::Des)).name(), "des");
+    }
+
+    #[test]
+    fn delta_reports_gauges_absolute_and_counters_relative() {
+        // the gauges shrink between snapshots: delta must report the
+        // after value, not saturate to zero
+        let a = MetricsSnapshot {
+            puts: 10,
+            space_live_bytes: 4096,
+            space_peak_bytes: 8192,
+            ..Default::default()
+        };
+        let b = MetricsSnapshot {
+            puts: 25,
+            space_live_bytes: 1024,
+            space_peak_bytes: 2048,
+            ..Default::default()
+        };
+        let d = delta(a, b);
+        assert_eq!(d.puts, 15);
+        assert_eq!(d.space_live_bytes, 1024);
+        assert_eq!(d.space_peak_bytes, 2048);
     }
 }

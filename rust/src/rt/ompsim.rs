@@ -159,6 +159,31 @@ fn exec_tag_body_seq(plan: &Arc<Plan>, leaf: &Arc<dyn LeafExec>, node_id: u32, c
     }
 }
 
+/// The real-execution backend for the OpenMP comparator: fork-join waves
+/// on a fresh pool of `cfg.threads` OS workers. One of the three
+/// retargets of the runtime-agnostic layer behind [`crate::rt::launch`].
+pub struct OmpBackend;
+
+impl crate::rt::Backend for OmpBackend {
+    fn name(&self) -> &'static str {
+        "omp"
+    }
+
+    fn execute(
+        &self,
+        plan: &Arc<Plan>,
+        leaf: &crate::rt::LeafSpec<'_>,
+        cfg: &crate::rt::ExecConfig,
+    ) -> anyhow::Result<crate::rt::RunReport> {
+        anyhow::ensure!(
+            cfg.runtime == crate::rt::RuntimeKind::Omp,
+            "OmpBackend runs the fork-join comparator; EDT runtimes resolve to EngineBackend"
+        );
+        let pool = Pool::new(cfg.threads);
+        super::execute_on_pool(plan, leaf, cfg, &pool)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

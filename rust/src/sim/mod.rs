@@ -21,20 +21,29 @@
 //! Everything is deterministic: same plan + config ⇒ same virtual time.
 //!
 //! The item-space data plane can additionally be sharded across `N`
-//! DES-simulated nodes (`simulate_sharded` + `space::placement`): each
-//! leaf EDT and the datablock it puts are placed on one node
-//! (owner-computes), and gets of items owned elsewhere are charged
-//! serialization plus a link hop (`CostModel::{link_latency_ns,
-//! link_bw_ns_per_byte}`) and tracked as remote traffic with per-node
-//! live/peak byte accounting — the distributed-memory cost model of the
-//! OCR/CnC-distrib lineage the paper's runtimes grew into.
+//! DES-simulated nodes (`space::placement`): each leaf EDT and the
+//! datablock it puts are placed on one node (owner-computes), and gets of
+//! items owned elsewhere are charged serialization plus a link hop
+//! (`CostModel::{link_latency_ns, link_bw_ns_per_byte}`) and tracked as
+//! remote traffic with per-node live/peak byte accounting — the
+//! distributed-memory cost model of the OCR/CnC-distrib lineage the
+//! paper's runtimes grew into. With `threads >= nodes` the scheduler is
+//! node-pinned too, and [`crate::rt::StealPolicy`] decides whether idle
+//! nodes may claim remote-ready leaf EDTs (inter-node EDT migration).
+//!
+//! The simulator is launched like every other backend: through
+//! [`crate::rt::launch`] with an [`crate::rt::ExecConfig`] naming
+//! [`crate::rt::BackendKind::Des`] ([`DesBackend`] implements the
+//! [`crate::rt::Backend`] trait).
 
 pub mod cost;
 pub mod des;
 pub mod omp;
 
 pub use cost::{CostModel, Machine};
-pub use des::{simulate, simulate_sharded, simulate_with_plane, SimReport};
+pub use des::{simulate, DesBackend, SimReport};
+#[allow(deprecated)]
+pub use des::{simulate_sharded, simulate_with_plane};
 pub use omp::simulate_omp;
 
 use crate::exec::plan::{ArenaBody, Plan};

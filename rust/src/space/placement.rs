@@ -131,6 +131,18 @@ impl Topology {
         self.nodes == 1
     }
 
+    /// Block-partition `threads` simulated workers across the nodes:
+    /// worker `w` runs on node `w * nodes / threads`. Monotone, and
+    /// covers every node exactly when `threads >= nodes` — the DES only
+    /// enables node-pinned scheduling in that regime (a node without a
+    /// worker could never drain its pinned leaf EDTs).
+    pub fn node_of_worker(&self, worker: usize, threads: usize) -> usize {
+        if self.nodes <= 1 || threads == 0 {
+            return 0;
+        }
+        (worker * self.nodes / threads).min(self.nodes - 1)
+    }
+
     /// The node owning a tag: a pure function of `(tag, topology)`.
     pub fn node_of(&self, tag: &[Value]) -> usize {
         if self.nodes <= 1 || tag.is_empty() {
@@ -207,6 +219,25 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s), "256 tags should touch all 8 nodes");
+    }
+
+    #[test]
+    fn worker_partition_is_monotone_and_covers_nodes() {
+        let t = Topology::new(4, Placement::Block, 0, 16);
+        // threads >= nodes: every node gets at least one worker
+        for threads in [4usize, 5, 8, 13] {
+            let owners: Vec<usize> = (0..threads).map(|w| t.node_of_worker(w, threads)).collect();
+            assert!(owners.windows(2).all(|p| p[0] <= p[1]), "{owners:?}");
+            let mut seen = [false; 4];
+            for &o in &owners {
+                assert!(o < 4);
+                seen[o] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "threads={threads}: {owners:?}");
+        }
+        // single node: everything on node 0
+        let s = Topology::single();
+        assert_eq!(s.node_of_worker(7, 8), 0);
     }
 
     #[test]

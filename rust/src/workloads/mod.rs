@@ -85,6 +85,18 @@ impl Instance {
         Arc::new(st)
     }
 
+    /// The [`crate::rt::LeafSpec`] for launching this instance over a
+    /// concrete array store (both data planes, real kernels): the
+    /// standard second argument of [`crate::rt::launch`].
+    pub fn leaf_spec(&self, arrays: &Arc<ArrayStore>) -> crate::rt::LeafSpec<'_> {
+        crate::rt::LeafSpec::kernels(
+            &self.prog,
+            arrays.clone(),
+            self.kernels.clone(),
+            self.total_flops,
+        )
+    }
+
     /// Total bytes of the shared data plane's dense `f32` arrays — the
     /// footprint the tuple space's get-count reclamation is measured
     /// against.

@@ -1,0 +1,241 @@
+//! The single launch surface: `ExecConfig` + `rt::launch`.
+//!
+//! Covers the api-redesign contract: builder defaults equal the old
+//! implicit defaults, CLI flags round-trip into the config, single-node
+//! `StealPolicy::Never` through `launch` is byte-identical to the
+//! deprecated `simulate_sharded` shim, oracle identity holds for every
+//! {runtime, plane, placement, steal} combination through `launch`, and
+//! the work-stealing knob reclaims idle time on a skewed triangular
+//! workload (the ROADMAP inter-node EDT migration item).
+
+use std::sync::Arc;
+use tale3::exec::ArrayStore;
+use tale3::ral::DepMode;
+use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
+use tale3::sim::SimReport;
+use tale3::space::{DataPlane, Placement, Topology};
+use tale3::workloads::{by_name, Instance, Size};
+
+fn oracle_arrays(inst: &Instance) -> Arc<ArrayStore> {
+    let arrays = inst.arrays();
+    tale3::exec::run_seq(&inst.prog, &inst.params, &arrays, &*inst.kernels);
+    arrays
+}
+
+/// Builder defaults must equal the implicit defaults of the pre-redesign
+/// entry points and the CLI (so a default `ExecConfig` reproduces what a
+/// bare `tale3 run <wl>` always did).
+#[test]
+fn builder_defaults_equal_old_implicit_defaults() {
+    let cfg = ExecConfig::default();
+    assert_eq!(cfg.backend, BackendKind::Threads);
+    assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::CncDep));
+    assert_eq!(cfg.plane, DataPlane::Shared);
+    assert!(cfg.topology.is_none());
+    assert_eq!(cfg.nodes, 1);
+    assert_eq!(cfg.placement, Placement::default());
+    assert_eq!(cfg.threads, 2);
+    assert_eq!(cfg.steal, StealPolicy::Never);
+    assert!(cfg.numa_pinned);
+    // the resolved single-node topology is the degenerate one the old
+    // entry points used
+    let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+    let plan = inst.plan().unwrap();
+    let topo = cfg.resolved_topology(&plan);
+    assert!(topo.is_single());
+    assert_eq!(topo, Topology::single());
+    let echo = cfg.echo_for(&topo);
+    assert_eq!(echo.backend, "threads");
+    assert_eq!(echo.runtime, "cnc-dep");
+    assert_eq!(echo.plane, "shared");
+    assert_eq!(echo.threads, 2);
+    assert_eq!(echo.nodes, 1);
+    assert_eq!(echo.steal, "never");
+}
+
+/// CLI flags → config round-trip: the exact flag set the `tale3` binary
+/// accepts produces the matching resolved config (and unknown flags are
+/// left alone).
+#[test]
+fn cli_flags_round_trip_into_config() {
+    let flags: &[(&str, Option<&str>)] = &[
+        ("size", Some("tiny")), // not a config knob: must be ignored
+        ("plane", Some("space")),
+        ("nodes", Some("4")),
+        ("placement", Some("block")),
+        ("steal", Some("remote-ready")),
+        ("threads", Some("8,16")), // CLI list: first entry seeds the config
+        ("runtime", Some("swarm")),
+        ("no-verify", None), // not a config knob
+    ];
+    let mut cfg = ExecConfig::default();
+    let mut consumed = Vec::new();
+    for (name, val) in flags {
+        if cfg.apply_cli_flag(name, *val) {
+            consumed.push(*name);
+        }
+    }
+    assert_eq!(
+        consumed,
+        vec!["plane", "nodes", "placement", "steal", "threads", "runtime"]
+    );
+    assert_eq!(cfg.plane, DataPlane::Space);
+    assert_eq!(cfg.nodes, 4);
+    assert_eq!(cfg.placement, Placement::Block);
+    assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+    assert_eq!(cfg.threads, 8);
+    assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::Swarm));
+    // the echo names exactly what was asked for
+    let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+    let plan = inst.plan().unwrap();
+    let echo = cfg.echo_for(&cfg.resolved_topology(&plan));
+    assert_eq!(
+        (echo.runtime, echo.plane, echo.nodes, echo.placement, echo.steal),
+        ("swarm", "space", 4, "block", "remote-ready")
+    );
+    // `--runtime all` leaves the runtime for the caller's loop
+    assert!(cfg.apply_cli_flag("runtime", Some("all")));
+    assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::Swarm));
+}
+
+fn launch_sim(plan: &Arc<tale3::Plan>, flops: f64, cfg: &ExecConfig) -> SimReport {
+    rt::launch(plan, &LeafSpec::cost_only(flops), cfg)
+        .expect("DES launch")
+        .sim
+        .expect("DES backend must carry the SimReport")
+}
+
+/// On a single node, `launch` with `StealPolicy::Never` is byte-identical
+/// to the deprecated PR 2 `simulate_sharded` entry point — the redesign
+/// moved the surface, not the semantics.
+#[test]
+#[allow(deprecated)]
+fn single_node_never_is_byte_identical_to_pr2_simulate_sharded() {
+    for name in ["JAC-2D-5P", "MATMULT", "LUD"] {
+        let inst = (by_name(name).unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        for plane in [DataPlane::Shared, DataPlane::Space] {
+            let shim = tale3::sim::simulate_sharded(
+                &plan,
+                DepMode::CncDep,
+                plane,
+                &Topology::single(),
+                8,
+                &tale3::sim::Machine::default(),
+                &tale3::sim::CostModel::default(),
+                true,
+                inst.total_flops,
+            );
+            let cfg = ExecConfig::new()
+                .backend(BackendKind::Des)
+                .plane(plane)
+                .threads(8)
+                .steal(StealPolicy::Never);
+            let r = launch_sim(&plan, inst.total_flops, &cfg);
+            assert_eq!(r.seconds.to_bits(), shim.seconds.to_bits(), "{name} {plane:?}");
+            assert_eq!(r.tasks, shim.tasks, "{name} {plane:?}");
+            assert_eq!(r.steals, shim.steals, "{name} {plane:?}");
+            assert_eq!(r.failed_gets, shim.failed_gets, "{name} {plane:?}");
+            assert_eq!(r.space_puts, shim.space_puts, "{name} {plane:?}");
+            assert_eq!(r.space_gets, shim.space_gets, "{name} {plane:?}");
+            assert_eq!(r.space_frees, shim.space_frees, "{name} {plane:?}");
+            assert_eq!(r.space_peak_bytes, shim.space_peak_bytes, "{name} {plane:?}");
+            assert_eq!(r.node_peak_bytes, shim.node_peak_bytes, "{name} {plane:?}");
+            assert_eq!(r.stolen_edts, 0, "{name} {plane:?}");
+        }
+    }
+}
+
+/// Oracle identity through `rt::launch` for every {runtime, plane,
+/// placement, steal} combination on the threads backend: the config
+/// changes measurement and placement accounting, never results.
+#[test]
+fn launch_oracle_identity_across_config_combinations() {
+    for name in ["JAC-2D-5P", "LUD"] {
+        let inst = (by_name(name).unwrap().build)(Size::Tiny);
+        let oracle = oracle_arrays(&inst);
+        let plan = inst.plan().unwrap();
+        for kind in RuntimeKind::all() {
+            for plane in [DataPlane::Shared, DataPlane::Space] {
+                for steal in StealPolicy::all() {
+                    let cfg = ExecConfig::new()
+                        .runtime(kind)
+                        .plane(plane)
+                        .threads(3)
+                        .nodes(2)
+                        .placement(Placement::Cyclic)
+                        .steal(steal);
+                    let arrays = inst.arrays();
+                    let leaf = inst.leaf_spec(&arrays);
+                    let r = rt::launch(&plan, &leaf, &cfg).unwrap_or_else(|e| {
+                        panic!("{name} {} {plane:?} {steal:?}: {e}", kind.name())
+                    });
+                    assert_eq!(
+                        oracle.max_abs_diff(&arrays),
+                        0.0,
+                        "{name} under {} {plane:?} {steal:?} diverged",
+                        kind.name()
+                    );
+                    assert_eq!(r.config.runtime, kind.name());
+                    assert_eq!(r.config.plane, plane.name());
+                    assert_eq!(r.config.steal, steal.name());
+                    if plane == DataPlane::Space {
+                        assert!(r.metrics.space_puts > 0, "{name} {}", kind.name());
+                        assert_eq!(
+                            r.metrics.space_puts, r.metrics.space_frees,
+                            "{name} {}: leaked datablocks",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The ROADMAP work-stealing item, end to end through the launch surface:
+/// a skewed triangular workload (LUD) over 4 block-placed nodes reports
+/// `stolen_edts > 0` and strictly lower virtual makespan under
+/// `RemoteReady` than under `Never`.
+#[test]
+fn remote_ready_beats_never_on_skewed_triangular_workload() {
+    let inst = (by_name("LUD").unwrap().build)(Size::Small);
+    let plan = inst.plan().unwrap();
+    let base = ExecConfig::new()
+        .backend(BackendKind::Des)
+        .plane(DataPlane::Space)
+        .threads(8)
+        .nodes(4)
+        .placement(Placement::Block);
+    let never = launch_sim(&plan, inst.total_flops, &base.clone().steal(StealPolicy::Never));
+    let steal = launch_sim(
+        &plan,
+        inst.total_flops,
+        &base.clone().steal(StealPolicy::RemoteReady),
+    );
+    assert_eq!(never.stolen_edts, 0, "Never must not migrate EDTs");
+    assert!(steal.stolen_edts > 0, "idle nodes must claim remote-ready leaves");
+    assert!(steal.steal_bytes > 0, "migrated leaves must pull input bytes");
+    assert!(
+        steal.seconds < never.seconds,
+        "RemoteReady must shorten the makespan: {} vs {}",
+        steal.seconds,
+        never.seconds
+    );
+    assert_eq!(steal.space_puts, steal.space_frees, "leak under migration");
+}
+
+/// The threads backend rejects launches it cannot honor, instead of
+/// silently running something else.
+#[test]
+fn launch_rejects_impossible_combinations() {
+    let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+    let plan = inst.plan().unwrap();
+    // cost-only leaf on the real backend
+    let cfg = ExecConfig::new();
+    assert!(rt::launch(&plan, &LeafSpec::cost_only(1.0), &cfg).is_err());
+    // opaque executor over the space plane
+    let noop: Arc<dyn tale3::rt::LeafExec> = Arc::new(tale3::rt::NoopLeaf);
+    let cfg = ExecConfig::new().plane(DataPlane::Space);
+    assert!(rt::launch(&plan, &LeafSpec::exec(noop, 1.0), &cfg).is_err());
+}

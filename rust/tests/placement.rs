@@ -1,13 +1,15 @@
 //! Sharded item space: placement determinism, oracle transparency under
 //! every policy, single-node parity (sharding is a pure refinement), and
 //! the distributed-memory accounting story (remote traffic, per-node
-//! peaks, hash-beats-block on frontier concentration).
+//! peaks, hash-beats-block on frontier concentration). All launches go
+//! through `rt::launch(ExecConfig)` — the deprecated shims are exercised
+//! only by the explicit parity test.
 
 use std::sync::Arc;
 use tale3::exec::ArrayStore;
 use tale3::ral::DepMode;
-use tale3::rt::{self, Pool, RuntimeKind};
-use tale3::sim::{simulate_sharded, simulate_with_plane, CostModel, Machine, SimReport};
+use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind};
+use tale3::sim::SimReport;
 use tale3::space::{DataPlane, Placement, Topology};
 use tale3::workloads::{by_name, registry, Instance, Size};
 
@@ -15,6 +17,22 @@ fn oracle_arrays(inst: &Instance) -> Arc<ArrayStore> {
     let arrays = inst.arrays();
     tale3::exec::run_seq(&inst.prog, &inst.params, &arrays, &*inst.kernels);
     arrays
+}
+
+fn sim_cfg(topo: &Topology) -> ExecConfig {
+    ExecConfig::new()
+        .backend(BackendKind::Des)
+        .runtime(RuntimeKind::Edt(DepMode::CncDep))
+        .plane(DataPlane::Space)
+        .topology(topo.clone())
+        .threads(8)
+}
+
+fn sim_sharded(inst: &Instance, plan: &Arc<tale3::Plan>, topo: &Topology) -> SimReport {
+    rt::launch(plan, &LeafSpec::cost_only(inst.total_flops), &sim_cfg(topo))
+        .expect("DES launch")
+        .sim
+        .expect("sim report")
 }
 
 /// Placement is a pure function of `(key, nodes)`: two topologies built
@@ -54,26 +72,21 @@ fn shard_map_is_deterministic_across_builds() {
 /// results.
 #[test]
 fn all_workloads_oracle_identical_under_four_nodes() {
-    let pool = Pool::new(3);
     for w in registry() {
         let inst = (w.build)(Size::Tiny);
         let oracle = oracle_arrays(&inst);
         let plan = inst.plan().expect("plan");
         for p in Placement::all() {
-            let topo = Topology::for_plan(&plan, 4, p);
+            let cfg = ExecConfig::new()
+                .runtime(RuntimeKind::Edt(DepMode::CncDep))
+                .plane(DataPlane::Space)
+                .nodes(4)
+                .placement(p)
+                .threads(3);
             let arrays = inst.arrays();
-            let r = rt::run_with_plane_on(
-                RuntimeKind::Edt(DepMode::CncDep),
-                DataPlane::Space,
-                &topo,
-                &plan,
-                &inst.prog,
-                &arrays,
-                &inst.kernels,
-                &pool,
-                inst.total_flops,
-            )
-            .unwrap_or_else(|e| panic!("{} under {p:?}: {e}", w.name));
+            let leaf = inst.leaf_spec(&arrays);
+            let r = rt::launch(&plan, &leaf, &cfg)
+                .unwrap_or_else(|e| panic!("{} under {p:?}: {e}", w.name));
             assert_eq!(
                 oracle.max_abs_diff(&arrays),
                 0.0,
@@ -88,29 +101,21 @@ fn all_workloads_oracle_identical_under_four_nodes() {
             );
             assert_eq!(r.metrics.space_live_bytes, 0, "{} {p:?}", w.name);
             assert_eq!(r.node_peak_bytes.len(), 4, "{} {p:?}", w.name);
+            assert_eq!(r.config.nodes, 4, "{} {p:?}", w.name);
+            assert_eq!(r.config.placement, p.name(), "{} {p:?}", w.name);
         }
     }
 }
 
-fn sim_sharded(inst: &Instance, plan: &tale3::Plan, topo: &Topology) -> SimReport {
-    simulate_sharded(
-        plan,
-        DepMode::CncDep,
-        DataPlane::Space,
-        topo,
-        8,
-        &Machine::default(),
-        &CostModel::default(),
-        true,
-        inst.total_flops,
-    )
-}
-
-/// `--nodes 1` is a pure refinement: the sharded simulator reports
-/// byte-for-byte the same sim time and metrics as the PR 1 space plane,
-/// under every placement policy (one node leaves no placement choice).
+/// `--nodes 1` is a pure refinement: the deprecated sharded shim reports
+/// byte-for-byte the same sim time and metrics as the deprecated
+/// single-node plane shim, under every placement policy (one node leaves
+/// no placement choice) — and `rt::launch` matches both (see also
+/// `tests/exec_config.rs` for the launch-vs-shim identity).
 #[test]
+#[allow(deprecated)]
 fn single_node_sharding_is_byte_identical_to_space_plane() {
+    use tale3::sim::{simulate_sharded, simulate_with_plane, CostModel, Machine};
     for name in ["JAC-2D-5P", "MATMULT"] {
         let inst = (by_name(name).unwrap().build)(Size::Tiny);
         let plan = inst.plan().unwrap();
@@ -126,7 +131,17 @@ fn single_node_sharding_is_byte_identical_to_space_plane() {
         );
         for p in Placement::all() {
             let topo = Topology::for_plan(&plan, 1, p);
-            let r = sim_sharded(&inst, &plan, &topo);
+            let r = simulate_sharded(
+                &plan,
+                DepMode::CncDep,
+                DataPlane::Space,
+                &topo,
+                8,
+                &Machine::default(),
+                &CostModel::default(),
+                true,
+                inst.total_flops,
+            );
             assert_eq!(r.seconds.to_bits(), base.seconds.to_bits(), "{name} {p:?}");
             assert_eq!(r.tasks, base.tasks, "{name} {p:?}");
             assert_eq!(r.steals, base.steals, "{name} {p:?}");
@@ -136,6 +151,9 @@ fn single_node_sharding_is_byte_identical_to_space_plane() {
             assert_eq!(r.space_peak_bytes, base.space_peak_bytes, "{name} {p:?}");
             assert_eq!(r.space_remote_gets, 0, "{name} {p:?}");
             assert_eq!(r.node_peak_bytes, vec![r.space_peak_bytes], "{name} {p:?}");
+            // launch agrees with the shims bit for bit
+            let via_launch = sim_sharded(&inst, &plan, &topo);
+            assert_eq!(via_launch.seconds.to_bits(), base.seconds.to_bits(), "{name} {p:?}");
         }
     }
 }
@@ -196,21 +214,15 @@ fn real_runtime_counts_remote_gets() {
     let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
     let oracle = oracle_arrays(&inst);
     let plan = inst.plan().expect("plan");
-    let pool = Pool::new(2);
-    let topo = Topology::for_plan(&plan, 4, Placement::Cyclic);
+    let cfg = ExecConfig::new()
+        .runtime(RuntimeKind::Edt(DepMode::CncDep))
+        .plane(DataPlane::Space)
+        .nodes(4)
+        .placement(Placement::Cyclic)
+        .threads(2);
     let arrays = inst.arrays();
-    let r = rt::run_with_plane_on(
-        RuntimeKind::Edt(DepMode::CncDep),
-        DataPlane::Space,
-        &topo,
-        &plan,
-        &inst.prog,
-        &arrays,
-        &inst.kernels,
-        &pool,
-        inst.total_flops,
-    )
-    .expect("run");
+    let leaf = inst.leaf_spec(&arrays);
+    let r = rt::launch(&plan, &leaf, &cfg).expect("run");
     assert_eq!(oracle.max_abs_diff(&arrays), 0.0);
     assert!(r.metrics.space_remote_gets > 0);
     assert!(r.metrics.space_remote_bytes > 0);
@@ -221,7 +233,8 @@ fn real_runtime_counts_remote_gets() {
 
 /// The bench JSON report is deterministic — two renders are
 /// byte-identical — and contains virtual-time fields only (no wall-clock
-/// timestamps, hostnames, or paths).
+/// timestamps, hostnames, or paths). Schema v2 carries the resolved
+/// config echo and the steal counters.
 #[test]
 fn bench_report_json_is_deterministic_and_virtual_only() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
@@ -232,14 +245,56 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     let a = perf_report_json(&cfg);
     let b = perf_report_json(&cfg);
     assert_eq!(a, b, "two consecutive quick runs must produce identical JSON");
-    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v1\""));
+    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v2\""));
+    assert!(a.contains("\"config\":{\"backend\":\"des\""));
     assert!(a.contains("\"JAC-2D-5P\""));
     assert!(a.contains("\"remote_gets\""));
     assert!(a.contains("\"node_peak_bytes\""));
+    assert!(a.contains("\"sharded_steal\""));
+    assert!(a.contains("\"stolen_edts\""));
+    assert!(a.contains("\"steal_bytes\""));
     for host_dependent in ["wall", "timestamp", "hostname", "date", "epoch", "/root", "/home"] {
         assert!(
             !a.contains(host_dependent),
             "report must not contain host-dependent field `{host_dependent}`"
         );
+    }
+}
+
+/// The v2 key set matches the committed golden file (the same list CI's
+/// golden-file job asserts against the built artifact), so schema drift
+/// is a reviewed change, not an accident.
+#[test]
+fn bench_report_v2_keys_match_golden_file() {
+    use tale3::bench::report::{perf_report_json, ReportConfig};
+    let golden = include_str!("../ci/bench-report-v2.keys");
+    let json = perf_report_json(&ReportConfig {
+        quick: true,
+        ..Default::default()
+    });
+    // every golden key must appear in the rendered JSON as a quoted key
+    for key in golden.lines().filter(|l| !l.is_empty()) {
+        assert!(
+            json.contains(&format!("\"{key}\":")),
+            "golden key `{key}` missing from the v2 report"
+        );
+    }
+    // and every quoted key in the JSON must be in the golden list
+    let golden_set: std::collections::HashSet<&str> =
+        golden.lines().filter(|l| !l.is_empty()).collect();
+    let mut rest = json.as_str();
+    while let Some(start) = rest.find('"') {
+        let tail = &rest[start + 1..];
+        let Some(end) = tail.find('"') else { break };
+        let token = &tail[..end];
+        let after = &tail[end + 1..];
+        if after.starts_with(':') {
+            assert!(
+                golden_set.contains(token),
+                "report key `{token}` is not in ci/bench-report-v2.keys — \
+                 update the golden file deliberately"
+            );
+        }
+        rest = after;
     }
 }

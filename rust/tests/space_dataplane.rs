@@ -8,12 +8,13 @@
 //! invariants: every published datablock is freed by its last consumer
 //! (puts == frees, zero live bytes after the run), and for a multi-
 //! timestep Jacobi stencil the peak live bytes stay strictly below the
-//! shared plane's full time-expanded array footprint.
+//! shared plane's full time-expanded array footprint. Every run goes
+//! through `rt::launch(ExecConfig)`.
 
 use std::sync::Arc;
 use tale3::exec::ArrayStore;
 use tale3::ral::DepMode;
-use tale3::rt::{self, Pool, RuntimeKind};
+use tale3::rt::{self, ExecConfig, RuntimeKind};
 use tale3::space::DataPlane;
 use tale3::workloads::{by_name, Instance, Size};
 
@@ -28,20 +29,15 @@ fn check_space_plane(name: &str, threads: usize) {
     let inst = (w.build)(Size::Tiny);
     let oracle = oracle_arrays(&inst);
     let plan = inst.plan().expect("plan");
-    let pool = Pool::new(threads);
     for kind in RuntimeKind::all() {
+        let cfg = ExecConfig::new()
+            .runtime(kind)
+            .plane(DataPlane::Space)
+            .threads(threads);
         let arrays = inst.arrays();
-        let r = rt::run_with_plane(
-            kind,
-            DataPlane::Space,
-            &plan,
-            &inst.prog,
-            &arrays,
-            &inst.kernels,
-            &pool,
-            inst.total_flops,
-        )
-        .unwrap_or_else(|e| panic!("{name} under {} (space): {e}", kind.name()));
+        let leaf = inst.leaf_spec(&arrays);
+        let r = rt::launch(&plan, &leaf, &cfg)
+            .unwrap_or_else(|e| panic!("{name} under {} (space): {e}", kind.name()));
         let diff = oracle.max_abs_diff(&arrays);
         assert_eq!(
             diff,
@@ -65,6 +61,7 @@ fn check_space_plane(name: &str, threads: usize) {
             "{name} under {}: live bytes after a complete run",
             kind.name()
         );
+        assert_eq!(r.config.plane, "space", "{name}: config echo names the plane");
     }
 }
 
@@ -125,18 +122,12 @@ fn get_count_reclamation_bounds_live_memory() {
     let plan = inst.plan_with(&opts).expect("plan");
     let arrays = inst.arrays();
     let shared_bytes = inst.shared_footprint_bytes();
-    let pool = Pool::new(2);
-    let r = rt::run_with_plane(
-        RuntimeKind::Edt(DepMode::CncDep),
-        DataPlane::Space,
-        &plan,
-        &inst.prog,
-        &arrays,
-        &inst.kernels,
-        &pool,
-        inst.total_flops,
-    )
-    .expect("run");
+    let cfg = ExecConfig::new()
+        .runtime(RuntimeKind::Edt(DepMode::CncDep))
+        .plane(DataPlane::Space)
+        .threads(2);
+    let leaf = inst.leaf_spec(&arrays);
+    let r = rt::launch(&plan, &leaf, &cfg).expect("run");
     assert!(r.metrics.space_peak_bytes > 0);
     assert!(
         r.metrics.space_peak_bytes < shared_bytes,
@@ -159,20 +150,15 @@ fn two_level_hierarchy_space_plane() {
         let mut opts = inst.map_opts.clone();
         opts.level_split = vec![2];
         let plan = inst.plan_with(&opts).unwrap();
-        let pool = Pool::new(3);
         for mode in [DepMode::CncDep, DepMode::Ocr, DepMode::Swarm] {
+            let cfg = ExecConfig::new()
+                .runtime(RuntimeKind::Edt(mode))
+                .plane(DataPlane::Space)
+                .threads(3);
             let arrays = inst.arrays();
-            rt::run_with_plane(
-                RuntimeKind::Edt(mode),
-                DataPlane::Space,
-                &plan,
-                &inst.prog,
-                &arrays,
-                &inst.kernels,
-                &pool,
-                inst.total_flops,
-            )
-            .unwrap_or_else(|e| panic!("{name} 2-level space {}: {e}", mode.name()));
+            let leaf = inst.leaf_spec(&arrays);
+            rt::launch(&plan, &leaf, &cfg)
+                .unwrap_or_else(|e| panic!("{name} 2-level space {}: {e}", mode.name()));
             assert_eq!(oracle.max_abs_diff(&arrays), 0.0, "{name} 2-level {mode:?}");
         }
     }
