@@ -9,18 +9,23 @@
 //! (`tests/placement.rs` asserts this), so CI artifacts diff cleanly
 //! run-to-run and PR-to-PR.
 //!
-//! **Schema `tale3-bench-report/v2`:** the document opens with a `config`
+//! **Schema `tale3-bench-report/v3`:** the document opens with a `config`
 //! object — the fully-resolved [`ExecConfig`] echo every cell ran under —
 //! and each workload carries three cells side by side: the single-node
 //! space-plane baseline (`single`), the sharded topology under strict
 //! owner-computes (`sharded`), and the same topology with inter-node EDT
 //! migration (`sharded_steal`), whose `stolen_edts`/`steal_bytes`
-//! counters quantify the work-stealing win. CI's golden-file job asserts
-//! the v2 key set is stable across runs.
+//! counters quantify the work-stealing win. v3 additionally captures the
+//! `sharded_steal` cell as a full execution trace and verbatim-replays
+//! it through [`crate::rt::ReplayBackend`]: the boolean
+//! `replay_verified` asserts the trace subsystem reproduced the cell's
+//! `SimReport` bit-for-bit (tracing is pure observation, so the cell's
+//! numbers are identical to an untraced run). CI's golden-file job
+//! asserts the v3 key set is stable across runs.
 
 use crate::ral::DepMode;
 use crate::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
-use crate::sim::SimReport;
+use crate::sim::{SimReport, TraceMode};
 use crate::space::{DataPlane, Placement};
 use crate::workloads::{registry, Size};
 
@@ -113,14 +118,19 @@ fn cell(r: &SimReport) -> String {
 }
 
 /// The resolved-config echo object (the reproducibility header) —
-/// derived from the same `ExecConfig` the sharded cells launch with, so
-/// the header can never drift from what actually ran.
+/// derived from the exact `ExecConfig` the `sharded_steal` cell
+/// launches with, so the header can never drift from that launch. As
+/// with `steal`, the `trace` field describes the steal cell (the one
+/// captured and replay-verified); `single`/`sharded` run the same
+/// knobs minus topology/steal/trace.
 fn config_obj(cfg: &ReportConfig) -> String {
-    let ec = cfg.exec_config(cfg.nodes, cfg.steal);
+    let ec = cfg
+        .exec_config(cfg.nodes, cfg.steal)
+        .trace(TraceMode::Full); // the sharded_steal launch descriptor
     format!(
         "{{\"backend\":{},\"runtime\":{},\"plane\":{},\"size\":{},\
          \"quick\":{},\"threads\":{},\"nodes\":{},\"placement\":{},\
-         \"steal\":{},\"numa_pinned\":{}}}",
+         \"steal\":{},\"numa_pinned\":{},\"trace\":{}}}",
         jstr(ec.backend.name()),
         jstr(ec.runtime.name()),
         jstr(ec.plane.name()),
@@ -131,6 +141,7 @@ fn config_obj(cfg: &ReportConfig) -> String {
         jstr(ec.placement.name()),
         jstr(ec.steal.name()),
         ec.numa_pinned,
+        jstr(ec.trace.name()),
     )
 }
 
@@ -152,23 +163,34 @@ pub fn perf_report_json(cfg: &ReportConfig) -> String {
         };
         let single = sim_cell(&cfg.exec_config(1, StealPolicy::Never));
         let sharded = sim_cell(&cfg.exec_config(cfg.nodes, StealPolicy::Never));
-        // --steal never makes the steal cell identical to the baseline:
-        // reuse it instead of sweeping all workloads a third time
-        let stolen = if cfg.steal == StealPolicy::Never {
-            sharded.clone()
-        } else {
-            sim_cell(&cfg.exec_config(cfg.nodes, cfg.steal))
-        };
+        // the steal cell is always launched (even when --steal never
+        // duplicates the baseline) because it doubles as the trace
+        // fixture: captured in full, then verbatim-replayed — tracing is
+        // pure observation, so the cell's numbers match an untraced run
+        let traced = rt::launch(
+            &plan,
+            &leaf,
+            &cfg.exec_config(cfg.nodes, cfg.steal).trace(TraceMode::Full),
+        )
+        .expect("DES launch");
+        let stolen = traced.sim.expect("DES backend carries a SimReport");
+        let replay_verified = traced
+            .trace
+            .as_ref()
+            .map(|t| crate::rt::replay_trace(t, crate::rt::ReplayMode::Verbatim, &t.cost).is_ok())
+            .unwrap_or(false);
         workloads.push(format!(
-            "{{\"name\":{},\"single\":{},\"sharded\":{},\"sharded_steal\":{}}}",
+            "{{\"name\":{},\"single\":{},\"sharded\":{},\"sharded_steal\":{},\
+             \"replay_verified\":{}}}",
             jstr(w.name),
             cell(&single),
             cell(&sharded),
             cell(&stolen),
+            replay_verified,
         ));
     }
     format!(
-        "{{\"schema\":\"tale3-bench-report/v2\",\"config\":{},\"workloads\":[{}]}}\n",
+        "{{\"schema\":\"tale3-bench-report/v3\",\"config\":{},\"workloads\":[{}]}}\n",
         config_obj(cfg),
         workloads.join(",")
     )
@@ -227,5 +249,6 @@ mod tests {
         assert!(o.contains("\"size\":\"tiny\""));
         assert!(o.contains("\"steal\":\"remote-ready\""));
         assert!(o.contains("\"nodes\":4"));
+        assert!(o.contains("\"trace\":\"full\""));
     }
 }

@@ -36,5 +36,8 @@ pub use edt::{map_program, EdtTree, MapOptions};
 pub use exec::Plan;
 pub use ir::{Program, ProgramBuilder};
 pub use ral::DepMode;
-pub use rt::{launch, Backend, BackendKind, ExecConfig, LeafSpec, Pool, RuntimeKind, StealPolicy};
+pub use rt::{
+    launch, Backend, BackendKind, ExecConfig, LeafSpec, Pool, ReplayBackend, RuntimeKind,
+    StealPolicy, TraceMode,
+};
 pub use space::{DataPlane, Placement, Topology};

@@ -5,17 +5,24 @@
 //!   `explain <wl> [--size S]`           dump deps, schedule and EDT tree
 //!   `run <wl> [opts]`                   execute on the real runtimes
 //!   `sim <wl> [opts]`                   simulate on the modeled testbed
+//!   `trace capture <wl> [opts]`         capture a DES execution trace
+//!   `trace replay <file>`               verbatim replay (audit) of a trace
+//!   `trace recost <file> [opts]`        what-if replay under new link costs
+//!   `trace summarize <file>`            per-node timelines + steal provenance
 //!   `bench-report [opts]`               deterministic perf JSON (CI artifact)
 //!   `table <1|2|3|4|5|fig2>`            pointers to the bench targets
 //!
-//! `run` and `sim` build one `rt::ExecConfig` from the flags and go
-//! through `rt::launch` — the same launch surface the library exposes;
-//! the subcommand only picks the backend (threads vs DES).
+//! `run`, `sim` and `trace capture` build one `rt::ExecConfig` from the
+//! flags and go through `rt::launch` — the same launch surface the
+//! library exposes; the subcommand only picks the backend (threads vs
+//! DES). An unrecognized value for a config flag is a hard error, never
+//! a silent default.
 //!
 //! Common options: `--size tiny|small|paper`, `--runtime cnc-block|cnc-async|
 //! cnc-dep|swarm|ocr|omp|all`, `--threads N`, `--tiles a,b,c`, `--levels k`,
 //! `--gran N`, `--no-verify`, `--plane shared|space`, `--nodes N`,
-//! `--placement block|cyclic|hash`, `--steal never|remote-ready`.
+//! `--placement block|cyclic|hash`, `--steal never|remote-ready`,
+//! `--trace off|schedule|full`.
 //! (Argument parsing is hand-rolled: clap is not in the offline crate set.)
 
 use tale3::analysis::build_gdg;
@@ -25,7 +32,7 @@ use tale3::edt::stats::characterize;
 use tale3::ral::DepMode;
 use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
 use tale3::sim::SimReport;
-use tale3::space::{DataPlane, Placement};
+use tale3::space::DataPlane;
 use tale3::workloads::{by_name, registry, Size};
 
 struct Args {
@@ -68,26 +75,26 @@ impl Args {
             _ => Size::Small,
         }
     }
-    fn nodes(&self, default: usize) -> usize {
-        self.flag("nodes")
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(default)
-            .max(1)
-    }
-    fn placement(&self) -> Placement {
-        self.flag("placement")
-            .and_then(Placement::parse)
-            .unwrap_or_default()
-    }
     /// One launch descriptor from the config-shaped flags (`--plane`,
-    /// `--nodes`, `--placement`, `--steal`, `--threads`, `--runtime`);
-    /// non-config flags are left for the subcommand's own parsing.
-    fn exec_config(&self, backend: BackendKind) -> ExecConfig {
+    /// `--nodes`, `--placement`, `--steal`, `--trace`, `--threads`,
+    /// `--runtime`); non-config flags are left for the subcommand's own
+    /// parsing. A config flag with a bad value aborts the launch.
+    fn exec_config(&self, backend: BackendKind) -> anyhow::Result<ExecConfig> {
         let mut cfg = ExecConfig::new().backend(backend);
         for (name, val) in &self.flags {
-            cfg.apply_cli_flag(name, val.as_deref());
+            cfg.apply_cli_flag(name, val.as_deref())?;
         }
-        cfg
+        Ok(cfg)
+    }
+    /// An optional f64 flag (cost-model overrides for `trace recost`).
+    fn f64_flag(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`")),
+        }
     }
     fn runtimes(&self) -> Vec<RuntimeKind> {
         match self.flag("runtime").unwrap_or("all") {
@@ -168,7 +175,7 @@ fn main() -> anyhow::Result<()> {
             } else {
                 None
             };
-            let base = args.exec_config(BackendKind::Threads);
+            let base = args.exec_config(BackendKind::Threads)?;
             let topo = base.resolved_topology(&plan);
             // pin the resolved topology so per-runtime launches don't
             // re-derive the placement from the plan
@@ -234,7 +241,7 @@ fn main() -> anyhow::Result<()> {
                 .flag("threads")
                 .map(|t| t.split(',').filter_map(|x| x.parse().ok()).collect())
                 .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]);
-            let base = args.exec_config(BackendKind::Des);
+            let base = args.exec_config(BackendKind::Des)?;
             let topo = base.resolved_topology(&plan);
             // pin the resolved topology: one placement derivation, not
             // one per (runtime × thread-count) cell
@@ -294,20 +301,135 @@ fn main() -> anyhow::Result<()> {
                 }
             }
         }
+        "trace" => {
+            use tale3::rt::{replay_trace, ReplayMode, Trace, TraceMode};
+            let sub = args.positional.get(1).map(String::as_str).unwrap_or("help");
+            let read_trace = |pos: usize| -> anyhow::Result<Trace> {
+                let path = args.positional.get(pos).ok_or_else(|| {
+                    anyhow::anyhow!("trace {sub} <file.trace.jsonl>")
+                })?;
+                let trace = Trace::parse(&std::fs::read_to_string(path)?)?;
+                trace.validate()?;
+                Ok(trace)
+            };
+            match sub {
+                "capture" => {
+                    let name = args
+                        .positional
+                        .get(2)
+                        .ok_or_else(|| anyhow::anyhow!("trace capture <workload> [--out F]"))?;
+                    let inst = (by_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?
+                        .build)(args.size());
+                    let opts = args.map_opts(&inst.map_opts);
+                    let plan = inst.plan_with(&opts)?;
+                    let mut cfg = args.exec_config(BackendKind::Des)?;
+                    if cfg.trace == TraceMode::Off {
+                        cfg.trace = TraceMode::Full; // capture means capture
+                    }
+                    let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg)?;
+                    let trace = r
+                        .trace
+                        .ok_or_else(|| anyhow::anyhow!("DES launch returned no trace"))?;
+                    let out = args
+                        .flag("out")
+                        .map(String::from)
+                        .unwrap_or_else(|| format!("{}.trace.jsonl", name.to_lowercase()));
+                    std::fs::write(&out, trace.to_jsonl())?;
+                    println!(
+                        "captured {} events ({} mode) to {out}; virtual makespan {:.6}s, \
+                         {} tasks, {} stolen EDTs",
+                        trace.events.len(),
+                        trace.mode.name(),
+                        trace.report.seconds,
+                        trace.report.tasks,
+                        trace.report.stolen_edts
+                    );
+                }
+                "replay" => {
+                    let trace = read_trace(2)?;
+                    let r = replay_trace(&trace, ReplayMode::Verbatim, &trace.cost)?;
+                    println!(
+                        "verbatim replay of {} ({} events): makespan {:.6}s, {} tasks, \
+                         {} stolen EDTs — SimReport reproduced bit-for-bit",
+                        trace.workload,
+                        trace.events.len(),
+                        r.seconds,
+                        r.tasks,
+                        r.stolen_edts
+                    );
+                }
+                "recost" => {
+                    let trace = read_trace(2)?;
+                    let mut atoms = trace.cost.clone();
+                    if let Some(v) = args.f64_flag("link-bw")? {
+                        atoms.link_bw_ns_per_byte = v;
+                    }
+                    if let Some(v) = args.f64_flag("link-latency")? {
+                        atoms.link_latency_ns = v;
+                    }
+                    if let Some(v) = args.f64_flag("steal-ns")? {
+                        atoms.steal_ns = v;
+                    }
+                    if let Some(v) = args.f64_flag("copy-ns-per-byte")? {
+                        atoms.space_copy_ns_per_byte = v;
+                    }
+                    if let Some(v) = args.f64_flag("space-get-ns")? {
+                        atoms.space_get_ns = v;
+                    }
+                    if let Some(v) = args.f64_flag("space-put-ns")? {
+                        atoms.space_put_ns = v;
+                    }
+                    let r = replay_trace(&trace, ReplayMode::Recost, &atoms)?;
+                    let base = trace.report.seconds;
+                    println!(
+                        "re-cost replay of {} (same schedule, re-priced link/data-plane \
+                         atoms):\n  captured makespan {:.6}s -> replayed {:.6}s ({:+.1}%)\n  \
+                         atoms: link_latency {} ns, link_bw {} ns/B, copy {} ns/B, \
+                         steal {} ns, get {} ns, put {} ns",
+                        trace.workload,
+                        base,
+                        r.seconds,
+                        (r.seconds / base - 1.0) * 100.0,
+                        atoms.link_latency_ns,
+                        atoms.link_bw_ns_per_byte,
+                        atoms.space_copy_ns_per_byte,
+                        atoms.steal_ns,
+                        atoms.space_get_ns,
+                        atoms.space_put_ns,
+                    );
+                }
+                "summarize" => {
+                    let trace = read_trace(2)?;
+                    print!("{}", trace.summarize());
+                }
+                _ => {
+                    println!("usage: tale3 trace <capture|replay|recost|summarize> ...");
+                    println!("  capture <wl> [--size S] [--plane space] [--nodes N] [--placement P]");
+                    println!("               [--steal S] [--threads N] [--trace schedule|full] [--out F]");
+                    println!("  replay <file>                verbatim replay; verifies the SimReport");
+                    println!("  recost <file> [--link-bw X] [--link-latency X] [--steal-ns X]");
+                    println!("                [--copy-ns-per-byte X] [--space-get-ns X] [--space-put-ns X]");
+                    println!("  summarize <file>             per-node timelines, steal provenance");
+                }
+            }
+        }
         "bench-report" => {
+            // parse the config-shaped flags through the same validated
+            // path as run/sim (bad values hard-error), then overlay the
+            // report's own defaults where a flag was absent
+            let base = args.exec_config(BackendKind::Des)?;
             let cfg = ReportConfig {
                 quick: args.has("quick"),
-                nodes: args.nodes(4),
-                placement: args.placement(),
-                // single-cell report: take the first entry of an N[,N..] list
-                threads: args
-                    .flag("threads")
-                    .and_then(|s| s.split(',').next()?.trim().parse().ok())
-                    .unwrap_or(8),
-                steal: args
-                    .flag("steal")
-                    .and_then(StealPolicy::parse)
-                    .unwrap_or(StealPolicy::RemoteReady),
+                nodes: if args.has("nodes") { base.nodes } else { 4 },
+                placement: base.placement,
+                // single-cell report: the first entry of an N[,N..] list
+                threads: if args.has("threads") { base.threads } else { 8 },
+                steal: if args.has("steal") {
+                    base.steal
+                } else {
+                    StealPolicy::RemoteReady
+                },
                 ..Default::default()
             };
             let json = perf_report_json(&cfg);
@@ -332,7 +454,7 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             println!("tale3 — A Tale of Three Runtimes (reproduction)");
-            println!("usage: tale3 <list|explain|run|sim|bench-report|table> [workload]");
+            println!("usage: tale3 <list|explain|run|sim|trace|bench-report|table> [workload]");
             println!("       [--size tiny|small|paper]");
             println!("       [--runtime cnc-block|cnc-async|cnc-dep|swarm|ocr|omp|all]");
             println!("       [--threads N[,N..]] [--tiles a,b,c] [--levels k] [--gran n] [--no-verify]");
@@ -340,8 +462,13 @@ fn main() -> anyhow::Result<()> {
             println!("       [--nodes N] [--placement block|cyclic|hash]   (sharded item space)");
             println!("       [--steal never|remote-ready]   (DES: may idle nodes claim remote-ready");
             println!("                    leaf EDTs, paying the input-datablock transfers?)");
+            println!("       [--trace off|schedule|full]    (DES: record an execution trace; the");
+            println!("                    capture rides in RunReport::trace / `tale3 trace capture`)");
+            println!("       trace <capture|replay|recost|summarize>   (postmortem scheduling studies:");
+            println!("                    capture a tale3-trace/v1 JSONL, audit-replay it, re-price");
+            println!("                    link costs without re-simulating, or view per-node timelines)");
             println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P] [--steal S]");
-            println!("                    (deterministic perf JSON: virtual time only, schema v2)");
+            println!("                    (deterministic perf JSON: virtual time only, schema v3)");
             println!();
             println!("run and sim share one launch surface: every flag combination is an");
             println!("rt::ExecConfig handed to rt::launch; the subcommand picks the backend");

@@ -22,9 +22,9 @@ use crate::exec::plan::Plan;
 use crate::exec::{ArrayStore, KernelSet};
 use crate::ir::Program;
 use crate::ral::DepMode;
-use crate::sim::{CostModel, Machine};
+use crate::sim::{CostModel, Machine, TraceMode};
 use crate::space::{DataPlane, Placement, Topology};
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// Whether an idle node may claim leaf EDTs pinned to another node.
@@ -115,6 +115,11 @@ pub struct ExecConfig {
     pub placement: Placement,
     pub threads: usize,
     pub steal: StealPolicy,
+    /// Execution-trace capture (DES backend only): `Off` records nothing,
+    /// `Schedule` records task lifecycle + migrations, `Full` adds the
+    /// data-plane events. The captured [`crate::sim::Trace`] rides along
+    /// in [`RunReport::trace`]; tracing never perturbs the simulation.
+    pub trace: TraceMode,
     pub cost: CostModel,
     pub machine: Machine,
     pub numa_pinned: bool,
@@ -135,6 +140,7 @@ impl Default for ExecConfig {
             placement: Placement::default(),
             threads: 2,
             steal: StealPolicy::default(),
+            trace: TraceMode::Off,
             cost: CostModel::default(),
             machine: Machine::default(),
             numa_pinned: true,
@@ -187,6 +193,11 @@ impl ExecConfig {
         self
     }
 
+    pub fn trace(mut self, t: TraceMode) -> Self {
+        self.trace = t;
+        self
+    }
+
     pub fn cost(mut self, c: CostModel) -> Self {
         self.cost = c;
         self
@@ -225,65 +236,86 @@ impl ExecConfig {
             placement: topo.placement().name(),
             steal: self.steal.name(),
             numa_pinned: self.numa_pinned,
+            trace: self.trace.name(),
         }
     }
 
     /// Recognize one CLI flag (`--name value`) as a config knob and apply
-    /// it. Returns `true` when the flag was consumed; unknown flags (and
-    /// non-config flags like `--size` or `--no-verify`) return `false`
-    /// so the caller's own parsing keeps working. Multi-valued flags
-    /// (`--threads 1,2,4`, `--runtime all`) apply their first / no value
-    /// here — the CLI loops over the rest itself.
-    pub fn apply_cli_flag(&mut self, name: &str, value: Option<&str>) -> bool {
+    /// it. `Ok(true)` means the flag was consumed; unknown flags (and
+    /// non-config flags like `--size` or `--no-verify`) return
+    /// `Ok(false)` so the caller's own parsing keeps working. A config
+    /// flag with a missing or unrecognized value is a hard error — a typo
+    /// like `--steal remote` must never silently run the default policy.
+    /// Multi-valued flags (`--threads 1,2,4`, `--runtime all`) apply
+    /// their first / no value here — the CLI loops over the rest itself.
+    pub fn apply_cli_flag(&mut self, name: &str, value: Option<&str>) -> Result<bool> {
+        fn need<'v>(name: &str, value: Option<&'v str>) -> Result<&'v str> {
+            value.ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))
+        }
         match name {
             "plane" => {
-                if let Some(v) = value {
-                    self.plane = if v == "space" {
-                        DataPlane::Space
-                    } else {
-                        DataPlane::Shared
-                    };
-                }
-                true
+                self.plane = match need(name, value)? {
+                    "shared" => DataPlane::Shared,
+                    "space" => DataPlane::Space,
+                    v => bail!("unknown --plane value `{v}` (expected shared|space)"),
+                };
+                Ok(true)
             }
             "nodes" => {
-                if let Some(n) = value.and_then(|v| v.parse().ok()) {
-                    self.nodes = std::cmp::max(n, 1);
-                }
-                true
+                let v = need(name, value)?;
+                let n: usize = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--nodes expects an integer, got `{v}`"))?;
+                self.nodes = std::cmp::max(n, 1);
+                Ok(true)
             }
             "placement" => {
-                if let Some(p) = value.and_then(Placement::parse) {
-                    self.placement = p;
-                }
-                true
+                let v = need(name, value)?;
+                self.placement = Placement::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown --placement value `{v}` (expected block|cyclic|hash)")
+                })?;
+                Ok(true)
             }
             "steal" => {
-                if let Some(s) = value.and_then(StealPolicy::parse) {
-                    self.steal = s;
-                }
-                true
+                let v = need(name, value)?;
+                self.steal = StealPolicy::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown --steal value `{v}` (expected never|remote-ready)")
+                })?;
+                Ok(true)
+            }
+            "trace" => {
+                let v = need(name, value)?;
+                self.trace = TraceMode::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown --trace value `{v}` (expected off|schedule|full)")
+                })?;
+                Ok(true)
             }
             "threads" => {
-                let first = value.and_then(|v| v.split(',').next()?.trim().parse().ok());
-                if let Some(t) = first {
-                    self.threads = std::cmp::max(t, 1);
-                }
-                true
+                let v = need(name, value)?;
+                let first = v.split(',').next().unwrap_or("").trim();
+                let t: usize = first.parse().map_err(|_| {
+                    anyhow::anyhow!("--threads expects N[,N..], got `{v}`")
+                })?;
+                self.threads = std::cmp::max(t, 1);
+                Ok(true)
             }
             "runtime" => {
-                self.runtime = match value {
-                    Some("cnc-block") => RuntimeKind::Edt(DepMode::CncBlock),
-                    Some("cnc-async") => RuntimeKind::Edt(DepMode::CncAsync),
-                    Some("cnc-dep") => RuntimeKind::Edt(DepMode::CncDep),
-                    Some("swarm") => RuntimeKind::Edt(DepMode::Swarm),
-                    Some("ocr") => RuntimeKind::Edt(DepMode::Ocr),
-                    Some("omp") => RuntimeKind::Omp,
-                    _ => self.runtime, // "all" and absent: caller loops
+                self.runtime = match need(name, value)? {
+                    "cnc-block" => RuntimeKind::Edt(DepMode::CncBlock),
+                    "cnc-async" => RuntimeKind::Edt(DepMode::CncAsync),
+                    "cnc-dep" => RuntimeKind::Edt(DepMode::CncDep),
+                    "swarm" => RuntimeKind::Edt(DepMode::Swarm),
+                    "ocr" => RuntimeKind::Edt(DepMode::Ocr),
+                    "omp" => RuntimeKind::Omp,
+                    "all" => self.runtime, // the caller loops over all kinds
+                    v => bail!(
+                        "unknown --runtime value `{v}` (expected \
+                         cnc-block|cnc-async|cnc-dep|swarm|ocr|omp|all)"
+                    ),
                 };
-                true
+                Ok(true)
             }
-            _ => false,
+            _ => Ok(false),
         }
     }
 }
@@ -303,6 +335,9 @@ pub struct ConfigEcho {
     pub placement: &'static str,
     pub steal: &'static str,
     pub numa_pinned: bool,
+    /// Trace-capture mode the run was launched with ("off" when not
+    /// recording) — observability, never semantics.
+    pub trace: &'static str,
 }
 
 /// What a leaf EDT runs when a backend executes it, plus the workload's
@@ -419,9 +454,38 @@ mod tests {
     #[test]
     fn unknown_flags_are_not_consumed() {
         let mut cfg = ExecConfig::default();
-        assert!(!cfg.apply_cli_flag("size", Some("tiny")));
-        assert!(!cfg.apply_cli_flag("no-verify", None));
-        assert!(cfg.apply_cli_flag("steal", Some("remote-ready")));
+        assert!(!cfg.apply_cli_flag("size", Some("tiny")).unwrap());
+        assert!(!cfg.apply_cli_flag("no-verify", None).unwrap());
+        assert!(cfg.apply_cli_flag("steal", Some("remote-ready")).unwrap());
         assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+        assert!(cfg.apply_cli_flag("trace", Some("full")).unwrap());
+        assert_eq!(cfg.trace, crate::sim::TraceMode::Full);
+    }
+
+    /// An unrecognized value for a config knob must be a hard error, not
+    /// a silent fall-through to the default.
+    #[test]
+    fn bad_flag_values_hard_error() {
+        let mut cfg = ExecConfig::default();
+        for (name, value) in [
+            ("plane", "shred"),
+            ("nodes", "many"),
+            ("placement", "diagonal"),
+            ("steal", "sometimes"),
+            ("trace", "banana"),
+            ("threads", "fast"),
+            ("runtime", "tbb"),
+        ] {
+            assert!(
+                cfg.apply_cli_flag(name, Some(value)).is_err(),
+                "--{name} {value} must be rejected"
+            );
+            assert!(cfg.apply_cli_flag(name, None).is_err(), "--{name} needs a value");
+        }
+        // nothing was mutated by the rejected flags
+        assert_eq!(cfg.steal, StealPolicy::Never);
+        assert_eq!(cfg.trace, crate::sim::TraceMode::Off);
+        assert_eq!(cfg.nodes, 1);
+        assert_eq!(cfg.threads, 2);
     }
 }

@@ -18,6 +18,12 @@
 //! - [`launch`] picks the backend from the config — retargeting a
 //!   program to another runtime, plane, topology or steal policy is a
 //!   field edit, never a different function call.
+//! - [`ReplayBackend`] is the fourth backend: it re-executes a captured
+//!   execution trace ([`ExecConfig::trace`] + [`RunReport::trace`])
+//!   instead of a plan — verbatim as an audit, or re-costed for what-if
+//!   link studies (`rt::replay`). Constructed around a trace value, so
+//!   it is launched via `ReplayBackend::verbatim(trace).execute(..)`
+//!   rather than named by [`backend_for`].
 //!
 //! The pre-`ExecConfig` entry points (`run_with_plane`,
 //! `run_with_plane_on`, and `sim::{simulate_with_plane,
@@ -28,13 +34,16 @@ pub mod config;
 pub mod engine;
 pub mod ompsim;
 pub mod pool;
+pub mod replay;
 pub mod table;
 
+pub use crate::sim::trace::{Trace, TraceMode};
 pub use crate::space::DataPlane;
 pub use config::{Backend, BackendKind, ConfigEcho, ExecConfig, LeafBody, LeafSpec, StealPolicy};
 pub use engine::{Engine, EngineBackend, LeafExec, NoopLeaf};
 pub use ompsim::OmpBackend;
 pub use pool::{Pool, WorkerCtx};
+pub use replay::{replay_trace, ReplayBackend, ReplayMode};
 
 use crate::exec::plan::Plan;
 use crate::exec::{ArrayStore, KernelSet, LeafRunner};
@@ -93,6 +102,11 @@ pub struct RunReport {
     /// The full simulator report when the DES backend produced this run
     /// (`None` for real execution and the closed-form OpenMP model).
     pub sim: Option<SimReport>,
+    /// The captured execution trace when the run was launched with
+    /// [`ExecConfig::trace`] != [`TraceMode::Off`] on the DES backend
+    /// (`None` otherwise). Serialize with
+    /// [`Trace::to_jsonl`], replay through [`ReplayBackend`].
+    pub trace: Option<Arc<Trace>>,
 }
 
 /// Per-run counter delta. Counters are cumulative across runs on a
@@ -181,6 +195,7 @@ fn run_measured(
         node_peak_bytes: space.map(|s| s.node_peaks()).unwrap_or_default(),
         config: echo,
         sim: None,
+        trace: None,
     })
 }
 
@@ -193,6 +208,12 @@ pub(crate) fn execute_on_pool(
     cfg: &ExecConfig,
     pool: &Pool,
 ) -> Result<RunReport> {
+    anyhow::ensure!(
+        cfg.trace == TraceMode::Off,
+        "trace capture is a DES-backend feature — launch with \
+         BackendKind::Des (`tale3 sim` / `tale3 trace capture`), the real \
+         threads backend records no virtual-time events"
+    );
     let topo = cfg.resolved_topology(plan);
     let mut echo = cfg.echo_for(&topo);
     echo.threads = pool.n_workers;

@@ -1,0 +1,496 @@
+//! Trace replay: the second simulation [`Backend`] the ROADMAP asked
+//! for — postmortem scheduling studies over a captured
+//! [`Trace`](crate::sim::Trace) instead of a fresh DES run.
+//!
+//! Two modes:
+//!
+//! - **Verbatim** ([`ReplayMode::Verbatim`]) — an integrity audit. The
+//!   replay rebuilds the timeline from the event order alone: per-worker
+//!   chains (`end = start + ns(dur).max(1)` exactly as the DES advances
+//!   `free_at`) and every counter of the [`SimReport`] (tasks, steals,
+//!   failed gets, the whole data-plane story including live/peak byte
+//!   accounting replayed put-by-put). The result must be **bit-identical**
+//!   to the report embedded in the trace header — any divergence (schema
+//!   drift, a hand-edited trace, an instrumentation gap) is an error
+//!   naming the first mismatch.
+//! - **Re-cost** ([`ReplayMode::Recost`]) — a what-if study. The
+//!   *schedule is frozen*: the same tasks run on the same workers in the
+//!   same order, the event stream is never reordered. Only the traced
+//!   cost atoms ([`CostAtoms`]: acquisition, data-plane put/get,
+//!   serialization, link latency/bandwidth) are re-priced, and the
+//!   timeline is recomputed under the recorded dependence structure
+//!   (each instance starts no earlier than its releasing instance's new
+//!   completion and its availability stamp's shifted time). "What would
+//!   this run cost on a faster link" is answered without re-simulating —
+//!   set `link_bw_ns_per_byte`/`link_latency_ns` to zero and read the new
+//!   makespan. Compute-side constants (dispatch, spawn, leaf roofline)
+//!   are baked into each recorded duration; changing those needs a fresh
+//!   DES run, not a replay.
+//!
+//! Re-cost keeps the captured *dispatch order* but drops the original
+//! scheduler's idle-probe gaps (a worker starts its next task as soon as
+//! its dependence and worker chains allow), so a re-cost under the
+//! captured atoms is a lower bound on — not a reproduction of — the
+//! captured makespan. Verbatim mode preserves the recorded dispatch
+//! instants and is exact.
+//!
+//! [`ReplayBackend`] implements [`Backend`], so a replay launches like
+//! any other run — but it is constructed *around a trace value*, which
+//! is why it is not reachable from [`crate::rt::backend_for`] (a
+//! stateless registry cannot name it). Use
+//! [`ReplayBackend::verbatim`]/[`ReplayBackend::recost`] + `execute`, or
+//! the [`replay_trace`] core directly (the `tale3 trace replay|recost`
+//! subcommands do).
+//!
+//! In the paper's terms this closes the loop of §4.7.3: the
+//! runtime-agnostic layer made EDT programs retargetable across
+//! runtimes; the trace makes one *execution* of such a program a
+//! first-class object that can be audited and re-priced.
+
+use super::config::{Backend, ConfigEcho, ExecConfig, LeafSpec};
+use super::{RunReport, RuntimeKind};
+use crate::exec::plan::Plan;
+use crate::ral::MetricsSnapshot;
+use crate::sim::des::ns_of;
+use crate::sim::trace::{Acq, CostAtoms, ItemKey, Trace, TraceEvent, TraceMode};
+use crate::sim::SimReport;
+use crate::space::Placement;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// How a captured trace is re-executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayMode {
+    /// Recompute timeline + counters from the event order under the
+    /// captured cost atoms and require bit-identity with the header
+    /// report.
+    Verbatim,
+    /// Same schedule, re-priced cost atoms: recompute the timeline under
+    /// new data-plane/link/acquisition costs.
+    Recost,
+}
+
+#[derive(Default, Clone)]
+struct InstState {
+    started: bool,
+    done: bool,
+    start_t: u64,
+    worker: u32,
+    /// Old-minus-new cost atoms accrued by this instance (recost).
+    savings: f64,
+    /// (enqueuer instance, its visible end when it released this one).
+    enq: Option<(u64, u64)>,
+    /// (stamp-producer instance, original availability stamp).
+    stamp: Option<(u64, u64)>,
+    new_start: u64,
+}
+
+/// Re-execute a captured trace. Returns the replayed [`SimReport`]:
+/// verbatim replays must reproduce the header report exactly (an `Err`
+/// names the first divergence); re-cost replays return the what-if
+/// report under `atoms`. `work_ratio` is carried from the header (it is
+/// a compute-side quantity a replay cannot re-derive).
+pub fn replay_trace(trace: &Trace, mode: ReplayMode, atoms: &CostAtoms) -> Result<SimReport> {
+    ensure!(
+        trace.mode != TraceMode::Off,
+        "an Off-mode trace has no events to replay"
+    );
+    if mode == ReplayMode::Recost {
+        ensure!(
+            trace.mode == TraceMode::Full,
+            "re-costing needs a TraceMode::Full trace — the data-plane events \
+             carry the cost atoms being re-priced"
+        );
+    }
+    let old = &trace.cost;
+    let n_inst = trace
+        .events
+        .iter()
+        .map(|e| match e {
+            TraceEvent::Spawn { i, .. }
+            | TraceEvent::Ready { i, .. }
+            | TraceEvent::Start { i, .. }
+            | TraceEvent::Done { i, .. }
+            | TraceEvent::Put { i, .. }
+            | TraceEvent::Get { i, .. }
+            | TraceEvent::Free { i, .. }
+            | TraceEvent::Steal { i, .. } => *i,
+        })
+        .max()
+        .map_or(0, |m| m as usize + 1);
+    let mut inst = vec![InstState::default(); n_inst];
+    let nodes = trace.report.node_peak_bytes.len().max(1);
+    let mut worker_end: HashMap<u32, u64> = HashMap::new();
+
+    // rebuilt counters
+    let (mut tasks, mut steals, mut failed_gets) = (0u64, 0u64, 0u64);
+    let (mut stolen_edts, mut steal_bytes) = (0u64, 0u64);
+    let (mut puts, mut gets, mut frees) = (0u64, 0u64, 0u64);
+    let (mut local, mut remote, mut remote_bytes) = (0u64, 0u64, 0u64);
+    let (mut live, mut peak) = (0u64, 0u64);
+    let mut node_live = vec![0u64; nodes];
+    let mut node_peak = vec![0u64; nodes];
+    let mut items: HashMap<ItemKey, (u64, usize)> = HashMap::new();
+    let mut makespan = 0u64;
+
+    for (n, ev) in trace.events.iter().enumerate() {
+        match ev {
+            TraceEvent::Spawn { .. } => {}
+            TraceEvent::Ready { i, by, et, bp, bt, .. } => {
+                let s = inst
+                    .get_mut(*i as usize)
+                    .ok_or_else(|| anyhow!("event {n}: instance {i} out of range"))?;
+                s.enq = (*by).zip(*et);
+                s.stamp = (*bp).zip(*bt);
+            }
+            TraceEvent::Start { t, i, worker, acq, .. } => {
+                tasks += 1;
+                if *acq != Acq::Own {
+                    steals += 1;
+                }
+                let delta = old.acq_ns(*acq) - atoms.acq_ns(*acq);
+                let (enq, stamp) = {
+                    let s = &inst[*i as usize];
+                    (s.enq, s.stamp)
+                };
+                // shift a virtual instant recorded inside producer `p`'s
+                // execution onto `p`'s recomputed timeline: it moves with
+                // p's start and shrinks by p's accrued savings (every
+                // re-priced atom of p precedes its release points in the
+                // DES, so the full savings apply)
+                let shift = |p: &InstState, time: u64, what: &str| -> Result<u64> {
+                    ensure!(
+                        p.done,
+                        "event {n}: {what} producer has no Done before instance {i} \
+                         starts — stream out of order"
+                    );
+                    ensure!(
+                        time >= p.start_t,
+                        "event {n}: {what} instant {time} precedes its producer's \
+                         start {}",
+                        p.start_t
+                    );
+                    Ok(p.new_start + ns_of((time - p.start_t) as f64 - p.savings))
+                };
+                let new_start = match mode {
+                    ReplayMode::Verbatim => *t,
+                    ReplayMode::Recost => {
+                        let mut ready = 0u64;
+                        if let Some((b, et)) = enq {
+                            ready = shift(&inst[b as usize], et, "release")?;
+                        }
+                        if let Some((bp, bt)) = stamp {
+                            ready = ready.max(shift(&inst[bp as usize], bt, "stamp")?);
+                        }
+                        ready.max(worker_end.get(worker).copied().unwrap_or(0))
+                    }
+                };
+                let s = &mut inst[*i as usize];
+                ensure!(!s.started, "event {n}: instance {i} started twice");
+                s.started = true;
+                s.start_t = *t;
+                s.worker = *worker;
+                s.savings += delta;
+                s.new_start = new_start;
+            }
+            TraceEvent::Done { t, i, dur, misses } => {
+                failed_gets += misses;
+                let s = &mut inst[*i as usize];
+                ensure!(s.started && !s.done, "event {n}: Done without Start for {i}");
+                s.done = true;
+                let dur_new = match mode {
+                    ReplayMode::Verbatim => *dur,
+                    ReplayMode::Recost => *dur - s.savings,
+                };
+                let end = s.new_start + ns_of(dur_new).max(1);
+                if mode == ReplayMode::Verbatim {
+                    ensure!(
+                        end == *t,
+                        "verbatim replay diverged at instance {i}: recomputed end {end} \
+                         vs recorded {t} (start {}, dur {dur})",
+                        s.start_t
+                    );
+                }
+                worker_end.insert(s.worker, end);
+                makespan = makespan.max(end);
+            }
+            TraceEvent::Put { i, key, bytes, node, .. } => {
+                puts += 1;
+                let nd = *node as usize;
+                ensure!(nd < nodes, "event {n}: Put on node {nd} out of range");
+                live += bytes;
+                peak = peak.max(live);
+                node_live[nd] += bytes;
+                node_peak[nd] = node_peak[nd].max(node_live[nd]);
+                ensure!(
+                    items.insert(key.clone(), (*bytes, nd)).is_none(),
+                    "event {n}: datablock {key:?} put twice"
+                );
+                inst[*i as usize].savings += old.put_ns(*bytes) - atoms.put_ns(*bytes);
+            }
+            TraceEvent::Get { i, key, bytes, remote: r, .. } => {
+                gets += 1;
+                ensure!(
+                    items.contains_key(key),
+                    "event {n}: Get of {key:?} with no live Put"
+                );
+                if *r {
+                    remote += 1;
+                    remote_bytes += bytes;
+                } else {
+                    local += 1;
+                }
+                inst[*i as usize].savings += old.get_ns(*r, *bytes) - atoms.get_ns(*r, *bytes);
+            }
+            TraceEvent::Free { key, .. } => {
+                frees += 1;
+                let (b, nd) = items
+                    .remove(key)
+                    .ok_or_else(|| anyhow!("event {n}: Free of unknown datablock {key:?}"))?;
+                live -= b;
+                node_live[nd] -= b;
+            }
+            TraceEvent::Steal { bytes, .. } => {
+                stolen_edts += 1;
+                steal_bytes += bytes;
+            }
+        }
+    }
+
+    let seconds = makespan as f64 / 1e9;
+    let full = trace.mode == TraceMode::Full;
+    let h = &trace.report;
+    let report = SimReport {
+        seconds,
+        gflops: trace.total_flops / seconds / 1e9,
+        tasks,
+        steals,
+        failed_gets,
+        work_ratio: h.work_ratio,
+        // a Schedule-mode trace has no data-plane events to rebuild from:
+        // carry the header's space story (the schedule preserves it)
+        space_puts: if full { puts } else { h.space_puts },
+        space_gets: if full { gets } else { h.space_gets },
+        space_frees: if full { frees } else { h.space_frees },
+        space_peak_bytes: if full { peak } else { h.space_peak_bytes },
+        space_local_gets: if full { local } else { h.space_local_gets },
+        space_remote_gets: if full { remote } else { h.space_remote_gets },
+        space_remote_bytes: if full { remote_bytes } else { h.space_remote_bytes },
+        node_peak_bytes: if full { node_peak } else { h.node_peak_bytes.clone() },
+        stolen_edts,
+        steal_bytes,
+    };
+
+    if mode == ReplayMode::Verbatim {
+        verify_verbatim(&report, h, full)?;
+    }
+    Ok(report)
+}
+
+/// Field-by-field bit-identity of the rebuilt report against the header.
+fn verify_verbatim(r: &SimReport, h: &SimReport, full: bool) -> Result<()> {
+    let chk = |name: &str, a: u64, b: u64| -> Result<()> {
+        ensure!(a == b, "verbatim replay mismatch on {name}: rebuilt {a} vs captured {b}");
+        Ok(())
+    };
+    ensure!(
+        r.seconds.to_bits() == h.seconds.to_bits(),
+        "verbatim replay mismatch on makespan: rebuilt {} vs captured {}",
+        r.seconds,
+        h.seconds
+    );
+    chk("tasks", r.tasks, h.tasks)?;
+    chk("steals", r.steals, h.steals)?;
+    chk("failed_gets", r.failed_gets, h.failed_gets)?;
+    chk("stolen_edts", r.stolen_edts, h.stolen_edts)?;
+    chk("steal_bytes", r.steal_bytes, h.steal_bytes)?;
+    if full {
+        chk("space_puts", r.space_puts, h.space_puts)?;
+        chk("space_gets", r.space_gets, h.space_gets)?;
+        chk("space_frees", r.space_frees, h.space_frees)?;
+        chk("space_local_gets", r.space_local_gets, h.space_local_gets)?;
+        chk("space_remote_gets", r.space_remote_gets, h.space_remote_gets)?;
+        chk("space_remote_bytes", r.space_remote_bytes, h.space_remote_bytes)?;
+        chk("space_peak_bytes", r.space_peak_bytes, h.space_peak_bytes)?;
+        ensure!(
+            r.node_peak_bytes == h.node_peak_bytes,
+            "verbatim replay mismatch on node_peak_bytes: rebuilt {:?} vs captured {:?}",
+            r.node_peak_bytes,
+            h.node_peak_bytes
+        );
+    }
+    Ok(())
+}
+
+/// The trace-replay [`Backend`]: wraps a captured trace and answers the
+/// standard `(plan, leaf, config)` launch with the replayed report. The
+/// plan and leaf spec are ignored — a trace is self-contained (workload
+/// name, total flops and resolved config ride in its header); in
+/// [`ReplayMode::Recost`] the *new* cost model is read from
+/// [`ExecConfig::cost`].
+pub struct ReplayBackend {
+    trace: Arc<Trace>,
+    mode: ReplayMode,
+}
+
+impl ReplayBackend {
+    /// Audit replay: must reproduce the captured report bit-for-bit.
+    pub fn verbatim(trace: Arc<Trace>) -> Self {
+        ReplayBackend { trace, mode: ReplayMode::Verbatim }
+    }
+
+    /// What-if replay: same schedule, the cost atoms of `cfg.cost`.
+    pub fn recost(trace: Arc<Trace>) -> Self {
+        ReplayBackend { trace, mode: ReplayMode::Recost }
+    }
+
+    pub fn mode(&self) -> ReplayMode {
+        self.mode
+    }
+}
+
+/// Map an owned runtime name back to the `'static` name the uniform
+/// report carries (unknown names degrade to the default runtime's).
+fn static_runtime(name: &str) -> &'static str {
+    RuntimeKind::all()
+        .iter()
+        .map(|k| k.name())
+        .find(|n| *n == name)
+        .unwrap_or("cnc-dep")
+}
+
+impl Backend for ReplayBackend {
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+
+    fn execute(
+        &self,
+        _plan: &Arc<Plan>,
+        _leaf: &LeafSpec<'_>,
+        cfg: &ExecConfig,
+    ) -> Result<RunReport> {
+        let atoms = match self.mode {
+            ReplayMode::Verbatim => self.trace.cost.clone(),
+            ReplayMode::Recost => CostAtoms::from_model(&cfg.cost),
+        };
+        let r = replay_trace(&self.trace, self.mode, &atoms)?;
+        let c = &self.trace.config;
+        let echo = ConfigEcho {
+            backend: "replay",
+            runtime: static_runtime(&c.runtime),
+            plane: if c.plane == "space" { "space" } else { "shared" },
+            threads: c.threads as usize,
+            nodes: c.nodes as usize,
+            placement: Placement::parse(&c.placement)
+                .map(|p| p.name())
+                .unwrap_or("hash"),
+            steal: if c.steal == "remote-ready" { "remote-ready" } else { "never" },
+            numa_pinned: c.numa_pinned,
+            trace: self.trace.mode.name(),
+        };
+        let metrics = MetricsSnapshot {
+            steals: r.steals,
+            failed_gets: r.failed_gets,
+            space_puts: r.space_puts,
+            space_gets: r.space_gets,
+            space_frees: r.space_frees,
+            space_peak_bytes: r.space_peak_bytes,
+            space_remote_gets: r.space_remote_gets,
+            space_remote_bytes: r.space_remote_bytes,
+            work_ns: (r.work_ratio * 1e9) as u64,
+            busy_ns: 1_000_000_000,
+            ..Default::default()
+        };
+        Ok(RunReport {
+            runtime: echo.runtime,
+            plane: echo.plane,
+            threads: echo.threads,
+            seconds: r.seconds,
+            gflops: r.gflops,
+            metrics,
+            node_peak_bytes: r.node_peak_bytes.clone(),
+            config: echo,
+            sim: Some(r),
+            trace: Some(self.trace.clone()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ral::DepMode;
+    use crate::rt::{self, BackendKind, StealPolicy};
+    use crate::space::DataPlane;
+    use crate::workloads::{by_name, Size};
+
+    fn captured(nodes: usize, steal: StealPolicy) -> (Arc<Trace>, SimReport) {
+        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let cfg = ExecConfig::new()
+            .backend(BackendKind::Des)
+            .runtime(RuntimeKind::Edt(DepMode::CncDep))
+            .plane(DataPlane::Space)
+            .nodes(nodes)
+            .placement(Placement::Block)
+            .threads(4)
+            .steal(steal)
+            .trace(TraceMode::Full);
+        let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg).unwrap();
+        (r.trace.expect("trace"), r.sim.expect("sim"))
+    }
+
+    #[test]
+    fn verbatim_replay_reproduces_the_report() {
+        let (trace, sim) = captured(2, StealPolicy::RemoteReady);
+        let r = replay_trace(&trace, ReplayMode::Verbatim, &trace.cost).unwrap();
+        assert_eq!(r.seconds.to_bits(), sim.seconds.to_bits());
+        assert_eq!(r.tasks, sim.tasks);
+        assert_eq!(r.space_peak_bytes, sim.space_peak_bytes);
+        assert_eq!(r.node_peak_bytes, sim.node_peak_bytes);
+    }
+
+    #[test]
+    fn verbatim_detects_tampering() {
+        let (trace, _) = captured(2, StealPolicy::RemoteReady);
+        let mut bad = (*trace).clone();
+        // drop one Start: the counter rebuild must notice
+        let pos = bad
+            .events
+            .iter()
+            .position(|e| matches!(e, TraceEvent::Start { .. }))
+            .unwrap();
+        bad.events.remove(pos);
+        let err = replay_trace(&bad, ReplayMode::Verbatim, &bad.cost);
+        assert!(err.is_err(), "a tampered trace must not verify");
+    }
+
+    #[test]
+    fn recost_with_identical_atoms_never_exceeds_capture() {
+        let (trace, sim) = captured(2, StealPolicy::RemoteReady);
+        // same atoms: the frozen schedule minus idle-probe gaps is a
+        // lower bound on the captured makespan
+        let r = replay_trace(&trace, ReplayMode::Recost, &trace.cost).unwrap();
+        assert!(r.seconds <= sim.seconds, "{} > {}", r.seconds, sim.seconds);
+        assert_eq!(r.tasks, sim.tasks, "recost must not change the schedule");
+        assert_eq!(r.space_gets, sim.space_gets);
+        assert_eq!(r.stolen_edts, sim.stolen_edts);
+    }
+
+    #[test]
+    fn replay_backend_launches_like_any_other() {
+        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let (trace, sim) = captured(2, StealPolicy::RemoteReady);
+        let backend = ReplayBackend::verbatim(trace.clone());
+        assert_eq!(backend.name(), "replay");
+        let r = backend
+            .execute(&plan, &LeafSpec::cost_only(inst.total_flops), &ExecConfig::new())
+            .unwrap();
+        assert_eq!(r.config.backend, "replay");
+        assert_eq!(r.seconds.to_bits(), sim.seconds.to_bits());
+        assert!(r.trace.is_some());
+    }
+}

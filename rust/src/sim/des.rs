@@ -20,9 +20,17 @@
 //! [`SimReport::steal_bytes`] count those migrations. With a single-node
 //! topology (or `StealPolicy::Never` on one node) the scheduler is
 //! bit-identical to the flat work-stealing pool of earlier revisions.
+//!
+//! With [`TraceMode::Schedule`] or [`TraceMode::Full`] the DES records a
+//! [`crate::sim::trace::TraceEvent`] at every state transition — task
+//! spawn/release/dispatch/completion, data-plane put/get/free, inter-node
+//! migration — without perturbing the simulation (tracing is pure
+//! observation: the captured run is bit-identical to an untraced one).
+//! [`crate::rt::ReplayBackend`] re-executes the captured stream.
 
 use super::cost::{CostModel, Machine};
 use super::leaf_cost;
+use super::trace::{Acq, EdtId, TaskKind, TraceEvent, TraceMode};
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::ral::{DepMode, MetricsSnapshot, TagKey};
 use crate::rt::StealPolicy;
@@ -33,6 +41,13 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::Arc;
 
 const FINISH_BIT: u32 = 1 << 31;
+
+/// Truncating ns conversion — the DES clock discipline. Shared with
+/// `rt::replay`, whose timeline reconstruction must round identically
+/// or verbatim bit-identity breaks.
+pub(crate) fn ns_of(x: f64) -> u64 {
+    x.max(0.0) as u64
+}
 
 #[derive(Debug, Clone)]
 enum Cont {
@@ -59,14 +74,15 @@ struct Scope {
 }
 
 enum Entry {
-    /// Done at virtual time (for the causality self-check).
-    Done(u64),
+    /// Done at virtual time, by task instance (for the causality
+    /// self-check and the trace's availability-stamp provenance).
+    Done(u64, u64),
     Waiting(Vec<usize>), // pending ids
 }
 
 enum FindResult {
-    /// (task, acquisition cost, claimed from another node's deque)
-    Task(STask, f64, bool),
+    /// (task, instance, acquisition cost, acquisition kind)
+    Task(STask, u64, f64, Acq),
     WaitUntil(u64),
     Idle,
 }
@@ -74,8 +90,22 @@ enum FindResult {
 struct Pending {
     remaining: i64,
     task: Option<STask>,
+    /// Trace instance id assigned at registration.
+    inst: u64,
     /// Latest done-time among satisfied keys: the release availability.
     avail: u64,
+    /// Instance whose put produced `avail` (the registrar until a later
+    /// put overtakes it) — trace provenance for the Ready event.
+    avail_src: u64,
+}
+
+/// A task release: enqueue `task` (instance `inst`) no earlier than `at`,
+/// whose stamp was produced by instance `src`.
+struct Sp {
+    at: u64,
+    src: u64,
+    inst: u64,
+    task: STask,
 }
 
 /// Simulation result.
@@ -109,6 +139,12 @@ pub struct SimReport {
     /// the input-datablock bytes those migrations pulled over links.
     pub stolen_edts: u64,
     pub steal_bytes: u64,
+}
+
+/// Event recorder riding along the simulation (pure observation).
+struct Tracer {
+    full: bool,
+    events: Vec<TraceEvent>,
 }
 
 struct Des<'a> {
@@ -152,10 +188,10 @@ struct Des<'a> {
     node_live: Vec<u64>,
     node_peak: Vec<u64>,
 
-    /// (available-at, task): a task spawned during execution becomes
-    /// visible only when its spawner completes — stealing must not
-    /// time-travel (causality check below guards this invariant).
-    deques: Vec<VecDeque<(u64, STask)>>,
+    /// (available-at, instance, task): a task spawned during execution
+    /// becomes visible only when its spawner completes — stealing must
+    /// not time-travel (causality check below guards this invariant).
+    deques: Vec<VecDeque<(u64, u64, STask)>>,
     heap: BinaryHeap<Reverse<(u64, u64, usize)>>, // (time_ns, seq, worker)
     free_at: Vec<u64>,
     idle: Vec<bool>,
@@ -175,11 +211,88 @@ struct Des<'a> {
     steal_bytes: u64,
     work_ns: f64,
     busy_ns: f64,
+
+    /// Trace recorder (None when `TraceMode::Off`), the instance-id
+    /// allocator, and the instance currently executing (the `by` of
+    /// every event it causes).
+    tracer: Option<Tracer>,
+    next_inst: u64,
+    cur_inst: u64,
 }
 
 impl<'a> Des<'a> {
-    fn ns(&mut self, x: f64) -> u64 {
-        x.max(0.0) as u64
+    fn ns(&self, x: f64) -> u64 {
+        ns_of(x)
+    }
+
+    fn alloc_inst(&mut self) -> u64 {
+        let i = self.next_inst;
+        self.next_inst += 1;
+        i
+    }
+
+    /// Record a scheduling event (Schedule and Full modes).
+    fn tr_sched(&mut self, ev: TraceEvent) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.events.push(ev);
+        }
+    }
+
+    /// Record a data-plane event (Full mode only).
+    fn tr_data(&mut self, ev: TraceEvent) {
+        if let Some(tr) = self.tracer.as_mut() {
+            if tr.full {
+                tr.events.push(ev);
+            }
+        }
+    }
+
+    fn task_id(task: &STask) -> EdtId {
+        match task {
+            STask::Startup { node, prefix, .. } => {
+                EdtId { kind: TaskKind::Startup, node: *node, coords: prefix.clone() }
+            }
+            STask::Worker { node, coords, .. } => {
+                EdtId { kind: TaskKind::Worker, node: *node, coords: coords.clone() }
+            }
+            STask::Prescriber { node, coords, .. } => {
+                EdtId { kind: TaskKind::Prescriber, node: *node, coords: coords.clone() }
+            }
+            STask::Shutdown { scope } => {
+                EdtId { kind: TaskKind::Shutdown, node: *scope as u32, coords: Box::new([]) }
+            }
+        }
+    }
+
+    /// Allocate an instance id for a freshly created task and record its
+    /// Spawn (caused by the currently executing instance).
+    fn spawn_task(&mut self, t: u64, task: &STask) -> u64 {
+        let inst = self.alloc_inst();
+        if self.tracer.is_some() {
+            let id = Self::task_id(task);
+            let by = Some(self.cur_inst);
+            self.tr_sched(TraceEvent::Spawn { t, i: inst, id, by });
+        }
+        inst
+    }
+
+    /// Record the Ready of a release enqueued at `at`: released `by` the
+    /// current instance whose visible end is `end` (`at = end.max(avail)`
+    /// — replays shift `end`, not the enqueuer's later busy end), with
+    /// stamp provenance when the availability came from another
+    /// instance's put.
+    fn emit_ready(&mut self, at: u64, end: u64, sp: &Sp) {
+        if self.tracer.is_none() {
+            return;
+        }
+        let (bp, bt) = if sp.src != self.cur_inst {
+            (Some(sp.src), Some(sp.at))
+        } else {
+            (None, None)
+        };
+        let by = Some(self.cur_inst);
+        let et = Some(end);
+        self.tr_sched(TraceEvent::Ready { t: at, i: sp.inst, by, et, bp, bt });
     }
 
     fn wake_idle(&mut self, at: u64, n: usize) {
@@ -218,14 +331,14 @@ impl<'a> Des<'a> {
     /// from victims on the same node; under `RemoteReady` a worker whose
     /// node has no local work at all — neither ready nor pending — may
     /// additionally claim a ready leaf EDT from another node's deque.
-    /// Returns the task + acquisition cost + cross-node flag, or the
+    /// Returns the task + instance + acquisition cost + kind, or the
     /// earliest future local availability, or None (truly idle).
     fn find_task(&mut self, w: usize, now: u64) -> FindResult {
         let mut earliest: Option<u64> = None;
-        if let Some(&(avail, _)) = self.deques[w].back() {
+        if let Some(&(avail, _, _)) = self.deques[w].back() {
             if avail <= now {
-                let (_, t) = self.deques[w].pop_back().unwrap();
-                return FindResult::Task(t, 0.0, false);
+                let (_, inst, t) = self.deques[w].pop_back().unwrap();
+                return FindResult::Task(t, inst, 0.0, Acq::Own);
             }
             earliest = Some(avail);
         }
@@ -239,11 +352,11 @@ impl<'a> Des<'a> {
             if self.sched_nodes && self.worker_node[v] != my_node {
                 continue;
             }
-            if let Some(&(avail, _)) = self.deques[v].front() {
+            if let Some(&(avail, _, _)) = self.deques[v].front() {
                 if avail <= now {
-                    let (_, t) = self.deques[v].pop_front().unwrap();
+                    let (_, inst, t) = self.deques[v].pop_front().unwrap();
                     self.steals += 1;
-                    return FindResult::Task(t, self.costs.steal_ns, false);
+                    return FindResult::Task(t, inst, self.costs.steal_ns, Acq::Steal);
                 }
                 earliest = Some(earliest.map_or(avail, |e| e.min(avail)));
             }
@@ -261,14 +374,14 @@ impl<'a> Des<'a> {
                     continue;
                 }
                 let ready_leaf = match self.deques[v].front() {
-                    Some(&(avail, ref t)) => avail <= now && self.is_leaf_worker(t),
+                    Some(&(avail, _, ref t)) => avail <= now && self.is_leaf_worker(t),
                     None => false,
                 };
                 if ready_leaf {
-                    let (_, t) = self.deques[v].pop_front().unwrap();
+                    let (_, inst, t) = self.deques[v].pop_front().unwrap();
                     self.steals += 1;
                     self.stolen_edts += 1;
-                    return FindResult::Task(t, self.costs.steal_ns, true);
+                    return FindResult::Task(t, inst, self.costs.steal_ns, Acq::Migrate);
                 }
             }
         }
@@ -280,21 +393,23 @@ impl<'a> Des<'a> {
 
     /// A get at virtual time `now` only observes puts stamped ≤ now.
     fn is_done(&self, key: &TagKey, now: u64) -> bool {
-        matches!(self.table.get(key), Some(Entry::Done(t)) if *t <= now)
+        matches!(self.table.get(key), Some(Entry::Done(t, _)) if *t <= now)
     }
 
     fn done_time(&self, key: &TagKey) -> Option<u64> {
         match self.table.get(key) {
-            Some(Entry::Done(t)) => Some(*t),
+            Some(Entry::Done(t, _)) => Some(*t),
             _ => None,
         }
     }
 
-    /// put: mark done at time `at`, return released tasks with their
-    /// availability (the max done-time across each pending's keys — an
-    /// earlier-processed put may carry a later virtual stamp).
-    fn put(&mut self, key: TagKey, at: u64) -> Vec<(u64, STask)> {
-        let waiters = match self.table.insert(key, Entry::Done(at)) {
+    /// put: mark done at time `at` (stamped by the current instance),
+    /// return released tasks with their availability (the max done-time
+    /// across each pending's keys — an earlier-processed put may carry a
+    /// later virtual stamp).
+    fn put(&mut self, key: TagKey, at: u64) -> Vec<Sp> {
+        let by = self.cur_inst;
+        let waiters = match self.table.insert(key, Entry::Done(at, by)) {
             Some(Entry::Waiting(w)) => w,
             _ => Vec::new(),
         };
@@ -302,10 +417,13 @@ impl<'a> Des<'a> {
         for pid in waiters {
             let p = &mut self.pendings[pid];
             p.remaining -= 1;
-            p.avail = p.avail.max(at);
+            if at > p.avail {
+                p.avail = at;
+                p.avail_src = by;
+            }
             if p.remaining == 0 {
                 if let Some(t) = p.task.take() {
-                    out.push((p.avail, t));
+                    out.push(Sp { at: p.avail, src: p.avail_src, inst: p.inst, task: t });
                 }
             }
         }
@@ -316,20 +434,26 @@ impl<'a> Des<'a> {
     /// immediately, the returned availability is the latest done-time of
     /// its keys (it may lie in the caller's future — a put stamped ahead
     /// of `now` by an earlier-dispatched but longer-running producer).
-    fn register(&mut self, task: STask, keys: &[TagKey], now: u64) -> Option<(STask, u64)> {
+    fn register(&mut self, task: STask, keys: &[TagKey], now: u64) -> Option<Sp> {
+        let inst = self.spawn_task(now, &task);
         let pid = self.pendings.len();
         self.pendings.push(Pending {
             remaining: keys.len() as i64 + 1,
             task: Some(task),
+            inst,
             avail: now,
+            avail_src: self.cur_inst,
         });
         for k in keys {
             match self.table.get_mut(k) {
-                Some(Entry::Done(dt)) => {
-                    let dt = *dt;
+                Some(Entry::Done(dt, by)) => {
+                    let (dt, by) = (*dt, *by);
                     let p = &mut self.pendings[pid];
                     p.remaining -= 1;
-                    p.avail = p.avail.max(dt);
+                    if dt > p.avail {
+                        p.avail = dt;
+                        p.avail_src = by;
+                    }
                 }
                 Some(Entry::Waiting(w)) => w.push(pid),
                 None => {
@@ -340,8 +464,8 @@ impl<'a> Des<'a> {
         let p = &mut self.pendings[pid];
         p.remaining -= 1;
         if p.remaining == 0 {
-            let avail = p.avail;
-            p.task.take().map(|t| (t, avail))
+            let (at, src, inst) = (p.avail, p.avail_src, p.inst);
+            p.task.take().map(|t| Sp { at, src, inst, task: t })
         } else {
             None
         }
@@ -378,17 +502,20 @@ impl<'a> Des<'a> {
         t
     }
 
-    /// Execute one task on worker `w` starting at time `t0`; returns its
-    /// virtual duration in ns. Spawned tasks land on `w`'s deque (or, for
-    /// leaf EDTs under node-pinned scheduling, their owner node's),
-    /// available when the task completes. `stolen` marks a leaf claimed
+    /// Execute one task (instance `inst`) on worker `w` starting at time
+    /// `t0`; returns its virtual duration in ns. Spawned tasks land on
+    /// `w`'s deque (or, for leaf EDTs under node-pinned scheduling, their
+    /// owner node's), available when the task completes. `acq` says how
+    /// the worker acquired the task; `Acq::Migrate` marks a leaf claimed
     /// cross-node: it executes on `w`'s node and its remote input fetches
     /// count as migration traffic.
-    fn exec(&mut self, w: usize, t0: u64, task: STask, stolen: bool) -> f64 {
+    fn exec(&mut self, w: usize, inst: u64, t0: u64, task: STask, acq: Acq) -> f64 {
+        self.cur_inst = inst;
         self.tasks += 1;
+        let stolen = acq == Acq::Migrate;
         let c = self.costs;
         let mut dur = c.dispatch_ns;
-        let mut spawned: Vec<(u64, STask)> = Vec::new();
+        let mut spawned: Vec<Sp> = Vec::new();
         match task {
             STask::Startup { node, prefix, on_finish } => {
                 let mut tags: Vec<Box<[i64]>> = Vec::new();
@@ -408,10 +535,10 @@ impl<'a> Des<'a> {
                 });
                 if let Some(sig) = &signal {
                     dur += c.get_miss_ns; // SHUTDOWN step parks on the item
-                    if let Some((t, avail)) =
+                    if let Some(sp) =
                         self.register(STask::Shutdown { scope: sid }, std::slice::from_ref(sig), t0)
                     {
-                        spawned.push((avail, t));
+                        spawned.push(sp);
                     }
                 }
                 if n == 0 {
@@ -423,7 +550,9 @@ impl<'a> Des<'a> {
                         dur += c.spawn_ns;
                         match self.mode {
                             DepMode::CncBlock | DepMode::CncAsync | DepMode::Swarm => {
-                                spawned.push((0, STask::Worker { node, coords, scope: sid }));
+                                let t = STask::Worker { node, coords, scope: sid };
+                                let i = self.spawn_task(t0, &t);
+                                spawned.push(Sp { at: 0, src: self.cur_inst, inst: i, task: t });
                             }
                             DepMode::CncDep => {
                                 let ants = self.plan.antecedents(node, &coords);
@@ -431,16 +560,18 @@ impl<'a> Des<'a> {
                                     + c.prescribe_dep_ns * ants.len() as f64;
                                 let keys: Vec<TagKey> =
                                     ants.iter().map(|a| Self::done_key(node, a)).collect();
-                                if let Some((t, avail)) = self.register(
+                                if let Some(sp) = self.register(
                                     STask::Worker { node, coords, scope: sid },
                                     &keys,
                                     t0,
                                 ) {
-                                    spawned.push((avail, t));
+                                    spawned.push(sp);
                                 }
                             }
                             DepMode::Ocr => {
-                                spawned.push((0, STask::Prescriber { node, coords, scope: sid }));
+                                let t = STask::Prescriber { node, coords, scope: sid };
+                                let i = self.spawn_task(t0, &t);
+                                spawned.push(Sp { at: 0, src: self.cur_inst, inst: i, task: t });
                             }
                         }
                     }
@@ -452,17 +583,21 @@ impl<'a> Des<'a> {
                     + c.prescribe_dep_ns * ants.len() as f64
                     + c.ocr_deque_ns;
                 let keys: Vec<TagKey> = ants.iter().map(|a| Self::done_key(node, a)).collect();
-                if let Some((t, avail)) =
+                if let Some(sp) =
                     self.register(STask::Worker { node, coords, scope }, &keys, t0)
                 {
                     dur += c.spawn_ns;
-                    spawned.push((avail, t));
+                    spawned.push(sp);
                 }
             }
             STask::Worker { node, coords, scope } => {
                 if self.mode == DepMode::Ocr {
                     dur += c.ocr_deque_ns;
                 }
+                // migration provenance for the trace: the node this leaf
+                // was pinned to, and the bytes its fetches will pull
+                let owner_before = if stolen { Some(self.topo.node_of(&coords)) } else { None };
+                let steal_bytes0 = self.steal_bytes;
                 let mut blocked = false;
                 match self.mode {
                     DepMode::CncBlock => {
@@ -476,10 +611,10 @@ impl<'a> Des<'a> {
                                 dur += c.get_miss_ns;
                                 self.failed_gets += 1;
                                 let t = STask::Worker { node, coords: coords.clone(), scope };
-                                if let Some((rt, avail)) =
+                                if let Some(sp) =
                                     self.register(t, std::slice::from_ref(&key), t0)
                                 {
-                                    spawned.push((avail, rt));
+                                    spawned.push(sp);
                                 }
                                 blocked = true;
                                 break;
@@ -502,8 +637,8 @@ impl<'a> Des<'a> {
                         }
                         if !missing.is_empty() {
                             let t = STask::Worker { node, coords: coords.clone(), scope };
-                            if let Some((rt, avail)) = self.register(t, &missing, t0) {
-                                spawned.push((avail, rt));
+                            if let Some(sp) = self.register(t, &missing, t0) {
+                                spawned.push(sp);
                             }
                             blocked = true;
                         }
@@ -541,7 +676,7 @@ impl<'a> Des<'a> {
                                 } else {
                                     self.topo.node_of(&coords)
                                 };
-                                dur += self.space_leaf(node, &coords, &ants, pts, here, stolen);
+                                dur += self.space_leaf(node, &coords, &ants, pts, here, stolen, t0, dur);
                             }
                             let rate = self.machine.worker_flops(self.threads)
                                 * c.mode_rate_factor(Some(self.mode), self.threads, self.machine);
@@ -566,33 +701,42 @@ impl<'a> Des<'a> {
                         }
                         ArenaBody::Nested(child) => {
                             dur += c.spawn_ns;
-                            spawned.push((
-                                0,
-                                STask::Startup {
-                                    node: *child,
-                                    prefix: coords,
-                                    on_finish: Box::new(Cont::WorkerDone { key, scope }),
-                                },
-                            ));
+                            let t = STask::Startup {
+                                node: *child,
+                                prefix: coords,
+                                on_finish: Box::new(Cont::WorkerDone { key, scope }),
+                            };
+                            let i = self.spawn_task(t0, &t);
+                            spawned.push(Sp { at: 0, src: self.cur_inst, inst: i, task: t });
                         }
                         ArenaBody::Siblings(children) => {
                             dur += c.spawn_ns;
                             let first = children[0];
-                            spawned.push((
-                                0,
-                                STask::Startup {
-                                    node: first,
-                                    prefix: coords.clone(),
-                                    on_finish: Box::new(Cont::NextSibling {
-                                        node,
-                                        coords,
-                                        next: 1,
-                                        after: Box::new(Cont::WorkerDone { key, scope }),
-                                    }),
-                                },
-                            ));
+                            let t = STask::Startup {
+                                node: first,
+                                prefix: coords.clone(),
+                                on_finish: Box::new(Cont::NextSibling {
+                                    node,
+                                    coords,
+                                    next: 1,
+                                    after: Box::new(Cont::WorkerDone { key, scope }),
+                                }),
+                            };
+                            let i = self.spawn_task(t0, &t);
+                            spawned.push(Sp { at: 0, src: self.cur_inst, inst: i, task: t });
                         }
                     }
+                }
+                if let Some(from) = owner_before {
+                    let to = self.worker_node[w];
+                    let bytes = self.steal_bytes - steal_bytes0;
+                    self.tr_sched(TraceEvent::Steal {
+                        t: t0,
+                        i: inst,
+                        from: from as u32,
+                        to: to as u32,
+                        bytes,
+                    });
                 }
             }
             STask::Shutdown { scope } => {
@@ -614,11 +758,12 @@ impl<'a> Des<'a> {
             // rest to every idle worker — a woken worker with nothing
             // legal to take simply re-idles
             let mut targets: Vec<(usize, u64)> = Vec::with_capacity(n);
-            for (avail, t) in spawned {
-                let at = end.max(avail);
+            for sp in spawned {
+                let at = end.max(sp.at);
                 latest = latest.max(at);
-                let tgt = self.route_target(w, &t);
-                self.deques[tgt].push_back((at, t));
+                let tgt = self.route_target(w, &sp.task);
+                self.emit_ready(at, end, &sp);
+                self.deques[tgt].push_back((at, sp.inst, sp.task));
                 targets.push((tgt, at));
             }
             if n > 0 {
@@ -633,10 +778,11 @@ impl<'a> Des<'a> {
                 self.wake_idle(latest, self.threads);
             }
         } else {
-            for (avail, t) in spawned {
-                let at = end.max(avail);
+            for sp in spawned {
+                let at = end.max(sp.at);
                 latest = latest.max(at);
-                self.deques[w].push_back((at, t));
+                self.emit_ready(at, end, &sp);
+                self.deques[w].push_back((at, sp.inst, sp.task));
             }
             if n > 0 {
                 self.wake_idle(latest, n);
@@ -650,12 +796,12 @@ impl<'a> Des<'a> {
         key: TagKey,
         scope: usize,
         at: u64,
-        spawned: &mut Vec<(u64, STask)>,
+        spawned: &mut Vec<Sp>,
     ) -> f64 {
         let mut dur = self.costs.put_ns;
-        for (avail, r) in self.put(key, at) {
+        for sp in self.put(key, at) {
             dur += self.costs.spawn_ns;
-            spawned.push((avail, r));
+            spawned.push(sp);
         }
         self.scopes[scope].remaining -= 1;
         if self.scopes[scope].remaining == 0 {
@@ -668,23 +814,25 @@ impl<'a> Des<'a> {
         &mut self,
         scope: usize,
         at: u64,
-        spawned: &mut Vec<(u64, STask)>,
+        spawned: &mut Vec<Sp>,
     ) -> f64 {
         let mut dur = 0.0;
         if let Some(sig) = self.scopes[scope].signal.clone() {
             dur += self.costs.put_ns;
-            for (avail, r) in self.put(sig, at) {
+            for sp in self.put(sig, at) {
                 dur += self.costs.spawn_ns;
-                spawned.push((avail, r));
+                spawned.push(sp);
             }
         } else {
             dur += self.costs.spawn_ns;
-            spawned.push((0, STask::Shutdown { scope }));
+            let t = STask::Shutdown { scope };
+            let i = self.spawn_task(at, &t);
+            spawned.push(Sp { at: 0, src: self.cur_inst, inst: i, task: t });
         }
         dur
     }
 
-    fn run_cont(&mut self, t0: u64, cont: Cont, spawned: &mut Vec<(u64, STask)>) -> f64 {
+    fn run_cont(&mut self, t0: u64, cont: Cont, spawned: &mut Vec<Sp>) -> f64 {
         match cont {
             Cont::Done => {
                 self.completed = true;
@@ -698,14 +846,13 @@ impl<'a> Des<'a> {
                 };
                 if (next as usize) < children.len() {
                     let child = children[next as usize];
-                    spawned.push((
-                        0,
-                        STask::Startup {
-                            node: child,
-                            prefix: coords.clone(),
-                            on_finish: Box::new(Cont::NextSibling { node, coords, next: next + 1, after }),
-                        },
-                    ));
+                    let t = STask::Startup {
+                        node: child,
+                        prefix: coords.clone(),
+                        on_finish: Box::new(Cont::NextSibling { node, coords, next: next + 1, after }),
+                    };
+                    let i = self.spawn_task(t0, &t);
+                    spawned.push(Sp { at: 0, src: self.cur_inst, inst: i, task: t });
                     self.costs.spawn_ns
                 } else {
                     self.run_cont(t0, *after, spawned)
@@ -737,6 +884,10 @@ impl<'a> Des<'a> {
     /// cross-node traffic (and as migration traffic when `stolen`). The
     /// put is always local to `here`, and the item is accounted against
     /// `here`'s per-node live/peak bytes.
+    ///
+    /// `t0` + `base_dur` locate the leaf's data-plane events in virtual
+    /// time for the trace.
+    #[allow(clippy::too_many_arguments)]
     fn space_leaf(
         &mut self,
         node: u32,
@@ -745,6 +896,8 @@ impl<'a> Des<'a> {
         pts: f64,
         here: usize,
         stolen: bool,
+        t0: u64,
+        base_dur: f64,
     ) -> f64 {
         let c = self.costs;
         let mut dur = 0.0;
@@ -752,26 +905,11 @@ impl<'a> Des<'a> {
             let k = Self::done_key(node, a);
             dur += c.space_get_ns;
             self.space_gets += 1;
-            match self.space_items.get_mut(&k) {
+            let (bytes, owner, freed) = match self.space_items.get_mut(&k) {
                 Some((bytes, remaining, owner)) => {
                     let (b, o) = (*bytes, *owner);
-                    if o == here {
-                        self.space_local_gets += 1;
-                    } else {
-                        self.space_remote_gets += 1;
-                        self.space_remote_bytes += b;
-                        dur += c.remote_transfer_ns(b);
-                        if stolen {
-                            self.steal_bytes += b;
-                        }
-                    }
                     *remaining -= 1;
-                    if *remaining == 0 {
-                        self.space_items.remove(&k);
-                        self.space_live -= b;
-                        self.node_live[o] -= b;
-                        self.space_frees += 1;
-                    }
+                    (b, o, *remaining == 0)
                 }
                 // mirror the real ItemSpace::get panic: an absent item
                 // means consumer_count and the antecedent set disagree
@@ -779,6 +917,34 @@ impl<'a> Des<'a> {
                     "DES space get of absent datablock {k:?} — \
                      consumer_count / antecedent mismatch"
                 ),
+            };
+            if owner == here {
+                self.space_local_gets += 1;
+            } else {
+                self.space_remote_gets += 1;
+                self.space_remote_bytes += bytes;
+                dur += c.remote_transfer_ns(bytes);
+                if stolen {
+                    self.steal_bytes += bytes;
+                }
+            }
+            let ev_t = t0 + ns_of(base_dur + dur);
+            let i = self.cur_inst;
+            self.tr_data(TraceEvent::Get {
+                t: ev_t,
+                i,
+                key: (k.node, k.coords.clone()),
+                bytes,
+                from: owner as u32,
+                to: here as u32,
+                remote: owner != here,
+            });
+            if freed {
+                self.space_items.remove(&k);
+                self.space_live -= bytes;
+                self.node_live[owner] -= bytes;
+                self.space_frees += 1;
+                self.tr_data(TraceEvent::Free { t: ev_t, i, key: (k.node, k.coords) });
             }
         }
         let tile_bytes = (pts * 4.0) as u64;
@@ -788,16 +954,24 @@ impl<'a> Des<'a> {
         self.space_peak = self.space_peak.max(self.space_live);
         self.node_live[here] += tile_bytes;
         self.node_peak[here] = self.node_peak[here].max(self.node_live[here]);
+        let key = Self::done_key(node, coords);
+        let ev_t = t0 + ns_of(base_dur + dur);
+        let i = self.cur_inst;
+        self.tr_data(TraceEvent::Put {
+            t: ev_t,
+            i,
+            key: (key.node, key.coords.clone()),
+            bytes: tile_bytes,
+            node: here as u32,
+        });
         let consumers = self.plan.consumer_count(node, coords);
         if consumers == 0 {
             self.space_live -= tile_bytes;
             self.node_live[here] -= tile_bytes;
             self.space_frees += 1;
+            self.tr_data(TraceEvent::Free { t: ev_t, i, key: (key.node, key.coords) });
         } else {
-            self.space_items.insert(
-                Self::done_key(node, coords),
-                (tile_bytes, consumers as i64, here),
-            );
+            self.space_items.insert(key, (tile_bytes, consumers as i64, here));
         }
         dur
     }
@@ -884,12 +1058,7 @@ pub fn simulate_sharded(
     )
 }
 
-/// The DES core every entry point funnels into: simulate the plan under
-/// a dependence mode, data plane, topology and steal policy. Multi-node
-/// topologies with `threads >= nodes` get node-pinned scheduling (leaf
-/// EDTs run on — and steal within — their owner node; `RemoteReady`
-/// additionally lets idle nodes claim remote-ready leaves); otherwise
-/// the flat single-scheduler pool of earlier revisions runs unchanged.
+/// The untraced DES entry every pre-trace caller funnels into.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn des_exec(
     plan: &Plan,
@@ -903,6 +1072,46 @@ pub(crate) fn des_exec(
     total_flops: f64,
     steal_policy: StealPolicy,
 ) -> SimReport {
+    des_exec_traced(
+        plan,
+        mode,
+        plane,
+        topo,
+        threads,
+        machine,
+        costs,
+        numa_pinned,
+        total_flops,
+        steal_policy,
+        TraceMode::Off,
+    )
+    .0
+}
+
+/// The DES core every entry point funnels into: simulate the plan under
+/// a dependence mode, data plane, topology and steal policy. Multi-node
+/// topologies with `threads >= nodes` get node-pinned scheduling (leaf
+/// EDTs run on — and steal within — their owner node; `RemoteReady`
+/// additionally lets idle nodes claim remote-ready leaves); otherwise
+/// the flat single-scheduler pool of earlier revisions runs unchanged.
+///
+/// With `trace != TraceMode::Off` the returned event stream records
+/// every state transition in deterministic simulation order; tracing is
+/// pure observation and never changes the report.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn des_exec_traced(
+    plan: &Plan,
+    mode: DepMode,
+    plane: DataPlane,
+    topo: &Topology,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+    total_flops: f64,
+    steal_policy: StealPolicy,
+    trace: TraceMode,
+) -> (SimReport, Vec<TraceEvent>) {
     // node-pinned scheduling needs a data plane that models distribution:
     // on the shared plane a topology has nothing to pin or transfer (PR 2
     // contract: topology affects Space-plane accounting only), and a
@@ -964,15 +1173,32 @@ pub(crate) fn des_exec(
         steal_bytes: 0,
         work_ns: 0.0,
         busy_ns: 0.0,
+        tracer: (trace != TraceMode::Off).then(|| Tracer {
+            full: trace == TraceMode::Full,
+            events: Vec::new(),
+        }),
+        next_inst: 0,
+        cur_inst: 0,
     };
-    d.deques[0].push_back((
-        0,
-        STask::Startup {
-            node: plan.root,
-            prefix: Box::new([]),
-            on_finish: Box::new(Cont::Done),
-        },
-    ));
+    let root = STask::Startup {
+        node: plan.root,
+        prefix: Box::new([]),
+        on_finish: Box::new(Cont::Done),
+    };
+    let root_inst = d.alloc_inst();
+    if d.tracer.is_some() {
+        let id = Des::task_id(&root);
+        d.tr_sched(TraceEvent::Spawn { t: 0, i: root_inst, id, by: None });
+        d.tr_sched(TraceEvent::Ready {
+            t: 0,
+            i: root_inst,
+            by: None,
+            et: None,
+            bp: None,
+            bt: None,
+        });
+    }
+    d.deques[0].push_back((0, root_inst, root));
     d.heap.push(Reverse((0, 0, 0)));
     for w in 1..threads {
         d.idle[w] = true;
@@ -980,12 +1206,21 @@ pub(crate) fn des_exec(
     let mut makespan = 0u64;
     while let Some(Reverse((t, _s, w))) = d.heap.pop() {
         match d.find_task(w, t) {
-            FindResult::Task(task, steal_cost, stolen) => {
+            FindResult::Task(task, inst, steal_cost, acq) => {
+                if d.tracer.is_some() {
+                    let node = d.worker_node[w] as u32;
+                    d.tr_sched(TraceEvent::Start { t, i: inst, worker: w as u32, node, acq });
+                }
+                let fg0 = d.failed_gets;
                 // dur already includes the acquisition cost — don't
                 // charge steal_ns twice in the worker's busy window
-                let dur = steal_cost + d.exec(w, t + steal_cost as u64, task, stolen);
+                let dur = steal_cost + d.exec(w, inst, t + steal_cost as u64, task, acq);
                 d.free_at[w] = t + d.ns(dur).max(1);
                 makespan = makespan.max(d.free_at[w]);
+                if d.tracer.is_some() {
+                    let misses = d.failed_gets - fg0;
+                    d.tr_sched(TraceEvent::Done { t: d.free_at[w], i: inst, dur, misses });
+                }
                 d.seq += 1;
                 d.heap.push(Reverse((d.free_at[w], d.seq, w)));
             }
@@ -1005,7 +1240,7 @@ pub(crate) fn des_exec(
         plan.name, mode
     );
     let seconds = makespan as f64 / 1e9;
-    SimReport {
+    let report = SimReport {
         seconds,
         gflops: total_flops / seconds / 1e9,
         tasks: d.tasks,
@@ -1022,7 +1257,9 @@ pub(crate) fn des_exec(
         node_peak_bytes: d.node_peak,
         stolen_edts: d.stolen_edts,
         steal_bytes: d.steal_bytes,
-    }
+    };
+    let events = d.tracer.map(|t| t.events).unwrap_or_default();
+    (report, events)
 }
 
 /// The simulator backend behind [`crate::rt::launch`]: the same
@@ -1030,7 +1267,9 @@ pub(crate) fn des_exec(
 /// in deterministic virtual time. EDT runtimes run the DES (the full
 /// [`SimReport`] rides along in [`crate::rt::RunReport::sim`]); the
 /// OpenMP comparator uses the closed-form wavefront model
-/// (`sim::omp::simulate_omp`).
+/// (`sim::omp::simulate_omp`). With [`crate::rt::ExecConfig::trace`] set,
+/// the captured [`crate::sim::trace::Trace`] rides along in
+/// [`crate::rt::RunReport::trace`].
 pub struct DesBackend;
 
 impl crate::rt::Backend for DesBackend {
@@ -1044,11 +1283,12 @@ impl crate::rt::Backend for DesBackend {
         leaf: &crate::rt::LeafSpec<'_>,
         cfg: &crate::rt::ExecConfig,
     ) -> anyhow::Result<crate::rt::RunReport> {
+        use super::trace::{CostAtoms, Trace, TraceConfig};
         let topo = cfg.resolved_topology(plan);
         let echo = cfg.echo_for(&topo);
         match cfg.runtime {
             crate::rt::RuntimeKind::Edt(mode) => {
-                let r = des_exec(
+                let (r, events) = des_exec_traced(
                     plan,
                     mode,
                     cfg.plane,
@@ -1059,7 +1299,19 @@ impl crate::rt::Backend for DesBackend {
                     cfg.numa_pinned,
                     leaf.total_flops,
                     cfg.steal,
+                    cfg.trace,
                 );
+                let trace = (cfg.trace != TraceMode::Off).then(|| {
+                    Arc::new(Trace {
+                        workload: plan.name.clone(),
+                        mode: cfg.trace,
+                        total_flops: leaf.total_flops,
+                        config: TraceConfig::from_echo(&echo),
+                        cost: CostAtoms::from_model(&cfg.cost),
+                        report: r.clone(),
+                        events,
+                    })
+                });
                 // mirror the counters the real engine reports; the work
                 // ratio survives through the ns pair
                 let metrics = MetricsSnapshot {
@@ -1085,9 +1337,15 @@ impl crate::rt::Backend for DesBackend {
                     node_peak_bytes: r.node_peak_bytes.clone(),
                     config: echo,
                     sim: Some(r),
+                    trace,
                 })
             }
             crate::rt::RuntimeKind::Omp => {
+                anyhow::ensure!(
+                    cfg.trace == TraceMode::Off,
+                    "trace capture needs an EDT runtime — the omp comparator is a \
+                     closed-form model with no per-task events to record"
+                );
                 let secs = super::omp::simulate_omp(
                     plan,
                     cfg.threads,
@@ -1105,6 +1363,7 @@ impl crate::rt::Backend for DesBackend {
                     node_peak_bytes: Vec::new(),
                     config: echo,
                     sim: None,
+                    trace: None,
                 })
             }
         }
@@ -1261,6 +1520,55 @@ mod tests {
             assert_eq!(r.space_puts, core.space_puts);
             assert_eq!(r.space_peak_bytes, core.space_peak_bytes);
         }
+    }
+
+    /// Tracing is pure observation: a traced run reports bit-identically
+    /// to an untraced one, and two traced runs produce identical streams.
+    #[test]
+    fn tracing_never_perturbs_the_simulation() {
+        use crate::space::placement::Placement;
+        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let topo = Topology::for_plan(&plan, 2, Placement::Block);
+        let run = |tm: TraceMode| {
+            des_exec_traced(
+                &plan,
+                DepMode::CncDep,
+                DataPlane::Space,
+                &topo,
+                4,
+                &Machine::default(),
+                &CostModel::default(),
+                true,
+                inst.total_flops,
+                StealPolicy::RemoteReady,
+                tm,
+            )
+        };
+        let (off, ev_off) = run(TraceMode::Off);
+        let (sched, ev_sched) = run(TraceMode::Schedule);
+        let (full, ev_full) = run(TraceMode::Full);
+        assert!(ev_off.is_empty());
+        assert_eq!(off.seconds.to_bits(), sched.seconds.to_bits());
+        assert_eq!(off.seconds.to_bits(), full.seconds.to_bits());
+        assert_eq!(off.tasks, full.tasks);
+        assert_eq!(off.space_gets, full.space_gets);
+        assert_eq!(off.stolen_edts, full.stolen_edts);
+        // schedule mode is the full stream minus the data-plane events
+        let no_data: Vec<&TraceEvent> = ev_full
+            .iter()
+            .filter(|e| !matches!(e, TraceEvent::Put { .. } | TraceEvent::Get { .. } | TraceEvent::Free { .. }))
+            .collect();
+        assert_eq!(no_data.len(), ev_sched.len());
+        assert!(no_data.iter().zip(&ev_sched).all(|(a, b)| *a == b));
+        // determinism of the stream itself
+        let (_, ev_again) = run(TraceMode::Full);
+        assert_eq!(ev_full, ev_again);
+        // event counts mirror the report
+        let starts = ev_full.iter().filter(|e| matches!(e, TraceEvent::Start { .. })).count() as u64;
+        assert_eq!(starts, full.tasks);
+        let puts = ev_full.iter().filter(|e| matches!(e, TraceEvent::Put { .. })).count() as u64;
+        assert_eq!(puts, full.space_puts);
     }
 
     /// The ROADMAP work-stealing item: on a skewed triangular workload

@@ -35,13 +35,22 @@
 //! [`crate::rt::launch`] with an [`crate::rt::ExecConfig`] naming
 //! [`crate::rt::BackendKind::Des`] ([`DesBackend`] implements the
 //! [`crate::rt::Backend`] trait).
+//!
+//! With [`crate::rt::ExecConfig::trace`] set to a non-`Off`
+//! [`TraceMode`], the DES additionally records a deterministic
+//! [`trace::TraceEvent`] stream — every spawn/ready/start/done, data-plane
+//! put/get/free and inter-node migration, stamped with virtual time and
+//! EDT identity — serialized as versioned JSON lines (`tale3-trace/v1`)
+//! and replayable through [`crate::rt::ReplayBackend`] (see [`trace`]).
 
 pub mod cost;
 pub mod des;
 pub mod omp;
+pub mod trace;
 
 pub use cost::{CostModel, Machine};
 pub use des::{simulate, DesBackend, SimReport};
+pub use trace::{Trace, TraceMode};
 #[allow(deprecated)]
 pub use des::{simulate_sharded, simulate_with_plane};
 pub use omp::simulate_omp;

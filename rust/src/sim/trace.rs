@@ -1,0 +1,1140 @@
+//! Execution traces: the DES as an auditable instrument.
+//!
+//! The paper's argument is that loop-type-encoded dependences make EDT
+//! scheduling *analyzable* — but an aggregate [`SimReport`] only says how
+//! a run ended, not why. This module defines a compact, deterministic
+//! event schema stamped with virtual time and EDT identity, so every
+//! scheduling question ("why did `RemoteReady` steal here?", "what paid
+//! for that makespan?") can be answered from a captured trace instead of
+//! re-running the simulator.
+//!
+//! Mapping to the paper's EDT lifecycle:
+//!
+//! - [`TraceEvent::Spawn`] / [`TraceEvent::Ready`] — §4.5 spawn/satisfy:
+//!   a task instance is created (prescribed or spawned), then becomes
+//!   runnable when its last dependence is satisfied. `Ready` records the
+//!   *releasing* instance (`by`) and, when the availability stamp came
+//!   from an earlier put, the stamping instance (`bp`) and stamp (`bt`) —
+//!   the point-to-point synchronization of §4.7.3.
+//! - [`TraceEvent::Start`] / [`TraceEvent::Done`] — one execution slice
+//!   on a virtual worker. `acq` says how the worker acquired the task:
+//!   its own deque, an intra-node steal, or a cross-node migration.
+//! - [`TraceEvent::Put`] / [`TraceEvent::Get`] / [`TraceEvent::Free`] —
+//!   the §4.5 item-collection data plane: a leaf publishes its datablock,
+//!   consumers get it (locally or over a link), the last get reclaims it.
+//! - [`TraceEvent::Steal`] — one inter-node EDT migration under
+//!   [`crate::rt::StealPolicy::RemoteReady`], with the input-datablock
+//!   bytes it pulled over links.
+//!
+//! Serialization is versioned JSON lines (`tale3-trace/v1`): one header
+//! object naming the schema, workload, resolved config, the cost atoms a
+//! replay may re-price, and the original [`SimReport`]; then one object
+//! per event, in deterministic simulation order. Like the bench report,
+//! a trace contains **virtual time only** — no wall clock, host name or
+//! path ever appears, so two captures of the same config are
+//! byte-identical (CI's `trace-gate` diffs them).
+//!
+//! [`crate::rt::ReplayBackend`] consumes these traces: verbatim (an
+//! integrity audit that recomputes the timeline and counters from the
+//! event stream) or re-costed (same schedule, different data-plane /
+//! link cost atoms — the "what would a cheaper link have done" study).
+
+use super::cost::CostModel;
+use super::des::SimReport;
+use crate::rt::ConfigEcho;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// How much the DES records while it runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// No recording (the default; zero observation overhead).
+    #[default]
+    Off,
+    /// Scheduling events only: Spawn/Ready/Start/Done/Steal.
+    Schedule,
+    /// Scheduling plus data-plane events: adds Put/Get/Free.
+    Full,
+}
+
+impl TraceMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Schedule => "schedule",
+            TraceMode::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceMode> {
+        match s {
+            "off" => Some(TraceMode::Off),
+            "schedule" => Some(TraceMode::Schedule),
+            "full" => Some(TraceMode::Full),
+            _ => None,
+        }
+    }
+}
+
+/// How a worker acquired a task: its own deque, a steal from a same-node
+/// victim, or a cross-node migration (`RemoteReady` only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Acq {
+    Own,
+    Steal,
+    Migrate,
+}
+
+impl Acq {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Acq::Own => "own",
+            Acq::Steal => "steal",
+            Acq::Migrate => "migrate",
+        }
+    }
+    fn parse(s: &str) -> Option<Acq> {
+        match s {
+            "own" => Some(Acq::Own),
+            "steal" => Some(Acq::Steal),
+            "migrate" => Some(Acq::Migrate),
+            _ => None,
+        }
+    }
+}
+
+/// The four task shapes of the EDT expansion (§4.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Startup,
+    Worker,
+    Prescriber,
+    Shutdown,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Startup => "startup",
+            TaskKind::Worker => "worker",
+            TaskKind::Prescriber => "prescriber",
+            TaskKind::Shutdown => "shutdown",
+        }
+    }
+    fn parse(s: &str) -> Option<TaskKind> {
+        match s {
+            "startup" => Some(TaskKind::Startup),
+            "worker" => Some(TaskKind::Worker),
+            "prescriber" => Some(TaskKind::Prescriber),
+            "shutdown" => Some(TaskKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// EDT identity: task kind + plan node + tag coordinates (for Shutdown,
+/// `node` is the finish-scope index and `coords` is empty).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EdtId {
+    pub kind: TaskKind,
+    pub node: u32,
+    pub coords: Box<[i64]>,
+}
+
+/// A datablock key: producing plan node + tag coordinates.
+pub type ItemKey = (u32, Box<[i64]>);
+
+/// One trace event. `t` is virtual nanoseconds; `i` is the task
+/// *instance* (a blocked-and-retried EDT is a fresh instance per
+/// attempt, so Spawn→Ready→Start→Done is linear per instance).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Instance `i` created by instance `by` (`None` for the root).
+    Spawn { t: u64, i: u64, id: EdtId, by: Option<u64> },
+    /// Instance `i` enqueued runnable by instance `by` whose visible end
+    /// was `et` (the enqueue-availability bound — it can precede the
+    /// enqueuer's busy end); when the availability stamp came from a put
+    /// by another instance, `bp` is that instance and `bt` the virtual
+    /// stamp. A re-cost replay shifts `et`/`bt` with their producers'
+    /// recomputed timelines.
+    Ready {
+        t: u64,
+        i: u64,
+        by: Option<u64>,
+        et: Option<u64>,
+        bp: Option<u64>,
+        bt: Option<u64>,
+    },
+    /// Worker `worker` (on scheduler node `node`) begins instance `i`.
+    Start { t: u64, i: u64, worker: u32, node: u32, acq: Acq },
+    /// Instance `i` ends at `t` after `dur` virtual ns (acquisition
+    /// included); `misses` counts its failed tag-table gets.
+    Done { t: u64, i: u64, dur: f64, misses: u64 },
+    /// Instance `i` publishes datablock `key` (`bytes` bytes) on `node`.
+    Put { t: u64, i: u64, key: ItemKey, bytes: u64, node: u32 },
+    /// Instance `i` consumes datablock `key` owned by node `from` while
+    /// running on node `to`; `remote` marks a link crossing.
+    Get { t: u64, i: u64, key: ItemKey, bytes: u64, from: u32, to: u32, remote: bool },
+    /// The last get (or a zero-consumer put) reclaims datablock `key`.
+    Free { t: u64, i: u64, key: ItemKey },
+    /// Instance `i` is a leaf EDT migrated from node `from` to `to`
+    /// (`RemoteReady`), pulling `bytes` input-datablock bytes over links.
+    Steal { t: u64, i: u64, from: u32, to: u32, bytes: u64 },
+}
+
+/// The resolved launch the trace was captured under (an owned mirror of
+/// [`ConfigEcho`], parseable back from disk).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceConfig {
+    pub backend: String,
+    pub runtime: String,
+    pub plane: String,
+    pub threads: u64,
+    pub nodes: u64,
+    pub placement: String,
+    pub steal: String,
+    pub numa_pinned: bool,
+    pub trace: String,
+}
+
+impl TraceConfig {
+    pub fn from_echo(e: &ConfigEcho) -> Self {
+        TraceConfig {
+            backend: e.backend.to_string(),
+            runtime: e.runtime.to_string(),
+            plane: e.plane.to_string(),
+            threads: e.threads as u64,
+            nodes: e.nodes as u64,
+            placement: e.placement.to_string(),
+            steal: e.steal.to_string(),
+            numa_pinned: e.numa_pinned,
+            trace: e.trace.to_string(),
+        }
+    }
+}
+
+/// The cost-model atoms a replay can re-price without re-simulating:
+/// everything charged per traced event (acquisition, data-plane
+/// operations, link transfers). Compute-side constants (dispatch, spawn,
+/// leaf roofline, ...) are baked into each instance's recorded duration
+/// and need a fresh simulation to change.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostAtoms {
+    pub steal_ns: f64,
+    pub space_get_ns: f64,
+    pub space_put_ns: f64,
+    pub space_copy_ns_per_byte: f64,
+    pub link_latency_ns: f64,
+    pub link_bw_ns_per_byte: f64,
+}
+
+impl CostAtoms {
+    pub fn from_model(c: &CostModel) -> Self {
+        CostAtoms {
+            steal_ns: c.steal_ns,
+            space_get_ns: c.space_get_ns,
+            space_put_ns: c.space_put_ns,
+            space_copy_ns_per_byte: c.space_copy_ns_per_byte,
+            link_latency_ns: c.link_latency_ns,
+            link_bw_ns_per_byte: c.link_bw_ns_per_byte,
+        }
+    }
+
+    /// Acquisition cost of one Start (mirrors `CostModel::steal_ns`).
+    pub fn acq_ns(&self, a: Acq) -> f64 {
+        match a {
+            Acq::Own => 0.0,
+            Acq::Steal | Acq::Migrate => self.steal_ns,
+        }
+    }
+
+    /// Cost of one data-plane get (mirrors the DES `space_leaf` charges:
+    /// `space_get_ns`, plus serialization + link hop when remote).
+    pub fn get_ns(&self, remote: bool, bytes: u64) -> f64 {
+        let mut ns = self.space_get_ns;
+        if remote {
+            ns += self.link_latency_ns
+                + bytes as f64 * (self.space_copy_ns_per_byte + self.link_bw_ns_per_byte);
+        }
+        ns
+    }
+
+    /// Cost of one data-plane put with its copy-out.
+    pub fn put_ns(&self, bytes: u64) -> f64 {
+        self.space_put_ns + bytes as f64 * self.space_copy_ns_per_byte
+    }
+}
+
+/// A captured execution trace: header + events, in deterministic
+/// simulation order.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub workload: String,
+    pub mode: TraceMode,
+    pub total_flops: f64,
+    pub config: TraceConfig,
+    pub cost: CostAtoms,
+    /// The [`SimReport`] of the capturing run — what a verbatim replay
+    /// must reproduce.
+    pub report: SimReport,
+    pub events: Vec<TraceEvent>,
+}
+
+pub const TRACE_SCHEMA: &str = "tale3-trace/v1";
+
+// ---------------------------------------------------------------- emit
+
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn jints(vals: &[i64]) -> String {
+    let items: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn junts(vals: &[u64]) -> String {
+    let items: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn report_obj(r: &SimReport) -> String {
+    format!(
+        "{{\"sim_seconds\":{},\"gflops\":{},\"work_ratio\":{},\"tasks\":{},\
+         \"steals\":{},\"failed_gets\":{},\"space_puts\":{},\"space_gets\":{},\
+         \"space_frees\":{},\"local_gets\":{},\"remote_gets\":{},\
+         \"remote_bytes\":{},\"peak_bytes\":{},\"node_peak_bytes\":{},\
+         \"stolen_edts\":{},\"steal_bytes\":{}}}",
+        r.seconds,
+        r.gflops,
+        r.work_ratio,
+        r.tasks,
+        r.steals,
+        r.failed_gets,
+        r.space_puts,
+        r.space_gets,
+        r.space_frees,
+        r.space_local_gets,
+        r.space_remote_gets,
+        r.space_remote_bytes,
+        r.space_peak_bytes,
+        junts(&r.node_peak_bytes),
+        r.stolen_edts,
+        r.steal_bytes,
+    )
+}
+
+impl Trace {
+    /// Render the trace as versioned JSON lines. Deterministic: a pure
+    /// function of the trace (which is itself a pure function of the
+    /// launch config), so two captures of one config diff clean.
+    pub fn to_jsonl(&self) -> String {
+        let c = &self.config;
+        let mut out = format!(
+            "{{\"schema\":{},\"mode\":{},\"workload\":{},\"total_flops\":{},\
+             \"config\":{{\"backend\":{},\"runtime\":{},\"plane\":{},\"threads\":{},\
+             \"nodes\":{},\"placement\":{},\"steal\":{},\"numa_pinned\":{},\"trace\":{}}},\
+             \"cost\":{{\"steal_ns\":{},\"space_get_ns\":{},\"space_put_ns\":{},\
+             \"space_copy_ns_per_byte\":{},\"link_latency_ns\":{},\"link_bw_ns_per_byte\":{}}},\
+             \"report\":{}}}\n",
+            jstr(TRACE_SCHEMA),
+            jstr(self.mode.name()),
+            jstr(&self.workload),
+            self.total_flops,
+            jstr(&c.backend),
+            jstr(&c.runtime),
+            jstr(&c.plane),
+            c.threads,
+            c.nodes,
+            jstr(&c.placement),
+            jstr(&c.steal),
+            c.numa_pinned,
+            jstr(&c.trace),
+            self.cost.steal_ns,
+            self.cost.space_get_ns,
+            self.cost.space_put_ns,
+            self.cost.space_copy_ns_per_byte,
+            self.cost.link_latency_ns,
+            self.cost.link_bw_ns_per_byte,
+            report_obj(&self.report),
+        );
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Spawn { t, i, id, by } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"spawn\",\"t\":{t},\"i\":{i},\"k\":{},\"n\":{},\"c\":{}",
+                        jstr(id.kind.name()),
+                        id.node,
+                        jints(&id.coords),
+                    ));
+                    if let Some(b) = by {
+                        out.push_str(&format!(",\"by\":{b}"));
+                    }
+                    out.push_str("}\n");
+                }
+                TraceEvent::Ready { t, i, by, et, bp, bt } => {
+                    out.push_str(&format!("{{\"e\":\"ready\",\"t\":{t},\"i\":{i}"));
+                    if let (Some(b), Some(e)) = (by, et) {
+                        out.push_str(&format!(",\"by\":{b},\"et\":{e}"));
+                    }
+                    if let (Some(p), Some(s)) = (bp, bt) {
+                        out.push_str(&format!(",\"bp\":{p},\"bt\":{s}"));
+                    }
+                    out.push_str("}\n");
+                }
+                TraceEvent::Start { t, i, worker, node, acq } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"start\",\"t\":{t},\"i\":{i},\"w\":{worker},\"nd\":{node},\"a\":{}}}\n",
+                        jstr(acq.name()),
+                    ));
+                }
+                TraceEvent::Done { t, i, dur, misses } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"done\",\"t\":{t},\"i\":{i},\"d\":{dur},\"m\":{misses}}}\n"
+                    ));
+                }
+                TraceEvent::Put { t, i, key, bytes, node } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"put\",\"t\":{t},\"i\":{i},\"kn\":{},\"kc\":{},\"b\":{bytes},\"nd\":{node}}}\n",
+                        key.0,
+                        jints(&key.1),
+                    ));
+                }
+                TraceEvent::Get { t, i, key, bytes, from, to, remote } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"get\",\"t\":{t},\"i\":{i},\"kn\":{},\"kc\":{},\"b\":{bytes},\"f\":{from},\"nd\":{to},\"r\":{}}}\n",
+                        key.0,
+                        jints(&key.1),
+                        u8::from(*remote),
+                    ));
+                }
+                TraceEvent::Free { t, i, key } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"free\",\"t\":{t},\"i\":{i},\"kn\":{},\"kc\":{}}}\n",
+                        key.0,
+                        jints(&key.1),
+                    ));
+                }
+                TraceEvent::Steal { t, i, from, to, bytes } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"steal\",\"t\":{t},\"i\":{i},\"f\":{from},\"nd\":{to},\"b\":{bytes}}}\n"
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+// --------------------------------------------------------------- parse
+
+/// Minimal JSON value for parsing our own canonical emission (and only
+/// that): strings, raw numbers, bools, flat arrays, objects.
+#[derive(Debug, Clone)]
+enum JVal {
+    Str(String),
+    Num(String),
+    Bool(bool),
+    Arr(Vec<JVal>),
+    Obj(Vec<(String, JVal)>),
+}
+
+impl JVal {
+    fn get(&self, key: &str) -> Option<&JVal> {
+        match self {
+            JVal::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    fn need(&self, key: &str) -> Result<&JVal> {
+        self.get(key).ok_or_else(|| anyhow!("missing key `{key}`"))
+    }
+    fn str_(&self) -> Result<&str> {
+        match self {
+            JVal::Str(s) => Ok(s),
+            _ => bail!("expected string"),
+        }
+    }
+    fn u64_(&self) -> Result<u64> {
+        match self {
+            JVal::Num(n) => n.parse().map_err(|_| anyhow!("expected u64, got `{n}`")),
+            _ => bail!("expected number"),
+        }
+    }
+    fn f64_(&self) -> Result<f64> {
+        match self {
+            JVal::Num(n) => n.parse().map_err(|_| anyhow!("expected f64, got `{n}`")),
+            _ => bail!("expected number"),
+        }
+    }
+    fn bool_(&self) -> Result<bool> {
+        match self {
+            JVal::Bool(b) => Ok(*b),
+            _ => bail!("expected bool"),
+        }
+    }
+    fn i64s(&self) -> Result<Box<[i64]>> {
+        match self {
+            JVal::Arr(vs) => vs
+                .iter()
+                .map(|v| match v {
+                    JVal::Num(n) => n.parse().map_err(|_| anyhow!("expected i64, got `{n}`")),
+                    _ => bail!("expected number in array"),
+                })
+                .collect(),
+            _ => bail!("expected array"),
+        }
+    }
+    fn u64s(&self) -> Result<Vec<u64>> {
+        match self {
+            JVal::Arr(vs) => vs.iter().map(|v| v.u64_()).collect(),
+            _ => bail!("expected array"),
+        }
+    }
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected `{}` at byte {}", c as char, self.i)
+        }
+    }
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek().ok_or_else(|| anyhow!("unterminated string"))? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    match self.peek().ok_or_else(|| anyhow!("bad escape"))? {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'u' => {
+                            ensure!(self.i + 4 < self.b.len(), "bad \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            s.push(char::from_u32(code).ok_or_else(|| anyhow!("bad codepoint"))?);
+                            self.i += 4;
+                        }
+                        c => bail!("unsupported escape `\\{}`", c as char),
+                    }
+                    self.i += 1;
+                }
+                c => {
+                    // multi-byte UTF-8 passes through byte by byte
+                    let start = self.i;
+                    let len = match c {
+                        0..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    ensure!(start + len <= self.b.len(), "truncated utf-8");
+                    s.push_str(std::str::from_utf8(&self.b[start..start + len])?);
+                    self.i += len;
+                }
+            }
+        }
+    }
+    fn value(&mut self) -> Result<JVal> {
+        match self.peek().ok_or_else(|| anyhow!("unexpected end of input"))? {
+            b'"' => Ok(JVal::Str(self.string()?)),
+            b'{' => {
+                self.i += 1;
+                let mut kv = Vec::new();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(JVal::Obj(kv));
+                }
+                loop {
+                    let k = self.string()?;
+                    self.eat(b':')?;
+                    let v = self.value()?;
+                    kv.push((k, v));
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(JVal::Obj(kv));
+                        }
+                        _ => bail!("expected `,` or `}}` at byte {}", self.i),
+                    }
+                }
+            }
+            b'[' => {
+                self.i += 1;
+                let mut vs = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(JVal::Arr(vs));
+                }
+                loop {
+                    vs.push(self.value()?);
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(JVal::Arr(vs));
+                        }
+                        _ => bail!("expected `,` or `]` at byte {}", self.i),
+                    }
+                }
+            }
+            b't' => {
+                ensure!(self.b[self.i..].starts_with(b"true"), "bad literal");
+                self.i += 4;
+                Ok(JVal::Bool(true))
+            }
+            b'f' => {
+                ensure!(self.b[self.i..].starts_with(b"false"), "bad literal");
+                self.i += 5;
+                Ok(JVal::Bool(false))
+            }
+            _ => {
+                let start = self.i;
+                while let Some(c) = self.peek() {
+                    if matches!(c, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+                        self.i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                ensure!(self.i > start, "expected a value at byte {start}");
+                Ok(JVal::Num(
+                    std::str::from_utf8(&self.b[start..self.i])?.to_string(),
+                ))
+            }
+        }
+    }
+}
+
+fn parse_line(line: &str) -> Result<JVal> {
+    let mut p = P { b: line.as_bytes(), i: 0 };
+    let v = p.value()?;
+    ensure!(p.i == line.len(), "trailing bytes after JSON value");
+    Ok(v)
+}
+
+fn parse_report(v: &JVal) -> Result<SimReport> {
+    Ok(SimReport {
+        seconds: v.need("sim_seconds")?.f64_()?,
+        gflops: v.need("gflops")?.f64_()?,
+        work_ratio: v.need("work_ratio")?.f64_()?,
+        tasks: v.need("tasks")?.u64_()?,
+        steals: v.need("steals")?.u64_()?,
+        failed_gets: v.need("failed_gets")?.u64_()?,
+        space_puts: v.need("space_puts")?.u64_()?,
+        space_gets: v.need("space_gets")?.u64_()?,
+        space_frees: v.need("space_frees")?.u64_()?,
+        space_peak_bytes: v.need("peak_bytes")?.u64_()?,
+        space_local_gets: v.need("local_gets")?.u64_()?,
+        space_remote_gets: v.need("remote_gets")?.u64_()?,
+        space_remote_bytes: v.need("remote_bytes")?.u64_()?,
+        node_peak_bytes: v.need("node_peak_bytes")?.u64s()?,
+        stolen_edts: v.need("stolen_edts")?.u64_()?,
+        steal_bytes: v.need("steal_bytes")?.u64_()?,
+    })
+}
+
+fn opt_u64(v: &JVal, key: &str) -> Result<Option<u64>> {
+    v.get(key).map(|x| x.u64_()).transpose()
+}
+
+fn parse_key(v: &JVal) -> Result<ItemKey> {
+    Ok((v.need("kn")?.u64_()? as u32, v.need("kc")?.i64s()?))
+}
+
+impl Trace {
+    /// Parse a `tale3-trace/v1` JSON-lines document.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = parse_line(lines.next().ok_or_else(|| anyhow!("empty trace"))?)
+            .context("trace header")?;
+        let schema = header.need("schema")?.str_()?;
+        ensure!(
+            schema == TRACE_SCHEMA,
+            "unsupported trace schema `{schema}` (expected `{TRACE_SCHEMA}`)"
+        );
+        let mode = TraceMode::parse(header.need("mode")?.str_()?)
+            .ok_or_else(|| anyhow!("bad trace mode"))?;
+        let cfg = header.need("config")?;
+        let cost = header.need("cost")?;
+        let trace = Trace {
+            workload: header.need("workload")?.str_()?.to_string(),
+            mode,
+            total_flops: header.need("total_flops")?.f64_()?,
+            config: TraceConfig {
+                backend: cfg.need("backend")?.str_()?.to_string(),
+                runtime: cfg.need("runtime")?.str_()?.to_string(),
+                plane: cfg.need("plane")?.str_()?.to_string(),
+                threads: cfg.need("threads")?.u64_()?,
+                nodes: cfg.need("nodes")?.u64_()?,
+                placement: cfg.need("placement")?.str_()?.to_string(),
+                steal: cfg.need("steal")?.str_()?.to_string(),
+                numa_pinned: cfg.need("numa_pinned")?.bool_()?,
+                trace: cfg.need("trace")?.str_()?.to_string(),
+            },
+            cost: CostAtoms {
+                steal_ns: cost.need("steal_ns")?.f64_()?,
+                space_get_ns: cost.need("space_get_ns")?.f64_()?,
+                space_put_ns: cost.need("space_put_ns")?.f64_()?,
+                space_copy_ns_per_byte: cost.need("space_copy_ns_per_byte")?.f64_()?,
+                link_latency_ns: cost.need("link_latency_ns")?.f64_()?,
+                link_bw_ns_per_byte: cost.need("link_bw_ns_per_byte")?.f64_()?,
+            },
+            report: parse_report(header.need("report")?).context("trace header report")?,
+            events: Vec::new(),
+        };
+        let mut events = Vec::new();
+        for (idx, line) in lines.enumerate() {
+            let v = parse_line(line).with_context(|| format!("trace event {}", idx + 1))?;
+            let t = v.need("t")?.u64_()?;
+            let i = v.need("i")?.u64_()?;
+            let ev = match v.need("e")?.str_()? {
+                "spawn" => TraceEvent::Spawn {
+                    t,
+                    i,
+                    id: EdtId {
+                        kind: TaskKind::parse(v.need("k")?.str_()?)
+                            .ok_or_else(|| anyhow!("bad task kind"))?,
+                        node: v.need("n")?.u64_()? as u32,
+                        coords: v.need("c")?.i64s()?,
+                    },
+                    by: opt_u64(&v, "by")?,
+                },
+                "ready" => TraceEvent::Ready {
+                    t,
+                    i,
+                    by: opt_u64(&v, "by")?,
+                    et: opt_u64(&v, "et")?,
+                    bp: opt_u64(&v, "bp")?,
+                    bt: opt_u64(&v, "bt")?,
+                },
+                "start" => TraceEvent::Start {
+                    t,
+                    i,
+                    worker: v.need("w")?.u64_()? as u32,
+                    node: v.need("nd")?.u64_()? as u32,
+                    acq: Acq::parse(v.need("a")?.str_()?)
+                        .ok_or_else(|| anyhow!("bad acquisition kind"))?,
+                },
+                "done" => TraceEvent::Done {
+                    t,
+                    i,
+                    dur: v.need("d")?.f64_()?,
+                    misses: v.need("m")?.u64_()?,
+                },
+                "put" => TraceEvent::Put {
+                    t,
+                    i,
+                    key: parse_key(&v)?,
+                    bytes: v.need("b")?.u64_()?,
+                    node: v.need("nd")?.u64_()? as u32,
+                },
+                "get" => TraceEvent::Get {
+                    t,
+                    i,
+                    key: parse_key(&v)?,
+                    bytes: v.need("b")?.u64_()?,
+                    from: v.need("f")?.u64_()? as u32,
+                    to: v.need("nd")?.u64_()? as u32,
+                    remote: v.need("r")?.u64_()? != 0,
+                },
+                "free" => TraceEvent::Free { t, i, key: parse_key(&v)? },
+                "steal" => TraceEvent::Steal {
+                    t,
+                    i,
+                    from: v.need("f")?.u64_()? as u32,
+                    to: v.need("nd")?.u64_()? as u32,
+                    bytes: v.need("b")?.u64_()?,
+                },
+                e => bail!("unknown event type `{e}`"),
+            };
+            events.push(ev);
+        }
+        Ok(Trace { events, ..trace })
+    }
+}
+
+// ------------------------------------------------------------ validate
+
+impl Trace {
+    /// Structural well-formedness: per-instance lifecycle order, data
+    /// plane put-before-get and free-is-last, steal gating, and counter
+    /// agreement with the header report. `Err` names the first violation.
+    pub fn validate(&self) -> Result<()> {
+        use std::collections::HashMap;
+        ensure!(self.mode != TraceMode::Off, "an Off-mode trace has no events");
+        #[derive(Default, Clone)]
+        struct Life {
+            spawned: bool,
+            ready: bool,
+            started: bool,
+            done: bool,
+            last_t: u64,
+        }
+        let mut inst: HashMap<u64, Life> = HashMap::new();
+        let mut items: HashMap<ItemKey, (u64, bool)> = HashMap::new(); // bytes, freed
+        let mut starts = 0u64;
+        let mut non_own = 0u64;
+        let mut misses = 0u64;
+        let (mut puts, mut gets, mut frees) = (0u64, 0u64, 0u64);
+        let (mut local, mut remote, mut remote_bytes) = (0u64, 0u64, 0u64);
+        let (mut stolen, mut stolen_bytes) = (0u64, 0u64);
+        for (n, ev) in self.events.iter().enumerate() {
+            let step =
+                |l: &mut Life, t: u64| -> Result<()> {
+                    ensure!(t >= l.last_t, "event {n}: time {t} precedes instance time {}", l.last_t);
+                    l.last_t = t;
+                    Ok(())
+                };
+            match ev {
+                TraceEvent::Spawn { t, i, .. } => {
+                    let l = inst.entry(*i).or_default();
+                    ensure!(!l.spawned, "event {n}: instance {i} spawned twice");
+                    l.spawned = true;
+                    step(l, *t)?;
+                }
+                TraceEvent::Ready { t, i, .. } => {
+                    let l = inst.entry(*i).or_default();
+                    ensure!(l.spawned, "event {n}: Ready for unspawned instance {i}");
+                    ensure!(!l.ready, "event {n}: instance {i} ready twice");
+                    l.ready = true;
+                    step(l, *t)?;
+                }
+                TraceEvent::Start { t, i, acq, node, worker, .. } => {
+                    let l = inst.entry(*i).or_default();
+                    ensure!(
+                        l.ready,
+                        "event {n}: Start of instance {i} not preceded by its Ready"
+                    );
+                    ensure!(!l.started, "event {n}: instance {i} started twice");
+                    l.started = true;
+                    step(l, *t)?;
+                    starts += 1;
+                    if *acq != Acq::Own {
+                        non_own += 1;
+                    }
+                    let _ = (node, worker);
+                }
+                TraceEvent::Done { t, i, misses: m, .. } => {
+                    let l = inst.entry(*i).or_default();
+                    ensure!(l.started, "event {n}: Done without Start for instance {i}");
+                    ensure!(!l.done, "event {n}: instance {i} done twice");
+                    l.done = true;
+                    step(l, *t)?;
+                    misses += m;
+                }
+                TraceEvent::Put { i, key, bytes, .. } => {
+                    ensure!(
+                        self.mode == TraceMode::Full,
+                        "event {n}: data-plane event in a schedule-mode trace"
+                    );
+                    ensure!(
+                        inst.get(i).map(|l| l.started && !l.done).unwrap_or(false),
+                        "event {n}: Put outside its instance's execution"
+                    );
+                    ensure!(
+                        items.insert(key.clone(), (*bytes, false)).is_none(),
+                        "event {n}: datablock {key:?} put twice"
+                    );
+                    puts += 1;
+                }
+                TraceEvent::Get { key, bytes, remote: r, .. } => {
+                    let item = items
+                        .get(key)
+                        .ok_or_else(|| anyhow!("event {n}: Get of {key:?} with no matching Put"))?;
+                    ensure!(!item.1, "event {n}: Get of {key:?} after its Free");
+                    ensure!(item.0 == *bytes, "event {n}: Get bytes disagree with Put");
+                    gets += 1;
+                    if *r {
+                        remote += 1;
+                        remote_bytes += bytes;
+                    } else {
+                        local += 1;
+                    }
+                }
+                TraceEvent::Free { key, .. } => {
+                    let item = items
+                        .get_mut(key)
+                        .ok_or_else(|| anyhow!("event {n}: Free of unknown datablock {key:?}"))?;
+                    ensure!(!item.1, "event {n}: datablock {key:?} freed twice");
+                    item.1 = true;
+                    frees += 1;
+                }
+                TraceEvent::Steal { from, to, bytes, .. } => {
+                    ensure!(
+                        self.config.steal == "remote-ready",
+                        "event {n}: Steal event under steal policy `{}`",
+                        self.config.steal
+                    );
+                    ensure!(from != to, "event {n}: Steal with from == to == {from}");
+                    stolen += 1;
+                    stolen_bytes += bytes;
+                }
+            }
+        }
+        for (key, (_, freed)) in &items {
+            ensure!(*freed, "datablock {key:?} was never freed (leak)");
+        }
+        let r = &self.report;
+        ensure!(starts == r.tasks, "Start count {starts} != report tasks {}", r.tasks);
+        ensure!(non_own == r.steals, "non-own Start count {non_own} != report steals {}", r.steals);
+        ensure!(misses == r.failed_gets, "miss sum {misses} != report failed_gets {}", r.failed_gets);
+        ensure!(stolen == r.stolen_edts, "Steal count {stolen} != report stolen_edts {}", r.stolen_edts);
+        ensure!(stolen_bytes == r.steal_bytes, "Steal bytes {stolen_bytes} != report steal_bytes {}", r.steal_bytes);
+        if self.mode == TraceMode::Full {
+            ensure!(puts == r.space_puts, "Put count {puts} != report space_puts {}", r.space_puts);
+            ensure!(gets == r.space_gets, "Get count {gets} != report space_gets {}", r.space_gets);
+            ensure!(frees == r.space_frees, "Free count {frees} != report space_frees {}", r.space_frees);
+            ensure!(local == r.space_local_gets, "local gets {local} != report {}", r.space_local_gets);
+            ensure!(remote == r.space_remote_gets, "remote gets {remote} != report {}", r.space_remote_gets);
+            ensure!(
+                remote_bytes == r.space_remote_bytes,
+                "remote bytes {remote_bytes} != report {}",
+                r.space_remote_bytes
+            );
+        }
+        Ok(())
+    }
+
+    /// Human-readable per-node timelines and steal provenance — the
+    /// `tale3 trace summarize` view. Deterministic text.
+    pub fn summarize(&self) -> String {
+        use std::collections::HashMap;
+        let nodes = self.report.node_peak_bytes.len().max(1);
+        let mut node_of_inst: HashMap<u64, usize> = HashMap::new();
+        let mut starts = vec![0u64; nodes];
+        let mut busy = vec![0f64; nodes];
+        let mut migr_in = vec![0u64; nodes];
+        let mut migr_out = vec![0u64; nodes];
+        let mut rget_in = vec![0u64; nodes]; // remote bytes pulled by node
+        let mut rget_out = vec![0u64; nodes]; // remote bytes served by node
+        let mut prov: HashMap<(u32, u32), (u64, u64)> = HashMap::new();
+        let mut makespan = 0u64;
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Start { i, node, .. } => {
+                    let n = (*node as usize).min(nodes - 1);
+                    node_of_inst.insert(*i, n);
+                    starts[n] += 1;
+                }
+                TraceEvent::Done { t, i, dur, .. } => {
+                    if let Some(&n) = node_of_inst.get(i) {
+                        busy[n] += dur;
+                    }
+                    makespan = makespan.max(*t);
+                }
+                TraceEvent::Get { bytes, from, to, remote, .. } if *remote => {
+                    rget_in[(*to as usize).min(nodes - 1)] += bytes;
+                    rget_out[(*from as usize).min(nodes - 1)] += bytes;
+                }
+                TraceEvent::Steal { from, to, bytes, .. } => {
+                    migr_out[(*from as usize).min(nodes - 1)] += 1;
+                    migr_in[(*to as usize).min(nodes - 1)] += 1;
+                    let e = prov.entry((*from, *to)).or_insert((0, 0));
+                    e.0 += 1;
+                    e.1 += bytes;
+                }
+                _ => {}
+            }
+        }
+        let mut out = format!(
+            "trace: {} ({} mode, {} events) — {} @ {} nodes, {} placement, steal {}\n\
+             virtual makespan {:.6}s, {} tasks, {} stolen EDTs\n",
+            self.workload,
+            self.mode.name(),
+            self.events.len(),
+            self.config.runtime,
+            self.config.nodes,
+            self.config.placement,
+            self.config.steal,
+            makespan as f64 / 1e9,
+            self.report.tasks,
+            self.report.stolen_edts,
+        );
+        out.push_str("node  tasks     busy-ms  stolen-in  stolen-out  rget-in  rget-out  peak-bytes\n");
+        for n in 0..nodes {
+            out.push_str(&format!(
+                "{:>4}  {:>5}  {:>10.3}  {:>9}  {:>10}  {:>7}  {:>8}  {:>10}\n",
+                n,
+                starts[n],
+                busy[n] / 1e6,
+                migr_in[n],
+                migr_out[n],
+                rget_in[n],
+                rget_out[n],
+                self.report.node_peak_bytes.get(n).copied().unwrap_or(0),
+            ));
+        }
+        if !prov.is_empty() {
+            out.push_str("steal provenance (owner -> thief):\n");
+            let mut pairs: Vec<_> = prov.into_iter().collect();
+            pairs.sort();
+            for ((f, t), (k, b)) in pairs {
+                out.push_str(&format!("  node {f} -> node {t}: {k} EDTs, {b} input bytes\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> Trace {
+        Trace {
+            workload: "TEST".into(),
+            mode: TraceMode::Full,
+            total_flops: 1e6,
+            config: TraceConfig {
+                backend: "des".into(),
+                runtime: "cnc-dep".into(),
+                plane: "space".into(),
+                threads: 2,
+                nodes: 2,
+                placement: "block".into(),
+                steal: "remote-ready".into(),
+                numa_pinned: true,
+                trace: "full".into(),
+            },
+            cost: CostAtoms::from_model(&CostModel::default()),
+            report: SimReport {
+                seconds: 2e-7,
+                gflops: 5e3,
+                tasks: 2,
+                steals: 1,
+                failed_gets: 0,
+                work_ratio: 0.5,
+                space_puts: 1,
+                space_gets: 1,
+                space_frees: 1,
+                space_peak_bytes: 64,
+                space_local_gets: 0,
+                space_remote_gets: 1,
+                space_remote_bytes: 64,
+                node_peak_bytes: vec![64, 0],
+                stolen_edts: 1,
+                steal_bytes: 64,
+            },
+            events: vec![
+                TraceEvent::Spawn {
+                    t: 0,
+                    i: 0,
+                    id: EdtId { kind: TaskKind::Worker, node: 1, coords: Box::new([0, 1]) },
+                    by: None,
+                },
+                TraceEvent::Ready { t: 0, i: 0, by: None, et: None, bp: None, bt: None },
+                TraceEvent::Start { t: 0, i: 0, worker: 0, node: 0, acq: Acq::Own },
+                TraceEvent::Put {
+                    t: 10,
+                    i: 0,
+                    key: (1, Box::new([0, 1])),
+                    bytes: 64,
+                    node: 0,
+                },
+                TraceEvent::Done { t: 100, i: 0, dur: 100.0, misses: 0 },
+                TraceEvent::Spawn {
+                    t: 0,
+                    i: 1,
+                    id: EdtId { kind: TaskKind::Worker, node: 1, coords: Box::new([1, 1]) },
+                    by: Some(0),
+                },
+                TraceEvent::Ready { t: 100, i: 1, by: Some(0), et: Some(100), bp: Some(0), bt: Some(90) },
+                TraceEvent::Start { t: 120, i: 1, worker: 1, node: 1, acq: Acq::Migrate },
+                TraceEvent::Get {
+                    t: 130,
+                    i: 1,
+                    key: (1, Box::new([0, 1])),
+                    bytes: 64,
+                    from: 0,
+                    to: 1,
+                    remote: true,
+                },
+                TraceEvent::Free { t: 130, i: 1, key: (1, Box::new([0, 1])) },
+                TraceEvent::Steal { t: 120, i: 1, from: 0, to: 1, bytes: 64 },
+                TraceEvent::Done { t: 200, i: 1, dur: 80.0, misses: 0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_byte_identical() {
+        let tr = tiny_trace();
+        let text = tr.to_jsonl();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.workload, tr.workload);
+        assert_eq!(back.mode, tr.mode);
+        assert_eq!(back.events, tr.events);
+        assert_eq!(back.report.seconds.to_bits(), tr.report.seconds.to_bits());
+        assert_eq!(back.report.node_peak_bytes, tr.report.node_peak_bytes);
+        assert_eq!(back.to_jsonl(), text, "re-serialization must be canonical");
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_and_names_violations() {
+        let tr = tiny_trace();
+        tr.validate().unwrap();
+        // a Start without its Ready is the canonical violation
+        let mut bad = tr.clone();
+        bad.events.remove(1);
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("not preceded by its Ready"), "{err}");
+        // a Get with no Put
+        let mut bad = tr.clone();
+        bad.events.remove(3);
+        assert!(bad.validate().is_err());
+        // Steal under `never` is illegal
+        let mut bad = tr.clone();
+        bad.config.steal = "never".into();
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("Steal event under steal policy"), "{err}");
+    }
+
+    #[test]
+    fn summarize_names_nodes_and_provenance() {
+        let s = tiny_trace().summarize();
+        assert!(s.contains("node 0 -> node 1: 1 EDTs, 64 input bytes"), "{s}");
+        assert!(s.contains("2 tasks"), "{s}");
+    }
+
+    #[test]
+    fn mode_and_acq_names_round_trip() {
+        for m in [TraceMode::Off, TraceMode::Schedule, TraceMode::Full] {
+            assert_eq!(TraceMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(TraceMode::parse("verbose"), None);
+        for a in [Acq::Own, Acq::Steal, Acq::Migrate] {
+            assert_eq!(Acq::parse(a.name()), Some(a));
+        }
+        for k in [TaskKind::Startup, TaskKind::Worker, TaskKind::Prescriber, TaskKind::Shutdown] {
+            assert_eq!(TaskKind::parse(k.name()), Some(k));
+        }
+    }
+}

@@ -71,7 +71,7 @@ fn cli_flags_round_trip_into_config() {
     let mut cfg = ExecConfig::default();
     let mut consumed = Vec::new();
     for (name, val) in flags {
-        if cfg.apply_cli_flag(name, *val) {
+        if cfg.apply_cli_flag(name, *val).unwrap() {
             consumed.push(*name);
         }
     }
@@ -94,8 +94,55 @@ fn cli_flags_round_trip_into_config() {
         ("swarm", "space", 4, "block", "remote-ready")
     );
     // `--runtime all` leaves the runtime for the caller's loop
-    assert!(cfg.apply_cli_flag("runtime", Some("all")));
+    assert!(cfg.apply_cli_flag("runtime", Some("all")).unwrap());
     assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::Swarm));
+}
+
+/// ISSUE 4 satellite: an unknown value for a config knob is a hard
+/// error, never a silent default — `--steal remote` must not quietly run
+/// `never`, `--trace verbose` must not quietly run untraced. The config
+/// is left untouched by every rejected flag.
+#[test]
+fn invalid_config_values_are_hard_errors() {
+    use tale3::rt::TraceMode;
+    let mut cfg = ExecConfig::default();
+    let bad: &[(&str, &str)] = &[
+        ("steal", "remote"),
+        ("steal", "sometimes"),
+        ("trace", "verbose"),
+        ("trace", "on"),
+        ("plane", "shred"),
+        ("placement", "diagonal"),
+        ("nodes", "many"),
+        ("threads", "fast"),
+        ("runtime", "tbb"),
+    ];
+    for (name, value) in bad {
+        let err = cfg.apply_cli_flag(name, Some(value));
+        assert!(err.is_err(), "--{name} {value} must be rejected, got {err:?}");
+        let msg = err.unwrap_err().to_string();
+        assert!(
+            msg.contains(name) && msg.contains(value),
+            "error must name the flag and the bad value: {msg}"
+        );
+    }
+    // a config flag with no value at all is also an error
+    for name in ["steal", "trace", "plane", "placement", "nodes", "threads", "runtime"] {
+        assert!(cfg.apply_cli_flag(name, None).is_err(), "--{name} needs a value");
+    }
+    // nothing leaked into the config from the rejected flags
+    assert_eq!(cfg.steal, StealPolicy::Never);
+    assert_eq!(cfg.trace, TraceMode::Off);
+    assert_eq!(cfg.plane, DataPlane::Shared);
+    assert_eq!(cfg.placement, Placement::default());
+    assert_eq!(cfg.nodes, 1);
+    assert_eq!(cfg.threads, 2);
+    assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::CncDep));
+    // and the valid spellings still work
+    assert!(cfg.apply_cli_flag("steal", Some("remote-ready")).unwrap());
+    assert!(cfg.apply_cli_flag("trace", Some("schedule")).unwrap());
+    assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+    assert_eq!(cfg.trace, TraceMode::Schedule);
 }
 
 fn launch_sim(plan: &Arc<tale3::Plan>, flops: f64, cfg: &ExecConfig) -> SimReport {

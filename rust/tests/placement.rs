@@ -233,8 +233,10 @@ fn real_runtime_counts_remote_gets() {
 
 /// The bench JSON report is deterministic — two renders are
 /// byte-identical — and contains virtual-time fields only (no wall-clock
-/// timestamps, hostnames, or paths). Schema v2 carries the resolved
-/// config echo and the steal counters.
+/// timestamps, hostnames, or paths). Schema v3 carries the resolved
+/// config echo, the steal counters, and the per-workload
+/// `replay_verified` flag (the sharded_steal cell's trace must
+/// verbatim-replay to its own SimReport).
 #[test]
 fn bench_report_json_is_deterministic_and_virtual_only() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
@@ -245,7 +247,7 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     let a = perf_report_json(&cfg);
     let b = perf_report_json(&cfg);
     assert_eq!(a, b, "two consecutive quick runs must produce identical JSON");
-    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v2\""));
+    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v3\""));
     assert!(a.contains("\"config\":{\"backend\":\"des\""));
     assert!(a.contains("\"JAC-2D-5P\""));
     assert!(a.contains("\"remote_gets\""));
@@ -253,6 +255,15 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     assert!(a.contains("\"sharded_steal\""));
     assert!(a.contains("\"stolen_edts\""));
     assert!(a.contains("\"steal_bytes\""));
+    assert!(a.contains("\"trace\":\"full\""));
+    assert!(
+        a.contains("\"replay_verified\":true"),
+        "at least one workload must be replay-verified"
+    );
+    assert!(
+        !a.contains("\"replay_verified\":false"),
+        "every sharded_steal trace must verbatim-replay to its own report"
+    );
     for host_dependent in ["wall", "timestamp", "hostname", "date", "epoch", "/root", "/home"] {
         assert!(
             !a.contains(host_dependent),
@@ -261,13 +272,13 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     }
 }
 
-/// The v2 key set matches the committed golden file (the same list CI's
+/// The v3 key set matches the committed golden file (the same list CI's
 /// golden-file job asserts against the built artifact), so schema drift
 /// is a reviewed change, not an accident.
 #[test]
-fn bench_report_v2_keys_match_golden_file() {
+fn bench_report_v3_keys_match_golden_file() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
-    let golden = include_str!("../ci/bench-report-v2.keys");
+    let golden = include_str!("../ci/bench-report-v3.keys");
     let json = perf_report_json(&ReportConfig {
         quick: true,
         ..Default::default()
@@ -276,7 +287,7 @@ fn bench_report_v2_keys_match_golden_file() {
     for key in golden.lines().filter(|l| !l.is_empty()) {
         assert!(
             json.contains(&format!("\"{key}\":")),
-            "golden key `{key}` missing from the v2 report"
+            "golden key `{key}` missing from the v3 report"
         );
     }
     // and every quoted key in the JSON must be in the golden list
@@ -291,7 +302,7 @@ fn bench_report_v2_keys_match_golden_file() {
         if after.starts_with(':') {
             assert!(
                 golden_set.contains(token),
-                "report key `{token}` is not in ci/bench-report-v2.keys — \
+                "report key `{token}` is not in ci/bench-report-v3.keys — \
                  update the golden file deliberately"
             );
         }

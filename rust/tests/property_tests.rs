@@ -12,7 +12,11 @@
 //!     (Fig 8 correctness);
 //!  4. runtime executions are exactly-once and dependence-ordered for
 //!     random plans under every dependence mode;
-//!  5. interval arithmetic (`DistBound`) is a sound over-approximation.
+//!  5. interval arithmetic (`DistBound`) is a sound over-approximation;
+//!  8. DES execution traces are well-formed for every workload × data
+//!     plane: Start is preceded by its Ready, every Get by the matching
+//!     Put, every Free is last for its datablock, and Steal events occur
+//!     only under `RemoteReady` with `from != to`.
 
 use std::sync::{Arc, Mutex};
 use tale3::analysis::{build_gdg, DistBound};
@@ -354,6 +358,116 @@ fn prop_compiled_expr_matches_tree() {
             let ps = [rng.range(-20, 20), rng.range(-20, 20)];
             let env = Env::new(&ivs, &ps);
             assert_eq!(c.eval(env), e.eval(env), "{e}");
+        }
+    }
+}
+
+/// Property 8: every captured DES trace is well-formed, across all 21
+/// workloads × both data planes (plus a multi-node RemoteReady
+/// configuration and the rollback-heavy CncBlock mode). Beyond
+/// `Trace::validate()`, the invariants of ISSUE 4 are walked explicitly:
+/// every Start is preceded by its Ready, every Get by the matching Put,
+/// every Free is last for its datablock, and Steal events appear only
+/// under `RemoteReady` with `from != to`.
+#[test]
+fn prop_trace_well_formed_all_workloads_and_planes() {
+    use std::collections::{HashMap, HashSet};
+    use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy, TraceMode};
+    use tale3::sim::trace::TraceEvent;
+    use tale3::space::{DataPlane, Placement};
+    use tale3::workloads::{registry, Size};
+
+    let combos: &[(DataPlane, usize, StealPolicy, DepMode)] = &[
+        (DataPlane::Shared, 1, StealPolicy::Never, DepMode::CncDep),
+        (DataPlane::Shared, 1, StealPolicy::Never, DepMode::CncBlock), // retries
+        (DataPlane::Space, 1, StealPolicy::Never, DepMode::CncDep),
+        (DataPlane::Space, 4, StealPolicy::RemoteReady, DepMode::CncDep),
+    ];
+    for w in registry() {
+        let inst = (w.build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        for &(plane, nodes, steal, mode) in combos {
+            let cfg = ExecConfig::new()
+                .backend(BackendKind::Des)
+                .runtime(RuntimeKind::Edt(mode))
+                .plane(plane)
+                .nodes(nodes)
+                .placement(Placement::Block)
+                .threads(4)
+                .steal(steal)
+                .trace(TraceMode::Full);
+            let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg)
+                .unwrap_or_else(|e| panic!("{} {plane:?} {mode:?}: {e}", w.name));
+            let trace = r.trace.expect("traced launch carries the trace");
+            trace
+                .validate()
+                .unwrap_or_else(|e| panic!("{} {plane:?} {mode:?}: {e}", w.name));
+            // explicit invariant walk (independent of validate())
+            let mut ready: HashSet<u64> = HashSet::new();
+            let mut live: HashMap<&(u32, Box<[i64]>), u64> = HashMap::new();
+            let mut freed: HashSet<&(u32, Box<[i64]>)> = HashSet::new();
+            for ev in &trace.events {
+                match ev {
+                    TraceEvent::Ready { i, .. } => {
+                        ready.insert(*i);
+                    }
+                    TraceEvent::Start { i, .. } => {
+                        assert!(
+                            ready.contains(i),
+                            "{}: Start of {i} without a prior Ready",
+                            w.name
+                        );
+                    }
+                    TraceEvent::Put { key, bytes, .. } => {
+                        assert!(!freed.contains(key), "{}: Put after Free", w.name);
+                        live.insert(key, *bytes);
+                    }
+                    TraceEvent::Get { key, bytes, .. } => {
+                        assert_eq!(
+                            live.get(key),
+                            Some(bytes),
+                            "{}: Get of {key:?} without a matching live Put",
+                            w.name
+                        );
+                    }
+                    TraceEvent::Free { key, .. } => {
+                        assert!(
+                            live.remove(key).is_some(),
+                            "{}: Free of {key:?} with no live Put",
+                            w.name
+                        );
+                        assert!(freed.insert(key), "{}: double Free of {key:?}", w.name);
+                    }
+                    TraceEvent::Steal { from, to, .. } => {
+                        assert_eq!(
+                            steal,
+                            StealPolicy::RemoteReady,
+                            "{}: Steal event under {steal:?}",
+                            w.name
+                        );
+                        assert_ne!(from, to, "{}: self-steal", w.name);
+                    }
+                    TraceEvent::Spawn { .. } | TraceEvent::Done { .. } => {}
+                }
+            }
+            assert!(live.is_empty(), "{}: {} datablocks never freed", w.name, live.len());
+            if plane == DataPlane::Shared {
+                assert!(
+                    !trace.events.iter().any(|e| matches!(
+                        e,
+                        TraceEvent::Put { .. } | TraceEvent::Get { .. } | TraceEvent::Free { .. }
+                    )),
+                    "{}: shared plane must record no data-plane events",
+                    w.name
+                );
+            }
+            if steal == StealPolicy::Never {
+                assert!(
+                    !trace.events.iter().any(|e| matches!(e, TraceEvent::Steal { .. })),
+                    "{}: Never must record no Steal events",
+                    w.name
+                );
+            }
         }
     }
 }
