@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Bench-report schema gate, shared by the bench-report and
+transport-gate CI jobs.
+
+Usage: check_keys.py <golden-keys-file> <report.json> [report2.json ...]
+
+Asserts, for every report:
+  - the schema string is the expected version (derived from the golden
+    file name: bench-report-vN.keys -> tale3-bench-report/vN);
+  - the set of JSON keys (recursively) equals the golden key set —
+    schema drift is a reviewed edit to the keys file, never an accident;
+  - every workload's `replay_verified` flag is true.
+"""
+import json
+import re
+import sys
+
+
+def collect_keys(obj, out):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.add(k)
+            collect_keys(v, out)
+    elif isinstance(obj, list):
+        for v in obj:
+            collect_keys(v, out)
+
+
+def main():
+    if len(sys.argv) < 3:
+        sys.exit(__doc__)
+    keys_path, reports = sys.argv[1], sys.argv[2:]
+    m = re.search(r"bench-report-(v\d+)\.keys$", keys_path)
+    if not m:
+        sys.exit(f"{keys_path}: expected a bench-report-vN.keys file")
+    schema = f"tale3-bench-report/{m.group(1)}"
+    golden = {l.strip() for l in open(keys_path) if l.strip()}
+    for path in reports:
+        doc = json.load(open(path))
+        if doc["schema"] != schema:
+            sys.exit(f"{path}: schema {doc['schema']!r}, expected {schema!r}")
+        found = set()
+        collect_keys(doc, found)
+        extra = sorted(found - golden)
+        missing = sorted(golden - found)
+        if extra or missing:
+            sys.exit(f"{path}: schema keys drifted — extra {extra}, missing {missing}")
+        bad = [w["name"] for w in doc["workloads"] if w["replay_verified"] is not True]
+        if bad:
+            sys.exit(f"{path}: verbatim replay failed for {bad}")
+    print(f"{schema} keys stable and replay-verified across {len(reports)} report(s)")
+
+
+if __name__ == "__main__":
+    main()

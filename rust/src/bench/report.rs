@@ -9,24 +9,28 @@
 //! (`tests/placement.rs` asserts this), so CI artifacts diff cleanly
 //! run-to-run and PR-to-PR.
 //!
-//! **Schema `tale3-bench-report/v3`:** the document opens with a `config`
+//! **Schema `tale3-bench-report/v4`:** the document opens with a `config`
 //! object — the fully-resolved [`ExecConfig`] echo every cell ran under —
 //! and each workload carries three cells side by side: the single-node
 //! space-plane baseline (`single`), the sharded topology under strict
 //! owner-computes (`sharded`), and the same topology with inter-node EDT
 //! migration (`sharded_steal`), whose `stolen_edts`/`steal_bytes`
-//! counters quantify the work-stealing win. v3 additionally captures the
-//! `sharded_steal` cell as a full execution trace and verbatim-replays
-//! it through [`crate::rt::ReplayBackend`]: the boolean
+//! counters quantify the work-stealing win. The `sharded_steal` cell is
+//! additionally captured as a full execution trace and verbatim-replayed
+//! through [`crate::rt::ReplayBackend`]: the boolean
 //! `replay_verified` asserts the trace subsystem reproduced the cell's
 //! `SimReport` bit-for-bit (tracing is pure observation, so the cell's
-//! numbers are identical to an untraced run). CI's golden-file job
-//! asserts the v3 key set is stable across runs.
+//! numbers are identical to an untraced run). v4 adds the `transport`
+//! echo — the shard-transport knob (`--transport inproc|channel`) the
+//! launch descriptor carried; the cells themselves are DES runs, which
+//! charge their own link model, so the echo records intent, not a
+//! different simulation. CI's golden-file job asserts the v4 key set is
+//! stable across runs.
 
 use crate::ral::DepMode;
 use crate::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
 use crate::sim::{SimReport, TraceMode};
-use crate::space::{DataPlane, Placement};
+use crate::space::{DataPlane, Placement, TransportKind};
 use crate::workloads::{registry, Size};
 
 /// What the report measures. `quick` shrinks every workload to `Tiny`
@@ -41,6 +45,9 @@ pub struct ReportConfig {
     pub threads: usize,
     pub mode: DepMode,
     pub steal: StealPolicy,
+    /// Shard-transport echo (`--transport`); the DES cells charge their
+    /// own link model, so this records the launch descriptor.
+    pub transport: TransportKind,
 }
 
 impl Default for ReportConfig {
@@ -52,6 +59,7 @@ impl Default for ReportConfig {
             threads: 8,
             mode: DepMode::CncDep,
             steal: StealPolicy::RemoteReady,
+            transport: TransportKind::InProc,
         }
     }
 }
@@ -67,6 +75,7 @@ impl ReportConfig {
             .placement(self.placement)
             .threads(self.threads)
             .steal(steal)
+            .transport(self.transport)
     }
 }
 
@@ -130,7 +139,7 @@ fn config_obj(cfg: &ReportConfig) -> String {
     format!(
         "{{\"backend\":{},\"runtime\":{},\"plane\":{},\"size\":{},\
          \"quick\":{},\"threads\":{},\"nodes\":{},\"placement\":{},\
-         \"steal\":{},\"numa_pinned\":{},\"trace\":{}}}",
+         \"transport\":{},\"steal\":{},\"numa_pinned\":{},\"trace\":{}}}",
         jstr(ec.backend.name()),
         jstr(ec.runtime.name()),
         jstr(ec.plane.name()),
@@ -139,6 +148,7 @@ fn config_obj(cfg: &ReportConfig) -> String {
         ec.threads,
         ec.nodes,
         jstr(ec.placement.name()),
+        jstr(ec.transport.name()),
         jstr(ec.steal.name()),
         ec.numa_pinned,
         jstr(ec.trace.name()),
@@ -190,7 +200,7 @@ pub fn perf_report_json(cfg: &ReportConfig) -> String {
         ));
     }
     format!(
-        "{{\"schema\":\"tale3-bench-report/v3\",\"config\":{},\"workloads\":[{}]}}\n",
+        "{{\"schema\":\"tale3-bench-report/v4\",\"config\":{},\"workloads\":[{}]}}\n",
         config_obj(cfg),
         workloads.join(",")
     )
@@ -249,6 +259,13 @@ mod tests {
         assert!(o.contains("\"size\":\"tiny\""));
         assert!(o.contains("\"steal\":\"remote-ready\""));
         assert!(o.contains("\"nodes\":4"));
+        assert!(o.contains("\"transport\":\"inproc\""));
         assert!(o.contains("\"trace\":\"full\""));
+        let channel = config_obj(&ReportConfig {
+            quick: true,
+            transport: TransportKind::Channel,
+            ..Default::default()
+        });
+        assert!(channel.contains("\"transport\":\"channel\""));
     }
 }

@@ -40,4 +40,4 @@ pub use rt::{
     launch, Backend, BackendKind, ExecConfig, LeafSpec, Pool, ReplayBackend, RuntimeKind,
     StealPolicy, TraceMode,
 };
-pub use space::{DataPlane, Placement, Topology};
+pub use space::{DataPlane, LinkModel, Placement, Topology, TransportKind};

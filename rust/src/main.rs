@@ -21,8 +21,8 @@
 //! Common options: `--size tiny|small|paper`, `--runtime cnc-block|cnc-async|
 //! cnc-dep|swarm|ocr|omp|all`, `--threads N`, `--tiles a,b,c`, `--levels k`,
 //! `--gran N`, `--no-verify`, `--plane shared|space`, `--nodes N`,
-//! `--placement block|cyclic|hash`, `--steal never|remote-ready`,
-//! `--trace off|schedule|full`.
+//! `--placement block|cyclic|hash`, `--transport inproc|channel`,
+//! `--steal never|remote-ready`, `--trace off|schedule|full`.
 //! (Argument parsing is hand-rolled: clap is not in the offline crate set.)
 
 use tale3::analysis::build_gdg;
@@ -182,8 +182,14 @@ fn main() -> anyhow::Result<()> {
             let base = base.topology(topo.clone());
             let echo = base.echo_for(&topo);
             println!(
-                "config: backend={} plane={} threads={} nodes={} placement={} steal={}",
-                echo.backend, echo.plane, echo.threads, echo.nodes, echo.placement, echo.steal
+                "config: backend={} plane={} transport={} threads={} nodes={} placement={} steal={}",
+                echo.backend,
+                echo.plane,
+                echo.transport,
+                echo.threads,
+                echo.nodes,
+                echo.placement,
+                echo.steal
             );
             println!(
                 "{:<10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>9} {:>8} {:>8} {:>8} {:>9} {:>7}",
@@ -223,11 +229,19 @@ fn main() -> anyhow::Result<()> {
                 if base.plane == DataPlane::Space && !topo.is_single() {
                     let peaks: Vec<String> =
                         r.node_peak_bytes.iter().map(|&b| fmt_bytes(b)).collect();
+                    let rgets: Vec<String> = r
+                        .metrics
+                        .node_remote_gets
+                        .iter()
+                        .map(|g| g.to_string())
+                        .collect();
                     println!(
-                        "  └ {} nodes ({}): node peaks [{}]",
+                        "  └ {} nodes ({}, {} transport): node peaks [{}], remote gets by node [{}]",
                         topo.nodes(),
                         topo.placement().name(),
-                        peaks.join(", ")
+                        echo.transport,
+                        peaks.join(", "),
+                        rgets.join(", ")
                     );
                 }
             }
@@ -430,6 +444,7 @@ fn main() -> anyhow::Result<()> {
                 } else {
                     StealPolicy::RemoteReady
                 },
+                transport: base.transport,
                 ..Default::default()
             };
             let json = perf_report_json(&cfg);
@@ -460,6 +475,9 @@ fn main() -> anyhow::Result<()> {
             println!("       [--threads N[,N..]] [--tiles a,b,c] [--levels k] [--gran n] [--no-verify]");
             println!("       [--plane shared|space]   (data plane: shared buffer vs tuple space)");
             println!("       [--nodes N] [--placement block|cyclic|hash]   (sharded item space)");
+            println!("       [--transport inproc|channel]   (run: how the space reaches its shards —");
+            println!("                    direct calls, or per-node service threads with the");
+            println!("                    CostModel link latency injected on remote gets)");
             println!("       [--steal never|remote-ready]   (DES: may idle nodes claim remote-ready");
             println!("                    leaf EDTs, paying the input-datablock transfers?)");
             println!("       [--trace off|schedule|full]    (DES: record an execution trace; the");
@@ -468,7 +486,8 @@ fn main() -> anyhow::Result<()> {
             println!("                    capture a tale3-trace/v1 JSONL, audit-replay it, re-price");
             println!("                    link costs without re-simulating, or view per-node timelines)");
             println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P] [--steal S]");
-            println!("                    (deterministic perf JSON: virtual time only, schema v3)");
+            println!("                    [--transport T]  (deterministic perf JSON: virtual time");
+            println!("                    only, schema v4)");
             println!();
             println!("run and sim share one launch surface: every flag combination is an");
             println!("rt::ExecConfig handed to rt::launch; the subcommand picks the backend");

@@ -208,9 +208,23 @@ pub struct Metrics {
     /// a single-node topology (and under the shared plane).
     pub space_remote_gets: AtomicU64,
     pub space_remote_bytes: AtomicU64,
+    /// Per-node remote operations (one entry per topology node, indexed
+    /// by the *consumer* node that issued them), sourced from the shard
+    /// transport's ledger rather than the store — the transport is where
+    /// local/remote is decided. Gauge semantics: each run stores its own
+    /// vectors absolute (empty under the shared plane).
+    pub node_remote_gets: Mutex<Vec<u64>>,
+    pub node_remote_bytes: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
+    /// Overwrite the per-node remote-op gauges with this run's
+    /// transport-sourced vectors.
+    pub fn set_node_remote(&self, gets: &[u64], bytes: &[u64]) {
+        *self.node_remote_gets.lock().unwrap() = gets.to_vec();
+        *self.node_remote_bytes.lock().unwrap() = bytes.to_vec();
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             startups: self.startups.load(Ordering::Relaxed),
@@ -233,12 +247,14 @@ impl Metrics {
             space_peak_bytes: self.space_peak_bytes.load(Ordering::Relaxed),
             space_remote_gets: self.space_remote_gets.load(Ordering::Relaxed),
             space_remote_bytes: self.space_remote_bytes.load(Ordering::Relaxed),
+            node_remote_gets: self.node_remote_gets.lock().unwrap().clone(),
+            node_remote_bytes: self.node_remote_bytes.lock().unwrap().clone(),
         }
     }
 }
 
 /// Plain-data copy of [`Metrics`] for reports.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct MetricsSnapshot {
     pub startups: u64,
     pub workers: u64,
@@ -260,6 +276,10 @@ pub struct MetricsSnapshot {
     pub space_peak_bytes: u64,
     pub space_remote_gets: u64,
     pub space_remote_bytes: u64,
+    /// Per-node remote-op gauges (see [`Metrics::node_remote_gets`]);
+    /// empty when the run had no sharded space.
+    pub node_remote_gets: Vec<u64>,
+    pub node_remote_bytes: Vec<u64>,
 }
 
 impl MetricsSnapshot {
@@ -313,6 +333,19 @@ mod tests {
         m.busy_ns.store(1000, Ordering::Relaxed);
         let s = m.snapshot();
         assert!((s.work_ratio() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn node_remote_gauges_store_absolute() {
+        let m = Metrics::default();
+        assert!(m.snapshot().node_remote_gets.is_empty());
+        m.set_node_remote(&[0, 3, 1], &[0, 96, 32]);
+        let s = m.snapshot();
+        assert_eq!(s.node_remote_gets, vec![0, 3, 1]);
+        assert_eq!(s.node_remote_bytes, vec![0, 96, 32]);
+        // gauge: a later run overwrites, never accumulates
+        m.set_node_remote(&[1], &[4]);
+        assert_eq!(m.snapshot().node_remote_gets, vec![1]);
     }
 
     #[test]

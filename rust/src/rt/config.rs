@@ -23,7 +23,7 @@ use crate::exec::{ArrayStore, KernelSet};
 use crate::ir::Program;
 use crate::ral::DepMode;
 use crate::sim::{CostModel, Machine, TraceMode};
-use crate::space::{DataPlane, Placement, Topology};
+use crate::space::{DataPlane, Placement, Topology, TransportKind};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -115,6 +115,15 @@ pub struct ExecConfig {
     pub placement: Placement,
     pub threads: usize,
     pub steal: StealPolicy,
+    /// How the real engine's item space reaches its shards
+    /// ([`TransportKind`]): `InProc` is the direct lock/atomic path,
+    /// `Channel` puts each node's shards behind a service thread and
+    /// injects [`CostModel::link_latency_ns`] /
+    /// [`CostModel::link_bw_ns_per_byte`] on remote gets. Space plane
+    /// only — [`ExecConfig::validate`] rejects `Channel` on the shared
+    /// plane. The DES models its own link and echoes the knob as
+    /// requested.
+    pub transport: TransportKind,
     /// Execution-trace capture (DES backend only): `Off` records nothing,
     /// `Schedule` records task lifecycle + migrations, `Full` adds the
     /// data-plane events. The captured [`crate::sim::Trace`] rides along
@@ -140,6 +149,7 @@ impl Default for ExecConfig {
             placement: Placement::default(),
             threads: 2,
             steal: StealPolicy::default(),
+            transport: TransportKind::default(),
             trace: TraceMode::Off,
             cost: CostModel::default(),
             machine: Machine::default(),
@@ -193,6 +203,11 @@ impl ExecConfig {
         self
     }
 
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.transport = t;
+        self
+    }
+
     pub fn trace(mut self, t: TraceMode) -> Self {
         self.trace = t;
         self
@@ -211,6 +226,21 @@ impl ExecConfig {
     pub fn numa_pinned(mut self, p: bool) -> Self {
         self.numa_pinned = p;
         self
+    }
+
+    /// Cross-knob consistency, checked by every launch path. The one
+    /// illegal combination today: `transport = channel` needs item-space
+    /// shards to put behind channels, which only the space plane has —
+    /// silently ignoring the flag on the shared plane would report
+    /// transport numbers that never existed.
+    pub fn validate(&self) -> Result<()> {
+        if self.transport == TransportKind::Channel && self.plane == DataPlane::Shared {
+            bail!(
+                "--transport channel requires --plane space: the shared data \
+                 plane has no item-space shards to put behind channels"
+            );
+        }
+        Ok(())
     }
 
     /// The topology this config actually runs over: the explicit one if
@@ -235,6 +265,7 @@ impl ExecConfig {
             nodes: topo.nodes(),
             placement: topo.placement().name(),
             steal: self.steal.name(),
+            transport: self.transport.name(),
             numa_pinned: self.numa_pinned,
             trace: self.trace.name(),
         }
@@ -290,6 +321,13 @@ impl ExecConfig {
                 })?;
                 Ok(true)
             }
+            "transport" => {
+                let v = need(name, value)?;
+                self.transport = TransportKind::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown --transport value `{v}` (expected inproc|channel)")
+                })?;
+                Ok(true)
+            }
             "threads" => {
                 let v = need(name, value)?;
                 let first = v.split(',').next().unwrap_or("").trim();
@@ -334,6 +372,10 @@ pub struct ConfigEcho {
     pub nodes: usize,
     pub placement: &'static str,
     pub steal: &'static str,
+    /// Shard transport of the real engine's item space ("inproc" |
+    /// "channel"); echoed as requested on backends that do not model it
+    /// (the DES charges its own link instead).
+    pub transport: &'static str,
     pub numa_pinned: bool,
     /// Trace-capture mode the run was launched with ("off" when not
     /// recording) — observability, never semantics.
@@ -440,6 +482,7 @@ mod tests {
             .placement(Placement::Block)
             .threads(8)
             .steal(StealPolicy::RemoteReady)
+            .transport(TransportKind::Channel)
             .numa_pinned(false);
         assert_eq!(cfg.backend, BackendKind::Des);
         assert_eq!(cfg.runtime, RuntimeKind::Omp);
@@ -448,7 +491,19 @@ mod tests {
         assert_eq!(cfg.placement, Placement::Block);
         assert_eq!(cfg.threads, 8);
         assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+        assert_eq!(cfg.transport, TransportKind::Channel);
         assert!(!cfg.numa_pinned);
+    }
+
+    /// The one cross-knob contradiction is rejected up front; everything
+    /// the backends can honor validates clean.
+    #[test]
+    fn validate_rejects_channel_transport_on_shared_plane() {
+        let bad = ExecConfig::new().transport(TransportKind::Channel);
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("--plane space"), "{msg}");
+        assert!(bad.clone().plane(DataPlane::Space).validate().is_ok());
+        assert!(ExecConfig::new().validate().is_ok(), "defaults are legal");
     }
 
     #[test]
@@ -460,6 +515,8 @@ mod tests {
         assert_eq!(cfg.steal, StealPolicy::RemoteReady);
         assert!(cfg.apply_cli_flag("trace", Some("full")).unwrap());
         assert_eq!(cfg.trace, crate::sim::TraceMode::Full);
+        assert!(cfg.apply_cli_flag("transport", Some("channel")).unwrap());
+        assert_eq!(cfg.transport, TransportKind::Channel);
     }
 
     /// An unrecognized value for a config knob must be a hard error, not
@@ -473,6 +530,7 @@ mod tests {
             ("placement", "diagonal"),
             ("steal", "sometimes"),
             ("trace", "banana"),
+            ("transport", "tcp"),
             ("threads", "fast"),
             ("runtime", "tbb"),
         ] {
@@ -485,6 +543,7 @@ mod tests {
         // nothing was mutated by the rejected flags
         assert_eq!(cfg.steal, StealPolicy::Never);
         assert_eq!(cfg.trace, crate::sim::TraceMode::Off);
+        assert_eq!(cfg.transport, TransportKind::InProc);
         assert_eq!(cfg.nodes, 1);
         assert_eq!(cfg.threads, 2);
     }

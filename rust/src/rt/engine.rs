@@ -23,7 +23,7 @@ use super::pool::{Job, Pool, WorkerCtx};
 use super::table::TagTable;
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::ral::{Continuation, DepMode, FinishScope, Metrics, Task, TagKey};
-use crate::space::DataPlane;
+use crate::space::{DataPlane, Topology};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -36,6 +36,18 @@ const FINISH_BIT: u32 = 1 << 31;
 /// kernels), by test recorders, and by no-ops for overhead benches.
 pub trait LeafExec: Send + Sync {
     fn run_leaf(&self, plan: &Plan, node_id: u32, coords: &[i64]);
+
+    /// [`Self::run_leaf`] with the EDT's node identity threaded through:
+    /// `node` is the node this leaf is pinned to under the engine's
+    /// topology (owner-computes — the same routing the DES performs with
+    /// `Topology::node_of_worker`). Executors that don't model
+    /// distribution ignore it; `space::SpaceLeafRunner` issues its
+    /// data-plane gets *from* this node so remote traffic is classified
+    /// by the engine's placement, not re-derived per executor.
+    fn run_leaf_at(&self, plan: &Plan, node_id: u32, coords: &[i64], node: usize) {
+        let _ = node;
+        self.run_leaf(plan, node_id, coords)
+    }
 }
 
 /// A leaf executor that does nothing (runtime-overhead measurements).
@@ -53,22 +65,17 @@ pub struct Engine {
     /// engine's control flow is identical for both planes (the data plane
     /// is encapsulated in `leaf`); recorded for reports and diagnostics.
     pub plane: DataPlane,
+    /// The node topology leaf EDTs are placed against: the engine threads
+    /// each leaf's owner node ([`Topology::node_of`]) into
+    /// [`LeafExec::run_leaf_at`], mirroring the DES's node-pinned
+    /// routing. `Topology::single()` for undistributed runs.
+    pub topo: Topology,
     completed: AtomicBool,
 }
 
 impl Engine {
     pub fn new(plan: Arc<Plan>, mode: DepMode, leaf: Arc<dyn LeafExec>) -> Arc<Engine> {
-        Self::build(plan, mode, leaf, DataPlane::Shared)
-    }
-
-    #[deprecated(note = "use rt::launch(plan, leaf, &ExecConfig) — the one launch surface")]
-    pub fn new_with_plane(
-        plan: Arc<Plan>,
-        mode: DepMode,
-        leaf: Arc<dyn LeafExec>,
-        plane: DataPlane,
-    ) -> Arc<Engine> {
-        Self::build(plan, mode, leaf, plane)
+        Self::build(plan, mode, leaf, DataPlane::Shared, Topology::single())
     }
 
     pub(crate) fn build(
@@ -76,6 +83,7 @@ impl Engine {
         mode: DepMode,
         leaf: Arc<dyn LeafExec>,
         plane: DataPlane,
+        topo: Topology,
     ) -> Arc<Engine> {
         Arc::new(Engine {
             plan,
@@ -83,6 +91,7 @@ impl Engine {
             table: TagTable::default(),
             leaf,
             plane,
+            topo,
             completed: AtomicBool::new(false),
         })
     }
@@ -328,8 +337,12 @@ impl Engine {
         let key = Self::done_key(node, &coords);
         match &self.plan.node(node).body {
             ArenaBody::Leaf(_) => {
+                // owner-computes: the leaf's node identity is its tag's
+                // owner under the engine topology, threaded down so the
+                // data plane classifies traffic by placement
+                let owner = self.topo.node_of(&coords);
                 let t0 = std::time::Instant::now();
-                self.leaf.run_leaf(&self.plan, node, &coords);
+                self.leaf.run_leaf_at(&self.plan, node, &coords, owner);
                 ctx.metrics()
                     .work_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);

@@ -24,11 +24,16 @@
 //!   link studies (`rt::replay`). Constructed around a trace value, so
 //!   it is launched via `ReplayBackend::verbatim(trace).execute(..)`
 //!   rather than named by [`backend_for`].
+//! - [`ExecConfig::transport`] picks the data plane's shard transport
+//!   ([`crate::space::TransportKind`]): the direct in-process store, or
+//!   per-node service threads with channel messaging and injected link
+//!   latency — the real-execution analogue of the DES link model.
 //!
 //! The pre-`ExecConfig` entry points (`run_with_plane`,
-//! `run_with_plane_on`, and `sim::{simulate_with_plane,
-//! simulate_sharded}`) survive one release as deprecated shims over
-//! [`launch`].
+//! `run_with_plane_on`, `Engine::new_with_plane`, and
+//! `sim::{simulate_with_plane, simulate_sharded}`) had a one-release
+//! deprecation grace period and are now gone; [`launch`] is the only
+//! workload-level entry.
 
 pub mod config;
 pub mod engine;
@@ -38,7 +43,7 @@ pub mod replay;
 pub mod table;
 
 pub use crate::sim::trace::{Trace, TraceMode};
-pub use crate::space::DataPlane;
+pub use crate::space::{DataPlane, TransportKind};
 pub use config::{Backend, BackendKind, ConfigEcho, ExecConfig, LeafBody, LeafSpec, StealPolicy};
 pub use engine::{Engine, EngineBackend, LeafExec, NoopLeaf};
 pub use ompsim::OmpBackend;
@@ -46,11 +51,10 @@ pub use pool::{Pool, WorkerCtx};
 pub use replay::{replay_trace, ReplayBackend, ReplayMode};
 
 use crate::exec::plan::Plan;
-use crate::exec::{ArrayStore, KernelSet, LeafRunner};
-use crate::ir::Program;
+use crate::exec::LeafRunner;
 use crate::ral::{DepMode, MetricsSnapshot};
 use crate::sim::SimReport;
-use crate::space::{ItemSpace, SpaceLeafRunner, Topology};
+use crate::space::{ItemSpace, LinkModel, SpaceLeafRunner, Topology};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -139,6 +143,10 @@ fn delta(a: MetricsSnapshot, b: MetricsSnapshot) -> MetricsSnapshot {
         space_peak_bytes: b.space_peak_bytes,
         space_remote_gets: b.space_remote_gets.saturating_sub(a.space_remote_gets),
         space_remote_bytes: b.space_remote_bytes.saturating_sub(a.space_remote_bytes),
+        // per-node remote-op vectors are per-run gauges like live/peak:
+        // report the after-snapshot value (re-derived per run below)
+        node_remote_gets: b.node_remote_gets,
+        node_remote_bytes: b.node_remote_bytes,
     }
 }
 
@@ -154,13 +162,14 @@ fn run_measured(
     pool: &Pool,
     total_flops: f64,
     plane: DataPlane,
+    topo: &Topology,
     space: Option<&ItemSpace>,
     echo: ConfigEcho,
 ) -> Result<RunReport> {
     let before = pool.metrics().snapshot();
     let seconds = match kind {
         RuntimeKind::Edt(mode) => {
-            let engine = Engine::build(plan.clone(), mode, leaf.clone(), plane);
+            let engine = Engine::build(plan.clone(), mode, leaf.clone(), plane, topo.clone());
             engine.run(pool)?
         }
         RuntimeKind::Omp => ompsim::run_omp(plan, leaf, pool),
@@ -172,17 +181,23 @@ fn run_measured(
     let mut metrics = delta(before, after);
     match space {
         Some(sp) => {
-            // live/peak are gauges of *this* run's space, not pool-lifetime
-            // counters — report them absolute
+            // live/peak and the per-node remote-op vectors are gauges of
+            // *this* run's space, not pool-lifetime counters — report
+            // them absolute from the run's own ledger
             let s = sp.stats.snapshot();
             metrics.space_live_bytes = s.live_bytes;
             metrics.space_peak_bytes = s.peak_bytes;
+            let (rg, rb) = sp.node_remote_ops();
+            metrics.node_remote_gets = rg;
+            metrics.node_remote_bytes = rb;
         }
         None => {
             // no space in this run: a reused pool may still hold the
             // previous space run's gauges — they are not this run's
             metrics.space_live_bytes = 0;
             metrics.space_peak_bytes = 0;
+            metrics.node_remote_gets = Vec::new();
+            metrics.node_remote_bytes = Vec::new();
         }
     }
     Ok(RunReport {
@@ -208,6 +223,7 @@ pub(crate) fn execute_on_pool(
     cfg: &ExecConfig,
     pool: &Pool,
 ) -> Result<RunReport> {
+    cfg.validate()?;
     anyhow::ensure!(
         cfg.trace == TraceMode::Off,
         "trace capture is a DES-backend feature — launch with \
@@ -239,6 +255,7 @@ pub(crate) fn execute_on_pool(
                 pool,
                 leaf.total_flops,
                 cfg.plane,
+                &topo,
                 None,
                 echo,
             )
@@ -256,7 +273,7 @@ pub(crate) fn execute_on_pool(
                 );
             };
             let runner = SpaceLeafRunner::new(*prog, arrays.clone(), kernels.clone())
-                .with_topology(topo.clone());
+                .with_transport(topo.clone(), cfg.transport, LinkModel::from_cost(&cfg.cost));
             let space = runner.space.clone();
             let exec: Arc<dyn LeafExec> = Arc::new(runner);
             run_measured(
@@ -266,6 +283,7 @@ pub(crate) fn execute_on_pool(
                 pool,
                 leaf.total_flops,
                 cfg.plane,
+                &topo,
                 Some(&space),
                 echo,
             )
@@ -285,6 +303,7 @@ pub fn backend_for(cfg: &ExecConfig) -> &'static dyn Backend {
 /// **The** launch surface: execute `plan` with `leaf` under `cfg` on the
 /// backend the config names. Every other entry point is a shim over this.
 pub fn launch(plan: &Arc<Plan>, leaf: &LeafSpec<'_>, cfg: &ExecConfig) -> Result<RunReport> {
+    cfg.validate()?;
     backend_for(cfg).execute(plan, leaf, cfg)
 }
 
@@ -300,58 +319,6 @@ pub fn run(
 ) -> Result<RunReport> {
     let cfg = ExecConfig::new().runtime(kind).threads(pool.n_workers);
     execute_on_pool(plan, &LeafSpec::exec(leaf.clone(), total_flops), &cfg, pool)
-}
-
-/// Run a plan under a runtime over the chosen data plane.
-#[deprecated(note = "use rt::launch(plan, leaf, &ExecConfig) — the one launch surface")]
-#[allow(clippy::too_many_arguments)]
-pub fn run_with_plane(
-    kind: RuntimeKind,
-    plane: DataPlane,
-    plan: &Arc<Plan>,
-    prog: &Program,
-    arrays: &Arc<ArrayStore>,
-    kernels: &Arc<dyn KernelSet>,
-    pool: &Pool,
-    total_flops: f64,
-) -> Result<RunReport> {
-    let cfg = ExecConfig::new()
-        .runtime(kind)
-        .plane(plane)
-        .threads(pool.n_workers);
-    execute_on_pool(
-        plan,
-        &LeafSpec::kernels(prog, arrays.clone(), kernels.clone(), total_flops),
-        &cfg,
-        pool,
-    )
-}
-
-/// Run over an item space sharded across an explicit topology.
-#[deprecated(note = "use rt::launch(plan, leaf, &ExecConfig) — the one launch surface")]
-#[allow(clippy::too_many_arguments)]
-pub fn run_with_plane_on(
-    kind: RuntimeKind,
-    plane: DataPlane,
-    topo: &Topology,
-    plan: &Arc<Plan>,
-    prog: &Program,
-    arrays: &Arc<ArrayStore>,
-    kernels: &Arc<dyn KernelSet>,
-    pool: &Pool,
-    total_flops: f64,
-) -> Result<RunReport> {
-    let cfg = ExecConfig::new()
-        .runtime(kind)
-        .plane(plane)
-        .topology(topo.clone())
-        .threads(pool.n_workers);
-    execute_on_pool(
-        plan,
-        &LeafSpec::kernels(prog, arrays.clone(), kernels.clone(), total_flops),
-        &cfg,
-        pool,
-    )
 }
 
 #[cfg(test)]

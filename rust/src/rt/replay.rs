@@ -387,6 +387,9 @@ impl Backend for ReplayBackend {
                 .map(|p| p.name())
                 .unwrap_or("hash"),
             steal: if c.steal == "remote-ready" { "remote-ready" } else { "never" },
+            // traces are DES captures; the DES charges its own link model
+            // and never runs a shard transport
+            transport: "inproc",
             numa_pinned: c.numa_pinned,
             trace: self.trace.mode.name(),
         };

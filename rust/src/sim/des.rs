@@ -1002,62 +1002,6 @@ pub fn simulate(
     )
 }
 
-/// Simulate under an explicit data plane on a single node.
-#[deprecated(note = "use rt::launch(plan, leaf, &ExecConfig) — the one launch surface")]
-#[allow(clippy::too_many_arguments)]
-pub fn simulate_with_plane(
-    plan: &Plan,
-    mode: DepMode,
-    plane: DataPlane,
-    threads: usize,
-    machine: &Machine,
-    costs: &CostModel,
-    numa_pinned: bool,
-    total_flops: f64,
-) -> SimReport {
-    des_exec(
-        plan,
-        mode,
-        plane,
-        &Topology::single(),
-        threads,
-        machine,
-        costs,
-        numa_pinned,
-        total_flops,
-        StealPolicy::Never,
-    )
-}
-
-/// Simulate under a data plane sharded across an explicit topology
-/// (strict owner-computes — no inter-node stealing).
-#[deprecated(note = "use rt::launch(plan, leaf, &ExecConfig) — the one launch surface")]
-#[allow(clippy::too_many_arguments)]
-pub fn simulate_sharded(
-    plan: &Plan,
-    mode: DepMode,
-    plane: DataPlane,
-    topo: &Topology,
-    threads: usize,
-    machine: &Machine,
-    costs: &CostModel,
-    numa_pinned: bool,
-    total_flops: f64,
-) -> SimReport {
-    des_exec(
-        plan,
-        mode,
-        plane,
-        topo,
-        threads,
-        machine,
-        costs,
-        numa_pinned,
-        total_flops,
-        StealPolicy::Never,
-    )
-}
-
 /// The untraced DES entry every pre-trace caller funnels into.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn des_exec(
@@ -1482,44 +1426,6 @@ mod tests {
         assert_eq!(sharded.stolen_edts, 0, "Never must not migrate EDTs");
         // remote transfers cost virtual time the single-node run never pays
         assert!(sharded.seconds > single.seconds);
-    }
-
-    /// The deprecated shims stay byte-identical to the core they wrap.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_core() {
-        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
-        let plan = inst.plan().unwrap();
-        let (m, c) = (Machine::default(), CostModel::default());
-        let core = sim_space(&plan, &Topology::single(), 4, inst.total_flops);
-        let via_plane = simulate_with_plane(
-            &plan,
-            DepMode::CncDep,
-            DataPlane::Space,
-            4,
-            &m,
-            &c,
-            true,
-            inst.total_flops,
-        );
-        let via_sharded = simulate_sharded(
-            &plan,
-            DepMode::CncDep,
-            DataPlane::Space,
-            &Topology::single(),
-            4,
-            &m,
-            &c,
-            true,
-            inst.total_flops,
-        );
-        for r in [&via_plane, &via_sharded] {
-            assert_eq!(r.seconds.to_bits(), core.seconds.to_bits());
-            assert_eq!(r.tasks, core.tasks);
-            assert_eq!(r.steals, core.steals);
-            assert_eq!(r.space_puts, core.space_puts);
-            assert_eq!(r.space_peak_bytes, core.space_peak_bytes);
-        }
     }
 
     /// Tracing is pure observation: a traced run reports bit-identically

@@ -50,10 +50,8 @@ pub mod trace;
 
 pub use cost::{CostModel, Machine};
 pub use des::{simulate, DesBackend, SimReport};
-pub use trace::{Trace, TraceMode};
-#[allow(deprecated)]
-pub use des::{simulate_sharded, simulate_with_plane};
 pub use omp::simulate_omp;
+pub use trace::{Trace, TraceMode};
 
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::expr::Env;

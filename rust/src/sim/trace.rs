@@ -923,11 +923,12 @@ impl Trace {
         Ok(())
     }
 
-    /// Human-readable per-node timelines and steal provenance — the
-    /// `tale3 trace summarize` view. Deterministic text.
+    /// Human-readable per-node timelines, idle-time histograms and steal
+    /// provenance — the `tale3 trace summarize` view. Deterministic text.
     pub fn summarize(&self) -> String {
         use std::collections::HashMap;
         let nodes = self.report.node_peak_bytes.len().max(1);
+        let threads = (self.config.threads as usize).max(1);
         let mut node_of_inst: HashMap<u64, usize> = HashMap::new();
         let mut starts = vec![0u64; nodes];
         let mut busy = vec![0f64; nodes];
@@ -936,17 +937,24 @@ impl Trace {
         let mut rget_in = vec![0u64; nodes]; // remote bytes pulled by node
         let mut rget_out = vec![0u64; nodes]; // remote bytes served by node
         let mut prov: HashMap<(u32, u32), (u64, u64)> = HashMap::new();
+        // per-worker execution slices (Start..Done), for the idle gaps
+        let mut open_slice: HashMap<u64, (usize, u64)> = HashMap::new();
+        let mut slices: Vec<Vec<(u64, u64)>> = vec![Vec::new(); threads];
         let mut makespan = 0u64;
         for ev in &self.events {
             match ev {
-                TraceEvent::Start { i, node, .. } => {
+                TraceEvent::Start { t, i, worker, node, .. } => {
                     let n = (*node as usize).min(nodes - 1);
                     node_of_inst.insert(*i, n);
                     starts[n] += 1;
+                    open_slice.insert(*i, ((*worker as usize).min(threads - 1), *t));
                 }
                 TraceEvent::Done { t, i, dur, .. } => {
                     if let Some(&n) = node_of_inst.get(i) {
                         busy[n] += dur;
+                    }
+                    if let Some((w, s)) = open_slice.remove(i) {
+                        slices[w].push((s, *t));
                     }
                     makespan = makespan.max(*t);
                 }
@@ -991,6 +999,71 @@ impl Trace {
                 rget_out[n],
                 self.report.node_peak_bytes.get(n).copied().unwrap_or(0),
             ));
+        }
+        // per-node idle-time histogram: the gaps between consecutive
+        // execution slices of each virtual worker over [0, makespan]
+        // (leading and trailing idle included). Workers are attributed to
+        // nodes via the same block partition the DES schedules with
+        // (`Topology::node_of_worker`) — but only when the captured run
+        // actually ran node-pinned (space plane, multiple nodes, at least
+        // one worker per node, mirroring the DES's own condition);
+        // otherwise the flat pool has no per-node worker identity and the
+        // histogram is one aggregate row.
+        let pinned = self.config.plane == "space"
+            && self.config.nodes > 1
+            && self.config.threads >= self.config.nodes;
+        let groups = if pinned { nodes } else { 1 };
+        let topo = crate::space::Topology::new(groups, crate::space::Placement::Block, 0, 1);
+        const EDGES: [u64; 4] = [1_000, 10_000, 100_000, 1_000_000];
+        const LABELS: [&str; 5] = ["<1us", "<10us", "<100us", "<1ms", ">=1ms"];
+        let mut hist = vec![[0u64; 5]; groups];
+        let mut idle_ns = vec![0u64; groups];
+        let mut gap_count = vec![0u64; groups];
+        for (w, ws) in slices.iter().enumerate() {
+            let n = topo.node_of_worker(w, threads);
+            let mut record = |gap: u64| {
+                if gap == 0 {
+                    return;
+                }
+                let b = EDGES.iter().position(|&e| gap < e).unwrap_or(EDGES.len());
+                hist[n][b] += 1;
+                idle_ns[n] += gap;
+                gap_count[n] += 1;
+            };
+            let mut cursor = 0u64;
+            for &(s, e) in ws {
+                record(s.saturating_sub(cursor));
+                cursor = cursor.max(e);
+            }
+            record(makespan.saturating_sub(cursor));
+        }
+        if pinned {
+            out.push_str(
+                "per-node idle time (gaps between execution slices over [0, makespan]):\n",
+            );
+        } else {
+            out.push_str(
+                "idle time (flat scheduler — workers are not node-pinned, one aggregate row; \
+                 gaps between execution slices over [0, makespan]):\n",
+            );
+        }
+        out.push_str("node  gaps   idle-ms");
+        for l in LABELS {
+            out.push_str(&format!("  {l:>6}"));
+        }
+        out.push('\n');
+        for (n, buckets) in hist.iter().enumerate() {
+            let label = if pinned { n.to_string() } else { "all".to_string() };
+            out.push_str(&format!(
+                "{:>4}  {:>4}  {:>8.3}",
+                label,
+                gap_count[n],
+                idle_ns[n] as f64 / 1e6
+            ));
+            for bucket in buckets {
+                out.push_str(&format!("  {bucket:>6}"));
+            }
+            out.push('\n');
         }
         if !prov.is_empty() {
             out.push_str("steal provenance (owner -> thief):\n");
@@ -1122,6 +1195,40 @@ mod tests {
         let s = tiny_trace().summarize();
         assert!(s.contains("node 0 -> node 1: 1 EDTs, 64 input bytes"), "{s}");
         assert!(s.contains("2 tasks"), "{s}");
+    }
+
+    /// The per-node idle histogram: worker 0 (node 0) runs [0,100] of a
+    /// 200 ns makespan (one trailing 100 ns gap), worker 1 (node 1) runs
+    /// [120,200] (one leading 120 ns gap) — one sub-µs gap per node.
+    #[test]
+    fn summarize_emits_per_node_idle_histograms() {
+        let s = tiny_trace().summarize();
+        assert!(s.contains("per-node idle time"), "{s}");
+        assert!(s.contains("<1us"), "{s}");
+        assert!(s.contains(">=1ms"), "{s}");
+        let idle: Vec<&str> = s
+            .lines()
+            .skip_while(|l| !l.starts_with("node  gaps"))
+            .skip(1)
+            .take(2)
+            .collect();
+        assert_eq!(idle.len(), 2, "{s}");
+        for (n, line) in idle.iter().enumerate() {
+            let cols: Vec<&str> = line.split_whitespace().collect();
+            assert_eq!(cols[0], n.to_string(), "{line}");
+            assert_eq!(cols[1], "1", "one idle gap on node {n}: {line}");
+            assert_eq!(cols[3], "1", "gap lands in the <1us bucket: {line}");
+        }
+        // a capture whose scheduler was never node-pinned (threads <
+        // nodes) must not fabricate per-node attribution: one flat row
+        let mut flat = tiny_trace();
+        flat.config.threads = 1;
+        let s = flat.summarize();
+        assert!(s.contains("flat scheduler"), "{s}");
+        assert!(
+            s.lines().any(|l| l.trim_start().starts_with("all")),
+            "{s}"
+        );
     }
 
     #[test]

@@ -55,14 +55,26 @@
 //! distributed-memory scaling story the OCR/CnC-distrib lineage points
 //! at. `Topology::single()` is the degenerate one-node case and is
 //! byte-for-byte identical to the unsharded space.
+//!
+//! *How* a put/get reaches its owner's shard is the orthogonal
+//! [`transport`] axis: [`TransportKind::InProc`] is the direct
+//! shared-memory path, [`TransportKind::Channel`] puts each node's shards
+//! behind a dedicated service thread with message-passing operations and
+//! an injected link latency on remote gets — so the real engine pays (and
+//! measures) the cross-node traffic the DES only modeled. The full
+//! data-plane matrix is `DataPlane` × `ShardTransport` (see the README's
+//! architecture table); a zero-latency channel is oracle- and
+//! counter-identical to `InProc` (`tests/transport_parity.rs`).
 
 pub mod placement;
 pub mod store;
 pub mod tiles;
+pub mod transport;
 
 pub use placement::{Placement, Topology};
 pub use store::{ItemSpace, SpaceSnapshot, SpaceStats};
 pub use tiles::{KernelWrites, SpaceLeafRunner};
+pub use transport::{LinkModel, ShardTransport, TransportKind};
 
 /// Which data plane leaf EDTs exchange array data through.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

@@ -1,27 +1,31 @@
-//! The sharded concurrent item store with get-count reclamation.
+//! The concurrent item store behind the shard-transport seam, with
+//! get-count reclamation.
 //!
-//! Same sharding shape as the control-plane `rt::table::TagTable` (the
-//! paper's backends put both planes in one `tbb::concurrent_hash_map`;
-//! keeping them separate here lets each plane be measured — and later
-//! sharded across simulated nodes — independently). An item lives from
-//! its `put` until its declared number of `get`s has happened; the last
-//! get removes it and returns its bytes to the live-memory budget.
+//! [`ItemSpace`] is the facade: it owns the [`Topology`] (which node owns
+//! which item — the *placement* question) and delegates the *movement*
+//! question to a [`ShardTransport`] (`space::transport`). An item lives
+//! from its `put` until its declared number of `get`s has happened; the
+//! last get removes it and returns its bytes to the live-memory budget.
+//!
+//! The two transports are the paper's two data-plane realities behind one
+//! store API (§5.3): `InProc` is the shared-memory CnC/SWARM view — the
+//! tuple-space `put`/`get` is a concurrent-hash-map operation and a "get"
+//! is a pointer hand-off — while `Channel` is the tuple-space
+//! *communication* view the distributed CnC/OCR lineage needs: each
+//! node's shards live behind a service thread, every operation is a
+//! message, and a get that crosses nodes pays a link. §5.3's observation
+//! that runtime overhead is dominated by exactly these put/get/steal
+//! mechanisms is why both transports feed one [`SpaceStats`] ledger: the
+//! data-plane share of the overhead stays measurable per transport, and
+//! the remote-traffic numbers of the real engine become comparable with
+//! the DES's link model instead of existing only in simulation.
 
 use super::placement::Topology;
+use super::transport::{Channel, InProc, Ledger, LinkModel, ShardTransport, TransportKind};
 use super::{DataBlock, ItemKey};
 use crate::ral::Metrics;
-use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-
-/// One published item: the payload plus its remaining get-count and the
-/// node that owns it (where the producing EDT ran — owner-computes).
-struct Slot {
-    block: Arc<DataBlock>,
-    remaining: usize,
-    owner: usize,
-}
+use std::sync::Arc;
 
 /// Data-plane counters (§5.3): operation counts plus byte-level live/peak
 /// accounting. `live_bytes` is the instantaneous footprint of items that
@@ -40,18 +44,19 @@ pub struct SpaceStats {
     pub live_items: AtomicU64,
     /// Gets whose consumer node differed from the item's owner node, and
     /// the payload bytes those gets moved over a link. Zero on a
-    /// single-node topology.
+    /// single-node topology. Classified by the transport's ledger; the
+    /// per-node split lives in the transport (`ItemSpace::node_remote_ops`).
     pub remote_gets: AtomicU64,
     pub remote_bytes: AtomicU64,
 }
 
 impl SpaceStats {
-    fn add_live(&self, bytes: u64) {
+    pub(crate) fn add_live(&self, bytes: u64) {
         let now = self.live_bytes.fetch_add(bytes, Ordering::AcqRel) + bytes;
         self.peak_bytes.fetch_max(now, Ordering::AcqRel);
     }
 
-    fn sub_live(&self, bytes: u64) {
+    pub(crate) fn sub_live(&self, bytes: u64) {
         self.live_bytes.fetch_sub(bytes, Ordering::AcqRel);
         self.frees.fetch_add(1, Ordering::Relaxed);
     }
@@ -87,17 +92,16 @@ pub struct SpaceSnapshot {
     pub remote_bytes: u64,
 }
 
-/// The concurrent item-collection store, optionally sharded across the
-/// nodes of a [`Topology`]. Items are owned by the node their producer's
-/// tag maps to; per-node live/peak bytes are tracked so the memory each
-/// simulated node actually needs is measurable.
+/// The item-collection store, sharded across the nodes of a [`Topology`]
+/// and reached through a [`ShardTransport`]. Items are owned by the node
+/// their producer's tag maps to; per-node live/peak bytes and per-node
+/// remote operations are tracked so both the memory and the traffic each
+/// simulated node generates are measurable.
 pub struct ItemSpace {
-    shards: Vec<Mutex<HashMap<ItemKey, Slot>>>,
-    mask: usize,
     topo: Topology,
-    node_live: Vec<AtomicU64>,
-    node_peak: Vec<AtomicU64>,
-    pub stats: SpaceStats,
+    pub stats: Arc<SpaceStats>,
+    ledger: Ledger,
+    transport: Box<dyn ShardTransport>,
 }
 
 impl Default for ItemSpace {
@@ -111,17 +115,34 @@ impl ItemSpace {
         Self::with_topology(n_shards, Topology::single())
     }
 
-    /// A store sharded across the topology's nodes. With
-    /// `Topology::single()` this is exactly the unsharded store.
+    /// A store sharded across the topology's nodes over the direct
+    /// in-process transport. With `Topology::single()` this is exactly
+    /// the unsharded store.
     pub fn with_topology(n_shards: usize, topo: Topology) -> Self {
-        let n = n_shards.next_power_of_two();
+        Self::with_transport(n_shards, topo, TransportKind::InProc, LinkModel::zero())
+    }
+
+    /// A store whose shard access goes through the chosen transport.
+    /// `link` only matters to [`TransportKind::Channel`]: it is the
+    /// injected latency a remote get pays (`LinkModel::zero()` makes the
+    /// channel transport a pure message-passing refactor, oracle- and
+    /// counter-identical to `InProc`).
+    pub fn with_transport(
+        n_shards: usize,
+        topo: Topology,
+        kind: TransportKind,
+        link: LinkModel,
+    ) -> Self {
+        let ledger = Ledger::new(topo.nodes());
+        let transport: Box<dyn ShardTransport> = match kind {
+            TransportKind::InProc => Box::new(InProc::new(n_shards, ledger.clone())),
+            TransportKind::Channel => Box::new(Channel::new(&topo, link, ledger.clone())),
+        };
         ItemSpace {
-            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
-            mask: n - 1,
-            node_live: (0..topo.nodes()).map(|_| AtomicU64::new(0)).collect(),
-            node_peak: (0..topo.nodes()).map(|_| AtomicU64::new(0)).collect(),
             topo,
-            stats: SpaceStats::default(),
+            stats: ledger.stats.clone(),
+            ledger,
+            transport,
         }
     }
 
@@ -129,27 +150,21 @@ impl ItemSpace {
         &self.topo
     }
 
+    /// Which transport this space's shard access goes through.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport.kind()
+    }
+
     /// Per-node high-water marks of live datablock bytes.
     pub fn node_peaks(&self) -> Vec<u64> {
-        self.node_peak
-            .iter()
-            .map(|p| p.load(Ordering::Relaxed))
-            .collect()
+        self.ledger.nodes.peaks()
     }
 
-    fn add_node_live(&self, node: usize, bytes: u64) {
-        let now = self.node_live[node].fetch_add(bytes, Ordering::AcqRel) + bytes;
-        self.node_peak[node].fetch_max(now, Ordering::AcqRel);
-    }
-
-    fn sub_node_live(&self, node: usize, bytes: u64) {
-        self.node_live[node].fetch_sub(bytes, Ordering::AcqRel);
-    }
-
-    fn shard(&self, key: &ItemKey) -> &Mutex<HashMap<ItemKey, Slot>> {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        &self.shards[(h.finish() as usize) & self.mask]
+    /// Per-node remote operations, indexed by the *consumer* node that
+    /// issued them: `(remote gets, remote bytes)` — the transport-side
+    /// classification mirrored into [`Metrics`] by [`Self::merge_into`].
+    pub fn node_remote_ops(&self) -> (Vec<u64>, Vec<u64>) {
+        self.ledger.nodes.remote_ops()
     }
 
     /// Publish an item with its statically known consumer count (the CnC
@@ -157,32 +172,11 @@ impl ItemSpace {
     /// key is a program error. A `get_count` of zero means the item has no
     /// consumers (boundary tile); it is accounted and reclaimed
     /// immediately — the transient still registers in `peak_bytes`, like
-    /// the real runtime's allocation would.
+    /// the real runtime's allocation would. Puts are always local under
+    /// owner-computes, so no transport ever charges a link here.
     pub fn put(&self, key: ItemKey, block: DataBlock, get_count: usize) {
-        let bytes = block.bytes() as u64;
         let owner = self.topo.node_of(&key.tag);
-        self.stats.puts.fetch_add(1, Ordering::Relaxed);
-        self.stats.put_bytes.fetch_add(bytes, Ordering::Relaxed);
-        self.stats.add_live(bytes);
-        self.add_node_live(owner, bytes);
-        if get_count == 0 {
-            self.stats.sub_live(bytes);
-            self.sub_node_live(owner, bytes);
-            return;
-        }
-        self.stats.live_items.fetch_add(1, Ordering::Relaxed);
-        let prev = self.shard(&key).lock().unwrap().insert(
-            key,
-            Slot {
-                block: Arc::new(block),
-                remaining: get_count,
-                owner,
-            },
-        );
-        assert!(
-            prev.is_none(),
-            "tuple-space double put: items are single-assignment"
-        );
+        self.transport.put(key, block, get_count, owner);
     }
 
     /// Consuming get: decrement the item's get-count and return its
@@ -191,32 +185,8 @@ impl ItemSpace {
     /// consumer's node, for local/remote classification; `None` counts
     /// the get as local (the single-address-space view).
     fn try_get_inner(&self, key: &ItemKey, from: Option<usize>) -> Option<Arc<DataBlock>> {
-        let (block, freed, owner) = {
-            let mut m = self.shard(key).lock().unwrap();
-            let slot = m.get_mut(key)?;
-            let block = slot.block.clone();
-            let owner = slot.owner;
-            slot.remaining -= 1;
-            if slot.remaining == 0 {
-                m.remove(key);
-                (block, true, owner)
-            } else {
-                (block, false, owner)
-            }
-        };
-        let bytes = block.bytes() as u64;
-        self.stats.gets.fetch_add(1, Ordering::Relaxed);
-        self.stats.get_bytes.fetch_add(bytes, Ordering::Relaxed);
-        if from.is_some_and(|f| f != owner) {
-            self.stats.remote_gets.fetch_add(1, Ordering::Relaxed);
-            self.stats.remote_bytes.fetch_add(bytes, Ordering::Relaxed);
-        }
-        if freed {
-            self.stats.sub_live(bytes);
-            self.sub_node_live(owner, bytes);
-            self.stats.live_items.fetch_sub(1, Ordering::Relaxed);
-        }
-        Some(block)
+        let owner = self.topo.node_of(&key.tag);
+        self.transport.try_get(key, from, owner)
     }
 
     pub fn try_get(&self, key: &ItemKey) -> Option<Arc<DataBlock>> {
@@ -225,7 +195,8 @@ impl ItemSpace {
 
     /// Consuming get from a known consumer node: a get whose consumer is
     /// not the item's owner is counted as remote traffic (the DES charges
-    /// it serialization + link time from the same classification).
+    /// it serialization + link time from the same classification, and the
+    /// channel transport injects the link latency for real).
     pub fn try_get_from(&self, key: &ItemKey, from: usize) -> Option<Arc<DataBlock>> {
         self.try_get_inner(key, Some(from))
     }
@@ -260,7 +231,8 @@ impl ItemSpace {
 
     /// Fold this space's counters into the runtime metrics so data-plane
     /// traffic shows up next to the control-plane §5.3 counters. Gauges
-    /// (live/peak) are stored absolute, counters are added.
+    /// (live/peak and the per-node remote-op vectors) are stored absolute,
+    /// counters are added.
     pub fn merge_into(&self, m: &Metrics) {
         let s = self.stats.snapshot();
         m.space_puts.fetch_add(s.puts, Ordering::Relaxed);
@@ -270,6 +242,8 @@ impl ItemSpace {
         m.space_remote_bytes.fetch_add(s.remote_bytes, Ordering::Relaxed);
         m.space_live_bytes.store(s.live_bytes, Ordering::Relaxed);
         m.space_peak_bytes.store(s.peak_bytes, Ordering::Relaxed);
+        let (rg, rb) = self.node_remote_ops();
+        m.set_node_remote(&rg, &rb);
     }
 }
 
@@ -290,6 +264,7 @@ mod tests {
     #[test]
     fn last_get_frees() {
         let s = ItemSpace::default();
+        assert_eq!(s.transport_kind(), TransportKind::InProc);
         let k = ItemKey::new(0, &[3]);
         s.put(k.clone(), block(4), 2);
         assert_eq!(s.live_items(), 1);
@@ -357,11 +332,12 @@ mod tests {
         let _ = s.get(&k);
     }
 
-    #[test]
-    fn sharded_store_classifies_remote_gets_and_tracks_node_peaks() {
+    /// Exercised per transport: classification and per-node accounting
+    /// are transport-invariant.
+    fn classify_on(kind: TransportKind) {
         use crate::space::placement::Placement;
         let topo = Topology::new(2, Placement::Cyclic, 0, 8);
-        let s = ItemSpace::with_topology(8, topo);
+        let s = ItemSpace::with_transport(8, topo, kind, LinkModel::zero());
         // tag [0] owned by node 0, tag [1] by node 1
         s.put(ItemKey::new(0, &[0]), block(4), 1);
         s.put(ItemKey::new(0, &[1]), block(4), 1);
@@ -376,10 +352,24 @@ mod tests {
         assert_eq!(snap.remote_bytes, 16);
         assert_eq!(snap.live_bytes, 0);
         assert_eq!(s.node_peaks(), vec![16, 16], "peaks persist after frees");
+        assert_eq!(s.node_remote_ops(), (vec![0, 1], vec![0, 16]));
         let m = Metrics::default();
         s.merge_into(&m);
-        assert_eq!(m.snapshot().space_remote_gets, 1);
-        assert_eq!(m.snapshot().space_remote_bytes, 16);
+        let ms = m.snapshot();
+        assert_eq!(ms.space_remote_gets, 1);
+        assert_eq!(ms.space_remote_bytes, 16);
+        assert_eq!(ms.node_remote_gets, vec![0, 1]);
+        assert_eq!(ms.node_remote_bytes, vec![0, 16]);
+    }
+
+    #[test]
+    fn sharded_store_classifies_remote_gets_and_tracks_node_peaks() {
+        classify_on(TransportKind::InProc);
+    }
+
+    #[test]
+    fn channel_transport_classifies_identically() {
+        classify_on(TransportKind::Channel);
     }
 
     #[test]
@@ -406,5 +396,6 @@ mod tests {
         assert_eq!(snap.space_frees, 1);
         assert_eq!(snap.space_live_bytes, 0);
         assert_eq!(snap.space_peak_bytes, 8);
+        assert_eq!(snap.node_remote_gets, vec![0]);
     }
 }

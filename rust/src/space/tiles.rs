@@ -210,6 +210,20 @@ impl SpaceLeafRunner {
         self
     }
 
+    /// [`Self::with_topology`] over an explicit shard transport: the
+    /// `Channel` transport puts each node's shards behind a service
+    /// thread and makes remote gets pay the injected `link` latency —
+    /// the real-execution analogue of the DES link model.
+    pub fn with_transport(
+        mut self,
+        topo: crate::space::placement::Topology,
+        kind: crate::space::TransportKind,
+        link: crate::space::LinkModel,
+    ) -> Self {
+        self.space = Arc::new(ItemSpace::with_transport(64, topo, kind, link));
+        self
+    }
+
     fn verify_block(&self, key: &ItemKey, block: &DataBlock) {
         for r in &block.regions {
             let a = self.arrays.a(r.array);
@@ -234,11 +248,24 @@ impl SpaceLeafRunner {
 
 impl LeafExec for SpaceLeafRunner {
     fn run_leaf(&self, plan: &Plan, node_id: u32, coords: &[i64]) {
+        // direct callers (tests, the omp comparator) derive the node the
+        // engine path would have threaded through: owner-computes
+        self.run_leaf_at(plan, node_id, coords, self.space.topology().node_of(coords));
+    }
+
+    fn run_leaf_at(&self, plan: &Plan, node_id: u32, coords: &[i64], here: usize) {
+        // `here` is this EDT's node identity, threaded down from the
+        // engine (matching `Topology::node_of_worker` routing in the
+        // DES); under owner-computes it is the node the tag maps to
+        debug_assert_eq!(
+            here,
+            self.space.topology().node_of(coords),
+            "engine and space topologies disagree on the owner of {coords:?}"
+        );
         // 1. consume input tiles: one get per chain antecedent; the last
         //    consumer's get frees the producer's datablock. This EDT runs
         //    on the node its tag maps to (owner-computes), so gets of
         //    items owned elsewhere count as remote traffic.
-        let here = self.space.topology().node_of(coords);
         for ant in plan.antecedents(node_id, coords) {
             let key = ItemKey::new(node_id, &ant);
             let block = self.space.get_from(&key, here);

@@ -1,0 +1,597 @@
+//! The shard-transport seam: *how* an item reaches its shard.
+//!
+//! The paper's runtime-agnostic layer exists so one generated EDT program
+//! can run on runtimes with very different data-plane realities (§4.7.3);
+//! the same argument applies one level down, inside the data plane
+//! itself. [`ShardTransport`] is that seam: [`super::ItemSpace`] decides
+//! *which* node owns an item ([`super::Topology::node_of`] —
+//! owner-computes), the transport decides *how* a `put`/`get` reaches
+//! that node's shard:
+//!
+//! - [`TransportKind::InProc`] — the direct path: shared, mutex-sharded
+//!   hash maps touched from the caller's thread, exactly the store the
+//!   space plane has always run on (bit-identical behavior and counters).
+//!   This is the single-address-space view of CnC item handles.
+//! - [`TransportKind::Channel`] — each node's shards are owned by a
+//!   dedicated service thread and `put`/`get`/`get_from` become messages
+//!   over channels (`std::sync::mpsc` — crossbeam-channel is not in the
+//!   offline crate set; the `free` of a drained item rides the last get
+//!   message and is performed by the owning service thread). A get whose
+//!   consumer node differs from the item's owner additionally pays an
+//!   injected [`LinkModel`] latency derived from
+//!   [`CostModel::link_latency_ns`] / [`CostModel::link_bw_ns_per_byte`]
+//!   — the real-execution analogue of the DES link model, so the real
+//!   engine's remote-traffic numbers are *measured* under the same cost
+//!   shape the simulator charges. With a zero link model the channel
+//!   transport is oracle-identical to `InProc` (asserted across all 21
+//!   workloads by `tests/transport_parity.rs`).
+//!
+//! Both transports account through one shared `Ledger` — a single
+//! accounting body, so the two paths can never diverge in *what* they
+//! count, only in *how* the bytes move. The ledger is also where the
+//! local/remote classification happens, which is why the per-node
+//! remote-op counters surfaced in [`crate::ral::Metrics`] are sourced
+//! from the transport rather than from the store.
+
+use super::placement::Topology;
+use super::store::SpaceStats;
+use super::{DataBlock, ItemKey};
+use crate::sim::CostModel;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Which transport moves items between a consumer and its shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Direct calls into shared mutex-sharded maps (the classic path).
+    #[default]
+    InProc,
+    /// Per-node service threads; operations are channel messages and
+    /// remote gets pay an injected link latency.
+    Channel,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Channel => "channel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "inproc" => Some(TransportKind::InProc),
+            "channel" => Some(TransportKind::Channel),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [TransportKind; 2] {
+        [TransportKind::InProc, TransportKind::Channel]
+    }
+}
+
+/// The injected-latency model of the channel transport: what one remote
+/// get pays on top of the service round-trip, mirroring the DES's
+/// [`CostModel::remote_transfer_ns`] wire component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    pub latency_ns: f64,
+    pub bw_ns_per_byte: f64,
+}
+
+impl LinkModel {
+    /// No injected latency: the channel transport becomes a pure
+    /// message-passing refactor of the direct path (the parity-test
+    /// configuration).
+    pub fn zero() -> LinkModel {
+        LinkModel { latency_ns: 0.0, bw_ns_per_byte: 0.0 }
+    }
+
+    /// The link the DES charges for remote gets, minus the serialization
+    /// component (`space_copy_ns_per_byte`): the real put already performs
+    /// the copy-out physically, so only the wire time is injected.
+    pub fn from_cost(c: &CostModel) -> LinkModel {
+        LinkModel {
+            latency_ns: c.link_latency_ns,
+            bw_ns_per_byte: c.link_bw_ns_per_byte,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.latency_ns <= 0.0 && self.bw_ns_per_byte <= 0.0
+    }
+
+    fn transfer_ns(&self, bytes: u64) -> f64 {
+        self.latency_ns + bytes as f64 * self.bw_ns_per_byte
+    }
+}
+
+/// Busy-wait for `ns` virtual link time. Typical interconnect latencies
+/// (~1.5 µs) sit far below OS sleep resolution, so the blocked consumer
+/// spins — exactly what a synchronous remote get does to its core.
+fn inject(ns: f64) {
+    if ns <= 0.0 {
+        return;
+    }
+    let dur = std::time::Duration::from_nanos(ns as u64);
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < dur {
+        std::hint::spin_loop();
+    }
+}
+
+/// One published item: the payload plus its remaining get-count and the
+/// node that owns it (where the producing EDT ran — owner-computes).
+struct Slot {
+    block: Arc<DataBlock>,
+    remaining: usize,
+    owner: usize,
+}
+
+/// Per-node accounting: live/peak payload bytes on each node, plus the
+/// remote operations each node *issued* (gets whose item lived
+/// elsewhere). The remote vectors are indexed by the consumer node — the
+/// side that paid the link — matching how the DES attributes link time.
+pub(crate) struct NodeAcct {
+    live: Vec<AtomicU64>,
+    peak: Vec<AtomicU64>,
+    remote_gets: Vec<AtomicU64>,
+    remote_bytes: Vec<AtomicU64>,
+}
+
+impl NodeAcct {
+    fn new(nodes: usize) -> NodeAcct {
+        let zeros = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect();
+        NodeAcct {
+            live: zeros(nodes),
+            peak: zeros(nodes),
+            remote_gets: zeros(nodes),
+            remote_bytes: zeros(nodes),
+        }
+    }
+
+    fn add_live(&self, node: usize, bytes: u64) {
+        let now = self.live[node].fetch_add(bytes, Ordering::AcqRel) + bytes;
+        self.peak[node].fetch_max(now, Ordering::AcqRel);
+    }
+
+    fn sub_live(&self, node: usize, bytes: u64) {
+        self.live[node].fetch_sub(bytes, Ordering::AcqRel);
+    }
+
+    pub(crate) fn peaks(&self) -> Vec<u64> {
+        self.peak.iter().map(|p| p.load(Ordering::Relaxed)).collect()
+    }
+
+    pub(crate) fn remote_ops(&self) -> (Vec<u64>, Vec<u64>) {
+        (
+            self.remote_gets.iter().map(|g| g.load(Ordering::Relaxed)).collect(),
+            self.remote_bytes.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        )
+    }
+}
+
+/// The one accounting body shared by both transports. Update order
+/// mirrors the pre-seam store exactly, so the `InProc` refactor is
+/// bit-identical and the `Channel` transport can only differ in *when*
+/// (service thread vs caller), never in *what* it counts.
+#[derive(Clone)]
+pub(crate) struct Ledger {
+    pub(crate) stats: Arc<SpaceStats>,
+    pub(crate) nodes: Arc<NodeAcct>,
+}
+
+impl Ledger {
+    pub(crate) fn new(nodes: usize) -> Ledger {
+        Ledger {
+            stats: Arc::new(SpaceStats::default()),
+            nodes: Arc::new(NodeAcct::new(nodes)),
+        }
+    }
+
+    /// Publish accounting: `transient` items (zero consumers) register in
+    /// the peaks and are reclaimed immediately, like the real runtime's
+    /// allocation would.
+    fn on_put(&self, owner: usize, bytes: u64, transient: bool) {
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.stats.put_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.stats.add_live(bytes);
+        self.nodes.add_live(owner, bytes);
+        if transient {
+            self.stats.sub_live(bytes);
+            self.nodes.sub_live(owner, bytes);
+        } else {
+            self.stats.live_items.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Consume accounting: classify local/remote against the item's owner
+    /// (the transport-side classification the per-node remote counters in
+    /// [`crate::ral::Metrics`] are sourced from).
+    fn on_get(&self, owner: usize, from: Option<usize>, bytes: u64, freed: bool) {
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        self.stats.get_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if let Some(f) = from {
+            if f != owner {
+                self.stats.remote_gets.fetch_add(1, Ordering::Relaxed);
+                self.stats.remote_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.nodes.remote_gets[f].fetch_add(1, Ordering::Relaxed);
+                self.nodes.remote_bytes[f].fetch_add(bytes, Ordering::Relaxed);
+            }
+        }
+        if freed {
+            self.stats.sub_live(bytes);
+            self.nodes.sub_live(owner, bytes);
+            self.stats.live_items.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// How shard operations reach the owning node. Implemented by `InProc`
+/// (direct calls) and `Channel` (per-node service threads).
+/// `owner` is always [`Topology::node_of`] of the item's tag, computed by
+/// the calling [`super::ItemSpace`] — the transport moves bytes, the
+/// topology places them.
+pub trait ShardTransport: Send + Sync {
+    fn kind(&self) -> TransportKind;
+
+    /// Publish an item on its owner node with its CnC get-count. Puts are
+    /// always local under owner-computes (the producing EDT runs on the
+    /// node its tag maps to), so no link latency is ever injected here.
+    fn put(&self, key: ItemKey, block: DataBlock, get_count: usize, owner: usize);
+
+    /// Consuming get from node `from` (`None` = the single-address-space
+    /// view). The last get frees the item on its owner node.
+    fn try_get(
+        &self,
+        key: &ItemKey,
+        from: Option<usize>,
+        owner: usize,
+    ) -> Option<Arc<DataBlock>>;
+}
+
+// ------------------------------------------------------------- in-proc
+
+/// The direct path: shared mutex-sharded hash maps, same sharding shape
+/// as the control-plane `rt::table::TagTable`. Byte-for-byte the store
+/// the space plane ran on before the transport seam existed.
+pub(crate) struct InProc {
+    shards: Vec<Mutex<HashMap<ItemKey, Slot>>>,
+    mask: usize,
+    ledger: Ledger,
+}
+
+impl InProc {
+    pub(crate) fn new(n_shards: usize, ledger: Ledger) -> InProc {
+        let n = n_shards.next_power_of_two();
+        InProc {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            mask: n - 1,
+            ledger,
+        }
+    }
+
+    fn shard(&self, key: &ItemKey) -> &Mutex<HashMap<ItemKey, Slot>> {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & self.mask]
+    }
+}
+
+impl ShardTransport for InProc {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProc
+    }
+
+    fn put(&self, key: ItemKey, block: DataBlock, get_count: usize, owner: usize) {
+        let bytes = block.bytes() as u64;
+        self.ledger.on_put(owner, bytes, get_count == 0);
+        if get_count == 0 {
+            return;
+        }
+        let prev = self.shard(&key).lock().unwrap().insert(
+            key,
+            Slot { block: Arc::new(block), remaining: get_count, owner },
+        );
+        assert!(prev.is_none(), "tuple-space double put: items are single-assignment");
+    }
+
+    fn try_get(
+        &self,
+        key: &ItemKey,
+        from: Option<usize>,
+        _owner: usize,
+    ) -> Option<Arc<DataBlock>> {
+        let (block, freed, owner) = {
+            let mut m = self.shard(key).lock().unwrap();
+            let slot = m.get_mut(key)?;
+            let block = slot.block.clone();
+            let owner = slot.owner;
+            slot.remaining -= 1;
+            if slot.remaining == 0 {
+                m.remove(key);
+                (block, true, owner)
+            } else {
+                (block, false, owner)
+            }
+        };
+        self.ledger.on_get(owner, from, block.bytes() as u64, freed);
+        Some(block)
+    }
+}
+
+// ------------------------------------------------------------- channel
+
+/// One message to a node's shard-service thread. The `free` of a drained
+/// item is not a separate message: it rides the last [`Req::Get`] and is
+/// performed by the owning service thread before it replies.
+enum Req {
+    Put {
+        key: ItemKey,
+        block: DataBlock,
+        get_count: usize,
+        ack: mpsc::Sender<()>,
+    },
+    Get {
+        key: ItemKey,
+        from: Option<usize>,
+        reply: mpsc::Sender<Option<Arc<DataBlock>>>,
+    },
+}
+
+/// The channel transport: node `n`'s shards are a plain `HashMap` owned
+/// exclusively by service thread `n` — no locks, all mutation via
+/// messages, the shape a real distributed shard daemon has. Consumers
+/// block on the reply; a remote consumer then pays the injected
+/// [`LinkModel`] wire time.
+pub(crate) struct Channel {
+    reqs: Vec<mpsc::Sender<Req>>,
+    handles: Vec<JoinHandle<()>>,
+    link: LinkModel,
+}
+
+impl Channel {
+    pub(crate) fn new(topo: &Topology, link: LinkModel, ledger: Ledger) -> Channel {
+        let nodes = topo.nodes();
+        let mut reqs = Vec::with_capacity(nodes);
+        let mut handles = Vec::with_capacity(nodes);
+        for node in 0..nodes {
+            let (tx, rx) = mpsc::channel::<Req>();
+            let ledger = ledger.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("tale3-shard-{node}"))
+                    .spawn(move || Self::serve(node, rx, ledger))
+                    .expect("spawn shard service thread"),
+            );
+            reqs.push(tx);
+        }
+        Channel { reqs, handles, link }
+    }
+
+    /// The service loop: exclusive owner of this node's item map. Exits
+    /// when every sender is dropped (transport drop).
+    fn serve(node: usize, rx: mpsc::Receiver<Req>, ledger: Ledger) {
+        let mut items: HashMap<ItemKey, Slot> = HashMap::new();
+        while let Ok(req) = rx.recv() {
+            match req {
+                Req::Put { key, block, get_count, ack } => {
+                    let bytes = block.bytes() as u64;
+                    ledger.on_put(node, bytes, get_count == 0);
+                    if get_count > 0 {
+                        let prev = items.insert(
+                            key,
+                            Slot { block: Arc::new(block), remaining: get_count, owner: node },
+                        );
+                        assert!(
+                            prev.is_none(),
+                            "tuple-space double put: items are single-assignment"
+                        );
+                    }
+                    let _ = ack.send(());
+                }
+                Req::Get { key, from, reply } => {
+                    let consumed = match items.get_mut(&key) {
+                        None => None,
+                        Some(slot) => {
+                            let block = slot.block.clone();
+                            slot.remaining -= 1;
+                            Some((block, slot.remaining == 0))
+                        }
+                    };
+                    let hit = consumed.map(|(block, freed)| {
+                        if freed {
+                            items.remove(&key);
+                        }
+                        ledger.on_get(node, from, block.bytes() as u64, freed);
+                        block
+                    });
+                    let _ = reply.send(hit);
+                }
+            }
+        }
+    }
+
+    fn sender(&self, owner: usize) -> &mpsc::Sender<Req> {
+        &self.reqs[owner]
+    }
+}
+
+impl ShardTransport for Channel {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Channel
+    }
+
+    fn put(&self, key: ItemKey, block: DataBlock, get_count: usize, owner: usize) {
+        let (ack, done) = mpsc::channel();
+        self.sender(owner)
+            .send(Req::Put { key, block, get_count, ack })
+            .unwrap_or_else(|_| panic!("shard service thread for node {owner} is gone"));
+        // synchronous: the put is visible (and counted) before the
+        // producer's completion signal can release any consumer
+        done.recv().unwrap_or_else(|_| {
+            panic!(
+                "shard service thread for node {owner} died during a put \
+                 (a double put of the same key is a program error)"
+            )
+        });
+    }
+
+    fn try_get(
+        &self,
+        key: &ItemKey,
+        from: Option<usize>,
+        owner: usize,
+    ) -> Option<Arc<DataBlock>> {
+        let (tx, rx) = mpsc::channel();
+        self.sender(owner)
+            .send(Req::Get { key: key.clone(), from, reply: tx })
+            .unwrap_or_else(|_| panic!("shard service thread for node {owner} is gone"));
+        let hit = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("shard service thread for node {owner} died during a get"));
+        if let Some(block) = &hit {
+            if from.is_some_and(|f| f != owner) && !self.link.is_zero() {
+                inject(self.link.transfer_ns(block.bytes() as u64));
+            }
+        }
+        hit
+    }
+}
+
+impl Drop for Channel {
+    fn drop(&mut self) {
+        // closing the request channels ends every service loop
+        self.reqs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{ItemSpace, Placement, Region};
+
+    fn block(n: usize) -> DataBlock {
+        DataBlock::new(vec![Region {
+            array: 0,
+            lo: vec![0].into(),
+            hi: vec![n as i64 - 1].into(),
+            data: vec![1.0; n].into(),
+        }])
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in TransportKind::all() {
+            assert_eq!(TransportKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(TransportKind::parse("tcp"), None);
+        assert_eq!(TransportKind::default(), TransportKind::InProc);
+    }
+
+    #[test]
+    fn link_model_shapes() {
+        let z = LinkModel::zero();
+        assert!(z.is_zero());
+        assert_eq!(z.transfer_ns(1 << 20), 0.0);
+        let c = CostModel::default();
+        let l = LinkModel::from_cost(&c);
+        assert!(!l.is_zero());
+        assert_eq!(l.transfer_ns(0), c.link_latency_ns);
+        assert_eq!(
+            l.transfer_ns(1024),
+            c.link_latency_ns + 1024.0 * c.link_bw_ns_per_byte
+        );
+    }
+
+    /// A deterministic sequential op sequence produces bit-identical
+    /// counters on both transports (zero link): the seam moves bytes
+    /// differently, never counts differently.
+    #[test]
+    fn zero_latency_channel_counters_match_inproc() {
+        let topo = || Topology::new(2, Placement::Cyclic, 0, 8);
+        let run = |kind: TransportKind| {
+            let s = ItemSpace::with_transport(8, topo(), kind, LinkModel::zero());
+            s.put(ItemKey::new(0, &[0]), block(4), 2); // node 0
+            s.put(ItemKey::new(0, &[1]), block(4), 1); // node 1
+            s.put(ItemKey::new(0, &[2]), block(8), 0); // transient, node 0
+            assert!(s.try_get_from(&ItemKey::new(0, &[0]), 1).is_some()); // remote
+            assert!(s.try_get_from(&ItemKey::new(0, &[0]), 0).is_some()); // local, frees
+            assert!(s.try_get_from(&ItemKey::new(0, &[1]), 1).is_some()); // local, frees
+            assert!(s.try_get(&ItemKey::new(9, &[9])).is_none()); // miss
+            (s.stats.snapshot(), s.node_peaks(), s.node_remote_ops())
+        };
+        let a = run(TransportKind::InProc);
+        let b = run(TransportKind::Channel);
+        assert_eq!(a, b);
+        let (snap, peaks, (rg, rb)) = a;
+        assert_eq!(snap.puts, 3);
+        assert_eq!(snap.gets, 3);
+        assert_eq!(snap.frees, 3);
+        assert_eq!(snap.remote_gets, 1);
+        assert_eq!(snap.remote_bytes, 16);
+        assert_eq!(snap.live_bytes, 0);
+        assert_eq!(peaks.len(), 2);
+        assert_eq!(rg, vec![0, 1], "node 1 issued the one remote get");
+        assert_eq!(rb, vec![0, 16]);
+    }
+
+    #[test]
+    fn channel_injects_link_latency_on_remote_gets_only() {
+        let topo = Topology::new(2, Placement::Cyclic, 0, 8);
+        // 2 ms latency: far above scheduler noise, robust to slow CI
+        let link = LinkModel { latency_ns: 2_000_000.0, bw_ns_per_byte: 0.0 };
+        let s = ItemSpace::with_transport(8, topo, TransportKind::Channel, link);
+        s.put(ItemKey::new(0, &[0]), block(4), 1); // node 0
+        s.put(ItemKey::new(0, &[1]), block(4), 1); // node 1
+        // a local get never reaches inject() by construction (from ==
+        // owner), so only the remote side needs a timing assertion — the
+        // spin gives it a guaranteed floor that survives CI preemption
+        assert!(s.try_get_from(&ItemKey::new(0, &[1]), 1).is_some()); // local
+        let t0 = std::time::Instant::now();
+        assert!(s.try_get_from(&ItemKey::new(0, &[0]), 1).is_some()); // remote
+        let remote = t0.elapsed();
+        assert!(
+            remote >= std::time::Duration::from_millis(2),
+            "remote get must pay the injected latency, took {remote:?}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "service thread")]
+    fn channel_double_put_kills_the_shard_loudly() {
+        let s = ItemSpace::with_transport(
+            8,
+            Topology::single(),
+            TransportKind::Channel,
+            LinkModel::zero(),
+        );
+        s.put(ItemKey::new(0, &[0]), block(1), 1);
+        // the service thread asserts single-assignment and dies; the
+        // caller's ack recv fails loudly instead of hanging
+        s.put(ItemKey::new(0, &[0]), block(1), 1);
+    }
+
+    #[test]
+    fn channel_get_after_reclamation_misses_like_inproc() {
+        let s = ItemSpace::with_transport(
+            8,
+            Topology::single(),
+            TransportKind::Channel,
+            LinkModel::zero(),
+        );
+        let k = ItemKey::new(0, &[3]);
+        s.put(k.clone(), block(2), 1);
+        assert!(s.try_get(&k).is_some());
+        assert!(s.try_get(&k).is_none(), "last get reclaims");
+        assert_eq!(s.stats.snapshot().gets, 1, "misses are not counted gets");
+    }
+}

@@ -1,11 +1,13 @@
 //! The single launch surface: `ExecConfig` + `rt::launch`.
 //!
 //! Covers the api-redesign contract: builder defaults equal the old
-//! implicit defaults, CLI flags round-trip into the config, single-node
-//! `StealPolicy::Never` through `launch` is byte-identical to the
-//! deprecated `simulate_sharded` shim, oracle identity holds for every
-//! {runtime, plane, placement, steal} combination through `launch`, and
-//! the work-stealing knob reclaims idle time on a skewed triangular
+//! implicit defaults, CLI flags round-trip into the config, a single-node
+//! launch is byte-identical however its topology is spelled (the
+//! deprecated shims are gone — `launch` is the only surface), oracle
+//! identity holds for every {runtime, plane, placement, steal}
+//! combination through `launch`, illegal knob combinations
+//! (`--transport channel` on the shared plane) are rejected up front,
+//! and the work-stealing knob reclaims idle time on a skewed triangular
 //! workload (the ROADMAP inter-node EDT migration item).
 
 use std::sync::Arc;
@@ -13,7 +15,7 @@ use tale3::exec::ArrayStore;
 use tale3::ral::DepMode;
 use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
 use tale3::sim::SimReport;
-use tale3::space::{DataPlane, Placement, Topology};
+use tale3::space::{DataPlane, Placement, Topology, TransportKind};
 use tale3::workloads::{by_name, Instance, Size};
 
 fn oracle_arrays(inst: &Instance) -> Arc<ArrayStore> {
@@ -36,6 +38,7 @@ fn builder_defaults_equal_old_implicit_defaults() {
     assert_eq!(cfg.placement, Placement::default());
     assert_eq!(cfg.threads, 2);
     assert_eq!(cfg.steal, StealPolicy::Never);
+    assert_eq!(cfg.transport, TransportKind::InProc);
     assert!(cfg.numa_pinned);
     // the resolved single-node topology is the degenerate one the old
     // entry points used
@@ -51,6 +54,7 @@ fn builder_defaults_equal_old_implicit_defaults() {
     assert_eq!(echo.threads, 2);
     assert_eq!(echo.nodes, 1);
     assert_eq!(echo.steal, "never");
+    assert_eq!(echo.transport, "inproc");
 }
 
 /// CLI flags → config round-trip: the exact flag set the `tale3` binary
@@ -64,6 +68,7 @@ fn cli_flags_round_trip_into_config() {
         ("nodes", Some("4")),
         ("placement", Some("block")),
         ("steal", Some("remote-ready")),
+        ("transport", Some("channel")),
         ("threads", Some("8,16")), // CLI list: first entry seeds the config
         ("runtime", Some("swarm")),
         ("no-verify", None), // not a config knob
@@ -77,12 +82,13 @@ fn cli_flags_round_trip_into_config() {
     }
     assert_eq!(
         consumed,
-        vec!["plane", "nodes", "placement", "steal", "threads", "runtime"]
+        vec!["plane", "nodes", "placement", "steal", "transport", "threads", "runtime"]
     );
     assert_eq!(cfg.plane, DataPlane::Space);
     assert_eq!(cfg.nodes, 4);
     assert_eq!(cfg.placement, Placement::Block);
     assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+    assert_eq!(cfg.transport, TransportKind::Channel);
     assert_eq!(cfg.threads, 8);
     assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::Swarm));
     // the echo names exactly what was asked for
@@ -90,8 +96,8 @@ fn cli_flags_round_trip_into_config() {
     let plan = inst.plan().unwrap();
     let echo = cfg.echo_for(&cfg.resolved_topology(&plan));
     assert_eq!(
-        (echo.runtime, echo.plane, echo.nodes, echo.placement, echo.steal),
-        ("swarm", "space", 4, "block", "remote-ready")
+        (echo.runtime, echo.plane, echo.nodes, echo.placement, echo.steal, echo.transport),
+        ("swarm", "space", 4, "block", "remote-ready", "channel")
     );
     // `--runtime all` leaves the runtime for the caller's loop
     assert!(cfg.apply_cli_flag("runtime", Some("all")).unwrap());
@@ -113,6 +119,8 @@ fn invalid_config_values_are_hard_errors() {
         ("trace", "on"),
         ("plane", "shred"),
         ("placement", "diagonal"),
+        ("transport", "tcp"),
+        ("transport", "mpi"),
         ("nodes", "many"),
         ("threads", "fast"),
         ("runtime", "tbb"),
@@ -127,7 +135,9 @@ fn invalid_config_values_are_hard_errors() {
         );
     }
     // a config flag with no value at all is also an error
-    for name in ["steal", "trace", "plane", "placement", "nodes", "threads", "runtime"] {
+    for name in [
+        "steal", "trace", "plane", "placement", "transport", "nodes", "threads", "runtime",
+    ] {
         assert!(cfg.apply_cli_flag(name, None).is_err(), "--{name} needs a value");
     }
     // nothing leaked into the config from the rejected flags
@@ -135,14 +145,17 @@ fn invalid_config_values_are_hard_errors() {
     assert_eq!(cfg.trace, TraceMode::Off);
     assert_eq!(cfg.plane, DataPlane::Shared);
     assert_eq!(cfg.placement, Placement::default());
+    assert_eq!(cfg.transport, TransportKind::InProc);
     assert_eq!(cfg.nodes, 1);
     assert_eq!(cfg.threads, 2);
     assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::CncDep));
     // and the valid spellings still work
     assert!(cfg.apply_cli_flag("steal", Some("remote-ready")).unwrap());
     assert!(cfg.apply_cli_flag("trace", Some("schedule")).unwrap());
+    assert!(cfg.apply_cli_flag("transport", Some("channel")).unwrap());
     assert_eq!(cfg.steal, StealPolicy::RemoteReady);
     assert_eq!(cfg.trace, TraceMode::Schedule);
+    assert_eq!(cfg.transport, TransportKind::Channel);
 }
 
 fn launch_sim(plan: &Arc<tale3::Plan>, flops: f64, cfg: &ExecConfig) -> SimReport {
@@ -152,45 +165,78 @@ fn launch_sim(plan: &Arc<tale3::Plan>, flops: f64, cfg: &ExecConfig) -> SimRepor
         .expect("DES backend must carry the SimReport")
 }
 
-/// On a single node, `launch` with `StealPolicy::Never` is byte-identical
-/// to the deprecated PR 2 `simulate_sharded` entry point — the redesign
-/// moved the surface, not the semantics.
+/// The PR 3 deprecated shims (`run_with_plane`, `run_with_plane_on`,
+/// `Engine::new_with_plane`, `simulate_with_plane`, `simulate_sharded`)
+/// are gone; `launch` is the only surface, and a single-node launch is
+/// byte-identical however the degenerate topology is spelled — defaulted,
+/// derived from `nodes(1)`, or pinned explicitly under any placement
+/// policy (one node leaves no placement choice).
 #[test]
-#[allow(deprecated)]
-fn single_node_never_is_byte_identical_to_pr2_simulate_sharded() {
+fn single_node_launch_is_byte_identical_across_topology_spellings() {
     for name in ["JAC-2D-5P", "MATMULT", "LUD"] {
         let inst = (by_name(name).unwrap().build)(Size::Tiny);
         let plan = inst.plan().unwrap();
         for plane in [DataPlane::Shared, DataPlane::Space] {
-            let shim = tale3::sim::simulate_sharded(
-                &plan,
-                DepMode::CncDep,
-                plane,
-                &Topology::single(),
-                8,
-                &tale3::sim::Machine::default(),
-                &tale3::sim::CostModel::default(),
-                true,
-                inst.total_flops,
-            );
-            let cfg = ExecConfig::new()
+            let base_cfg = ExecConfig::new()
                 .backend(BackendKind::Des)
                 .plane(plane)
                 .threads(8)
                 .steal(StealPolicy::Never);
-            let r = launch_sim(&plan, inst.total_flops, &cfg);
-            assert_eq!(r.seconds.to_bits(), shim.seconds.to_bits(), "{name} {plane:?}");
-            assert_eq!(r.tasks, shim.tasks, "{name} {plane:?}");
-            assert_eq!(r.steals, shim.steals, "{name} {plane:?}");
-            assert_eq!(r.failed_gets, shim.failed_gets, "{name} {plane:?}");
-            assert_eq!(r.space_puts, shim.space_puts, "{name} {plane:?}");
-            assert_eq!(r.space_gets, shim.space_gets, "{name} {plane:?}");
-            assert_eq!(r.space_frees, shim.space_frees, "{name} {plane:?}");
-            assert_eq!(r.space_peak_bytes, shim.space_peak_bytes, "{name} {plane:?}");
-            assert_eq!(r.node_peak_bytes, shim.node_peak_bytes, "{name} {plane:?}");
-            assert_eq!(r.stolen_edts, 0, "{name} {plane:?}");
+            let base = launch_sim(&plan, inst.total_flops, &base_cfg);
+            assert_eq!(base.stolen_edts, 0, "{name} {plane:?}");
+            let mut variants = vec![
+                base_cfg.clone().nodes(1),
+                base_cfg.clone().topology(Topology::single()),
+            ];
+            for p in Placement::all() {
+                variants.push(base_cfg.clone().topology(Topology::for_plan(&plan, 1, p)));
+            }
+            for cfg in variants {
+                let r = launch_sim(&plan, inst.total_flops, &cfg);
+                assert_eq!(r.seconds.to_bits(), base.seconds.to_bits(), "{name} {plane:?}");
+                assert_eq!(r.tasks, base.tasks, "{name} {plane:?}");
+                assert_eq!(r.steals, base.steals, "{name} {plane:?}");
+                assert_eq!(r.failed_gets, base.failed_gets, "{name} {plane:?}");
+                assert_eq!(r.space_puts, base.space_puts, "{name} {plane:?}");
+                assert_eq!(r.space_gets, base.space_gets, "{name} {plane:?}");
+                assert_eq!(r.space_frees, base.space_frees, "{name} {plane:?}");
+                assert_eq!(r.space_peak_bytes, base.space_peak_bytes, "{name} {plane:?}");
+                assert_eq!(r.node_peak_bytes, base.node_peak_bytes, "{name} {plane:?}");
+            }
         }
     }
+}
+
+/// The ISSUE 5 bugfix satellite: `transport = channel` with
+/// `plane = shared` is a contradiction (no shards to put behind
+/// channels) and must hard-error on *every* backend, not silently run
+/// the in-process store.
+#[test]
+fn channel_transport_on_shared_plane_is_rejected_by_every_backend() {
+    let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+    let plan = inst.plan().unwrap();
+    let bad = ExecConfig::new().transport(TransportKind::Channel); // plane defaults to shared
+    assert!(bad.validate().is_err());
+    // threads backend
+    let arrays = inst.arrays();
+    let leaf = inst.leaf_spec(&arrays);
+    let err = rt::launch(&plan, &leaf, &bad).unwrap_err().to_string();
+    assert!(err.contains("--plane space"), "{err}");
+    // DES backend
+    let err = rt::launch(
+        &plan,
+        &LeafSpec::cost_only(inst.total_flops),
+        &bad.clone().backend(BackendKind::Des),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("--plane space"), "{err}");
+    // and the legal spelling goes through on the threads backend
+    let ok = bad.clone().plane(DataPlane::Space);
+    let arrays = inst.arrays();
+    let leaf = inst.leaf_spec(&arrays);
+    let r = rt::launch(&plan, &leaf, &ok).expect("channel over space plane runs");
+    assert_eq!(r.config.transport, "channel");
 }
 
 /// Oracle identity through `rt::launch` for every {runtime, plane,

@@ -2,8 +2,7 @@
 //! every policy, single-node parity (sharding is a pure refinement), and
 //! the distributed-memory accounting story (remote traffic, per-node
 //! peaks, hash-beats-block on frontier concentration). All launches go
-//! through `rt::launch(ExecConfig)` — the deprecated shims are exercised
-//! only by the explicit parity test.
+//! through `rt::launch(ExecConfig)` — the deprecated shims are gone.
 
 use std::sync::Arc;
 use tale3::exec::ArrayStore;
@@ -107,41 +106,19 @@ fn all_workloads_oracle_identical_under_four_nodes() {
     }
 }
 
-/// `--nodes 1` is a pure refinement: the deprecated sharded shim reports
-/// byte-for-byte the same sim time and metrics as the deprecated
-/// single-node plane shim, under every placement policy (one node leaves
-/// no placement choice) — and `rt::launch` matches both (see also
-/// `tests/exec_config.rs` for the launch-vs-shim identity).
+/// `--nodes 1` is a pure refinement: a 1-node topology under every
+/// placement policy reports byte-for-byte the same sim time and metrics
+/// as the defaulted single-node launch (one node leaves no placement
+/// choice).
 #[test]
-#[allow(deprecated)]
 fn single_node_sharding_is_byte_identical_to_space_plane() {
-    use tale3::sim::{simulate_sharded, simulate_with_plane, CostModel, Machine};
     for name in ["JAC-2D-5P", "MATMULT"] {
         let inst = (by_name(name).unwrap().build)(Size::Tiny);
         let plan = inst.plan().unwrap();
-        let base = simulate_with_plane(
-            &plan,
-            DepMode::CncDep,
-            DataPlane::Space,
-            8,
-            &Machine::default(),
-            &CostModel::default(),
-            true,
-            inst.total_flops,
-        );
+        let base = sim_sharded(&inst, &plan, &Topology::single());
         for p in Placement::all() {
             let topo = Topology::for_plan(&plan, 1, p);
-            let r = simulate_sharded(
-                &plan,
-                DepMode::CncDep,
-                DataPlane::Space,
-                &topo,
-                8,
-                &Machine::default(),
-                &CostModel::default(),
-                true,
-                inst.total_flops,
-            );
+            let r = sim_sharded(&inst, &plan, &topo);
             assert_eq!(r.seconds.to_bits(), base.seconds.to_bits(), "{name} {p:?}");
             assert_eq!(r.tasks, base.tasks, "{name} {p:?}");
             assert_eq!(r.steals, base.steals, "{name} {p:?}");
@@ -151,9 +128,6 @@ fn single_node_sharding_is_byte_identical_to_space_plane() {
             assert_eq!(r.space_peak_bytes, base.space_peak_bytes, "{name} {p:?}");
             assert_eq!(r.space_remote_gets, 0, "{name} {p:?}");
             assert_eq!(r.node_peak_bytes, vec![r.space_peak_bytes], "{name} {p:?}");
-            // launch agrees with the shims bit for bit
-            let via_launch = sim_sharded(&inst, &plan, &topo);
-            assert_eq!(via_launch.seconds.to_bits(), base.seconds.to_bits(), "{name} {p:?}");
         }
     }
 }
@@ -233,10 +207,10 @@ fn real_runtime_counts_remote_gets() {
 
 /// The bench JSON report is deterministic — two renders are
 /// byte-identical — and contains virtual-time fields only (no wall-clock
-/// timestamps, hostnames, or paths). Schema v3 carries the resolved
-/// config echo, the steal counters, and the per-workload
-/// `replay_verified` flag (the sharded_steal cell's trace must
-/// verbatim-replay to its own SimReport).
+/// timestamps, hostnames, or paths). Schema v4 carries the resolved
+/// config echo (now including the shard transport), the steal counters,
+/// and the per-workload `replay_verified` flag (the sharded_steal cell's
+/// trace must verbatim-replay to its own SimReport).
 #[test]
 fn bench_report_json_is_deterministic_and_virtual_only() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
@@ -247,8 +221,9 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     let a = perf_report_json(&cfg);
     let b = perf_report_json(&cfg);
     assert_eq!(a, b, "two consecutive quick runs must produce identical JSON");
-    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v3\""));
+    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v4\""));
     assert!(a.contains("\"config\":{\"backend\":\"des\""));
+    assert!(a.contains("\"transport\":\"inproc\""));
     assert!(a.contains("\"JAC-2D-5P\""));
     assert!(a.contains("\"remote_gets\""));
     assert!(a.contains("\"node_peak_bytes\""));
@@ -272,13 +247,13 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     }
 }
 
-/// The v3 key set matches the committed golden file (the same list CI's
+/// The v4 key set matches the committed golden file (the same list CI's
 /// golden-file job asserts against the built artifact), so schema drift
 /// is a reviewed change, not an accident.
 #[test]
-fn bench_report_v3_keys_match_golden_file() {
+fn bench_report_v4_keys_match_golden_file() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
-    let golden = include_str!("../ci/bench-report-v3.keys");
+    let golden = include_str!("../ci/bench-report-v4.keys");
     let json = perf_report_json(&ReportConfig {
         quick: true,
         ..Default::default()
@@ -302,7 +277,7 @@ fn bench_report_v3_keys_match_golden_file() {
         if after.starts_with(':') {
             assert!(
                 golden_set.contains(token),
-                "report key `{token}` is not in ci/bench-report-v3.keys — \
+                "report key `{token}` is not in ci/bench-report-v4.keys — \
                  update the golden file deliberately"
             );
         }
