@@ -9,7 +9,7 @@
 //! (`tests/placement.rs` asserts this), so CI artifacts diff cleanly
 //! run-to-run and PR-to-PR.
 //!
-//! **Schema `tale3-bench-report/v4`:** the document opens with a `config`
+//! **Schema `tale3-bench-report/v5`:** the document opens with a `config`
 //! object — the fully-resolved [`ExecConfig`] echo every cell ran under —
 //! and each workload carries three cells side by side: the single-node
 //! space-plane baseline (`single`), the sharded topology under strict
@@ -24,14 +24,20 @@
 //! echo — the shard-transport knob (`--transport inproc|channel`) the
 //! launch descriptor carried; the cells themselves are DES runs, which
 //! charge their own link model, so the echo records intent, not a
-//! different simulation. CI's golden-file job asserts the v4 key set is
-//! stable across runs.
+//! different simulation. v5 adds the `irregular` section: the dynamic
+//! tuple-space workload family (`bag`/`pipe3`/`refine`,
+//! [`crate::workloads::irregular`]) simulated through the same DES, each
+//! carrying its sequential-oracle counters and a `leak_free` flag that
+//! asserts both cells matched the oracle exactly (puts == frees: every
+//! pattern-consumed item was reclaimed). CI's golden-file job asserts
+//! the v5 key set is stable across runs.
 
 use crate::ral::DepMode;
-use crate::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
+use crate::rt::{self, BackendKind, DynWorkload, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
 use crate::sim::{SimReport, TraceMode};
 use crate::space::{DataPlane, Placement, TransportKind};
-use crate::workloads::{registry, Size};
+use crate::workloads::{irregular, registry, Size};
+use std::sync::Arc;
 
 /// What the report measures. `quick` shrinks every workload to `Tiny`
 /// (the CI smoke configuration); the full report runs at `Small`.
@@ -199,10 +205,52 @@ pub fn perf_report_json(cfg: &ReportConfig) -> String {
             replay_verified,
         ));
     }
+    // the dynamic tuple-space family: same DES, but the schedule is
+    // discovered at run time (pattern takes), so every cell is read
+    // against the sequential oracle instead of a static plan enumeration
+    let mut irregular_cells = Vec::new();
+    for name in irregular::names() {
+        let wk = irregular::by_name(name).expect("registered irregular workload");
+        let o = wk.oracle();
+        let plan = irregular::worker_plan(cfg.threads).expect("irregular worker plan");
+        let dw: Arc<dyn DynWorkload> = wk.clone();
+        let leaf = LeafSpec::dynamic(dw, wk.total_flops());
+        let dyn_cell = |ec: &ExecConfig| -> SimReport {
+            rt::launch(&plan, &leaf, ec)
+                .expect("DES launch")
+                .sim
+                .expect("DES backend carries a SimReport")
+        };
+        let single = dyn_cell(&cfg.exec_config(1, StealPolicy::Never));
+        let sharded = dyn_cell(&cfg.exec_config(cfg.nodes, StealPolicy::Never));
+        // leak_free: both cells hit the oracle exactly — every put was
+        // pattern-consumed and reclaimed (`+ 1` on tasks is the seed EDT)
+        let leak_free = [&single, &sharded].iter().all(|r| {
+            r.space_puts == o.puts
+                && r.space_gets == o.gets
+                && r.space_frees == o.frees
+                && r.tasks == o.tasks + 1
+        });
+        irregular_cells.push(format!(
+            "{{\"name\":{},\"oracle_tasks\":{},\"oracle_puts\":{},\
+             \"oracle_gets\":{},\"oracle_frees\":{},\"leak_free\":{},\
+             \"single\":{},\"sharded\":{}}}",
+            jstr(name),
+            o.tasks,
+            o.puts,
+            o.gets,
+            o.frees,
+            leak_free,
+            cell(&single),
+            cell(&sharded),
+        ));
+    }
     format!(
-        "{{\"schema\":\"tale3-bench-report/v4\",\"config\":{},\"workloads\":[{}]}}\n",
+        "{{\"schema\":\"tale3-bench-report/v5\",\"config\":{},\"workloads\":[{}],\
+         \"irregular\":[{}]}}\n",
         config_obj(cfg),
-        workloads.join(",")
+        workloads.join(","),
+        irregular_cells.join(",")
     )
 }
 

@@ -164,6 +164,9 @@ fn main() -> anyhow::Result<()> {
         }
         "run" => {
             let name = args.positional.get(1).ok_or_else(|| anyhow::anyhow!("run <workload>"))?;
+            if let Some(wk) = tale3::workloads::irregular::by_name(name) {
+                return run_irregular(&args, &wk, BackendKind::Threads);
+            }
             let inst = (by_name(name).ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?.build)(args.size());
             let opts = args.map_opts(&inst.map_opts);
             let plan = inst.plan_with(&opts)?;
@@ -248,6 +251,9 @@ fn main() -> anyhow::Result<()> {
         }
         "sim" => {
             let name = args.positional.get(1).ok_or_else(|| anyhow::anyhow!("sim <workload>"))?;
+            if let Some(wk) = tale3::workloads::irregular::by_name(name) {
+                return run_irregular(&args, &wk, BackendKind::Des);
+            }
             let inst = (by_name(name).ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?.build)(args.size());
             let opts = args.map_opts(&inst.map_opts);
             let plan = inst.plan_with(&opts)?;
@@ -332,16 +338,24 @@ fn main() -> anyhow::Result<()> {
                         .positional
                         .get(2)
                         .ok_or_else(|| anyhow::anyhow!("trace capture <workload> [--out F]"))?;
-                    let inst = (by_name(name)
-                        .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?
-                        .build)(args.size());
-                    let opts = args.map_opts(&inst.map_opts);
-                    let plan = inst.plan_with(&opts)?;
                     let mut cfg = args.exec_config(BackendKind::Des)?;
                     if cfg.trace == TraceMode::Off {
                         cfg.trace = TraceMode::Full; // capture means capture
                     }
-                    let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg)?;
+                    let r = if let Some(wk) = tale3::workloads::irregular::by_name(name) {
+                        // dynamic family: v2 WaitMatch/Wake events ride along
+                        cfg.plane = DataPlane::Space;
+                        let plan = tale3::workloads::irregular::worker_plan(cfg.threads)?;
+                        let dw: std::sync::Arc<dyn tale3::rt::DynWorkload> = wk.clone();
+                        rt::launch(&plan, &LeafSpec::dynamic(dw, wk.total_flops()), &cfg)?
+                    } else {
+                        let inst = (by_name(name)
+                            .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?
+                            .build)(args.size());
+                        let opts = args.map_opts(&inst.map_opts);
+                        let plan = inst.plan_with(&opts)?;
+                        rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg)?
+                    };
                     let trace = r
                         .trace
                         .ok_or_else(|| anyhow::anyhow!("DES launch returned no trace"))?;
@@ -483,15 +497,89 @@ fn main() -> anyhow::Result<()> {
             println!("       [--trace off|schedule|full]    (DES: record an execution trace; the");
             println!("                    capture rides in RunReport::trace / `tale3 trace capture`)");
             println!("       trace <capture|replay|recost|summarize>   (postmortem scheduling studies:");
-            println!("                    capture a tale3-trace/v1 JSONL, audit-replay it, re-price");
+            println!("                    capture a tale3-trace/v2 JSONL, audit-replay it, re-price");
             println!("                    link costs without re-simulating, or view per-node timelines)");
             println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P] [--steal S]");
             println!("                    [--transport T]  (deterministic perf JSON: virtual time");
-            println!("                    only, schema v4)");
+            println!("                    only, schema v5)");
+            println!();
+            println!("irregular workloads (dynamic tuple space, run/sim/trace capture):");
+            println!("       bag | pipe3 | refine   (task bag, 3-stage pipeline, refinement");
+            println!("                    wavefront — pattern-matched blocking gets, no static plan)");
             println!();
             println!("run and sim share one launch surface: every flag combination is an");
             println!("rt::ExecConfig handed to rt::launch; the subcommand picks the backend");
             println!("(threads = real execution, sim = deterministic testbed DES).");
+        }
+    }
+    Ok(())
+}
+
+/// `run`/`sim` for the irregular family: the degenerate worker plan, the
+/// tuple-space plane forced (there is no shared-buffer variant of dynamic
+/// coordination), and every row checked against the sequential oracle's
+/// schedule-independent put/get/free totals.
+fn run_irregular(
+    args: &Args,
+    wk: &std::sync::Arc<tale3::workloads::irregular::Irregular>,
+    backend: BackendKind,
+) -> anyhow::Result<()> {
+    use tale3::workloads::irregular;
+    let oracle = wk.oracle();
+    let mut base = args.exec_config(backend)?;
+    base.plane = DataPlane::Space;
+    let threads: Vec<usize> = if backend == BackendKind::Des {
+        args.flag("threads")
+            .map(|t| t.split(',').filter_map(|x| x.parse().ok()).collect())
+            .unwrap_or_else(|| vec![1, 2, 4, 8])
+    } else {
+        vec![base.threads.max(1)]
+    };
+    println!(
+        "irregular `{}` (dynamic tuple space): oracle {} puts / {} gets / {} frees / {} takes",
+        wk.logic_name(),
+        oracle.puts,
+        oracle.gets,
+        oracle.frees,
+        oracle.tasks
+    );
+    println!(
+        "{:<10} {:>7} {:>10} {:>9} {:>8} {:>8} {:>8} {:>8} {:>9} {:>7}",
+        "runtime", "threads", "seconds", "Gflop/s", "tasks", "s.puts", "s.gets", "s.rget",
+        "s.peak", "oracle"
+    );
+    for kind in args.runtimes() {
+        if kind == RuntimeKind::Omp {
+            println!(
+                "{:<10} (skipped: the omp comparator has no tuple-space waiters)",
+                kind.name()
+            );
+            continue;
+        }
+        for &t in &threads {
+            let plan = irregular::worker_plan(t)?;
+            let cfg = base.clone().runtime(kind).threads(t);
+            let topo = cfg.resolved_topology(&plan);
+            let cfg = cfg.topology(topo);
+            let dw: std::sync::Arc<dyn tale3::rt::DynWorkload> = wk.clone();
+            let r = rt::launch(&plan, &LeafSpec::dynamic(dw, wk.total_flops()), &cfg)?;
+            let m = &r.metrics;
+            let ok = m.space_puts == oracle.puts
+                && m.space_gets == oracle.gets
+                && m.space_frees == oracle.frees;
+            println!(
+                "{:<10} {:>7} {:>10.4} {:>9.3} {:>8} {:>8} {:>8} {:>8} {:>9} {:>7}",
+                r.runtime,
+                t,
+                r.seconds,
+                r.gflops,
+                m.total_tasks(),
+                m.space_puts,
+                m.space_gets,
+                m.space_remote_gets,
+                fmt_bytes(m.space_peak_bytes),
+                if ok { "ok" } else { "FAIL" }
+            );
         }
     }
     Ok(())

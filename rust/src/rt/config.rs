@@ -22,8 +22,8 @@ use crate::exec::plan::Plan;
 use crate::exec::{ArrayStore, KernelSet};
 use crate::ir::Program;
 use crate::ral::DepMode;
-use crate::sim::{CostModel, Machine, TraceMode};
-use crate::space::{DataPlane, Placement, Topology, TransportKind};
+use crate::sim::{CostModel, Machine, SimReport, TraceEvent, TraceMode};
+use crate::space::{DataPlane, DynSpace, Placement, Topology, TransportKind};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -405,6 +405,45 @@ pub enum LeafBody<'a> {
     /// No executable body: cost-model-only backends (the DES). The
     /// threads backend rejects it.
     CostOnly,
+    /// An irregular workload over the dynamic tuple space
+    /// ([`crate::space::DynSpace`]): the graph is discovered at run time
+    /// through pattern gets, so the plan only sizes the worker set. Both
+    /// backends accept it — the threads backend builds and runs the real
+    /// [`DynExec`], the DES calls [`DynWorkload::simulate`].
+    Dynamic(Arc<dyn DynWorkload>),
+}
+
+/// An irregular (dynamically coordinated) workload: the task graph is not
+/// known at plan time, so instead of kernels over an affine plan the
+/// workload supplies (a) a real executor over a [`DynSpace`] for the
+/// threads backend and (b) a deterministic virtual-time simulation for
+/// the DES backend. Both sides share the same pure decision logic
+/// (`workloads::irregular`), so counters agree exactly.
+pub trait DynWorkload: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Build the real execution: a leaf executor (one instance per
+    /// worker) plus the dynamic space it coordinates through.
+    fn build(&self, cfg: &ExecConfig, topo: &Topology) -> Result<DynExec>;
+
+    /// Run the deterministic virtual-time twin on the DES backend.
+    fn simulate(&self, cfg: &ExecConfig, topo: &Topology) -> Result<DynSimOutcome>;
+}
+
+/// The threads-backend realization of a [`DynWorkload`].
+pub struct DynExec {
+    /// One leaf instance per worker coordinate (the engine drives it
+    /// through the standard [`LeafExec`] surface).
+    pub leaf: Arc<dyn LeafExec>,
+    /// The coordination space, kept for accounting and deadlock checks.
+    pub space: Arc<DynSpace>,
+}
+
+/// The DES-backend realization: a finished simulation plus its captured
+/// events (empty unless tracing was requested).
+pub struct DynSimOutcome {
+    pub report: SimReport,
+    pub events: Vec<TraceEvent>,
 }
 
 impl<'a> LeafSpec<'a> {
@@ -436,6 +475,14 @@ impl<'a> LeafSpec<'a> {
         LeafSpec {
             total_flops,
             body: LeafBody::CostOnly,
+        }
+    }
+
+    /// An irregular workload over the dynamic tuple space.
+    pub fn dynamic(workload: Arc<dyn DynWorkload>, total_flops: f64) -> Self {
+        LeafSpec {
+            total_flops,
+            body: LeafBody::Dynamic(workload),
         }
     }
 }

@@ -44,7 +44,10 @@ pub mod table;
 
 pub use crate::sim::trace::{Trace, TraceMode};
 pub use crate::space::{DataPlane, TransportKind};
-pub use config::{Backend, BackendKind, ConfigEcho, ExecConfig, LeafBody, LeafSpec, StealPolicy};
+pub use config::{
+    Backend, BackendKind, ConfigEcho, DynExec, DynSimOutcome, DynWorkload, ExecConfig, LeafBody,
+    LeafSpec, StealPolicy,
+};
 pub use engine::{Engine, EngineBackend, LeafExec, NoopLeaf};
 pub use ompsim::OmpBackend;
 pub use pool::{Pool, WorkerCtx};
@@ -54,7 +57,7 @@ use crate::exec::plan::Plan;
 use crate::exec::LeafRunner;
 use crate::ral::{DepMode, MetricsSnapshot};
 use crate::sim::SimReport;
-use crate::space::{ItemSpace, LinkModel, SpaceLeafRunner, Topology};
+use crate::space::{LinkModel, SpaceAccounting, SpaceLeafRunner, Topology};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -163,7 +166,7 @@ fn run_measured(
     total_flops: f64,
     plane: DataPlane,
     topo: &Topology,
-    space: Option<&ItemSpace>,
+    space: Option<&dyn SpaceAccounting>,
     echo: ConfigEcho,
 ) -> Result<RunReport> {
     let before = pool.metrics().snapshot();
@@ -175,7 +178,7 @@ fn run_measured(
         RuntimeKind::Omp => ompsim::run_omp(plan, leaf, pool),
     };
     if let Some(sp) = space {
-        sp.merge_into(pool.metrics());
+        sp.merge_metrics(pool.metrics());
     }
     let after = pool.metrics().snapshot();
     let mut metrics = delta(before, after);
@@ -184,7 +187,7 @@ fn run_measured(
             // live/peak and the per-node remote-op vectors are gauges of
             // *this* run's space, not pool-lifetime counters — report
             // them absolute from the run's own ledger
-            let s = sp.stats.snapshot();
+            let s = sp.space_snapshot();
             metrics.space_live_bytes = s.live_bytes;
             metrics.space_peak_bytes = s.peak_bytes;
             let (rg, rb) = sp.node_remote_ops();
@@ -233,6 +236,31 @@ pub(crate) fn execute_on_pool(
     let topo = cfg.resolved_topology(plan);
     let mut echo = cfg.echo_for(&topo);
     echo.threads = pool.n_workers;
+    if let LeafBody::Dynamic(w) = &leaf.body {
+        anyhow::ensure!(
+            cfg.plane == DataPlane::Space,
+            "dynamic workloads coordinate through the tuple space — launch \
+             with plane = space (`--plane space`)"
+        );
+        let dx = w.build(cfg, &topo)?;
+        let report = run_measured(
+            cfg.runtime,
+            plan,
+            &dx.leaf,
+            pool,
+            leaf.total_flops,
+            cfg.plane,
+            &topo,
+            Some(dx.space.as_ref()),
+            echo,
+        )?;
+        // a poisoned space means the run ended by deadlock detection, not
+        // by completion: quiesce (the waiters all returned), then fail loud
+        if let Some(msg) = dx.space.poison_msg() {
+            anyhow::bail!("dynamic workload `{}` aborted: {msg}", w.name());
+        }
+        return Ok(report);
+    }
     match cfg.plane {
         DataPlane::Shared => {
             let exec: Arc<dyn LeafExec> = match &leaf.body {
@@ -247,6 +275,7 @@ pub(crate) fn execute_on_pool(
                     "the threads backend needs an executable leaf \
                      (LeafSpec::exec or LeafSpec::kernels), not LeafSpec::cost_only"
                 ),
+                LeafBody::Dynamic(_) => unreachable!("dynamic leaves are handled above"),
             };
             run_measured(
                 cfg.runtime,
@@ -284,7 +313,7 @@ pub(crate) fn execute_on_pool(
                 leaf.total_flops,
                 cfg.plane,
                 &topo,
-                Some(&space),
+                Some(space.as_ref()),
                 echo,
             )
         }

@@ -1230,6 +1230,61 @@ impl crate::rt::Backend for DesBackend {
         use super::trace::{CostAtoms, Trace, TraceConfig};
         let topo = cfg.resolved_topology(plan);
         let echo = cfg.echo_for(&topo);
+        // Dynamic (pattern-matched) workloads have no static Plan schedule
+        // to simulate — the workload supplies its own deterministic
+        // simulation, and we package the outcome exactly like the Edt arm.
+        if let crate::rt::LeafBody::Dynamic(w) = &leaf.body {
+            let mode = match cfg.runtime {
+                crate::rt::RuntimeKind::Edt(m) => m,
+                crate::rt::RuntimeKind::Omp => anyhow::bail!(
+                    "dynamic workloads need an EDT runtime — the omp comparator \
+                     has no tuple-space waiters to model"
+                ),
+            };
+            anyhow::ensure!(
+                cfg.plane == crate::space::DataPlane::Space,
+                "dynamic workloads coordinate through the tuple space — launch \
+                 with plane = space (`--plane space`)"
+            );
+            let out = w.simulate(cfg, &topo)?;
+            let r = out.report;
+            let trace = (cfg.trace != TraceMode::Off).then(|| {
+                Arc::new(Trace {
+                    workload: plan.name.clone(),
+                    mode: cfg.trace,
+                    total_flops: leaf.total_flops,
+                    config: TraceConfig::from_echo(&echo),
+                    cost: CostAtoms::from_model(&cfg.cost),
+                    report: r.clone(),
+                    events: out.events,
+                })
+            });
+            let metrics = MetricsSnapshot {
+                steals: r.steals,
+                failed_gets: r.failed_gets,
+                space_puts: r.space_puts,
+                space_gets: r.space_gets,
+                space_frees: r.space_frees,
+                space_peak_bytes: r.space_peak_bytes,
+                space_remote_gets: r.space_remote_gets,
+                space_remote_bytes: r.space_remote_bytes,
+                work_ns: (r.work_ratio * 1e9) as u64,
+                busy_ns: 1_000_000_000,
+                ..Default::default()
+            };
+            return Ok(crate::rt::RunReport {
+                runtime: mode.name(),
+                plane: cfg.plane.name(),
+                threads: cfg.threads,
+                seconds: r.seconds,
+                gflops: r.gflops,
+                metrics,
+                node_peak_bytes: r.node_peak_bytes.clone(),
+                config: echo,
+                sim: Some(r),
+                trace,
+            });
+        }
         match cfg.runtime {
             crate::rt::RuntimeKind::Edt(mode) => {
                 let (r, events) = des_exec_traced(

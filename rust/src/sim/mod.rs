@@ -39,9 +39,10 @@
 //! With [`crate::rt::ExecConfig::trace`] set to a non-`Off`
 //! [`TraceMode`], the DES additionally records a deterministic
 //! [`trace::TraceEvent`] stream — every spawn/ready/start/done, data-plane
-//! put/get/free and inter-node migration, stamped with virtual time and
-//! EDT identity — serialized as versioned JSON lines (`tale3-trace/v1`)
-//! and replayable through [`crate::rt::ReplayBackend`] (see [`trace`]).
+//! put/get/free, inter-node migration and dynamic-space pattern-wait
+//! park/wake, stamped with virtual time and EDT identity — serialized as
+//! versioned JSON lines (`tale3-trace/v2`; the parser still reads v1) and
+//! replayable through [`crate::rt::ReplayBackend`] (see [`trace`]).
 
 pub mod cost;
 pub mod des;
@@ -51,7 +52,7 @@ pub mod trace;
 pub use cost::{CostModel, Machine};
 pub use des::{simulate, DesBackend, SimReport};
 pub use omp::simulate_omp;
-pub use trace::{Trace, TraceMode};
+pub use trace::{Trace, TraceEvent, TraceMode};
 
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::expr::Env;

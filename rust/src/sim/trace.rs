@@ -25,8 +25,14 @@
 //! - [`TraceEvent::Steal`] — one inter-node EDT migration under
 //!   [`crate::rt::StealPolicy::RemoteReady`], with the input-datablock
 //!   bytes it pulled over links.
+//! - [`TraceEvent::WaitMatch`] / [`TraceEvent::Wake`] — the dynamic
+//!   tuple space's blocking pattern gets (`space::dynamic`): a worker
+//!   parks because no live item matches its pattern, and later resumes
+//!   (match, close, or deadlock poison) after `waited` virtual ns. Added
+//!   in `tale3-trace/v2`.
 //!
-//! Serialization is versioned JSON lines (`tale3-trace/v1`): one header
+//! Serialization is versioned JSON lines (`tale3-trace/v2`; the parser
+//! still reads `v1` documents, which simply contain no wait events): one header
 //! object naming the schema, workload, resolved config, the cost atoms a
 //! replay may re-price, and the original [`SimReport`]; then one object
 //! per event, in deterministic simulation order. Like the bench report,
@@ -179,6 +185,14 @@ pub enum TraceEvent {
     /// Instance `i` is a leaf EDT migrated from node `from` to `to`
     /// (`RemoteReady`), pulling `bytes` input-datablock bytes over links.
     Steal { t: u64, i: u64, from: u32, to: u32, bytes: u64 },
+    /// Worker `worker` (on `node`) parks: no live item of collection
+    /// `coll` matches its pattern (`space::dynamic` blocking get). `i` is
+    /// a fresh pairing id shared with the matching [`TraceEvent::Wake`] —
+    /// not a task-instance lifecycle id. v2 events.
+    WaitMatch { t: u64, i: u64, worker: u32, node: u32, coll: u32 },
+    /// The wait `i` ends after `waited` virtual ns parked — by a matching
+    /// put, a collection close, or deadlock poisoning. v2 events.
+    Wake { t: u64, i: u64, worker: u32, node: u32, coll: u32, waited: u64 },
 }
 
 /// The resolved launch the trace was captured under (an owned mirror of
@@ -279,7 +293,10 @@ pub struct Trace {
     pub events: Vec<TraceEvent>,
 }
 
-pub const TRACE_SCHEMA: &str = "tale3-trace/v1";
+pub const TRACE_SCHEMA: &str = "tale3-trace/v2";
+/// The previous schema version; [`Trace::parse`] still accepts it (a v1
+/// document is exactly a v2 document with no wait events).
+pub const TRACE_SCHEMA_V1: &str = "tale3-trace/v1";
 
 // ---------------------------------------------------------------- emit
 
@@ -428,6 +445,16 @@ impl Trace {
                 TraceEvent::Steal { t, i, from, to, bytes } => {
                     out.push_str(&format!(
                         "{{\"e\":\"steal\",\"t\":{t},\"i\":{i},\"f\":{from},\"nd\":{to},\"b\":{bytes}}}\n"
+                    ));
+                }
+                TraceEvent::WaitMatch { t, i, worker, node, coll } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"waitm\",\"t\":{t},\"i\":{i},\"w\":{worker},\"nd\":{node},\"kn\":{coll}}}\n"
+                    ));
+                }
+                TraceEvent::Wake { t, i, worker, node, coll, waited } => {
+                    out.push_str(&format!(
+                        "{{\"e\":\"wake\",\"t\":{t},\"i\":{i},\"w\":{worker},\"nd\":{node},\"kn\":{coll},\"d\":{waited}}}\n"
                     ));
                 }
             }
@@ -670,15 +697,16 @@ fn parse_key(v: &JVal) -> Result<ItemKey> {
 }
 
 impl Trace {
-    /// Parse a `tale3-trace/v1` JSON-lines document.
+    /// Parse a `tale3-trace/v2` (or legacy `v1`) JSON-lines document.
     pub fn parse(text: &str) -> Result<Trace> {
         let mut lines = text.lines().filter(|l| !l.trim().is_empty());
         let header = parse_line(lines.next().ok_or_else(|| anyhow!("empty trace"))?)
             .context("trace header")?;
         let schema = header.need("schema")?.str_()?;
         ensure!(
-            schema == TRACE_SCHEMA,
-            "unsupported trace schema `{schema}` (expected `{TRACE_SCHEMA}`)"
+            schema == TRACE_SCHEMA || schema == TRACE_SCHEMA_V1,
+            "unsupported trace schema `{schema}` (expected `{TRACE_SCHEMA}` or \
+             legacy `{TRACE_SCHEMA_V1}`)"
         );
         let mode = TraceMode::parse(header.need("mode")?.str_()?)
             .ok_or_else(|| anyhow!("bad trace mode"))?;
@@ -773,6 +801,21 @@ impl Trace {
                     to: v.need("nd")?.u64_()? as u32,
                     bytes: v.need("b")?.u64_()?,
                 },
+                "waitm" => TraceEvent::WaitMatch {
+                    t,
+                    i,
+                    worker: v.need("w")?.u64_()? as u32,
+                    node: v.need("nd")?.u64_()? as u32,
+                    coll: v.need("kn")?.u64_()? as u32,
+                },
+                "wake" => TraceEvent::Wake {
+                    t,
+                    i,
+                    worker: v.need("w")?.u64_()? as u32,
+                    node: v.need("nd")?.u64_()? as u32,
+                    coll: v.need("kn")?.u64_()? as u32,
+                    waited: v.need("d")?.u64_()?,
+                },
                 e => bail!("unknown event type `{e}`"),
             };
             events.push(ev);
@@ -800,6 +843,7 @@ impl Trace {
         }
         let mut inst: HashMap<u64, Life> = HashMap::new();
         let mut items: HashMap<ItemKey, (u64, bool)> = HashMap::new(); // bytes, freed
+        let mut waits: HashMap<u64, u64> = HashMap::new(); // open WaitMatch: pairing id -> park time
         let mut starts = 0u64;
         let mut non_own = 0u64;
         let mut misses = 0u64;
@@ -897,10 +941,28 @@ impl Trace {
                     stolen += 1;
                     stolen_bytes += bytes;
                 }
+                TraceEvent::WaitMatch { t, i, .. } => {
+                    ensure!(
+                        waits.insert(*i, *t).is_none(),
+                        "event {n}: WaitMatch pairing id {i} opened twice"
+                    );
+                }
+                TraceEvent::Wake { t, i, waited, .. } => {
+                    let parked_at = waits
+                        .remove(i)
+                        .ok_or_else(|| anyhow!("event {n}: Wake {i} without an open WaitMatch"))?;
+                    ensure!(
+                        *waited == t.saturating_sub(parked_at),
+                        "event {n}: Wake {i} waited {waited} but was parked {parked_at}..{t}"
+                    );
+                }
             }
         }
         for (key, (_, freed)) in &items {
             ensure!(*freed, "datablock {key:?} was never freed (leak)");
+        }
+        if let Some((i, t)) = waits.iter().next() {
+            bail!("WaitMatch {i} (parked at {t}) was never woken — a waiter leaked");
         }
         let r = &self.report;
         ensure!(starts == r.tasks, "Start count {starts} != report tasks {}", r.tasks);
@@ -1073,6 +1135,25 @@ impl Trace {
                 out.push_str(&format!("  node {f} -> node {t}: {k} EDTs, {b} input bytes\n"));
             }
         }
+        // time-parked per worker (v2 dynamic-space wait events only, so
+        // static-workload summaries are byte-identical to their v1 form)
+        let mut parked: HashMap<u32, (u64, u64)> = HashMap::new(); // worker -> (waits, ns)
+        for ev in &self.events {
+            if let TraceEvent::Wake { worker, waited, .. } = ev {
+                let e = parked.entry(*worker).or_insert((0, 0));
+                e.0 += 1;
+                e.1 += waited;
+            }
+        }
+        if !parked.is_empty() {
+            out.push_str("time parked on pattern waits (dynamic space):\n");
+            out.push_str("worker  waits  parked-ms\n");
+            let mut rows: Vec<_> = parked.into_iter().collect();
+            rows.sort();
+            for (w, (k, ns)) in rows {
+                out.push_str(&format!("{w:>6}  {k:>5}  {:>9.3}\n", ns as f64 / 1e6));
+            }
+        }
         out
     }
 }
@@ -1229,6 +1310,76 @@ mod tests {
             s.lines().any(|l| l.trim_start().starts_with("all")),
             "{s}"
         );
+    }
+
+    /// v2 wait events: serialization round-trip, validate pairing, and
+    /// the summarize time-parked section.
+    #[test]
+    fn wait_events_round_trip_validate_and_summarize() {
+        let mut tr = tiny_trace();
+        tr.events.push(TraceEvent::WaitMatch { t: 130, i: 7, worker: 1, node: 1, coll: 3 });
+        tr.events.push(TraceEvent::Wake {
+            t: 180,
+            i: 7,
+            worker: 1,
+            node: 1,
+            coll: 3,
+            waited: 50,
+        });
+        let text = tr.to_jsonl();
+        assert!(text.starts_with("{\"schema\":\"tale3-trace/v2\""), "{text}");
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.events, tr.events);
+        assert_eq!(back.to_jsonl(), text);
+        tr.validate().unwrap();
+        let s = tr.summarize();
+        assert!(s.contains("time parked on pattern waits"), "{s}");
+        assert!(s.contains("worker  waits  parked-ms"), "{s}");
+        // worker 1 parked 50 ns over 1 wait
+        assert!(
+            s.lines().any(|l| {
+                let c: Vec<&str> = l.split_whitespace().collect();
+                c.len() == 3 && c[0] == "1" && c[1] == "1" && c[2] == "0.000"
+            }),
+            "{s}"
+        );
+        // a trace with no wait events must not grow the section
+        assert!(!tiny_trace().summarize().contains("time parked"), "stable v1 text");
+    }
+
+    #[test]
+    fn wait_pairing_violations_are_named() {
+        let mut tr = tiny_trace();
+        tr.events.push(TraceEvent::WaitMatch { t: 130, i: 7, worker: 1, node: 1, coll: 3 });
+        let err = tr.validate().unwrap_err().to_string();
+        assert!(err.contains("never woken"), "{err}");
+        let mut tr = tiny_trace();
+        tr.events.push(TraceEvent::Wake { t: 180, i: 9, worker: 0, node: 0, coll: 3, waited: 1 });
+        let err = tr.validate().unwrap_err().to_string();
+        assert!(err.contains("without an open WaitMatch"), "{err}");
+        let mut tr = tiny_trace();
+        tr.events.push(TraceEvent::WaitMatch { t: 130, i: 7, worker: 1, node: 1, coll: 3 });
+        tr.events.push(TraceEvent::Wake { t: 180, i: 7, worker: 1, node: 1, coll: 3, waited: 9 });
+        let err = tr.validate().unwrap_err().to_string();
+        assert!(err.contains("waited 9 but was parked"), "{err}");
+    }
+
+    /// The parser keeps reading legacy v1 documents (same layout, no wait
+    /// events) — bumping the writer must not orphan archived traces.
+    #[test]
+    fn parser_accepts_legacy_v1_schema() {
+        let text = tiny_trace()
+            .to_jsonl()
+            .replacen("tale3-trace/v2", "tale3-trace/v1", 1);
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.events.len(), tiny_trace().events.len());
+        back.validate().unwrap();
+        let err = Trace::parse(
+            &tiny_trace().to_jsonl().replacen("tale3-trace/v2", "tale3-trace/v9", 1),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unsupported trace schema"), "{err}");
     }
 
     #[test]

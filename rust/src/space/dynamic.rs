@@ -1,0 +1,539 @@
+//! The dynamic coordination layer: Linda-style pattern gets over the item
+//! space.
+//!
+//! The static plane (§4.5) reclaims items by *get-counts*: the affine plan
+//! knows every consumer at mapping time, so each `put` carries the exact
+//! number of `get`s after which the datablock is dead. That contract is
+//! what locks the suite to pre-planned loop nests. This module relaxes it,
+//! following the Linda model the RSpace notes describe — `out`/`in`/`rd`
+//! with pattern-consume (`in("task", ?x)`) — restricted to integer tag
+//! tuples:
+//!
+//! - [`DynSpace::put_dyn`] is Linda `out`: publish under a
+//!   [`DynCount`] — `Known(n)` keeps §4.5 get-count reclamation where the
+//!   producer *does* know its consumers, `Open` defers reclamation to an
+//!   explicit [`DynSpace::close`] of the whole collection.
+//! - [`DynSpace::in_`] is Linda `in`: a destructive pattern get that
+//!   *parks* the caller on the owning shard's condvar when nothing
+//!   matches (the DES twin parks a `WaitMatch` event instead), woken by
+//!   matching puts. Selection among multiple matches is the
+//!   lexicographically least live tag ([`super::pattern::first_match`])
+//!   so engine and DES agree.
+//! - [`DynSpace::rd`] is Linda `rd`: the non-destructive variant.
+//!
+//! Collections are whole-sale owned by `coll % nodes` (collection-home
+//! routing): a pattern names one collection, so its owner is computable
+//! without enumerating shards, and remote `in_`/`rd` under the channel
+//! transport pay the same injected [`LinkModel`] wire time a static
+//! remote get pays.
+//!
+//! Blocking gets introduce the failure mode static plans cannot have:
+//! *deadlock*. When every worker is parked and the space holds no live
+//! item, no producer can ever run again; the space then poisons itself
+//! with a loud diagnostic and every parked `in_`/`rd` returns `None`
+//! instead of hanging (the `dynspace-gate` CI job additionally runs the
+//! suite under a timeout guard, since parked-waiter bugs present as
+//! hangs).
+
+use super::pattern::{first_match, TagPattern};
+use super::placement::Topology;
+use super::store::{SpaceSnapshot, SpaceStats};
+use super::transport::{inject, Ledger, LinkModel, TransportKind};
+use super::{DataBlock, ItemKey, SpaceAccounting};
+use crate::ral::Metrics;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// The consumer-count contract of a dynamic put.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DynCount {
+    /// §4.5 get-count reclamation: the item dies on its `n`-th
+    /// destructive get. `Known(0)` is the transient boundary case, as in
+    /// the static space: accounted, never stored.
+    Known(usize),
+    /// Consumer count unknown at publish time: the item stays live until
+    /// a destructive `in_` claims it or [`DynSpace::close`] drains its
+    /// collection.
+    Open,
+}
+
+/// One live dynamic item.
+struct DynSlot {
+    block: Arc<DataBlock>,
+    remaining: DynCount,
+}
+
+/// One collection: its live items in tag order (the deterministic match
+/// order) plus the closed flag.
+#[derive(Default)]
+struct DynColl {
+    items: BTreeMap<Box<[i64]>, DynSlot>,
+    closed: bool,
+}
+
+/// One node's shard of the dynamic space.
+#[derive(Default)]
+struct DynShard {
+    colls: HashMap<u32, DynColl>,
+}
+
+struct Shard {
+    m: Mutex<DynShard>,
+    cv: Condvar,
+}
+
+/// Parked-worker / live-item census, kept under one lock so the deadlock
+/// predicate (`parked == active && live == 0`) is evaluated against a
+/// consistent snapshot — a worker mid-consume is either still counted
+/// parked with its item still counted live, or neither. `active` starts
+/// at the worker count and drops as workers retire
+/// ([`DynSpace::worker_exit`]), so a deadlock among the stragglers is
+/// still all-parked.
+#[derive(Default)]
+struct Gate {
+    parked: usize,
+    live: u64,
+    active: usize,
+}
+
+/// The dynamic tuple space. Shares the static space's accounting
+/// ([`Ledger`] → [`SpaceStats`] / per-node peaks and remote ops) so
+/// dynamic workloads report through the exact counters the static suite
+/// reports through.
+pub struct DynSpace {
+    topo: Topology,
+    kind: TransportKind,
+    link: LinkModel,
+    ledger: Ledger,
+    shards: Vec<Shard>,
+    gate: Mutex<Gate>,
+    poisoned: AtomicBool,
+    poison_msg: Mutex<Option<String>>,
+}
+
+impl DynSpace {
+    pub fn new(topo: Topology, kind: TransportKind, link: LinkModel, workers: usize) -> DynSpace {
+        let nodes = topo.nodes();
+        DynSpace {
+            topo,
+            kind,
+            link,
+            ledger: Ledger::new(nodes),
+            shards: (0..nodes)
+                .map(|_| Shard { m: Mutex::new(DynShard::default()), cv: Condvar::new() })
+                .collect(),
+            gate: Mutex::new(Gate { parked: 0, live: 0, active: workers.max(1) }),
+            poisoned: AtomicBool::new(false),
+            poison_msg: Mutex::new(None),
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn stats(&self) -> &SpaceStats {
+        &self.ledger.stats
+    }
+
+    /// Collection-home routing: the node owning every item of `coll`.
+    pub fn home(&self, coll: u32) -> usize {
+        if self.topo.nodes() <= 1 {
+            0
+        } else {
+            coll as usize % self.topo.nodes()
+        }
+    }
+
+    /// Items currently live (0 after a leak-free run).
+    pub fn live_items(&self) -> u64 {
+        self.ledger.stats.live_items.load(Ordering::Relaxed)
+    }
+
+    /// The deadlock diagnostic, if the space poisoned itself.
+    pub fn poison_msg(&self) -> Option<String> {
+        self.poison_msg.lock().unwrap().clone()
+    }
+
+    /// Whether [`DynSpace::close`] has been called on `coll`.
+    pub fn is_closed(&self, coll: u32) -> bool {
+        let g = self.shards[self.home(coll)].m.lock().unwrap();
+        g.colls.get(&coll).is_some_and(|c| c.closed)
+    }
+
+    /// Retire one worker from the deadlock census: a worker that has run
+    /// off the end of its phases will never park again, so the all-parked
+    /// predicate must range over the remaining workers only. Wakes every
+    /// shard so current waiters re-evaluate the shrunken census promptly.
+    pub fn worker_exit(&self) {
+        self.gate.lock().unwrap().active -= 1;
+        for s in &self.shards {
+            s.cv.notify_all();
+        }
+    }
+
+    fn poison(&self, msg: String) {
+        {
+            let mut p = self.poison_msg.lock().unwrap();
+            if p.is_none() {
+                *p = Some(msg);
+            }
+        }
+        self.poisoned.store(true, Ordering::Release);
+        for s in &self.shards {
+            s.cv.notify_all();
+        }
+    }
+
+    /// Linda `out`: publish an item. Panics on a double put of the same
+    /// key (items stay single-assignment) and on a put into a closed
+    /// collection (a close is a promise that no producer remains).
+    pub fn put_dyn(&self, key: ItemKey, block: DataBlock, count: DynCount) {
+        let home = self.home(key.coll);
+        let bytes = block.bytes() as u64;
+        if count == DynCount::Known(0) {
+            self.ledger.on_put(home, bytes, true);
+            return;
+        }
+        let shard = &self.shards[home];
+        {
+            let mut g = shard.m.lock().unwrap();
+            let coll = g.colls.entry(key.coll).or_default();
+            assert!(
+                !coll.closed,
+                "dynamic put into closed collection {} (key {key:?}): close() promises \
+                 no producer remains",
+                key.coll
+            );
+            let prev = coll.items.insert(key.tag.clone(), DynSlot {
+                block: Arc::new(block),
+                remaining: count,
+            });
+            assert!(
+                prev.is_none(),
+                "dynamic tuple-space double put of {key:?}: items are single-assignment"
+            );
+            self.gate.lock().unwrap().live += 1;
+        }
+        self.ledger.on_put(home, bytes, false);
+        shard.cv.notify_all();
+    }
+
+    /// Linda `in`: destructive pattern get from consumer node `from`.
+    /// Blocks (parks on the owning shard) while no live item matches and
+    /// the collection is still open. Returns `None` when the collection
+    /// is closed with no match left, or when the space poisoned itself.
+    pub fn in_(&self, pat: &TagPattern, from: usize) -> Option<(Box<[i64]>, Arc<DataBlock>)> {
+        self.take(pat, from, true)
+    }
+
+    /// Linda `rd`: the non-destructive twin of [`DynSpace::in_`] — same
+    /// blocking, matching, and remote accounting, but the item's count is
+    /// untouched.
+    pub fn rd(&self, pat: &TagPattern, from: usize) -> Option<(Box<[i64]>, Arc<DataBlock>)> {
+        self.take(pat, from, false)
+    }
+
+    fn take(
+        &self,
+        pat: &TagPattern,
+        from: usize,
+        destructive: bool,
+    ) -> Option<(Box<[i64]>, Arc<DataBlock>)> {
+        let home = self.home(pat.coll);
+        let shard = &self.shards[home];
+        let mut g = shard.m.lock().unwrap();
+        let mut parked = false;
+        loop {
+            if self.poisoned.load(Ordering::Acquire) {
+                if parked {
+                    self.gate.lock().unwrap().parked -= 1;
+                }
+                return None;
+            }
+            // deterministic selection: lexicographically least live tag
+            let hit = g.colls.get_mut(&pat.coll).and_then(|coll| {
+                let tag = first_match(&coll.items, pat).map(|(t, _)| t.clone())?;
+                let (block, freed) = if destructive {
+                    let freed = {
+                        let slot = coll.items.get_mut(&tag).unwrap();
+                        match &mut slot.remaining {
+                            DynCount::Known(n) => {
+                                *n -= 1;
+                                *n == 0
+                            }
+                            DynCount::Open => true,
+                        }
+                    };
+                    if freed {
+                        (coll.items.remove(&tag).unwrap().block, true)
+                    } else {
+                        (coll.items.get(&tag).unwrap().block.clone(), false)
+                    }
+                } else {
+                    (coll.items.get(&tag).unwrap().block.clone(), false)
+                };
+                Some((tag, block, freed))
+            });
+            if let Some((tag, block, freed)) = hit {
+                {
+                    // census first, removal already in the map: a checker
+                    // holding the gate either still sees us parked with
+                    // the item live, or sees neither (see `Gate`)
+                    let mut gate = self.gate.lock().unwrap();
+                    if parked {
+                        gate.parked -= 1;
+                    }
+                    if freed {
+                        gate.live -= 1;
+                    }
+                }
+                drop(g);
+                let bytes = block.bytes() as u64;
+                self.ledger.on_get(home, Some(from), bytes, freed);
+                if from != home
+                    && self.kind == TransportKind::Channel
+                    && !self.link.is_zero()
+                {
+                    inject(self.link.transfer_ns(bytes));
+                }
+                return Some((tag, block));
+            }
+            if g.colls.get(&pat.coll).is_some_and(|c| c.closed) {
+                if parked {
+                    self.gate.lock().unwrap().parked -= 1;
+                }
+                return None;
+            }
+            // park — detecting the all-parked/empty deadlock on the way in
+            {
+                let mut gate = self.gate.lock().unwrap();
+                if !parked {
+                    parked = true;
+                    gate.parked += 1;
+                }
+                if gate.parked == gate.active && gate.live == 0 {
+                    let n = gate.active;
+                    gate.parked -= 1;
+                    drop(gate);
+                    self.poison(format!(
+                        "dynamic-space deadlock: all {n} workers parked on an empty \
+                         space — no live item matches any waiter and no producer \
+                         can run (last waiter: coll {} pattern {:?})",
+                        pat.coll, pat.fields
+                    ));
+                    return None;
+                }
+            }
+            let (ng, _) = shard
+                .cv
+                .wait_timeout(g, Duration::from_millis(100))
+                .unwrap();
+            g = ng;
+        }
+    }
+
+    /// Close a collection: no further puts are legal, parked waiters with
+    /// no remaining match return `None`, and every still-live `Open` item
+    /// is drained (freed without a consuming get — counted by
+    /// `Ledger::on_drain`, so leak-freedom stays `puts == frees`).
+    /// `Known` items survive a close and stay matchable until their
+    /// get-counts drain them. Idempotent.
+    pub fn close(&self, coll: u32) {
+        let home = self.home(coll);
+        let shard = &self.shards[home];
+        let mut drained: Vec<u64> = Vec::new();
+        {
+            let mut g = shard.m.lock().unwrap();
+            let c = g.colls.entry(coll).or_default();
+            if c.closed {
+                return;
+            }
+            c.closed = true;
+            let open_tags: Vec<Box<[i64]>> = c
+                .items
+                .iter()
+                .filter(|(_, s)| s.remaining == DynCount::Open)
+                .map(|(t, _)| t.clone())
+                .collect();
+            for t in open_tags {
+                drained.push(c.items.remove(&t).unwrap().block.bytes() as u64);
+            }
+            if !drained.is_empty() {
+                self.gate.lock().unwrap().live -= drained.len() as u64;
+            }
+        }
+        for b in &drained {
+            self.ledger.on_drain(home, *b);
+        }
+        shard.cv.notify_all();
+    }
+}
+
+impl SpaceAccounting for DynSpace {
+    fn merge_metrics(&self, m: &Metrics) {
+        let s = self.ledger.stats.snapshot();
+        m.space_puts.fetch_add(s.puts, Ordering::Relaxed);
+        m.space_gets.fetch_add(s.gets, Ordering::Relaxed);
+        m.space_frees.fetch_add(s.frees, Ordering::Relaxed);
+        m.space_remote_gets.fetch_add(s.remote_gets, Ordering::Relaxed);
+        m.space_remote_bytes.fetch_add(s.remote_bytes, Ordering::Relaxed);
+        m.space_live_bytes.store(s.live_bytes, Ordering::Relaxed);
+        m.space_peak_bytes.store(s.peak_bytes, Ordering::Relaxed);
+        let (rg, rb) = self.ledger.nodes.remote_ops();
+        m.set_node_remote(&rg, &rb);
+    }
+
+    fn space_snapshot(&self) -> SpaceSnapshot {
+        self.ledger.stats.snapshot()
+    }
+
+    fn node_peaks(&self) -> Vec<u64> {
+        self.ledger.nodes.peaks()
+    }
+
+    fn node_remote_ops(&self) -> (Vec<u64>, Vec<u64>) {
+        self.ledger.nodes.remote_ops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::pattern::FieldPat;
+    use crate::space::{Placement, Region};
+
+    fn block(n: usize) -> DataBlock {
+        DataBlock::new(vec![Region {
+            array: 0,
+            lo: vec![0].into(),
+            hi: vec![n as i64 - 1].into(),
+            data: vec![1.0; n].into(),
+        }])
+    }
+
+    fn single(workers: usize) -> DynSpace {
+        DynSpace::new(Topology::single(), TransportKind::InProc, LinkModel::zero(), workers)
+    }
+
+    #[test]
+    fn known_counts_reclaim_like_the_static_space() {
+        let s = single(1);
+        s.put_dyn(ItemKey::new(0, &[3]), block(4), DynCount::Known(2));
+        assert_eq!(s.live_items(), 1);
+        let p = TagPattern::exact(0, &[3]);
+        assert!(s.in_(&p, 0).is_some());
+        assert_eq!(s.live_items(), 1, "one consumer left");
+        assert!(s.in_(&p, 0).is_some());
+        assert_eq!(s.live_items(), 0, "last in_ reclaims");
+        let snap = s.stats().snapshot();
+        assert_eq!((snap.puts, snap.gets, snap.frees), (1, 2, 1));
+        assert_eq!(snap.live_bytes, 0);
+    }
+
+    #[test]
+    fn wildcard_in_selects_lexicographic_least() {
+        let s = single(1);
+        for t in [[2i64, 0], [1, 9], [1, 4]] {
+            s.put_dyn(ItemKey::new(0, &t), block(1), DynCount::Known(1));
+        }
+        let p = TagPattern::any(0, 2);
+        let order: Vec<Vec<i64>> = (0..3)
+            .map(|_| s.in_(&p, 0).unwrap().0.to_vec())
+            .collect();
+        assert_eq!(order, vec![vec![1, 4], vec![1, 9], vec![2, 0]]);
+    }
+
+    #[test]
+    fn rd_leaves_the_item_live() {
+        let s = single(1);
+        s.put_dyn(ItemKey::new(0, &[0]), block(2), DynCount::Open);
+        let p = TagPattern::any(0, 1);
+        assert!(s.rd(&p, 0).is_some());
+        assert!(s.rd(&p, 0).is_some());
+        assert_eq!(s.live_items(), 1);
+        let snap = s.stats().snapshot();
+        assert_eq!((snap.gets, snap.frees), (2, 0));
+    }
+
+    #[test]
+    fn open_items_drain_on_close_leak_free() {
+        let s = single(1);
+        s.put_dyn(ItemKey::new(0, &[0]), block(4), DynCount::Open);
+        s.put_dyn(ItemKey::new(0, &[1]), block(4), DynCount::Open);
+        let p = TagPattern::new(0, vec![FieldPat::Exact(0)]);
+        assert!(s.in_(&p, 0).is_some(), "destructive in_ claims an Open item");
+        s.close(0);
+        s.close(0); // idempotent
+        assert_eq!(s.live_items(), 0);
+        let snap = s.stats().snapshot();
+        assert_eq!(snap.puts, 2);
+        assert_eq!(snap.frees, 2, "close drains the unconsumed Open item");
+        assert_eq!(snap.live_bytes, 0);
+        assert!(s.in_(&p, 0).is_none(), "closed + no match = None, not a hang");
+    }
+
+    #[test]
+    #[should_panic(expected = "closed collection")]
+    fn put_into_closed_collection_panics() {
+        let s = single(1);
+        s.close(7);
+        s.put_dyn(ItemKey::new(7, &[0]), block(1), DynCount::Known(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "single-assignment")]
+    fn dynamic_double_put_panics() {
+        let s = single(1);
+        s.put_dyn(ItemKey::new(0, &[0]), block(1), DynCount::Open);
+        s.put_dyn(ItemKey::new(0, &[0]), block(1), DynCount::Open);
+    }
+
+    #[test]
+    fn blocking_in_wakes_on_matching_put() {
+        let s = Arc::new(single(2));
+        let consumer = {
+            let s = s.clone();
+            std::thread::spawn(move || s.in_(&TagPattern::any(0, 1), 0))
+        };
+        // the consumer parks (nothing live); this put must wake it
+        std::thread::sleep(Duration::from_millis(20));
+        s.put_dyn(ItemKey::new(0, &[5]), block(2), DynCount::Known(1));
+        let (tag, _) = consumer.join().unwrap().expect("woken by the put");
+        assert_eq!(&tag[..], &[5]);
+        assert_eq!(s.live_items(), 0);
+    }
+
+    #[test]
+    fn all_parked_on_empty_space_poisons_loudly() {
+        let s = Arc::new(single(2));
+        let waiters: Vec<_> = (0..2)
+            .map(|w| {
+                let s = s.clone();
+                std::thread::spawn(move || s.in_(&TagPattern::any(9, 1), w % 1))
+            })
+            .collect();
+        for t in waiters {
+            assert!(t.join().unwrap().is_none(), "deadlock returns None, never hangs");
+        }
+        let msg = s.poison_msg().expect("space must poison itself");
+        assert!(msg.contains("deadlock"), "{msg}");
+    }
+
+    #[test]
+    fn collection_home_routes_remote_gets() {
+        let topo = Topology::new(4, Placement::Hash, 0, 8);
+        let s = DynSpace::new(topo, TransportKind::InProc, LinkModel::zero(), 1);
+        assert_eq!(s.home(5), 1);
+        s.put_dyn(ItemKey::new(5, &[0]), block(4), DynCount::Known(1));
+        assert_eq!(s.node_peaks()[1], 16);
+        // consumer on node 0, item homed on node 1: remote
+        assert!(s.in_(&TagPattern::any(5, 1), 0).is_some());
+        let snap = s.stats().snapshot();
+        assert_eq!(snap.remote_gets, 1);
+        assert_eq!(snap.remote_bytes, 16);
+        assert_eq!(s.node_remote_ops().0, vec![1, 0, 0, 0]);
+    }
+}

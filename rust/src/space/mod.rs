@@ -66,15 +66,52 @@
 //! architecture table); a zero-latency channel is oracle- and
 //! counter-identical to `InProc` (`tests/transport_parity.rs`).
 
+pub mod dynamic;
+pub mod pattern;
 pub mod placement;
 pub mod store;
 pub mod tiles;
 pub mod transport;
 
+pub use dynamic::{DynCount, DynSpace};
+pub use pattern::{FieldPat, TagPattern};
 pub use placement::{Placement, Topology};
 pub use store::{ItemSpace, SpaceSnapshot, SpaceStats};
 pub use tiles::{KernelWrites, SpaceLeafRunner};
 pub use transport::{LinkModel, ShardTransport, TransportKind};
+
+/// The accounting surface [`crate::rt::launch`] measures a run's data
+/// plane through, implemented by both the static [`ItemSpace`] and the
+/// dynamic [`DynSpace`] so one `run_measured` path serves both planes.
+pub trait SpaceAccounting {
+    /// Fold this space's counters into the runtime metrics (counters add,
+    /// gauges store absolute).
+    fn merge_metrics(&self, m: &crate::ral::Metrics);
+    /// Plain-data copy of the global space counters.
+    fn space_snapshot(&self) -> SpaceSnapshot;
+    /// Per-node high-water marks of live datablock bytes.
+    fn node_peaks(&self) -> Vec<u64>;
+    /// Per-node `(remote gets, remote bytes)` issued by each consumer node.
+    fn node_remote_ops(&self) -> (Vec<u64>, Vec<u64>);
+}
+
+impl SpaceAccounting for ItemSpace {
+    fn merge_metrics(&self, m: &crate::ral::Metrics) {
+        self.merge_into(m);
+    }
+
+    fn space_snapshot(&self) -> SpaceSnapshot {
+        self.stats.snapshot()
+    }
+
+    fn node_peaks(&self) -> Vec<u64> {
+        ItemSpace::node_peaks(self)
+    }
+
+    fn node_remote_ops(&self) -> (Vec<u64>, Vec<u64>) {
+        ItemSpace::node_remote_ops(self)
+    }
+}
 
 /// Which data plane leaf EDTs exchange array data through.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

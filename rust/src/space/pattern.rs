@@ -1,0 +1,133 @@
+//! Tag patterns: the query half of the dynamic tuple space.
+//!
+//! A [`TagPattern`] names one collection plus a per-field predicate over the
+//! tag tuple — the Linda `in("task", ?x)` shape restricted to integer tags.
+//! Unlike the static plan's exact-key gets, a pattern may match several live
+//! items at once, so the *selection rule* matters: both the real engine and
+//! the DES pick the lexicographically least matching tag (see
+//! [`first_match`]), which makes a wildcard `in_` a deterministic function
+//! of the live key set and keeps the two backends in agreement (asserted by
+//! `tests/dynspace.rs`).
+
+/// Predicate on a single tag field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldPat {
+    /// Field must equal `v`.
+    Exact(i64),
+    /// Field matches anything.
+    Wildcard,
+    /// Field must lie in `lo..=hi` (inclusive on both ends).
+    Range(i64, i64),
+}
+
+impl FieldPat {
+    pub fn matches(&self, v: i64) -> bool {
+        match *self {
+            FieldPat::Exact(x) => v == x,
+            FieldPat::Wildcard => true,
+            FieldPat::Range(lo, hi) => lo <= v && v <= hi,
+        }
+    }
+}
+
+/// A pattern over `(collection, tag)` item keys: the collection is always
+/// named exactly (patterns never span collections — the owner node of a
+/// query must be computable without enumerating shards), the tag fields
+/// each carry a [`FieldPat`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TagPattern {
+    pub coll: u32,
+    pub fields: Vec<FieldPat>,
+}
+
+impl TagPattern {
+    pub fn new(coll: u32, fields: Vec<FieldPat>) -> TagPattern {
+        TagPattern { coll, fields }
+    }
+
+    /// Exact-key pattern: the dynamic spelling of a static get.
+    pub fn exact(coll: u32, tag: &[i64]) -> TagPattern {
+        TagPattern {
+            coll,
+            fields: tag.iter().map(|&v| FieldPat::Exact(v)).collect(),
+        }
+    }
+
+    /// All-wildcard pattern of the given arity: "any item in `coll`".
+    pub fn any(coll: u32, arity: usize) -> TagPattern {
+        TagPattern {
+            coll,
+            fields: vec![FieldPat::Wildcard; arity],
+        }
+    }
+
+    /// Does `tag` satisfy every field predicate? Arity must match exactly:
+    /// a 2-field pattern never matches a 3-field tag.
+    pub fn matches(&self, tag: &[i64]) -> bool {
+        self.fields.len() == tag.len()
+            && self.fields.iter().zip(tag).all(|(p, &v)| p.matches(v))
+    }
+}
+
+/// The shared selection rule: the lexicographically least live tag that
+/// satisfies `pat`, scanning keys in sorted order. Both the engine's
+/// `DynSpace` (BTreeMap shard) and the DES virtual store call this, so a
+/// wildcard `in_` resolves identically on both backends.
+pub fn first_match<'a, V>(
+    items: &'a std::collections::BTreeMap<Box<[i64]>, V>,
+    pat: &TagPattern,
+) -> Option<(&'a Box<[i64]>, &'a V)> {
+    items.iter().find(|(tag, _)| pat.matches(tag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn field_predicates() {
+        assert!(FieldPat::Exact(3).matches(3));
+        assert!(!FieldPat::Exact(3).matches(4));
+        assert!(FieldPat::Wildcard.matches(-99));
+        assert!(FieldPat::Range(2, 5).matches(2));
+        assert!(FieldPat::Range(2, 5).matches(5));
+        assert!(!FieldPat::Range(2, 5).matches(6));
+        assert!(!FieldPat::Range(2, 5).matches(1));
+    }
+
+    #[test]
+    fn pattern_requires_matching_arity() {
+        let p = TagPattern::any(0, 2);
+        assert!(p.matches(&[7, 8]));
+        assert!(!p.matches(&[7]));
+        assert!(!p.matches(&[7, 8, 9]));
+    }
+
+    #[test]
+    fn exact_pattern_matches_only_its_tag() {
+        let p = TagPattern::exact(1, &[4, -2]);
+        assert!(p.matches(&[4, -2]));
+        assert!(!p.matches(&[4, 2]));
+    }
+
+    #[test]
+    fn first_match_is_lexicographic_least() {
+        let mut m: BTreeMap<Box<[i64]>, u32> = BTreeMap::new();
+        for tag in [[2, 9], [1, 5], [1, 7], [3, 0]] {
+            m.insert(tag.to_vec().into_boxed_slice(), 0);
+        }
+        let p = TagPattern::any(0, 2);
+        let (tag, _) = first_match(&m, &p).unwrap();
+        assert_eq!(&tag[..], &[1, 5]);
+
+        // range on field 0 skips the least overall key
+        let p = TagPattern::new(0, vec![FieldPat::Range(2, 3), FieldPat::Wildcard]);
+        let (tag, _) = first_match(&m, &p).unwrap();
+        assert_eq!(&tag[..], &[2, 9]);
+
+        // no match
+        let p = TagPattern::new(0, vec![FieldPat::Exact(9), FieldPat::Wildcard]);
+        assert!(first_match(&m, &p).is_none());
+    }
+}

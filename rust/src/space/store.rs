@@ -204,24 +204,35 @@ impl ItemSpace {
     /// Consuming get that must succeed: in these runtimes the control
     /// plane orders every consumer after its producer's put, so an absent
     /// item means a put is missing or the get-count reclaimed it too
-    /// early — both bugs worth an immediate loud stop.
+    /// early — both bugs worth an immediate loud stop. The transport's
+    /// per-shard tombstones let the panic say *which* case it was.
     pub fn get(&self, key: &ItemKey) -> Arc<DataBlock> {
-        self.try_get(key).unwrap_or_else(|| {
-            panic!(
-                "tuple-space get of absent item {key:?}: missing put or premature \
-                 get-count reclamation"
-            )
-        })
+        self.try_get(key)
+            .unwrap_or_else(|| self.absent_item_panic(key))
     }
 
     /// [`ItemSpace::get`] with local/remote classification.
     pub fn get_from(&self, key: &ItemKey, from: usize) -> Arc<DataBlock> {
-        self.try_get_from(key, from).unwrap_or_else(|| {
+        self.try_get_from(key, from)
+            .unwrap_or_else(|| self.absent_item_panic(key))
+    }
+
+    /// The miss diagnostic: consult the transport's tombstones so "never
+    /// put" and "reclaimed too early" stop presenting as the same panic.
+    fn absent_item_panic(&self, key: &ItemKey) -> ! {
+        let owner = self.topo.node_of(&key.tag);
+        if self.transport.was_freed(key, owner) {
             panic!(
-                "tuple-space get of absent item {key:?}: missing put or premature \
-                 get-count reclamation"
+                "tuple-space get of absent item {key:?}: the item was put but its \
+                 get-count already reclaimed it — premature get-count reclamation \
+                 (declared consumer count too low)"
             )
-        })
+        } else {
+            panic!(
+                "tuple-space get of absent item {key:?}: no put of this key ever \
+                 happened — missing put (producer never ran or tag mismatch)"
+            )
+        }
     }
 
     /// Items currently live (diagnostics; 0 after a complete run).
@@ -327,6 +338,38 @@ mod tests {
     fn get_after_reclamation_panics() {
         let s = ItemSpace::default();
         let k = ItemKey::new(0, &[0]);
+        s.put(k.clone(), block(1), 1);
+        let _ = s.get(&k);
+        let _ = s.get(&k);
+    }
+
+    #[test]
+    #[should_panic(expected = "premature get-count reclamation")]
+    fn reclaimed_miss_is_named_as_such() {
+        let s = ItemSpace::default();
+        let k = ItemKey::new(0, &[7]);
+        s.put(k.clone(), block(1), 1);
+        let _ = s.get(&k);
+        let _ = s.get(&k); // tombstoned: the diagnostic must say "reclaimed"
+    }
+
+    #[test]
+    #[should_panic(expected = "missing put")]
+    fn never_put_miss_is_named_as_such() {
+        let s = ItemSpace::default();
+        let _ = s.get(&ItemKey::new(4, &[1, 2]));
+    }
+
+    #[test]
+    #[should_panic(expected = "premature get-count reclamation")]
+    fn channel_reclaimed_miss_is_named_as_such() {
+        let s = ItemSpace::with_transport(
+            8,
+            Topology::single(),
+            TransportKind::Channel,
+            LinkModel::zero(),
+        );
+        let k = ItemKey::new(0, &[7]);
         s.put(k.clone(), block(1), 1);
         let _ = s.get(&k);
         let _ = s.get(&k);

@@ -37,7 +37,7 @@ use super::placement::Topology;
 use super::store::SpaceStats;
 use super::{DataBlock, ItemKey};
 use crate::sim::CostModel;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -105,7 +105,7 @@ impl LinkModel {
         self.latency_ns <= 0.0 && self.bw_ns_per_byte <= 0.0
     }
 
-    fn transfer_ns(&self, bytes: u64) -> f64 {
+    pub(crate) fn transfer_ns(&self, bytes: u64) -> f64 {
         self.latency_ns + bytes as f64 * self.bw_ns_per_byte
     }
 }
@@ -113,7 +113,7 @@ impl LinkModel {
 /// Busy-wait for `ns` virtual link time. Typical interconnect latencies
 /// (~1.5 µs) sit far below OS sleep resolution, so the blocked consumer
 /// spins — exactly what a synchronous remote get does to its core.
-fn inject(ns: f64) {
+pub(crate) fn inject(ns: f64) {
     if ns <= 0.0 {
         return;
     }
@@ -196,7 +196,7 @@ impl Ledger {
     /// Publish accounting: `transient` items (zero consumers) register in
     /// the peaks and are reclaimed immediately, like the real runtime's
     /// allocation would.
-    fn on_put(&self, owner: usize, bytes: u64, transient: bool) {
+    pub(crate) fn on_put(&self, owner: usize, bytes: u64, transient: bool) {
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         self.stats.put_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.stats.add_live(bytes);
@@ -212,7 +212,7 @@ impl Ledger {
     /// Consume accounting: classify local/remote against the item's owner
     /// (the transport-side classification the per-node remote counters in
     /// [`crate::ral::Metrics`] are sourced from).
-    fn on_get(&self, owner: usize, from: Option<usize>, bytes: u64, freed: bool) {
+    pub(crate) fn on_get(&self, owner: usize, from: Option<usize>, bytes: u64, freed: bool) {
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
         self.stats.get_bytes.fetch_add(bytes, Ordering::Relaxed);
         if let Some(f) = from {
@@ -228,6 +228,15 @@ impl Ledger {
             self.nodes.sub_live(owner, bytes);
             self.stats.live_items.fetch_sub(1, Ordering::Relaxed);
         }
+    }
+
+    /// Drain accounting: a `close()` reclaiming an `Open`-count item that
+    /// was never destructively consumed (dynamic space only). Counts as a
+    /// free — not as a get — so leak-freedom stays `puts == frees`.
+    pub(crate) fn on_drain(&self, owner: usize, bytes: u64) {
+        self.stats.sub_live(bytes);
+        self.nodes.sub_live(owner, bytes);
+        self.stats.live_items.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -252,6 +261,11 @@ pub trait ShardTransport: Send + Sync {
         from: Option<usize>,
         owner: usize,
     ) -> Option<Arc<DataBlock>>;
+
+    /// Tombstone query: was `key` ever published and then fully drained?
+    /// Only consulted on the miss-panic path, so the store can distinguish
+    /// "never put" from "get-count reclaimed too early" in its diagnostic.
+    fn was_freed(&self, key: &ItemKey, owner: usize) -> bool;
 }
 
 // ------------------------------------------------------------- in-proc
@@ -261,6 +275,10 @@ pub trait ShardTransport: Send + Sync {
 /// the space plane ran on before the transport seam existed.
 pub(crate) struct InProc {
     shards: Vec<Mutex<HashMap<ItemKey, Slot>>>,
+    /// Per-shard tombstones: keys whose last get already reclaimed them.
+    /// Written only on the free path, read only on the miss-panic path,
+    /// so the hot get never pays for the diagnostic.
+    tombs: Vec<Mutex<HashSet<ItemKey>>>,
     mask: usize,
     ledger: Ledger,
 }
@@ -270,16 +288,21 @@ impl InProc {
         let n = n_shards.next_power_of_two();
         InProc {
             shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            tombs: (0..n).map(|_| Mutex::new(HashSet::new())).collect(),
             mask: n - 1,
             ledger,
         }
     }
 
-    fn shard(&self, key: &ItemKey) -> &Mutex<HashMap<ItemKey, Slot>> {
+    fn shard_idx(&self, key: &ItemKey) -> usize {
         use std::hash::{Hash, Hasher};
         let mut h = std::collections::hash_map::DefaultHasher::new();
         key.hash(&mut h);
-        &self.shards[(h.finish() as usize) & self.mask]
+        (h.finish() as usize) & self.mask
+    }
+
+    fn shard(&self, key: &ItemKey) -> &Mutex<HashMap<ItemKey, Slot>> {
+        &self.shards[self.shard_idx(key)]
     }
 }
 
@@ -320,8 +343,15 @@ impl ShardTransport for InProc {
                 (block, false, owner)
             }
         };
+        if freed {
+            self.tombs[self.shard_idx(key)].lock().unwrap().insert(key.clone());
+        }
         self.ledger.on_get(owner, from, block.bytes() as u64, freed);
         Some(block)
+    }
+
+    fn was_freed(&self, key: &ItemKey, _owner: usize) -> bool {
+        self.tombs[self.shard_idx(key)].lock().unwrap().contains(key)
     }
 }
 
@@ -341,6 +371,10 @@ enum Req {
         key: ItemKey,
         from: Option<usize>,
         reply: mpsc::Sender<Option<Arc<DataBlock>>>,
+    },
+    WasFreed {
+        key: ItemKey,
+        reply: mpsc::Sender<bool>,
     },
 }
 
@@ -378,6 +412,7 @@ impl Channel {
     /// when every sender is dropped (transport drop).
     fn serve(node: usize, rx: mpsc::Receiver<Req>, ledger: Ledger) {
         let mut items: HashMap<ItemKey, Slot> = HashMap::new();
+        let mut freed_keys: HashSet<ItemKey> = HashSet::new();
         while let Ok(req) = rx.recv() {
             match req {
                 Req::Put { key, block, get_count, ack } => {
@@ -407,11 +442,15 @@ impl Channel {
                     let hit = consumed.map(|(block, freed)| {
                         if freed {
                             items.remove(&key);
+                            freed_keys.insert(key.clone());
                         }
                         ledger.on_get(node, from, block.bytes() as u64, freed);
                         block
                     });
                     let _ = reply.send(hit);
+                }
+                Req::WasFreed { key, reply } => {
+                    let _ = reply.send(freed_keys.contains(&key));
                 }
             }
         }
@@ -461,6 +500,18 @@ impl ShardTransport for Channel {
             }
         }
         hit
+    }
+
+    fn was_freed(&self, key: &ItemKey, owner: usize) -> bool {
+        let (tx, rx) = mpsc::channel();
+        if self
+            .sender(owner)
+            .send(Req::WasFreed { key: key.clone(), reply: tx })
+            .is_err()
+        {
+            return false; // service thread already gone: no diagnostic refinement
+        }
+        rx.recv().unwrap_or(false)
     }
 }
 

@@ -1,0 +1,1298 @@
+//! The irregular workload family: dynamically coordinated programs over
+//! the [`DynSpace`] pattern layer (`space::dynamic`).
+//!
+//! The 21 static workloads are affine loop nests whose task graphs — and
+//! therefore §4.5 get-counts — are known at mapping time. This family is
+//! the complement: the graph is *discovered* at run time through Linda
+//! `in`/`rd` pattern gets, so no plan can size it. Three shapes:
+//!
+//! - **bag** — a task-bag work queue: seeded tasks spawn 0–2 children up
+//!   to a depth bound; workers drain the bag with a wildcard `in_` until
+//!   a distributed-termination counter closes the collection.
+//! - **pipe3** — a 3-stage producer/consumer pipeline with data-dependent
+//!   fan-out (1–3× then 1–2×) between stages, plus an `Open`-count
+//!   configuration item every sink task `rd`s and an explicit `close`
+//!   cascade drains.
+//! - **refine** — a dynamic-refinement wavefront: cells either split into
+//!   two finer cells or emit a result, pattern-matched with a
+//!   `Range(0, L)` level bound.
+//!
+//! One pure [`DynLogic`] per workload encodes every decision (fan-outs
+//! from a deterministic tag hash, counter protocol, close cascade); three
+//! executors drive it:
+//!
+//! 1. the **engine** ([`DynWorkload::build`]) — real threads blocking on a
+//!    [`DynSpace`], one logical worker per leaf-EDT coordinate of the
+//!    degenerate [`worker_plan`];
+//! 2. the **DES twin** ([`DynWorkload::simulate`]) — a virtual-time
+//!    event loop over the same logic, parking `WaitMatch`/`Wake` trace
+//!    events where the engine parks condvar waiters;
+//! 3. the **sequential oracle** ([`Irregular::oracle`]) — a single-worker
+//!    pure replay giving the closed-form put/get/free counts both
+//!    backends must reproduce exactly (fan-outs depend only on tags, so
+//!    totals are schedule-independent).
+//!
+//! Both engine and DES place logical worker `w` on
+//! `topo.node_of_worker(w, threads)` and route collections to
+//! `coll % nodes`, so remote-get accounting agrees wherever the schedule
+//! does (exactly at 1 thread, in total counts at any width).
+
+use crate::analysis::build_gdg;
+use crate::edt::{map_program, MapOptions};
+use crate::exec::Plan;
+use crate::expr::{Affine, Expr};
+use crate::ir::{Access, ProgramBuilder, StmtSpec};
+use crate::rt::{DynExec, DynSimOutcome, DynWorkload, ExecConfig, LeafExec};
+use crate::sim::des::ns_of;
+use crate::sim::trace::{Acq, EdtId, TaskKind};
+use crate::sim::{SimReport, TraceEvent, TraceMode};
+use crate::space::pattern::first_match;
+use crate::space::{
+    DataBlock, DynCount, DynSpace, FieldPat, ItemKey, LinkModel, Region, TagPattern, Topology,
+};
+use anyhow::{bail, ensure, Result};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// The effect surface the pure logic issues its actions through; each
+/// executor (engine / DES / oracle) interprets it in its own medium.
+pub trait DynFx {
+    /// Burn `flops` floating-point operations of leaf work.
+    fn compute(&mut self, flops: f64);
+    /// Linda `out`: publish `bytes` of payload under `(coll, tag)`.
+    fn put(&mut self, coll: u32, tag: &[i64], bytes: usize, count: DynCount);
+    /// Linda `rd`: non-destructive get; `true` if an item matched.
+    fn rd(&mut self, pat: &TagPattern) -> bool;
+    /// Close a collection (drains its `Open` items).
+    fn close(&mut self, coll: u32);
+    fn is_closed(&self, coll: u32) -> bool;
+    /// Atomically add `v` to termination counter `id`, returning the new
+    /// value — the distributed-termination primitive of every protocol.
+    fn ctr_add(&mut self, id: usize, v: i64) -> i64;
+    fn ctr_read(&self, id: usize) -> i64;
+}
+
+/// The pure decision logic of one irregular workload. `seed` runs once on
+/// logical worker 0; every worker then walks `phases` in order, looping
+/// `in_(pattern)` → `on_take` until the phase's collection is closed and
+/// drained. All data-dependent choices must be pure functions of tags so
+/// every executor agrees on totals.
+pub trait DynLogic: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn n_ctrs(&self) -> usize;
+    fn phases(&self) -> Vec<TagPattern>;
+    fn seed(&self, fx: &mut dyn DynFx);
+    fn on_take(&self, phase: usize, tag: &[i64], fx: &mut dyn DynFx);
+}
+
+/// Deterministic tag hash driving every data-dependent fan-out
+/// (splitmix64-style finalizer — schedule-independent by construction).
+fn h2(a: i64, b: i64) -> u64 {
+    let mut x = (a as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (b as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 31;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 28)
+}
+
+// ---------------------------------------------------------------------
+// bag: task-bag work queue
+// ---------------------------------------------------------------------
+
+const TASK: u32 = 1;
+const BAG_SEEDS: i64 = 4;
+const BAG_DEPTH: i64 = 5;
+const BAG_BYTES: usize = 64;
+const BAG_FLOPS: f64 = 4000.0;
+
+/// Tags are `[depth, id]`; children of `[d, id]` are `[d+1, id*3+j]`
+/// (injective). Counter 0 is the outstanding-task census, seeded with a
+/// guard so it cannot transiently hit zero while seeding is in flight.
+struct Bag;
+
+impl DynLogic for Bag {
+    fn name(&self) -> &'static str {
+        "bag"
+    }
+
+    fn n_ctrs(&self) -> usize {
+        1
+    }
+
+    fn phases(&self) -> Vec<TagPattern> {
+        vec![TagPattern::any(TASK, 2)]
+    }
+
+    fn seed(&self, fx: &mut dyn DynFx) {
+        fx.ctr_add(0, 1); // seeding guard
+        for s in 0..BAG_SEEDS {
+            fx.ctr_add(0, 1);
+            fx.put(TASK, &[0, s], BAG_BYTES, DynCount::Known(1));
+        }
+        if fx.ctr_add(0, -1) == 0 {
+            fx.close(TASK);
+        }
+    }
+
+    fn on_take(&self, _phase: usize, tag: &[i64], fx: &mut dyn DynFx) {
+        let (d, id) = (tag[0], tag[1]);
+        fx.compute(BAG_FLOPS);
+        if d + 1 < BAG_DEPTH {
+            let fanout = h2(d, id) % 3; // 0..=2 children
+            for j in 0..fanout as i64 {
+                fx.ctr_add(0, 1); // child counted before it is visible
+                fx.put(TASK, &[d + 1, id * 3 + j], BAG_BYTES, DynCount::Known(1));
+            }
+        }
+        if fx.ctr_add(0, -1) == 0 {
+            fx.close(TASK);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// pipe3: 3-stage pipeline with data-dependent fan-out
+// ---------------------------------------------------------------------
+
+const S0: u32 = 1;
+const S1: u32 = 2;
+const S2: u32 = 3;
+const CONFIG: u32 = 4;
+const PIPE_N0: i64 = 6;
+const PIPE_BYTES: [usize; 3] = [128, 64, 32];
+const CONFIG_BYTES: usize = 16;
+const PIPE_FLOPS: [f64; 3] = [3000.0, 2000.0, 1000.0];
+
+/// Counters 0/1/2 census stages S0/S1/S2. A stage's output collection
+/// closes when its input census hits zero *and* the input collection is
+/// closed; both the last decrementer and the closer of the input check
+/// the combined condition, so the close cascade cannot be lost to the
+/// race between them. `CONFIG` holds one `Open` item every sink task
+/// `rd`s; closing it last drains that item, keeping the run leak-free.
+struct Pipe3;
+
+fn pipe_close_s2(fx: &mut dyn DynFx) {
+    fx.close(S2);
+    if fx.ctr_read(2) == 0 {
+        fx.close(CONFIG);
+    }
+}
+
+fn pipe_close_s1(fx: &mut dyn DynFx) {
+    fx.close(S1);
+    if fx.ctr_read(1) == 0 {
+        pipe_close_s2(fx);
+    }
+}
+
+impl DynLogic for Pipe3 {
+    fn name(&self) -> &'static str {
+        "pipe3"
+    }
+
+    fn n_ctrs(&self) -> usize {
+        3
+    }
+
+    fn phases(&self) -> Vec<TagPattern> {
+        vec![
+            TagPattern::any(S0, 1),
+            TagPattern::any(S1, 2),
+            TagPattern::any(S2, 3),
+        ]
+    }
+
+    fn seed(&self, fx: &mut dyn DynFx) {
+        fx.put(CONFIG, &[0], CONFIG_BYTES, DynCount::Open);
+        fx.ctr_add(0, 1); // seeding guard
+        for i in 0..PIPE_N0 {
+            fx.ctr_add(0, 1);
+            fx.put(S0, &[i], PIPE_BYTES[0], DynCount::Known(1));
+        }
+        fx.close(S0); // worker 0 is the only S0 producer
+        if fx.ctr_add(0, -1) == 0 {
+            pipe_close_s1(fx);
+        }
+    }
+
+    fn on_take(&self, phase: usize, tag: &[i64], fx: &mut dyn DynFx) {
+        fx.compute(PIPE_FLOPS[phase]);
+        match phase {
+            0 => {
+                let i = tag[0];
+                let k1 = 1 + (h2(1, i) % 3) as i64; // 1..=3
+                for j in 0..k1 {
+                    fx.ctr_add(1, 1);
+                    fx.put(S1, &[i, j], PIPE_BYTES[1], DynCount::Known(1));
+                }
+                if fx.ctr_add(0, -1) == 0 {
+                    pipe_close_s1(fx);
+                }
+            }
+            1 => {
+                let (i, j) = (tag[0], tag[1]);
+                let k2 = 1 + (h2(2, i * 7 + j) % 2) as i64; // 1..=2
+                for l in 0..k2 {
+                    fx.ctr_add(2, 1);
+                    fx.put(S2, &[i, j, l], PIPE_BYTES[2], DynCount::Known(1));
+                }
+                if fx.ctr_add(1, -1) == 0 && fx.is_closed(S1) {
+                    pipe_close_s2(fx);
+                }
+            }
+            _ => {
+                // sink: consult the shared Open config item, then retire
+                let seen = fx.rd(&TagPattern::exact(CONFIG, &[0]));
+                debug_assert!(seen, "CONFIG is published before any S2 item");
+                if fx.ctr_add(2, -1) == 0 && fx.is_closed(S2) {
+                    fx.close(CONFIG);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// refine: dynamic-refinement wavefront
+// ---------------------------------------------------------------------
+
+const CELLS: u32 = 1;
+const RESULT: u32 = 2;
+const REFINE_ROOTS: i64 = 3;
+const REFINE_LMAX: i64 = 4;
+const CELL_BYTES: usize = 96;
+const RESULT_BYTES: usize = 32;
+const CELL_FLOPS: f64 = 2500.0;
+const RESULT_FLOPS: f64 = 500.0;
+
+/// Cells are `[level, x]`; a cell either refines into `[level+1, 2x]`
+/// and `[level+1, 2x+1]` (3-in-4 tag-hash chance, level-capped) or emits
+/// a result. Phase 0 matches cells with a `Range(0, LMAX)` level bound;
+/// phase 1 drains results. Counter 0 censuses cells, counter 1 results.
+struct Refine;
+
+fn refine_close_cells(fx: &mut dyn DynFx) {
+    fx.close(CELLS);
+    if fx.ctr_read(1) == 0 {
+        fx.close(RESULT);
+    }
+}
+
+impl DynLogic for Refine {
+    fn name(&self) -> &'static str {
+        "refine"
+    }
+
+    fn n_ctrs(&self) -> usize {
+        2
+    }
+
+    fn phases(&self) -> Vec<TagPattern> {
+        vec![
+            TagPattern::new(CELLS, vec![FieldPat::Range(0, REFINE_LMAX), FieldPat::Wildcard]),
+            TagPattern::any(RESULT, 2),
+        ]
+    }
+
+    fn seed(&self, fx: &mut dyn DynFx) {
+        fx.ctr_add(0, 1); // seeding guard
+        for r in 0..REFINE_ROOTS {
+            fx.ctr_add(0, 1);
+            fx.put(CELLS, &[0, r], CELL_BYTES, DynCount::Known(1));
+        }
+        if fx.ctr_add(0, -1) == 0 {
+            refine_close_cells(fx);
+        }
+    }
+
+    fn on_take(&self, phase: usize, tag: &[i64], fx: &mut dyn DynFx) {
+        if phase == 0 {
+            let (l, x) = (tag[0], tag[1]);
+            fx.compute(CELL_FLOPS);
+            if l < REFINE_LMAX && h2(l, x) % 4 != 0 {
+                for c in 0..2 {
+                    fx.ctr_add(0, 1);
+                    fx.put(CELLS, &[l + 1, 2 * x + c], CELL_BYTES, DynCount::Known(1));
+                }
+            } else {
+                fx.ctr_add(1, 1);
+                fx.put(RESULT, &[l, x], RESULT_BYTES, DynCount::Known(1));
+            }
+            if fx.ctr_add(0, -1) == 0 {
+                refine_close_cells(fx);
+            }
+        } else {
+            fx.compute(RESULT_FLOPS);
+            if fx.ctr_add(1, -1) == 0 && fx.is_closed(CELLS) {
+                fx.close(RESULT);
+            }
+        }
+    }
+}
+
+/// A logic that seeds nothing and waits on a collection nobody produces:
+/// every worker parks, which must surface as the loud deadlock diagnostic
+/// (space poison on the engine, an `Err` from the DES) — the probe the
+/// deadlock-detection tests drive through both backends.
+struct DeadlockProbe;
+
+impl DynLogic for DeadlockProbe {
+    fn name(&self) -> &'static str {
+        "deadlock-probe"
+    }
+
+    fn n_ctrs(&self) -> usize {
+        0
+    }
+
+    fn phases(&self) -> Vec<TagPattern> {
+        vec![TagPattern::any(99, 1)]
+    }
+
+    fn seed(&self, _fx: &mut dyn DynFx) {}
+
+    fn on_take(&self, _phase: usize, _tag: &[i64], _fx: &mut dyn DynFx) {
+        unreachable!("nothing is ever published into collection 99")
+    }
+}
+
+// ---------------------------------------------------------------------
+// the workload wrapper + lookup
+// ---------------------------------------------------------------------
+
+/// One irregular workload: the pure logic plus its three executors.
+pub struct Irregular {
+    logic: Arc<dyn DynLogic>,
+}
+
+/// The CLI names of the irregular family (deliberately *not* part of
+/// `workloads::registry()` — these have no `ir::Program`, no sequential
+/// array oracle, and no static plan, so every consumer of the registry's
+/// affine contract would break on them).
+pub fn names() -> [&'static str; 3] {
+    ["bag", "pipe3", "refine"]
+}
+
+/// Case-insensitive lookup, mirroring `workloads::by_name`.
+pub fn by_name(name: &str) -> Option<Arc<Irregular>> {
+    let logic: Arc<dyn DynLogic> = match name.to_ascii_lowercase().as_str() {
+        "bag" => Arc::new(Bag),
+        "pipe3" => Arc::new(Pipe3),
+        "refine" => Arc::new(Refine),
+        _ => return None,
+    };
+    Some(Arc::new(Irregular { logic }))
+}
+
+/// The all-park probe for deadlock-detection tests.
+pub fn deadlock_probe() -> Arc<Irregular> {
+    Arc::new(Irregular { logic: Arc::new(DeadlockProbe) })
+}
+
+/// The degenerate launch plan: a `threads`-wide doall whose only job is
+/// giving the engine one leaf EDT per logical worker (`coords[0] = w`).
+/// All real structure lives in the tuple space.
+pub fn worker_plan(threads: usize) -> Result<Arc<Plan>> {
+    let w = threads.max(1) as i64;
+    let mut pb = ProgramBuilder::new("dynworkers");
+    let n = pb.param("W", w);
+    let a = pb.array("A", 1);
+    pb.stmt(
+        StmtSpec::new("S")
+            .dim(Expr::constant(0), Expr::offset(&Expr::param(n), -1))
+            .write(Access::new(a, vec![Affine::var(1, 1, 0)]))
+            .flops(1.0),
+    );
+    let prog = pb.build();
+    let gdg = build_gdg(&prog);
+    let tree = map_program(&prog, &gdg, &MapOptions { tile_sizes: vec![1], ..Default::default() })?;
+    Ok(Arc::new(Plan::from_tree(&tree, vec![w])))
+}
+
+/// Closed-form totals from the sequential oracle; `tasks` counts
+/// destructive takes only (the seed step is not a take).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Oracle {
+    pub puts: u64,
+    pub gets: u64,
+    pub frees: u64,
+    pub tasks: u64,
+}
+
+impl Irregular {
+    pub fn logic_name(&self) -> &'static str {
+        self.logic.name()
+    }
+
+    /// Single-worker pure replay: the exact put/get/free totals every
+    /// backend must report (fan-outs are tag-pure, so totals are
+    /// schedule-independent). Panics if the protocol wedges — a seeding
+    /// or close-cascade bug, caught by the unit tests below.
+    pub fn oracle(&self) -> Oracle {
+        let mut fx = SeqFx::new(self.logic.n_ctrs());
+        self.logic.seed(&mut fx);
+        for (p, pat) in self.logic.phases().iter().enumerate() {
+            while let Some(tag) = fx.take(pat) {
+                fx.tasks += 1;
+                self.logic.on_take(p, &tag, &mut fx);
+            }
+        }
+        assert_eq!(fx.puts, fx.frees, "oracle run must be leak-free");
+        Oracle { puts: fx.puts, gets: fx.gets, frees: fx.frees, tasks: fx.tasks }
+    }
+
+    /// Total leaf flops of one complete run (the Gflop/s denominator).
+    pub fn total_flops(&self) -> f64 {
+        let mut fx = SeqFx::new(self.logic.n_ctrs());
+        self.logic.seed(&mut fx);
+        for (p, pat) in self.logic.phases().iter().enumerate() {
+            while let Some(tag) = fx.take(pat) {
+                self.logic.on_take(p, &tag, &mut fx);
+            }
+        }
+        fx.flops
+    }
+}
+
+impl DynWorkload for Irregular {
+    fn name(&self) -> &'static str {
+        self.logic.name()
+    }
+
+    fn build(&self, cfg: &ExecConfig, topo: &Topology) -> Result<DynExec> {
+        let workers = cfg.threads.max(1);
+        let space = Arc::new(DynSpace::new(
+            topo.clone(),
+            cfg.transport,
+            LinkModel::from_cost(&cfg.cost),
+            workers,
+        ));
+        let leaf = Arc::new(IrregularLeaf {
+            logic: self.logic.clone(),
+            space: space.clone(),
+            workers,
+            ctrs: (0..self.logic.n_ctrs()).map(|_| AtomicI64::new(0)).collect(),
+        });
+        Ok(DynExec { leaf, space })
+    }
+
+    fn simulate(&self, cfg: &ExecConfig, topo: &Topology) -> Result<DynSimOutcome> {
+        simulate_dyn(self.logic.as_ref(), cfg, topo)
+    }
+}
+
+// ---------------------------------------------------------------------
+// executor 1: the sequential oracle
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct SeqColl {
+    items: BTreeMap<Box<[i64]>, (usize, DynCount)>,
+    closed: bool,
+}
+
+struct SeqFx {
+    colls: HashMap<u32, SeqColl>,
+    ctrs: Vec<i64>,
+    puts: u64,
+    gets: u64,
+    frees: u64,
+    tasks: u64,
+    flops: f64,
+}
+
+impl SeqFx {
+    fn new(n_ctrs: usize) -> SeqFx {
+        SeqFx {
+            colls: HashMap::new(),
+            ctrs: vec![0; n_ctrs],
+            puts: 0,
+            gets: 0,
+            frees: 0,
+            tasks: 0,
+            flops: 0.0,
+        }
+    }
+
+    fn take(&mut self, pat: &TagPattern) -> Option<Box<[i64]>> {
+        let coll = self.colls.entry(pat.coll).or_default();
+        if let Some((tag, _)) = first_match(&coll.items, pat) {
+            let tag = tag.clone();
+            let freed = {
+                let slot = coll.items.get_mut(&tag).unwrap();
+                match &mut slot.1 {
+                    DynCount::Known(n) => {
+                        *n -= 1;
+                        *n == 0
+                    }
+                    DynCount::Open => true,
+                }
+            };
+            if freed {
+                coll.items.remove(&tag);
+                self.frees += 1;
+            }
+            self.gets += 1;
+            return Some(tag);
+        }
+        assert!(
+            coll.closed,
+            "sequential oracle wedged: no match in open collection {} — \
+             a seeding or close-cascade protocol bug",
+            pat.coll
+        );
+        None
+    }
+}
+
+impl DynFx for SeqFx {
+    fn compute(&mut self, flops: f64) {
+        self.flops += flops;
+    }
+
+    fn put(&mut self, coll: u32, tag: &[i64], bytes: usize, count: DynCount) {
+        self.puts += 1;
+        if count == DynCount::Known(0) {
+            self.frees += 1;
+            return;
+        }
+        let c = self.colls.entry(coll).or_default();
+        assert!(!c.closed, "oracle put into closed collection {coll}");
+        let prev = c.items.insert(tag.into(), (bytes, count));
+        assert!(prev.is_none(), "oracle double put in collection {coll}");
+    }
+
+    fn rd(&mut self, pat: &TagPattern) -> bool {
+        self.gets += 1;
+        self.colls
+            .get(&pat.coll)
+            .is_some_and(|c| first_match(&c.items, pat).is_some())
+    }
+
+    fn close(&mut self, coll: u32) {
+        let c = self.colls.entry(coll).or_default();
+        if c.closed {
+            return;
+        }
+        c.closed = true;
+        let open: Vec<Box<[i64]>> = c
+            .items
+            .iter()
+            .filter(|(_, s)| s.1 == DynCount::Open)
+            .map(|(t, _)| t.clone())
+            .collect();
+        for t in open {
+            c.items.remove(&t);
+            self.frees += 1;
+        }
+    }
+
+    fn is_closed(&self, coll: u32) -> bool {
+        self.colls.get(&coll).is_some_and(|c| c.closed)
+    }
+
+    fn ctr_add(&mut self, id: usize, v: i64) -> i64 {
+        self.ctrs[id] += v;
+        self.ctrs[id]
+    }
+
+    fn ctr_read(&self, id: usize) -> i64 {
+        self.ctrs[id]
+    }
+}
+
+// ---------------------------------------------------------------------
+// executor 2: the real engine
+// ---------------------------------------------------------------------
+
+/// One leaf instance per logical worker: worker 0 seeds, then every
+/// worker drains the phases, blocking on the space between matches. The
+/// pool must grant each logical worker its own thread (the degenerate
+/// plan is exactly `threads` wide), since a parked waiter holds its
+/// thread — the deadlock census ranges over this worker count.
+struct IrregularLeaf {
+    logic: Arc<dyn DynLogic>,
+    space: Arc<DynSpace>,
+    workers: usize,
+    ctrs: Vec<AtomicI64>,
+}
+
+impl LeafExec for IrregularLeaf {
+    fn run_leaf(&self, _plan: &Plan, _node_id: u32, coords: &[i64]) {
+        let w = coords[0].max(0) as usize;
+        let node = self.space.topology().node_of_worker(w, self.workers);
+        let mut fx = EngineFx { space: &self.space, ctrs: &self.ctrs, node, sink: 1.0 };
+        if w == 0 {
+            self.logic.seed(&mut fx);
+        }
+        for (p, pat) in self.logic.phases().iter().enumerate() {
+            while let Some((tag, _block)) = self.space.in_(pat, node) {
+                self.logic.on_take(p, &tag, &mut fx);
+            }
+        }
+        self.space.worker_exit();
+        std::hint::black_box(fx.sink);
+    }
+}
+
+struct EngineFx<'a> {
+    space: &'a DynSpace,
+    ctrs: &'a [AtomicI64],
+    node: usize,
+    sink: f32,
+}
+
+/// The engine-side payload: `bytes/4` f32 points stamped with the tag's
+/// leading coordinate (a real datablock, so byte accounting is live).
+fn payload(bytes: usize, tag: &[i64]) -> DataBlock {
+    let n = (bytes / 4).max(1);
+    DataBlock::new(vec![Region {
+        array: 0,
+        lo: vec![0].into(),
+        hi: vec![n as i64 - 1].into(),
+        data: vec![tag.first().copied().unwrap_or(0) as f32; n].into(),
+    }])
+}
+
+impl DynFx for EngineFx<'_> {
+    fn compute(&mut self, flops: f64) {
+        // ~2 flops per iteration; kept live through the sink
+        let mut x = self.sink;
+        for _ in 0..(flops / 2.0) as usize {
+            x = x * 1.000_000_1 + 1e-9;
+        }
+        self.sink = std::hint::black_box(x);
+    }
+
+    fn put(&mut self, coll: u32, tag: &[i64], bytes: usize, count: DynCount) {
+        self.space.put_dyn(ItemKey::new(coll, tag), payload(bytes, tag), count);
+    }
+
+    fn rd(&mut self, pat: &TagPattern) -> bool {
+        self.space.rd(pat, self.node).is_some()
+    }
+
+    fn close(&mut self, coll: u32) {
+        self.space.close(coll);
+    }
+
+    fn is_closed(&self, coll: u32) -> bool {
+        self.space.is_closed(coll)
+    }
+
+    fn ctr_add(&mut self, id: usize, v: i64) -> i64 {
+        self.ctrs[id].fetch_add(v, Ordering::SeqCst) + v
+    }
+
+    fn ctr_read(&self, id: usize) -> i64 {
+        self.ctrs[id].load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------
+// executor 3: the DES twin
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct VColl {
+    items: BTreeMap<Box<[i64]>, (u64, DynCount)>,
+    closed: bool,
+    /// FIFO park order — the wake order the wake-order test pins down.
+    waiters: VecDeque<usize>,
+}
+
+#[derive(Clone, Copy)]
+enum WSt {
+    Seed,
+    Take(usize),
+    Parked { phase: usize, wait_id: u64, since: u64 },
+    Finished,
+}
+
+struct SimState {
+    colls: HashMap<u32, VColl>,
+    ctrs: Vec<i64>,
+    nodes: usize,
+    /// Logical worker → home node (`topo.node_of_worker`), fixed at launch.
+    node_of: Vec<usize>,
+    heap: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    seq: u64,
+    wst: Vec<WSt>,
+    // accounting (mirrors the engine's Ledger)
+    puts: u64,
+    gets: u64,
+    frees: u64,
+    local_gets: u64,
+    remote_gets: u64,
+    remote_bytes: u64,
+    live: u64,
+    peak: u64,
+    node_live: Vec<u64>,
+    node_peak: Vec<u64>,
+    // timing
+    work_ns: u64,
+    busy_ns: u64,
+    flops: f64,
+    makespan: u64,
+    // trace
+    events: Vec<TraceEvent>,
+    trace: TraceMode,
+    next_wait: u64,
+}
+
+impl SimState {
+    fn home(&self, coll: u32) -> usize {
+        if self.nodes <= 1 {
+            0
+        } else {
+            coll as usize % self.nodes
+        }
+    }
+
+    fn push(&mut self, t: u64, w: usize) {
+        self.heap.push(Reverse((t, self.seq, w)));
+        self.seq += 1;
+    }
+
+    fn emit(&mut self, ev: TraceEvent) {
+        if self.trace != TraceMode::Off {
+            self.events.push(ev);
+        }
+    }
+
+    fn emit_data(&mut self, ev: TraceEvent) {
+        if self.trace == TraceMode::Full {
+            self.events.push(ev);
+        }
+    }
+
+    fn account_put(&mut self, home: usize, bytes: u64, transient: bool) {
+        self.puts += 1;
+        if transient {
+            self.frees += 1;
+            return;
+        }
+        self.live += bytes;
+        self.peak = self.peak.max(self.live);
+        self.node_live[home] += bytes;
+        self.node_peak[home] = self.node_peak[home].max(self.node_live[home]);
+    }
+
+    fn account_free(&mut self, home: usize, bytes: u64) {
+        self.frees += 1;
+        self.live -= bytes;
+        self.node_live[home] -= bytes;
+    }
+
+    /// Wake every waiter parked on `coll` at time `t` (puts and closes
+    /// wake; the woken worker re-attempts its phase take at `t`).
+    fn wake_waiters(&mut self, coll: u32, t: u64) {
+        let ws: Vec<usize> = match self.colls.get_mut(&coll) {
+            Some(c) => c.waiters.drain(..).collect(),
+            None => return,
+        };
+        for w in ws {
+            let WSt::Parked { phase, wait_id, since } = self.wst[w] else {
+                unreachable!("waiter queue holds only parked workers");
+            };
+            let node = self.node_of[w];
+            self.emit(TraceEvent::Wake {
+                t,
+                i: wait_id,
+                worker: w as u32,
+                node: node as u32,
+                coll,
+                waited: t - since,
+            });
+            self.wst[w] = WSt::Take(phase);
+            self.push(t, w);
+        }
+    }
+}
+
+/// The per-effect interpreter the logic runs against inside one take:
+/// advances the worker's virtual cursor per effect and applies the state
+/// change immediately (stamped at the cursor), waking parked workers.
+struct DesFx<'a> {
+    s: &'a mut SimState,
+    cost: &'a crate::sim::CostModel,
+    flops_rate: f64,
+    node: usize,
+    inst: u64,
+    t: u64,
+}
+
+impl DynFx for DesFx<'_> {
+    fn compute(&mut self, flops: f64) {
+        let ns = ns_of(flops / self.flops_rate * 1e9);
+        self.t += ns;
+        self.s.work_ns += ns;
+        self.s.flops += flops;
+    }
+
+    fn put(&mut self, coll: u32, tag: &[i64], bytes: usize, count: DynCount) {
+        let home = self.s.home(coll);
+        self.t += ns_of(self.cost.space_put_ns + bytes as f64 * self.cost.space_copy_ns_per_byte);
+        let transient = count == DynCount::Known(0);
+        if !transient {
+            let c = self.s.colls.entry(coll).or_default();
+            assert!(!c.closed, "DES put into closed collection {coll}");
+            let prev = c.items.insert(tag.into(), (bytes as u64, count));
+            assert!(prev.is_none(), "DES double put in collection {coll}");
+        }
+        self.s.account_put(home, bytes as u64, transient);
+        self.s.emit_data(TraceEvent::Put {
+            t: self.t,
+            i: self.inst,
+            key: (coll, tag.into()),
+            bytes: bytes as u64,
+            node: home as u32,
+        });
+        if transient {
+            // zero-consumer put: reclaimed on arrival, like the engine
+            self.s.emit_data(TraceEvent::Free { t: self.t, i: self.inst, key: (coll, tag.into()) });
+        }
+        self.s.wake_waiters(coll, self.t);
+    }
+
+    fn rd(&mut self, pat: &TagPattern) -> bool {
+        let home = self.s.home(pat.coll);
+        let hit = self
+            .s
+            .colls
+            .get(&pat.coll)
+            .and_then(|c| first_match(&c.items, pat).map(|(t, s)| (t.clone(), s.0)));
+        let Some((tag, bytes)) = hit else {
+            return false; // non-blocking here: the logics only rd guaranteed items
+        };
+        let remote = self.node != home;
+        self.t += ns_of(self.cost.space_get_ns)
+            + if remote { ns_of(self.cost.remote_transfer_ns(bytes)) } else { 0 };
+        self.s.gets += 1;
+        if remote {
+            self.s.remote_gets += 1;
+            self.s.remote_bytes += bytes;
+        } else {
+            self.s.local_gets += 1;
+        }
+        self.s.emit_data(TraceEvent::Get {
+            t: self.t,
+            i: self.inst,
+            key: (pat.coll, tag),
+            bytes,
+            from: home as u32,
+            to: self.node as u32,
+            remote,
+        });
+        true
+    }
+
+    fn close(&mut self, coll: u32) {
+        let home = self.s.home(coll);
+        let drained: Vec<(Box<[i64]>, u64)> = {
+            let c = self.s.colls.entry(coll).or_default();
+            if c.closed {
+                return;
+            }
+            c.closed = true;
+            let open: Vec<Box<[i64]>> = c
+                .items
+                .iter()
+                .filter(|(_, s)| s.1 == DynCount::Open)
+                .map(|(t, _)| t.clone())
+                .collect();
+            open.into_iter()
+                .map(|t| {
+                    let (bytes, _) = c.items.remove(&t).unwrap();
+                    (t, bytes)
+                })
+                .collect()
+        };
+        for (tag, bytes) in drained {
+            self.s.account_free(home, bytes);
+            self.s.emit_data(TraceEvent::Free {
+                t: self.t,
+                i: self.inst,
+                key: (coll, tag),
+            });
+        }
+        self.s.wake_waiters(coll, self.t);
+    }
+
+    fn is_closed(&self, coll: u32) -> bool {
+        self.s.colls.get(&coll).is_some_and(|c| c.closed)
+    }
+
+    fn ctr_add(&mut self, id: usize, v: i64) -> i64 {
+        self.s.ctrs[id] += v;
+        self.s.ctrs[id]
+    }
+
+    fn ctr_read(&self, id: usize) -> i64 {
+        self.s.ctrs[id]
+    }
+}
+
+/// Deterministic virtual-time twin of the engine execution: same logic,
+/// same `first_match` selection, same collection-home routing; parks are
+/// `WaitMatch` events on a per-collection FIFO instead of condvar
+/// waiters, woken by matching puts and closes. Effects apply eagerly at
+/// the issuing worker's cursor — events already in the heap at earlier
+/// stamps may observe them (a deliberate approximation; totals and
+/// termination are schedule-independent, and at 1 thread the interleaving
+/// is exact).
+fn simulate_dyn(
+    logic: &dyn DynLogic,
+    cfg: &ExecConfig,
+    topo: &Topology,
+) -> Result<DynSimOutcome> {
+    let workers = cfg.threads.max(1);
+    let nodes = topo.nodes();
+    let phases = logic.phases();
+    let flops_rate = cfg.machine.worker_flops(workers);
+    let node_of: Vec<usize> = (0..workers).map(|w| topo.node_of_worker(w, workers)).collect();
+    let mut s = SimState {
+        colls: HashMap::new(),
+        ctrs: vec![0; logic.n_ctrs()],
+        nodes,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        wst: (0..workers)
+            .map(|w| if w == 0 { WSt::Seed } else { WSt::Take(0) })
+            .collect(),
+        puts: 0,
+        gets: 0,
+        frees: 0,
+        local_gets: 0,
+        remote_gets: 0,
+        remote_bytes: 0,
+        live: 0,
+        peak: 0,
+        node_live: vec![0; nodes],
+        node_peak: vec![0; nodes],
+        work_ns: 0,
+        busy_ns: 0,
+        flops: 0.0,
+        makespan: 0,
+        events: Vec::new(),
+        trace: cfg.trace,
+        next_wait: 0,
+        node_of,
+    };
+    let mut next_inst: u64 = 0;
+    let mut tasks: u64 = 0;
+    // Non-seeding workers are scheduled first: they find an empty space
+    // and park, exactly as the engine's non-seed threads block until the
+    // seed's first puts land.
+    for w in (0..workers).rev() {
+        s.push(0, w);
+    }
+    while let Some(Reverse((t, _, w))) = s.heap.pop() {
+        let node = s.node_of[w];
+        match s.wst[w] {
+            WSt::Finished => {}
+            WSt::Parked { .. } => unreachable!("parked workers are only scheduled by wakes"),
+            WSt::Seed => {
+                let inst = next_inst;
+                next_inst += 1;
+                s.emit(TraceEvent::Spawn {
+                    t,
+                    i: inst,
+                    id: EdtId { kind: TaskKind::Startup, node: 0, coords: Box::new([]) },
+                    by: None,
+                });
+                s.emit(TraceEvent::Ready { t, i: inst, by: None, et: None, bp: None, bt: None });
+                s.emit(TraceEvent::Start {
+                    t,
+                    i: inst,
+                    worker: w as u32,
+                    node: node as u32,
+                    acq: Acq::Own,
+                });
+                let cursor = t + ns_of(cfg.cost.dispatch_ns);
+                let mut fx = DesFx {
+                    s: &mut s,
+                    cost: &cfg.cost,
+                    flops_rate,
+                    node,
+                    inst,
+                    t: cursor,
+                };
+                logic.seed(&mut fx);
+                let done = fx.t;
+                s.emit(TraceEvent::Done {
+                    t: done,
+                    i: inst,
+                    dur: (done - t) as f64,
+                    misses: 0,
+                });
+                s.busy_ns += done - t;
+                s.makespan = s.makespan.max(done);
+                tasks += 1;
+                s.wst[w] = WSt::Take(0);
+                s.push(done, w);
+            }
+            WSt::Take(p) => {
+                if p >= phases.len() {
+                    s.wst[w] = WSt::Finished;
+                    s.makespan = s.makespan.max(t);
+                    continue;
+                }
+                let pat = &phases[p];
+                let home = s.home(pat.coll);
+                // deterministic selection + consume, mirroring DynSpace::take
+                let hit = s.colls.get_mut(&pat.coll).and_then(|c| {
+                    let tag = first_match(&c.items, pat).map(|(tg, _)| tg.clone())?;
+                    let (bytes, freed) = {
+                        let slot = c.items.get_mut(&tag).unwrap();
+                        let freed = match &mut slot.1 {
+                            DynCount::Known(n) => {
+                                *n -= 1;
+                                *n == 0
+                            }
+                            DynCount::Open => true,
+                        };
+                        (slot.0, freed)
+                    };
+                    if freed {
+                        c.items.remove(&tag);
+                    }
+                    Some((tag, bytes, freed))
+                });
+                if let Some((tag, bytes, freed)) = hit {
+                    let inst = next_inst;
+                    next_inst += 1;
+                    let remote = node != home;
+                    s.gets += 1;
+                    if remote {
+                        s.remote_gets += 1;
+                        s.remote_bytes += bytes;
+                    } else {
+                        s.local_gets += 1;
+                    }
+                    s.emit(TraceEvent::Spawn {
+                        t,
+                        i: inst,
+                        id: EdtId {
+                            kind: TaskKind::Worker,
+                            node: pat.coll,
+                            coords: tag.clone(),
+                        },
+                        by: None,
+                    });
+                    s.emit(TraceEvent::Ready {
+                        t,
+                        i: inst,
+                        by: None,
+                        et: None,
+                        bp: None,
+                        bt: None,
+                    });
+                    s.emit(TraceEvent::Start {
+                        t,
+                        i: inst,
+                        worker: w as u32,
+                        node: node as u32,
+                        acq: Acq::Own,
+                    });
+                    let mut cursor = t
+                        + ns_of(cfg.cost.dispatch_ns)
+                        + ns_of(cfg.cost.space_get_ns)
+                        + if remote { ns_of(cfg.cost.remote_transfer_ns(bytes)) } else { 0 };
+                    s.emit_data(TraceEvent::Get {
+                        t: cursor,
+                        i: inst,
+                        key: (pat.coll, tag.clone()),
+                        bytes,
+                        from: home as u32,
+                        to: node as u32,
+                        remote,
+                    });
+                    if freed {
+                        s.account_free(home, bytes);
+                        s.emit_data(TraceEvent::Free {
+                            t: cursor,
+                            i: inst,
+                            key: (pat.coll, tag.clone()),
+                        });
+                    }
+                    let mut fx = DesFx {
+                        s: &mut s,
+                        cost: &cfg.cost,
+                        flops_rate,
+                        node,
+                        inst,
+                        t: cursor,
+                    };
+                    logic.on_take(p, &tag, &mut fx);
+                    cursor = fx.t;
+                    s.emit(TraceEvent::Done {
+                        t: cursor,
+                        i: inst,
+                        dur: (cursor - t) as f64,
+                        misses: 0,
+                    });
+                    s.busy_ns += cursor - t;
+                    s.makespan = s.makespan.max(cursor);
+                    tasks += 1;
+                    s.push(cursor, w);
+                } else if s.colls.get(&pat.coll).is_some_and(|c| c.closed) {
+                    // phase drained: probe cost, move on
+                    s.wst[w] = WSt::Take(p + 1);
+                    s.push(t + ns_of(cfg.cost.space_get_ns), w);
+                } else {
+                    // park on the collection's FIFO
+                    let wait_id = s.next_wait;
+                    s.next_wait += 1;
+                    s.emit(TraceEvent::WaitMatch {
+                        t,
+                        i: wait_id,
+                        worker: w as u32,
+                        node: node as u32,
+                        coll: pat.coll,
+                    });
+                    s.colls.entry(pat.coll).or_default().waiters.push_back(w);
+                    s.wst[w] = WSt::Parked { phase: p, wait_id, since: t };
+                }
+            }
+        }
+    }
+    let stuck: Vec<usize> = (0..workers)
+        .filter(|&w| matches!(s.wst[w], WSt::Parked { .. }))
+        .collect();
+    if !stuck.is_empty() {
+        bail!(
+            "dynamic-space deadlock: workers {stuck:?} parked on an empty space with \
+             no runnable producer left ({} of {workers} parked)",
+            stuck.len()
+        );
+    }
+    ensure!(s.live == 0, "DES run leaked {} live bytes", s.live);
+    let seconds = s.makespan as f64 / 1e9;
+    let report = SimReport {
+        seconds,
+        gflops: if seconds > 0.0 { s.flops / seconds / 1e9 } else { 0.0 },
+        tasks,
+        steals: 0,
+        failed_gets: 0,
+        work_ratio: if s.busy_ns > 0 { s.work_ns as f64 / s.busy_ns as f64 } else { 0.0 },
+        space_puts: s.puts,
+        space_gets: s.gets,
+        space_frees: s.frees,
+        space_peak_bytes: s.peak,
+        space_local_gets: s.local_gets,
+        space_remote_gets: s.remote_gets,
+        space_remote_bytes: s.remote_bytes,
+        node_peak_bytes: s.node_peak.clone(),
+        stolen_edts: 0,
+        steal_bytes: 0,
+    };
+    Ok(DynSimOutcome { report, events: s.events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{DataPlane, Placement};
+
+    fn sim_cfg(threads: usize) -> ExecConfig {
+        ExecConfig {
+            threads,
+            plane: DataPlane::Space,
+            trace: TraceMode::Full,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn oracles_are_leak_free_and_deterministic() {
+        for name in names() {
+            let w = by_name(name).unwrap();
+            let o = w.oracle();
+            assert_eq!(o.puts, o.frees, "{name}: every put must be reclaimed");
+            assert!(o.tasks > 0, "{name}");
+            assert_eq!(o, w.oracle(), "{name}: oracle must be deterministic");
+            assert!(w.total_flops() > 0.0, "{name}");
+        }
+        assert!(by_name("BAG").is_some(), "lookup is case-insensitive");
+        assert!(by_name("jac2d").is_none(), "static workloads stay in the registry");
+    }
+
+    #[test]
+    fn bag_oracle_counts() {
+        let o = by_name("bag").unwrap().oracle();
+        // every bag item is consumed destructively exactly once
+        assert_eq!(o.gets, o.puts);
+        assert_eq!(o.tasks, o.puts);
+        assert!(o.puts > BAG_SEEDS as u64, "children were spawned");
+    }
+
+    #[test]
+    fn pipe3_oracle_counts() {
+        let o = by_name("pipe3").unwrap().oracle();
+        // gets = destructive takes + one rd per sink task; the only
+        // non-taken put is the Open CONFIG item (drained by close)
+        assert_eq!(o.tasks, o.puts - 1);
+        assert!(o.gets > o.tasks, "sink rds add non-destructive gets");
+    }
+
+    #[test]
+    fn refine_oracle_counts() {
+        let o = by_name("refine").unwrap().oracle();
+        assert_eq!(o.gets, o.puts, "all-destructive: gets == puts");
+        assert!(o.puts > REFINE_ROOTS as u64);
+    }
+
+    #[test]
+    fn des_matches_the_oracle_at_any_width() {
+        for name in names() {
+            let w = by_name(name).unwrap();
+            let o = w.oracle();
+            for threads in [1, 4] {
+                let out = w.simulate(&sim_cfg(threads), &Topology::single()).unwrap();
+                let r = &out.report;
+                assert_eq!(r.space_puts, o.puts, "{name}@{threads}");
+                assert_eq!(r.space_gets, o.gets, "{name}@{threads}");
+                assert_eq!(r.space_frees, o.frees, "{name}@{threads}");
+                assert_eq!(r.tasks, o.tasks + 1, "{name}@{threads}: takes + the seed step");
+                assert!(r.seconds > 0.0, "{name}@{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn des_wait_events_pair_and_remote_gets_appear_when_sharded() {
+        let w = by_name("pipe3").unwrap();
+        let topo = Topology::new(4, Placement::Block, 0, 4);
+        let out = w.simulate(&sim_cfg(4), &topo).unwrap();
+        let waits = out.events.iter().filter(|e| matches!(e, TraceEvent::WaitMatch { .. })).count();
+        let wakes = out.events.iter().filter(|e| matches!(e, TraceEvent::Wake { .. })).count();
+        assert_eq!(waits, wakes, "every park is woken in a completing run");
+        assert!(waits > 0, "width-4 pipeline must park at least one consumer");
+        assert!(out.report.space_remote_gets > 0, "4 nodes: some gets cross the link");
+        assert_eq!(out.report.node_peak_bytes.len(), 4);
+        // totals are schedule- and topology-independent
+        let o = w.oracle();
+        assert_eq!(out.report.space_puts, o.puts);
+        assert_eq!(out.report.space_frees, o.frees);
+    }
+
+    #[test]
+    fn des_deadlock_probe_fails_loudly() {
+        let err = deadlock_probe()
+            .simulate(&sim_cfg(2), &Topology::single())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn worker_plan_is_one_leaf_per_worker() {
+        let plan = worker_plan(3).unwrap();
+        assert_eq!(plan.count_tags(plan.root, &[]), 3);
+        let plan1 = worker_plan(0).unwrap();
+        assert_eq!(plan1.count_tags(plan1.root, &[]), 1, "threads=0 clamps to one worker");
+    }
+}

@@ -14,6 +14,7 @@
 //! Paper sizes are kept for characterization; `Small`/`Tiny` presets scale
 //! the iteration space for this container (DESIGN.md §7).
 
+pub mod irregular;
 mod linalg;
 mod phased;
 mod stencils_gs;

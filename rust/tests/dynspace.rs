@@ -1,0 +1,285 @@
+//! Dynamic tuple space: pattern-match determinism, blocking gets that
+//! wake (or fail loudly on deadlock) instead of hanging, leak-freedom of
+//! `Open` collections, and the irregular workload family checked against
+//! its sequential oracle on every backend × transport × width. All
+//! launches go through `rt::launch(ExecConfig)` — dynamic workloads ride
+//! the exact surface the 21 static workloads ride.
+//!
+//! Wall-clock note: the engine tests here run *real* parked threads. The
+//! deadlock tests rely on the space's self-poisoning to return (CI runs
+//! the whole suite under `timeout` as a second line of defense).
+
+use std::sync::Arc;
+use tale3::ral::DepMode;
+use tale3::rt::{self, BackendKind, DynWorkload, ExecConfig, LeafSpec, RuntimeKind};
+use tale3::sim::{TraceEvent, TraceMode};
+use tale3::space::{
+    DataBlock, DataPlane, DynCount, DynSpace, FieldPat, ItemKey, LinkModel, Placement, Region,
+    TagPattern, Topology, TransportKind,
+};
+use tale3::workloads::irregular::{self, Irregular};
+
+fn block(n: usize) -> DataBlock {
+    DataBlock::new(vec![Region {
+        array: 0,
+        lo: vec![0].into(),
+        hi: vec![n as i64 - 1].into(),
+        data: vec![1.0; n].into(),
+    }])
+}
+
+fn single(workers: usize) -> DynSpace {
+    DynSpace::new(
+        Topology::single(),
+        TransportKind::InProc,
+        LinkModel::zero(),
+        workers,
+    )
+}
+
+fn cfg(backend: BackendKind, threads: usize) -> ExecConfig {
+    ExecConfig::new()
+        .backend(backend)
+        .runtime(RuntimeKind::Edt(DepMode::CncDep))
+        .plane(DataPlane::Space)
+        .threads(threads)
+}
+
+fn launch_irregular(wk: &Arc<Irregular>, ec: &ExecConfig) -> anyhow::Result<rt::RunReport> {
+    let plan = irregular::worker_plan(ec.threads)?;
+    let dw: Arc<dyn DynWorkload> = wk.clone();
+    rt::launch(&plan, &LeafSpec::dynamic(dw, wk.total_flops()), ec)
+}
+
+/// The deterministic-selection contract: a destructive pattern take
+/// drains matches in exactly the order a sorted reference mirror
+/// predicts — the lexicographically least live tag that satisfies the
+/// pattern, for exact, wildcard, and range patterns alike. This is what
+/// lets the engine, the DES, and the sequential oracle agree without
+/// ever comparing schedules.
+#[test]
+fn pattern_takes_drain_in_mirror_order() {
+    let tags: [[i64; 2]; 8] = [
+        [3, 1],
+        [1, 7],
+        [2, 2],
+        [1, 2],
+        [5, 0],
+        [2, 9],
+        [4, 4],
+        [1, 1],
+    ];
+    for pat in [
+        TagPattern::any(0, 2),
+        TagPattern::exact(0, &[1, 2]),
+        TagPattern::new(0, vec![FieldPat::Range(2, 4), FieldPat::Wildcard]),
+    ] {
+        let s = single(1);
+        for t in &tags {
+            s.put_dyn(ItemKey::new(0, t), block(1), DynCount::Known(1));
+        }
+        // the mirror: sorted live tags filtered by the pattern
+        let mut expect: Vec<Vec<i64>> = tags
+            .iter()
+            .filter(|t| pat.matches(&t[..]))
+            .map(|t| t.to_vec())
+            .collect();
+        expect.sort();
+        // exactly as many takes as the mirror predicts matches — the
+        // take after the last would park, not return
+        let got: Vec<Vec<i64>> = (0..expect.len())
+            .map(|_| s.in_(&pat, 0).expect("a live match remains").0.to_vec())
+            .collect();
+        assert_eq!(got, expect, "pattern {:?}", pat.fields);
+    }
+}
+
+/// Parked `in_` callers are woken by matching puts: N consumers block on
+/// an empty space, a producer publishes N items, every consumer returns
+/// with a distinct item, and the space ends empty. (Cross-thread wake
+/// *order* is asserted in virtual time by the DES trace test below —
+/// real condvar wake order is scheduler-dependent by design.)
+#[test]
+fn blocking_takes_wake_on_matching_puts() {
+    // workers=4 counts the producer (the test thread): three parked
+    // consumers must not read as "all workers parked" while a producer
+    // is still about to publish
+    let s = Arc::new(single(4));
+    let consumers: Vec<_> = (0..3)
+        .map(|_| {
+            let s = s.clone();
+            std::thread::spawn(move || s.in_(&TagPattern::any(0, 1), 0))
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    for t in [[5i64], [3], [1]] {
+        s.put_dyn(ItemKey::new(0, &t), block(2), DynCount::Known(1));
+    }
+    let mut got: Vec<i64> = consumers
+        .into_iter()
+        .map(|c| c.join().unwrap().expect("woken by a put").0[0])
+        .collect();
+    got.sort_unstable();
+    assert_eq!(got, vec![1, 3, 5], "every consumer got a distinct item");
+    assert_eq!(s.live_items(), 0);
+    let snap = s.stats().snapshot();
+    assert_eq!((snap.puts, snap.gets, snap.frees), (3, 3, 3));
+}
+
+/// `Open` items under concurrent consumers: a producer publishes with no
+/// consumer count, consumers take destructively until `close` tells them
+/// "empty forever", and whatever the consumers didn't claim is drained
+/// by the close — `puts == frees` either way, zero live bytes, and the
+/// parked consumers return `None` instead of hanging.
+#[test]
+fn open_collections_end_leak_free_under_concurrent_consumers() {
+    const N: u64 = 24;
+    // workers=3 counts the producer too: the consumers alone must never
+    // satisfy the all-parked deadlock predicate while production is live
+    let s = Arc::new(single(3));
+    let consumers: Vec<_> = (0..2)
+        .map(|_| {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                let mut n = 0u64;
+                while s.in_(&TagPattern::any(0, 1), 0).is_some() {
+                    n += 1;
+                }
+                s.worker_exit();
+                n
+            })
+        })
+        .collect();
+    for i in 0..N as i64 {
+        s.put_dyn(ItemKey::new(0, &[i]), block(4), DynCount::Open);
+    }
+    s.close(0);
+    s.worker_exit();
+    let consumed: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+    let snap = s.stats().snapshot();
+    assert_eq!(snap.puts, N);
+    assert_eq!(snap.gets, consumed, "every take was destructive");
+    assert_eq!(snap.frees, N, "claimed by takes or drained by close");
+    assert_eq!(snap.live_bytes, 0);
+    assert_eq!(s.live_items(), 0);
+    assert!(s.poison_msg().is_none(), "a drained close is not a deadlock");
+}
+
+/// Deadlock is an `Err`, not a hang, on BOTH backends: the all-park
+/// probe (every worker blocks on a pattern nothing will ever put) must
+/// poison the engine's space and bail the DES's event loop, each with a
+/// diagnostic naming the condition.
+#[test]
+fn deadlock_fails_loudly_on_both_backends() {
+    let probe = irregular::deadlock_probe();
+    for backend in [BackendKind::Threads, BackendKind::Des] {
+        // not `launch_irregular`: the probe has no sequential-oracle run
+        // (its whole point is that nothing ever matches), so the flops
+        // total is pinned to 0 instead of replayed
+        let ec = cfg(backend, 2);
+        let plan = irregular::worker_plan(ec.threads).expect("plan");
+        let dw: Arc<dyn DynWorkload> = probe.clone();
+        let err = rt::launch(&plan, &LeafSpec::dynamic(dw, 0.0), &ec)
+            .expect_err("an all-parked run must not report success");
+        assert!(
+            format!("{err:#}").contains("deadlock"),
+            "{backend:?}: diagnostic must name the deadlock, got: {err:#}"
+        );
+    }
+}
+
+/// The DES trace records every park/wake pair: waits and wakes balance,
+/// each `Wake` carries the exact virtual time parked, and the whole
+/// stream passes the trace validator (lifecycle, unique puts,
+/// leak-freedom, counter cross-checks).
+#[test]
+fn des_trace_pairs_waits_with_wakes_and_validates() {
+    for name in irregular::names() {
+        let wk = irregular::by_name(name).unwrap();
+        let mut ec = cfg(BackendKind::Des, 4).nodes(4).placement(Placement::Block);
+        ec.trace = TraceMode::Full;
+        let r = launch_irregular(&wk, &ec).expect("DES launch");
+        let trace = r.trace.as_ref().expect("trace rides along");
+        trace.validate().expect("captured stream must validate");
+        let waits = trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::WaitMatch { .. }))
+            .count();
+        let wakes = trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Wake { .. }))
+            .count();
+        assert_eq!(waits, wakes, "{name}: every park must be released");
+        assert!(waits > 0, "{name}: 4 workers against 1 seeder must park");
+    }
+}
+
+/// The tentpole acceptance matrix: every irregular workload, on the real
+/// engine AND the DES, over both shard transports, on 1 and 4 nodes,
+/// reports exactly the sequential oracle's schedule-independent
+/// put/get/free totals and ends leak-free (zero live bytes — every
+/// dynamically published item was reclaimed by get-count or close).
+#[test]
+fn irregular_family_matches_oracle_everywhere() {
+    for name in irregular::names() {
+        let wk = irregular::by_name(name).unwrap();
+        let o = wk.oracle();
+        assert_eq!(o.puts, o.frees, "oracle itself is leak-free");
+        for backend in [BackendKind::Threads, BackendKind::Des] {
+            for transport in [TransportKind::InProc, TransportKind::Channel] {
+                for nodes in [1usize, 4] {
+                    let ec = cfg(backend, 4)
+                        .nodes(nodes)
+                        .placement(Placement::Block)
+                        .transport(transport);
+                    let r = launch_irregular(&wk, &ec).unwrap_or_else(|e| {
+                        panic!("{name} {backend:?} {transport:?} x{nodes}: {e:#}")
+                    });
+                    let m = &r.metrics;
+                    let ctx = format!("{name} {backend:?} {transport:?} x{nodes}");
+                    assert_eq!(m.space_puts, o.puts, "{ctx}: puts");
+                    assert_eq!(m.space_gets, o.gets, "{ctx}: gets");
+                    assert_eq!(m.space_frees, o.frees, "{ctx}: frees");
+                    assert_eq!(m.space_live_bytes, 0, "{ctx}: leak");
+                    if nodes == 4 {
+                        assert_eq!(r.node_peak_bytes.len(), 4, "{ctx}");
+                    }
+                    if backend == BackendKind::Des {
+                        let sim = r.sim.as_ref().expect("DES carries a SimReport");
+                        assert_eq!(sim.tasks, o.tasks + 1, "{ctx}: takes + the seed");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// At one worker the approximations vanish: the engine's single thread
+/// and the DES's single virtual worker execute the identical sequential
+/// take order (same `first_match`, same seed-first start), so the two
+/// backends agree counter-for-counter — including the remote-traffic
+/// classification and the peak-byte high-water mark on a 4-node
+/// topology.
+#[test]
+fn engine_and_des_agree_exactly_at_one_worker() {
+    for name in irregular::names() {
+        let wk = irregular::by_name(name).unwrap();
+        let counters = |backend| {
+            let ec = cfg(backend, 1).nodes(4).placement(Placement::Block);
+            let m = launch_irregular(&wk, &ec).expect("launch").metrics;
+            (
+                m.space_puts,
+                m.space_gets,
+                m.space_frees,
+                m.space_remote_gets,
+                m.space_remote_bytes,
+                m.space_peak_bytes,
+            )
+        };
+        let engine = counters(BackendKind::Threads);
+        let des = counters(BackendKind::Des);
+        assert_eq!(engine, des, "{name}: one worker = one shared schedule");
+    }
+}

@@ -207,10 +207,12 @@ fn real_runtime_counts_remote_gets() {
 
 /// The bench JSON report is deterministic — two renders are
 /// byte-identical — and contains virtual-time fields only (no wall-clock
-/// timestamps, hostnames, or paths). Schema v4 carries the resolved
-/// config echo (now including the shard transport), the steal counters,
-/// and the per-workload `replay_verified` flag (the sharded_steal cell's
-/// trace must verbatim-replay to its own SimReport).
+/// timestamps, hostnames, or paths). Schema v5 carries the resolved
+/// config echo (including the shard transport), the steal counters, the
+/// per-workload `replay_verified` flag (the sharded_steal cell's trace
+/// must verbatim-replay to its own SimReport), and the `irregular`
+/// section: the dynamic tuple-space family read against its sequential
+/// oracle, each cell flagged `leak_free`.
 #[test]
 fn bench_report_json_is_deterministic_and_virtual_only() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
@@ -221,7 +223,7 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     let a = perf_report_json(&cfg);
     let b = perf_report_json(&cfg);
     assert_eq!(a, b, "two consecutive quick runs must produce identical JSON");
-    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v4\""));
+    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v5\""));
     assert!(a.contains("\"config\":{\"backend\":\"des\""));
     assert!(a.contains("\"transport\":\"inproc\""));
     assert!(a.contains("\"JAC-2D-5P\""));
@@ -239,6 +241,13 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
         !a.contains("\"replay_verified\":false"),
         "every sharded_steal trace must verbatim-replay to its own report"
     );
+    assert!(a.contains("\"irregular\":[{\"name\":\"bag\""));
+    assert!(a.contains("\"pipe3\"") && a.contains("\"refine\""));
+    assert!(a.contains("\"oracle_puts\""));
+    assert!(
+        a.contains("\"leak_free\":true") && !a.contains("\"leak_free\":false"),
+        "every irregular cell must match its sequential oracle (puts == frees)"
+    );
     for host_dependent in ["wall", "timestamp", "hostname", "date", "epoch", "/root", "/home"] {
         assert!(
             !a.contains(host_dependent),
@@ -247,13 +256,13 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     }
 }
 
-/// The v4 key set matches the committed golden file (the same list CI's
+/// The v5 key set matches the committed golden file (the same list CI's
 /// golden-file job asserts against the built artifact), so schema drift
 /// is a reviewed change, not an accident.
 #[test]
-fn bench_report_v4_keys_match_golden_file() {
+fn bench_report_v5_keys_match_golden_file() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
-    let golden = include_str!("../ci/bench-report-v4.keys");
+    let golden = include_str!("../ci/bench-report-v5.keys");
     let json = perf_report_json(&ReportConfig {
         quick: true,
         ..Default::default()
@@ -262,7 +271,7 @@ fn bench_report_v4_keys_match_golden_file() {
     for key in golden.lines().filter(|l| !l.is_empty()) {
         assert!(
             json.contains(&format!("\"{key}\":")),
-            "golden key `{key}` missing from the v3 report"
+            "golden key `{key}` missing from the v5 report"
         );
     }
     // and every quoted key in the JSON must be in the golden list
@@ -277,7 +286,7 @@ fn bench_report_v4_keys_match_golden_file() {
         if after.starts_with(':') {
             assert!(
                 golden_set.contains(token),
-                "report key `{token}` is not in ci/bench-report-v4.keys — \
+                "report key `{token}` is not in ci/bench-report-v5.keys — \
                  update the golden file deliberately"
             );
         }
