@@ -88,7 +88,7 @@ fn main() {
         let mut tasks = 0u64;
         for _ in 0..5 {
             let r = rt::run(RuntimeKind::Edt(mode), &plan, &leaf, &pool, 1.0).unwrap();
-            secs = secs.min(r.seconds);
+            secs = secs.min(r.core.seconds);
             tasks = r.metrics.total_tasks();
         }
         println!(

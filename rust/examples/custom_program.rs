@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     let report = rt::launch(&plan, &leaf, &cfg)?;
     println!(
         "executed {} worker EDTs + {} prescribers in {:.4}s",
-        report.metrics.workers, report.metrics.prescribers, report.seconds
+        report.metrics.workers, report.metrics.prescribers, report.core.seconds
     );
 
     // verify against the oracle

@@ -53,8 +53,8 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "  {:<10} {:>8.3} s  {:>7.3} Gflop/s  {} PJRT tiles + {} native boundary tiles  (max rel Δ {:.1e})",
                 mode.name(),
-                r.seconds,
-                r.gflops,
+                r.core.seconds,
+                r.core.gflops,
                 leaf_impl.pjrt_tiles.load(Ordering::Relaxed),
                 leaf_impl.native_tiles.load(Ordering::Relaxed),
                 diff
@@ -88,8 +88,8 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "  {:<10} {:>8.3} s  {:>7.3} Gflop/s  {} PJRT tiles + {} native boundary tiles  (max rel Δ {:.1e})",
                 mode.name(),
-                r.seconds,
-                r.gflops,
+                r.core.seconds,
+                r.core.gflops,
                 leaf_impl.pjrt_tiles.load(Ordering::Relaxed),
                 leaf_impl.native_tiles.load(Ordering::Relaxed),
                 diff

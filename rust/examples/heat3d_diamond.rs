@@ -36,8 +36,8 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "  {:<10} x{threads}: {:>8.4} s  {:>6.3} Gflop/s  (verified)",
                 kind.name(),
-                r.seconds,
-                r.gflops
+                r.core.seconds,
+                r.core.gflops
             );
         }
     }
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
                 .machine(Machine::e5_2620())
                 .numa_pinned(pinned);
             let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg)?;
-            print!("{:>8.3}", r.seconds);
+            print!("{:>8.3}", r.core.seconds);
         }
         println!();
     }

@@ -32,8 +32,8 @@ fn main() -> anyhow::Result<()> {
     println!(
         "cnc-async x{} threads: {:.3} s, {:.3} Gflop/s, {} tasks ({} workers, {} steals, {} failed gets)",
         report.threads,
-        report.seconds,
-        report.gflops,
+        report.core.seconds,
+        report.core.gflops,
         report.metrics.total_tasks(),
         report.metrics.workers,
         report.metrics.steals,

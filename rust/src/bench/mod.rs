@@ -103,8 +103,8 @@ pub fn run_metrics_line(r: &RunReport) -> String {
          space p/g/f {:>5}/{:>5}/{:>5}  live {:>9}  peak {:>9}",
         r.runtime,
         r.plane,
-        r.seconds,
-        r.gflops,
+        r.core.seconds,
+        r.core.gflops,
         r.metrics.work_ratio() * 100.0,
         r.metrics.space_puts,
         r.metrics.space_gets,

@@ -5,6 +5,7 @@
 //!   `explain <wl> [--size S]`           dump deps, schedule and EDT tree
 //!   `run <wl> [opts]`                   execute on the real runtimes
 //!   `sim <wl> [opts]`                   simulate on the modeled testbed
+//!   `serve [opts]`                      resident multi-tenant service (open arrivals)
 //!   `trace capture <wl> [opts]`         capture a DES execution trace
 //!   `trace replay <file>`               verbatim replay (audit) of a trace
 //!   `trace recost <file> [opts]`        what-if replay under new link costs
@@ -217,8 +218,8 @@ fn main() -> anyhow::Result<()> {
                 println!(
                     "{:<10} {:>9.4} {:>9.3} {:>8} {:>8} {:>8} {:>8.1}% {:>8} {:>8} {:>8} {:>9} {:>7}",
                     r.runtime,
-                    r.seconds,
-                    r.gflops,
+                    r.core.seconds,
+                    r.core.gflops,
                     r.metrics.total_tasks(),
                     r.metrics.steals,
                     r.metrics.failed_gets,
@@ -297,7 +298,7 @@ fn main() -> anyhow::Result<()> {
                 for &t in &threads {
                     let cfg = base.clone().runtime(kind).threads(t);
                     let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg)?;
-                    print!("{:>8.2}", r.gflops);
+                    print!("{:>8.2}", r.core.gflops);
                     if let Some(s) = r.sim {
                         last = Some(s);
                     }
@@ -321,6 +322,7 @@ fn main() -> anyhow::Result<()> {
                 }
             }
         }
+        "serve" => return serve_cmd(&args),
         "trace" => {
             use tale3::rt::{replay_trace, ReplayMode, Trace, TraceMode};
             let sub = args.positional.get(1).map(String::as_str).unwrap_or("help");
@@ -483,7 +485,7 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             println!("tale3 — A Tale of Three Runtimes (reproduction)");
-            println!("usage: tale3 <list|explain|run|sim|trace|bench-report|table> [workload]");
+            println!("usage: tale3 <list|explain|run|sim|serve|trace|bench-report|table> [workload]");
             println!("       [--size tiny|small|paper]");
             println!("       [--runtime cnc-block|cnc-async|cnc-dep|swarm|ocr|omp|all]");
             println!("       [--threads N[,N..]] [--tiles a,b,c] [--levels k] [--gran n] [--no-verify]");
@@ -502,6 +504,13 @@ fn main() -> anyhow::Result<()> {
             println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P] [--steal S]");
             println!("                    [--transport T]  (deterministic perf JSON: virtual time");
             println!("                    only, schema v5)");
+            println!();
+            println!("serve [--tenants N] [--quota-bytes B[k|m|g]] [--arrivals COUNTxGAP_MS]");
+            println!("      [--transport inproc|channel] [--threads N] [--trace-dir DIR]");
+            println!("                    (resident multi-tenant service: one pool + one shared");
+            println!("                    item space, open arrivals over the static + irregular");
+            println!("                    workloads, per-tenant quota backpressure; --trace-dir");
+            println!("                    captures a per-submission tale3-trace/v2 DES twin)");
             println!();
             println!("irregular workloads (dynamic tuple space, run/sim/trace capture):");
             println!("       bag | pipe3 | refine   (task bag, 3-stage pipeline, refinement");
@@ -571,8 +580,8 @@ fn run_irregular(
                 "{:<10} {:>7} {:>10.4} {:>9.3} {:>8} {:>8} {:>8} {:>8} {:>9} {:>7}",
                 r.runtime,
                 t,
-                r.seconds,
-                r.gflops,
+                r.core.seconds,
+                r.core.gflops,
                 m.total_tasks(),
                 m.space_puts,
                 m.space_gets,
@@ -582,5 +591,192 @@ fn run_irregular(
             );
         }
     }
+    Ok(())
+}
+
+/// `tale3 serve`: stand up a resident [`tale3::rt::Service`] and drive a
+/// deterministic open-arrival stream over the full workload menu — the 21
+/// static benchmarks (tiny size unless `--size` says otherwise) plus the
+/// 3 irregular dynamic workloads. Tenants are assigned round-robin;
+/// static submissions declare their dense-array footprint as the quota
+/// demand (dynamic ones coordinate through a private space, demand 0).
+/// With `--trace-dir`, every submission also captures a tale3-trace/v2
+/// DES twin of its plan for postmortems — tracing is a DES feature, so
+/// the twin is simulated alongside, not recorded from the live pool.
+/// Exits non-zero if any tenant's live bytes fail to return to zero.
+fn serve_cmd(args: &Args) -> anyhow::Result<()> {
+    use tale3::rt::{ArrivalSpec, Service};
+    use tale3::workloads::irregular;
+    if let Some(b) = args.flag("backend") {
+        anyhow::ensure!(
+            b == "threads",
+            "serve runs the real runtimes only (--backend {b} has no resident pool)"
+        );
+    }
+    let mut cfg = args.exec_config(BackendKind::Threads)?;
+    // serve has exactly one data plane — forcing it beats a late error,
+    // matching run_irregular's treatment of the dynamic family
+    cfg.plane = DataPlane::Space;
+    let arrivals = cfg.arrivals.unwrap_or(ArrivalSpec { count: 8, gap_ms: 25 });
+    let tenants = cfg.tenants;
+    let quota = cfg.quota_bytes;
+    let trace_dir = args.flag("trace-dir").map(String::from);
+    if let Some(d) = &trace_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    let size = if args.has("size") { args.size() } else { Size::Tiny };
+    let svc = Service::new(cfg.clone())?;
+    println!(
+        "serve: {} worker(s), {} transport, {} tenant(s), quota {}, arrivals {}",
+        cfg.threads.max(1),
+        cfg.transport.name(),
+        tenants,
+        if quota == 0 {
+            "unlimited".to_string()
+        } else {
+            fmt_bytes(quota)
+        },
+        arrivals.spell()
+    );
+
+    let statics = registry();
+    let dyn_names = irregular::names();
+    let menu = statics.len() + dyn_names.len();
+    // deterministic LCG (Knuth MMIX) so a serve smoke is reproducible
+    let mut rng: u64 = 0x9E37_79B9_7F4A_7C15;
+    let mut next = move |m: usize| {
+        rng = rng
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (rng >> 33) as usize % m
+    };
+    let mut sessions: Vec<(tale3::rt::Session, &'static str)> = Vec::new();
+    for i in 0..arrivals.count {
+        let tenant = i % tenants;
+        let pick = next(menu);
+        let outcome = if pick < statics.len() {
+            let w = &statics[pick];
+            let inst = (w.build)(size);
+            let plan = inst.plan()?;
+            let arrays = inst.arrays();
+            let leaf = inst.leaf_spec(&arrays);
+            let demand = inst.shared_footprint_bytes();
+            capture_twin(args, &trace_dir, i, w.name, &plan, &leaf)?;
+            svc.submit_with_demand(&plan, &leaf, tenant, demand)
+                .map(|s| (s, w.name, demand))
+        } else {
+            let name = dyn_names[pick - statics.len()];
+            let wk = irregular::by_name(name).expect("names() entries resolve");
+            let plan = irregular::worker_plan(cfg.threads)?;
+            let dw: std::sync::Arc<dyn tale3::rt::DynWorkload> = wk.clone();
+            let leaf = LeafSpec::dynamic(dw, wk.total_flops());
+            capture_twin(args, &trace_dir, i, name, &plan, &leaf)?;
+            svc.submit_with_demand(&plan, &leaf, tenant, 0)
+                .map(|s| (s, name, 0))
+        };
+        match outcome {
+            Ok((s, name, demand)) => {
+                println!(
+                    "  → #{:<3} tenant {} {:<16} demand {}",
+                    s.id(),
+                    tenant,
+                    name,
+                    fmt_bytes(demand)
+                );
+                sessions.push((s, name));
+            }
+            // a submission whose footprint can never fit the quota is
+            // turned away at the door, not queued forever
+            Err(e) => println!("  ✗ arrival {i} rejected: {e}"),
+        }
+        std::thread::sleep(std::time::Duration::from_millis(arrivals.gap_ms));
+    }
+
+    println!(
+        "{:<5} {:<7} {:<16} {:<10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>8}",
+        "id", "tenant", "workload", "state", "seconds", "Gflop/s", "tasks", "s.puts", "s.gets",
+        "s.frees"
+    );
+    for (s, name) in &sessions {
+        match s.wait() {
+            Ok(core) => println!(
+                "{:<5} {:<7} {:<16} {:<10} {:>9.4} {:>9.3} {:>8} {:>8} {:>8} {:>8}",
+                s.id(),
+                s.tenant(),
+                name,
+                "done",
+                core.seconds,
+                core.gflops,
+                core.tasks,
+                core.space_puts,
+                core.space_gets,
+                core.space_frees
+            ),
+            Err(e) => println!("{:<5} {:<7} {:<16} {e}", s.id(), s.tenant(), name),
+        }
+    }
+
+    svc.drain();
+    let st = svc.stats();
+    println!(
+        "tenant ledger (rolling {:.0}s window: {} completions):",
+        st.window_secs, st.window_completions
+    );
+    println!(
+        "{:<7} {:>10} {:>10} {:>10} {:>9} {:>7} {:>10}",
+        "tenant", "live", "peak", "reserved", "admitted", "queued", "completed"
+    );
+    for (t, ts) in st.tenants.iter().enumerate() {
+        println!(
+            "{:<7} {:>10} {:>10} {:>10} {:>9} {:>7} {:>10}",
+            t,
+            fmt_bytes(ts.live_bytes),
+            fmt_bytes(ts.peak_bytes),
+            fmt_bytes(ts.reserved_bytes),
+            ts.admitted,
+            ts.queued,
+            ts.completed
+        );
+    }
+    let leaked: u64 = st.tenants.iter().map(|t| t.live_bytes).sum();
+    anyhow::ensure!(
+        leaked == 0,
+        "serve: LEAK — {leaked} live bytes remain in the shared space after drain"
+    );
+    println!(
+        "serve: leak-free ok ({} submitted, {} completed)",
+        sessions.len(),
+        st.completed
+    );
+    Ok(())
+}
+
+/// Capture the tale3-trace/v2 DES twin of one submission (when
+/// `--trace-dir` is set): same plan, cost-only / dynamic-sim leaf, full
+/// trace mode, written as `sub<N>-<workload>.trace.jsonl`.
+fn capture_twin(
+    args: &Args,
+    trace_dir: &Option<String>,
+    arrival: usize,
+    name: &str,
+    plan: &std::sync::Arc<tale3::exec::Plan>,
+    leaf: &LeafSpec<'_>,
+) -> anyhow::Result<()> {
+    use tale3::rt::TraceMode;
+    let Some(dir) = trace_dir else { return Ok(()) };
+    let mut des = args.exec_config(BackendKind::Des)?;
+    des.plane = DataPlane::Space;
+    des.serve = false;
+    des.trace = TraceMode::Full;
+    let twin = match &leaf.body {
+        tale3::rt::LeafBody::Dynamic(w) => LeafSpec::dynamic(w.clone(), leaf.total_flops),
+        _ => LeafSpec::cost_only(leaf.total_flops),
+    };
+    let r = rt::launch(plan, &twin, &des)?;
+    let trace = r
+        .trace
+        .ok_or_else(|| anyhow::anyhow!("DES twin launch returned no trace"))?;
+    let path = format!("{dir}/sub{arrival}-{}.trace.jsonl", name.to_lowercase());
+    std::fs::write(&path, trace.to_jsonl())?;
     Ok(())
 }

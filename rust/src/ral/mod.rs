@@ -19,6 +19,10 @@
 //! - [`Metrics`] — counters for the §5.3 overhead discussion (failed gets,
 //!   steals, work ratio).
 
+pub mod window;
+
+pub use window::RollingWindow;
+
 use std::sync::atomic::{AtomicIsize, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 

@@ -1,0 +1,159 @@
+//! Rolling-window event counting for resident (serve-mode) metrics.
+//!
+//! Batch runs report end-of-run deltas: snapshot counters before and
+//! after, subtract. A resident [`crate::rt::serve::Service`] never ends,
+//! so its throughput question is "how many completions in the last N
+//! seconds", not "how many since boot". [`RollingWindow`] answers it with
+//! a ring of per-slot counters — O(1) record, O(slots) read, no
+//! per-event allocation, callers supply timestamps (monotonic
+//! nanoseconds) so tests are deterministic and the window never reads a
+//! clock itself.
+
+use std::sync::Mutex;
+
+/// A fixed ring of time slots covering the trailing window. Recording
+/// advances the ring head to the event's slot (zeroing skipped slots) and
+/// increments that slot; reading sums the slots still inside the window.
+///
+/// Timestamps must be monotone non-decreasing across `record` calls
+/// (enforced by saturation, not panic: a stale timestamp lands in the
+/// current slot). All methods take `&self`; a single internal mutex keeps
+/// it `Sync` — serve-mode event rates (per-submission, not per-task) are
+/// far below any contention threshold.
+#[derive(Debug)]
+pub struct RollingWindow {
+    window_ns: u64,
+    slot_ns: u64,
+    inner: Mutex<Ring>,
+}
+
+#[derive(Debug)]
+struct Ring {
+    counts: Vec<u64>,
+    /// Slot index (monotone, not wrapped) of the ring head, or `None`
+    /// until the first record.
+    head: Option<u64>,
+    total: u64,
+}
+
+impl RollingWindow {
+    /// A window of `window_ns` nanoseconds split into `slots` ring slots
+    /// (more slots = finer expiry granularity). `slots` is clamped to at
+    /// least 1; `window_ns` to at least `slots` so every slot spans ≥1 ns.
+    pub fn new(window_ns: u64, slots: usize) -> RollingWindow {
+        let slots = slots.max(1);
+        let window_ns = window_ns.max(slots as u64);
+        RollingWindow {
+            window_ns,
+            slot_ns: window_ns / slots as u64,
+            inner: Mutex::new(Ring {
+                counts: vec![0; slots],
+                head: None,
+                total: 0,
+            }),
+        }
+    }
+
+    /// The window span this ring covers, in nanoseconds.
+    pub fn window_ns(&self) -> u64 {
+        self.window_ns
+    }
+
+    /// Record one event at monotonic time `now_ns`.
+    pub fn record(&self, now_ns: u64) {
+        let mut r = self.inner.lock().unwrap();
+        let slot = now_ns / self.slot_ns;
+        let n = r.counts.len() as u64;
+        let head = match r.head {
+            // stale timestamps saturate into the current head slot
+            Some(h) => h.max(slot),
+            None => slot,
+        };
+        if let Some(prev) = r.head {
+            // zero every slot the head skipped over (cap at ring size —
+            // a long quiet gap clears the whole ring once)
+            for s in prev + 1..=head.min(prev + n) {
+                let i = (s % n) as usize;
+                r.counts[i] = 0;
+            }
+        }
+        r.head = Some(head);
+        let i = (head % n) as usize;
+        r.counts[i] += 1;
+        r.total += 1;
+    }
+
+    /// Events recorded in the trailing window ending at `now_ns`. Slots
+    /// whose span ended before `now_ns - window_ns` are excluded (their
+    /// counts expire lazily — reads never mutate).
+    pub fn count_in_window(&self, now_ns: u64) -> u64 {
+        let r = self.inner.lock().unwrap();
+        let Some(head) = r.head else { return 0 };
+        let n = r.counts.len() as u64;
+        let now_slot = now_ns / self.slot_ns;
+        // slots older than `now_slot - n + 1` have left the window; slots
+        // newer than `head` were never written
+        let oldest = (now_slot + 1).saturating_sub(n);
+        let mut sum = 0;
+        for s in oldest..=head.min(now_slot) {
+            sum += r.counts[(s % n) as usize];
+        }
+        sum
+    }
+
+    /// All events ever recorded (a plain lifetime counter).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEC: u64 = 1_000_000_000;
+
+    #[test]
+    fn counts_within_and_expires_outside_the_window() {
+        // 1 s window, 10 slots of 100 ms
+        let w = RollingWindow::new(SEC, 10);
+        w.record(0);
+        w.record(100_000_000);
+        w.record(950_000_000);
+        assert_eq!(w.count_in_window(950_000_000), 3);
+        // at t = 1.05 s the slot-0 event has expired
+        assert_eq!(w.count_in_window(1_050_000_000), 2);
+        // at t = 2.5 s everything has expired, but the total persists
+        assert_eq!(w.count_in_window(2_500_000_000), 0);
+        assert_eq!(w.total(), 3);
+    }
+
+    #[test]
+    fn quiet_gap_clears_stale_slots_before_new_records() {
+        let w = RollingWindow::new(SEC, 4);
+        for _ in 0..5 {
+            w.record(0);
+        }
+        // a record far in the future must not resurrect the old counts
+        w.record(10 * SEC);
+        assert_eq!(w.count_in_window(10 * SEC), 1);
+        assert_eq!(w.total(), 6);
+    }
+
+    #[test]
+    fn stale_timestamps_saturate_into_the_head_slot() {
+        let w = RollingWindow::new(SEC, 10);
+        w.record(500_000_000);
+        w.record(100_000_000); // out of order: lands in the 500 ms slot
+        assert_eq!(w.count_in_window(500_000_000), 2);
+        assert_eq!(w.count_in_window(1_600_000_000), 0, "both expire together");
+    }
+
+    #[test]
+    fn degenerate_parameters_are_clamped() {
+        let w = RollingWindow::new(0, 0);
+        w.record(0);
+        assert_eq!(w.count_in_window(0), 1);
+        assert_eq!(w.total(), 1);
+    }
+}

@@ -100,6 +100,34 @@ impl BackendKind {
     }
 }
 
+/// Synthetic open-arrival schedule for serve mode: `count` submissions
+/// spaced `gap_ms` milliseconds apart (an open system — arrivals do not
+/// wait for completions, which is what makes admission control and
+/// backpressure observable). CLI spelling: `--arrivals NxG`, e.g.
+/// `--arrivals 12x50` = 12 submissions, 50 ms apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrivalSpec {
+    pub count: usize,
+    pub gap_ms: u64,
+}
+
+impl ArrivalSpec {
+    /// Parse the `NxG` CLI spelling; `None` on anything else.
+    pub fn parse(s: &str) -> Option<ArrivalSpec> {
+        let (n, g) = s.split_once('x')?;
+        let count: usize = n.trim().parse().ok()?;
+        let gap_ms: u64 = g.trim().parse().ok()?;
+        if count == 0 {
+            return None;
+        }
+        Some(ArrivalSpec { count, gap_ms })
+    }
+
+    pub fn spell(&self) -> String {
+        format!("{}x{}", self.count, self.gap_ms)
+    }
+}
+
 /// The declarative launch descriptor: everything that used to be a
 /// positional argument of some `run_*`/`simulate_*` variant, as one
 /// builder-style value consumed by every backend.
@@ -132,6 +160,22 @@ pub struct ExecConfig {
     pub cost: CostModel,
     pub machine: Machine,
     pub numa_pinned: bool,
+    /// Serve mode: a resident [`crate::rt::serve::Service`] multiplexes a
+    /// stream of submissions onto one pool + one shared item space
+    /// instead of one batch launch per pool. Space plane + threads
+    /// backend only ([`ExecConfig::validate`]).
+    pub serve: bool,
+    /// Number of tenant namespaces a serve-mode service accepts
+    /// (`1..=`[`crate::space::MAX_TENANTS`]). Tenant ids are folded into
+    /// every `ItemKey.coll`, so tenants can never alias items.
+    pub tenants: usize,
+    /// Per-tenant admission quota on live space bytes; `0` = unlimited.
+    /// A submission whose declared footprint would push its tenant past
+    /// the quota is queued (backpressure), not rejected.
+    pub quota_bytes: u64,
+    /// Open-arrival schedule for the `tale3 serve` generator; `None`
+    /// outside serve mode (and for library users who submit directly).
+    pub arrivals: Option<ArrivalSpec>,
 }
 
 impl Default for ExecConfig {
@@ -154,6 +198,10 @@ impl Default for ExecConfig {
             cost: CostModel::default(),
             machine: Machine::default(),
             numa_pinned: true,
+            serve: false,
+            tenants: 1,
+            quota_bytes: 0,
+            arrivals: None,
         }
     }
 }
@@ -228,17 +276,64 @@ impl ExecConfig {
         self
     }
 
-    /// Cross-knob consistency, checked by every launch path. The one
-    /// illegal combination today: `transport = channel` needs item-space
-    /// shards to put behind channels, which only the space plane has —
-    /// silently ignoring the flag on the shared plane would report
-    /// transport numbers that never existed.
+    pub fn serve(mut self, s: bool) -> Self {
+        self.serve = s;
+        self
+    }
+
+    pub fn tenants(mut self, t: usize) -> Self {
+        self.tenants = t.max(1);
+        self
+    }
+
+    pub fn quota_bytes(mut self, b: u64) -> Self {
+        self.quota_bytes = b;
+        self
+    }
+
+    pub fn arrivals(mut self, a: ArrivalSpec) -> Self {
+        self.arrivals = Some(a);
+        self
+    }
+
+    /// Cross-knob consistency, checked by every launch path.
+    /// `transport = channel` needs item-space shards to put behind
+    /// channels, which only the space plane has — silently ignoring the
+    /// flag on the shared plane would report transport numbers that never
+    /// existed. Serve mode multiplexes tenants over one shared item
+    /// space, so it needs the space plane and real threads: the shared
+    /// plane has no per-tenant items to namespace or meter, and the DES
+    /// replays one closed graph in virtual time — it has no resident pool
+    /// for open arrivals to land on.
     pub fn validate(&self) -> Result<()> {
         if self.transport == TransportKind::Channel && self.plane == DataPlane::Shared {
             bail!(
                 "--transport channel requires --plane space: the shared data \
                  plane has no item-space shards to put behind channels"
             );
+        }
+        if self.serve {
+            if self.plane == DataPlane::Shared {
+                bail!(
+                    "serve mode requires --plane space: tenant namespacing and \
+                     quota accounting live in the item space, which the shared \
+                     data plane does not have"
+                );
+            }
+            if self.backend == BackendKind::Des {
+                bail!(
+                    "serve mode requires --backend threads: the DES replays one \
+                     closed graph in virtual time and has no resident pool for \
+                     open arrivals"
+                );
+            }
+            if self.tenants == 0 || self.tenants > crate::space::MAX_TENANTS {
+                bail!(
+                    "--tenants {} out of range (1..={})",
+                    self.tenants,
+                    crate::space::MAX_TENANTS
+                );
+            }
         }
         Ok(())
     }
@@ -335,6 +430,43 @@ impl ExecConfig {
                     anyhow::anyhow!("--threads expects N[,N..], got `{v}`")
                 })?;
                 self.threads = std::cmp::max(t, 1);
+                Ok(true)
+            }
+            "tenants" => {
+                let v = need(name, value)?;
+                let t: usize = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--tenants expects an integer, got `{v}`"))?;
+                if t == 0 || t > crate::space::MAX_TENANTS {
+                    bail!(
+                        "--tenants {t} out of range (1..={})",
+                        crate::space::MAX_TENANTS
+                    );
+                }
+                self.tenants = t;
+                Ok(true)
+            }
+            "quota-bytes" => {
+                let v = need(name, value)?;
+                let (digits, mult) = match v.as_bytes().last() {
+                    Some(b'k') | Some(b'K') => (&v[..v.len() - 1], 1u64 << 10),
+                    Some(b'm') | Some(b'M') => (&v[..v.len() - 1], 1u64 << 20),
+                    Some(b'g') | Some(b'G') => (&v[..v.len() - 1], 1u64 << 30),
+                    _ => (v, 1),
+                };
+                let b: u64 = digits.parse().map_err(|_| {
+                    anyhow::anyhow!("--quota-bytes expects BYTES[k|m|g], got `{v}`")
+                })?;
+                self.quota_bytes = b * mult;
+                Ok(true)
+            }
+            "arrivals" => {
+                let v = need(name, value)?;
+                self.arrivals = Some(ArrivalSpec::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--arrivals expects COUNTxGAP_MS (e.g. 12x50), got `{v}`"
+                    )
+                })?);
                 Ok(true)
             }
             "runtime" => {
@@ -593,5 +725,69 @@ mod tests {
         assert_eq!(cfg.transport, TransportKind::InProc);
         assert_eq!(cfg.nodes, 1);
         assert_eq!(cfg.threads, 2);
+    }
+
+    #[test]
+    fn arrival_spec_parse_round_trip() {
+        let a = ArrivalSpec::parse("12x50").unwrap();
+        assert_eq!(a, ArrivalSpec { count: 12, gap_ms: 50 });
+        assert_eq!(ArrivalSpec::parse(&a.spell()), Some(a));
+        assert_eq!(ArrivalSpec::parse("4x0"), Some(ArrivalSpec { count: 4, gap_ms: 0 }));
+        for bad in ["", "12", "x50", "12x", "0x50", "-1x50", "12x-5", "12*50"] {
+            assert_eq!(ArrivalSpec::parse(bad), None, "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn serve_flags_apply_and_hard_error() {
+        let mut cfg = ExecConfig::default();
+        assert!(cfg.apply_cli_flag("tenants", Some("4")).unwrap());
+        assert_eq!(cfg.tenants, 4);
+        assert!(cfg.apply_cli_flag("quota-bytes", Some("4096")).unwrap());
+        assert_eq!(cfg.quota_bytes, 4096);
+        assert!(cfg.apply_cli_flag("quota-bytes", Some("2k")).unwrap());
+        assert_eq!(cfg.quota_bytes, 2048);
+        assert!(cfg.apply_cli_flag("quota-bytes", Some("3M")).unwrap());
+        assert_eq!(cfg.quota_bytes, 3 << 20);
+        assert!(cfg.apply_cli_flag("arrivals", Some("8x25")).unwrap());
+        assert_eq!(cfg.arrivals, Some(ArrivalSpec { count: 8, gap_ms: 25 }));
+        for (name, value) in [
+            ("tenants", "zero"),
+            ("tenants", "0"),
+            ("tenants", "65"),
+            ("quota-bytes", "lots"),
+            ("quota-bytes", "4q"),
+            ("arrivals", "forever"),
+            ("arrivals", "0x10"),
+        ] {
+            assert!(
+                cfg.apply_cli_flag(name, Some(value)).is_err(),
+                "--{name} {value} must be rejected"
+            );
+            assert!(cfg.apply_cli_flag(name, None).is_err(), "--{name} needs a value");
+        }
+        // rejected flags mutated nothing
+        assert_eq!(cfg.tenants, 4);
+        assert_eq!(cfg.quota_bytes, 3 << 20);
+        assert_eq!(cfg.arrivals, Some(ArrivalSpec { count: 8, gap_ms: 25 }));
+    }
+
+    #[test]
+    fn validate_rejects_serve_on_shared_plane_and_des() {
+        let serve = ExecConfig::new().serve(true).plane(DataPlane::Space);
+        assert!(serve.validate().is_ok());
+        let msg = ExecConfig::new().serve(true).validate().unwrap_err().to_string();
+        assert!(msg.contains("--plane space"), "{msg}");
+        let msg = serve
+            .clone()
+            .backend(BackendKind::Des)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("--backend threads"), "{msg}");
+        // tenants range is checked under serve
+        let mut bad = serve;
+        bad.tenants = crate::space::MAX_TENANTS + 1;
+        assert!(bad.validate().is_err());
     }
 }

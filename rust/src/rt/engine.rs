@@ -102,11 +102,7 @@ impl Engine {
     /// pools).
     pub fn run(self: &Arc<Engine>, pool: &Pool) -> Result<f64> {
         let eng = self.clone();
-        let root = Task::Startup {
-            node: self.plan.root,
-            prefix: Box::new([]),
-            on_finish: Box::new(Continuation::Done),
-        };
+        let root = self.root_task();
         let t0 = std::time::Instant::now();
         pool.run_until_quiescent(Box::new(move |ctx| eng.exec(ctx, root)));
         let dt = t0.elapsed().as_secs_f64();
@@ -119,6 +115,24 @@ impl Engine {
             );
         }
         Ok(dt)
+    }
+
+    /// Root task for this engine's plan. `Engine::run` injects it and
+    /// blocks on global pool quiescence; serve mode injects it directly
+    /// ([`Pool::inject`]) and polls [`Self::is_complete`] instead, since a
+    /// shared pool is quiescent only when *every* resident graph is done.
+    pub(crate) fn root_task(&self) -> Task {
+        Task::Startup {
+            node: self.plan.root,
+            prefix: Box::new([]),
+            on_finish: Box::new(Continuation::Done),
+        }
+    }
+
+    /// True once this plan's root finish scope has drained (the
+    /// `Continuation::Done` fired). Monotonic: set exactly once per run.
+    pub(crate) fn is_complete(&self) -> bool {
+        self.completed.load(Ordering::Acquire)
     }
 
     fn job(self: &Arc<Self>, task: Task) -> Job {

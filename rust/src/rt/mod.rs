@@ -40,18 +40,22 @@ pub mod engine;
 pub mod ompsim;
 pub mod pool;
 pub mod replay;
+pub mod report;
+pub mod serve;
 pub mod table;
 
 pub use crate::sim::trace::{Trace, TraceMode};
 pub use crate::space::{DataPlane, TransportKind};
 pub use config::{
-    Backend, BackendKind, ConfigEcho, DynExec, DynSimOutcome, DynWorkload, ExecConfig, LeafBody,
-    LeafSpec, StealPolicy,
+    ArrivalSpec, Backend, BackendKind, ConfigEcho, DynExec, DynSimOutcome, DynWorkload,
+    ExecConfig, LeafBody, LeafSpec, StealPolicy,
 };
 pub use engine::{Engine, EngineBackend, LeafExec, NoopLeaf};
 pub use ompsim::OmpBackend;
 pub use pool::{Pool, WorkerCtx};
 pub use replay::{replay_trace, ReplayBackend, ReplayMode};
+pub use report::ReportCore;
+pub use serve::{Service, ServiceStats, Session, SessionState, TenantStats};
 
 use crate::exec::plan::Plan;
 use crate::exec::LeafRunner;
@@ -96,9 +100,13 @@ pub struct RunReport {
     /// Data plane the run executed over ("shared" | "space").
     pub plane: &'static str,
     pub threads: usize,
-    /// Wall-clock seconds under [`BackendKind::Threads`], virtual seconds
-    /// under [`BackendKind::Des`].
+    /// The consolidated headline numbers ([`ReportCore`]): makespan,
+    /// throughput, task/steal counts, space traffic. Read `core.seconds`
+    /// / `core.gflops` instead of the deprecated top-level mirrors.
+    pub core: ReportCore,
+    #[deprecated(note = "read `core.seconds` — the top-level mirror is a one-PR shim")]
     pub seconds: f64,
+    #[deprecated(note = "read `core.gflops` — the top-level mirror is a one-PR shim")]
     pub gflops: f64,
     pub metrics: MetricsSnapshot,
     /// Per-node high-water marks of live datablock bytes under a sharded
@@ -203,12 +211,15 @@ fn run_measured(
             metrics.node_remote_bytes = Vec::new();
         }
     }
+    let gflops = total_flops / seconds / 1e9;
+    #[allow(deprecated)]
     Ok(RunReport {
         runtime: kind.name(),
         plane: plane.name(),
         threads: pool.n_workers,
+        core: ReportCore::from_metrics(seconds, gflops, &metrics),
         seconds,
-        gflops: total_flops / seconds / 1e9,
+        gflops,
         metrics,
         node_peak_bytes: space.map(|s| s.node_peaks()).unwrap_or_default(),
         config: echo,
@@ -361,7 +372,12 @@ mod tests {
         let pool = Pool::new(2);
         for kind in RuntimeKind::all() {
             let r = run(kind, &plan, &leaf, &pool, 1e6).unwrap();
-            assert!(r.seconds > 0.0, "{kind:?}");
+            assert!(r.core.seconds > 0.0, "{kind:?}");
+            #[allow(deprecated)]
+            {
+                assert_eq!(r.seconds, r.core.seconds, "deprecated mirror stays in sync");
+                assert_eq!(r.gflops, r.core.gflops);
+            }
             assert_eq!(r.config.backend, "threads");
             assert_eq!(r.config.runtime, kind.name());
             assert!(r.sim.is_none());

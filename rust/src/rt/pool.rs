@@ -208,6 +208,14 @@ impl Pool {
         self.shared.inject(job);
     }
 
+    /// Outstanding jobs (pushed − completed). Zero means the pool is
+    /// quiescent *right now*; serve-mode waiters combine this with a
+    /// per-engine completion flag, because with concurrent submissions a
+    /// zero here can be transient (another tenant may inject next).
+    pub fn pending(&self) -> usize {
+        self.shared.pending.load(Ordering::Acquire)
+    }
+
     /// Seed a job and block until the pool is quiescent (no pending jobs).
     pub fn run_until_quiescent(&self, job: Job) {
         self.shared.inject(job);

@@ -406,10 +406,12 @@ impl Backend for ReplayBackend {
             busy_ns: 1_000_000_000,
             ..Default::default()
         };
+        #[allow(deprecated)]
         Ok(RunReport {
             runtime: echo.runtime,
             plane: echo.plane,
             threads: echo.threads,
+            core: r.core(),
             seconds: r.seconds,
             gflops: r.gflops,
             metrics,
@@ -493,7 +495,7 @@ mod tests {
             .execute(&plan, &LeafSpec::cost_only(inst.total_flops), &ExecConfig::new())
             .unwrap();
         assert_eq!(r.config.backend, "replay");
-        assert_eq!(r.seconds.to_bits(), sim.seconds.to_bits());
+        assert_eq!(r.core.seconds.to_bits(), sim.seconds.to_bits());
         assert!(r.trace.is_some());
     }
 }

@@ -1,0 +1,144 @@
+//! The consolidated report core shared by every result surface.
+//!
+//! Before this module, [`RunReport`](super::RunReport) (threads backend),
+//! [`SimReport`](crate::sim::SimReport) (DES) and the serve-mode rolling
+//! snapshots each kept their own hand-maintained field list of the same
+//! headline numbers — makespan, throughput, task/steal counts, the §4.5
+//! item-collection traffic. [`ReportCore`] is that overlap as one value:
+//! both report types embed or project it, so bench-report cells, replay
+//! verification and `Service::stats()` read one schema.
+//!
+//! `SimReport`'s own layout is frozen (trace replay verifies captured
+//! reports field-by-field, bit-identically), so it *projects* a core via
+//! [`SimReport::core`] rather than embedding one. `RunReport` embeds the
+//! core as a field; its legacy top-level `seconds`/`gflops` mirrors are
+//! `#[deprecated]` shims for one PR (the PR 3 → PR 5 retirement pattern).
+
+use crate::ral::MetricsSnapshot;
+use crate::sim::SimReport;
+
+/// The headline numbers every backend produces, in one schema.
+///
+/// `seconds` is wall-clock on the threads backend and virtual time on the
+/// DES; `tasks` counts every scheduled task role (STARTUP + WORKER +
+/// PRESCRIBER + SHUTDOWN on the real engine; the DES's own task total,
+/// which counts the same roles). The `space_*` counters are the §4.5
+/// item-collection traffic and are zero on the shared plane.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReportCore {
+    pub seconds: f64,
+    pub gflops: f64,
+    pub tasks: u64,
+    pub steals: u64,
+    pub space_puts: u64,
+    pub space_gets: u64,
+    pub space_frees: u64,
+    pub space_peak_bytes: u64,
+    pub space_remote_gets: u64,
+    pub space_remote_bytes: u64,
+}
+
+impl ReportCore {
+    /// Project the core out of a measured pool-metrics delta (the threads
+    /// backend's measurement protocol).
+    pub fn from_metrics(seconds: f64, gflops: f64, m: &MetricsSnapshot) -> ReportCore {
+        ReportCore {
+            seconds,
+            gflops,
+            tasks: m.total_tasks(),
+            steals: m.steals,
+            space_puts: m.space_puts,
+            space_gets: m.space_gets,
+            space_frees: m.space_frees,
+            space_peak_bytes: m.space_peak_bytes,
+            space_remote_gets: m.space_remote_gets,
+            space_remote_bytes: m.space_remote_bytes,
+        }
+    }
+}
+
+impl SimReport {
+    /// The consolidated core of this simulator report. A projection, not
+    /// a stored field: `SimReport`'s layout is frozen by the trace-replay
+    /// verbatim check, so the core is derived on read.
+    pub fn core(&self) -> ReportCore {
+        ReportCore {
+            seconds: self.seconds,
+            gflops: self.gflops,
+            tasks: self.tasks,
+            steals: self.steals,
+            space_puts: self.space_puts,
+            space_gets: self.space_gets,
+            space_frees: self.space_frees,
+            space_peak_bytes: self.space_peak_bytes,
+            space_remote_gets: self.space_remote_gets,
+            space_remote_bytes: self.space_remote_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_from_metrics_projects_the_shared_fields() {
+        let m = MetricsSnapshot {
+            startups: 2,
+            workers: 10,
+            prescribers: 3,
+            shutdowns: 2,
+            steals: 4,
+            space_puts: 7,
+            space_gets: 9,
+            space_frees: 7,
+            space_peak_bytes: 4096,
+            space_remote_gets: 2,
+            space_remote_bytes: 512,
+            ..Default::default()
+        };
+        let c = ReportCore::from_metrics(1.5, 2.0, &m);
+        assert_eq!(c.seconds, 1.5);
+        assert_eq!(c.gflops, 2.0);
+        assert_eq!(c.tasks, 17, "tasks = startups+workers+prescribers+shutdowns");
+        assert_eq!(c.steals, 4);
+        assert_eq!(c.space_puts, 7);
+        assert_eq!(c.space_frees, 7);
+        assert_eq!(c.space_peak_bytes, 4096);
+        assert_eq!(c.space_remote_gets, 2);
+        assert_eq!(c.space_remote_bytes, 512);
+    }
+
+    #[test]
+    fn sim_report_core_matches_its_fields() {
+        let r = SimReport {
+            seconds: 0.25,
+            gflops: 8.0,
+            tasks: 40,
+            steals: 6,
+            failed_gets: 1,
+            work_ratio: 0.9,
+            space_puts: 20,
+            space_gets: 30,
+            space_frees: 20,
+            space_peak_bytes: 1 << 20,
+            space_local_gets: 28,
+            space_remote_gets: 2,
+            space_remote_bytes: 2048,
+            node_peak_bytes: vec![1 << 20],
+            stolen_edts: 0,
+            steal_bytes: 0,
+        };
+        let c = r.core();
+        assert_eq!(c.seconds, r.seconds);
+        assert_eq!(c.gflops, r.gflops);
+        assert_eq!(c.tasks, r.tasks);
+        assert_eq!(c.steals, r.steals);
+        assert_eq!(c.space_puts, r.space_puts);
+        assert_eq!(c.space_gets, r.space_gets);
+        assert_eq!(c.space_frees, r.space_frees);
+        assert_eq!(c.space_peak_bytes, r.space_peak_bytes);
+        assert_eq!(c.space_remote_gets, r.space_remote_gets);
+        assert_eq!(c.space_remote_bytes, r.space_remote_bytes);
+    }
+}

@@ -1272,10 +1272,12 @@ impl crate::rt::Backend for DesBackend {
                 busy_ns: 1_000_000_000,
                 ..Default::default()
             };
+            #[allow(deprecated)]
             return Ok(crate::rt::RunReport {
                 runtime: mode.name(),
                 plane: cfg.plane.name(),
                 threads: cfg.threads,
+                core: r.core(),
                 seconds: r.seconds,
                 gflops: r.gflops,
                 metrics,
@@ -1326,10 +1328,12 @@ impl crate::rt::Backend for DesBackend {
                     busy_ns: 1_000_000_000,
                     ..Default::default()
                 };
+                #[allow(deprecated)]
                 Ok(crate::rt::RunReport {
                     runtime: mode.name(),
                     plane: cfg.plane.name(),
                     threads: cfg.threads,
+                    core: r.core(),
                     seconds: r.seconds,
                     gflops: r.gflops,
                     metrics,
@@ -1352,12 +1356,19 @@ impl crate::rt::Backend for DesBackend {
                     &cfg.cost,
                     cfg.numa_pinned,
                 );
+                let gflops = leaf.total_flops / secs / 1e9;
+                #[allow(deprecated)]
                 Ok(crate::rt::RunReport {
                     runtime: "omp",
                     plane: cfg.plane.name(),
                     threads: cfg.threads,
+                    core: crate::rt::ReportCore {
+                        seconds: secs,
+                        gflops,
+                        ..Default::default()
+                    },
                     seconds: secs,
-                    gflops: leaf.total_flops / secs / 1e9,
+                    gflops,
                     metrics: MetricsSnapshot::default(),
                     node_peak_bytes: Vec::new(),
                     config: echo,

@@ -85,17 +85,41 @@ struct Shard {
 }
 
 /// Parked-worker / live-item census, kept under one lock so the deadlock
-/// predicate (`parked == active && live == 0`) is evaluated against a
-/// consistent snapshot — a worker mid-consume is either still counted
-/// parked with its item still counted live, or neither. `active` starts
-/// at the worker count and drops as workers retire
-/// ([`DynSpace::worker_exit`]), so a deadlock among the stragglers is
-/// still all-parked.
+/// predicate (`parked == active && live == 0 && inflight == 0`) is
+/// evaluated against a consistent snapshot — a worker mid-consume is
+/// either still counted parked with its item still counted live, or
+/// neither. `active` starts at the worker count and drops as workers
+/// retire ([`DynSpace::worker_exit`]), so a deadlock among the stragglers
+/// is still all-parked. `inflight` is the drain-barrier: the number of
+/// space operations dispatched but not yet applied — a `put_dyn`/`close`
+/// between entry and its census update (it may be blocked on a shard
+/// mutex a parked waiter holds), or an external dispatch holding a
+/// [`DispatchGuard`] (e.g. a channel-transport message on its way to a
+/// shard service thread). While `inflight > 0` the space is *not* wedged
+/// — the pending op may publish a match — so the census must wait for it
+/// to land before declaring deadlock.
 #[derive(Default)]
 struct Gate {
     parked: usize,
     live: u64,
     active: usize,
+    inflight: usize,
+}
+
+/// RAII token for an externally dispatched space operation (see
+/// [`DynSpace::dispatch_guard`]): while any guard is alive the all-parked
+/// deadlock census holds its fire, because the guarded dispatch may still
+/// publish the item a parked waiter needs. Dropping the guard (after the
+/// operation applied — or was abandoned) re-arms the census and wakes the
+/// shards so waiters re-evaluate promptly.
+pub struct DispatchGuard {
+    space: Arc<DynSpace>,
+}
+
+impl Drop for DispatchGuard {
+    fn drop(&mut self) {
+        self.space.op_exit();
+    }
 }
 
 /// The dynamic tuple space. Shares the static space's accounting
@@ -124,7 +148,12 @@ impl DynSpace {
             shards: (0..nodes)
                 .map(|_| Shard { m: Mutex::new(DynShard::default()), cv: Condvar::new() })
                 .collect(),
-            gate: Mutex::new(Gate { parked: 0, live: 0, active: workers.max(1) }),
+            gate: Mutex::new(Gate {
+                parked: 0,
+                live: 0,
+                active: workers.max(1),
+                inflight: 0,
+            }),
             poisoned: AtomicBool::new(false),
             poison_msg: Mutex::new(None),
         }
@@ -174,6 +203,43 @@ impl DynSpace {
         }
     }
 
+    /// Register an externally dispatched operation with the deadlock
+    /// census *before* it races any shard or gate lock: take the guard,
+    /// then perform the `put_dyn`/`close` (possibly on another thread —
+    /// the guard is `Send`), then drop it. Without this, an operation in
+    /// flight — say a channel-transport put that has left the producer
+    /// but not yet been applied by the shard's service thread — is
+    /// invisible to the census, which can then observe "all workers
+    /// parked, nothing live" and poison a space that was one message away
+    /// from making progress.
+    pub fn dispatch_guard(self: &Arc<Self>) -> DispatchGuard {
+        self.op_enter();
+        DispatchGuard { space: self.clone() }
+    }
+
+    /// One in-flight op entered the drain-barrier (gate lock only — never
+    /// called with a shard lock held, preserving the shard→gate order).
+    fn op_enter(&self) {
+        self.gate.lock().unwrap().inflight += 1;
+    }
+
+    /// One in-flight op landed (or was abandoned). If that was the last
+    /// one and the space now satisfies the deadlock predicate, wake every
+    /// shard so parked waiters run the census and poison promptly instead
+    /// of waiting out their park timeout.
+    fn op_exit(&self) {
+        let wake = {
+            let mut g = self.gate.lock().unwrap();
+            g.inflight -= 1;
+            g.inflight == 0 && g.parked == g.active && g.live == 0
+        };
+        if wake {
+            for s in &self.shards {
+                s.cv.notify_all();
+            }
+        }
+    }
+
     fn poison(&self, msg: String) {
         {
             let mut p = self.poison_msg.lock().unwrap();
@@ -191,10 +257,14 @@ impl DynSpace {
     /// key (items stay single-assignment) and on a put into a closed
     /// collection (a close is a promise that no producer remains).
     pub fn put_dyn(&self, key: ItemKey, block: DataBlock, count: DynCount) {
+        // drain-barrier: visible to the census before this op can block
+        // on a shard mutex a parked waiter holds
+        self.op_enter();
         let home = self.home(key.coll);
         let bytes = block.bytes() as u64;
         if count == DynCount::Known(0) {
-            self.ledger.on_put(home, bytes, true);
+            self.ledger.on_put(home, key.coll, bytes, true);
+            self.op_exit();
             return;
         }
         let shard = &self.shards[home];
@@ -217,8 +287,9 @@ impl DynSpace {
             );
             self.gate.lock().unwrap().live += 1;
         }
-        self.ledger.on_put(home, bytes, false);
+        self.ledger.on_put(home, key.coll, bytes, false);
         shard.cv.notify_all();
+        self.op_exit();
     }
 
     /// Linda `in`: destructive pattern get from consumer node `from`.
@@ -292,7 +363,7 @@ impl DynSpace {
                 }
                 drop(g);
                 let bytes = block.bytes() as u64;
-                self.ledger.on_get(home, Some(from), bytes, freed);
+                self.ledger.on_get(home, pat.coll, Some(from), bytes, freed);
                 if from != home
                     && self.kind == TransportKind::Channel
                     && !self.link.is_zero()
@@ -314,7 +385,7 @@ impl DynSpace {
                     parked = true;
                     gate.parked += 1;
                 }
-                if gate.parked == gate.active && gate.live == 0 {
+                if gate.parked == gate.active && gate.live == 0 && gate.inflight == 0 {
                     let n = gate.active;
                     gate.parked -= 1;
                     drop(gate);
@@ -342,6 +413,10 @@ impl DynSpace {
     /// `Known` items survive a close and stay matchable until their
     /// get-counts drain them. Idempotent.
     pub fn close(&self, coll: u32) {
+        // same drain-barrier as put_dyn: a close in flight will release
+        // matchless waiters with `None`, so the census must not poison
+        // the space while it is still on its way to the shard
+        self.op_enter();
         let home = self.home(coll);
         let shard = &self.shards[home];
         let mut drained: Vec<u64> = Vec::new();
@@ -349,6 +424,8 @@ impl DynSpace {
             let mut g = shard.m.lock().unwrap();
             let c = g.colls.entry(coll).or_default();
             if c.closed {
+                drop(g);
+                self.op_exit();
                 return;
             }
             c.closed = true;
@@ -366,9 +443,10 @@ impl DynSpace {
             }
         }
         for b in &drained {
-            self.ledger.on_drain(home, *b);
+            self.ledger.on_drain(home, coll, *b);
         }
         shard.cv.notify_all();
+        self.op_exit();
     }
 }
 
@@ -519,6 +597,61 @@ mod tests {
             assert!(t.join().unwrap().is_none(), "deadlock returns None, never hangs");
         }
         let msg = s.poison_msg().expect("space must poison itself");
+        assert!(msg.contains("deadlock"), "{msg}");
+    }
+
+    /// ISSUE 7 bugfix regression: an operation dispatched but not yet
+    /// applied — the channel-transport shape, where a put message has
+    /// left the producer but not yet reached the shard's service thread —
+    /// must hold the all-parked deadlock census at bay. Workers = 1, so
+    /// the single parked consumer satisfies `parked == active && live ==
+    /// 0` the instant it parks; without the drain-barrier the census
+    /// poisons a space that is one message away from making progress.
+    #[test]
+    fn census_waits_for_inflight_dispatch_before_poisoning() {
+        let s = Arc::new(DynSpace::new(
+            Topology::single(),
+            TransportKind::Channel,
+            LinkModel::zero(),
+            1,
+        ));
+        let guard = s.dispatch_guard(); // the put is "in flight" from here
+        let consumer = {
+            let s = s.clone();
+            std::thread::spawn(move || s.in_(&TagPattern::any(0, 1), 0))
+        };
+        // the consumer parks on an empty space and re-runs the census on
+        // every park timeout — ample opportunity for an unquiesced census
+        // to fire spuriously
+        std::thread::sleep(Duration::from_millis(250));
+        assert!(
+            s.poison_msg().is_none(),
+            "census must quiesce the in-flight dispatch before declaring deadlock"
+        );
+        s.put_dyn(ItemKey::new(0, &[1]), block(2), DynCount::Known(1));
+        drop(guard);
+        let (tag, _) = consumer.join().unwrap().expect("woken by the in-flight put");
+        assert_eq!(&tag[..], &[1]);
+        assert!(s.poison_msg().is_none(), "a landed put is progress, not deadlock");
+        assert_eq!(s.live_items(), 0);
+    }
+
+    /// The complementary direction: dropping the guard without having
+    /// published anything re-arms the census, which must then declare the
+    /// (now genuine) deadlock instead of waiting forever.
+    #[test]
+    fn abandoned_dispatch_rearms_the_census() {
+        let s = Arc::new(single(1));
+        let guard = s.dispatch_guard();
+        let consumer = {
+            let s = s.clone();
+            std::thread::spawn(move || s.in_(&TagPattern::any(3, 1), 0))
+        };
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(s.poison_msg().is_none(), "guard alive: census must hold fire");
+        drop(guard); // nothing was published: the space really is wedged
+        assert!(consumer.join().unwrap().is_none(), "deadlock returns None, never hangs");
+        let msg = s.poison_msg().expect("census re-armed by the guard drop");
         assert!(msg.contains("deadlock"), "{msg}");
     }
 

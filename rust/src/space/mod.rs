@@ -73,7 +73,7 @@ pub mod store;
 pub mod tiles;
 pub mod transport;
 
-pub use dynamic::{DynCount, DynSpace};
+pub use dynamic::{DispatchGuard, DynCount, DynSpace};
 pub use pattern::{FieldPat, TagPattern};
 pub use placement::{Placement, Topology};
 pub use store::{ItemSpace, SpaceSnapshot, SpaceStats};
@@ -111,6 +111,44 @@ impl SpaceAccounting for ItemSpace {
     fn node_remote_ops(&self) -> (Vec<u64>, Vec<u64>) {
         ItemSpace::node_remote_ops(self)
     }
+}
+
+/// Tenant-namespace layout of [`ItemKey::coll`] under serve mode
+/// (`rt::serve`). A resident [`crate::rt::serve::Service`] multiplexes
+/// many submissions onto **one** shared [`ItemSpace`]; to keep tenants —
+/// and concurrent submissions of one tenant — from ever aliasing items,
+/// the collection id is split into bit fields:
+///
+/// ```text
+///   31        26 25        16 15                0
+///   [ tenant  ) [ sequence ) [ plan node id    )
+/// ```
+///
+/// Batch runs (`rt::launch`) use raw plan node ids, which land in tenant
+/// 0 / sequence 0 — so the batch path is bit-identical to a namespaced
+/// tenant-0 run and per-tenant accounting degenerates to the global
+/// counters.
+pub const TENANT_SHIFT: u32 = 26;
+/// Per-submission sequence field (see [`TENANT_SHIFT`]).
+pub const SEQ_SHIFT: u32 = 16;
+/// Upper bound on serve-mode tenants (6 tenant bits).
+pub const MAX_TENANTS: usize = 1 << (32 - TENANT_SHIFT);
+/// In-flight submissions distinguishable per tenant (10 sequence bits;
+/// the service recycles sequence numbers, which is safe because a
+/// completed submission has reclaimed all its items).
+pub const MAX_SEQ: u64 = 1 << (TENANT_SHIFT - SEQ_SHIFT);
+
+/// Collection-namespace base for `(tenant, submission-sequence)`: OR the
+/// plan node id into the returned base to get the submission's private
+/// collection id. Plan node ids must stay below `2^16` (asserted).
+pub fn ns_coll(tenant: usize, seq: u64) -> u32 {
+    debug_assert!(tenant < MAX_TENANTS, "tenant {tenant} out of range");
+    ((tenant as u32) << TENANT_SHIFT) | (((seq % MAX_SEQ) as u32) << SEQ_SHIFT)
+}
+
+/// Which tenant a collection id belongs to (tenant 0 for batch runs).
+pub fn tenant_of(coll: u32) -> usize {
+    (coll >> TENANT_SHIFT) as usize
 }
 
 /// Which data plane leaf EDTs exchange array data through.
@@ -230,6 +268,25 @@ mod tests {
         assert_eq!(r.points(), 8);
         let b = DataBlock::new(vec![r]);
         assert_eq!(b.bytes(), 32);
+    }
+
+    #[test]
+    fn tenant_namespace_folding() {
+        // batch node ids are tenant 0 / seq 0
+        assert_eq!(tenant_of(7), 0);
+        assert_eq!(ns_coll(0, 0), 0);
+        // tenant and sequence land in disjoint fields above the node id
+        let base = ns_coll(3, 5);
+        assert_eq!(tenant_of(base | 42), 3);
+        assert_ne!(ns_coll(3, 5), ns_coll(3, 6), "submissions must not alias");
+        assert_ne!(ns_coll(3, 5), ns_coll(4, 5), "tenants must not alias");
+        // same node id under two tenants is two distinct keys
+        let a = ItemKey::new(ns_coll(1, 0) | 2, &[9]);
+        let b = ItemKey::new(ns_coll(2, 0) | 2, &[9]);
+        assert_ne!(a, b);
+        // sequence wraps modulo MAX_SEQ without touching the tenant field
+        assert_eq!(ns_coll(1, MAX_SEQ), ns_coll(1, 0));
+        assert_eq!(tenant_of(ns_coll(MAX_TENANTS - 1, 0)), MAX_TENANTS - 1);
     }
 
     #[test]

@@ -167,6 +167,20 @@ impl ItemSpace {
         self.ledger.nodes.remote_ops()
     }
 
+    /// Live datablock bytes currently attributed to `tenant` (the
+    /// collection-namespace field of [`ItemKey::coll`]; see
+    /// [`super::TENANT_SHIFT`]). Tenant 0 covers batch runs, whose raw
+    /// plan-node collection ids carry no namespace bits. This gauge is
+    /// what serve-mode admission control charges quotas against.
+    pub fn tenant_live_bytes(&self, tenant: usize) -> u64 {
+        self.ledger.tenants.live(tenant)
+    }
+
+    /// High-water mark of [`Self::tenant_live_bytes`] for `tenant`.
+    pub fn tenant_peak_bytes(&self, tenant: usize) -> u64 {
+        self.ledger.tenants.peak(tenant)
+    }
+
     /// Publish an item with its statically known consumer count (the CnC
     /// get-count). Items are single-assignment: a second put of the same
     /// key is a program error. A `get_count` of zero means the item has no

@@ -179,6 +179,12 @@ pub struct SpaceLeafRunner {
     pub kernels: Arc<dyn KernelSet>,
     pub writes: KernelWrites,
     pub space: Arc<ItemSpace>,
+    /// Collection-namespace prefix OR-ed into every `ItemKey.coll` this
+    /// runner touches ([`crate::space::ns_coll`]). Batch runs keep the
+    /// default `0`, which leaves keys bit-identical to the pre-namespace
+    /// layout; serve mode sets a per-`(tenant, submission)` prefix so
+    /// concurrent graphs on one shared space can never alias items.
+    pub coll_base: u32,
     /// Check consumed payloads bit-for-bit against the arrays. Sound only
     /// for single-assignment (write-once) programs: an in-place workload
     /// may legally overwrite a producer's cells (via a transitively
@@ -193,6 +199,7 @@ impl SpaceLeafRunner {
             kernels,
             writes: KernelWrites::from_program(prog),
             space: Arc::new(ItemSpace::default()),
+            coll_base: 0,
             verify: false,
         }
     }
@@ -221,6 +228,17 @@ impl SpaceLeafRunner {
         link: crate::space::LinkModel,
     ) -> Self {
         self.space = Arc::new(ItemSpace::with_transport(64, topo, kind, link));
+        self
+    }
+
+    /// Serve-mode constructor variant: route all tiles through an
+    /// externally owned (shared, resident) item space, with every key's
+    /// collection id offset by `coll_base` (see [`crate::space::ns_coll`]).
+    /// Plan node ids occupy the low 16 bits of `coll`, so any `ns_coll`
+    /// prefix composes with them by plain OR.
+    pub fn with_shared_space(mut self, space: Arc<ItemSpace>, coll_base: u32) -> Self {
+        self.space = space;
+        self.coll_base = coll_base;
         self
     }
 
@@ -267,7 +285,7 @@ impl LeafExec for SpaceLeafRunner {
         //    on the node its tag maps to (owner-computes), so gets of
         //    items owned elsewhere count as remote traffic.
         for ant in plan.antecedents(node_id, coords) {
-            let key = ItemKey::new(node_id, &ant);
+            let key = ItemKey::new(self.coll_base | node_id, &ant);
             let block = self.space.get_from(&key, here);
             if self.verify {
                 self.verify_block(&key, &block);
@@ -323,8 +341,11 @@ impl LeafExec for SpaceLeafRunner {
             })
             .collect();
         let get_count = plan.consumer_count(node_id, coords);
-        self.space
-            .put(ItemKey::new(node_id, coords), DataBlock::new(regions), get_count);
+        self.space.put(
+            ItemKey::new(self.coll_base | node_id, coords),
+            DataBlock::new(regions),
+            get_count,
+        );
     }
 }
 

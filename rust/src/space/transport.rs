@@ -175,6 +175,41 @@ impl NodeAcct {
     }
 }
 
+/// Per-tenant accounting: live/peak payload bytes per collection-namespace
+/// tenant (see [`super::TENANT_SHIFT`]). Batch runs use raw plan node ids,
+/// which all fold into tenant 0 — so outside serve mode this is just a
+/// second copy of the global live/peak gauges and costs two extra atomic
+/// ops per put/free. Fixed [`super::MAX_TENANTS`] slots: no resizing, no
+/// locks on the hot path.
+pub(crate) struct TenantAcct {
+    live: Vec<AtomicU64>,
+    peak: Vec<AtomicU64>,
+}
+
+impl TenantAcct {
+    fn new() -> TenantAcct {
+        let zeros = || (0..super::MAX_TENANTS).map(|_| AtomicU64::new(0)).collect();
+        TenantAcct { live: zeros(), peak: zeros() }
+    }
+
+    fn add_live(&self, tenant: usize, bytes: u64) {
+        let now = self.live[tenant].fetch_add(bytes, Ordering::AcqRel) + bytes;
+        self.peak[tenant].fetch_max(now, Ordering::AcqRel);
+    }
+
+    fn sub_live(&self, tenant: usize, bytes: u64) {
+        self.live[tenant].fetch_sub(bytes, Ordering::AcqRel);
+    }
+
+    pub(crate) fn live(&self, tenant: usize) -> u64 {
+        self.live[tenant].load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn peak(&self, tenant: usize) -> u64 {
+        self.peak[tenant].load(Ordering::Relaxed)
+    }
+}
+
 /// The one accounting body shared by both transports. Update order
 /// mirrors the pre-seam store exactly, so the `InProc` refactor is
 /// bit-identical and the `Channel` transport can only differ in *when*
@@ -183,6 +218,7 @@ impl NodeAcct {
 pub(crate) struct Ledger {
     pub(crate) stats: Arc<SpaceStats>,
     pub(crate) nodes: Arc<NodeAcct>,
+    pub(crate) tenants: Arc<TenantAcct>,
 }
 
 impl Ledger {
@@ -190,20 +226,25 @@ impl Ledger {
         Ledger {
             stats: Arc::new(SpaceStats::default()),
             nodes: Arc::new(NodeAcct::new(nodes)),
+            tenants: Arc::new(TenantAcct::new()),
         }
     }
 
     /// Publish accounting: `transient` items (zero consumers) register in
     /// the peaks and are reclaimed immediately, like the real runtime's
-    /// allocation would.
-    pub(crate) fn on_put(&self, owner: usize, bytes: u64, transient: bool) {
+    /// allocation would. `coll` attributes the bytes to the tenant its
+    /// namespace field names (tenant 0 for batch runs).
+    pub(crate) fn on_put(&self, owner: usize, coll: u32, bytes: u64, transient: bool) {
+        let tenant = super::tenant_of(coll);
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         self.stats.put_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.stats.add_live(bytes);
         self.nodes.add_live(owner, bytes);
+        self.tenants.add_live(tenant, bytes);
         if transient {
             self.stats.sub_live(bytes);
             self.nodes.sub_live(owner, bytes);
+            self.tenants.sub_live(tenant, bytes);
         } else {
             self.stats.live_items.fetch_add(1, Ordering::Relaxed);
         }
@@ -212,7 +253,14 @@ impl Ledger {
     /// Consume accounting: classify local/remote against the item's owner
     /// (the transport-side classification the per-node remote counters in
     /// [`crate::ral::Metrics`] are sourced from).
-    pub(crate) fn on_get(&self, owner: usize, from: Option<usize>, bytes: u64, freed: bool) {
+    pub(crate) fn on_get(
+        &self,
+        owner: usize,
+        coll: u32,
+        from: Option<usize>,
+        bytes: u64,
+        freed: bool,
+    ) {
         self.stats.gets.fetch_add(1, Ordering::Relaxed);
         self.stats.get_bytes.fetch_add(bytes, Ordering::Relaxed);
         if let Some(f) = from {
@@ -226,6 +274,7 @@ impl Ledger {
         if freed {
             self.stats.sub_live(bytes);
             self.nodes.sub_live(owner, bytes);
+            self.tenants.sub_live(super::tenant_of(coll), bytes);
             self.stats.live_items.fetch_sub(1, Ordering::Relaxed);
         }
     }
@@ -233,9 +282,10 @@ impl Ledger {
     /// Drain accounting: a `close()` reclaiming an `Open`-count item that
     /// was never destructively consumed (dynamic space only). Counts as a
     /// free — not as a get — so leak-freedom stays `puts == frees`.
-    pub(crate) fn on_drain(&self, owner: usize, bytes: u64) {
+    pub(crate) fn on_drain(&self, owner: usize, coll: u32, bytes: u64) {
         self.stats.sub_live(bytes);
         self.nodes.sub_live(owner, bytes);
+        self.tenants.sub_live(super::tenant_of(coll), bytes);
         self.stats.live_items.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -313,7 +363,7 @@ impl ShardTransport for InProc {
 
     fn put(&self, key: ItemKey, block: DataBlock, get_count: usize, owner: usize) {
         let bytes = block.bytes() as u64;
-        self.ledger.on_put(owner, bytes, get_count == 0);
+        self.ledger.on_put(owner, key.coll, bytes, get_count == 0);
         if get_count == 0 {
             return;
         }
@@ -346,7 +396,7 @@ impl ShardTransport for InProc {
         if freed {
             self.tombs[self.shard_idx(key)].lock().unwrap().insert(key.clone());
         }
-        self.ledger.on_get(owner, from, block.bytes() as u64, freed);
+        self.ledger.on_get(owner, key.coll, from, block.bytes() as u64, freed);
         Some(block)
     }
 
@@ -417,7 +467,7 @@ impl Channel {
             match req {
                 Req::Put { key, block, get_count, ack } => {
                     let bytes = block.bytes() as u64;
-                    ledger.on_put(node, bytes, get_count == 0);
+                    ledger.on_put(node, key.coll, bytes, get_count == 0);
                     if get_count > 0 {
                         let prev = items.insert(
                             key,
@@ -444,7 +494,7 @@ impl Channel {
                             items.remove(&key);
                             freed_keys.insert(key.clone());
                         }
-                        ledger.on_get(node, from, block.bytes() as u64, freed);
+                        ledger.on_get(node, key.coll, from, block.bytes() as u64, freed);
                         block
                     });
                     let _ = reply.send(hit);
@@ -593,6 +643,38 @@ mod tests {
         assert_eq!(peaks.len(), 2);
         assert_eq!(rg, vec![0, 1], "node 1 issued the one remote get");
         assert_eq!(rb, vec![0, 16]);
+    }
+
+    /// Per-tenant ledger attribution: bytes put under a namespaced
+    /// collection land in that tenant's live/peak gauges, batch-style raw
+    /// collection ids land in tenant 0, and reclamation returns every
+    /// tenant to zero live bytes — on both transports.
+    #[test]
+    fn tenant_ledger_attributes_live_and_peak_bytes() {
+        use crate::space::ns_coll;
+        for kind in TransportKind::all() {
+            let s = ItemSpace::with_transport(8, Topology::single(), kind, LinkModel::zero());
+            let t1 = ns_coll(1, 0) | 3;
+            let t2 = ns_coll(2, 7) | 3;
+            s.put(ItemKey::new(t1, &[0]), block(4), 1); // 16 B → tenant 1
+            s.put(ItemKey::new(t2, &[0]), block(8), 1); // 32 B → tenant 2
+            s.put(ItemKey::new(5, &[0]), block(2), 1); //   8 B → tenant 0 (batch)
+            assert_eq!(s.tenant_live_bytes(1), 16, "{kind:?}");
+            assert_eq!(s.tenant_live_bytes(2), 32, "{kind:?}");
+            assert_eq!(s.tenant_live_bytes(0), 8, "{kind:?}");
+            assert!(s.try_get(&ItemKey::new(t1, &[0])).is_some());
+            assert!(s.try_get(&ItemKey::new(t2, &[0])).is_some());
+            assert!(s.try_get(&ItemKey::new(5, &[0])).is_some());
+            for t in 0..3 {
+                assert_eq!(s.tenant_live_bytes(t), 0, "{kind:?} tenant {t}");
+            }
+            assert_eq!(s.tenant_peak_bytes(1), 16, "{kind:?}");
+            assert_eq!(s.tenant_peak_bytes(2), 32, "{kind:?}");
+            // global counters are the sum over tenants, unchanged by the
+            // namespacing
+            assert_eq!(s.stats.snapshot().puts, 3, "{kind:?}");
+            assert_eq!(s.stats.snapshot().frees, 3, "{kind:?}");
+        }
     }
 
     #[test]

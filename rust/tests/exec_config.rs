@@ -124,6 +124,11 @@ fn invalid_config_values_are_hard_errors() {
         ("nodes", "many"),
         ("threads", "fast"),
         ("runtime", "tbb"),
+        ("tenants", "0"),
+        ("tenants", "lots"),
+        ("quota-bytes", "4q"),
+        ("arrivals", "forever"),
+        ("arrivals", "0x10"),
     ];
     for (name, value) in bad {
         let err = cfg.apply_cli_flag(name, Some(value));
@@ -137,6 +142,7 @@ fn invalid_config_values_are_hard_errors() {
     // a config flag with no value at all is also an error
     for name in [
         "steal", "trace", "plane", "placement", "transport", "nodes", "threads", "runtime",
+        "tenants", "quota-bytes", "arrivals",
     ] {
         assert!(cfg.apply_cli_flag(name, None).is_err(), "--{name} needs a value");
     }
@@ -149,6 +155,10 @@ fn invalid_config_values_are_hard_errors() {
     assert_eq!(cfg.nodes, 1);
     assert_eq!(cfg.threads, 2);
     assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::CncDep));
+    assert!(!cfg.serve);
+    assert_eq!(cfg.tenants, 1);
+    assert_eq!(cfg.quota_bytes, 0);
+    assert_eq!(cfg.arrivals, None);
     // and the valid spellings still work
     assert!(cfg.apply_cli_flag("steal", Some("remote-ready")).unwrap());
     assert!(cfg.apply_cli_flag("trace", Some("schedule")).unwrap());
@@ -237,6 +247,36 @@ fn channel_transport_on_shared_plane_is_rejected_by_every_backend() {
     let leaf = inst.leaf_spec(&arrays);
     let r = rt::launch(&plan, &leaf, &ok).expect("channel over space plane runs");
     assert_eq!(r.config.transport, "channel");
+}
+
+/// Serve-mode knob combinations go through the same one-place
+/// `validate()`: serve + shared plane and serve + DES are rejected with
+/// actionable messages, and the CLI spelling of the serve knobs
+/// round-trips into a standing `Service`.
+#[test]
+fn serve_mode_combinations_validate_in_one_place() {
+    use tale3::rt::{ArrivalSpec, Service};
+    // serve + shared plane: rejected (tenant accounting lives in the space)
+    let bad = ExecConfig::new().serve(true);
+    let msg = bad.validate().unwrap_err().to_string();
+    assert!(msg.contains("--plane space"), "{msg}");
+    // serve + DES backend: rejected (no resident pool in virtual time)
+    let bad = ExecConfig::new()
+        .serve(true)
+        .plane(DataPlane::Space)
+        .backend(BackendKind::Des);
+    let msg = bad.validate().unwrap_err().to_string();
+    assert!(msg.contains("--backend threads"), "{msg}");
+    // the CLI spelling round-trips and stands up a real service
+    let mut cfg = ExecConfig::new().plane(DataPlane::Space);
+    assert!(cfg.apply_cli_flag("tenants", Some("2")).unwrap());
+    assert!(cfg.apply_cli_flag("quota-bytes", Some("1m")).unwrap());
+    assert!(cfg.apply_cli_flag("arrivals", Some("4x10")).unwrap());
+    assert_eq!(cfg.tenants, 2);
+    assert_eq!(cfg.quota_bytes, 1 << 20);
+    assert_eq!(cfg.arrivals, Some(ArrivalSpec { count: 4, gap_ms: 10 }));
+    let svc = Service::new(cfg).expect("valid serve config stands up");
+    assert_eq!(svc.stats().tenants.len(), 2);
 }
 
 /// Oracle identity through `rt::launch` for every {runtime, plane,

@@ -1,0 +1,286 @@
+//! Serve-mode integration suite (ISSUE 7 acceptance scenarios):
+//!
+//! 1. single-tenant parity — a one-tenant, infinite-quota `Service` run
+//!    produces the same oracle counters (put/get/free totals, leak-free)
+//!    and the same output data as the equivalent batch `rt::launch`;
+//! 2. two-tenant isolation — identical plans (identical `(collection,
+//!    tag)` keys) run concurrently for two tenants without aliasing:
+//!    no single-assignment panic, both verify, totals are exactly 2×;
+//! 3. quota backpressure — a submission queues while its tenant is at
+//!    `--quota-bytes` and is admitted after reclamation releases the
+//!    reservation, per-tenant ledger bytes returning to zero;
+//! 4. cancel mid-flight — a detached submission drains leak-free.
+//!
+//! Scenarios 3 and 4 need a graph that stays resident until the test
+//! says otherwise: the `Gate` fixture below is a minimal `DynWorkload`
+//! whose single worker blocks on a Linda `in` for a release tuple the
+//! *test* puts from outside. A hold item keeps the dynamic space's live
+//! count positive so the all-parked deadlock census (correctly) does not
+//! fire while the gate waits on an external producer.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use tale3::exec::Plan;
+use tale3::rt::{
+    self, DynExec, DynSimOutcome, DynWorkload, ExecConfig, LeafExec, LeafSpec, Service,
+    SessionState,
+};
+use tale3::space::{
+    DataBlock, DataPlane, DynCount, DynSpace, ItemKey, LinkModel, Region, SpaceAccounting,
+    TagPattern, Topology,
+};
+use tale3::workloads::{by_name, irregular, Size};
+
+fn serve_cfg() -> ExecConfig {
+    ExecConfig::new().plane(DataPlane::Space).threads(2)
+}
+
+fn tiny() -> tale3::workloads::Instance {
+    (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny)
+}
+
+// ---------------------------------------------------------------- gate --
+
+const RELEASE_COLL: u32 = 0;
+const HOLD_COLL: u32 = 9;
+
+fn block(points: usize) -> DataBlock {
+    DataBlock::new(vec![Region {
+        array: 0,
+        lo: Box::new([0]),
+        hi: Box::new([points as i64 - 1]),
+        data: vec![0.0; points].into_boxed_slice(),
+    }])
+}
+
+/// A one-worker dynamic workload that parks until the test releases it.
+#[derive(Default)]
+struct Gate {
+    space: Mutex<Option<Arc<DynSpace>>>,
+}
+
+impl Gate {
+    fn release(&self) {
+        let sp = self.space.lock().unwrap().clone().expect("gate not built yet");
+        sp.put_dyn(
+            ItemKey::new(RELEASE_COLL, &[0]),
+            block(1),
+            DynCount::Known(1),
+        );
+    }
+}
+
+impl DynWorkload for Gate {
+    fn name(&self) -> &'static str {
+        "gate"
+    }
+
+    fn build(&self, cfg: &ExecConfig, topo: &Topology) -> anyhow::Result<DynExec> {
+        // one worker regardless of pool width: the submission's plan is
+        // worker_plan(1), so exactly one leaf runs (and exits) the space
+        let space = Arc::new(DynSpace::new(
+            topo.clone(),
+            cfg.transport,
+            LinkModel::from_cost(&cfg.cost),
+            1,
+        ));
+        // the hold item keeps live > 0 while the worker parks on an
+        // external release, so the deadlock census stays quiet
+        space.put_dyn(ItemKey::new(HOLD_COLL, &[0]), block(1), DynCount::Known(1));
+        *self.space.lock().unwrap() = Some(space.clone());
+        Ok(DynExec {
+            leaf: Arc::new(GateLeaf {
+                space: space.clone(),
+            }),
+            space,
+        })
+    }
+
+    fn simulate(&self, _: &ExecConfig, _: &Topology) -> anyhow::Result<DynSimOutcome> {
+        anyhow::bail!("gate is a threads-only test fixture")
+    }
+}
+
+struct GateLeaf {
+    space: Arc<DynSpace>,
+}
+
+impl LeafExec for GateLeaf {
+    fn run_leaf(&self, _plan: &Plan, _node: u32, _coords: &[i64]) {
+        // park until the test puts the release tuple, then drain the
+        // hold item so the private space ends with zero live items
+        let _ = self.space.in_(&TagPattern::exact(RELEASE_COLL, &[0]), 0);
+        let _ = self.space.in_(&TagPattern::exact(HOLD_COLL, &[0]), 0);
+        self.space.worker_exit();
+    }
+}
+
+fn gate_session(svc: &Service, gate: &Arc<Gate>, demand: u64) -> rt::Session {
+    let plan = irregular::worker_plan(1).unwrap();
+    let dw: Arc<dyn DynWorkload> = gate.clone();
+    svc.submit_with_demand(&plan, &LeafSpec::dynamic(dw, 0.0), 0, demand)
+        .unwrap()
+}
+
+fn await_state(s: &rt::Session, want: SessionState) {
+    let t0 = Instant::now();
+    while s.state() != want {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "session {} stuck in {:?} waiting for {want:?}",
+            s.id(),
+            s.state()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+// ------------------------------------------------------------ scenarios --
+
+#[test]
+fn single_tenant_service_matches_batch_oracle() {
+    let inst = tiny();
+    let plan = inst.plan().unwrap();
+
+    // batch reference: same config shape, same plan, rt::launch
+    let batch_arrays = inst.arrays();
+    let r = rt::launch(&plan, &inst.leaf_spec(&batch_arrays), &serve_cfg()).unwrap();
+
+    // serve run: one tenant, quota 0 = unlimited
+    let svc = Service::new(serve_cfg()).unwrap();
+    let serve_arrays = inst.arrays();
+    let s = svc
+        .submit(&plan, &inst.leaf_spec(&serve_arrays), 0)
+        .unwrap();
+    let core = s.wait().unwrap();
+    assert_eq!(s.state(), SessionState::Done);
+    assert_eq!(s.report(), Some(core));
+
+    // oracle counter identity: §4.5 put/get/free totals are
+    // schedule-independent, so the resident engine must reproduce the
+    // batch engine's space traffic exactly
+    assert_eq!(core.space_puts, r.metrics.space_puts, "puts");
+    assert_eq!(core.space_gets, r.metrics.space_gets, "gets");
+    assert_eq!(core.space_frees, r.metrics.space_frees, "frees");
+    assert_eq!(core.tasks, r.metrics.total_tasks(), "task totals");
+
+    // and the data out of the namespaced space is bit-identical
+    assert_eq!(batch_arrays.max_abs_diff(&serve_arrays), 0.0);
+
+    svc.drain();
+    assert_eq!(svc.space().tenant_live_bytes(0), 0, "tenant ledger empty");
+    assert_eq!(svc.space().live_items(), 0, "get-count reclamation total");
+    let st = svc.stats();
+    assert_eq!((st.admitted, st.queued, st.completed), (1, 0, 1));
+}
+
+#[test]
+fn two_tenants_with_identical_tags_never_alias() {
+    let inst = tiny();
+    let plan = inst.plan().unwrap();
+    let batch = rt::launch(&plan, &inst.leaf_spec(&inst.arrays()), &serve_cfg()).unwrap();
+
+    let svc = Service::new(serve_cfg().tenants(2)).unwrap();
+    let a0 = inst.arrays();
+    let a1 = inst.arrays();
+    let l0 = inst.leaf_spec(&a0);
+    let l1 = inst.leaf_spec(&a1);
+    // same plan, same node ids, same tags — running concurrently. Without
+    // tenant namespacing the second put of any key would panic the
+    // single-assignment check.
+    let s0 = svc.submit(&plan, &l0, 0).unwrap();
+    let s1 = svc.submit(&plan, &l1, 1).unwrap();
+    s0.wait().unwrap();
+    s1.wait().unwrap();
+
+    // both tenants computed the right answer in their own namespace
+    assert_eq!(a0.max_abs_diff(&a1), 0.0);
+
+    svc.drain();
+    // shared-space absolute totals are exactly two batch runs' worth —
+    // schedule-independent, so exact even though the graphs overlapped
+    let snap = svc.space().space_snapshot();
+    assert_eq!(snap.puts, 2 * batch.metrics.space_puts, "puts 2x");
+    assert_eq!(snap.gets, 2 * batch.metrics.space_gets, "gets 2x");
+    assert_eq!(snap.frees, 2 * batch.metrics.space_frees, "frees 2x");
+    for t in 0..2 {
+        assert_eq!(svc.space().tenant_live_bytes(t), 0, "tenant {t} ledger");
+    }
+    assert_eq!(svc.space().live_items(), 0);
+}
+
+#[test]
+fn quota_backpressure_queues_then_admits_after_reclamation() {
+    const DEMAND: u64 = 1 << 16;
+    // quota fits one declared footprint but not two
+    let svc = Service::new(serve_cfg().quota_bytes(DEMAND)).unwrap();
+    let gate = Arc::new(Gate::default());
+    let g = gate_session(&svc, &gate, DEMAND);
+    await_state(&g, SessionState::Running); // gate holds the full quota
+
+    let inst = tiny();
+    let plan = inst.plan().unwrap();
+    let arrays = inst.arrays();
+    let leaf = inst.leaf_spec(&arrays);
+    let s = svc.submit_with_demand(&plan, &leaf, 0, DEMAND).unwrap();
+    // the tenant is at quota: the kernel graph must wait, not run
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(s.state(), SessionState::Queued, "blocked at quota");
+    let st = svc.stats();
+    assert_eq!(st.tenants[0].reserved_bytes, DEMAND);
+    assert_eq!((st.tenants[0].admitted, st.tenants[0].queued), (1, 1));
+
+    // completion releases the gate's reservation -> s admits and runs
+    gate.release();
+    g.wait().unwrap();
+    s.wait().unwrap();
+
+    svc.drain();
+    let st = svc.stats();
+    assert_eq!(st.tenants[0].reserved_bytes, 0, "all reservations released");
+    assert_eq!(st.tenants[0].completed, 2);
+    assert_eq!(svc.space().tenant_live_bytes(0), 0, "ledger back to zero");
+
+    // a demand that can never fit is rejected at the door, not queued
+    assert!(svc
+        .submit_with_demand(&plan, &leaf, 0, DEMAND + 1)
+        .is_err());
+}
+
+#[test]
+fn cancel_mid_flight_detaches_and_leaves_no_leak() {
+    let svc = Service::new(serve_cfg()).unwrap();
+    let gate = Arc::new(Gate::default());
+    let s = gate_session(&svc, &gate, 0);
+    await_state(&s, SessionState::Running);
+
+    // cancel while the graph is parked mid-flight: serve detaches the
+    // submission (report discarded) but lets the graph drain so nothing
+    // leaks — then the release lets it finish
+    s.cancel();
+    gate.release();
+    assert!(s.wait().is_err(), "cancelled submissions never yield Ok");
+    assert_eq!(s.state(), SessionState::Cancelled);
+
+    svc.drain();
+    assert_eq!(svc.space().tenant_live_bytes(0), 0);
+    let sp = gate.space.lock().unwrap().clone().unwrap();
+    assert_eq!(sp.live_items(), 0, "gate's private space drained");
+    assert!(sp.poison_msg().is_none(), "no census false positive");
+    // cancelled runs do not count as completions
+    assert_eq!(svc.stats().completed, 0);
+}
+
+#[test]
+fn serve_works_over_the_channel_transport() {
+    use tale3::space::TransportKind;
+    let inst = tiny();
+    let plan = inst.plan().unwrap();
+    let svc = Service::new(serve_cfg().transport(TransportKind::Channel)).unwrap();
+    let arrays = inst.arrays();
+    let s = svc.submit(&plan, &inst.leaf_spec(&arrays), 0).unwrap();
+    let core = s.wait().unwrap();
+    assert!(core.space_puts > 0);
+    svc.drain();
+    assert_eq!(svc.space().tenant_live_bytes(0), 0);
+}

@@ -139,7 +139,7 @@ fn replay_backend_execute_round_trip() {
         .execute(&plan, &leaf, &ExecConfig::new())
         .expect("verbatim execute");
     assert_eq!(verbatim.config.backend, "replay");
-    assert_eq!(verbatim.seconds.to_bits(), sim.seconds.to_bits());
+    assert_eq!(verbatim.core.seconds.to_bits(), sim.seconds.to_bits());
     assert!(verbatim.sim.is_some() && verbatim.trace.is_some());
     // recost through the Backend seam reads the new CostModel from cfg
     let cheap = tale3::sim::CostModel {
@@ -150,7 +150,7 @@ fn replay_backend_execute_round_trip() {
     let recost = ReplayBackend::recost(trace)
         .execute(&plan, &leaf, &ExecConfig::new().cost(cheap))
         .expect("recost execute");
-    assert!(recost.seconds <= verbatim.seconds);
+    assert!(recost.core.seconds <= verbatim.core.seconds);
 }
 
 /// Schedule-mode traces replay too (no data-plane events to rebuild, so
