@@ -1,0 +1,123 @@
+//! DES cell throughput — the arena-reuse optimization behind
+//! `tale3 sweep`.
+//!
+//! A capacity sweep runs hundreds of short DES cells back to back, so
+//! the per-cell setup cost (tag table, deques, ready heap, node
+//! accounting) becomes the hot path. Each sweep worker owns one
+//! [`DesArena`] and recycles those buffers between cells; this bench
+//! records the before/after:
+//!
+//! * `fresh` — a new arena per cell (the allocation behavior of the
+//!   pre-sweep `des_exec` path);
+//! * `arena` — one arena reused across all cells (the sweep-worker
+//!   path).
+//!
+//! Reported as cells/sec and simulated events/sec (tasks + space
+//! put/get/free), plus a bit-identity check: arena reuse must never
+//! change a single reported number.
+
+use std::time::Instant;
+use tale3::ral::DepMode;
+use tale3::rt::StealPolicy;
+use tale3::sim::des::{simulate_cell, DesArena};
+use tale3::sim::{CostModel, Machine, SimReport};
+use tale3::space::{DataPlane, Placement, Topology};
+use tale3::sweep::sim_events;
+use tale3::workloads::{by_name, Size};
+
+struct Cell {
+    name: &'static str,
+    plan: std::sync::Arc<tale3::Plan>,
+    total_flops: f64,
+    topo: Topology,
+    threads: usize,
+    steal: StealPolicy,
+}
+
+fn build_cells() -> Vec<Cell> {
+    // a mixed bag on purpose: different plan shapes and node counts
+    // resize the arena buffers between cells, the worst case for reuse
+    let specs = [
+        ("JAC-2D-5P", 4usize, 8usize, StealPolicy::RemoteReady),
+        ("LUD", 2, 4, StealPolicy::Never),
+        ("JAC-3D-7P", 1, 4, StealPolicy::Never),
+        ("MATMULT", 4, 8, StealPolicy::RemoteReady),
+    ];
+    specs
+        .iter()
+        .map(|&(name, nodes, threads, steal)| {
+            let inst = (by_name(name).expect("workload").build)(Size::Tiny);
+            let plan = inst.plan().expect("plan");
+            let topo = Topology::for_plan(&plan, nodes, Placement::Block);
+            Cell { name, plan, total_flops: inst.total_flops, topo, threads, steal }
+        })
+        .collect()
+}
+
+fn run(c: &Cell, arena: &mut DesArena) -> SimReport {
+    simulate_cell(
+        &c.plan,
+        DepMode::CncDep,
+        DataPlane::Space,
+        &c.topo,
+        c.threads,
+        &Machine::default(),
+        &CostModel::default(),
+        true,
+        c.total_flops,
+        c.steal,
+        arena,
+    )
+}
+
+fn main() {
+    let cells = build_cells();
+    let reps = 50;
+    println!(
+        "DES cell throughput over {} mixed cells × {reps} reps (tiny size):",
+        cells.len()
+    );
+
+    let mut baseline: Vec<SimReport> = Vec::new();
+    for mode in ["fresh", "arena"] {
+        let mut shared = DesArena::new();
+        let t0 = Instant::now();
+        let mut events: u64 = 0;
+        let mut ran: u64 = 0;
+        let mut first_pass: Vec<SimReport> = Vec::new();
+        for rep in 0..reps {
+            for c in &cells {
+                let r = match mode {
+                    "fresh" => run(c, &mut DesArena::new()),
+                    _ => run(c, &mut shared),
+                };
+                events += sim_events(&r);
+                ran += 1;
+                if rep == 0 {
+                    first_pass.push(r);
+                }
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        println!(
+            "  {mode:<6} {:>8.1} cells/s  {:>8.2}M events/s  ({ran} cells in {secs:.3}s)",
+            ran as f64 / secs,
+            events as f64 / secs / 1e6,
+        );
+        if baseline.is_empty() {
+            baseline = first_pass;
+        } else {
+            for (c, (a, b)) in cells.iter().zip(baseline.iter().zip(&first_pass)) {
+                assert_eq!(
+                    a.seconds.to_bits(),
+                    b.seconds.to_bits(),
+                    "{}: arena reuse must not change the simulation",
+                    c.name
+                );
+                assert_eq!(a.tasks, b.tasks);
+                assert_eq!(a.node_peak_bytes, b.node_peak_bytes);
+            }
+            println!("  bit-identity: fresh vs arena reports match on every cell");
+        }
+    }
+}

@@ -9,7 +9,7 @@
 //! (`tests/placement.rs` asserts this), so CI artifacts diff cleanly
 //! run-to-run and PR-to-PR.
 //!
-//! **Schema `tale3-bench-report/v5`:** the document opens with a `config`
+//! **Schema `tale3-bench-report/v6`:** the document opens with a `config`
 //! object — the fully-resolved [`ExecConfig`] echo every cell ran under —
 //! and each workload carries three cells side by side: the single-node
 //! space-plane baseline (`single`), the sharded topology under strict
@@ -29,8 +29,13 @@
 //! [`crate::workloads::irregular`]) simulated through the same DES, each
 //! carrying its sequential-oracle counters and a `leak_free` flag that
 //! asserts both cells matched the oracle exactly (puts == frees: every
-//! pattern-consumed item was reclaimed). CI's golden-file job asserts
-//! the v5 key set is stable across runs.
+//! pattern-consumed item was reclaimed). v6 adds the `sweep` section: a
+//! mini capacity grid (`nodes` × `steal` on JAC-2D-5P) run through
+//! [`crate::sweep::run_sweep`] on two worker threads and embedded as
+//! the `tale3-sweep/v1` header + row objects — the report both smokes
+//! the sweep subsystem and proves its parallel executor is
+//! byte-deterministic (the whole report is diffed run-to-run). CI's
+//! golden-file job asserts the v6 key set is stable across runs.
 
 use crate::ral::DepMode;
 use crate::rt::{self, BackendKind, DynWorkload, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
@@ -246,12 +251,39 @@ pub fn perf_report_json(cfg: &ReportConfig) -> String {
         ));
     }
     format!(
-        "{{\"schema\":\"tale3-bench-report/v5\",\"config\":{},\"workloads\":[{}],\
-         \"irregular\":[{}]}}\n",
+        "{{\"schema\":\"tale3-bench-report/v6\",\"config\":{},\"workloads\":[{}],\
+         \"irregular\":[{}],\"sweep\":{}}}\n",
         config_obj(cfg),
         workloads.join(","),
-        irregular_cells.join(",")
+        irregular_cells.join(","),
+        sweep_section(cfg, size),
     )
+}
+
+/// v6 `sweep` section: a mini `nodes` × `steal` capacity grid on
+/// JAC-2D-5P, run through the real sweep subsystem (two worker
+/// threads, per-worker arena reuse) and embedded as the artifact's
+/// header + row objects. Diffing the report run-to-run therefore also
+/// gates the sweep executor's byte-determinism.
+fn sweep_section(cfg: &ReportConfig, size: Size) -> String {
+    use crate::sweep::SweepSpec;
+    let mut spec = SweepSpec::default();
+    let mut nodes = vec!["1".to_string(), cfg.nodes.to_string()];
+    nodes.dedup();
+    let mut steal = vec!["never".to_string(), cfg.steal.name().to_string()];
+    steal.dedup();
+    spec.add_axis_flag(&format!("nodes={}", nodes.join(",")))
+        .expect("static nodes axis");
+    spec.add_axis_flag(&format!("steal={}", steal.join(",")))
+        .expect("static steal axis");
+    let base = cfg.exec_config(cfg.nodes, cfg.steal);
+    let res = crate::sweep::run_sweep(&spec, &base, "JAC-2D-5P", size, 2)
+        .expect("mini capacity sweep");
+    let jsonl = res.to_jsonl(false);
+    let mut lines = jsonl.lines();
+    let header = lines.next().expect("sweep artifact header");
+    let rows: Vec<&str> = lines.collect();
+    format!("{{\"header\":{header},\"rows\":[{}]}}", rows.join(","))
 }
 
 #[cfg(test)]

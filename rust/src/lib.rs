@@ -30,6 +30,7 @@ pub mod runtime;
 pub mod schedule;
 pub mod sim;
 pub mod space;
+pub mod sweep;
 pub mod workloads;
 
 pub use edt::{map_program, EdtTree, MapOptions};

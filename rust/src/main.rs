@@ -10,6 +10,8 @@
 //!   `trace replay <file>`               verbatim replay (audit) of a trace
 //!   `trace recost <file> [opts]`        what-if replay under new link costs
 //!   `trace summarize <file>`            per-node timelines + steal provenance
+//!   `sweep [opts]`                      batched DES capacity sweep (grid or LHS)
+//!   `sweep summarize <file>`            frontier tables from a sweep artifact
 //!   `bench-report [opts]`               deterministic perf JSON (CI artifact)
 //!   `table <1|2|3|4|5|fig2>`            pointers to the bench targets
 //!
@@ -323,6 +325,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "serve" => return serve_cmd(&args),
+        "sweep" => return sweep_cmd(&args),
         "trace" => {
             use tale3::rt::{replay_trace, ReplayMode, Trace, TraceMode};
             let sub = args.positional.get(1).map(String::as_str).unwrap_or("help");
@@ -485,7 +488,7 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             println!("tale3 — A Tale of Three Runtimes (reproduction)");
-            println!("usage: tale3 <list|explain|run|sim|serve|trace|bench-report|table> [workload]");
+            println!("usage: tale3 <list|explain|run|sim|serve|sweep|trace|bench-report|table> [workload]");
             println!("       [--size tiny|small|paper]");
             println!("       [--runtime cnc-block|cnc-async|cnc-dep|swarm|ocr|omp|all]");
             println!("       [--threads N[,N..]] [--tiles a,b,c] [--levels k] [--gran n] [--no-verify]");
@@ -503,7 +506,16 @@ fn main() -> anyhow::Result<()> {
             println!("                    link costs without re-simulating, or view per-node timelines)");
             println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P] [--steal S]");
             println!("                    [--transport T]  (deterministic perf JSON: virtual time");
-            println!("                    only, schema v5)");
+            println!("                    only, schema v6)");
+            println!();
+            println!("sweep [--spec FILE.json] [--axis name=v1,v2|lo:hi]... [--samples N] [--seed S]");
+            println!("      [--jobs N] [--out FILE] [--wall] [--workload W] [--size S]");
+            println!("                    (batched DES capacity planning: a cartesian grid or a");
+            println!("                    seeded latin-hypercube sample over workload/size/nodes/");
+            println!("                    placement/steal/link-cost axes; tale3-sweep/v1 JSONL,");
+            println!("                    byte-identical across runs and --jobs counts)");
+            println!("sweep summarize <file> [--json]   (makespan-vs-nodes, peak-bytes-vs-placement");
+            println!("                    and steal-benefit frontiers of a sweep artifact)");
             println!();
             println!("serve [--tenants N] [--quota-bytes B[k|m|g]] [--arrivals COUNTxGAP_MS]");
             println!("      [--transport inproc|channel] [--threads N] [--trace-dir DIR]");
@@ -778,5 +790,93 @@ fn capture_twin(
         .ok_or_else(|| anyhow::anyhow!("DES twin launch returned no trace"))?;
     let path = format!("{dir}/sub{arrival}-{}.trace.jsonl", name.to_lowercase());
     std::fs::write(&path, trace.to_jsonl())?;
+    Ok(())
+}
+
+/// `tale3 sweep`: build a [`tale3::sweep::SweepSpec`] from a JSON spec
+/// file and/or repeated `--axis` flags, run every cell on a worker
+/// pool, and emit the `tale3-sweep/v1` JSONL artifact (stdout or
+/// `--out`). `tale3 sweep summarize <file>` folds an artifact into the
+/// capacity-planning frontier tables.
+fn sweep_cmd(args: &Args) -> anyhow::Result<()> {
+    use tale3::sweep::{self, SweepSpec};
+    if args.positional.get(1).map(String::as_str) == Some("summarize") {
+        let path = args
+            .positional
+            .get(2)
+            .ok_or_else(|| anyhow::anyhow!("sweep summarize <artifact.jsonl> [--json]"))?;
+        let parsed = sweep::parse_artifact(&std::fs::read_to_string(path)?)?;
+        let s = sweep::build_summary(&parsed);
+        if args.has("json") {
+            println!("{}", sweep::render_json(&s));
+        } else {
+            print!("{}", sweep::render_text(&s));
+        }
+        return Ok(());
+    }
+
+    // spec file first, then --axis flags extend it; flag() only returns
+    // the first occurrence, so gather repeats from the raw flag list
+    let mut spec = match args.flag("spec") {
+        Some(path) => SweepSpec::from_json(&std::fs::read_to_string(path)?)?,
+        None => SweepSpec::default(),
+    };
+    for (name, val) in &args.flags {
+        if name == "axis" {
+            let v = val
+                .as_deref()
+                .ok_or_else(|| anyhow::anyhow!("--axis expects name=v1,v2 or name=lo:hi"))?;
+            spec.add_axis_flag(v)?;
+        }
+    }
+    if let Some(n) = args.flag("samples") {
+        spec.samples = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--samples expects a count, got `{n}`"))?;
+    }
+    if let Some(s) = args.flag("seed") {
+        spec.seed = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--seed expects a u64, got `{s}`"))?;
+    }
+    if spec.axes.is_empty() {
+        let (samples, seed) = (spec.samples, spec.seed);
+        spec = SweepSpec::default_grid();
+        spec.samples = samples;
+        spec.seed = seed;
+        eprintln!("no axes given: sweeping the default workload x nodes x steal grid");
+    }
+
+    let jobs = match args.flag("jobs") {
+        Some(j) => j
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--jobs expects a thread count, got `{j}`"))?,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    };
+    // cells are batch DES runs; capacity planning is about the
+    // distributed (tuple-space) plane with enough workers to populate
+    // the swept node counts, unless a plane/threads axis or flag says so
+    let mut base = args.exec_config(BackendKind::Des)?;
+    if !args.has("plane") {
+        base.plane = DataPlane::Space;
+    }
+    if !args.has("threads") && !spec.axes.iter().any(|a| a.name == "threads") {
+        base.threads = 8;
+    }
+    let workload = args.flag("workload").unwrap_or("JAC-2D-5P");
+    by_name(workload).ok_or_else(|| anyhow::anyhow!("unknown workload {workload}"))?;
+    // sweeps multiply cells, so default each cell to the tiny size
+    let size = if args.has("size") { args.size() } else { Size::Tiny };
+
+    let result = sweep::run_sweep(&spec, &base, workload, size, jobs)?;
+    let text = result.to_jsonl(args.has("wall"));
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            eprintln!("wrote {path} ({} cells)", result.rows.len());
+        }
+        None => print!("{text}"),
+    }
+    eprintln!("{}", result.throughput_line());
     Ok(())
 }

@@ -469,6 +469,28 @@ impl ExecConfig {
                 })?);
                 Ok(true)
             }
+            "link-bw" => {
+                let v = need(name, value)?;
+                let bw: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--link-bw expects ns-per-byte (f64), got `{v}`")
+                })?;
+                if !bw.is_finite() || bw < 0.0 {
+                    bail!("--link-bw must be a finite non-negative ns/byte, got `{v}`");
+                }
+                self.cost.link_bw_ns_per_byte = bw;
+                Ok(true)
+            }
+            "link-latency" => {
+                let v = need(name, value)?;
+                let lat: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--link-latency expects nanoseconds (f64), got `{v}`")
+                })?;
+                if !lat.is_finite() || lat < 0.0 {
+                    bail!("--link-latency must be a finite non-negative ns, got `{v}`");
+                }
+                self.cost.link_latency_ns = lat;
+                Ok(true)
+            }
             "runtime" => {
                 self.runtime = match need(name, value)? {
                     "cnc-block" => RuntimeKind::Edt(DepMode::CncBlock),
@@ -696,6 +718,10 @@ mod tests {
         assert_eq!(cfg.trace, crate::sim::TraceMode::Full);
         assert!(cfg.apply_cli_flag("transport", Some("channel")).unwrap());
         assert_eq!(cfg.transport, TransportKind::Channel);
+        assert!(cfg.apply_cli_flag("link-bw", Some("0.5")).unwrap());
+        assert_eq!(cfg.cost.link_bw_ns_per_byte, 0.5);
+        assert!(cfg.apply_cli_flag("link-latency", Some("3000")).unwrap());
+        assert_eq!(cfg.cost.link_latency_ns, 3000.0);
     }
 
     /// An unrecognized value for a config knob must be a hard error, not
@@ -712,6 +738,10 @@ mod tests {
             ("transport", "tcp"),
             ("threads", "fast"),
             ("runtime", "tbb"),
+            ("link-bw", "fast"),
+            ("link-bw", "-1"),
+            ("link-latency", "slow"),
+            ("link-latency", "NaN"),
         ] {
             assert!(
                 cfg.apply_cli_flag(name, Some(value)).is_err(),

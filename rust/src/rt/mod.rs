@@ -101,13 +101,10 @@ pub struct RunReport {
     pub plane: &'static str,
     pub threads: usize,
     /// The consolidated headline numbers ([`ReportCore`]): makespan,
-    /// throughput, task/steal counts, space traffic. Read `core.seconds`
-    /// / `core.gflops` instead of the deprecated top-level mirrors.
+    /// throughput, task/steal counts, space traffic. `core.seconds` /
+    /// `core.gflops` are the only makespan/throughput fields (the legacy
+    /// top-level mirrors served their one-PR deprecation and are gone).
     pub core: ReportCore,
-    #[deprecated(note = "read `core.seconds` — the top-level mirror is a one-PR shim")]
-    pub seconds: f64,
-    #[deprecated(note = "read `core.gflops` — the top-level mirror is a one-PR shim")]
-    pub gflops: f64,
     pub metrics: MetricsSnapshot,
     /// Per-node high-water marks of live datablock bytes under a sharded
     /// space (empty under the shared plane; one entry on a single node).
@@ -212,14 +209,11 @@ fn run_measured(
         }
     }
     let gflops = total_flops / seconds / 1e9;
-    #[allow(deprecated)]
     Ok(RunReport {
         runtime: kind.name(),
         plane: plane.name(),
         threads: pool.n_workers,
         core: ReportCore::from_metrics(seconds, gflops, &metrics),
-        seconds,
-        gflops,
         metrics,
         node_peak_bytes: space.map(|s| s.node_peaks()).unwrap_or_default(),
         config: echo,
@@ -373,11 +367,6 @@ mod tests {
         for kind in RuntimeKind::all() {
             let r = run(kind, &plan, &leaf, &pool, 1e6).unwrap();
             assert!(r.core.seconds > 0.0, "{kind:?}");
-            #[allow(deprecated)]
-            {
-                assert_eq!(r.seconds, r.core.seconds, "deprecated mirror stays in sync");
-                assert_eq!(r.gflops, r.core.gflops);
-            }
             assert_eq!(r.config.backend, "threads");
             assert_eq!(r.config.runtime, kind.name());
             assert!(r.sim.is_none());

@@ -406,14 +406,11 @@ impl Backend for ReplayBackend {
             busy_ns: 1_000_000_000,
             ..Default::default()
         };
-        #[allow(deprecated)]
         Ok(RunReport {
             runtime: echo.runtime,
             plane: echo.plane,
             threads: echo.threads,
             core: r.core(),
-            seconds: r.seconds,
-            gflops: r.gflops,
             metrics,
             node_peak_bytes: r.node_peak_bytes.clone(),
             config: echo,

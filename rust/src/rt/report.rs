@@ -11,8 +11,9 @@
 //! `SimReport`'s own layout is frozen (trace replay verifies captured
 //! reports field-by-field, bit-identically), so it *projects* a core via
 //! [`SimReport::core`] rather than embedding one. `RunReport` embeds the
-//! core as a field; its legacy top-level `seconds`/`gflops` mirrors are
-//! `#[deprecated]` shims for one PR (the PR 3 → PR 5 retirement pattern).
+//! core as a field (its legacy top-level `seconds`/`gflops` mirrors rode
+//! one PR as `#[deprecated]` shims and are gone — the PR 3 → PR 5
+//! retirement pattern).
 
 use crate::ral::MetricsSnapshot;
 use crate::sim::SimReport;

@@ -423,6 +423,13 @@ impl Service {
 
     /// Rolling service snapshot: per-tenant ledger bytes + admission
     /// counts, service totals, and the trailing-window completion count.
+    ///
+    /// One coherent snapshot per call: the window is read *under the
+    /// admission lock* — and completions are recorded under it too (see
+    /// `run_submission`) — so `window_completions <= completed` holds in
+    /// every snapshot. Reading the window after dropping the lock let a
+    /// completion land between the two reads and the `--arrivals` smoke
+    /// logs flap in CI (a window count with no matching total).
     pub fn stats(&self) -> ServiceStats {
         let sh = &self.shared;
         let g = sh.admit.lock().unwrap();
@@ -436,13 +443,14 @@ impl Service {
                 completed: g.completed[t],
             })
             .collect();
-        drop(g);
         let now_ns = sh.t0.elapsed().as_nanos() as u64;
+        let window_completions = sh.window.count_in_window(now_ns);
+        drop(g);
         ServiceStats {
             admitted: tenants.iter().map(|t| t.admitted).sum(),
             queued: tenants.iter().map(|t| t.queued).sum(),
             completed: tenants.iter().map(|t| t.completed).sum(),
-            window_completions: sh.window.count_in_window(now_ns),
+            window_completions,
             window_secs: sh.window.window_ns() as f64 / 1e9,
             tenants,
         }
@@ -590,16 +598,18 @@ fn run_submission(sh: &Arc<ServiceShared>, sub: &Arc<SubmissionInner>, p: Prepar
     };
     let done = matches!(terminal, SessState::Done(_));
     {
+        // the rolling window is recorded under the admission lock, next
+        // to the completed[] bump, so a concurrent `stats()` never sees a
+        // window completion without its matching total (lock order
+        // admit → window matches stats())
         let mut g = sh.admit.lock().unwrap();
         g.reserved[tenant] -= p.demand;
         if done {
             g.completed[tenant] += 1;
+            sh.window.record(sh.t0.elapsed().as_nanos() as u64);
         }
     }
     sh.admit_cv.notify_all();
-    if done {
-        sh.window.record(sh.t0.elapsed().as_nanos() as u64);
-    }
     set_state(sub, terminal);
 }
 
@@ -680,5 +690,43 @@ mod tests {
         assert!(s2.wait().is_err(), "cancelled or detached, never Done");
         svc.drain();
         assert_eq!(svc.space().tenant_live_bytes(0), 0, "leak-free after cancel");
+    }
+
+    /// The `--arrivals` log-flap regression: a stats snapshot is read
+    /// under one lock, so the rolling-window count can never exceed the
+    /// completed total it rides next to — even while submissions are
+    /// finishing concurrently with the polling.
+    #[test]
+    fn stats_snapshot_is_coherent_under_concurrent_completions() {
+        let inst = (crate::workloads::by_name("JAC-2D-5P").unwrap().build)(
+            crate::workloads::Size::Tiny,
+        );
+        let plan = inst.plan().unwrap();
+        let svc = Service::new(serve_cfg().tenants(2)).unwrap();
+        let mut sessions = Vec::new();
+        for i in 0..6 {
+            let arrays = inst.arrays();
+            let leaf = inst.leaf_spec(&arrays);
+            sessions.push(svc.submit(&plan, &leaf, i % 2).unwrap());
+        }
+        // poll while the submissions race to completion
+        for _ in 0..200 {
+            let st = svc.stats();
+            assert!(
+                st.window_completions <= st.completed,
+                "window {} > completed {} — incoherent snapshot",
+                st.window_completions,
+                st.completed
+            );
+            assert!(st.admitted >= st.completed, "admitted precedes completed");
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        for s in &sessions {
+            assert!(s.wait().is_ok());
+        }
+        svc.drain();
+        let st = svc.stats();
+        assert_eq!(st.completed, 6);
+        assert!(st.window_completions <= st.completed);
     }
 }

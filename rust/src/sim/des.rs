@@ -977,6 +977,97 @@ impl<'a> Des<'a> {
     }
 }
 
+/// Reusable DES buffers, reset between runs.
+///
+/// Batched sweeps ([`crate::sweep`]) run thousands of cells back to
+/// back; rebuilding the tag table, pending list, ready deques and event
+/// heap from scratch for every cell makes per-event allocation the hot
+/// path (the ROADMAP's 10^8-event concern). An arena keeps the backing
+/// capacity across cells — `clear()` instead of `new()` — without
+/// changing a single virtual-time result: the DES never *iterates* its
+/// hash maps (get/insert/remove only), so retained capacity cannot
+/// perturb determinism. `benches/sweep_throughput.rs` measures the
+/// events/sec gain.
+#[derive(Default)]
+pub struct DesArena {
+    table: HashMap<TagKey, Entry>,
+    pendings: Vec<Pending>,
+    scopes: Vec<Scope>,
+    space_items: HashMap<TagKey, (u64, i64, usize)>,
+    deques: Vec<VecDeque<(u64, u64, STask)>>,
+    heap: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    free_at: Vec<u64>,
+    idle: Vec<bool>,
+    node_live: Vec<u64>,
+    node_peak: Vec<u64>,
+    active_leaf_ends: BinaryHeap<Reverse<u64>>,
+}
+
+impl DesArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear every buffer (keeping capacity) and shape the per-worker /
+    /// per-node vectors for the next run.
+    fn reset(&mut self, threads: usize, nodes: usize) {
+        self.table.clear();
+        self.pendings.clear();
+        self.scopes.clear();
+        self.space_items.clear();
+        self.heap.clear();
+        self.active_leaf_ends.clear();
+        self.deques.truncate(threads);
+        for dq in &mut self.deques {
+            dq.clear();
+        }
+        self.deques.resize_with(threads, VecDeque::new);
+        self.free_at.clear();
+        self.free_at.resize(threads, 0);
+        self.idle.clear();
+        self.idle.resize(threads, false);
+        self.node_live.clear();
+        self.node_live.resize(nodes, 0);
+        self.node_peak.clear();
+        self.node_peak.resize(nodes, 0);
+    }
+}
+
+/// One sweep cell: simulate `plan` untraced under a fully-resolved
+/// config, reusing `arena`'s buffers across calls. The report is
+/// bit-identical to a fresh-arena [`simulate`]/`des_exec` run — the
+/// arena only recycles allocation capacity.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_cell(
+    plan: &Plan,
+    mode: DepMode,
+    plane: DataPlane,
+    topo: &Topology,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+    total_flops: f64,
+    steal_policy: StealPolicy,
+    arena: &mut DesArena,
+) -> SimReport {
+    des_exec_traced_in(
+        plan,
+        mode,
+        plane,
+        topo,
+        threads,
+        machine,
+        costs,
+        numa_pinned,
+        total_flops,
+        steal_policy,
+        TraceMode::Off,
+        arena,
+    )
+    .0
+}
+
 /// Simulate the plan under a dependence mode with `threads` virtual
 /// workers over the shared data plane. Returns the virtual-time report.
 pub fn simulate(
@@ -1056,6 +1147,40 @@ pub(crate) fn des_exec_traced(
     steal_policy: StealPolicy,
     trace: TraceMode,
 ) -> (SimReport, Vec<TraceEvent>) {
+    des_exec_traced_in(
+        plan,
+        mode,
+        plane,
+        topo,
+        threads,
+        machine,
+        costs,
+        numa_pinned,
+        total_flops,
+        steal_policy,
+        trace,
+        &mut DesArena::default(),
+    )
+}
+
+/// [`des_exec_traced`] with caller-owned buffer reuse: every allocation
+/// that scales with the event count comes out of `arena` and is handed
+/// back (cleared, capacity intact) when the run completes.
+#[allow(clippy::too_many_arguments)]
+fn des_exec_traced_in(
+    plan: &Plan,
+    mode: DepMode,
+    plane: DataPlane,
+    topo: &Topology,
+    threads: usize,
+    machine: &Machine,
+    costs: &CostModel,
+    numa_pinned: bool,
+    total_flops: f64,
+    steal_policy: StealPolicy,
+    trace: TraceMode,
+    arena: &mut DesArena,
+) -> (SimReport, Vec<TraceEvent>) {
     // node-pinned scheduling needs a data plane that models distribution:
     // on the shared plane a topology has nothing to pin or transfer (PR 2
     // contract: topology affects Space-plane accounting only), and a
@@ -1073,6 +1198,7 @@ pub(crate) fn des_exec_traced(
         node_workers[nd].push(w);
     }
     let route_rr = vec![0; node_workers.len()];
+    arena.reset(threads, topo.nodes());
     let mut d = Des {
         plan,
         mode,
@@ -1087,10 +1213,10 @@ pub(crate) fn des_exec_traced(
         worker_node,
         node_workers,
         route_rr,
-        table: HashMap::new(),
-        pendings: Vec::new(),
-        scopes: Vec::new(),
-        space_items: HashMap::new(),
+        table: std::mem::take(&mut arena.table),
+        pendings: std::mem::take(&mut arena.pendings),
+        scopes: std::mem::take(&mut arena.scopes),
+        space_items: std::mem::take(&mut arena.space_items),
         space_live: 0,
         space_peak: 0,
         space_puts: 0,
@@ -1099,13 +1225,13 @@ pub(crate) fn des_exec_traced(
         space_local_gets: 0,
         space_remote_gets: 0,
         space_remote_bytes: 0,
-        node_live: vec![0; topo.nodes()],
-        node_peak: vec![0; topo.nodes()],
-        active_leaf_ends: BinaryHeap::new(),
-        deques: (0..threads).map(|_| VecDeque::new()).collect(),
-        heap: BinaryHeap::new(),
-        free_at: vec![0; threads],
-        idle: vec![false; threads],
+        node_live: std::mem::take(&mut arena.node_live),
+        node_peak: std::mem::take(&mut arena.node_peak),
+        active_leaf_ends: std::mem::take(&mut arena.active_leaf_ends),
+        deques: std::mem::take(&mut arena.deques),
+        heap: std::mem::take(&mut arena.heap),
+        free_at: std::mem::take(&mut arena.free_at),
+        idle: std::mem::take(&mut arena.idle),
         seq: 0,
         rng: 0x243F6A8885A308D3,
         end_time: 0,
@@ -1198,11 +1324,23 @@ pub(crate) fn des_exec_traced(
         space_local_gets: d.space_local_gets,
         space_remote_gets: d.space_remote_gets,
         space_remote_bytes: d.space_remote_bytes,
-        node_peak_bytes: d.node_peak,
+        node_peak_bytes: d.node_peak.clone(),
         stolen_edts: d.stolen_edts,
         steal_bytes: d.steal_bytes,
     };
-    let events = d.tracer.map(|t| t.events).unwrap_or_default();
+    let events = d.tracer.take().map(|t| t.events).unwrap_or_default();
+    // hand the buffers back for the next cell
+    arena.table = d.table;
+    arena.pendings = d.pendings;
+    arena.scopes = d.scopes;
+    arena.space_items = d.space_items;
+    arena.node_live = d.node_live;
+    arena.node_peak = d.node_peak;
+    arena.active_leaf_ends = d.active_leaf_ends;
+    arena.deques = d.deques;
+    arena.heap = d.heap;
+    arena.free_at = d.free_at;
+    arena.idle = d.idle;
     (report, events)
 }
 
@@ -1272,14 +1410,11 @@ impl crate::rt::Backend for DesBackend {
                 busy_ns: 1_000_000_000,
                 ..Default::default()
             };
-            #[allow(deprecated)]
             return Ok(crate::rt::RunReport {
                 runtime: mode.name(),
                 plane: cfg.plane.name(),
                 threads: cfg.threads,
                 core: r.core(),
-                seconds: r.seconds,
-                gflops: r.gflops,
                 metrics,
                 node_peak_bytes: r.node_peak_bytes.clone(),
                 config: echo,
@@ -1328,14 +1463,11 @@ impl crate::rt::Backend for DesBackend {
                     busy_ns: 1_000_000_000,
                     ..Default::default()
                 };
-                #[allow(deprecated)]
                 Ok(crate::rt::RunReport {
                     runtime: mode.name(),
                     plane: cfg.plane.name(),
                     threads: cfg.threads,
                     core: r.core(),
-                    seconds: r.seconds,
-                    gflops: r.gflops,
                     metrics,
                     node_peak_bytes: r.node_peak_bytes.clone(),
                     config: echo,
@@ -1357,7 +1489,6 @@ impl crate::rt::Backend for DesBackend {
                     cfg.numa_pinned,
                 );
                 let gflops = leaf.total_flops / secs / 1e9;
-                #[allow(deprecated)]
                 Ok(crate::rt::RunReport {
                     runtime: "omp",
                     plane: cfg.plane.name(),
@@ -1367,8 +1498,6 @@ impl crate::rt::Backend for DesBackend {
                         gflops,
                         ..Default::default()
                     },
-                    seconds: secs,
-                    gflops,
                     metrics: MetricsSnapshot::default(),
                     node_peak_bytes: Vec::new(),
                     config: echo,
@@ -1585,6 +1714,54 @@ mod tests {
         let again = run(StealPolicy::RemoteReady);
         assert_eq!(again.seconds.to_bits(), steal.seconds.to_bits());
         assert_eq!(again.stolen_edts, steal.stolen_edts);
+    }
+
+    /// Arena reuse recycles capacity only: running a mix of cells —
+    /// different workloads, topologies, thread counts, steal policies —
+    /// through one shared arena reports bit-identically to fresh runs.
+    #[test]
+    fn arena_reuse_is_bit_identical_across_mixed_cells() {
+        use crate::space::placement::Placement;
+        let mut arena = DesArena::new();
+        for (name, nodes, threads, steal) in [
+            ("LUD", 4, 8, StealPolicy::RemoteReady),
+            ("JAC-2D-5P", 1, 4, StealPolicy::Never),
+            ("JAC-2D-5P", 2, 4, StealPolicy::RemoteReady),
+            ("LUD", 2, 2, StealPolicy::Never),
+        ] {
+            let inst = (by_name(name).unwrap().build)(Size::Tiny);
+            let plan = inst.plan().unwrap();
+            let topo = Topology::for_plan(&plan, nodes, Placement::Block);
+            let fresh = des_exec(
+                &plan,
+                DepMode::CncDep,
+                DataPlane::Space,
+                &topo,
+                threads,
+                &Machine::default(),
+                &CostModel::default(),
+                true,
+                inst.total_flops,
+                steal,
+            );
+            let reused = simulate_cell(
+                &plan,
+                DepMode::CncDep,
+                DataPlane::Space,
+                &topo,
+                threads,
+                &Machine::default(),
+                &CostModel::default(),
+                true,
+                inst.total_flops,
+                steal,
+                &mut arena,
+            );
+            assert_eq!(fresh.seconds.to_bits(), reused.seconds.to_bits(), "{name}");
+            assert_eq!(fresh.core(), reused.core(), "{name}");
+            assert_eq!(fresh.node_peak_bytes, reused.node_peak_bytes, "{name}");
+            assert_eq!(fresh.stolen_edts, reused.stolen_edts, "{name}");
+        }
     }
 
     #[test]

@@ -300,7 +300,7 @@ pub const TRACE_SCHEMA_V1: &str = "tale3-trace/v1";
 
 // ---------------------------------------------------------------- emit
 
-fn jstr(s: &str) -> String {
+pub(crate) fn jstr(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -320,12 +320,12 @@ fn jints(vals: &[i64]) -> String {
     format!("[{}]", items.join(","))
 }
 
-fn junts(vals: &[u64]) -> String {
+pub(crate) fn junts(vals: &[u64]) -> String {
     let items: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
     format!("[{}]", items.join(","))
 }
 
-fn report_obj(r: &SimReport) -> String {
+pub(crate) fn report_obj(r: &SimReport) -> String {
     format!(
         "{{\"sim_seconds\":{},\"gflops\":{},\"work_ratio\":{},\"tasks\":{},\
          \"steals\":{},\"failed_gets\":{},\"space_puts\":{},\"space_gets\":{},\
@@ -466,9 +466,11 @@ impl Trace {
 // --------------------------------------------------------------- parse
 
 /// Minimal JSON value for parsing our own canonical emission (and only
-/// that): strings, raw numbers, bools, flat arrays, objects.
+/// that): strings, raw numbers, bools, flat arrays, objects. Shared
+/// crate-wide (`crate::sweep` parses its spec files and artifacts with
+/// the same machinery).
 #[derive(Debug, Clone)]
-enum JVal {
+pub(crate) enum JVal {
     Str(String),
     Num(String),
     Bool(bool),
@@ -477,34 +479,34 @@ enum JVal {
 }
 
 impl JVal {
-    fn get(&self, key: &str) -> Option<&JVal> {
+    pub(crate) fn get(&self, key: &str) -> Option<&JVal> {
         match self {
             JVal::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
             _ => None,
         }
     }
-    fn need(&self, key: &str) -> Result<&JVal> {
+    pub(crate) fn need(&self, key: &str) -> Result<&JVal> {
         self.get(key).ok_or_else(|| anyhow!("missing key `{key}`"))
     }
-    fn str_(&self) -> Result<&str> {
+    pub(crate) fn str_(&self) -> Result<&str> {
         match self {
             JVal::Str(s) => Ok(s),
             _ => bail!("expected string"),
         }
     }
-    fn u64_(&self) -> Result<u64> {
+    pub(crate) fn u64_(&self) -> Result<u64> {
         match self {
             JVal::Num(n) => n.parse().map_err(|_| anyhow!("expected u64, got `{n}`")),
             _ => bail!("expected number"),
         }
     }
-    fn f64_(&self) -> Result<f64> {
+    pub(crate) fn f64_(&self) -> Result<f64> {
         match self {
             JVal::Num(n) => n.parse().map_err(|_| anyhow!("expected f64, got `{n}`")),
             _ => bail!("expected number"),
         }
     }
-    fn bool_(&self) -> Result<bool> {
+    pub(crate) fn bool_(&self) -> Result<bool> {
         match self {
             JVal::Bool(b) => Ok(*b),
             _ => bail!("expected bool"),
@@ -522,7 +524,7 @@ impl JVal {
             _ => bail!("expected array"),
         }
     }
-    fn u64s(&self) -> Result<Vec<u64>> {
+    pub(crate) fn u64s(&self) -> Result<Vec<u64>> {
         match self {
             JVal::Arr(vs) => vs.iter().map(|v| v.u64_()).collect(),
             _ => bail!("expected array"),
@@ -660,14 +662,14 @@ impl<'a> P<'a> {
     }
 }
 
-fn parse_line(line: &str) -> Result<JVal> {
+pub(crate) fn parse_line(line: &str) -> Result<JVal> {
     let mut p = P { b: line.as_bytes(), i: 0 };
     let v = p.value()?;
     ensure!(p.i == line.len(), "trailing bytes after JSON value");
     Ok(v)
 }
 
-fn parse_report(v: &JVal) -> Result<SimReport> {
+pub(crate) fn parse_report(v: &JVal) -> Result<SimReport> {
     Ok(SimReport {
         seconds: v.need("sim_seconds")?.f64_()?,
         gflops: v.need("gflops")?.f64_()?,

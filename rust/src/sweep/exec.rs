@@ -1,0 +1,296 @@
+//! Parallel sweep executor and the `tale3-sweep/v1` JSONL artifact.
+//!
+//! Cells are resolved up front (fail fast), each unique
+//! `(workload, size)` plan is built once and shared, and a small pool
+//! of `std::thread::scope` workers pulls cell indices off an atomic
+//! counter. Every worker owns one [`DesArena`] so per-cell event-loop
+//! buffers are recycled, not reallocated — the cell-throughput win the
+//! bench measures. Each cell is an independent deterministic DES run,
+//! and rows are emitted in cell order regardless of which worker
+//! finished when: the artifact is byte-identical across runs and
+//! across `--jobs` counts.
+//!
+//! The artifact is virtual-time only by default; host wall time exists
+//! solely in the stderr throughput summary (and per-row behind the
+//! explicitly nondeterministic `--wall` opt-in), so the determinism
+//! gate can `diff` two sweeps.
+
+use super::spec::{resolve_cells, size_name, ResolvedCell, SweepSpec};
+use crate::exec::plan::Plan;
+use crate::rt::{ConfigEcho, ExecConfig, RuntimeKind};
+use crate::sim::des::{simulate_cell, DesArena};
+use crate::sim::trace::{jstr, report_obj};
+use crate::sim::SimReport;
+use crate::workloads::{by_name, Size};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub const SWEEP_SCHEMA: &str = "tale3-sweep/v1";
+
+/// One executed cell: the axis assignment, the fully-resolved config
+/// echo, and the virtual-time [`SimReport`].
+pub struct SweepRow {
+    pub cell: usize,
+    pub workload: String,
+    pub size: &'static str,
+    pub axes: Vec<(String, String)>,
+    pub echo: ConfigEcho,
+    pub link_latency_ns: f64,
+    pub link_bw_ns_per_byte: f64,
+    pub total_flops: f64,
+    pub report: SimReport,
+    /// Host-measured cell wall time — never in the default artifact.
+    pub wall_ns: u64,
+}
+
+pub struct SweepResult {
+    pub mode: &'static str,
+    pub samples: usize,
+    pub seed: u64,
+    pub axes_json: String,
+    pub rows: Vec<SweepRow>,
+    /// Whole-sweep host wall time (stderr summary only).
+    pub wall_ns: u64,
+}
+
+/// Run every cell of `spec` against `base` on `jobs` worker threads.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    base: &ExecConfig,
+    default_workload: &str,
+    default_size: Size,
+    jobs: usize,
+) -> Result<SweepResult> {
+    let cells = resolve_cells(spec, base, default_workload, default_size)?;
+    let plans = build_plans(&cells)?;
+    let jobs = jobs.clamp(1, cells.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<SweepRow>>> = cells.iter().map(|_| Mutex::new(None)).collect();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| {
+                let mut arena = DesArena::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let c = &cells[i];
+                    let (plan, flops) = &plans[&plan_key(c)];
+                    let row = run_cell(c, plan, *flops, &mut arena);
+                    *slots[i].lock().unwrap() = Some(row);
+                }
+            });
+        }
+    });
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let rows = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every cell index was claimed"))
+        .collect();
+    Ok(SweepResult {
+        mode: spec.mode(),
+        samples: spec.samples,
+        seed: spec.seed,
+        axes_json: spec.axes_json(),
+        rows,
+        wall_ns,
+    })
+}
+
+fn plan_key(c: &ResolvedCell) -> (String, &'static str) {
+    (c.workload.clone(), size_name(c.size))
+}
+
+/// `(workload, size)` → the shared plan and its total flop count.
+type PlanCache = BTreeMap<(String, &'static str), (Arc<Plan>, f64)>;
+
+/// Build each unique `(workload, size)` plan once; cells share it
+/// read-only across workers.
+fn build_plans(cells: &[ResolvedCell]) -> Result<PlanCache> {
+    let mut plans = BTreeMap::new();
+    for c in cells {
+        let key = plan_key(c);
+        if plans.contains_key(&key) {
+            continue;
+        }
+        let w = by_name(&c.workload)
+            .with_context(|| format!("unknown workload `{}`", c.workload))?;
+        let inst = (w.build)(c.size);
+        let plan = inst
+            .plan()
+            .with_context(|| format!("planning {} @{}", c.workload, size_name(c.size)))?;
+        plans.insert(key, (plan, inst.total_flops));
+    }
+    Ok(plans)
+}
+
+fn run_cell(c: &ResolvedCell, plan: &Plan, total_flops: f64, arena: &mut DesArena) -> SweepRow {
+    let topo = c.cfg.resolved_topology(plan);
+    let echo = c.cfg.echo_for(&topo);
+    let RuntimeKind::Edt(mode) = c.cfg.runtime else {
+        unreachable!("resolve_cells rejects the omp comparator")
+    };
+    let t0 = Instant::now();
+    let report = simulate_cell(
+        plan,
+        mode,
+        c.cfg.plane,
+        &topo,
+        c.cfg.threads,
+        &c.cfg.machine,
+        &c.cfg.cost,
+        c.cfg.numa_pinned,
+        total_flops,
+        c.cfg.steal,
+        arena,
+    );
+    SweepRow {
+        cell: c.index,
+        workload: c.workload.clone(),
+        size: size_name(c.size),
+        axes: c.axes.clone(),
+        echo,
+        link_latency_ns: c.cfg.cost.link_latency_ns,
+        link_bw_ns_per_byte: c.cfg.cost.link_bw_ns_per_byte,
+        total_flops,
+        report,
+        wall_ns: t0.elapsed().as_nanos() as u64,
+    }
+}
+
+fn config_json(e: &ConfigEcho) -> String {
+    format!(
+        "{{\"backend\":{},\"runtime\":{},\"plane\":{},\"threads\":{},\"nodes\":{},\"placement\":{},\"steal\":{},\"transport\":{},\"numa_pinned\":{}}}",
+        jstr(e.backend),
+        jstr(e.runtime),
+        jstr(e.plane),
+        e.threads,
+        e.nodes,
+        jstr(e.placement),
+        jstr(e.steal),
+        jstr(e.transport),
+        e.numa_pinned,
+    )
+}
+
+impl SweepResult {
+    /// Render the columnar JSONL artifact: one header line, then one
+    /// row per cell in cell order. All fields are virtual-time or
+    /// config echo, so the bytes are identical across runs and worker
+    /// counts; `wall` additionally embeds each cell's host-measured
+    /// `wall_ns` (useful for DES-throughput studies, deliberately
+    /// breaks byte-identity).
+    pub fn to_jsonl(&self, wall: bool) -> String {
+        let mut out = format!(
+            "{{\"schema\":{},\"mode\":{},\"samples\":{},\"seed\":{},\"cells\":{},\"axes\":{}}}\n",
+            jstr(SWEEP_SCHEMA),
+            jstr(self.mode),
+            self.samples,
+            self.seed,
+            self.rows.len(),
+            self.axes_json,
+        );
+        for r in &self.rows {
+            let axes: Vec<String> = r
+                .axes
+                .iter()
+                .map(|(k, v)| format!("{}:{}", jstr(k), jstr(v)))
+                .collect();
+            out.push_str(&format!(
+                "{{\"cell\":{},\"workload\":{},\"size\":{},\"axes\":{{{}}},\"config\":{},\"link_latency_ns\":{},\"link_bw_ns_per_byte\":{},\"total_flops\":{},\"report\":{}",
+                r.cell,
+                jstr(&r.workload),
+                jstr(r.size),
+                axes.join(","),
+                config_json(&r.echo),
+                r.link_latency_ns,
+                r.link_bw_ns_per_byte,
+                r.total_flops,
+                report_obj(&r.report),
+            ));
+            if wall {
+                out.push_str(&format!(",\"wall_ns\":{}", r.wall_ns));
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+
+    /// Host-side throughput line (stderr, never the artifact): cells
+    /// and simulated events per second of host wall time, the number
+    /// the arena-reuse bench tracks.
+    pub fn throughput_line(&self) -> String {
+        let events: u64 = self.rows.iter().map(|r| sim_events(&r.report)).sum();
+        let secs = (self.wall_ns as f64 / 1e9).max(1e-9);
+        format!(
+            "{} cells in {:.3}s host time ({:.1} cells/s, {:.2}M sim events/s)",
+            self.rows.len(),
+            secs,
+            self.rows.len() as f64 / secs,
+            events as f64 / secs / 1e6,
+        )
+    }
+}
+
+/// Simulated-event count of one cell: every task plus every space
+/// operation the DES retired.
+pub fn sim_events(r: &SimReport) -> u64 {
+    r.tasks + r.space_puts + r.space_gets + r.space_frees
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::BackendKind;
+
+    fn tiny_spec() -> SweepSpec {
+        let mut s = SweepSpec::default();
+        s.add_axis_flag("workload=JAC-2D-5P,LUD").unwrap();
+        s.add_axis_flag("nodes=1,2").unwrap();
+        s.add_axis_flag("steal=never,remote-ready").unwrap();
+        s
+    }
+
+    fn base() -> ExecConfig {
+        ExecConfig::new()
+            .backend(BackendKind::Des)
+            .plane(crate::space::DataPlane::Space)
+            .threads(8)
+    }
+
+    #[test]
+    fn artifact_is_byte_identical_across_runs_and_jobs() {
+        let spec = tiny_spec();
+        let a = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 1).unwrap();
+        let b = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 4).unwrap();
+        assert_eq!(a.rows.len(), 8);
+        assert_eq!(
+            a.to_jsonl(false),
+            b.to_jsonl(false),
+            "rows must come back in cell order with identical virtual-time bytes"
+        );
+        // the opt-in wall clock is the one permitted nondeterminism
+        assert!(a.to_jsonl(true).contains("\"wall_ns\":"));
+        assert!(!a.to_jsonl(false).contains("wall"));
+    }
+
+    #[test]
+    fn rows_echo_their_resolved_config() {
+        let mut spec = SweepSpec::default();
+        spec.add_axis_flag("nodes=2").unwrap();
+        spec.add_axis_flag("link-latency=5000").unwrap();
+        let r = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 2).unwrap();
+        assert_eq!(r.rows.len(), 1);
+        let row = &r.rows[0];
+        assert_eq!(row.echo.nodes, 2);
+        assert_eq!(row.echo.backend, "des");
+        assert_eq!(row.link_latency_ns, 5000.0);
+        assert!(row.report.tasks > 0);
+        assert!(sim_events(&row.report) > row.report.tasks);
+    }
+}

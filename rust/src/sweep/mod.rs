@@ -1,0 +1,31 @@
+//! `tale3 sweep` — parallel capacity planning over batched DES runs.
+//!
+//! One DES run answers "what does JAC-2D-5P @small cost on 4 nodes?";
+//! capacity planning asks the inverse — "how many nodes, which
+//! placement, which steal policy, at what link bandwidth?" — which is
+//! a *family* of runs. This subsystem makes the family a first-class
+//! object:
+//!
+//! * [`SweepSpec`] ([`spec`]) — a declarative grid (cartesian axes) or
+//!   seeded latin-hypercube sample over workload/size/topology/
+//!   placement/steal/link-cost axes, built from `--axis` flags or a
+//!   JSON spec file. Axes resolve through the exact
+//!   `ExecConfig::apply_cli_flag` surface the CLI uses: no second
+//!   config dialect, unknown axes hard-error.
+//! * [`run_sweep`] ([`exec`]) — a `std::thread::scope` worker pool
+//!   (the DES itself stays single-threaded per cell) with per-worker
+//!   [`crate::sim::des::DesArena`] buffer reuse and ordered result
+//!   collection: the artifact bytes are independent of `--jobs`.
+//! * the `tale3-sweep/v1` JSONL artifact ([`exec`]) — one header + one
+//!   row per cell (axes, resolved config echo, full virtual-time
+//!   report); byte-identical across reruns by construction.
+//! * [`summarize`] — frontier digests of an artifact: makespan vs
+//!   nodes, peak bytes vs placement, steal-benefit pairs.
+
+pub mod exec;
+pub mod spec;
+pub mod summarize;
+
+pub use exec::{run_sweep, sim_events, SweepResult, SweepRow, SWEEP_SCHEMA};
+pub use spec::{resolve_cells, Axis, AxisValues, ResolvedCell, SweepSpec};
+pub use summarize::{build_summary, parse_artifact, render_json, render_text, Summary};

@@ -1,0 +1,559 @@
+//! Declarative sweep specifications: grid axes and latin-hypercube
+//! samples over the DES configuration space.
+//!
+//! A [`SweepSpec`] names a set of axes. Each axis is either a discrete
+//! value list (`nodes = 1,2,4`) or — for LHS sampling only — a
+//! continuous `lo:hi` range over a link-cost knob (`link-bw =
+//! 0.05:0.5`). With `samples == 0` the spec enumerates the full
+//! cartesian grid (last axis fastest); with `samples == N` it draws a
+//! seeded latin-hypercube sample of N cells: per axis, a seeded-LCG
+//! Fisher–Yates permutation of N strata, so every axis is covered
+//! evenly and the sample is a pure function of `(spec, seed)` — the
+//! per-cell seeds never touch the DES itself, which stays a
+//! deterministic function of its resolved config.
+//!
+//! Axis names are not a parallel config surface: apart from the two
+//! sweep-owned axes `workload` and `size`, every axis is applied to the
+//! base [`ExecConfig`] through the same
+//! [`ExecConfig::apply_cli_flag`] the CLI uses — unknown names and bad
+//! values hard-error exactly like a mistyped flag, and so do unknown
+//! keys in a JSON spec file.
+
+use crate::rt::{ExecConfig, RuntimeKind};
+use crate::sim::trace::{jstr, parse_line, JVal};
+use crate::workloads::{by_name, Size};
+use anyhow::{bail, ensure, Result};
+
+/// Cap on enumerated grid cells — a typo'd axis must fail loudly, not
+/// allocate the host away.
+const MAX_CELLS: usize = 1 << 20;
+
+/// One sweep dimension: discrete values, or a continuous range
+/// (LHS sampling only — a grid has no way to enumerate a continuum).
+#[derive(Debug, Clone)]
+pub enum AxisValues {
+    List(Vec<String>),
+    Range(f64, f64),
+}
+
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub values: AxisValues,
+}
+
+/// A declarative sweep: axes × sampling mode. Build from CLI `--axis`
+/// flags ([`SweepSpec::add_axis_flag`]), a JSON spec file
+/// ([`SweepSpec::from_json`]), or both.
+#[derive(Debug, Clone, Default)]
+pub struct SweepSpec {
+    pub axes: Vec<Axis>,
+    /// 0 = full cartesian grid; N > 0 = latin-hypercube sample of N cells.
+    pub samples: usize,
+    /// Seed of the LHS stratum permutations (ignored for grids).
+    pub seed: u64,
+}
+
+/// Knuth's MMIX LCG — the same constants the serve CLI's arrival picker
+/// uses; plenty for stratum shuffling.
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Lcg {
+        let mut l = Lcg(seed);
+        l.next();
+        l
+    }
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 11
+    }
+}
+
+fn fisher_yates(n: usize, rng: &mut Lcg) -> Vec<usize> {
+    let mut v: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = (rng.next() as usize) % (i + 1);
+        v.swap(i, j);
+    }
+    v
+}
+
+pub fn size_name(s: Size) -> &'static str {
+    match s {
+        Size::Tiny => "tiny",
+        Size::Small => "small",
+        Size::Paper => "paper",
+    }
+}
+
+pub fn parse_size(v: &str) -> Option<Size> {
+    match v {
+        "tiny" => Some(Size::Tiny),
+        "small" => Some(Size::Small),
+        "paper" => Some(Size::Paper),
+        _ => None,
+    }
+}
+
+impl SweepSpec {
+    /// The quick capacity-planning grid the CLI runs when given no axes:
+    /// 2 workloads × 3 node counts × 2 steal policies = 12 cells.
+    pub fn default_grid() -> SweepSpec {
+        let mut s = SweepSpec::default();
+        for (name, vals) in [
+            ("workload", &["JAC-2D-5P", "LUD"][..]),
+            ("nodes", &["1", "2", "4"][..]),
+            ("steal", &["never", "remote-ready"][..]),
+        ] {
+            s.push_axis(Axis {
+                name: name.to_string(),
+                values: AxisValues::List(vals.iter().map(|v| v.to_string()).collect()),
+            })
+            .expect("static default grid");
+        }
+        s
+    }
+
+    fn push_axis(&mut self, axis: Axis) -> Result<()> {
+        ensure!(!axis.name.is_empty(), "axis needs a name");
+        ensure!(
+            !self.axes.iter().any(|a| a.name == axis.name),
+            "duplicate sweep axis `{}`",
+            axis.name
+        );
+        if let AxisValues::List(vs) = &axis.values {
+            ensure!(!vs.is_empty(), "axis `{}` has no values", axis.name);
+        }
+        if let AxisValues::Range(lo, hi) = axis.values {
+            ensure!(
+                lo.is_finite() && hi.is_finite() && lo <= hi,
+                "axis `{}`: bad range {lo}:{hi}",
+                axis.name
+            );
+        }
+        self.axes.push(axis);
+        Ok(())
+    }
+
+    /// Parse one CLI `--axis name=v1,v2,..` (or `--axis name=lo:hi` for a
+    /// continuous LHS range) into the spec.
+    pub fn add_axis_flag(&mut self, arg: &str) -> Result<()> {
+        let (name, vals) = arg
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--axis expects name=v1,v2,.. got `{arg}`"))?;
+        let values = parse_axis_values_str(name, vals)?;
+        self.push_axis(Axis { name: name.to_string(), values })
+    }
+
+    /// Parse a JSON spec file:
+    /// `{"axes":{"nodes":[1,2,4],"link-bw":"0.05:0.5"},"samples":16,"seed":7}`.
+    /// Unknown top-level keys hard-error, like `apply_cli_flag`.
+    pub fn from_json(text: &str) -> Result<SweepSpec> {
+        let compact = strip_ws(text);
+        ensure!(!compact.is_empty(), "empty sweep spec");
+        let v = parse_line(&compact)?;
+        let JVal::Obj(kv) = &v else {
+            bail!("sweep spec must be a JSON object");
+        };
+        let mut spec = SweepSpec::default();
+        for (k, val) in kv {
+            match k.as_str() {
+                "axes" => {
+                    let JVal::Obj(axes) = val else {
+                        bail!("`axes` must be an object of name → values");
+                    };
+                    for (name, av) in axes {
+                        let values = parse_axis_values_json(name, av)?;
+                        spec.push_axis(Axis { name: name.clone(), values })?;
+                    }
+                }
+                "samples" => spec.samples = val.u64_()? as usize,
+                "seed" => spec.seed = val.u64_()?,
+                other => bail!("unknown sweep-spec key `{other}` (expected axes|samples|seed)"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The axes rendered as the artifact-header JSON fragment.
+    pub fn axes_json(&self) -> String {
+        let items: Vec<String> = self
+            .axes
+            .iter()
+            .map(|a| match &a.values {
+                AxisValues::List(vs) => {
+                    let vals: Vec<String> = vs.iter().map(|v| jstr(v)).collect();
+                    format!(
+                        "{{\"name\":{},\"values\":[{}]}}",
+                        jstr(&a.name),
+                        vals.join(",")
+                    )
+                }
+                AxisValues::Range(lo, hi) => {
+                    format!("{{\"name\":{},\"range\":[{lo},{hi}]}}", jstr(&a.name))
+                }
+            })
+            .collect();
+        format!("[{}]", items.join(","))
+    }
+
+    /// "grid" or "lhs" — how [`SweepSpec::cells`] enumerates.
+    pub fn mode(&self) -> &'static str {
+        if self.samples == 0 {
+            "grid"
+        } else {
+            "lhs"
+        }
+    }
+
+    /// Enumerate the cells: each a `(axis name, value)` list in axis
+    /// order. Deterministic — grid order is row-major (last axis
+    /// fastest), LHS order is the seeded stratum assignment.
+    pub fn cells(&self) -> Result<Vec<Vec<(String, String)>>> {
+        ensure!(
+            !self.axes.is_empty(),
+            "empty sweep: give at least one axis (--axis name=v1,v2 or --spec file)"
+        );
+        if self.samples == 0 {
+            self.grid_cells()
+        } else {
+            Ok(self.lhs_cells())
+        }
+    }
+
+    fn grid_cells(&self) -> Result<Vec<Vec<(String, String)>>> {
+        let mut total: usize = 1;
+        for a in &self.axes {
+            let AxisValues::List(vs) = &a.values else {
+                bail!(
+                    "axis `{}` is a continuous range — ranges need LHS sampling (--samples N)",
+                    a.name
+                );
+            };
+            total = total
+                .checked_mul(vs.len())
+                .filter(|&t| t <= MAX_CELLS)
+                .ok_or_else(|| anyhow::anyhow!("sweep grid exceeds {MAX_CELLS} cells"))?;
+        }
+        let mut out = Vec::with_capacity(total);
+        for cell in 0..total {
+            let mut idx = cell;
+            let mut pairs = vec![(String::new(), String::new()); self.axes.len()];
+            for (a, axis) in self.axes.iter().enumerate().rev() {
+                let AxisValues::List(vs) = &axis.values else {
+                    unreachable!()
+                };
+                pairs[a] = (axis.name.clone(), vs[idx % vs.len()].clone());
+                idx /= vs.len();
+            }
+            out.push(pairs);
+        }
+        Ok(out)
+    }
+
+    fn lhs_cells(&self) -> Vec<Vec<(String, String)>> {
+        let n = self.samples;
+        // per axis: a seeded permutation of the n strata, so each axis
+        // covers its domain evenly across the sample
+        let per_axis: Vec<Vec<String>> = self
+            .axes
+            .iter()
+            .enumerate()
+            .map(|(ai, axis)| {
+                let mut rng =
+                    Lcg::new(self.seed ^ (ai as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+                let perm = fisher_yates(n, &mut rng);
+                (0..n)
+                    .map(|i| {
+                        let u = (perm[i] as f64 + 0.5) / n as f64;
+                        match &axis.values {
+                            AxisValues::List(vs) => {
+                                let k = ((u * vs.len() as f64) as usize).min(vs.len() - 1);
+                                vs[k].clone()
+                            }
+                            // f64 Display prints the shortest round-trip
+                            // form — byte-stable across runs
+                            AxisValues::Range(lo, hi) => format!("{}", lo + u * (hi - lo)),
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        (0..n)
+            .map(|i| {
+                self.axes
+                    .iter()
+                    .enumerate()
+                    .map(|(ai, axis)| (axis.name.clone(), per_axis[ai][i].clone()))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+fn parse_axis_values_str(name: &str, vals: &str) -> Result<AxisValues> {
+    if let Some((lo, hi)) = vals.split_once(':') {
+        if !vals.contains(',') {
+            let lo: f64 = lo
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("axis `{name}`: bad range bound `{lo}`"))?;
+            let hi: f64 = hi
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("axis `{name}`: bad range bound `{hi}`"))?;
+            return Ok(AxisValues::Range(lo, hi));
+        }
+    }
+    let list: Vec<String> = vals
+        .split(',')
+        .map(|v| v.trim().to_string())
+        .filter(|v| !v.is_empty())
+        .collect();
+    ensure!(!list.is_empty(), "axis `{name}` has no values");
+    Ok(AxisValues::List(list))
+}
+
+fn parse_axis_values_json(name: &str, v: &JVal) -> Result<AxisValues> {
+    match v {
+        // a "lo:hi" string is a continuous range; any other string is a
+        // single-value list
+        JVal::Str(s) => parse_axis_values_str(name, s),
+        JVal::Arr(items) => {
+            let mut list = Vec::with_capacity(items.len());
+            for it in items {
+                match it {
+                    // keep the raw number token: the user's spelling is
+                    // what apply_cli_flag sees and the artifact echoes
+                    JVal::Num(n) => list.push(n.clone()),
+                    JVal::Str(s) => list.push(s.clone()),
+                    JVal::Bool(b) => list.push(b.to_string()),
+                    _ => bail!("axis `{name}`: values must be scalars"),
+                }
+            }
+            ensure!(!list.is_empty(), "axis `{name}` has no values");
+            Ok(AxisValues::List(list))
+        }
+        _ => bail!("axis `{name}`: expected a value array or \"lo:hi\" range string"),
+    }
+}
+
+/// Drop whitespace outside string literals so hand-written (pretty)
+/// spec files reach the whitespace-free canonical parser.
+fn strip_ws(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut in_str = false;
+    let mut escaped = false;
+    for c in text.chars() {
+        if in_str {
+            out.push(c);
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+            out.push(c);
+        } else if !c.is_whitespace() {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// A sweep cell with every axis applied: the workload/size the sweep
+/// owns plus the [`ExecConfig`] all other axes were folded into.
+#[derive(Debug, Clone)]
+pub struct ResolvedCell {
+    pub index: usize,
+    pub axes: Vec<(String, String)>,
+    pub workload: String,
+    pub size: Size,
+    pub cfg: ExecConfig,
+}
+
+/// Resolve every cell against `base` up front — axis typos and bad
+/// values fail the whole sweep before a single simulation runs.
+///
+/// `workload`/`size` are sweep-owned; serve/trace knobs are rejected (a
+/// sweep cell is one batch DES run); everything else must be accepted
+/// by [`ExecConfig::apply_cli_flag`] or the axis name is unknown.
+pub fn resolve_cells(
+    spec: &SweepSpec,
+    base: &ExecConfig,
+    default_workload: &str,
+    default_size: Size,
+) -> Result<Vec<ResolvedCell>> {
+    let cells = spec.cells()?;
+    let mut out = Vec::with_capacity(cells.len());
+    for (index, axes) in cells.into_iter().enumerate() {
+        let mut cfg = base.clone();
+        let mut workload = default_workload.to_string();
+        let mut size = default_size;
+        for (name, value) in &axes {
+            match name.as_str() {
+                "workload" => {
+                    ensure!(
+                        by_name(value).is_some(),
+                        "sweep axis workload: unknown workload `{value}`"
+                    );
+                    workload = value.clone();
+                }
+                "size" => {
+                    size = parse_size(value).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "sweep axis size: expected tiny|small|paper, got `{value}`"
+                        )
+                    })?;
+                }
+                "trace" | "arrivals" | "tenants" | "quota-bytes" => {
+                    bail!("`{name}` is a trace/serve knob, not a sweep axis");
+                }
+                _ => {
+                    ensure!(
+                        cfg.apply_cli_flag(name, Some(value.as_str()))?,
+                        "unknown sweep axis `{name}`"
+                    );
+                }
+            }
+        }
+        ensure!(
+            !matches!(cfg.runtime, RuntimeKind::Omp),
+            "cell {index}: the omp comparator is closed-form — sweep cells are DES runs \
+             (runtime axis values: cnc-block|cnc-async|cnc-dep|swarm|ocr)"
+        );
+        out.push(ResolvedCell { index, axes, workload, size, cfg });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_enumerates_row_major_last_axis_fastest() {
+        let mut s = SweepSpec::default();
+        s.add_axis_flag("nodes=1,2").unwrap();
+        s.add_axis_flag("steal=never,remote-ready").unwrap();
+        let cells = s.cells().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0], vec![("nodes".into(), "1".into()), ("steal".into(), "never".into())]);
+        assert_eq!(cells[1][1].1, "remote-ready");
+        assert_eq!(cells[2][0].1, "2");
+        assert_eq!(s.mode(), "grid");
+    }
+
+    #[test]
+    fn lhs_is_deterministic_and_stratified() {
+        let mut s = SweepSpec::default();
+        s.add_axis_flag("link-bw=0.1:0.9").unwrap();
+        s.add_axis_flag("nodes=1,2,4,8").unwrap();
+        s.samples = 8;
+        s.seed = 42;
+        let a = s.cells().unwrap();
+        let b = s.cells().unwrap();
+        assert_eq!(a, b, "LHS must be a pure function of (spec, seed)");
+        assert_eq!(a.len(), 8);
+        assert_eq!(s.mode(), "lhs");
+        // each discrete value appears samples/len times (even strata)
+        for v in ["1", "2", "4", "8"] {
+            let n = a.iter().filter(|c| c[1].1 == v).count();
+            assert_eq!(n, 2, "stratified coverage of nodes={v}");
+        }
+        // continuous strata: all 8 samples distinct, inside the range
+        let mut xs: Vec<f64> = a.iter().map(|c| c[0].1.parse().unwrap()).collect();
+        xs.sort_by(f64::total_cmp);
+        xs.dedup();
+        assert_eq!(xs.len(), 8);
+        assert!(xs.iter().all(|&x| (0.1..=0.9).contains(&x)));
+        // a different seed permutes differently
+        let mut s2 = s.clone();
+        s2.seed = 43;
+        assert_ne!(s2.cells().unwrap(), a);
+    }
+
+    #[test]
+    fn ranges_require_sampling_and_dupes_are_rejected() {
+        let mut s = SweepSpec::default();
+        s.add_axis_flag("link-bw=0.1:0.9").unwrap();
+        assert!(s.cells().is_err(), "grid cannot enumerate a continuum");
+        assert!(s.add_axis_flag("link-bw=0.2,0.4").is_err(), "duplicate axis");
+        assert!(s.add_axis_flag("bad").is_err(), "missing `=`");
+        assert!(SweepSpec::default().cells().is_err(), "empty spec");
+    }
+
+    #[test]
+    fn json_spec_round_trips_and_rejects_unknown_keys() {
+        let spec = SweepSpec::from_json(
+            r#"{
+                "axes": {
+                    "workload": ["JAC-2D-5P", "LUD"],
+                    "nodes": [1, 2, 4],
+                    "link-bw": "0.05:0.5"
+                },
+                "samples": 6,
+                "seed": 7
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.axes.len(), 3);
+        assert_eq!(spec.samples, 6);
+        assert_eq!(spec.seed, 7);
+        let AxisValues::Range(lo, hi) = spec.axes[2].values else {
+            panic!("link-bw must parse as a range")
+        };
+        assert_eq!((lo, hi), (0.05, 0.5));
+        let cells = spec.cells().unwrap();
+        assert_eq!(cells.len(), 6);
+
+        assert!(SweepSpec::from_json(r#"{"axes":{},"cells":3}"#).is_err(), "unknown key");
+        assert!(SweepSpec::from_json(r#"[1,2]"#).is_err(), "not an object");
+        assert!(SweepSpec::from_json(r#"{"axes":{"nodes":{}}}"#).is_err(), "bad axis values");
+    }
+
+    #[test]
+    fn resolve_applies_axes_through_apply_cli_flag() {
+        let mut s = SweepSpec::default();
+        s.add_axis_flag("workload=LUD").unwrap();
+        s.add_axis_flag("size=tiny").unwrap();
+        s.add_axis_flag("nodes=2").unwrap();
+        s.add_axis_flag("steal=remote-ready").unwrap();
+        s.add_axis_flag("link-latency=3000").unwrap();
+        let base = ExecConfig::new();
+        let cells = resolve_cells(&s, &base, "JAC-2D-5P", Size::Small).unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.workload, "LUD");
+        assert_eq!(c.size, Size::Tiny);
+        assert_eq!(c.cfg.nodes, 2);
+        assert_eq!(c.cfg.cost.link_latency_ns, 3000.0);
+    }
+
+    #[test]
+    fn resolve_hard_errors_on_unknown_axes_and_bad_values() {
+        let base = ExecConfig::new();
+        for axis in [
+            "warp-drive=1,2",
+            "workload=NOPE",
+            "size=huge",
+            "steal=sometimes",
+            "trace=full",
+            "runtime=omp",
+        ] {
+            let mut s = SweepSpec::default();
+            s.add_axis_flag(axis).unwrap();
+            assert!(
+                resolve_cells(&s, &base, "JAC-2D-5P", Size::Tiny).is_err(),
+                "axis `{axis}` must be rejected"
+            );
+        }
+    }
+}

@@ -1,0 +1,407 @@
+//! Frontier summaries over a `tale3-sweep/v1` artifact.
+//!
+//! `tale3 sweep summarize` re-reads the JSONL artifact (never the
+//! in-memory rows — the artifact is the interface) and folds it into
+//! the three capacity-planning questions the sweep exists to answer:
+//!
+//! 1. **makespan vs nodes** — per `(workload, link bandwidth)`, the
+//!    best simulated seconds at each node count: where does adding
+//!    nodes stop paying?
+//! 2. **peak bytes vs placement** — at the largest swept node count,
+//!    the hottest single node's peak live bytes per placement: which
+//!    placement balances memory?
+//! 3. **steal benefit** — rows identical except for the steal policy,
+//!    paired into a `never / remote-ready` speedup: where does work
+//!    stealing help, and where does it cost?
+//!
+//! All grouping uses `BTreeMap`s and echoed config strings, so text
+//! and JSON output are deterministic functions of the artifact bytes.
+
+use super::exec::SWEEP_SCHEMA;
+use crate::sim::trace::{jstr, parse_line, parse_report};
+use crate::sim::SimReport;
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One artifact row, flattened to the fields the summaries group on.
+pub struct ParsedRow {
+    pub cell: usize,
+    pub workload: String,
+    pub size: String,
+    pub runtime: String,
+    pub plane: String,
+    pub threads: u64,
+    pub nodes: u64,
+    pub placement: String,
+    pub steal: String,
+    pub transport: String,
+    pub link_latency_ns: f64,
+    pub link_bw_ns_per_byte: f64,
+    pub report: SimReport,
+}
+
+pub struct ParsedSweep {
+    pub mode: String,
+    pub rows: Vec<ParsedRow>,
+}
+
+pub fn parse_artifact(text: &str) -> Result<ParsedSweep> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let Some(first) = lines.next() else {
+        bail!("empty sweep artifact");
+    };
+    let header = parse_line(first)?;
+    let schema = header.need("schema")?.str_()?;
+    ensure!(
+        schema == SWEEP_SCHEMA,
+        "not a sweep artifact: schema `{schema}` (expected `{SWEEP_SCHEMA}`)"
+    );
+    let mode = header.need("mode")?.str_()?.to_string();
+    let cells = header.need("cells")?.u64_()? as usize;
+    let mut rows = Vec::with_capacity(cells);
+    for line in lines {
+        let v = parse_line(line)?;
+        let cfg = v.need("config")?;
+        rows.push(ParsedRow {
+            cell: v.need("cell")?.u64_()? as usize,
+            workload: v.need("workload")?.str_()?.to_string(),
+            size: v.need("size")?.str_()?.to_string(),
+            runtime: cfg.need("runtime")?.str_()?.to_string(),
+            plane: cfg.need("plane")?.str_()?.to_string(),
+            threads: cfg.need("threads")?.u64_()?,
+            nodes: cfg.need("nodes")?.u64_()?,
+            placement: cfg.need("placement")?.str_()?.to_string(),
+            steal: cfg.need("steal")?.str_()?.to_string(),
+            transport: cfg.need("transport")?.str_()?.to_string(),
+            link_latency_ns: v.need("link_latency_ns")?.f64_()?,
+            link_bw_ns_per_byte: v.need("link_bw_ns_per_byte")?.f64_()?,
+            report: parse_report(v.need("report")?)?,
+        });
+    }
+    ensure!(
+        rows.len() == cells,
+        "artifact truncated: header promises {cells} cells, found {}",
+        rows.len()
+    );
+    Ok(ParsedSweep { mode, rows })
+}
+
+/// Best (minimum) simulated seconds at each node count, per
+/// `(workload, link bandwidth)` group.
+pub struct MakespanCurve {
+    pub workload: String,
+    pub link_bw: String,
+    pub points: Vec<(u64, f64)>,
+}
+
+/// Memory balance at the largest swept node count.
+pub struct PeakRow {
+    pub workload: String,
+    pub placement: String,
+    pub nodes: u64,
+    /// max over the group of the hottest single node's peak bytes
+    pub hottest_node_bytes: u64,
+    /// max over the group of the global peak
+    pub total_peak_bytes: u64,
+}
+
+/// A `never` / `remote-ready` pair differing only in steal policy.
+pub struct StealPoint {
+    pub workload: String,
+    pub nodes: u64,
+    pub placement: String,
+    pub threads: u64,
+    pub never_seconds: f64,
+    pub steal_seconds: f64,
+    /// `never / remote-ready` — above 1 means stealing helped
+    pub speedup: f64,
+}
+
+pub struct Summary {
+    pub cells: usize,
+    pub makespan: Vec<MakespanCurve>,
+    pub peak: Vec<PeakRow>,
+    pub steal: Vec<StealPoint>,
+}
+
+pub fn build_summary(sweep: &ParsedSweep) -> Summary {
+    let rows = &sweep.rows;
+
+    // 1. makespan vs nodes: (workload, bw) → nodes → min seconds
+    let mut curves: BTreeMap<(String, String), BTreeMap<u64, f64>> = BTreeMap::new();
+    for r in rows {
+        let key = (r.workload.clone(), format!("{}", r.link_bw_ns_per_byte));
+        let e = curves
+            .entry(key)
+            .or_default()
+            .entry(r.nodes)
+            .or_insert(f64::INFINITY);
+        *e = e.min(r.report.seconds);
+    }
+    let makespan = curves
+        .into_iter()
+        .map(|((workload, link_bw), pts)| MakespanCurve {
+            workload,
+            link_bw,
+            points: pts.into_iter().collect(),
+        })
+        .collect();
+
+    // 2. peak bytes vs placement at the largest swept node count
+    let max_nodes = rows.iter().map(|r| r.nodes).max().unwrap_or(0);
+    let mut peaks: BTreeMap<(String, String), (u64, u64)> = BTreeMap::new();
+    for r in rows.iter().filter(|r| r.nodes == max_nodes) {
+        let hottest = r.report.node_peak_bytes.iter().copied().max().unwrap_or(0);
+        let e = peaks
+            .entry((r.workload.clone(), r.placement.clone()))
+            .or_insert((0, 0));
+        e.0 = e.0.max(hottest);
+        e.1 = e.1.max(r.report.space_peak_bytes);
+    }
+    let peak = peaks
+        .into_iter()
+        .map(|((workload, placement), (hottest_node_bytes, total_peak_bytes))| PeakRow {
+            workload,
+            placement,
+            nodes: max_nodes,
+            hottest_node_bytes,
+            total_peak_bytes,
+        })
+        .collect();
+
+    // 3. steal benefit: pair rows identical except for the steal axis
+    type PairKey = (String, String, String, String, u64, u64, String, String, String, String);
+    let mut pairs: BTreeMap<PairKey, BTreeMap<String, f64>> = BTreeMap::new();
+    for r in rows {
+        let key = (
+            r.workload.clone(),
+            r.size.clone(),
+            r.runtime.clone(),
+            r.plane.clone(),
+            r.threads,
+            r.nodes,
+            r.placement.clone(),
+            r.transport.clone(),
+            format!("{}", r.link_latency_ns),
+            format!("{}", r.link_bw_ns_per_byte),
+        );
+        let e = pairs
+            .entry(key)
+            .or_default()
+            .entry(r.steal.clone())
+            .or_insert(f64::INFINITY);
+        *e = e.min(r.report.seconds);
+    }
+    let mut steal = Vec::new();
+    for (key, by_steal) in &pairs {
+        if let (Some(&never), Some(&st)) = (by_steal.get("never"), by_steal.get("remote-ready")) {
+            steal.push(StealPoint {
+                workload: key.0.clone(),
+                nodes: key.5,
+                placement: key.6.clone(),
+                threads: key.4,
+                never_seconds: never,
+                steal_seconds: st,
+                speedup: never / st,
+            });
+        }
+    }
+
+    Summary { cells: rows.len(), makespan, peak, steal }
+}
+
+/// Aligned-table rendering for terminals.
+pub fn render_text(s: &Summary) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "sweep summary: {} cells", s.cells);
+
+    let _ = writeln!(out, "\n== makespan vs nodes (best sim seconds per group) ==");
+    let node_cols: Vec<u64> = {
+        let mut ns: Vec<u64> = s
+            .makespan
+            .iter()
+            .flat_map(|c| c.points.iter().map(|&(n, _)| n))
+            .collect();
+        ns.sort_unstable();
+        ns.dedup();
+        ns
+    };
+    let _ = write!(out, "{:<14} {:>10}", "workload", "link-bw");
+    for n in &node_cols {
+        let _ = write!(out, " {:>12}", format!("n={n}"));
+    }
+    let _ = writeln!(out);
+    for c in &s.makespan {
+        let _ = write!(out, "{:<14} {:>10}", c.workload, c.link_bw);
+        for n in &node_cols {
+            match c.points.iter().find(|&&(pn, _)| pn == *n) {
+                Some(&(_, secs)) => {
+                    let _ = write!(out, " {:>12}", format!("{secs:.6}"));
+                }
+                None => {
+                    let _ = write!(out, " {:>12}", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+
+    let frontier = s.peak.first().map_or(0, |p| p.nodes);
+    let _ = writeln!(out, "\n== peak live bytes vs placement @ {frontier} node(s) ==");
+    let _ = writeln!(
+        out,
+        "{:<14} {:<10} {:>16} {:>16}",
+        "workload", "placement", "hottest-node", "global-peak"
+    );
+    for p in &s.peak {
+        let _ = writeln!(
+            out,
+            "{:<14} {:<10} {:>16} {:>16}",
+            p.workload,
+            p.placement,
+            crate::bench::fmt_bytes(p.hottest_node_bytes),
+            crate::bench::fmt_bytes(p.total_peak_bytes),
+        );
+    }
+
+    let _ = writeln!(out, "\n== steal benefit (never / remote-ready makespan) ==");
+    if s.steal.is_empty() {
+        let _ = writeln!(out, "(no never/remote-ready pairs in this sweep)");
+    } else {
+        let _ = writeln!(
+            out,
+            "{:<14} {:>5} {:<10} {:>7} {:>12} {:>12} {:>8}",
+            "workload", "nodes", "placement", "threads", "never(s)", "steal(s)", "speedup"
+        );
+        for p in &s.steal {
+            let _ = writeln!(
+                out,
+                "{:<14} {:>5} {:<10} {:>7} {:>12.6} {:>12.6} {:>7.3}x",
+                p.workload,
+                p.nodes,
+                p.placement,
+                p.threads,
+                p.never_seconds,
+                p.steal_seconds,
+                p.speedup
+            );
+        }
+    }
+    out
+}
+
+/// The same summary as one machine-readable JSON line.
+pub fn render_json(s: &Summary) -> String {
+    let makespan: Vec<String> = s
+        .makespan
+        .iter()
+        .map(|c| {
+            let pts: Vec<String> = c
+                .points
+                .iter()
+                .map(|&(n, secs)| format!("{{\"nodes\":{n},\"seconds\":{secs}}}"))
+                .collect();
+            format!(
+                "{{\"workload\":{},\"link_bw_ns_per_byte\":{},\"points\":[{}]}}",
+                jstr(&c.workload),
+                c.link_bw,
+                pts.join(","),
+            )
+        })
+        .collect();
+    let peak: Vec<String> = s
+        .peak
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"workload\":{},\"placement\":{},\"nodes\":{},\"hottest_node_bytes\":{},\"total_peak_bytes\":{}}}",
+                jstr(&p.workload),
+                jstr(&p.placement),
+                p.nodes,
+                p.hottest_node_bytes,
+                p.total_peak_bytes,
+            )
+        })
+        .collect();
+    let steal: Vec<String> = s
+        .steal
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"workload\":{},\"nodes\":{},\"placement\":{},\"threads\":{},\"never_seconds\":{},\"steal_seconds\":{},\"speedup\":{}}}",
+                jstr(&p.workload),
+                p.nodes,
+                jstr(&p.placement),
+                p.threads,
+                p.never_seconds,
+                p.steal_seconds,
+                p.speedup,
+            )
+        })
+        .collect();
+    format!(
+        "{{\"schema\":\"tale3-sweep-summary/v1\",\"cells\":{},\"makespan_vs_nodes\":[{}],\"peak_by_placement\":[{}],\"steal_benefit\":[{}]}}",
+        s.cells,
+        makespan.join(","),
+        peak.join(","),
+        steal.join(","),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{BackendKind, ExecConfig};
+    use crate::sweep::{run_sweep, SweepSpec};
+    use crate::workloads::Size;
+
+    fn artifact() -> String {
+        let mut spec = SweepSpec::default();
+        spec.add_axis_flag("workload=JAC-2D-5P,LUD").unwrap();
+        spec.add_axis_flag("nodes=1,2").unwrap();
+        spec.add_axis_flag("steal=never,remote-ready").unwrap();
+        let base = ExecConfig::new()
+            .backend(BackendKind::Des)
+            .plane(crate::space::DataPlane::Space)
+            .threads(8);
+        run_sweep(&spec, &base, "JAC-2D-5P", Size::Tiny, 2)
+            .unwrap()
+            .to_jsonl(false)
+    }
+
+    #[test]
+    fn summarize_folds_the_artifact_into_frontiers() {
+        let text = artifact();
+        let parsed = parse_artifact(&text).unwrap();
+        assert_eq!(parsed.mode, "grid");
+        assert_eq!(parsed.rows.len(), 8);
+        let s = build_summary(&parsed);
+        assert_eq!(s.cells, 8);
+        // two workloads at one bandwidth → two curves of two node counts
+        assert_eq!(s.makespan.len(), 2);
+        assert!(s.makespan.iter().all(|c| c.points.len() == 2));
+        // every (workload, nodes) group has a never/remote-ready pair
+        assert_eq!(s.steal.len(), 4);
+        assert!(s.steal.iter().all(|p| p.speedup > 0.0));
+        // peak table covers both workloads at the max node count
+        assert_eq!(s.peak.len(), 2);
+        assert!(s.peak.iter().all(|p| p.nodes == 2 && p.hottest_node_bytes > 0));
+        let text_out = render_text(&s);
+        assert!(text_out.contains("makespan vs nodes"));
+        assert!(text_out.contains("steal benefit"));
+        let json = render_json(&s);
+        assert!(json.starts_with("{\"schema\":\"tale3-sweep-summary/v1\""));
+        // summary JSON is itself parseable by the same machinery
+        crate::sim::trace::parse_line(&json).unwrap();
+    }
+
+    #[test]
+    fn parse_rejects_foreign_and_truncated_artifacts() {
+        assert!(parse_artifact("").is_err());
+        assert!(parse_artifact("{\"schema\":\"tale3-trace/v1\"}").is_err());
+        let text = artifact();
+        let truncated: Vec<&str> = text.lines().take(3).collect();
+        assert!(parse_artifact(&truncated.join("\n")).is_err(), "cell count must match header");
+    }
+}

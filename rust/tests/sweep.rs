@@ -1,0 +1,184 @@
+//! End-to-end gates on the `tale3 sweep` subsystem: artifact
+//! determinism (byte-identical across runs and `--jobs` counts),
+//! standalone reproducibility (any row, re-run through `rt::launch`
+//! with the row's echoed config, reproduces its report exactly),
+//! seeded-LHS stability, and the hard-error surface of specs.
+
+use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec};
+use tale3::space::DataPlane;
+use tale3::sweep::{
+    build_summary, parse_artifact, render_json, render_text, run_sweep, SweepSpec,
+};
+use tale3::workloads::{by_name, Size};
+
+// the CLI's sweep defaults: DES cells on the distributed plane with
+// enough workers to populate the swept node counts
+fn base() -> ExecConfig {
+    ExecConfig::new()
+        .backend(BackendKind::Des)
+        .plane(DataPlane::Space)
+        .threads(8)
+}
+
+fn ci_grid() -> SweepSpec {
+    // the same grid the CI sweep-gate runs: 2 × 3 × 2 × 2 = 24 cells
+    let mut s = SweepSpec::default();
+    s.add_axis_flag("workload=JAC-2D-5P,LUD").unwrap();
+    s.add_axis_flag("nodes=1,2,4").unwrap();
+    s.add_axis_flag("steal=never,remote-ready").unwrap();
+    s.add_axis_flag("placement=block,hash").unwrap();
+    s
+}
+
+/// The acceptance bar of the subsystem: the artifact is a pure function
+/// of the spec — rerunning it, with any worker count, yields the same
+/// bytes.
+#[test]
+fn sweep_artifact_is_byte_identical_across_runs_and_jobs() {
+    let spec = ci_grid();
+    let one = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 1).unwrap();
+    let again = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 1).unwrap();
+    let wide = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 4).unwrap();
+    assert_eq!(one.rows.len(), 24);
+    let a = one.to_jsonl(false);
+    assert_eq!(a, again.to_jsonl(false), "rerun must be byte-identical");
+    assert_eq!(a, wide.to_jsonl(false), "--jobs must not leak into the artifact");
+    // 1 header + 24 rows, every line a standalone JSON object
+    assert_eq!(a.lines().count(), 25);
+    assert!(a.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+}
+
+/// Every sweep row is an ordinary launch in disguise: rebuilding an
+/// ExecConfig from nothing but the row's echoed config (through the
+/// same `apply_cli_flag` surface the CLI uses) and running it through
+/// `rt::launch` reproduces the row's ReportCore and per-node peaks
+/// exactly.
+#[test]
+fn sweep_rows_reproduce_standalone_through_rt_launch() {
+    let mut spec = SweepSpec::default();
+    spec.add_axis_flag("workload=JAC-2D-5P,LUD").unwrap();
+    spec.add_axis_flag("nodes=2,4").unwrap();
+    spec.add_axis_flag("steal=remote-ready").unwrap();
+    spec.add_axis_flag("link-latency=2500").unwrap();
+    let res = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 2).unwrap();
+    assert_eq!(res.rows.len(), 4);
+    for row in &res.rows {
+        let mut cfg = ExecConfig::new().backend(BackendKind::Des);
+        for (flag, value) in [
+            ("runtime", row.echo.runtime.to_string()),
+            ("plane", row.echo.plane.to_string()),
+            ("threads", row.echo.threads.to_string()),
+            ("nodes", row.echo.nodes.to_string()),
+            ("placement", row.echo.placement.to_string()),
+            ("steal", row.echo.steal.to_string()),
+            ("transport", row.echo.transport.to_string()),
+            ("link-latency", row.link_latency_ns.to_string()),
+            ("link-bw", row.link_bw_ns_per_byte.to_string()),
+        ] {
+            assert!(
+                cfg.apply_cli_flag(flag, Some(value.as_str())).unwrap(),
+                "echoed flag --{flag} must be a known config flag"
+            );
+        }
+        cfg = cfg.numa_pinned(row.echo.numa_pinned);
+        let inst = (by_name(&row.workload).unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let r = rt::launch(&plan, &LeafSpec::cost_only(inst.total_flops), &cfg).unwrap();
+        assert_eq!(
+            r.core,
+            row.report.core(),
+            "cell {} ({} nodes={}) must reproduce standalone",
+            row.cell,
+            row.workload,
+            row.echo.nodes
+        );
+        assert_eq!(r.node_peak_bytes, row.report.node_peak_bytes);
+    }
+}
+
+/// A seeded latin-hypercube sample is stable across runs and jobs
+/// counts too — the sampler never consults the host.
+#[test]
+fn lhs_sweep_is_deterministic() {
+    let mut spec = SweepSpec::default();
+    spec.add_axis_flag("workload=JAC-2D-5P,LUD").unwrap();
+    spec.add_axis_flag("nodes=1,2,4").unwrap();
+    spec.add_axis_flag("link-bw=0.05:0.5").unwrap();
+    spec.samples = 6;
+    spec.seed = 7;
+    let a = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 1).unwrap();
+    let b = run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 3).unwrap();
+    assert_eq!(a.rows.len(), 6);
+    assert_eq!(a.to_jsonl(false), b.to_jsonl(false));
+    assert!(a.to_jsonl(false).contains("\"mode\":\"lhs\""));
+    // the sampled bandwidth really reaches the cells
+    let bws: std::collections::BTreeSet<String> = a
+        .rows
+        .iter()
+        .map(|r| format!("{}", r.link_bw_ns_per_byte))
+        .collect();
+    assert_eq!(bws.len(), 6, "six distinct LHS strata");
+}
+
+/// The artifact round-trips through the summarizer, and the frontier
+/// tables answer the three capacity questions.
+#[test]
+fn summarize_round_trips_the_artifact() {
+    let res = run_sweep(&ci_grid(), &base(), "JAC-2D-5P", Size::Tiny, 4).unwrap();
+    let text = res.to_jsonl(false);
+    let parsed = parse_artifact(&text).unwrap();
+    assert_eq!(parsed.rows.len(), 24);
+    let s = build_summary(&parsed);
+    assert_eq!(s.cells, 24);
+    assert_eq!(s.makespan.len(), 2, "one curve per (workload, link-bw)");
+    assert!(s.makespan.iter().all(|c| c.points.len() == 3));
+    // 2 workloads × 2 placements at the 4-node frontier
+    assert_eq!(s.peak.len(), 4);
+    // 2 workloads × 3 node counts × 2 placements of steal pairs
+    assert_eq!(s.steal.len(), 12);
+    for p in &s.steal {
+        assert!(p.speedup.is_finite() && p.speedup > 0.0);
+        if p.nodes == 1 {
+            assert!(
+                (p.speedup - 1.0).abs() < 1e-12,
+                "stealing is a no-op on one node"
+            );
+        }
+    }
+    let table = render_text(&s);
+    assert!(table.contains("== makespan vs nodes"));
+    assert!(table.contains("== steal benefit"));
+    let json = render_json(&s);
+    assert!(json.starts_with("{\"schema\":\"tale3-sweep-summary/v1\""));
+}
+
+/// Axis names are the CLI flag surface: unknown names, bad values,
+/// serve/trace knobs and the closed-form omp comparator are all hard
+/// errors before any cell runs.
+#[test]
+fn bad_specs_hard_error_before_running() {
+    for axis in [
+        "warp-drive=1,2",
+        "workload=NOPE",
+        "size=huge",
+        "nodes=zero",
+        "steal=sometimes",
+        "trace=full",
+        "tenants=2",
+        "runtime=omp",
+    ] {
+        let mut spec = SweepSpec::default();
+        spec.add_axis_flag(axis).unwrap();
+        assert!(
+            run_sweep(&spec, &base(), "JAC-2D-5P", Size::Tiny, 1).is_err(),
+            "axis `{axis}` must fail the sweep"
+        );
+    }
+    assert!(SweepSpec::from_json("{\"cells\":3}").is_err(), "unknown spec key");
+    let mut ranged = SweepSpec::default();
+    ranged.add_axis_flag("link-bw=0.1:0.9").unwrap();
+    assert!(
+        run_sweep(&ranged, &base(), "JAC-2D-5P", Size::Tiny, 1).is_err(),
+        "a grid cannot enumerate a continuous range"
+    );
+}
