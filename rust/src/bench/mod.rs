@@ -11,7 +11,7 @@ pub mod report;
 
 use crate::edt::MapOptions;
 use crate::ral::DepMode;
-use crate::rt::{RunReport, StealPolicy};
+use crate::rt::{QueuePolicy, RunReport, StealPolicy};
 use crate::sim::{simulate, simulate_omp, CostModel, Machine, SimReport};
 use crate::space::{DataPlane, Topology};
 use crate::workloads::{by_name, Instance, Size};
@@ -188,6 +188,7 @@ pub fn sim_report_plane(
         numa_pinned,
         inst.total_flops,
         StealPolicy::Never,
+        QueuePolicy::Fifo,
     )
 }
 

@@ -9,7 +9,7 @@
 //! (`tests/placement.rs` asserts this), so CI artifacts diff cleanly
 //! run-to-run and PR-to-PR.
 //!
-//! **Schema `tale3-bench-report/v6`:** the document opens with a `config`
+//! **Schema `tale3-bench-report/v7`:** the document opens with a `config`
 //! object — the fully-resolved [`ExecConfig`] echo every cell ran under —
 //! and each workload carries three cells side by side: the single-node
 //! space-plane baseline (`single`), the sharded topology under strict
@@ -34,11 +34,20 @@
 //! [`crate::sweep::run_sweep`] on two worker threads and embedded as
 //! the `tale3-sweep/v1` header + row objects — the report both smokes
 //! the sweep subsystem and proves its parallel executor is
-//! byte-deterministic (the whole report is diffed run-to-run). CI's
-//! golden-file job asserts the v6 key set is stable across runs.
+//! byte-deterministic (the whole report is diffed run-to-run). v7 adds
+//! the `queue_policy` echo to the config object and the `sched`
+//! section: the skewed LUD wavefront run block-placed across the
+//! report's node count once per [`QueuePolicy`], side by side, so the
+//! artifact records how much the priority ready queue buys over FIFO
+//! on the workload whose node boundaries it was designed to pipeline
+//! (the strict ordering itself is asserted by the DES test suite; the
+//! report records the magnitudes). CI's golden-file job asserts the v7
+//! key set is stable across runs.
 
 use crate::ral::DepMode;
-use crate::rt::{self, BackendKind, DynWorkload, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
+use crate::rt::{
+    self, BackendKind, DynWorkload, ExecConfig, LeafSpec, QueuePolicy, RuntimeKind, StealPolicy,
+};
 use crate::sim::{SimReport, TraceMode};
 use crate::space::{DataPlane, Placement, TransportKind};
 use crate::workloads::{irregular, registry, Size};
@@ -59,6 +68,9 @@ pub struct ReportConfig {
     /// Shard-transport echo (`--transport`); the DES cells charge their
     /// own link model, so this records the launch descriptor.
     pub transport: TransportKind,
+    /// Ready-queue ordering (`--queue-policy`) of every cell outside the
+    /// `sched` section, which always runs all policies side by side.
+    pub queue: QueuePolicy,
 }
 
 impl Default for ReportConfig {
@@ -71,6 +83,7 @@ impl Default for ReportConfig {
             mode: DepMode::CncDep,
             steal: StealPolicy::RemoteReady,
             transport: TransportKind::InProc,
+            queue: QueuePolicy::Fifo,
         }
     }
 }
@@ -87,6 +100,7 @@ impl ReportConfig {
             .threads(self.threads)
             .steal(steal)
             .transport(self.transport)
+            .queue_policy(self.queue)
     }
 }
 
@@ -150,7 +164,8 @@ fn config_obj(cfg: &ReportConfig) -> String {
     format!(
         "{{\"backend\":{},\"runtime\":{},\"plane\":{},\"size\":{},\
          \"quick\":{},\"threads\":{},\"nodes\":{},\"placement\":{},\
-         \"transport\":{},\"steal\":{},\"numa_pinned\":{},\"trace\":{}}}",
+         \"transport\":{},\"steal\":{},\"queue_policy\":{},\"numa_pinned\":{},\
+         \"trace\":{}}}",
         jstr(ec.backend.name()),
         jstr(ec.runtime.name()),
         jstr(ec.plane.name()),
@@ -161,6 +176,7 @@ fn config_obj(cfg: &ReportConfig) -> String {
         jstr(ec.placement.name()),
         jstr(ec.transport.name()),
         jstr(ec.steal.name()),
+        jstr(ec.queue.name()),
         ec.numa_pinned,
         jstr(ec.trace.name()),
     )
@@ -251,12 +267,59 @@ pub fn perf_report_json(cfg: &ReportConfig) -> String {
         ));
     }
     format!(
-        "{{\"schema\":\"tale3-bench-report/v6\",\"config\":{},\"workloads\":[{}],\
-         \"irregular\":[{}],\"sweep\":{}}}\n",
+        "{{\"schema\":\"tale3-bench-report/v7\",\"config\":{},\"workloads\":[{}],\
+         \"irregular\":[{}],\"sweep\":{},\"sched\":{}}}\n",
         config_obj(cfg),
         workloads.join(","),
         irregular_cells.join(","),
         sweep_section(cfg, size),
+        sched_section(cfg, size),
+    )
+}
+
+/// v7 `sched` section: the ready-queue-policy comparison cell. LUD is
+/// the skew stressor — block placement across the report's node count
+/// hands each node a shrinking band of the triangular wavefront, so
+/// the makespan is dominated by how promptly each node's deepest ready
+/// tile reaches the boundary that feeds its successor. The same cell
+/// (strict owner-computes, no stealing, so ordering is the *only*
+/// degree of freedom) runs once per [`QueuePolicy`], side by side:
+/// diff `sim_seconds` across cells to read the policy win. Oracle
+/// counters ride along so a reader can confirm the policies did
+/// identical work in a different order.
+fn sched_section(cfg: &ReportConfig, size: Size) -> String {
+    let inst = (registry()
+        .iter()
+        .find(|w| w.name == "LUD")
+        .expect("LUD registered")
+        .build)(size);
+    let plan = inst.plan().expect("plan");
+    let leaf = LeafSpec::cost_only(inst.total_flops);
+    let mut cells = Vec::new();
+    for q in QueuePolicy::all() {
+        let ec = cfg
+            .exec_config(cfg.nodes, StealPolicy::Never)
+            .placement(Placement::Block)
+            .queue_policy(q);
+        let r = rt::launch(&plan, &leaf, &ec)
+            .expect("DES launch")
+            .sim
+            .expect("DES backend carries a SimReport");
+        cells.push(format!(
+            "{{\"queue_policy\":{},\"sim_seconds\":{},\"tasks\":{},\
+             \"remote_gets\":{},\"remote_bytes\":{}}}",
+            jstr(q.name()),
+            r.seconds,
+            r.tasks,
+            r.space_remote_gets,
+            r.space_remote_bytes,
+        ));
+    }
+    format!(
+        "{{\"workload\":\"LUD\",\"nodes\":{},\"placement\":\"block\",\
+         \"steal\":\"never\",\"cells\":[{}]}}",
+        cfg.nodes,
+        cells.join(","),
     )
 }
 
@@ -338,6 +401,7 @@ mod tests {
         assert!(o.contains("\"runtime\":\"cnc-dep\""));
         assert!(o.contains("\"size\":\"tiny\""));
         assert!(o.contains("\"steal\":\"remote-ready\""));
+        assert!(o.contains("\"queue_policy\":\"fifo\""));
         assert!(o.contains("\"nodes\":4"));
         assert!(o.contains("\"transport\":\"inproc\""));
         assert!(o.contains("\"trace\":\"full\""));
@@ -347,5 +411,29 @@ mod tests {
             ..Default::default()
         });
         assert!(channel.contains("\"transport\":\"channel\""));
+        let prio = config_obj(&ReportConfig {
+            quick: true,
+            queue: QueuePolicy::Priority,
+            ..Default::default()
+        });
+        assert!(prio.contains("\"queue_policy\":\"priority\""));
+    }
+
+    #[test]
+    fn sched_section_compares_every_policy_on_skewed_lud() {
+        let cfg = ReportConfig {
+            quick: true,
+            ..Default::default()
+        };
+        let s = sched_section(&cfg, Size::Tiny);
+        assert!(s.contains("\"workload\":\"LUD\""));
+        assert!(s.contains("\"placement\":\"block\""));
+        for q in QueuePolicy::all() {
+            assert!(
+                s.contains(&format!("\"queue_policy\":\"{}\"", q.name())),
+                "sched section carries a {} cell: {s}",
+                q.name()
+            );
+        }
     }
 }

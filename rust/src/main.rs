@@ -464,6 +464,7 @@ fn main() -> anyhow::Result<()> {
                     StealPolicy::RemoteReady
                 },
                 transport: base.transport,
+                queue: base.queue,
                 ..Default::default()
             };
             let json = perf_report_json(&cfg);
@@ -499,14 +500,17 @@ fn main() -> anyhow::Result<()> {
             println!("                    CostModel link latency injected on remote gets)");
             println!("       [--steal never|remote-ready]   (DES: may idle nodes claim remote-ready");
             println!("                    leaf EDTs, paying the input-datablock transfers?)");
+            println!("       [--queue-policy fifo|critical-path|priority]   (ready-queue ordering:");
+            println!("                    newest-first, deepest-first, or scored by an online");
+            println!("                    per-kernel-class runtime estimate with starvation aging)");
             println!("       [--trace off|schedule|full]    (DES: record an execution trace; the");
             println!("                    capture rides in RunReport::trace / `tale3 trace capture`)");
             println!("       trace <capture|replay|recost|summarize>   (postmortem scheduling studies:");
             println!("                    capture a tale3-trace/v2 JSONL, audit-replay it, re-price");
             println!("                    link costs without re-simulating, or view per-node timelines)");
             println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P] [--steal S]");
-            println!("                    [--transport T]  (deterministic perf JSON: virtual time");
-            println!("                    only, schema v6)");
+            println!("                    [--transport T] [--queue-policy Q]  (deterministic perf");
+            println!("                    JSON: virtual time only, schema v7)");
             println!();
             println!("sweep [--spec FILE.json] [--axis name=v1,v2|lo:hi]... [--samples N] [--seed S]");
             println!("      [--jobs N] [--out FILE] [--wall] [--workload W] [--size S]");

@@ -40,12 +40,20 @@ impl RollingWindow {
     /// A window of `window_ns` nanoseconds split into `slots` ring slots
     /// (more slots = finer expiry granularity). `slots` is clamped to at
     /// least 1; `window_ns` to at least `slots` so every slot spans ≥1 ns.
+    ///
+    /// The slot span is `window_ns / slots` rounded **up**: with a
+    /// truncating division an indivisible pair made the ring span
+    /// `slot_ns·slots < window_ns`, so serve-mode stats expired before
+    /// the requested window had passed. The effective window —
+    /// `slot_ns·slots`, now ≥ `window_ns` — is what [`Self::window_ns`]
+    /// reports.
     pub fn new(window_ns: u64, slots: usize) -> RollingWindow {
         let slots = slots.max(1);
         let window_ns = window_ns.max(slots as u64);
+        let slot_ns = window_ns.div_ceil(slots as u64);
         RollingWindow {
-            window_ns,
-            slot_ns: window_ns / slots as u64,
+            window_ns: slot_ns * slots as u64,
+            slot_ns,
             inner: Mutex::new(Ring {
                 counts: vec![0; slots],
                 head: None,
@@ -54,7 +62,9 @@ impl RollingWindow {
         }
     }
 
-    /// The window span this ring covers, in nanoseconds.
+    /// The effective window span this ring covers, in nanoseconds: the
+    /// requested window rounded up to a whole number of slot spans
+    /// (never less than requested).
     pub fn window_ns(&self) -> u64 {
         self.window_ns
     }
@@ -147,6 +157,28 @@ mod tests {
         w.record(100_000_000); // out of order: lands in the 500 ms slot
         assert_eq!(w.count_in_window(500_000_000), 2);
         assert_eq!(w.count_in_window(1_600_000_000), 0, "both expire together");
+    }
+
+    #[test]
+    fn indivisible_window_rounds_the_slot_span_up() {
+        // 1 s over 7 slots does not divide: truncation gave 7 slots of
+        // 142_857_142 ns — a ring spanning 999_999_994 ns that expired
+        // events still inside the requested second
+        let w = RollingWindow::new(SEC, 7);
+        assert_eq!(w.window_ns(), 1_000_000_001, "7 slots of ceil(1e9/7)");
+        w.record(0);
+        assert_eq!(
+            w.count_in_window(SEC - 1),
+            1,
+            "an event this old is still inside the requested window"
+        );
+        assert_eq!(
+            w.count_in_window(w.window_ns()),
+            0,
+            "and expires once the effective window has passed"
+        );
+        // divisible pairs are untouched
+        assert_eq!(RollingWindow::new(SEC, 10).window_ns(), SEC);
     }
 
     #[test]

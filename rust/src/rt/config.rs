@@ -70,6 +70,62 @@ impl StealPolicy {
     }
 }
 
+/// How a worker orders the ready tasks it can run next.
+///
+/// Both executors consume the knob: the DES's per-worker selection in
+/// `sim::des::find_task` and the real engine's [`crate::rt::Pool`] pop.
+/// Ordering never changes *what* runs — the dependence machinery alone
+/// decides readiness — only *in which order* ready work drains, so every
+/// policy is oracle-identical and the policies differ only in makespan
+/// and queueing delay. See [`crate::rt::queue`] for the estimator and
+/// scoring design.
+///
+/// - [`QueuePolicy::Fifo`] — the historical order: a worker pops its own
+///   newest entry first (LIFO-local, FIFO steal), byte-identical to the
+///   pre-policy scheduler.
+/// - [`QueuePolicy::CriticalPath`] — deepest-first: control tasks, then
+///   the ready task furthest along the schedule's sequential band (the
+///   longest chain of dependents ahead of it), a static critical-path
+///   proxy that needs no measurements.
+/// - [`QueuePolicy::Priority`] — estimator-backed scheduling with
+///   starvation decay: per-kernel-class runtimes are estimated online
+///   (P² streaming median over observed `Done − Start` durations) and
+///   ready tasks are scored `base_priority + est_runtime·weight −
+///   age·decay` (lower first), where the static base priority buys a
+///   task one estimated runtime of head start per schedule level of
+///   depth — depth-first across the schedule, shortest-job-first among
+///   equal-depth classes, and aging work can never starve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueuePolicy {
+    #[default]
+    Fifo,
+    CriticalPath,
+    Priority,
+}
+
+impl QueuePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueuePolicy::Fifo => "fifo",
+            QueuePolicy::CriticalPath => "critical-path",
+            QueuePolicy::Priority => "priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QueuePolicy> {
+        match s {
+            "fifo" => Some(QueuePolicy::Fifo),
+            "critical-path" => Some(QueuePolicy::CriticalPath),
+            "priority" => Some(QueuePolicy::Priority),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [QueuePolicy; 3] {
+        [QueuePolicy::Fifo, QueuePolicy::CriticalPath, QueuePolicy::Priority]
+    }
+}
+
 /// Which backend executes the plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BackendKind {
@@ -143,6 +199,10 @@ pub struct ExecConfig {
     pub placement: Placement,
     pub threads: usize,
     pub steal: StealPolicy,
+    /// Ready-task ordering ([`QueuePolicy`]): how a worker picks among
+    /// the tasks it *could* run next. Consumed by both executors; never
+    /// changes results, only the drain order (and therefore makespan).
+    pub queue: QueuePolicy,
     /// How the real engine's item space reaches its shards
     /// ([`TransportKind`]): `InProc` is the direct lock/atomic path,
     /// `Channel` puts each node's shards behind a service thread and
@@ -193,6 +253,7 @@ impl Default for ExecConfig {
             placement: Placement::default(),
             threads: 2,
             steal: StealPolicy::default(),
+            queue: QueuePolicy::default(),
             transport: TransportKind::default(),
             trace: TraceMode::Off,
             cost: CostModel::default(),
@@ -248,6 +309,11 @@ impl ExecConfig {
 
     pub fn steal(mut self, s: StealPolicy) -> Self {
         self.steal = s;
+        self
+    }
+
+    pub fn queue_policy(mut self, q: QueuePolicy) -> Self {
+        self.queue = q;
         self
     }
 
@@ -360,6 +426,7 @@ impl ExecConfig {
             nodes: topo.nodes(),
             placement: topo.placement().name(),
             steal: self.steal.name(),
+            queue_policy: self.queue.name(),
             transport: self.transport.name(),
             numa_pinned: self.numa_pinned,
             trace: self.trace.name(),
@@ -406,6 +473,15 @@ impl ExecConfig {
                 let v = need(name, value)?;
                 self.steal = StealPolicy::parse(v).ok_or_else(|| {
                     anyhow::anyhow!("unknown --steal value `{v}` (expected never|remote-ready)")
+                })?;
+                Ok(true)
+            }
+            "queue-policy" => {
+                let v = need(name, value)?;
+                self.queue = QueuePolicy::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown --queue-policy value `{v}` (expected fifo|critical-path|priority)"
+                    )
                 })?;
                 Ok(true)
             }
@@ -526,6 +602,9 @@ pub struct ConfigEcho {
     pub nodes: usize,
     pub placement: &'static str,
     pub steal: &'static str,
+    /// Ready-queue ordering the run drained under ("fifo" |
+    /// "critical-path" | "priority").
+    pub queue_policy: &'static str,
     /// Shard transport of the real engine's item space ("inproc" |
     /// "channel"); echoed as requested on backends that do not model it
     /// (the DES charges its own link instead).
@@ -666,6 +745,16 @@ mod tests {
     }
 
     #[test]
+    fn queue_policy_names_round_trip() {
+        for q in QueuePolicy::all() {
+            assert_eq!(QueuePolicy::parse(q.name()), Some(q));
+        }
+        assert_eq!(QueuePolicy::parse("lifo"), None);
+        assert_eq!(QueuePolicy::parse("shortest-first"), None);
+        assert_eq!(QueuePolicy::default(), QueuePolicy::Fifo);
+    }
+
+    #[test]
     fn backend_kind_parse() {
         assert_eq!(BackendKind::parse("threads"), Some(BackendKind::Threads));
         assert_eq!(BackendKind::parse("des"), Some(BackendKind::Des));
@@ -683,6 +772,7 @@ mod tests {
             .placement(Placement::Block)
             .threads(8)
             .steal(StealPolicy::RemoteReady)
+            .queue_policy(QueuePolicy::Priority)
             .transport(TransportKind::Channel)
             .numa_pinned(false);
         assert_eq!(cfg.backend, BackendKind::Des);
@@ -692,6 +782,7 @@ mod tests {
         assert_eq!(cfg.placement, Placement::Block);
         assert_eq!(cfg.threads, 8);
         assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+        assert_eq!(cfg.queue, QueuePolicy::Priority);
         assert_eq!(cfg.transport, TransportKind::Channel);
         assert!(!cfg.numa_pinned);
     }
@@ -714,6 +805,10 @@ mod tests {
         assert!(!cfg.apply_cli_flag("no-verify", None).unwrap());
         assert!(cfg.apply_cli_flag("steal", Some("remote-ready")).unwrap());
         assert_eq!(cfg.steal, StealPolicy::RemoteReady);
+        assert!(cfg.apply_cli_flag("queue-policy", Some("priority")).unwrap());
+        assert_eq!(cfg.queue, QueuePolicy::Priority);
+        assert!(cfg.apply_cli_flag("queue-policy", Some("critical-path")).unwrap());
+        assert_eq!(cfg.queue, QueuePolicy::CriticalPath);
         assert!(cfg.apply_cli_flag("trace", Some("full")).unwrap());
         assert_eq!(cfg.trace, crate::sim::TraceMode::Full);
         assert!(cfg.apply_cli_flag("transport", Some("channel")).unwrap());
@@ -734,6 +829,8 @@ mod tests {
             ("nodes", "many"),
             ("placement", "diagonal"),
             ("steal", "sometimes"),
+            ("queue-policy", "lifo"),
+            ("queue-policy", "shortest"),
             ("trace", "banana"),
             ("transport", "tcp"),
             ("threads", "fast"),
@@ -751,6 +848,7 @@ mod tests {
         }
         // nothing was mutated by the rejected flags
         assert_eq!(cfg.steal, StealPolicy::Never);
+        assert_eq!(cfg.queue, QueuePolicy::Fifo);
         assert_eq!(cfg.trace, crate::sim::TraceMode::Off);
         assert_eq!(cfg.transport, TransportKind::InProc);
         assert_eq!(cfg.nodes, 1);

@@ -19,7 +19,7 @@
 //! WORKER puts a *signal item* into the tag table and the SHUTDOWN is a
 //! step blocked on that item.
 
-use super::pool::{Job, Pool, WorkerCtx};
+use super::pool::{Job, Pool, WorkerCtx, NO_CLASS};
 use super::table::TagTable;
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::ral::{Continuation, DepMode, FinishScope, Metrics, Task, TagKey};
@@ -141,7 +141,18 @@ impl Engine {
     }
 
     fn spawn(self: &Arc<Self>, ctx: &WorkerCtx<'_>, task: Task) {
-        ctx.spawn(self.job(task));
+        // mirror the DES's priority inputs: leaf WORKERs are classed by
+        // plan node with their outermost tag coordinate as schedule
+        // depth; control tasks carry neither
+        let (class, depth) = match &task {
+            Task::Worker { node, coords, .. }
+                if matches!(self.plan.node(*node).body, ArenaBody::Leaf(_)) =>
+            {
+                (*node, coords.first().copied().unwrap_or(0))
+            }
+            _ => (NO_CLASS, 0),
+        };
+        ctx.spawn_classed(self.job(task), class, depth);
     }
 
     /// Worker-completion tag key.
@@ -357,9 +368,11 @@ impl Engine {
                 let owner = self.topo.node_of(&coords);
                 let t0 = std::time::Instant::now();
                 self.leaf.run_leaf_at(&self.plan, node, &coords, owner);
-                ctx.metrics()
-                    .work_ns
-                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let dur_ns = t0.elapsed().as_nanos() as u64;
+                ctx.metrics().work_ns.fetch_add(dur_ns, Ordering::Relaxed);
+                // feed the online runtime estimator with the observed
+                // Done − Start duration (no-op outside priority pools)
+                ctx.observe_runtime(node, dur_ns as f64);
                 self.continue_with(ctx, Continuation::WorkerDone { key, scope });
             }
             ArenaBody::Nested(child) => {
@@ -485,7 +498,7 @@ impl crate::rt::Backend for EngineBackend {
             matches!(cfg.runtime, crate::rt::RuntimeKind::Edt(_)),
             "EngineBackend runs EDT runtimes; cfg.runtime = omp resolves to OmpBackend"
         );
-        let pool = super::Pool::new(cfg.threads);
+        let pool = super::Pool::with_policy(cfg.threads, cfg.queue);
         super::execute_on_pool(plan, leaf, cfg, &pool)
     }
 }
@@ -549,6 +562,10 @@ mod tests {
     use std::sync::Mutex;
 
     fn check_all_modes(plan: &Arc<Plan>, threads: usize) {
+        check_all_modes_with(plan, threads, crate::rt::QueuePolicy::Fifo)
+    }
+
+    fn check_all_modes_with(plan: &Arc<Plan>, threads: usize, policy: crate::rt::QueuePolicy) {
         // expected leaf set from direct enumeration
         let mut expected: Vec<(u32, Vec<i64>)> = Vec::new();
         plan.for_each_tag(plan.root, &[], &mut |c| {
@@ -566,13 +583,13 @@ mod tests {
                 log: Mutex::new(Vec::new()),
             });
             let eng = Engine::new(plan.clone(), mode, rec.clone());
-            let pool = Pool::new(threads);
-            eng.run(&pool).unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+            let pool = Pool::with_policy(threads, policy);
+            eng.run(&pool).unwrap_or_else(|e| panic!("{mode:?} {policy:?}: {e}"));
             let mut log = rec.log.lock().unwrap().clone();
             // 1. every leaf exactly once
             let mut sorted = log.clone();
             sorted.sort();
-            assert_eq!(sorted, expected, "{mode:?}: leaf set mismatch");
+            assert_eq!(sorted, expected, "{mode:?} {policy:?}: leaf set mismatch");
             // 2. chain dependences respected in completion order
             let pos: std::collections::HashMap<_, _> = log
                 .drain(..)
@@ -584,7 +601,7 @@ mod tests {
                     let a = (*node, ant);
                     assert!(
                         pos[&a] < pos[&(*node, coords.clone())],
-                        "{mode:?}: dependence violated: {a:?} after {coords:?}"
+                        "{mode:?} {policy:?}: dependence violated: {a:?} after {coords:?}"
                     );
                 }
             }
@@ -607,6 +624,16 @@ mod tests {
     fn all_modes_respect_chains_four_threads() {
         let plan = jac1d_plan(6, 48, (2, 8));
         check_all_modes(&plan, 4);
+    }
+
+    /// The queue policy reorders ready work only: every mode still runs
+    /// the exact leaf set in dependence order under the ordered policies.
+    #[test]
+    fn all_modes_respect_chains_under_every_queue_policy() {
+        let plan = jac1d_plan(6, 48, (2, 8));
+        for policy in crate::rt::QueuePolicy::all() {
+            check_all_modes_with(&plan, 4, policy);
+        }
     }
 
     #[test]

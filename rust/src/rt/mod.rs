@@ -39,6 +39,7 @@ pub mod config;
 pub mod engine;
 pub mod ompsim;
 pub mod pool;
+pub mod queue;
 pub mod replay;
 pub mod report;
 pub mod serve;
@@ -48,11 +49,12 @@ pub use crate::sim::trace::{Trace, TraceMode};
 pub use crate::space::{DataPlane, TransportKind};
 pub use config::{
     ArrivalSpec, Backend, BackendKind, ConfigEcho, DynExec, DynSimOutcome, DynWorkload,
-    ExecConfig, LeafBody, LeafSpec, StealPolicy,
+    ExecConfig, LeafBody, LeafSpec, QueuePolicy, StealPolicy,
 };
 pub use engine::{Engine, EngineBackend, LeafExec, NoopLeaf};
 pub use ompsim::OmpBackend;
 pub use pool::{Pool, WorkerCtx};
+pub use queue::{P2Median, RuntimeEstimator};
 pub use replay::{replay_trace, ReplayBackend, ReplayMode};
 pub use report::ReportCore;
 pub use serve::{Service, ServiceStats, Session, SessionState, TenantStats};

@@ -5,9 +5,14 @@
 //! crossbeam-deque is not in the vendored crate set, so the deques are
 //! mutex-guarded `VecDeque`s — own-queue pops take the lock uncontended in
 //! the common case; contention appears only under active stealing, which
-//! is itself the overhead the paper measures (§5.3). Push/pop are
-//! LIFO-local / FIFO-steal like TBB and Cilk.
+//! is itself the overhead the paper measures (§5.3). Under the default
+//! [`QueuePolicy::Fifo`] push/pop are LIFO-local / FIFO-steal like TBB
+//! and Cilk; the ordered policies replace the own-deque pop with a
+//! policy-dispatched scan (see [`crate::rt::queue`] for the design)
+//! while injector and steal pops stay FIFO-front.
 
+use super::config::QueuePolicy;
+use super::queue::RuntimeEstimator;
 use crate::ral::Metrics;
 use crossbeam_utils::CachePadded;
 use std::collections::VecDeque;
@@ -18,6 +23,23 @@ use std::sync::{Arc, Condvar, Mutex};
 /// engine's task roles and the OpenMP comparator's parallel-for chunks.
 pub type Job = Box<dyn FnOnce(&WorkerCtx<'_>) + Send>;
 
+/// Runtime-estimator class of jobs that carry none (control tasks and
+/// comparator chunks): they score as est = 0 and rank ahead of classed
+/// work under the ordered policies.
+pub const NO_CLASS: u32 = u32::MAX;
+
+/// A deque entry: the job plus the scheduling metadata the ordered
+/// policies key on (all ignored by the default Fifo pop).
+struct ReadyJob {
+    job: Job,
+    /// Estimator class ([`NO_CLASS`] for unclassed work).
+    class: u32,
+    /// Schedule depth (outermost tag coordinate; 0 for unclassed work).
+    depth: i64,
+    /// Enqueue stamp in ns since the pool's epoch — the ready-age base.
+    at_ns: u64,
+}
+
 /// Passed to every job: identifies the worker and lets jobs spawn more work.
 pub struct WorkerCtx<'a> {
     shared: &'a Shared,
@@ -25,9 +47,21 @@ pub struct WorkerCtx<'a> {
 }
 
 impl WorkerCtx<'_> {
-    /// Push onto this worker's own deque (LIFO hot side).
+    /// Push onto this worker's own deque (LIFO hot side under Fifo).
     pub fn spawn(&self, job: Job) {
-        self.shared.push_local(self.worker, job);
+        self.spawn_classed(job, NO_CLASS, 0);
+    }
+    /// [`WorkerCtx::spawn`] with the scheduling metadata the ordered
+    /// policies key on: the runtime-estimator class and schedule depth.
+    pub fn spawn_classed(&self, job: Job, class: u32, depth: i64) {
+        self.shared.push_local(self.worker, job, class, depth);
+    }
+    /// Feed one observed leaf duration into the shared online
+    /// estimator (a no-op unless the pool runs the priority policy).
+    pub fn observe_runtime(&self, class: u32, dur_ns: f64) {
+        if self.shared.policy == QueuePolicy::Priority && class != NO_CLASS {
+            self.shared.est.lock().unwrap().observe(class as usize, dur_ns);
+        }
     }
     pub fn metrics(&self) -> &Metrics {
         &self.shared.metrics
@@ -35,7 +69,7 @@ impl WorkerCtx<'_> {
 }
 
 struct Deque {
-    q: Mutex<VecDeque<Job>>,
+    q: Mutex<VecDeque<ReadyJob>>,
 }
 
 #[doc(hidden)]
@@ -51,12 +85,23 @@ pub struct Shared {
     /// xorshift seeds per worker for victim selection
     seeds: Vec<CachePadded<AtomicU64>>,
     n_workers: usize,
+    /// Own-deque pop order; injector and steal pops are always FIFO.
+    policy: QueuePolicy,
+    /// Ready-age base for the priority score's starvation decay.
+    epoch: std::time::Instant,
+    /// Shared online per-class runtime estimator (priority policy only).
+    est: Mutex<RuntimeEstimator>,
 }
 
 impl Shared {
-    fn push_local(&self, worker: usize, job: Job) {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn push_local(&self, worker: usize, job: Job, class: u32, depth: i64) {
         self.pending.fetch_add(1, Ordering::AcqRel);
-        self.deques[worker].q.lock().unwrap().push_back(job);
+        let rj = ReadyJob { job, class, depth, at_ns: self.now_ns() };
+        self.deques[worker].q.lock().unwrap().push_back(rj);
         self.notify_one();
     }
 
@@ -88,9 +133,57 @@ impl Shared {
         (x as usize) % self.n_workers
     }
 
+    /// Pop this worker's own deque in policy order. Fifo takes the back
+    /// (LIFO hot side); the ordered policies scan for the best entry —
+    /// deques are per-worker and shallow, and the scan runs under the
+    /// same lock a pop takes anyway.
+    fn pop_own(&self, worker: usize) -> Option<Job> {
+        let mut dq = self.deques[worker].q.lock().unwrap();
+        let i = match self.policy {
+            QueuePolicy::Fifo => dq.len().checked_sub(1)?,
+            QueuePolicy::CriticalPath => {
+                // unclassed (control) jobs first, then the deepest
+                // classed job in schedule order; ties to the front-most
+                let mut best: Option<(usize, (bool, i64))> = None;
+                for (i, rj) in dq.iter().enumerate() {
+                    let key = (rj.class != NO_CLASS, rj.depth);
+                    let better = match best {
+                        Some((_, (bc, bd))) => {
+                            (key.0, bc) == (false, true) || (key.0 == bc && key.1 > bd)
+                        }
+                        None => true,
+                    };
+                    if better {
+                        best = Some((i, key));
+                    }
+                }
+                best?.0
+            }
+            QueuePolicy::Priority => {
+                let now = self.now_ns();
+                let est = self.est.lock().unwrap();
+                let mut best: Option<(usize, f64)> = None;
+                for (i, rj) in dq.iter().enumerate() {
+                    let class = (rj.class != NO_CLASS).then_some(rj.class as usize);
+                    let age = now.saturating_sub(rj.at_ns) as f64;
+                    let score = est.score(class, rj.depth, age);
+                    let better = match best {
+                        Some((_, b)) => score < b,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((i, score));
+                    }
+                }
+                best?.0
+            }
+        };
+        dq.remove(i).map(|rj| rj.job)
+    }
+
     fn find_job(&self, worker: usize) -> Option<Job> {
-        // own deque: LIFO
-        if let Some(j) = self.deques[worker].q.lock().unwrap().pop_back() {
+        // own deque: policy-ordered (LIFO under the default Fifo)
+        if let Some(j) = self.pop_own(worker) {
             return Some(j);
         }
         // injector: FIFO
@@ -104,9 +197,9 @@ impl Shared {
             if v == worker {
                 continue;
             }
-            if let Some(j) = self.deques[v].q.lock().unwrap().pop_front() {
+            if let Some(rj) = self.deques[v].q.lock().unwrap().pop_front() {
                 self.metrics.steals.fetch_add(1, Ordering::Relaxed);
-                return Some(j);
+                return Some(rj.job);
             }
         }
         self.metrics.failed_steals.fetch_add(1, Ordering::Relaxed);
@@ -162,7 +255,14 @@ pub struct Pool {
 }
 
 impl Pool {
+    /// A pool with the historical LIFO-local / FIFO-steal ordering.
     pub fn new(n_workers: usize) -> Pool {
+        Pool::with_policy(n_workers, QueuePolicy::Fifo)
+    }
+
+    /// A pool whose own-deque pops follow `policy` (see
+    /// [`crate::rt::queue`] for the ordering semantics).
+    pub fn with_policy(n_workers: usize, policy: QueuePolicy) -> Pool {
         let n = n_workers.max(1);
         let shared = Arc::new(Shared {
             deques: (0..n)
@@ -182,6 +282,9 @@ impl Pool {
                 .map(|i| CachePadded::new(AtomicU64::new(0x9E3779B9 + i as u64 * 0x61C88647 + 1)))
                 .collect(),
             n_workers: n,
+            policy,
+            epoch: std::time::Instant::now(),
+            est: Mutex::new(RuntimeEstimator::new()),
         });
         let handles = (0..n)
             .map(|w| {
@@ -332,5 +435,60 @@ mod tests {
         let pool = Pool::new(2);
         pool.run_until_quiescent(Box::new(|_| {}));
         drop(pool); // must not hang
+    }
+
+    /// Every policy drains classed + unclassed work to quiescence —
+    /// ordering must never drop or duplicate a job.
+    #[test]
+    fn ordered_policies_run_all_jobs() {
+        for policy in QueuePolicy::all() {
+            let pool = Pool::with_policy(3, policy);
+            let counter = Arc::new(AtomicU64::new(0));
+            let c = counter.clone();
+            pool.run_until_quiescent(Box::new(move |ctx| {
+                for i in 0..120u64 {
+                    let c2 = c.clone();
+                    ctx.spawn_classed(
+                        Box::new(move |ctx| {
+                            c2.fetch_add(1, Ordering::Relaxed);
+                            // exercise the estimator-feed path too
+                            ctx.observe_runtime((i % 3) as u32, 1000.0 + i as f64);
+                        }),
+                        (i % 3) as u32,
+                        (i % 7) as i64,
+                    );
+                }
+            }));
+            assert_eq!(
+                counter.load(Ordering::Relaxed),
+                120,
+                "{policy:?} lost or duplicated jobs"
+            );
+        }
+    }
+
+    /// Nested classed spawns complete under the ordered policies (the
+    /// scan-based pop must interoperate with stealing and the injector).
+    #[test]
+    fn nested_spawns_complete_under_priority() {
+        for policy in [QueuePolicy::CriticalPath, QueuePolicy::Priority] {
+            let pool = Pool::with_policy(3, policy);
+            let counter = Arc::new(AtomicU64::new(0));
+            let c = counter.clone();
+            pool.run_until_quiescent(Box::new(move |ctx| {
+                fn fib(ctx: &WorkerCtx<'_>, n: u64, c: Arc<AtomicU64>) {
+                    c.fetch_add(1, Ordering::Relaxed);
+                    if n < 2 {
+                        return;
+                    }
+                    let c1 = c.clone();
+                    ctx.spawn_classed(Box::new(move |ctx| fib(ctx, n - 1, c1)), 0, n as i64);
+                    let c2 = c;
+                    ctx.spawn_classed(Box::new(move |ctx| fib(ctx, n - 2, c2)), 0, n as i64);
+                }
+                fib(ctx, 10, c);
+            }));
+            assert_eq!(counter.load(Ordering::Relaxed), 177, "{policy:?}");
+        }
     }
 }

@@ -1,0 +1,312 @@
+//! Ready-queue ordering: the online runtime estimator and the priority
+//! score behind [`QueuePolicy`](crate::rt::QueuePolicy).
+//!
+//! # Design sketch
+//!
+//! Both executors keep *per-worker* ready queues (the DES its
+//! `(avail, inst, task)` deques, the engine its mutex-guarded job
+//! deques). A queue policy decides which *ready* entry a worker runs
+//! next; it never changes which tasks run or what they compute, only
+//! their order, so every policy is oracle-identical by construction.
+//!
+//! The priority policy is the classic estimator-backed scheme: a
+//! min-heap keyed on `base_priority + est_runtime·weight − age·decay`,
+//! with starvation decay. Concretely here:
+//!
+//! * **Estimation.** Leaf EDTs are classed by their plan node (one
+//!   class per kernel statement group). Each class keeps a P² streaming
+//!   median (Jain & Chlamtac 1985) of observed `Done − Start`
+//!   durations: five markers whose heights approximate the 0/25/50/75/
+//!   100th percentiles, nudged by parabolic (or, when that would break
+//!   monotonicity, linear) interpolation on every observation — O(1)
+//!   space and time per sample, no buffering of the duration stream.
+//! * **Base priority.** A Specx-style static hint derived from the
+//!   task's schedule position: `base = −depth·est`, where `depth` is
+//!   the outermost tag coordinate — the sequential (dependence-
+//!   carrying) band of the affine schedules here. Every schedule level
+//!   a task sits deeper buys it one estimated runtime of head start,
+//!   so workers advance the dependence frontier instead of draining
+//!   wavefronts breadth-first. On a block-placed skewed workload this
+//!   is what keeps downstream nodes fed: the deepest ready tile is the
+//!   one whose completion cascades across the node boundary.
+//! * **Scoring.** `score = base + est·WEIGHT − age·DECAY`, *lower runs
+//!   first*: depth-first across the schedule, shortest-estimated-job-
+//!   first among equal-depth classes, and a task's score falls the
+//!   longer it sits ready, so no shape starves — a shallow tile
+//!   overtakes a tile `d` levels deeper after waiting `d` estimated
+//!   runtimes. Control tasks (STARTUP/PRESCRIBER/SHUTDOWN) carry no
+//!   class and score as `est = 0`; classes with no completed sample
+//!   yet also estimate 0, so cold classes run promptly and bootstrap
+//!   their own estimate.
+//! * **Selection.** Rather than a global binary heap, each worker scans
+//!   its own (small) ready deque for the minimum score at pop time.
+//!   Ready sets are per-worker and shallow, scores are age-dependent
+//!   (a heap keyed at push time would go stale), and the DES needs a
+//!   deterministic tie-break — the scan takes the front-most of equal
+//!   scores, which a heap would not guarantee.
+//!
+//! The historical pop (QueuePolicy::Fifo) takes the newest ready entry
+//! — LIFO chases whatever the *last* completion released, which is
+//! depth-seeking only by accident. The priority score seeks depth
+//! systematically: when the chase stalls (the last release was shallow
+//! work), the scan still runs the deepest ready tile in the deque.
+//! That gap is what the skewed-LUD acceptance test measures.
+
+/// Weight on the estimated runtime in the priority score.
+pub const WEIGHT: f64 = 1.0;
+/// Decay per nanosecond of ready-age (starvation protection): once a
+/// task has waited as long as another's estimate, they tie.
+pub const DECAY: f64 = 1.0;
+
+/// P² streaming median (Jain & Chlamtac): a constant-space estimate of
+/// the running median, exact for the first five observations.
+#[derive(Debug, Clone)]
+pub struct P2Median {
+    /// Marker heights; `q[2]` estimates the median once five
+    /// observations are in (before that, the first `count` slots hold
+    /// the raw observations).
+    q: [f64; 5],
+    /// Marker positions (1-based ranks, as in the paper).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    count: u64,
+}
+
+impl Default for P2Median {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl P2Median {
+    pub fn new() -> P2Median {
+        P2Median {
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.5, 3.0, 4.5, 5.0],
+            count: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if self.count < 5 {
+            self.q[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.q.sort_by(|a, b| a.total_cmp(b));
+            }
+            return;
+        }
+        self.count += 1;
+        // locate the marker cell containing x, extending the extremes
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && self.q[k + 1] <= x {
+                k += 1;
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        const DN: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+        for i in 0..5 {
+            self.np[i] += DN[i];
+        }
+        // nudge the interior markers toward their desired positions;
+        // the position invariant n[i-1] < n[i] keeps every denominator
+        // below nonzero
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let s = d.signum();
+                let qp = self.parabolic(i, s);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, s)
+                };
+                self.n[i] += s;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + s / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + s * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current median estimate; `None` before the first observation,
+    /// the exact median up to five observations, the P² marker after.
+    pub fn estimate(&self) -> Option<f64> {
+        match self.count {
+            0 => None,
+            c @ 1..=4 => {
+                let c = c as usize;
+                let mut buf = [0.0; 4];
+                buf[..c].copy_from_slice(&self.q[..c]);
+                let buf = &mut buf[..c];
+                buf.sort_by(|a, b| a.total_cmp(b));
+                Some(if c % 2 == 1 {
+                    buf[c / 2]
+                } else {
+                    (buf[c / 2 - 1] + buf[c / 2]) / 2.0
+                })
+            }
+            _ => Some(self.q[2]),
+        }
+    }
+}
+
+/// Per-kernel-class runtime estimator: one [`P2Median`] per class
+/// (classes are plan-node ids, so the vector stays tiny), folded into
+/// the priority score by [`RuntimeEstimator::score`].
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeEstimator {
+    classes: Vec<P2Median>,
+}
+
+impl RuntimeEstimator {
+    pub fn new() -> RuntimeEstimator {
+        RuntimeEstimator::default()
+    }
+
+    /// Feed one observed `Done − Start` duration for `class`.
+    pub fn observe(&mut self, class: usize, dur_ns: f64) {
+        if class >= self.classes.len() {
+            self.classes.resize_with(class + 1, P2Median::new);
+        }
+        self.classes[class].observe(dur_ns);
+    }
+
+    /// Median runtime estimate for `class` in ns; 0.0 for classes with
+    /// no completed sample yet (cold classes run early and bootstrap).
+    pub fn estimate(&self, class: usize) -> f64 {
+        self.classes
+            .get(class)
+            .and_then(P2Median::estimate)
+            .unwrap_or(0.0)
+    }
+
+    /// Priority score of a ready task — **lower runs first**:
+    /// `−depth·est + est·WEIGHT − age·DECAY`. `class` is `None` for
+    /// control tasks (no runtime class, est = 0); `depth` is the
+    /// task's outermost tag coordinate (0 for control tasks) — each
+    /// schedule level buys one estimated runtime of head start;
+    /// `age_ns` is how long the task has been ready — the starvation
+    /// decay that eventually lifts any waiting task to the front.
+    pub fn score(&self, class: Option<usize>, depth: i64, age_ns: f64) -> f64 {
+        let est = class.map_or(0.0, |c| self.estimate(c));
+        est * (WEIGHT - depth as f64) - age_ns * DECAY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_median_below_five_observations() {
+        let mut m = P2Median::new();
+        assert_eq!(m.estimate(), None);
+        m.observe(10.0);
+        assert_eq!(m.estimate(), Some(10.0));
+        m.observe(2.0);
+        assert_eq!(m.estimate(), Some(6.0)); // (2 + 10) / 2
+        m.observe(7.0);
+        assert_eq!(m.estimate(), Some(7.0));
+        m.observe(1.0);
+        assert_eq!(m.estimate(), Some(4.5)); // (2 + 7) / 2
+        m.observe(100.0);
+        assert_eq!(m.estimate(), Some(7.0)); // 5th lands in the markers
+    }
+
+    #[test]
+    fn tracks_the_median_of_a_pseudo_random_stream() {
+        // xorshift values uniform in [0, 1000): true median ~500
+        let mut m = P2Median::new();
+        let mut x = 0x243F6A8885A308D3u64;
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for _ in 0..10_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = (x % 1000) as f64;
+            lo = lo.min(v);
+            hi = hi.max(v);
+            m.observe(v);
+        }
+        let est = m.estimate().unwrap();
+        assert!(
+            (400.0..=600.0).contains(&est),
+            "median estimate {est} strayed from ~500"
+        );
+        assert!(lo <= est && est <= hi, "estimate outside observed range");
+        assert_eq!(m.count(), 10_000);
+    }
+
+    #[test]
+    fn constant_stream_estimates_the_constant() {
+        let mut m = P2Median::new();
+        for _ in 0..100 {
+            m.observe(42.0);
+        }
+        assert_eq!(m.estimate(), Some(42.0));
+    }
+
+    #[test]
+    fn estimator_prefers_shorter_classes_until_aging_flips_it() {
+        let mut e = RuntimeEstimator::new();
+        for _ in 0..8 {
+            e.observe(0, 100_000.0); // long kernel class
+            e.observe(1, 5_000.0); // short kernel class
+        }
+        // equal depth: shortest-estimated-job-first
+        assert!(e.score(Some(1), 0, 0.0) < e.score(Some(0), 0, 0.0));
+        // starvation decay: a long task left ready long enough
+        // overtakes a fresh short one
+        assert!(e.score(Some(0), 0, 200_000.0) < e.score(Some(1), 0, 0.0));
+    }
+
+    #[test]
+    fn depth_buys_one_estimated_runtime_per_level() {
+        let mut e = RuntimeEstimator::new();
+        for _ in 0..8 {
+            e.observe(0, 10_000.0);
+        }
+        // deeper schedule coordinate runs first at equal age
+        assert!(e.score(Some(0), 3, 0.0) < e.score(Some(0), 2, 0.0));
+        // the starvation escape: a shallow task one level up overtakes
+        // after waiting one estimated runtime
+        assert!(e.score(Some(0), 2, 10_000.1) < e.score(Some(0), 3, 0.0));
+        assert!(e.score(Some(0), 2, 9_999.9) > e.score(Some(0), 3, 0.0));
+    }
+
+    #[test]
+    fn unseen_classes_score_as_zero_estimate() {
+        let e = RuntimeEstimator::new();
+        assert_eq!(e.estimate(42), 0.0);
+        assert_eq!(e.score(Some(42), 5, 10.0), e.score(None, 0, 10.0));
+    }
+}

@@ -47,7 +47,7 @@
 //! runtimes; the trace makes one *execution* of such a program a
 //! first-class object that can be audited and re-priced.
 
-use super::config::{Backend, ConfigEcho, ExecConfig, LeafSpec};
+use super::config::{Backend, ConfigEcho, ExecConfig, LeafSpec, QueuePolicy};
 use super::{RunReport, RuntimeKind};
 use crate::exec::plan::Plan;
 use crate::ral::MetricsSnapshot;
@@ -387,6 +387,9 @@ impl Backend for ReplayBackend {
                 .map(|p| p.name())
                 .unwrap_or("hash"),
             steal: if c.steal == "remote-ready" { "remote-ready" } else { "never" },
+            queue_policy: QueuePolicy::parse(&c.queue_policy)
+                .map(|q| q.name())
+                .unwrap_or("fifo"),
             // traces are DES captures; the DES charges its own link model
             // and never runs a shard transport
             transport: "inproc",

@@ -33,7 +33,7 @@ use super::leaf_cost;
 use super::trace::{Acq, EdtId, TaskKind, TraceEvent, TraceMode};
 use crate::exec::plan::{ArenaBody, Plan};
 use crate::ral::{DepMode, MetricsSnapshot, TagKey};
-use crate::rt::StealPolicy;
+use crate::rt::{QueuePolicy, RuntimeEstimator, StealPolicy};
 use crate::space::placement::Topology;
 use crate::space::DataPlane;
 use std::cmp::Reverse;
@@ -157,6 +157,14 @@ struct Des<'a> {
     costs: &'a CostModel,
     numa_pinned: bool,
     steal_policy: StealPolicy,
+    /// Ready-queue ordering for own-deque pops ([`QueuePolicy`]);
+    /// victim and migration pops stay FIFO-front regardless — thieves
+    /// take the oldest entry, as in the real pool.
+    queue: QueuePolicy,
+    /// Online per-kernel-class runtime estimator behind
+    /// [`QueuePolicy::Priority`] (classes are leaf plan-node ids), fed
+    /// from completed leaf durations in virtual time.
+    est: RuntimeEstimator,
     /// Node-pinned scheduling active: space plane, multi-node topology,
     /// at least one worker per node. False degrades to the flat
     /// single-scheduler pool (bit-identical to pre-steal-policy
@@ -327,21 +335,111 @@ impl<'a> Des<'a> {
             if matches!(self.plan.node(*node).body, ArenaBody::Leaf(_)))
     }
 
-    /// Find work available at time `now`. Own deque first, then stealing
-    /// from victims on the same node; under `RemoteReady` a worker whose
-    /// node has no local work at all — neither ready nor pending — may
-    /// additionally claim a ready leaf EDT from another node's deque.
-    /// Returns the task + instance + acquisition cost + kind, or the
-    /// earliest future local availability, or None (truly idle).
-    fn find_task(&mut self, w: usize, now: u64) -> FindResult {
-        let mut earliest: Option<u64> = None;
-        if let Some(&(avail, _, _)) = self.deques[w].back() {
-            if avail <= now {
-                let (_, inst, t) = self.deques[w].pop_back().unwrap();
-                return FindResult::Task(t, inst, 0.0, Acq::Own);
+    /// Priority inputs of a task: leaf WORKERs are classed by their
+    /// plan node (one estimator class per kernel statement group) with
+    /// their outermost tag coordinate as schedule depth — the
+    /// sequential band of the affine schedules here, so a larger value
+    /// means further down the dependence chain. Control tasks carry
+    /// neither (class `None`, depth 0).
+    fn prio_key(&self, task: &STask) -> (Option<usize>, i64) {
+        match task {
+            STask::Worker { node, coords, .. }
+                if matches!(self.plan.node(*node).body, ArenaBody::Leaf(_)) =>
+            {
+                (Some(*node as usize), coords.first().copied().unwrap_or(0))
             }
-            earliest = Some(avail);
+            _ => (None, 0),
         }
+    }
+
+    /// Static dependence-order key for [`QueuePolicy::CriticalPath`]:
+    /// control tasks first (they unlock parallelism), then the deepest
+    /// leaf in schedule order — the lexicographically largest ready tag
+    /// is furthest down the carried-dependence chain, and running it
+    /// first advances the frontier that releases downstream work.
+    fn cp_key(task: &STask) -> (u8, u32, &[i64]) {
+        match task {
+            STask::Startup { node, prefix, .. } => (0, *node, prefix),
+            STask::Prescriber { node, coords, .. } => (0, *node, coords),
+            STask::Shutdown { scope } => (0, *scope as u32, &[]),
+            STask::Worker { node, coords, .. } => (1, *node, coords),
+        }
+    }
+
+    /// The entry of `w`'s own deque the configured policy runs next,
+    /// among those available at `now` (`None` when none are ready).
+    ///
+    /// `Fifo` takes the *newest* ready entry — the back whenever the
+    /// back is ready, i.e. the historical LIFO-local pop — but, unlike
+    /// the pre-fix scheduler that consulted only `back()`, it still
+    /// finds ready work sitting deeper in the deque when the back
+    /// entry's stamp is pending. The ordered policies scan all ready
+    /// entries and take the minimum key; ties go to the front-most
+    /// entry, keeping selection deterministic.
+    fn select_own(&self, w: usize, now: u64) -> Option<usize> {
+        let dq = &self.deques[w];
+        match self.queue {
+            QueuePolicy::Fifo => dq.iter().rposition(|&(avail, _, _)| avail <= now),
+            QueuePolicy::CriticalPath => {
+                // min rank (control first), then max (node, coords):
+                // the deepest ready leaf in schedule order
+                let mut best: Option<(usize, (u8, u32, &[i64]))> = None;
+                for (i, (avail, _, t)) in dq.iter().enumerate() {
+                    if *avail > now {
+                        continue;
+                    }
+                    let (rank, node, coords) = Self::cp_key(t);
+                    let better = match best {
+                        Some((_, (br, bn, bc))) => {
+                            rank < br || (rank == br && (node, coords) > (bn, bc))
+                        }
+                        None => true,
+                    };
+                    if better {
+                        best = Some((i, (rank, node, coords)));
+                    }
+                }
+                best.map(|(i, _)| i)
+            }
+            QueuePolicy::Priority => {
+                let mut best: Option<(usize, f64)> = None;
+                for (i, (avail, _, t)) in dq.iter().enumerate() {
+                    if *avail > now {
+                        continue;
+                    }
+                    let (class, depth) = self.prio_key(t);
+                    let age = (now - avail) as f64;
+                    let score = self.est.score(class, depth, age);
+                    let better = match best {
+                        Some((_, b)) => score < b,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((i, score));
+                    }
+                }
+                best.map(|(i, _)| i)
+            }
+        }
+    }
+
+    /// Find work available at time `now`. Own deque first (ordered by
+    /// the queue policy), then stealing from victims on the same node;
+    /// under `RemoteReady` a worker whose node has no local work at all
+    /// — neither ready nor pending — may additionally claim a ready
+    /// leaf EDT from another node's deque. Returns the task + instance
+    /// + acquisition cost + kind, or the earliest future local
+    /// availability, or None (truly idle).
+    fn find_task(&mut self, w: usize, now: u64) -> FindResult {
+        if let Some(i) = self.select_own(w, now) {
+            let (_, inst, t) = self.deques[w].remove(i).unwrap();
+            return FindResult::Task(t, inst, 0.0, Acq::Own);
+        }
+        // nothing of our own is ready: the earliest pending own stamp
+        // bounds the wait (the pre-fix scheduler looked at the back
+        // only — the newest push — and so both missed ready work
+        // deeper in the deque and over-waited on the back's stamp)
+        let mut earliest = self.deques[w].iter().map(|&(avail, _, _)| avail).min();
         let my_node = self.worker_node[w];
         let start = (self.rand() as usize) % self.threads;
         for k in 0..self.threads {
@@ -698,6 +796,11 @@ impl<'a> Des<'a> {
                             let at = t0 + self.ns(dur);
                             let extra = self.complete_worker(key, scope, at, &mut spawned);
                             dur += extra;
+                            if self.queue == QueuePolicy::Priority {
+                                // feed the online estimate with the
+                                // leaf's full Done − Start duration
+                                self.est.observe(node as usize, dur);
+                            }
                         }
                         ArenaBody::Nested(child) => {
                             dur += c.spawn_ns;
@@ -1049,6 +1152,7 @@ pub fn simulate_cell(
     numa_pinned: bool,
     total_flops: f64,
     steal_policy: StealPolicy,
+    queue: QueuePolicy,
     arena: &mut DesArena,
 ) -> SimReport {
     des_exec_traced_in(
@@ -1062,6 +1166,7 @@ pub fn simulate_cell(
         numa_pinned,
         total_flops,
         steal_policy,
+        queue,
         TraceMode::Off,
         arena,
     )
@@ -1090,6 +1195,7 @@ pub fn simulate(
         numa_pinned,
         total_flops,
         StealPolicy::Never,
+        QueuePolicy::Fifo,
     )
 }
 
@@ -1106,6 +1212,7 @@ pub(crate) fn des_exec(
     numa_pinned: bool,
     total_flops: f64,
     steal_policy: StealPolicy,
+    queue: QueuePolicy,
 ) -> SimReport {
     des_exec_traced(
         plan,
@@ -1118,6 +1225,7 @@ pub(crate) fn des_exec(
         numa_pinned,
         total_flops,
         steal_policy,
+        queue,
         TraceMode::Off,
     )
     .0
@@ -1145,6 +1253,7 @@ pub(crate) fn des_exec_traced(
     numa_pinned: bool,
     total_flops: f64,
     steal_policy: StealPolicy,
+    queue: QueuePolicy,
     trace: TraceMode,
 ) -> (SimReport, Vec<TraceEvent>) {
     des_exec_traced_in(
@@ -1158,6 +1267,7 @@ pub(crate) fn des_exec_traced(
         numa_pinned,
         total_flops,
         steal_policy,
+        queue,
         trace,
         &mut DesArena::default(),
     )
@@ -1178,6 +1288,7 @@ fn des_exec_traced_in(
     numa_pinned: bool,
     total_flops: f64,
     steal_policy: StealPolicy,
+    queue: QueuePolicy,
     trace: TraceMode,
     arena: &mut DesArena,
 ) -> (SimReport, Vec<TraceEvent>) {
@@ -1209,6 +1320,8 @@ fn des_exec_traced_in(
         costs,
         numa_pinned,
         steal_policy,
+        queue,
+        est: RuntimeEstimator::new(),
         sched_nodes,
         worker_node,
         node_workers,
@@ -1435,6 +1548,7 @@ impl crate::rt::Backend for DesBackend {
                     cfg.numa_pinned,
                     leaf.total_flops,
                     cfg.steal,
+                    cfg.queue,
                     cfg.trace,
                 );
                 let trace = (cfg.trace != TraceMode::Off).then(|| {
@@ -1544,6 +1658,7 @@ mod tests {
             true,
             flops,
             StealPolicy::Never,
+            QueuePolicy::Fifo,
         )
     }
 
@@ -1643,6 +1758,7 @@ mod tests {
                 true,
                 inst.total_flops,
                 StealPolicy::RemoteReady,
+                QueuePolicy::Fifo,
                 tm,
             )
         };
@@ -1694,6 +1810,7 @@ mod tests {
                 true,
                 inst.total_flops,
                 steal,
+                QueuePolicy::Fifo,
             )
         };
         let never = run(StealPolicy::Never);
@@ -1743,6 +1860,7 @@ mod tests {
                 true,
                 inst.total_flops,
                 steal,
+                QueuePolicy::Fifo,
             );
             let reused = simulate_cell(
                 &plan,
@@ -1755,6 +1873,7 @@ mod tests {
                 true,
                 inst.total_flops,
                 steal,
+                QueuePolicy::Fifo,
                 &mut arena,
             );
             assert_eq!(fresh.seconds.to_bits(), reused.seconds.to_bits(), "{name}");
@@ -1805,9 +1924,210 @@ mod tests {
                     true,
                     inst.total_flops,
                     StealPolicy::RemoteReady,
+                    QueuePolicy::Fifo,
                 );
                 assert!(r.seconds > 0.0, "{mode:?} {p:?}");
                 assert_eq!(r.space_puts, r.space_frees, "{mode:?} {p:?}: leak");
+            }
+        }
+    }
+
+    /// A two-worker flat-pool [`Des`] with empty scheduler state, for
+    /// driving [`Des::find_task`] against hand-built deque shapes.
+    fn bare_des<'a>(
+        plan: &'a Plan,
+        topo: &'a Topology,
+        machine: &'a Machine,
+        costs: &'a CostModel,
+        queue: QueuePolicy,
+    ) -> Des<'a> {
+        Des {
+            plan,
+            mode: DepMode::CncDep,
+            plane: DataPlane::Shared,
+            topo,
+            threads: 2,
+            machine,
+            costs,
+            numa_pinned: true,
+            steal_policy: StealPolicy::Never,
+            queue,
+            est: RuntimeEstimator::new(),
+            sched_nodes: false,
+            worker_node: vec![0; 2],
+            node_workers: vec![vec![0, 1]],
+            route_rr: vec![0],
+            table: HashMap::new(),
+            pendings: Vec::new(),
+            scopes: Vec::new(),
+            space_items: HashMap::new(),
+            space_live: 0,
+            space_peak: 0,
+            space_puts: 0,
+            space_gets: 0,
+            space_frees: 0,
+            space_local_gets: 0,
+            space_remote_gets: 0,
+            space_remote_bytes: 0,
+            node_live: vec![0],
+            node_peak: vec![0],
+            deques: vec![VecDeque::new(), VecDeque::new()],
+            heap: BinaryHeap::new(),
+            free_at: vec![0; 2],
+            idle: vec![false; 2],
+            seq: 0,
+            rng: 0x243F6A8885A308D3,
+            active_leaf_ends: BinaryHeap::new(),
+            end_time: 0,
+            completed: false,
+            tasks: 0,
+            steals: 0,
+            failed_gets: 0,
+            stolen_edts: 0,
+            steal_bytes: 0,
+            work_ns: 0.0,
+            busy_ns: 0.0,
+            tracer: None,
+            next_inst: 0,
+            cur_inst: 0,
+        }
+    }
+
+    /// The own-deque ready-work miss this PR leads with: deque pushes
+    /// arrive in avail order only per spawner, so the front can be ready
+    /// while the back is pending. The pre-fix scheduler consulted only
+    /// `back()` and either paid `steal_ns` for a victim's task or
+    /// reported `WaitUntil` with runnable work in hand; the fixed scan
+    /// takes the ready front entry from the worker's own deque for free.
+    #[test]
+    fn own_deque_front_ready_back_pending_is_taken_without_stealing() {
+        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let topo = Topology::single();
+        let machine = Machine::default();
+        let costs = CostModel::default();
+        let mut d = bare_des(&plan, &topo, &machine, &costs, QueuePolicy::Fifo);
+        // worker 0: front ready at t=10, back pending until t=100
+        d.deques[0].push_back((10, 1, STask::Shutdown { scope: 0 }));
+        d.deques[0].push_back((100, 2, STask::Shutdown { scope: 1 }));
+        // worker 1 holds the ready victim entry the pre-fix scheduler
+        // spuriously stole
+        d.deques[1].push_back((0, 3, STask::Shutdown { scope: 2 }));
+        match d.find_task(0, 50) {
+            FindResult::Task(_, inst, cost, acq) => {
+                assert_eq!(inst, 1, "must run the own ready front entry");
+                assert_eq!(cost, 0.0, "own-deque work costs no steal");
+                assert_eq!(acq, Acq::Own);
+            }
+            FindResult::WaitUntil(t) => panic!("spurious WaitUntil({t}) with ready work in hand"),
+            FindResult::Idle => panic!("spurious Idle with ready work in hand"),
+        }
+        assert_eq!(d.steals, 0, "no spurious steal");
+        assert_eq!(d.deques[1].len(), 1, "victim deque untouched");
+
+        // without a victim the pre-fix scheduler over-waited on the
+        // back's stamp; post-fix the front runs now and only the
+        // genuinely pending back entry is waited on
+        let mut d = bare_des(&plan, &topo, &machine, &costs, QueuePolicy::Fifo);
+        d.deques[0].push_back((10, 1, STask::Shutdown { scope: 0 }));
+        d.deques[0].push_back((100, 2, STask::Shutdown { scope: 1 }));
+        assert!(matches!(d.find_task(0, 50), FindResult::Task(_, 1, _, Acq::Own)));
+        match d.find_task(0, 50) {
+            FindResult::WaitUntil(t) => assert_eq!(t, 100, "wait on the real pending stamp"),
+            _ => panic!("back entry is still pending at t=50"),
+        }
+    }
+
+    /// The acceptance criterion: on the skewed LUD under block placement
+    /// (downstream nodes own only the small deep wavefronts) the
+    /// priority policy's depth-seeking score releases cross-node work
+    /// earlier than the historical LIFO pop and strictly shortens the
+    /// DES makespan — while every oracle counter stays identical, since
+    /// a queue policy reorders ready work but never changes what runs.
+    #[test]
+    fn priority_beats_fifo_on_skewed_lud_at_equal_oracle_counters() {
+        use crate::space::placement::Placement;
+        let inst = (by_name("LUD").unwrap().build)(Size::Small);
+        let plan = inst.plan().unwrap();
+        let topo = Topology::for_plan(&plan, 4, Placement::Block);
+        let run = |q: QueuePolicy| {
+            des_exec(
+                &plan,
+                DepMode::CncDep,
+                DataPlane::Space,
+                &topo,
+                8,
+                &Machine::default(),
+                &CostModel::default(),
+                true,
+                inst.total_flops,
+                StealPolicy::Never,
+                q,
+            )
+        };
+        let fifo = run(QueuePolicy::Fifo);
+        let prio = run(QueuePolicy::Priority);
+        assert_eq!(fifo.tasks, prio.tasks);
+        assert_eq!(fifo.space_puts, prio.space_puts);
+        assert_eq!(fifo.space_gets, prio.space_gets);
+        assert_eq!(fifo.space_frees, prio.space_frees);
+        assert_eq!(fifo.space_remote_gets, prio.space_remote_gets);
+        assert_eq!(fifo.space_remote_bytes, prio.space_remote_bytes);
+        assert_eq!(fifo.failed_gets, prio.failed_gets);
+        assert!(
+            prio.seconds < fifo.seconds,
+            "priority must pipeline the skewed wavefronts: prio {} vs fifo {}",
+            prio.seconds,
+            fifo.seconds
+        );
+        // the estimator updates in deterministic simulation order, so
+        // priority runs are as reproducible as fifo ones
+        let again = run(QueuePolicy::Priority);
+        assert_eq!(again.seconds.to_bits(), prio.seconds.to_bits());
+        assert_eq!(again.tasks, prio.tasks);
+    }
+
+    /// Every queue policy completes every mode on a multi-node topology
+    /// with stealing on, at identical oracle counters (policies reorder
+    /// ready work; the dependence machinery alone decides what runs).
+    #[test]
+    fn queue_policies_are_oracle_identical_under_stealing() {
+        use crate::space::placement::Placement;
+        let inst = (by_name("JAC-2D-5P").unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let topo = Topology::for_plan(&plan, 2, Placement::Block);
+        let run = |q: QueuePolicy, mode: DepMode| {
+            des_exec(
+                &plan,
+                mode,
+                DataPlane::Space,
+                &topo,
+                4,
+                &Machine::default(),
+                &CostModel::default(),
+                true,
+                inst.total_flops,
+                StealPolicy::RemoteReady,
+                q,
+            )
+        };
+        for mode in [DepMode::CncBlock, DepMode::CncAsync, DepMode::CncDep, DepMode::Swarm, DepMode::Ocr] {
+            let base = run(QueuePolicy::Fifo, mode);
+            for q in [QueuePolicy::CriticalPath, QueuePolicy::Priority] {
+                let r = run(q, mode);
+                assert!(r.seconds > 0.0, "{mode:?} {q:?}");
+                // every mode: each datablock is put and reclaimed
+                // exactly once no matter the order
+                assert_eq!(r.space_puts, base.space_puts, "{mode:?} {q:?}");
+                assert_eq!(r.space_frees, base.space_frees, "{mode:?} {q:?}");
+                // the prescribed modes never retry, so their task and
+                // get totals are order-invariant too (the speculative
+                // modes re-attempt gets on a schedule-dependent count)
+                if matches!(mode, DepMode::CncDep | DepMode::Ocr) {
+                    assert_eq!(r.tasks, base.tasks, "{mode:?} {q:?}");
+                    assert_eq!(r.space_gets, base.space_gets, "{mode:?} {q:?}");
+                    assert_eq!(r.failed_gets, base.failed_gets, "{mode:?} {q:?}");
+                }
             }
         }
     }

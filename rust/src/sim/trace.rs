@@ -206,6 +206,9 @@ pub struct TraceConfig {
     pub nodes: u64,
     pub placement: String,
     pub steal: String,
+    /// Ready-queue policy of the capturing run; documents older than
+    /// the policy knob parse as `"fifo"` (the historical pop).
+    pub queue_policy: String,
     pub numa_pinned: bool,
     pub trace: String,
 }
@@ -220,6 +223,7 @@ impl TraceConfig {
             nodes: e.nodes as u64,
             placement: e.placement.to_string(),
             steal: e.steal.to_string(),
+            queue_policy: e.queue_policy.to_string(),
             numa_pinned: e.numa_pinned,
             trace: e.trace.to_string(),
         }
@@ -360,7 +364,8 @@ impl Trace {
         let mut out = format!(
             "{{\"schema\":{},\"mode\":{},\"workload\":{},\"total_flops\":{},\
              \"config\":{{\"backend\":{},\"runtime\":{},\"plane\":{},\"threads\":{},\
-             \"nodes\":{},\"placement\":{},\"steal\":{},\"numa_pinned\":{},\"trace\":{}}},\
+             \"nodes\":{},\"placement\":{},\"steal\":{},\"queue_policy\":{},\
+             \"numa_pinned\":{},\"trace\":{}}},\
              \"cost\":{{\"steal_ns\":{},\"space_get_ns\":{},\"space_put_ns\":{},\
              \"space_copy_ns_per_byte\":{},\"link_latency_ns\":{},\"link_bw_ns_per_byte\":{}}},\
              \"report\":{}}}\n",
@@ -375,6 +380,7 @@ impl Trace {
             c.nodes,
             jstr(&c.placement),
             jstr(&c.steal),
+            jstr(&c.queue_policy),
             c.numa_pinned,
             jstr(&c.trace),
             self.cost.steal_ns,
@@ -726,6 +732,12 @@ impl Trace {
                 nodes: cfg.need("nodes")?.u64_()?,
                 placement: cfg.need("placement")?.str_()?.to_string(),
                 steal: cfg.need("steal")?.str_()?.to_string(),
+                // pre-policy documents carry no queue_policy: they were
+                // captured under the historical fifo pop
+                queue_policy: match cfg.get("queue_policy") {
+                    Some(v) => v.str_()?.to_string(),
+                    None => "fifo".to_string(),
+                },
                 numa_pinned: cfg.need("numa_pinned")?.bool_()?,
                 trace: cfg.need("trace")?.str_()?.to_string(),
             },
@@ -1177,6 +1189,7 @@ mod tests {
                 nodes: 2,
                 placement: "block".into(),
                 steal: "remote-ready".into(),
+                queue_policy: "fifo".into(),
                 numa_pinned: true,
                 trace: "full".into(),
             },

@@ -147,6 +147,7 @@ fn run_cell(c: &ResolvedCell, plan: &Plan, total_flops: f64, arena: &mut DesAren
         c.cfg.numa_pinned,
         total_flops,
         c.cfg.steal,
+        c.cfg.queue,
         arena,
     );
     SweepRow {
@@ -165,7 +166,7 @@ fn run_cell(c: &ResolvedCell, plan: &Plan, total_flops: f64, arena: &mut DesAren
 
 fn config_json(e: &ConfigEcho) -> String {
     format!(
-        "{{\"backend\":{},\"runtime\":{},\"plane\":{},\"threads\":{},\"nodes\":{},\"placement\":{},\"steal\":{},\"transport\":{},\"numa_pinned\":{}}}",
+        "{{\"backend\":{},\"runtime\":{},\"plane\":{},\"threads\":{},\"nodes\":{},\"placement\":{},\"steal\":{},\"queue_policy\":{},\"transport\":{},\"numa_pinned\":{}}}",
         jstr(e.backend),
         jstr(e.runtime),
         jstr(e.plane),
@@ -173,6 +174,7 @@ fn config_json(e: &ConfigEcho) -> String {
         e.nodes,
         jstr(e.placement),
         jstr(e.steal),
+        jstr(e.queue_policy),
         jstr(e.transport),
         e.numa_pinned,
     )

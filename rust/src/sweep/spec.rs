@@ -526,6 +526,7 @@ mod tests {
         s.add_axis_flag("size=tiny").unwrap();
         s.add_axis_flag("nodes=2").unwrap();
         s.add_axis_flag("steal=remote-ready").unwrap();
+        s.add_axis_flag("queue-policy=priority").unwrap();
         s.add_axis_flag("link-latency=3000").unwrap();
         let base = ExecConfig::new();
         let cells = resolve_cells(&s, &base, "JAC-2D-5P", Size::Small).unwrap();
@@ -534,6 +535,7 @@ mod tests {
         assert_eq!(c.workload, "LUD");
         assert_eq!(c.size, Size::Tiny);
         assert_eq!(c.cfg.nodes, 2);
+        assert_eq!(c.cfg.queue, crate::rt::QueuePolicy::Priority);
         assert_eq!(c.cfg.cost.link_latency_ns, 3000.0);
     }
 
@@ -545,6 +547,7 @@ mod tests {
             "workload=NOPE",
             "size=huge",
             "steal=sometimes",
+            "queue-policy=lifo",
             "trace=full",
             "runtime=omp",
         ] {

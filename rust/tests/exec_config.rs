@@ -13,7 +13,7 @@
 use std::sync::Arc;
 use tale3::exec::ArrayStore;
 use tale3::ral::DepMode;
-use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, RuntimeKind, StealPolicy};
+use tale3::rt::{self, BackendKind, ExecConfig, LeafSpec, QueuePolicy, RuntimeKind, StealPolicy};
 use tale3::sim::SimReport;
 use tale3::space::{DataPlane, Placement, Topology, TransportKind};
 use tale3::workloads::{by_name, Instance, Size};
@@ -39,6 +39,7 @@ fn builder_defaults_equal_old_implicit_defaults() {
     assert_eq!(cfg.threads, 2);
     assert_eq!(cfg.steal, StealPolicy::Never);
     assert_eq!(cfg.transport, TransportKind::InProc);
+    assert_eq!(cfg.queue, QueuePolicy::Fifo);
     assert!(cfg.numa_pinned);
     // the resolved single-node topology is the degenerate one the old
     // entry points used
@@ -55,6 +56,7 @@ fn builder_defaults_equal_old_implicit_defaults() {
     assert_eq!(echo.nodes, 1);
     assert_eq!(echo.steal, "never");
     assert_eq!(echo.transport, "inproc");
+    assert_eq!(echo.queue_policy, "fifo");
 }
 
 /// CLI flags → config round-trip: the exact flag set the `tale3` binary
@@ -69,6 +71,7 @@ fn cli_flags_round_trip_into_config() {
         ("placement", Some("block")),
         ("steal", Some("remote-ready")),
         ("transport", Some("channel")),
+        ("queue-policy", Some("priority")),
         ("threads", Some("8,16")), // CLI list: first entry seeds the config
         ("runtime", Some("swarm")),
         ("no-verify", None), // not a config knob
@@ -82,13 +85,14 @@ fn cli_flags_round_trip_into_config() {
     }
     assert_eq!(
         consumed,
-        vec!["plane", "nodes", "placement", "steal", "transport", "threads", "runtime"]
+        vec!["plane", "nodes", "placement", "steal", "transport", "queue-policy", "threads", "runtime"]
     );
     assert_eq!(cfg.plane, DataPlane::Space);
     assert_eq!(cfg.nodes, 4);
     assert_eq!(cfg.placement, Placement::Block);
     assert_eq!(cfg.steal, StealPolicy::RemoteReady);
     assert_eq!(cfg.transport, TransportKind::Channel);
+    assert_eq!(cfg.queue, QueuePolicy::Priority);
     assert_eq!(cfg.threads, 8);
     assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::Swarm));
     // the echo names exactly what was asked for
@@ -99,6 +103,7 @@ fn cli_flags_round_trip_into_config() {
         (echo.runtime, echo.plane, echo.nodes, echo.placement, echo.steal, echo.transport),
         ("swarm", "space", 4, "block", "remote-ready", "channel")
     );
+    assert_eq!(echo.queue_policy, "priority");
     // `--runtime all` leaves the runtime for the caller's loop
     assert!(cfg.apply_cli_flag("runtime", Some("all")).unwrap());
     assert_eq!(cfg.runtime, RuntimeKind::Edt(DepMode::Swarm));
@@ -121,6 +126,8 @@ fn invalid_config_values_are_hard_errors() {
         ("placement", "diagonal"),
         ("transport", "tcp"),
         ("transport", "mpi"),
+        ("queue-policy", "lifo"),
+        ("queue-policy", "shortest-job-first"),
         ("nodes", "many"),
         ("threads", "fast"),
         ("runtime", "tbb"),
@@ -141,14 +148,15 @@ fn invalid_config_values_are_hard_errors() {
     }
     // a config flag with no value at all is also an error
     for name in [
-        "steal", "trace", "plane", "placement", "transport", "nodes", "threads", "runtime",
-        "tenants", "quota-bytes", "arrivals",
+        "steal", "trace", "plane", "placement", "transport", "queue-policy", "nodes", "threads",
+        "runtime", "tenants", "quota-bytes", "arrivals",
     ] {
         assert!(cfg.apply_cli_flag(name, None).is_err(), "--{name} needs a value");
     }
     // nothing leaked into the config from the rejected flags
     assert_eq!(cfg.steal, StealPolicy::Never);
     assert_eq!(cfg.trace, TraceMode::Off);
+    assert_eq!(cfg.queue, QueuePolicy::Fifo);
     assert_eq!(cfg.plane, DataPlane::Shared);
     assert_eq!(cfg.placement, Placement::default());
     assert_eq!(cfg.transport, TransportKind::InProc);
@@ -163,9 +171,11 @@ fn invalid_config_values_are_hard_errors() {
     assert!(cfg.apply_cli_flag("steal", Some("remote-ready")).unwrap());
     assert!(cfg.apply_cli_flag("trace", Some("schedule")).unwrap());
     assert!(cfg.apply_cli_flag("transport", Some("channel")).unwrap());
+    assert!(cfg.apply_cli_flag("queue-policy", Some("critical-path")).unwrap());
     assert_eq!(cfg.steal, StealPolicy::RemoteReady);
     assert_eq!(cfg.trace, TraceMode::Schedule);
     assert_eq!(cfg.transport, TransportKind::Channel);
+    assert_eq!(cfg.queue, QueuePolicy::CriticalPath);
 }
 
 fn launch_sim(plan: &Arc<tale3::Plan>, flops: f64, cfg: &ExecConfig) -> SimReport {

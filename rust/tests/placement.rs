@@ -207,14 +207,16 @@ fn real_runtime_counts_remote_gets() {
 
 /// The bench JSON report is deterministic — two renders are
 /// byte-identical — and contains virtual-time fields only (no wall-clock
-/// timestamps, hostnames, or paths). Schema v6 carries the resolved
-/// config echo (including the shard transport), the steal counters, the
-/// per-workload `replay_verified` flag (the sharded_steal cell's trace
-/// must verbatim-replay to its own SimReport), the `irregular`
-/// section: the dynamic tuple-space family read against its sequential
-/// oracle, each cell flagged `leak_free`, and the `sweep` section: a
-/// mini capacity grid run through the parallel sweep executor, so the
-/// byte-diff also gates that executor's determinism.
+/// timestamps, hostnames, or paths). Schema v7 carries the resolved
+/// config echo (including the shard transport and the ready-queue
+/// policy), the steal counters, the per-workload `replay_verified` flag
+/// (the sharded_steal cell's trace must verbatim-replay to its own
+/// SimReport), the `irregular` section: the dynamic tuple-space family
+/// read against its sequential oracle, each cell flagged `leak_free`,
+/// the `sweep` section: a mini capacity grid run through the parallel
+/// sweep executor, so the byte-diff also gates that executor's
+/// determinism, and the `sched` section: every queue policy on the
+/// skewed LUD cell.
 #[test]
 fn bench_report_json_is_deterministic_and_virtual_only() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
@@ -225,7 +227,7 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     let a = perf_report_json(&cfg);
     let b = perf_report_json(&cfg);
     assert_eq!(a, b, "two consecutive quick runs must produce identical JSON");
-    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v6\""));
+    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v7\""));
     assert!(a.contains("\"sweep\":{\"header\":{\"schema\":\"tale3-sweep/v1\""));
     assert!(a.contains("\"config\":{\"backend\":\"des\""));
     assert!(a.contains("\"transport\":\"inproc\""));
@@ -259,13 +261,13 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     }
 }
 
-/// The v6 key set matches the committed golden file (the same list CI's
+/// The v7 key set matches the committed golden file (the same list CI's
 /// golden-file job asserts against the built artifact), so schema drift
 /// is a reviewed change, not an accident.
 #[test]
-fn bench_report_v6_keys_match_golden_file() {
+fn bench_report_v7_keys_match_golden_file() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
-    let golden = include_str!("../ci/bench-report-v6.keys");
+    let golden = include_str!("../ci/bench-report-v7.keys");
     let json = perf_report_json(&ReportConfig {
         quick: true,
         ..Default::default()
@@ -274,7 +276,7 @@ fn bench_report_v6_keys_match_golden_file() {
     for key in golden.lines().filter(|l| !l.is_empty()) {
         assert!(
             json.contains(&format!("\"{key}\":")),
-            "golden key `{key}` missing from the v6 report"
+            "golden key `{key}` missing from the v7 report"
         );
     }
     // and every quoted key in the JSON must be in the golden list
@@ -289,7 +291,7 @@ fn bench_report_v6_keys_match_golden_file() {
         if after.starts_with(':') {
             assert!(
                 golden_set.contains(token),
-                "report key `{token}` is not in ci/bench-report-v6.keys — \
+                "report key `{token}` is not in ci/bench-report-v7.keys — \
                  update the golden file deliberately"
             );
         }

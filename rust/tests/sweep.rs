@@ -71,6 +71,7 @@ fn sweep_rows_reproduce_standalone_through_rt_launch() {
             ("nodes", row.echo.nodes.to_string()),
             ("placement", row.echo.placement.to_string()),
             ("steal", row.echo.steal.to_string()),
+            ("queue-policy", row.echo.queue_policy.to_string()),
             ("transport", row.echo.transport.to_string()),
             ("link-latency", row.link_latency_ns.to_string()),
             ("link-bw", row.link_bw_ns_per_byte.to_string()),
