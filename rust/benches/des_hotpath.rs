@@ -1,0 +1,157 @@
+//! DES hot-path scoreboard — the tag-interning / fast-hashing /
+//! indexed-ready-queue optimization stack, measured against the
+//! retained pre-PR reference path.
+//!
+//! Two axes, four lanes per queue policy:
+//!
+//! * selection path: `scan` forces the PR-9 linear ready-queue scan
+//!   (`DesArena::force_scan`); `indexed` runs the lazy-invalidation
+//!   indexes of `sim::rq`;
+//! * allocation: `fresh` builds a new [`DesArena`] per cell (the
+//!   pre-arena allocation behavior); `reused` recycles one arena —
+//!   interner, dense tag table, item space, indexes — across cells.
+//!
+//! `scan+fresh` is the pre-PR baseline; `indexed+reused` is the PR hot
+//! path. The cell is repeated until the lane has simulated at least
+//! 10^7 events (tasks + space put/get/free — `sweep::sim_events`), so
+//! the printed events/sec is a steady-state number, not a startup
+//! artifact. Every lane must reproduce the baseline report bit for bit
+//! — wall time is the only thing allowed to move.
+//!
+//! Pass `quick` for the CI smoke variant (small cell, 10^5-event
+//! floor). Wall-clock numbers stay on stdout only; the deterministic
+//! virtual-time side of this comparison lives in the bench report's
+//! `throughput` section (`tale3-bench-report/v8`), which CI byte-diffs
+//! across runs.
+
+use std::time::Instant;
+use tale3::ral::DepMode;
+use tale3::rt::{QueuePolicy, StealPolicy};
+use tale3::sim::des::{simulate_cell, DesArena};
+use tale3::sim::{CostModel, Machine, SimReport};
+use tale3::space::{DataPlane, Placement, Topology};
+use tale3::sweep::sim_events;
+use tale3::workloads::{by_name, Size};
+
+struct Cell {
+    plan: std::sync::Arc<tale3::Plan>,
+    total_flops: f64,
+    topo: Topology,
+}
+
+fn build_cell(size: Size) -> Cell {
+    // LUD: skewed triangular wavefronts exercise all three policies'
+    // orderings (the Priority acceptance workload), on a sharded
+    // topology with inter-node stealing on so the victim/migration
+    // paths run too.
+    let inst = (by_name("LUD").expect("workload").build)(size);
+    let plan = inst.plan().expect("plan");
+    let topo = Topology::for_plan(&plan, 4, Placement::Block);
+    Cell { plan, total_flops: inst.total_flops, topo }
+}
+
+fn run(c: &Cell, q: QueuePolicy, arena: &mut DesArena) -> SimReport {
+    simulate_cell(
+        &c.plan,
+        DepMode::CncDep,
+        DataPlane::Space,
+        &c.topo,
+        8,
+        &Machine::default(),
+        &CostModel::default(),
+        true,
+        c.total_flops,
+        StealPolicy::RemoteReady,
+        q,
+        arena,
+    )
+}
+
+struct Lane {
+    name: &'static str,
+    force_scan: bool,
+    reuse: bool,
+}
+
+const LANES: [Lane; 4] = [
+    Lane { name: "scan+fresh", force_scan: true, reuse: false },
+    Lane { name: "scan+reused", force_scan: true, reuse: true },
+    Lane { name: "indexed+fresh", force_scan: false, reuse: false },
+    Lane { name: "indexed+reused", force_scan: false, reuse: true },
+];
+
+fn assert_identical(a: &SimReport, b: &SimReport, ctx: &str) {
+    assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{ctx}: seconds");
+    assert_eq!(a.tasks, b.tasks, "{ctx}: tasks");
+    assert_eq!(a.steals, b.steals, "{ctx}: steals");
+    assert_eq!(a.failed_gets, b.failed_gets, "{ctx}: failed_gets");
+    assert_eq!(a.space_puts, b.space_puts, "{ctx}: space_puts");
+    assert_eq!(a.space_gets, b.space_gets, "{ctx}: space_gets");
+    assert_eq!(a.space_frees, b.space_frees, "{ctx}: space_frees");
+    assert_eq!(a.node_peak_bytes, b.node_peak_bytes, "{ctx}: node_peak_bytes");
+    assert_eq!(a.stolen_edts, b.stolen_edts, "{ctx}: stolen_edts");
+    assert_eq!(a.steal_bytes, b.steal_bytes, "{ctx}: steal_bytes");
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "quick");
+    let (size, floor) = if quick {
+        (Size::Small, 100_000u64)
+    } else {
+        (Size::Paper, 10_000_000u64)
+    };
+    let cell = build_cell(size);
+
+    // size one rep, then give every lane the same rep count so the
+    // lanes do identical virtual work and rates compare directly
+    let probe = run(&cell, QueuePolicy::Fifo, &mut DesArena::new());
+    let per_cell = sim_events(&probe);
+    let reps = floor.div_ceil(per_cell).max(2);
+    println!(
+        "DES hot path on LUD ({}): {per_cell} events/cell × {reps} reps per lane",
+        if quick { "quick" } else { "paper size" }
+    );
+
+    for q in [QueuePolicy::Fifo, QueuePolicy::CriticalPath, QueuePolicy::Priority] {
+        println!("{q:?}:");
+        let mut baseline: Option<(SimReport, f64)> = None;
+        for lane in &LANES {
+            let mut shared = DesArena::new();
+            shared.force_scan(lane.force_scan);
+            let t0 = Instant::now();
+            let mut events = 0u64;
+            let mut first: Option<SimReport> = None;
+            for _ in 0..reps {
+                let r = if lane.reuse {
+                    run(&cell, q, &mut shared)
+                } else {
+                    let mut fresh = DesArena::new();
+                    fresh.force_scan(lane.force_scan);
+                    run(&cell, q, &mut fresh)
+                };
+                events += sim_events(&r);
+                if first.is_none() {
+                    first = Some(r);
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let rate = events as f64 / secs / 1e6;
+            let first = first.unwrap();
+            match &baseline {
+                None => {
+                    println!("  {:<15} {rate:>8.2}M events/s  ({events} events in {secs:.3}s)", lane.name);
+                    baseline = Some((first, rate));
+                }
+                Some((base, base_rate)) => {
+                    assert_identical(base, &first, &format!("{q:?} {}", lane.name));
+                    println!(
+                        "  {:<15} {rate:>8.2}M events/s  ({:.2}x vs scan+fresh)",
+                        lane.name,
+                        rate / base_rate
+                    );
+                }
+            }
+        }
+        println!("  bit-identity: all lanes reproduce the scan+fresh report");
+    }
+}

@@ -18,7 +18,7 @@
 
 use std::time::Instant;
 use tale3::ral::DepMode;
-use tale3::rt::StealPolicy;
+use tale3::rt::{QueuePolicy, StealPolicy};
 use tale3::sim::des::{simulate_cell, DesArena};
 use tale3::sim::{CostModel, Machine, SimReport};
 use tale3::space::{DataPlane, Placement, Topology};
@@ -66,6 +66,7 @@ fn run(c: &Cell, arena: &mut DesArena) -> SimReport {
         true,
         c.total_flops,
         c.steal,
+        QueuePolicy::Fifo,
         arena,
     )
 }

@@ -9,7 +9,7 @@
 //! (`tests/placement.rs` asserts this), so CI artifacts diff cleanly
 //! run-to-run and PR-to-PR.
 //!
-//! **Schema `tale3-bench-report/v7`:** the document opens with a `config`
+//! **Schema `tale3-bench-report/v8`:** the document opens with a `config`
 //! object — the fully-resolved [`ExecConfig`] echo every cell ran under —
 //! and each workload carries three cells side by side: the single-node
 //! space-plane baseline (`single`), the sharded topology under strict
@@ -41,8 +41,15 @@
 //! artifact records how much the priority ready queue buys over FIFO
 //! on the workload whose node boundaries it was designed to pipeline
 //! (the strict ordering itself is asserted by the DES test suite; the
-//! report records the magnitudes). CI's golden-file job asserts the v7
-//! key set is stable across runs.
+//! report records the magnitudes). v8 adds the `throughput` section —
+//! the DES hot-path gate: the LUD sched cell re-run once per
+//! [`QueuePolicy`] through both selection paths (the interned + indexed
+//! hot path and the retained `force_scan` linear-scan reference), each
+//! cell carrying its simulated event count and a `scan_identical` flag
+//! asserting the two paths produced bit-identical reports. Wall-clock
+//! events/sec deliberately stays out (the report is byte-diffed across
+//! runs); `benches/des_hotpath.rs` prints the wall-side numbers. CI's
+//! golden-file job asserts the v8 key set is stable across runs.
 
 use crate::ral::DepMode;
 use crate::rt::{
@@ -267,13 +274,14 @@ pub fn perf_report_json(cfg: &ReportConfig) -> String {
         ));
     }
     format!(
-        "{{\"schema\":\"tale3-bench-report/v7\",\"config\":{},\"workloads\":[{}],\
-         \"irregular\":[{}],\"sweep\":{},\"sched\":{}}}\n",
+        "{{\"schema\":\"tale3-bench-report/v8\",\"config\":{},\"workloads\":[{}],\
+         \"irregular\":[{}],\"sweep\":{},\"sched\":{},\"throughput\":{}}}\n",
         config_obj(cfg),
         workloads.join(","),
         irregular_cells.join(","),
         sweep_section(cfg, size),
         sched_section(cfg, size),
+        throughput_section(cfg, size),
     )
 }
 
@@ -318,6 +326,86 @@ fn sched_section(cfg: &ReportConfig, size: Size) -> String {
     format!(
         "{{\"workload\":\"LUD\",\"nodes\":{},\"placement\":\"block\",\
          \"steal\":\"never\",\"cells\":[{}]}}",
+        cfg.nodes,
+        cells.join(","),
+    )
+}
+
+/// v8 `throughput` section: the DES hot-path bit-identity gate, in the
+/// artifact. The LUD skew cell (block placement, inter-node stealing
+/// on, so every selection and steal path runs) is simulated once per
+/// [`QueuePolicy`] through the interned + indexed hot path *and*
+/// through the retained [`DesArena::force_scan`] linear-scan reference;
+/// `scan_identical` records that the two reports matched field for
+/// field (fp fields compared by bits), and `events` is the cell's
+/// simulated event count (tasks + space put/get/free — the denominator
+/// `benches/des_hotpath.rs` divides wall time by). Everything here is
+/// virtual-time: CI byte-diffs the whole report across two runs, so no
+/// wall-clock number may enter.
+///
+/// [`DesArena::force_scan`]: crate::sim::des::DesArena::force_scan
+fn throughput_section(cfg: &ReportConfig, size: Size) -> String {
+    use crate::sim::des::{simulate_cell, DesArena};
+    use crate::space::placement::Topology;
+    let inst = (registry()
+        .iter()
+        .find(|w| w.name == "LUD")
+        .expect("LUD registered")
+        .build)(size);
+    let plan = inst.plan().expect("plan");
+    let topo = Topology::for_plan(&plan, cfg.nodes, Placement::Block);
+    let mut indexed = DesArena::new();
+    let mut scan = DesArena::new();
+    scan.force_scan(true);
+    let mut cells = Vec::new();
+    for q in QueuePolicy::all() {
+        let run = |arena: &mut DesArena| {
+            simulate_cell(
+                &plan,
+                cfg.mode,
+                DataPlane::Space,
+                &topo,
+                cfg.threads,
+                &Default::default(),
+                &Default::default(),
+                true,
+                inst.total_flops,
+                StealPolicy::RemoteReady,
+                q,
+                arena,
+            )
+        };
+        let a = run(&mut indexed);
+        let b = run(&mut scan);
+        let identical = a.seconds.to_bits() == b.seconds.to_bits()
+            && a.gflops.to_bits() == b.gflops.to_bits()
+            && a.work_ratio.to_bits() == b.work_ratio.to_bits()
+            && a.tasks == b.tasks
+            && a.steals == b.steals
+            && a.failed_gets == b.failed_gets
+            && a.space_puts == b.space_puts
+            && a.space_gets == b.space_gets
+            && a.space_frees == b.space_frees
+            && a.space_peak_bytes == b.space_peak_bytes
+            && a.space_local_gets == b.space_local_gets
+            && a.space_remote_gets == b.space_remote_gets
+            && a.space_remote_bytes == b.space_remote_bytes
+            && a.node_peak_bytes == b.node_peak_bytes
+            && a.stolen_edts == b.stolen_edts
+            && a.steal_bytes == b.steal_bytes;
+        let events = a.tasks + a.space_puts + a.space_gets + a.space_frees;
+        cells.push(format!(
+            "{{\"queue_policy\":{},\"events\":{},\"sim_seconds\":{},\
+             \"scan_identical\":{}}}",
+            jstr(q.name()),
+            events,
+            a.seconds,
+            identical,
+        ));
+    }
+    format!(
+        "{{\"workload\":\"LUD\",\"nodes\":{},\"placement\":\"block\",\
+         \"steal\":\"remote-ready\",\"cells\":[{}]}}",
         cfg.nodes,
         cells.join(","),
     )
@@ -417,6 +505,28 @@ mod tests {
             ..Default::default()
         });
         assert!(prio.contains("\"queue_policy\":\"priority\""));
+    }
+
+    #[test]
+    fn throughput_section_gates_scan_identity_per_policy() {
+        let cfg = ReportConfig {
+            quick: true,
+            ..Default::default()
+        };
+        let s = throughput_section(&cfg, Size::Tiny);
+        assert!(s.contains("\"workload\":\"LUD\""));
+        for q in QueuePolicy::all() {
+            assert!(
+                s.contains(&format!("\"queue_policy\":\"{}\"", q.name())),
+                "throughput section carries a {} cell: {s}",
+                q.name()
+            );
+        }
+        assert!(
+            s.contains("\"scan_identical\":true") && !s.contains("\"scan_identical\":false"),
+            "indexed path must reproduce the scan reference: {s}"
+        );
+        assert!(s.contains("\"events\":"));
     }
 
     #[test]

@@ -510,7 +510,7 @@ fn main() -> anyhow::Result<()> {
             println!("                    link costs without re-simulating, or view per-node timelines)");
             println!("       bench-report [--quick] [--out FILE] [--nodes N] [--placement P] [--steal S]");
             println!("                    [--transport T] [--queue-policy Q]  (deterministic perf");
-            println!("                    JSON: virtual time only, schema v7)");
+            println!("                    JSON: virtual time only, schema v8)");
             println!();
             println!("sweep [--spec FILE.json] [--axis name=v1,v2|lo:hi]... [--samples N] [--seed S]");
             println!("      [--jobs N] [--out FILE] [--wall] [--workload W] [--size S]");

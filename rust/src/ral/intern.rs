@@ -1,0 +1,217 @@
+//! `intern` — per-run tag interning: dense integer ids for `TagKey`s.
+//!
+//! ## Why the DES interns tags
+//!
+//! The simulator used to key its dependence table and item space by
+//! `TagKey { node, coords: Box<[i64]> }` directly, which forced a heap
+//! allocation (`coords.clone()`) at every completion signal, every
+//! antecedent probe, and every space operation — the per-tag bookkeeping
+//! cost that Meister et al. identify as the dominant overhead of
+//! fine-grained EDT programs. [`TagInterner`] maps each distinct key to a
+//! dense [`TagId`] (`u32`, `Copy`) on *first* sight — the only time the
+//! coords are copied — and every later occurrence becomes an integer.
+//! Downstream, the DES tag table and item space are plain `Vec`s indexed
+//! by `TagId`, so the steady-state hot path does zero heap allocation and
+//! zero hashing beyond the single interner probe.
+//!
+//! ## Why this is an open-addressing table and not a `HashMap`
+//!
+//! The lookup key is a *borrowed* `(u32, &[i64])` pair, but the stored key
+//! owns its coords. `std`'s `HashMap` can only look up through `Borrow`,
+//! which has no impl unifying `(u32, &[i64])` with `TagKey` — probing
+//! would require allocating a `TagKey` first, which defeats the point
+//! (and `raw_entry` is unstable). A small linear-probing table that
+//! compares borrowed fields directly sidesteps this.
+//!
+//! ## Determinism
+//!
+//! Ids are assigned in first-intern order, which is itself a
+//! deterministic function of the simulation (the DES is single-threaded
+//! and virtual-time ordered). Ids never appear in any report or trace —
+//! coords are resolved back through [`TagInterner::resolve`] at emission
+//! boundaries — so the numbering is free to change between runs of
+//! *different* workloads while every byte-diff gate stays green. See
+//! `ral::hash` module docs for the companion argument about hash-order
+//! freedom.
+
+use super::TagKey;
+use crate::ral::hash::FxHasher;
+use std::hash::Hasher;
+
+/// A dense, run-local tag id. `Copy` — this is the whole point: signals,
+/// continuations, and pending-entries carry this instead of cloning
+/// coords.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TagId(u32);
+
+impl TagId {
+    /// The id as a `Vec` index.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Empty-slot sentinel in the probe table (ids are dense from 0, and a
+/// run with 2^32-1 distinct tags is beyond any simulable cell).
+const EMPTY: u32 = u32::MAX;
+
+/// Open-addressing interner: `keys` is the id → key arena, `slots` the
+/// power-of-two probe table holding ids (or [`EMPTY`]).
+#[derive(Debug, Default)]
+pub struct TagInterner {
+    keys: Vec<TagKey>,
+    slots: Vec<u32>,
+    mask: usize,
+}
+
+impl TagInterner {
+    /// Hash of the borrowed key parts. Must agree with itself only —
+    /// this table never interoperates with `TagKey`'s `Hash` impl.
+    #[inline]
+    fn hash(node: u32, coords: &[i64]) -> u64 {
+        let mut h = FxHasher::default();
+        h.write_u32(node);
+        for &c in coords {
+            h.write_u64(c as u64);
+        }
+        h.finish()
+    }
+
+    /// Intern `(node, coords)`, allocating only on first sight.
+    pub fn intern(&mut self, node: u32, coords: &[i64]) -> TagId {
+        if (self.keys.len() + 1) * 8 > self.slots.len() * 7 {
+            self.grow();
+        }
+        let mut i = Self::hash(node, coords) as usize & self.mask;
+        loop {
+            let s = self.slots[i];
+            if s == EMPTY {
+                let id = self.keys.len() as u32;
+                debug_assert!(id != EMPTY, "tag id space exhausted");
+                self.keys.push(TagKey {
+                    node,
+                    coords: coords.into(),
+                });
+                self.slots[i] = id;
+                return TagId(id);
+            }
+            let k = &self.keys[s as usize];
+            if k.node == node && *k.coords == *coords {
+                return TagId(s);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// The key behind an id. Panics on an id from another interner/run.
+    #[inline]
+    pub fn resolve(&self, id: TagId) -> &TagKey {
+        &self.keys[id.index()]
+    }
+
+    /// Number of distinct keys interned.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when nothing has been interned.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Forget all keys but keep both buffers' capacity (arena reuse).
+    pub fn clear(&mut self) {
+        self.keys.clear();
+        self.slots.iter_mut().for_each(|s| *s = EMPTY);
+    }
+
+    fn grow(&mut self) {
+        let cap = (self.slots.len() * 2).max(64);
+        self.slots.clear();
+        self.slots.resize(cap, EMPTY);
+        self.mask = cap - 1;
+        for (id, k) in self.keys.iter().enumerate() {
+            let mut i = Self::hash(k.node, &k.coords) as usize & self.mask;
+            while self.slots[i] != EMPTY {
+                i = (i + 1) & self.mask;
+            }
+            self.slots[i] = id as u32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_intern_allocates_repeats_do_not() {
+        let mut it = TagInterner::default();
+        let a = it.intern(3, &[1, 2]);
+        let b = it.intern(3, &[1, 2]);
+        assert_eq!(a, b);
+        assert_eq!(it.len(), 1);
+        let c = it.intern(3, &[1, 3]);
+        assert_ne!(a, c);
+        assert_eq!(it.len(), 2);
+    }
+
+    #[test]
+    fn ids_are_dense_in_first_sight_order() {
+        let mut it = TagInterner::default();
+        for i in 0..100i64 {
+            let id = it.intern(0, &[i]);
+            assert_eq!(id.index(), i as usize);
+        }
+    }
+
+    #[test]
+    fn resolve_round_trips_through_growth() {
+        let mut it = TagInterner::default();
+        let mut ids = Vec::new();
+        for node in 0..4u32 {
+            for i in 0..2000i64 {
+                ids.push((node, i, it.intern(node, &[i, i * 7])));
+            }
+        }
+        for (node, i, id) in ids {
+            let k = it.resolve(id);
+            assert_eq!(k.node, node);
+            assert_eq!(*k.coords, [i, i * 7]);
+            // And re-interning still finds the same id post-growth.
+            assert_eq!(it.intern(node, &[i, i * 7]), id);
+        }
+    }
+
+    #[test]
+    fn node_distinguishes_otherwise_equal_coords() {
+        let mut it = TagInterner::default();
+        let a = it.intern(1, &[5]);
+        let b = it.intern(2, &[5]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn clear_resets_ids_but_keeps_working() {
+        let mut it = TagInterner::default();
+        for i in 0..500i64 {
+            it.intern(9, &[i]);
+        }
+        it.clear();
+        assert!(it.is_empty());
+        let id = it.intern(9, &[123]);
+        assert_eq!(id.index(), 0);
+        assert_eq!(it.resolve(id).coords.as_ref(), &[123]);
+    }
+
+    #[test]
+    fn empty_and_prefix_coords_are_distinct() {
+        let mut it = TagInterner::default();
+        let a = it.intern(0, &[]);
+        let b = it.intern(0, &[0]);
+        let c = it.intern(0, &[0, 0]);
+        assert!(a != b && b != c && a != c);
+        assert_eq!(it.len(), 3);
+    }
+}

@@ -19,8 +19,12 @@
 //! - [`Metrics`] — counters for the §5.3 overhead discussion (failed gets,
 //!   steals, work ratio).
 
+pub mod hash;
+pub mod intern;
 pub mod window;
 
+pub use hash::{fx_hash_one, FxBuildHasher, FxHashMap, FxHashSet};
+pub use intern::{TagId, TagInterner};
 pub use window::RollingWindow;
 
 use std::sync::atomic::{AtomicIsize, AtomicU64, Ordering};

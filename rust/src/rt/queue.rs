@@ -43,7 +43,12 @@
 //!   Ready sets are per-worker and shallow, scores are age-dependent
 //!   (a heap keyed at push time would go stale), and the DES needs a
 //!   deterministic tie-break — the scan takes the front-most of equal
-//!   scores, which a heap would not guarantee.
+//!   scores, which a heap would not guarantee. The simulator's hot
+//!   path replaces the literal scan with the lazy-invalidation indexes
+//!   of `sim::rq` (per-(class,depth) groups whose per-pop scoring cost
+//!   no longer grows with deque length); the scan survives behind
+//!   `DesArena::force_scan` as the reference both CI and the property
+//!   tests hold the indexes bit-identical to.
 //!
 //! The historical pop (QueuePolicy::Fifo) takes the newest ready entry
 //! — LIFO chases whatever the *last* completion released, which is

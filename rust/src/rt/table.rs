@@ -16,9 +16,7 @@
 //!   keys (the wake-once mechanism used by the ASYNC/DEP/prescriber
 //!   modes; BLOCK registers on a single key at a time).
 
-use crate::ral::{Task, TagKey};
-use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use crate::ral::{fx_hash_one, FxHashMap, Task, TagKey};
 use std::sync::atomic::{AtomicIsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -56,8 +54,15 @@ enum Entry {
 
 /// Sharded concurrent map. 64 shards keeps lock contention negligible at
 /// the thread counts of interest.
+///
+/// Both hash layers use `ral::hash`'s Fx hasher: the old `shard()`
+/// built a fresh SipHash `DefaultHasher` per call, so every operation
+/// hashed its key twice with the slowest hasher in the toolbox — once
+/// to pick the shard, then again inside the shard's map. Sharding only
+/// distributes lock contention, and the inner maps are never iterated,
+/// so neither choice can affect any observable outcome.
 pub struct TagTable {
-    shards: Vec<Mutex<HashMap<TagKey, Entry>>>,
+    shards: Vec<Mutex<FxHashMap<TagKey, Entry>>>,
     mask: usize,
 }
 
@@ -71,15 +76,13 @@ impl TagTable {
     pub fn new(n_shards: usize) -> Self {
         let n = n_shards.next_power_of_two();
         TagTable {
-            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
             mask: n - 1,
         }
     }
 
-    fn shard(&self, key: &TagKey) -> &Mutex<HashMap<TagKey, Entry>> {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        &self.shards[(h.finish() as usize) & self.mask]
+    fn shard(&self, key: &TagKey) -> &Mutex<FxHashMap<TagKey, Entry>> {
+        &self.shards[(fx_hash_one(key) as usize) & self.mask]
     }
 
     /// Non-destructive get: has this tag been put?
@@ -230,5 +233,36 @@ mod tests {
         let _ = t.put(k.clone());
         assert!(t.put(k.clone()).is_empty());
         assert!(t.is_done(&k));
+    }
+
+    /// Sharding must be pure routing: the same scripted op sequence
+    /// against a 64-shard table and a degenerate 1-shard table (where
+    /// the shard hash is irrelevant) produces identical outcomes and
+    /// release counts. Guards the single-hash `shard()` — a routing
+    /// function that leaked into semantics would diverge here.
+    #[test]
+    fn shard_count_never_changes_outcomes() {
+        let wide = TagTable::new(64);
+        let one = TagTable::new(1);
+        let keys: Vec<TagKey> = (0..40)
+            .map(|i| TagKey::new(i % 5, &[i as i64, (i as i64) * 3 - 7]))
+            .collect();
+        for t in [&wide, &one] {
+            // register waiters on every other key, then put all keys
+            for pair in keys.chunks(2) {
+                assert!(t.register(dummy_task(), pair).is_none());
+            }
+            let mut released = 0;
+            for k in &keys {
+                released += t.put(k.clone()).len();
+            }
+            assert_eq!(released, keys.len() / 2);
+            assert_eq!(t.waiting_keys(), 0);
+            for k in &keys {
+                assert!(t.is_done(k));
+                // a late register on done keys fires immediately
+            }
+            assert!(t.register(dummy_task(), &keys).is_some());
+        }
     }
 }

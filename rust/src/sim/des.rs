@@ -27,17 +27,33 @@
 //! migration — without perturbing the simulation (tracing is pure
 //! observation: the captured run is bit-identical to an untraced one).
 //! [`crate::rt::ReplayBackend`] re-executes the captured stream.
+//!
+//! ## The hot path
+//!
+//! At sweep scale (the ROADMAP's 10^8-event mark) three per-event costs
+//! dominate: `Box<[i64]>` coordinate clones on every tag-table touch,
+//! SipHash probes on every map lookup, and the O(deque) ready-queue
+//! scans of the ordered [`QueuePolicy`]s. All three are gone from the
+//! steady state: tags are interned to dense [`TagId`]s on first sight
+//! (`ral::intern` — the table and item space become `Vec`s, signals and
+//! continuations carry `Copy` ids, coords materialize only at trace
+//! emission), the remaining maps use `ral::hash`'s Fx hasher, and
+//! per-worker selection runs on `sim::rq`'s lazy-invalidation indexes —
+//! with the PR-9 linear scan retained behind
+//! [`DesArena::force_scan`] as the reference the bit-identity suite and
+//! `benches/des_hotpath.rs` compare against.
 
 use super::cost::{CostModel, Machine};
 use super::leaf_cost;
+use super::rq::{EntryKey, ReadyDeque};
 use super::trace::{Acq, EdtId, TaskKind, TraceEvent, TraceMode};
 use crate::exec::plan::{ArenaBody, Plan};
-use crate::ral::{DepMode, MetricsSnapshot, TagKey};
+use crate::ral::{DepMode, MetricsSnapshot, TagId, TagInterner};
 use crate::rt::{QueuePolicy, RuntimeEstimator, StealPolicy};
 use crate::space::placement::Topology;
 use crate::space::DataPlane;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 const FINISH_BIT: u32 = 1 << 31;
@@ -52,7 +68,7 @@ pub(crate) fn ns_of(x: f64) -> u64 {
 #[derive(Debug, Clone)]
 enum Cont {
     Done,
-    WorkerDone { key: TagKey, scope: usize },
+    WorkerDone { key: TagId, scope: usize },
     NextSibling { node: u32, coords: Box<[i64]>, next: u32, after: Box<Cont> },
     /* kept for parity with the real engine */
     #[allow(dead_code)]
@@ -70,10 +86,14 @@ enum STask {
 struct Scope {
     remaining: i64,
     cont: Option<Cont>,
-    signal: Option<TagKey>,
+    signal: Option<TagId>,
 }
 
+/// One dense tag-table slot, indexed by [`TagId`].
 enum Entry {
+    /// No put or registration has touched this tag yet (the interner
+    /// saw it, e.g. through a sibling's key list).
+    Empty,
     /// Done at virtual time, by task instance (for the causality
     /// self-check and the trace's availability-stamp provenance).
     Done(u64, u64),
@@ -177,13 +197,15 @@ struct Des<'a> {
     /// Per-node round-robin cursor for routing leaf EDTs to a worker.
     route_rr: Vec<usize>,
 
-    table: HashMap<TagKey, Entry>,
+    /// Tag → dense id (first sight is the only coords copy per tag).
+    interner: TagInterner,
+    /// Dense tag table, indexed by [`TagId`].
+    table: Vec<Entry>,
     pendings: Vec<Pending>,
     scopes: Vec<Scope>,
     /// Space data plane: live datablocks (bytes, remaining get-count,
-    /// owner node), keyed like the producer's completion tag but in a
-    /// separate map.
-    space_items: HashMap<TagKey, (u64, i64, usize)>,
+    /// owner node), indexed by the producer's completion [`TagId`].
+    space_items: Vec<Option<(u64, i64, usize)>>,
     space_live: u64,
     space_peak: u64,
     space_puts: u64,
@@ -196,10 +218,16 @@ struct Des<'a> {
     node_live: Vec<u64>,
     node_peak: Vec<u64>,
 
-    /// (available-at, instance, task): a task spawned during execution
-    /// becomes visible only when its spawner completes — stealing must
-    /// not time-travel (causality check below guards this invariant).
-    deques: Vec<VecDeque<(u64, u64, STask)>>,
+    /// (available-at, instance, task) per worker: a task spawned during
+    /// execution becomes visible only when its spawner completes —
+    /// stealing must not time-travel (causality check below guards this
+    /// invariant). Selection order lives in [`ReadyDeque`].
+    deques: Vec<ReadyDeque<STask>>,
+    /// Reusable release buffer for [`Des::put`] (the old per-call
+    /// `Vec<Sp>` was a hot-path allocation).
+    rel_scratch: Vec<Sp>,
+    /// Reusable key list for [`Des::register`] call sites.
+    key_scratch: Vec<TagId>,
     heap: BinaryHeap<Reverse<(u64, u64, usize)>>, // (time_ns, seq, worker)
     free_at: Vec<u64>,
     idle: Vec<bool>,
@@ -366,6 +394,24 @@ impl<'a> Des<'a> {
         }
     }
 
+    /// Push a task onto worker `w`'s deque, computing its policy
+    /// selection key once at enqueue time (the key is stored either
+    /// way — the `force_scan` reference path reads it too).
+    fn push_task(&mut self, w: usize, avail: u64, inst: u64, task: STask) {
+        let key = match self.queue {
+            QueuePolicy::Fifo => EntryKey::Fifo,
+            QueuePolicy::CriticalPath => {
+                let (rank, node, coords) = Self::cp_key(&task);
+                EntryKey::Cp { rank, node, coords: coords.into() }
+            }
+            QueuePolicy::Priority => {
+                let (class, depth) = self.prio_key(&task);
+                EntryKey::Prio { class, depth }
+            }
+        };
+        self.deques[w].push_back(avail, inst, task, key);
+    }
+
     /// The entry of `w`'s own deque the configured policy runs next,
     /// among those available at `now` (`None` when none are ready).
     ///
@@ -373,54 +419,14 @@ impl<'a> Des<'a> {
     /// back is ready, i.e. the historical LIFO-local pop — but, unlike
     /// the pre-fix scheduler that consulted only `back()`, it still
     /// finds ready work sitting deeper in the deque when the back
-    /// entry's stamp is pending. The ordered policies scan all ready
-    /// entries and take the minimum key; ties go to the front-most
-    /// entry, keeping selection deterministic.
-    fn select_own(&self, w: usize, now: u64) -> Option<usize> {
-        let dq = &self.deques[w];
-        match self.queue {
-            QueuePolicy::Fifo => dq.iter().rposition(|&(avail, _, _)| avail <= now),
-            QueuePolicy::CriticalPath => {
-                // min rank (control first), then max (node, coords):
-                // the deepest ready leaf in schedule order
-                let mut best: Option<(usize, (u8, u32, &[i64]))> = None;
-                for (i, (avail, _, t)) in dq.iter().enumerate() {
-                    if *avail > now {
-                        continue;
-                    }
-                    let (rank, node, coords) = Self::cp_key(t);
-                    let better = match best {
-                        Some((_, (br, bn, bc))) => {
-                            rank < br || (rank == br && (node, coords) > (bn, bc))
-                        }
-                        None => true,
-                    };
-                    if better {
-                        best = Some((i, (rank, node, coords)));
-                    }
-                }
-                best.map(|(i, _)| i)
-            }
-            QueuePolicy::Priority => {
-                let mut best: Option<(usize, f64)> = None;
-                for (i, (avail, _, t)) in dq.iter().enumerate() {
-                    if *avail > now {
-                        continue;
-                    }
-                    let (class, depth) = self.prio_key(t);
-                    let age = (now - avail) as f64;
-                    let score = self.est.score(class, depth, age);
-                    let better = match best {
-                        Some((_, b)) => score < b,
-                        None => true,
-                    };
-                    if better {
-                        best = Some((i, score));
-                    }
-                }
-                best.map(|(i, _)| i)
-            }
-        }
+    /// entry's stamp is pending. The ordered policies take the minimum
+    /// key among ready entries (ties → front-most), served by
+    /// [`ReadyDeque`]'s indexes — or by the retained PR-9 linear scan
+    /// under [`DesArena::force_scan`], provably the same selection
+    /// (see `sim::rq` module docs).
+    fn select_own(&mut self, w: usize, now: u64) -> Option<(u64, u64, STask)> {
+        let (deques, est) = (&mut self.deques, &self.est);
+        deques[w].select(now, est)
     }
 
     /// Find work available at time `now`. Own deque first (ordered by
@@ -431,15 +437,14 @@ impl<'a> Des<'a> {
     /// + acquisition cost + kind, or the earliest future local
     /// availability, or None (truly idle).
     fn find_task(&mut self, w: usize, now: u64) -> FindResult {
-        if let Some(i) = self.select_own(w, now) {
-            let (_, inst, t) = self.deques[w].remove(i).unwrap();
+        if let Some((_, inst, t)) = self.select_own(w, now) {
             return FindResult::Task(t, inst, 0.0, Acq::Own);
         }
         // nothing of our own is ready: the earliest pending own stamp
         // bounds the wait (the pre-fix scheduler looked at the back
         // only — the newest push — and so both missed ready work
         // deeper in the deque and over-waited on the back's stamp)
-        let mut earliest = self.deques[w].iter().map(|&(avail, _, _)| avail).min();
+        let mut earliest = self.deques[w].earliest();
         let my_node = self.worker_node[w];
         let start = (self.rand() as usize) % self.threads;
         for k in 0..self.threads {
@@ -450,7 +455,7 @@ impl<'a> Des<'a> {
             if self.sched_nodes && self.worker_node[v] != my_node {
                 continue;
             }
-            if let Some(&(avail, _, _)) = self.deques[v].front() {
+            if let Some((avail, _, _)) = self.deques[v].front() {
                 if avail <= now {
                     let (_, inst, t) = self.deques[v].pop_front().unwrap();
                     self.steals += 1;
@@ -472,7 +477,7 @@ impl<'a> Des<'a> {
                     continue;
                 }
                 let ready_leaf = match self.deques[v].front() {
-                    Some(&(avail, _, ref t)) => avail <= now && self.is_leaf_worker(t),
+                    Some((avail, _, t)) => avail <= now && self.is_leaf_worker(t),
                     None => false,
                 };
                 if ready_leaf {
@@ -490,28 +495,30 @@ impl<'a> Des<'a> {
     }
 
     /// A get at virtual time `now` only observes puts stamped ≤ now.
-    fn is_done(&self, key: &TagKey, now: u64) -> bool {
-        matches!(self.table.get(key), Some(Entry::Done(t, _)) if *t <= now)
+    fn is_done(&self, key: TagId, now: u64) -> bool {
+        matches!(self.table.get(key.index()), Some(Entry::Done(t, _)) if *t <= now)
     }
 
-    fn done_time(&self, key: &TagKey) -> Option<u64> {
-        match self.table.get(key) {
+    fn done_time(&self, key: TagId) -> Option<u64> {
+        match self.table.get(key.index()) {
             Some(Entry::Done(t, _)) => Some(*t),
             _ => None,
         }
     }
 
     /// put: mark done at time `at` (stamped by the current instance),
-    /// return released tasks with their availability (the max done-time
-    /// across each pending's keys — an earlier-processed put may carry a
-    /// later virtual stamp).
-    fn put(&mut self, key: TagKey, at: u64) -> Vec<Sp> {
+    /// pushing released tasks into `out` with their availability (the
+    /// max done-time across each pending's keys — an earlier-processed
+    /// put may carry a later virtual stamp). `out` is the arena-backed
+    /// scratch: the old per-call `Vec<Sp>` return was one heap
+    /// allocation per put.
+    fn put(&mut self, key: TagId, at: u64, out: &mut Vec<Sp>) {
         let by = self.cur_inst;
-        let waiters = match self.table.insert(key, Entry::Done(at, by)) {
-            Some(Entry::Waiting(w)) => w,
+        let slot = &mut self.table[key.index()];
+        let waiters = match std::mem::replace(slot, Entry::Done(at, by)) {
+            Entry::Waiting(w) => w,
             _ => Vec::new(),
         };
-        let mut out = Vec::new();
         for pid in waiters {
             let p = &mut self.pendings[pid];
             p.remaining -= 1;
@@ -525,14 +532,13 @@ impl<'a> Des<'a> {
                 }
             }
         }
-        out
     }
 
     /// Two-phase registration at virtual time `now`. When the task fires
     /// immediately, the returned availability is the latest done-time of
     /// its keys (it may lie in the caller's future — a put stamped ahead
     /// of `now` by an earlier-dispatched but longer-running producer).
-    fn register(&mut self, task: STask, keys: &[TagKey], now: u64) -> Option<Sp> {
+    fn register(&mut self, task: STask, keys: &[TagId], now: u64) -> Option<Sp> {
         let inst = self.spawn_task(now, &task);
         let pid = self.pendings.len();
         self.pendings.push(Pending {
@@ -542,9 +548,9 @@ impl<'a> Des<'a> {
             avail: now,
             avail_src: self.cur_inst,
         });
-        for k in keys {
-            match self.table.get_mut(k) {
-                Some(Entry::Done(dt, by)) => {
+        for &k in keys {
+            match &mut self.table[k.index()] {
+                Entry::Done(dt, by) => {
                     let (dt, by) = (*dt, *by);
                     let p = &mut self.pendings[pid];
                     p.remaining -= 1;
@@ -553,10 +559,8 @@ impl<'a> Des<'a> {
                         p.avail_src = by;
                     }
                 }
-                Some(Entry::Waiting(w)) => w.push(pid),
-                None => {
-                    self.table.insert(k.clone(), Entry::Waiting(vec![pid]));
-                }
+                Entry::Waiting(w) => w.push(pid),
+                e @ Entry::Empty => *e = Entry::Waiting(vec![pid]),
             }
         }
         let p = &mut self.pendings[pid];
@@ -569,11 +573,21 @@ impl<'a> Des<'a> {
         }
     }
 
-    fn done_key(node: u32, coords: &[i64]) -> TagKey {
-        TagKey { node, coords: coords.into() }
+    /// Intern a completion tag, growing the dense table to cover it.
+    /// The steady state — a tag seen before — allocates nothing.
+    fn done_id(&mut self, node: u32, coords: &[i64]) -> TagId {
+        let id = self.interner.intern(node, coords);
+        let n = id.index() + 1;
+        if self.table.len() < n {
+            self.table.resize_with(n, || Entry::Empty);
+        }
+        id
     }
-    fn finish_key(node: u32, prefix: &[i64]) -> TagKey {
-        TagKey { node: node | FINISH_BIT, coords: prefix.into() }
+
+    /// The CnC finish-signal tag (the top bit keeps signal tags disjoint
+    /// from completion tags of the same node).
+    fn finish_id(&mut self, node: u32, prefix: &[i64]) -> TagId {
+        self.done_id(node | FINISH_BIT, prefix)
     }
 
     /// The worker a spawned task lands on. Flat scheduling keeps
@@ -621,7 +635,7 @@ impl<'a> Des<'a> {
                 let n = tags.len();
                 dur += c.startup_base_ns + c.per_tag_ns * n as f64;
                 let signal = if self.mode.finish_via_tag_table() {
-                    Some(Self::finish_key(node, &prefix))
+                    Some(self.finish_id(node, &prefix))
                 } else {
                     None
                 };
@@ -629,12 +643,12 @@ impl<'a> Des<'a> {
                 self.scopes.push(Scope {
                     remaining: n as i64,
                     cont: Some(*on_finish),
-                    signal: signal.clone(),
+                    signal,
                 });
-                if let Some(sig) = &signal {
+                if let Some(sig) = signal {
                     dur += c.get_miss_ns; // SHUTDOWN step parks on the item
                     if let Some(sp) =
-                        self.register(STask::Shutdown { scope: sid }, std::slice::from_ref(sig), t0)
+                        self.register(STask::Shutdown { scope: sid }, &[sig], t0)
                     {
                         spawned.push(sp);
                     }
@@ -656,8 +670,9 @@ impl<'a> Des<'a> {
                                 let ants = self.plan.antecedents(node, &coords);
                                 dur += c.pred_eval_ns * self.plan.node(node).dims.len() as f64
                                     + c.prescribe_dep_ns * ants.len() as f64;
-                                let keys: Vec<TagKey> =
-                                    ants.iter().map(|a| Self::done_key(node, a)).collect();
+                                let mut keys = std::mem::take(&mut self.key_scratch);
+                                keys.clear();
+                                keys.extend(ants.iter().map(|a| self.done_id(node, a)));
                                 if let Some(sp) = self.register(
                                     STask::Worker { node, coords, scope: sid },
                                     &keys,
@@ -665,6 +680,7 @@ impl<'a> Des<'a> {
                                 ) {
                                     spawned.push(sp);
                                 }
+                                self.key_scratch = keys;
                             }
                             DepMode::Ocr => {
                                 let t = STask::Prescriber { node, coords, scope: sid };
@@ -680,13 +696,16 @@ impl<'a> Des<'a> {
                 dur += c.pred_eval_ns * self.plan.node(node).dims.len() as f64
                     + c.prescribe_dep_ns * ants.len() as f64
                     + c.ocr_deque_ns;
-                let keys: Vec<TagKey> = ants.iter().map(|a| Self::done_key(node, a)).collect();
+                let mut keys = std::mem::take(&mut self.key_scratch);
+                keys.clear();
+                keys.extend(ants.iter().map(|a| self.done_id(node, a)));
                 if let Some(sp) =
                     self.register(STask::Worker { node, coords, scope }, &keys, t0)
                 {
                     dur += c.spawn_ns;
                     spawned.push(sp);
                 }
+                self.key_scratch = keys;
             }
             STask::Worker { node, coords, scope } => {
                 if self.mode == DepMode::Ocr {
@@ -702,16 +721,14 @@ impl<'a> Des<'a> {
                         let ants = self.plan.antecedents(node, &coords);
                         dur += c.pred_eval_ns * self.plan.node(node).dims.len() as f64;
                         for a in &ants {
-                            let key = Self::done_key(node, a);
-                            if self.is_done(&key, t0) {
+                            let key = self.done_id(node, a);
+                            if self.is_done(key, t0) {
                                 dur += c.get_hit_ns;
                             } else {
                                 dur += c.get_miss_ns;
                                 self.failed_gets += 1;
                                 let t = STask::Worker { node, coords: coords.clone(), scope };
-                                if let Some(sp) =
-                                    self.register(t, std::slice::from_ref(&key), t0)
-                                {
+                                if let Some(sp) = self.register(t, &[key], t0) {
                                     spawned.push(sp);
                                 }
                                 blocked = true;
@@ -722,10 +739,11 @@ impl<'a> Des<'a> {
                     DepMode::CncAsync | DepMode::Swarm => {
                         let ants = self.plan.antecedents(node, &coords);
                         dur += c.pred_eval_ns * self.plan.node(node).dims.len() as f64;
-                        let mut missing = Vec::new();
+                        let mut missing = std::mem::take(&mut self.key_scratch);
+                        missing.clear();
                         for a in &ants {
-                            let key = Self::done_key(node, a);
-                            if self.is_done(&key, t0) {
+                            let key = self.done_id(node, a);
+                            if self.is_done(key, t0) {
                                 dur += c.get_hit_ns;
                             } else {
                                 dur += c.get_miss_ns;
@@ -740,6 +758,7 @@ impl<'a> Des<'a> {
                             }
                             blocked = true;
                         }
+                        self.key_scratch = missing;
                     }
                     DepMode::CncDep | DepMode::Ocr => {}
                 }
@@ -748,8 +767,8 @@ impl<'a> Des<'a> {
                     // completed (in virtual time) before this dispatch
                     let ants = self.plan.antecedents(node, &coords);
                     for a in &ants {
-                        let k = Self::done_key(node, a);
-                        match self.done_time(&k) {
+                        let k = self.done_id(node, a);
+                        match self.done_time(k) {
                             Some(dt) => assert!(
                                 dt <= t0,
                                 "DES causality violated ({:?}): {:?} done at {} but {:?} dispatched at {}",
@@ -761,7 +780,7 @@ impl<'a> Des<'a> {
                             ),
                         }
                     }
-                    let key = Self::done_key(node, &coords);
+                    let key = self.done_id(node, &coords);
                     match &self.plan.node(node).body {
                         ArenaBody::Leaf(_) => {
                             let (pts, flops, bytes) = leaf_cost(self.plan, node, &coords);
@@ -866,7 +885,7 @@ impl<'a> Des<'a> {
                 latest = latest.max(at);
                 let tgt = self.route_target(w, &sp.task);
                 self.emit_ready(at, end, &sp);
-                self.deques[tgt].push_back((at, sp.inst, sp.task));
+                self.push_task(tgt, at, sp.inst, sp.task);
                 targets.push((tgt, at));
             }
             if n > 0 {
@@ -885,7 +904,7 @@ impl<'a> Des<'a> {
                 let at = end.max(sp.at);
                 latest = latest.max(at);
                 self.emit_ready(at, end, &sp);
-                self.deques[w].push_back((at, sp.inst, sp.task));
+                self.push_task(w, at, sp.inst, sp.task);
             }
             if n > 0 {
                 self.wake_idle(latest, n);
@@ -896,16 +915,20 @@ impl<'a> Des<'a> {
 
     fn complete_worker(
         &mut self,
-        key: TagKey,
+        key: TagId,
         scope: usize,
         at: u64,
         spawned: &mut Vec<Sp>,
     ) -> f64 {
         let mut dur = self.costs.put_ns;
-        for sp in self.put(key, at) {
+        let mut rel = std::mem::take(&mut self.rel_scratch);
+        debug_assert!(rel.is_empty());
+        self.put(key, at, &mut rel);
+        for sp in rel.drain(..) {
             dur += self.costs.spawn_ns;
             spawned.push(sp);
         }
+        self.rel_scratch = rel;
         self.scopes[scope].remaining -= 1;
         if self.scopes[scope].remaining == 0 {
             dur += self.fire_shutdown(scope, at, spawned);
@@ -920,12 +943,16 @@ impl<'a> Des<'a> {
         spawned: &mut Vec<Sp>,
     ) -> f64 {
         let mut dur = 0.0;
-        if let Some(sig) = self.scopes[scope].signal.clone() {
+        if let Some(sig) = self.scopes[scope].signal {
             dur += self.costs.put_ns;
-            for sp in self.put(sig, at) {
+            let mut rel = std::mem::take(&mut self.rel_scratch);
+            debug_assert!(rel.is_empty());
+            self.put(sig, at, &mut rel);
+            for sp in rel.drain(..) {
                 dur += self.costs.spawn_ns;
                 spawned.push(sp);
             }
+            self.rel_scratch = rel;
         } else {
             dur += self.costs.spawn_ns;
             let t = STask::Shutdown { scope };
@@ -1004,23 +1031,28 @@ impl<'a> Des<'a> {
     ) -> f64 {
         let c = self.costs;
         let mut dur = 0.0;
+        // Full-trace data events need coords resolved back out of the
+        // interner; guard once so the untraced hot path never clones.
+        let trace_data = self.tracer.as_ref().is_some_and(|tr| tr.full);
         for a in ants {
-            let k = Self::done_key(node, a);
+            let k = self.done_id(node, a);
             dur += c.space_get_ns;
             self.space_gets += 1;
-            let (bytes, owner, freed) = match self.space_items.get_mut(&k) {
-                Some((bytes, remaining, owner)) => {
-                    let (b, o) = (*bytes, *owner);
-                    *remaining -= 1;
-                    (b, o, *remaining == 0)
-                }
-                // mirror the real ItemSpace::get panic: an absent item
-                // means consumer_count and the antecedent set disagree
-                None => panic!(
-                    "DES space get of absent datablock {k:?} — \
-                     consumer_count / antecedent mismatch"
-                ),
-            };
+            let (bytes, owner, freed) =
+                match self.space_items.get_mut(k.index()).and_then(|s| s.as_mut()) {
+                    Some((bytes, remaining, owner)) => {
+                        let (b, o) = (*bytes, *owner);
+                        *remaining -= 1;
+                        (b, o, *remaining == 0)
+                    }
+                    // mirror the real ItemSpace::get panic: an absent item
+                    // means consumer_count and the antecedent set disagree
+                    None => panic!(
+                        "DES space get of absent datablock {:?} — \
+                         consumer_count / antecedent mismatch",
+                        self.interner.resolve(k)
+                    ),
+                };
             if owner == here {
                 self.space_local_gets += 1;
             } else {
@@ -1033,21 +1065,33 @@ impl<'a> Des<'a> {
             }
             let ev_t = t0 + ns_of(base_dur + dur);
             let i = self.cur_inst;
-            self.tr_data(TraceEvent::Get {
-                t: ev_t,
-                i,
-                key: (k.node, k.coords.clone()),
-                bytes,
-                from: owner as u32,
-                to: here as u32,
-                remote: owner != here,
-            });
+            if trace_data {
+                let ev = {
+                    let kk = self.interner.resolve(k);
+                    TraceEvent::Get {
+                        t: ev_t,
+                        i,
+                        key: (kk.node, kk.coords.clone()),
+                        bytes,
+                        from: owner as u32,
+                        to: here as u32,
+                        remote: owner != here,
+                    }
+                };
+                self.tr_data(ev);
+            }
             if freed {
-                self.space_items.remove(&k);
+                self.space_items[k.index()] = None;
                 self.space_live -= bytes;
                 self.node_live[owner] -= bytes;
                 self.space_frees += 1;
-                self.tr_data(TraceEvent::Free { t: ev_t, i, key: (k.node, k.coords) });
+                if trace_data {
+                    let ev = {
+                        let kk = self.interner.resolve(k);
+                        TraceEvent::Free { t: ev_t, i, key: (kk.node, kk.coords.clone()) }
+                    };
+                    self.tr_data(ev);
+                }
             }
         }
         let tile_bytes = (pts * 4.0) as u64;
@@ -1057,26 +1101,47 @@ impl<'a> Des<'a> {
         self.space_peak = self.space_peak.max(self.space_live);
         self.node_live[here] += tile_bytes;
         self.node_peak[here] = self.node_peak[here].max(self.node_live[here]);
-        let key = Self::done_key(node, coords);
+        let key = self.done_id(node, coords);
         let ev_t = t0 + ns_of(base_dur + dur);
         let i = self.cur_inst;
-        self.tr_data(TraceEvent::Put {
-            t: ev_t,
-            i,
-            key: (key.node, key.coords.clone()),
-            bytes: tile_bytes,
-            node: here as u32,
-        });
+        if trace_data {
+            let ev = {
+                let kk = self.interner.resolve(key);
+                TraceEvent::Put {
+                    t: ev_t,
+                    i,
+                    key: (kk.node, kk.coords.clone()),
+                    bytes: tile_bytes,
+                    node: here as u32,
+                }
+            };
+            self.tr_data(ev);
+        }
         let consumers = self.plan.consumer_count(node, coords);
         if consumers == 0 {
             self.space_live -= tile_bytes;
             self.node_live[here] -= tile_bytes;
             self.space_frees += 1;
-            self.tr_data(TraceEvent::Free { t: ev_t, i, key: (key.node, key.coords) });
+            if trace_data {
+                let ev = {
+                    let kk = self.interner.resolve(key);
+                    TraceEvent::Free { t: ev_t, i, key: (kk.node, kk.coords.clone()) }
+                };
+                self.tr_data(ev);
+            }
         } else {
-            self.space_items.insert(key, (tile_bytes, consumers as i64, here));
+            self.ensure_space_slot(key);
+            self.space_items[key.index()] = Some((tile_bytes, consumers as i64, here));
         }
         dur
+    }
+
+    /// Grow the dense item-space vector to cover `id`.
+    fn ensure_space_slot(&mut self, id: TagId) {
+        let n = id.index() + 1;
+        if self.space_items.len() < n {
+            self.space_items.resize(n, None);
+        }
     }
 }
 
@@ -1087,23 +1152,31 @@ impl<'a> Des<'a> {
 /// heap from scratch for every cell makes per-event allocation the hot
 /// path (the ROADMAP's 10^8-event concern). An arena keeps the backing
 /// capacity across cells — `clear()` instead of `new()` — without
-/// changing a single virtual-time result: the DES never *iterates* its
-/// hash maps (get/insert/remove only), so retained capacity cannot
-/// perturb determinism. `benches/sweep_throughput.rs` measures the
-/// events/sec gain.
+/// changing a single virtual-time result: the interner assigns the same
+/// dense ids in the same first-sight order regardless of retained
+/// capacity, and the DES never *iterates* a hash table on the hot path,
+/// so reuse cannot perturb determinism. The arena also owns the
+/// [`TagInterner`] and the dense `Vec`-backed tag table / item space it
+/// indexes — the steady-state hot path allocates nothing.
+/// `benches/sweep_throughput.rs` and `benches/des_hotpath.rs` measure
+/// the events/sec gain.
 #[derive(Default)]
 pub struct DesArena {
-    table: HashMap<TagKey, Entry>,
+    interner: TagInterner,
+    table: Vec<Entry>,
     pendings: Vec<Pending>,
     scopes: Vec<Scope>,
-    space_items: HashMap<TagKey, (u64, i64, usize)>,
-    deques: Vec<VecDeque<(u64, u64, STask)>>,
+    space_items: Vec<Option<(u64, i64, usize)>>,
+    deques: Vec<ReadyDeque<STask>>,
     heap: BinaryHeap<Reverse<(u64, u64, usize)>>,
     free_at: Vec<u64>,
     idle: Vec<bool>,
     node_live: Vec<u64>,
     node_peak: Vec<u64>,
     active_leaf_ends: BinaryHeap<Reverse<u64>>,
+    rel_scratch: Vec<Sp>,
+    key_scratch: Vec<TagId>,
+    force_scan: bool,
 }
 
 impl DesArena {
@@ -1111,20 +1184,32 @@ impl DesArena {
         Self::default()
     }
 
+    /// Force the pre-index linear-scan selection path (the PR-9
+    /// reference semantics). The indexed path is proven equivalent —
+    /// this knob exists so the bit-identity suite and
+    /// `benches/des_hotpath.rs` can hold the reference up against it.
+    pub fn force_scan(&mut self, on: bool) {
+        self.force_scan = on;
+    }
+
     /// Clear every buffer (keeping capacity) and shape the per-worker /
     /// per-node vectors for the next run.
-    fn reset(&mut self, threads: usize, nodes: usize) {
+    fn reset(&mut self, threads: usize, nodes: usize, queue: QueuePolicy) {
+        self.interner.clear();
         self.table.clear();
         self.pendings.clear();
         self.scopes.clear();
         self.space_items.clear();
         self.heap.clear();
         self.active_leaf_ends.clear();
+        self.rel_scratch.clear();
+        self.key_scratch.clear();
         self.deques.truncate(threads);
+        let fs = self.force_scan;
         for dq in &mut self.deques {
-            dq.clear();
+            dq.reset(queue, fs);
         }
-        self.deques.resize_with(threads, VecDeque::new);
+        self.deques.resize_with(threads, || ReadyDeque::new(queue, fs));
         self.free_at.clear();
         self.free_at.resize(threads, 0);
         self.idle.clear();
@@ -1309,7 +1394,7 @@ fn des_exec_traced_in(
         node_workers[nd].push(w);
     }
     let route_rr = vec![0; node_workers.len()];
-    arena.reset(threads, topo.nodes());
+    arena.reset(threads, topo.nodes(), queue);
     let mut d = Des {
         plan,
         mode,
@@ -1326,10 +1411,13 @@ fn des_exec_traced_in(
         worker_node,
         node_workers,
         route_rr,
+        interner: std::mem::take(&mut arena.interner),
         table: std::mem::take(&mut arena.table),
         pendings: std::mem::take(&mut arena.pendings),
         scopes: std::mem::take(&mut arena.scopes),
         space_items: std::mem::take(&mut arena.space_items),
+        rel_scratch: std::mem::take(&mut arena.rel_scratch),
+        key_scratch: std::mem::take(&mut arena.key_scratch),
         space_live: 0,
         space_peak: 0,
         space_puts: 0,
@@ -1381,7 +1469,7 @@ fn des_exec_traced_in(
             bt: None,
         });
     }
-    d.deques[0].push_back((0, root_inst, root));
+    d.push_task(0, 0, root_inst, root);
     d.heap.push(Reverse((0, 0, 0)));
     for w in 1..threads {
         d.idle[w] = true;
@@ -1443,10 +1531,13 @@ fn des_exec_traced_in(
     };
     let events = d.tracer.take().map(|t| t.events).unwrap_or_default();
     // hand the buffers back for the next cell
+    arena.interner = d.interner;
     arena.table = d.table;
     arena.pendings = d.pendings;
     arena.scopes = d.scopes;
     arena.space_items = d.space_items;
+    arena.rel_scratch = d.rel_scratch;
+    arena.key_scratch = d.key_scratch;
     arena.node_live = d.node_live;
     arena.node_peak = d.node_peak;
     arena.active_leaf_ends = d.active_leaf_ends;
@@ -1957,10 +2048,13 @@ mod tests {
             worker_node: vec![0; 2],
             node_workers: vec![vec![0, 1]],
             route_rr: vec![0],
-            table: HashMap::new(),
+            interner: TagInterner::default(),
+            table: Vec::new(),
             pendings: Vec::new(),
             scopes: Vec::new(),
-            space_items: HashMap::new(),
+            space_items: Vec::new(),
+            rel_scratch: Vec::new(),
+            key_scratch: Vec::new(),
             space_live: 0,
             space_peak: 0,
             space_puts: 0,
@@ -1971,7 +2065,10 @@ mod tests {
             space_remote_bytes: 0,
             node_live: vec![0],
             node_peak: vec![0],
-            deques: vec![VecDeque::new(), VecDeque::new()],
+            deques: vec![
+                ReadyDeque::new(queue, false),
+                ReadyDeque::new(queue, false),
+            ],
             heap: BinaryHeap::new(),
             free_at: vec![0; 2],
             idle: vec![false; 2],
@@ -2008,11 +2105,11 @@ mod tests {
         let costs = CostModel::default();
         let mut d = bare_des(&plan, &topo, &machine, &costs, QueuePolicy::Fifo);
         // worker 0: front ready at t=10, back pending until t=100
-        d.deques[0].push_back((10, 1, STask::Shutdown { scope: 0 }));
-        d.deques[0].push_back((100, 2, STask::Shutdown { scope: 1 }));
+        d.push_task(0, 10, 1, STask::Shutdown { scope: 0 });
+        d.push_task(0, 100, 2, STask::Shutdown { scope: 1 });
         // worker 1 holds the ready victim entry the pre-fix scheduler
         // spuriously stole
-        d.deques[1].push_back((0, 3, STask::Shutdown { scope: 2 }));
+        d.push_task(1, 0, 3, STask::Shutdown { scope: 2 });
         match d.find_task(0, 50) {
             FindResult::Task(_, inst, cost, acq) => {
                 assert_eq!(inst, 1, "must run the own ready front entry");
@@ -2029,8 +2126,8 @@ mod tests {
         // back's stamp; post-fix the front runs now and only the
         // genuinely pending back entry is waited on
         let mut d = bare_des(&plan, &topo, &machine, &costs, QueuePolicy::Fifo);
-        d.deques[0].push_back((10, 1, STask::Shutdown { scope: 0 }));
-        d.deques[0].push_back((100, 2, STask::Shutdown { scope: 1 }));
+        d.push_task(0, 10, 1, STask::Shutdown { scope: 0 });
+        d.push_task(0, 100, 2, STask::Shutdown { scope: 1 });
         assert!(matches!(d.find_task(0, 50), FindResult::Task(_, 1, _, Acq::Own)));
         match d.find_task(0, 50) {
             FindResult::WaitUntil(t) => assert_eq!(t, 100, "wait on the real pending stamp"),
@@ -2128,6 +2225,114 @@ mod tests {
                     assert_eq!(r.space_gets, base.space_gets, "{mode:?} {q:?}");
                     assert_eq!(r.failed_gets, base.failed_gets, "{mode:?} {q:?}");
                 }
+            }
+        }
+    }
+
+    fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{ctx}: seconds");
+        assert_eq!(a.gflops.to_bits(), b.gflops.to_bits(), "{ctx}: gflops");
+        assert_eq!(a.tasks, b.tasks, "{ctx}: tasks");
+        assert_eq!(a.steals, b.steals, "{ctx}: steals");
+        assert_eq!(a.failed_gets, b.failed_gets, "{ctx}: failed_gets");
+        assert_eq!(a.work_ratio.to_bits(), b.work_ratio.to_bits(), "{ctx}: work_ratio");
+        assert_eq!(a.space_puts, b.space_puts, "{ctx}: space_puts");
+        assert_eq!(a.space_gets, b.space_gets, "{ctx}: space_gets");
+        assert_eq!(a.space_frees, b.space_frees, "{ctx}: space_frees");
+        assert_eq!(a.space_peak_bytes, b.space_peak_bytes, "{ctx}: space_peak_bytes");
+        assert_eq!(a.space_local_gets, b.space_local_gets, "{ctx}: space_local_gets");
+        assert_eq!(a.space_remote_gets, b.space_remote_gets, "{ctx}: space_remote_gets");
+        assert_eq!(a.space_remote_bytes, b.space_remote_bytes, "{ctx}: space_remote_bytes");
+        assert_eq!(a.node_peak_bytes, b.node_peak_bytes, "{ctx}: node_peak_bytes");
+        assert_eq!(a.stolen_edts, b.stolen_edts, "{ctx}: stolen_edts");
+        assert_eq!(a.steal_bytes, b.steal_bytes, "{ctx}: steal_bytes");
+    }
+
+    /// The PR's bit-identity gate: the interned + Fx-hashed + indexed
+    /// hot path must reproduce the retained PR-9 linear-scan reference
+    /// bit for bit — every report field including fp seconds — across
+    /// every workload, dependence mode and queue policy, on a sharded
+    /// topology with inter-node stealing on. Arenas are reused across
+    /// cells in both lanes, so retained interner/index capacity is
+    /// exercised too.
+    #[test]
+    fn indexed_hot_path_is_bit_identical_to_the_scan_reference() {
+        use crate::space::placement::Placement;
+        let mut fast = DesArena::new();
+        let mut slow = DesArena::new();
+        slow.force_scan(true);
+        for w in crate::workloads::registry() {
+            let inst = (w.build)(Size::Tiny);
+            let plan = inst.plan().unwrap();
+            let topo = Topology::for_plan(&plan, 2, Placement::Block);
+            for mode in [
+                DepMode::CncBlock,
+                DepMode::CncAsync,
+                DepMode::CncDep,
+                DepMode::Swarm,
+                DepMode::Ocr,
+            ] {
+                for q in [QueuePolicy::Fifo, QueuePolicy::CriticalPath, QueuePolicy::Priority] {
+                    let run = |arena: &mut DesArena| {
+                        simulate_cell(
+                            &plan,
+                            mode,
+                            DataPlane::Space,
+                            &topo,
+                            4,
+                            &Machine::default(),
+                            &CostModel::default(),
+                            true,
+                            inst.total_flops,
+                            StealPolicy::RemoteReady,
+                            q,
+                            arena,
+                        )
+                    };
+                    let a = run(&mut fast);
+                    let b = run(&mut slow);
+                    assert_reports_identical(&a, &b, &format!("{} {mode:?} {q:?}", w.name));
+                }
+            }
+        }
+    }
+
+    /// Full traces — every scheduling and data-plane event with its
+    /// virtual stamp — are byte-identical across the indexed and scan
+    /// paths (the serialized form is a pure function of the event
+    /// stream, so stream equality is byte equality).
+    #[test]
+    fn traces_are_byte_identical_across_scan_and_indexed_paths() {
+        use crate::space::placement::Placement;
+        let inst = (by_name("LUD").unwrap().build)(Size::Tiny);
+        let plan = inst.plan().unwrap();
+        let topo = Topology::for_plan(&plan, 2, Placement::Block);
+        for q in [QueuePolicy::Fifo, QueuePolicy::CriticalPath, QueuePolicy::Priority] {
+            let run = |force: bool| {
+                let mut arena = DesArena::new();
+                arena.force_scan(force);
+                des_exec_traced_in(
+                    &plan,
+                    DepMode::CncDep,
+                    DataPlane::Space,
+                    &topo,
+                    4,
+                    &Machine::default(),
+                    &CostModel::default(),
+                    true,
+                    inst.total_flops,
+                    StealPolicy::RemoteReady,
+                    q,
+                    TraceMode::Full,
+                    &mut arena,
+                )
+            };
+            let (ra, ea) = run(false);
+            let (rb, eb) = run(true);
+            assert_reports_identical(&ra, &rb, &format!("traced {q:?}"));
+            assert_eq!(ea.len(), eb.len(), "{q:?}: event count");
+            for (i, (a, b)) in ea.iter().zip(&eb).enumerate() {
+                assert_eq!(a, b, "{q:?}: event {i} diverged");
             }
         }
     }

@@ -47,6 +47,7 @@
 pub mod cost;
 pub mod des;
 pub mod omp;
+pub(crate) mod rq;
 pub mod trace;
 
 pub use cost::{CostModel, Machine};

@@ -1,0 +1,698 @@
+//! `rq` — indexed per-worker ready deques for the DES hot path.
+//!
+//! PR 9's `QueuePolicy` support selected own-deque work with a linear
+//! scan over the whole deque (`rt::queue` module docs explain why scan-
+//! at-pop was chosen first: the Priority score is age-dependent, so any
+//! index keyed at push time goes stale, and the deterministic
+//! front-most tie-break must survive). At sweep scale those
+//! `CriticalPath`/`Priority` scans are the dominant cost of every pop.
+//! [`ReadyDeque`] replaces them with lazy-invalidation indexes while
+//! keeping selection **provably identical** to the scan — the scan
+//! itself is retained (`force_scan`) as the reference implementation
+//! for the bit-identity suite and the `des_hotpath` scoreboard
+//! baseline.
+//!
+//! ## Structure
+//!
+//! Entries live in a ring (`VecDeque`) of slots; a slot's *sequence
+//! number* is `base + index` and is stable for the entry's lifetime
+//! (only front tombstones are physically removed, advancing `base`).
+//! Popping an entry from the middle tombstones its slot (`task: None`)
+//! instead of shifting — which also removes the old `VecDeque::remove`
+//! O(n) shift. The per-policy indexes hold `(…, seq)` keys and never
+//! remove eagerly: a stolen or popped entry leaves a *stale* seq
+//! behind, skipped when it surfaces (the lazy-invalidation idiom).
+//!
+//! - **Fifo** keeps the historical path: a reverse scan whose common
+//!   case is an O(1) back-pop (no index at all).
+//! - **CriticalPath** keys are static per entry, but entries become
+//!   *eligible* only once `avail ≤ now`. A pending min-heap over
+//!   `(avail, seq)` migrates entries into a ready max-heap over the CP
+//!   key as the worker's clock passes their stamp (valid because each
+//!   worker's `now` is non-decreasing — the global event heap pops in
+//!   time order).
+//! - **Priority** scores are `est·(WEIGHT − depth) − age·DECAY`, which
+//!   moves every pop (age grows, `est` updates online). The index
+//!   therefore only *narrows the candidate set*: one min-heap over
+//!   `(avail, seq)` per `(class, depth)` group, and each pop evaluates
+//!   the exact score of each group's top candidate at the actual `now`.
+//!
+//! ## Why the Priority index picks exactly the scan's entry
+//!
+//! Within one `(class, depth)` group at a fixed estimator state, the
+//! score `fl(B − fl(age·DECAY))` (with `B = fl(est·(WEIGHT − depth))`
+//! constant across the group and `age = (now − avail) as f64`) is
+//! **weakly non-decreasing in `avail`**, even in floating point:
+//! `u64→f64` conversion is monotone, multiplication by the positive
+//! constant `DECAY` is monotone, and subtraction from a constant is
+//! anti-monotone — all IEEE-754 round-to-nearest operations preserve
+//! weak order. Hence the group's minimal score is attained at its
+//! minimal `avail`, i.e. at the group heap's top, and the set of
+//! entries *tying* that score is a contiguous `(avail, seq)`-prefix of
+//! the heap. Popping that prefix (the tie-drain below) yields the
+//! group's true minimal sequence number among its score-minimal ready
+//! entries. Across groups the winner is the lexicographic minimum of
+//! `(score, seq)` — a total order (scores are never NaN: medians of
+//! finite durations), so the fold is independent of the group map's
+//! iteration order and the Fx hasher cannot perturb selection. The
+//! linear scan computes the same lexicographic minimum by visiting
+//! entries in seq order with a strict `<`, so both pick the same entry.
+//!
+//! The CriticalPath argument is simpler: the ready heap orders by
+//! exactly the scan's key — min rank, then max `(node, coords)`, then
+//! min seq — and `BinaryHeap` pops distinct elements in sorted order
+//! regardless of internal layout (seqs are unique), so arena reuse
+//! cannot perturb it either.
+//!
+//! The property test at the bottom drives randomized push / steal /
+//! select / observe interleavings through an indexed and a `force_scan`
+//! instance in lockstep and asserts identical behavior; `sim::des`'s
+//! bit-identity suite asserts the same end-to-end across every
+//! workload × dep-mode × policy × stealing combination.
+
+use crate::ral::FxHashMap;
+use crate::rt::{QueuePolicy, RuntimeEstimator};
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Policy-specific selection key, computed once at push time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum EntryKey {
+    /// Fifo selects by position only.
+    Fifo,
+    /// CriticalPath: min `rank` (control first), then max `(node,
+    /// coords)` — the deepest ready task in schedule order.
+    Cp {
+        rank: u8,
+        node: u32,
+        coords: Box<[i64]>,
+    },
+    /// Priority: the `(class, depth)` the estimator scores at pop time.
+    Prio { class: Option<usize>, depth: i64 },
+}
+
+/// CP ready-heap element; `Ord` is "better-first as max" so the heap
+/// top is the scan's pick: smaller rank wins, then larger `(node,
+/// coords)`, then smaller seq (the scan's first-index tie-break).
+#[derive(Debug)]
+struct CpEntry {
+    rank: u8,
+    node: u32,
+    coords: Box<[i64]>,
+    seq: u64,
+}
+
+impl Ord for CpEntry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        o.rank
+            .cmp(&self.rank)
+            .then_with(|| (self.node, &self.coords).cmp(&(o.node, &o.coords)))
+            .then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for CpEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl PartialEq for CpEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl Eq for CpEntry {}
+
+#[derive(Debug)]
+struct Slot<T> {
+    avail: u64,
+    inst: u64,
+    /// `None` = tombstone (entry already taken; slot awaits front
+    /// compaction, its seq may linger in an index).
+    task: Option<T>,
+    key: EntryKey,
+}
+
+/// One worker's ready deque: ring of slots + per-policy lazy indexes.
+///
+/// Invariant maintained by every mutating method: the front slot, if
+/// any, is live — so [`ReadyDeque::front`] needs no `&mut` cleanup.
+#[derive(Debug)]
+pub(crate) struct ReadyDeque<T> {
+    policy: QueuePolicy,
+    /// Run the retained linear scan instead of the indexes (reference
+    /// semantics for the bit-identity suite and bench baseline).
+    force_scan: bool,
+    ring: VecDeque<Slot<T>>,
+    /// Sequence number of `ring[0]`.
+    base: u64,
+    live: usize,
+    /// CP: not-yet-eligible entries, min `(avail, seq)`.
+    cp_pending: BinaryHeap<Reverse<(u64, u64)>>,
+    /// CP: eligible entries in selection order (see [`CpEntry`]).
+    cp_ready: BinaryHeap<CpEntry>,
+    /// Priority: `(class, depth)` → min-heap over `(avail, seq)`.
+    prio: FxHashMap<(Option<usize>, i64), BinaryHeap<Reverse<(u64, u64)>>>,
+    /// Tie-drain side buffer (reused across pops).
+    scratch: Vec<Reverse<(u64, u64)>>,
+}
+
+impl<T> ReadyDeque<T> {
+    pub fn new(policy: QueuePolicy, force_scan: bool) -> Self {
+        ReadyDeque {
+            policy,
+            force_scan,
+            ring: VecDeque::new(),
+            base: 0,
+            live: 0,
+            cp_pending: BinaryHeap::new(),
+            cp_ready: BinaryHeap::new(),
+            prio: FxHashMap::default(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Clear for arena reuse, keeping ring/heap capacity.
+    pub fn reset(&mut self, policy: QueuePolicy, force_scan: bool) {
+        self.policy = policy;
+        self.force_scan = force_scan;
+        self.ring.clear();
+        self.base = 0;
+        self.live = 0;
+        self.cp_pending.clear();
+        self.cp_ready.clear();
+        self.prio.clear();
+        self.scratch.clear();
+    }
+
+    /// Number of live entries (tombstones excluded).
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    #[inline]
+    fn slot_of(&self, seq: u64) -> Option<&Slot<T>> {
+        seq.checked_sub(self.base)
+            .and_then(|i| self.ring.get(i as usize))
+    }
+
+    #[inline]
+    fn is_live(&self, seq: u64) -> bool {
+        self.slot_of(seq).is_some_and(|s| s.task.is_some())
+    }
+
+    /// Append an entry available at `avail` (instance `inst`).
+    pub fn push_back(&mut self, avail: u64, inst: u64, task: T, key: EntryKey) {
+        let seq = self.base + self.ring.len() as u64;
+        if !self.force_scan {
+            match (self.policy, &key) {
+                (QueuePolicy::Fifo, _) => {}
+                (QueuePolicy::CriticalPath, _) => {
+                    self.cp_pending.push(Reverse((avail, seq)));
+                }
+                (QueuePolicy::Priority, EntryKey::Prio { class, depth }) => {
+                    self.prio
+                        .entry((*class, *depth))
+                        .or_default()
+                        .push(Reverse((avail, seq)));
+                }
+                (QueuePolicy::Priority, _) => {
+                    unreachable!("priority deque pushed a non-priority key")
+                }
+            }
+        }
+        self.ring.push_back(Slot {
+            avail,
+            inst,
+            task: Some(task),
+            key,
+        });
+        self.live += 1;
+    }
+
+    /// Remove entry `seq` (if still live), restoring the front
+    /// invariant afterwards.
+    fn take(&mut self, seq: u64) -> Option<(u64, u64, T)> {
+        let idx = seq.checked_sub(self.base)? as usize;
+        let slot = self.ring.get_mut(idx)?;
+        let task = slot.task.take()?;
+        let out = (slot.avail, slot.inst, task);
+        self.live -= 1;
+        self.compact_front();
+        Some(out)
+    }
+
+    fn compact_front(&mut self) {
+        while let Some(s) = self.ring.front() {
+            if s.task.is_some() {
+                break;
+            }
+            self.ring.pop_front();
+            self.base += 1;
+        }
+    }
+
+    /// The (live) front entry — the steal target. Returns the
+    /// availability stamp, instance, and a task borrow.
+    pub fn front(&self) -> Option<(u64, u64, &T)> {
+        self.ring.front().map(|s| {
+            let t = s.task.as_ref().expect("front invariant: front slot is live");
+            (s.avail, s.inst, t)
+        })
+    }
+
+    /// Pop the front entry (steal / migrate path). Its seq stays in
+    /// the policy index as a stale entry, skipped lazily.
+    pub fn pop_front(&mut self) -> Option<(u64, u64, T)> {
+        let s = self.ring.pop_front()?;
+        self.base += 1;
+        let task = s.task.expect("front invariant: front slot is live");
+        self.live -= 1;
+        self.compact_front();
+        Some((s.avail, s.inst, task))
+    }
+
+    /// The entry the policy runs next among those with `avail ≤ now`,
+    /// or `None`. Selection is identical between the indexed path and
+    /// the `force_scan` reference — see the module docs for the proof.
+    pub fn select(&mut self, now: u64, est: &RuntimeEstimator) -> Option<(u64, u64, T)> {
+        if self.live == 0 {
+            return None;
+        }
+        match self.policy {
+            // Fifo's reverse scan IS the fast path (O(1) when the back
+            // is ready, the overwhelmingly common case); no index.
+            QueuePolicy::Fifo => self.select_fifo(now),
+            _ if self.force_scan => self.select_scan(now, est),
+            QueuePolicy::CriticalPath => self.select_cp(now),
+            QueuePolicy::Priority => self.select_prio(now, est),
+        }
+    }
+
+    /// Newest ready entry — the historical LIFO-local pop that still
+    /// finds ready work sitting deeper when the back entry is pending.
+    fn select_fifo(&mut self, now: u64) -> Option<(u64, u64, T)> {
+        let idx = self
+            .ring
+            .iter()
+            .rposition(|s| s.task.is_some() && s.avail <= now)?;
+        self.take(self.base + idx as u64)
+    }
+
+    fn select_cp(&mut self, now: u64) -> Option<(u64, u64, T)> {
+        // Eligibility migration: the worker clock is non-decreasing, so
+        // once avail ≤ now an entry is eligible at every later select.
+        while let Some(&Reverse((avail, seq))) = self.cp_pending.peek() {
+            if let Some(slot) = self.slot_of(seq) {
+                if slot.task.is_some() {
+                    if avail > now {
+                        break;
+                    }
+                    let EntryKey::Cp {
+                        rank,
+                        node,
+                        ref coords,
+                    } = slot.key
+                    else {
+                        unreachable!("cp deque holds a non-cp key")
+                    };
+                    self.cp_ready.push(CpEntry {
+                        rank,
+                        node,
+                        coords: coords.clone(),
+                        seq,
+                    });
+                }
+            }
+            self.cp_pending.pop();
+        }
+        while let Some(top) = self.cp_ready.pop() {
+            if let Some(hit) = self.take(top.seq) {
+                return Some(hit);
+            }
+            // stale: stolen (or already run) since migration — skip
+        }
+        None
+    }
+
+    fn select_prio(&mut self, now: u64, est: &RuntimeEstimator) -> Option<(u64, u64, T)> {
+        let ring = &self.ring;
+        let base = self.base;
+        let scratch = &mut self.scratch;
+        let alive = |seq: u64| {
+            seq.checked_sub(base)
+                .and_then(|i| ring.get(i as usize))
+                .is_some_and(|s| s.task.is_some())
+        };
+        // Global winner: lexicographic min of (score, seq) over the
+        // per-group candidates — order-independent, so iterating the
+        // hash map is safe (see module docs).
+        let mut best: Option<(f64, u64)> = None;
+        self.prio.retain(|&(class, depth), heap| {
+            // Drop stale tops; a heap that empties loses its group.
+            let top = loop {
+                match heap.peek() {
+                    Some(&Reverse((avail, seq))) => {
+                        if alive(seq) {
+                            break Some((avail, seq));
+                        }
+                        heap.pop();
+                    }
+                    None => break None,
+                }
+            };
+            let Some((avail, seq)) = top else { return false };
+            if avail > now {
+                return true; // nothing eligible in this group yet
+            }
+            let s0 = est.score(class, depth, (now - avail) as f64);
+            // Tie-drain: the score-minimal entries form a contiguous
+            // (avail, seq)-prefix (weak monotonicity in avail); pop it
+            // to find the true min seq, then reinsert.
+            let mut min_seq = seq;
+            scratch.push(heap.pop().unwrap());
+            while let Some(&Reverse((a2, s2))) = heap.peek() {
+                if !alive(s2) {
+                    heap.pop();
+                    continue;
+                }
+                if a2 > now || est.score(class, depth, (now - a2) as f64) != s0 {
+                    break;
+                }
+                min_seq = min_seq.min(s2);
+                scratch.push(heap.pop().unwrap());
+            }
+            for e in scratch.drain(..) {
+                heap.push(e);
+            }
+            let better = match best {
+                Some((bs, bq)) => s0 < bs || (s0 == bs && min_seq < bq),
+                None => true,
+            };
+            if better {
+                best = Some((s0, min_seq));
+            }
+            true
+        });
+        let (_, seq) = best?;
+        let hit = self.take(seq);
+        debug_assert!(hit.is_some(), "priority winner must be live");
+        hit
+    }
+
+    /// The retained PR-9 linear scan (reference semantics): visit live
+    /// slots in seq order, keep the strictly-better key, tie → first.
+    fn select_scan(&mut self, now: u64, est: &RuntimeEstimator) -> Option<(u64, u64, T)> {
+        let seq = match self.policy {
+            QueuePolicy::Fifo => unreachable!("fifo handled by select_fifo"),
+            QueuePolicy::CriticalPath => {
+                let mut best: Option<(u64, (u8, u32, &[i64]))> = None;
+                for (i, s) in self.ring.iter().enumerate() {
+                    if s.task.is_none() || s.avail > now {
+                        continue;
+                    }
+                    let EntryKey::Cp {
+                        rank,
+                        node,
+                        ref coords,
+                    } = s.key
+                    else {
+                        unreachable!("cp deque holds a non-cp key")
+                    };
+                    let better = match best {
+                        Some((_, (br, bn, bc))) => {
+                            rank < br || (rank == br && (node, &**coords) > (bn, bc))
+                        }
+                        None => true,
+                    };
+                    if better {
+                        best = Some((self.base + i as u64, (rank, node, coords)));
+                    }
+                }
+                best.map(|(seq, _)| seq)
+            }
+            QueuePolicy::Priority => {
+                let mut best: Option<(u64, f64)> = None;
+                for (i, s) in self.ring.iter().enumerate() {
+                    if s.task.is_none() || s.avail > now {
+                        continue;
+                    }
+                    let EntryKey::Prio { class, depth } = s.key else {
+                        unreachable!("priority deque holds a non-priority key")
+                    };
+                    let score = est.score(class, depth, (now - s.avail) as f64);
+                    let better = match best {
+                        Some((_, b)) => score < b,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((self.base + i as u64, score));
+                    }
+                }
+                best.map(|(seq, _)| seq)
+            }
+        }?;
+        self.take(seq)
+    }
+
+    /// Earliest availability stamp among live entries. Only meaningful
+    /// right after a failed [`ReadyDeque::select`] at the same `now`
+    /// (every live entry is then pending), which is the only call site
+    /// in the DES.
+    pub fn earliest(&mut self) -> Option<u64> {
+        if self.live == 0 {
+            return None;
+        }
+        if self.force_scan || self.policy == QueuePolicy::Fifo {
+            return self.scan_earliest();
+        }
+        match self.policy {
+            QueuePolicy::CriticalPath => {
+                // A failed select drained cp_ready of live entries, so
+                // every live entry sits in cp_pending.
+                while let Some(&Reverse((avail, seq))) = self.cp_pending.peek() {
+                    if self.is_live(seq) {
+                        return Some(avail);
+                    }
+                    self.cp_pending.pop();
+                }
+                debug_assert!(false, "live entries missing from cp_pending");
+                self.scan_earliest()
+            }
+            QueuePolicy::Priority => {
+                let ring = &self.ring;
+                let base = self.base;
+                let alive = |seq: u64| {
+                    seq.checked_sub(base)
+                        .and_then(|i| ring.get(i as usize))
+                        .is_some_and(|s| s.task.is_some())
+                };
+                let mut min: Option<u64> = None;
+                self.prio.retain(|_, heap| {
+                    while let Some(&Reverse((avail, seq))) = heap.peek() {
+                        if alive(seq) {
+                            min = Some(min.map_or(avail, |m| m.min(avail)));
+                            return true;
+                        }
+                        heap.pop();
+                    }
+                    false
+                });
+                debug_assert!(min.is_some(), "live entries missing from prio groups");
+                min.or_else(|| self.scan_earliest())
+            }
+            QueuePolicy::Fifo => unreachable!(),
+        }
+    }
+
+    fn scan_earliest(&self) -> Option<u64> {
+        self.ring
+            .iter()
+            .filter_map(|s| s.task.is_some().then_some(s.avail))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift64* for randomized shapes.
+    struct Rng(u64);
+    impl Rng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        }
+        fn below(&mut self, n: u64) -> u64 {
+            self.next() % n
+        }
+    }
+
+    fn random_key(rng: &mut Rng, policy: QueuePolicy) -> EntryKey {
+        match policy {
+            QueuePolicy::Fifo => EntryKey::Fifo,
+            QueuePolicy::CriticalPath => EntryKey::Cp {
+                rank: (rng.below(2)) as u8,
+                node: rng.below(4) as u32,
+                coords: match rng.below(3) {
+                    0 => vec![rng.below(6) as i64].into(),
+                    1 => vec![rng.below(6) as i64, rng.below(6) as i64].into(),
+                    _ => Box::from([]),
+                },
+            },
+            QueuePolicy::Priority => EntryKey::Prio {
+                class: match rng.below(4) {
+                    0 => None,
+                    c => Some(c as usize - 1),
+                },
+                depth: rng.below(5) as i64,
+            },
+        }
+    }
+
+    /// The bit-identity property: an indexed deque and a force_scan
+    /// deque fed the exact same randomized push / select / steal /
+    /// observe interleaving make identical picks at every step —
+    /// including tie-heavy shapes (coarse avail buckets, few classes)
+    /// and estimator updates mid-stream that invalidate any push-time
+    /// score.
+    #[test]
+    fn indexed_selection_matches_the_scan_on_randomized_shapes() {
+        for policy in [
+            QueuePolicy::Fifo,
+            QueuePolicy::CriticalPath,
+            QueuePolicy::Priority,
+        ] {
+            for seed in 1..=20u64 {
+                let mut rng = Rng(seed * 0x9E37_79B9_7F4A_7C15);
+                let mut fast: ReadyDeque<u64> = ReadyDeque::new(policy, false);
+                let mut slow: ReadyDeque<u64> = ReadyDeque::new(policy, true);
+                let mut est = RuntimeEstimator::new();
+                let mut now = 0u64;
+                let mut inst = 0u64;
+                for _step in 0..400 {
+                    match rng.below(100) {
+                        // push a burst (avails straddle `now`, coarse
+                        // buckets to force score/key ties)
+                        0..=44 => {
+                            for _ in 0..=rng.below(4) {
+                                let avail = now.saturating_sub(8) + rng.below(16) * 4;
+                                let key = random_key(&mut rng, policy);
+                                inst += 1;
+                                fast.push_back(avail, inst, inst, key.clone());
+                                slow.push_back(avail, inst, inst, key);
+                            }
+                        }
+                        // select
+                        45..=79 => {
+                            let a = fast.select(now, &est);
+                            let b = slow.select(now, &est);
+                            assert_eq!(a, b, "policy {policy:?} seed {seed} diverged");
+                        }
+                        // steal the front
+                        80..=89 => {
+                            assert_eq!(fast.front().map(|(a, i, t)| (a, i, *t)), {
+                                slow.front().map(|(a, i, t)| (a, i, *t))
+                            });
+                            assert_eq!(fast.pop_front(), slow.pop_front());
+                        }
+                        // estimator update (stales any push-time score)
+                        90..=94 => {
+                            est.observe(rng.below(3) as usize, (1 + rng.below(1000)) as f64);
+                        }
+                        // idle probe: mirror the DES call site, where
+                        // earliest is probed right after a failed select
+                        _ => {
+                            let a = fast.select(now, &est);
+                            let b = slow.select(now, &est);
+                            assert_eq!(a, b);
+                            if a.is_none() {
+                                assert_eq!(fast.earliest(), slow.earliest());
+                            }
+                        }
+                    }
+                    assert_eq!(fast.len(), slow.len());
+                    now += rng.below(10);
+                }
+                // drain both fully; order must agree to the end
+                now += 1_000_000;
+                loop {
+                    let a = fast.select(now, &est);
+                    let b = slow.select(now, &est);
+                    assert_eq!(a, b);
+                    if a.is_none() {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_prefers_the_ready_back_over_a_ready_front() {
+        let mut dq: ReadyDeque<&'static str> = ReadyDeque::new(QueuePolicy::Fifo, false);
+        dq.push_back(0, 1, "front", EntryKey::Fifo);
+        dq.push_back(0, 2, "back", EntryKey::Fifo);
+        assert_eq!(dq.select(5, &RuntimeEstimator::new()).unwrap().2, "back");
+        assert_eq!(dq.select(5, &RuntimeEstimator::new()).unwrap().2, "front");
+        assert!(dq.select(5, &RuntimeEstimator::new()).is_none());
+    }
+
+    #[test]
+    fn fifo_skips_a_pending_back_for_ready_middle_work() {
+        let mut dq: ReadyDeque<u32> = ReadyDeque::new(QueuePolicy::Fifo, false);
+        dq.push_back(0, 1, 1, EntryKey::Fifo);
+        dq.push_back(100, 2, 2, EntryKey::Fifo);
+        let (avail, inst, t) = dq.select(10, &RuntimeEstimator::new()).unwrap();
+        assert_eq!((avail, inst, t), (0, 1, 1));
+        assert_eq!(dq.earliest(), Some(100));
+    }
+
+    #[test]
+    fn steals_leave_stale_index_entries_that_are_skipped() {
+        let mut dq: ReadyDeque<u32> = ReadyDeque::new(QueuePolicy::CriticalPath, false);
+        let key = |n: u32| EntryKey::Cp {
+            rank: 1,
+            node: n,
+            coords: Box::from([n as i64]),
+        };
+        dq.push_back(0, 1, 10, key(1));
+        dq.push_back(0, 2, 20, key(2));
+        dq.push_back(0, 3, 30, key(3));
+        // Make all three eligible (migrated into the ready heap) …
+        let est = RuntimeEstimator::new();
+        let first = dq.select(0, &est).unwrap();
+        assert_eq!(first.2, 30, "deepest (node 3) runs first");
+        // … then steal the front out from under the index.
+        assert_eq!(dq.pop_front().unwrap().2, 10);
+        // The stale seq for task 10 must be skipped, yielding 20.
+        assert_eq!(dq.select(0, &est).unwrap().2, 20);
+        assert!(dq.select(0, &est).is_none());
+        assert_eq!(dq.len(), 0);
+    }
+
+    #[test]
+    fn reset_reuses_buffers_without_leaking_entries() {
+        let mut dq: ReadyDeque<u32> = ReadyDeque::new(QueuePolicy::Priority, false);
+        let k = EntryKey::Prio {
+            class: Some(0),
+            depth: 1,
+        };
+        for i in 0..32 {
+            dq.push_back(i, i, i as u32, k.clone());
+        }
+        dq.reset(QueuePolicy::Fifo, false);
+        assert!(dq.is_empty());
+        assert!(dq.select(1 << 40, &RuntimeEstimator::new()).is_none());
+        dq.push_back(0, 1, 7, EntryKey::Fifo);
+        assert_eq!(dq.select(0, &RuntimeEstimator::new()).unwrap().2, 7);
+    }
+}

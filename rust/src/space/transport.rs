@@ -36,8 +36,8 @@
 use super::placement::Topology;
 use super::store::SpaceStats;
 use super::{DataBlock, ItemKey};
+use crate::ral::{fx_hash_one, FxHashMap, FxHashSet};
 use crate::sim::CostModel;
-use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -324,11 +324,11 @@ pub trait ShardTransport: Send + Sync {
 /// as the control-plane `rt::table::TagTable`. Byte-for-byte the store
 /// the space plane ran on before the transport seam existed.
 pub(crate) struct InProc {
-    shards: Vec<Mutex<HashMap<ItemKey, Slot>>>,
+    shards: Vec<Mutex<FxHashMap<ItemKey, Slot>>>,
     /// Per-shard tombstones: keys whose last get already reclaimed them.
     /// Written only on the free path, read only on the miss-panic path,
     /// so the hot get never pays for the diagnostic.
-    tombs: Vec<Mutex<HashSet<ItemKey>>>,
+    tombs: Vec<Mutex<FxHashSet<ItemKey>>>,
     mask: usize,
     ledger: Ledger,
 }
@@ -337,21 +337,21 @@ impl InProc {
     pub(crate) fn new(n_shards: usize, ledger: Ledger) -> InProc {
         let n = n_shards.next_power_of_two();
         InProc {
-            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
-            tombs: (0..n).map(|_| Mutex::new(HashSet::new())).collect(),
+            shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            tombs: (0..n).map(|_| Mutex::new(FxHashSet::default())).collect(),
             mask: n - 1,
             ledger,
         }
     }
 
+    // One Fx hash per routing decision (the old DefaultHasher paid a
+    // fresh SipHash state per call); like `rt::table`, routing and the
+    // never-iterated inner maps cannot affect observable outcomes.
     fn shard_idx(&self, key: &ItemKey) -> usize {
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        (h.finish() as usize) & self.mask
+        (fx_hash_one(key) as usize) & self.mask
     }
 
-    fn shard(&self, key: &ItemKey) -> &Mutex<HashMap<ItemKey, Slot>> {
+    fn shard(&self, key: &ItemKey) -> &Mutex<FxHashMap<ItemKey, Slot>> {
         &self.shards[self.shard_idx(key)]
     }
 }
@@ -428,7 +428,7 @@ enum Req {
     },
 }
 
-/// The channel transport: node `n`'s shards are a plain `HashMap` owned
+/// The channel transport: node `n`'s shards are a plain `FxHashMap` owned
 /// exclusively by service thread `n` — no locks, all mutation via
 /// messages, the shape a real distributed shard daemon has. Consumers
 /// block on the reply; a remote consumer then pays the injected
@@ -461,8 +461,8 @@ impl Channel {
     /// The service loop: exclusive owner of this node's item map. Exits
     /// when every sender is dropped (transport drop).
     fn serve(node: usize, rx: mpsc::Receiver<Req>, ledger: Ledger) {
-        let mut items: HashMap<ItemKey, Slot> = HashMap::new();
-        let mut freed_keys: HashSet<ItemKey> = HashSet::new();
+        let mut items: FxHashMap<ItemKey, Slot> = FxHashMap::default();
+        let mut freed_keys: FxHashSet<ItemKey> = FxHashSet::default();
         while let Ok(req) = rx.recv() {
             match req {
                 Req::Put { key, block, get_count, ack } => {

@@ -227,7 +227,15 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     let a = perf_report_json(&cfg);
     let b = perf_report_json(&cfg);
     assert_eq!(a, b, "two consecutive quick runs must produce identical JSON");
-    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v7\""));
+    assert!(a.starts_with("{\"schema\":\"tale3-bench-report/v8\""));
+    assert!(
+        a.contains("\"throughput\":{\"workload\":\"LUD\""),
+        "v8 carries the hot-path throughput section"
+    );
+    assert!(
+        a.contains("\"scan_identical\":true") && !a.contains("\"scan_identical\":false"),
+        "the indexed hot path must reproduce the scan reference in every cell"
+    );
     assert!(a.contains("\"sweep\":{\"header\":{\"schema\":\"tale3-sweep/v1\""));
     assert!(a.contains("\"config\":{\"backend\":\"des\""));
     assert!(a.contains("\"transport\":\"inproc\""));
@@ -261,13 +269,13 @@ fn bench_report_json_is_deterministic_and_virtual_only() {
     }
 }
 
-/// The v7 key set matches the committed golden file (the same list CI's
+/// The v8 key set matches the committed golden file (the same list CI's
 /// golden-file job asserts against the built artifact), so schema drift
 /// is a reviewed change, not an accident.
 #[test]
-fn bench_report_v7_keys_match_golden_file() {
+fn bench_report_v8_keys_match_golden_file() {
     use tale3::bench::report::{perf_report_json, ReportConfig};
-    let golden = include_str!("../ci/bench-report-v7.keys");
+    let golden = include_str!("../ci/bench-report-v8.keys");
     let json = perf_report_json(&ReportConfig {
         quick: true,
         ..Default::default()
@@ -276,7 +284,7 @@ fn bench_report_v7_keys_match_golden_file() {
     for key in golden.lines().filter(|l| !l.is_empty()) {
         assert!(
             json.contains(&format!("\"{key}\":")),
-            "golden key `{key}` missing from the v7 report"
+            "golden key `{key}` missing from the v8 report"
         );
     }
     // and every quoted key in the JSON must be in the golden list
@@ -291,7 +299,7 @@ fn bench_report_v7_keys_match_golden_file() {
         if after.starts_with(':') {
             assert!(
                 golden_set.contains(token),
-                "report key `{token}` is not in ci/bench-report-v7.keys — \
+                "report key `{token}` is not in ci/bench-report-v8.keys — \
                  update the golden file deliberately"
             );
         }
